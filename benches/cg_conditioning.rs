@@ -1,0 +1,11 @@
+//! Regenerates the §3 iterative-baseline claim: CG iteration counts blow
+//! up as the damped system becomes ill-conditioned (λ ↓), while the
+//! direct Cholesky solve stays flat.
+//!
+//! ```text
+//! cargo bench --bench cg_conditioning
+//! ```
+
+fn main() {
+    dngd::bench_tables::cg_conditioning();
+}

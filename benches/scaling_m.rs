@@ -1,0 +1,12 @@
+//! Regenerates **Fig. 1 (right panel)**: time vs m at fixed n, fitted
+//! exponent against the ideal O(m) line. Shares the harness with
+//! `scaling_n` (both panels print together, matching the figure).
+//!
+//! ```text
+//! cargo bench --bench scaling_m
+//! ```
+
+fn main() {
+    let paper = std::env::var("DNGD_PAPER_SCALE").is_ok();
+    dngd::bench_tables::scaling(paper);
+}

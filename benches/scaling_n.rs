@@ -1,0 +1,13 @@
+//! Regenerates **Fig. 1 (left panel)**: time vs n at fixed m for all
+//! three methods, with the fitted exponent against the paper's dotted
+//! ideal O(n²) line. (The harness prints both panels; this bench is the
+//! n-sweep entry point, `scaling_m` the m-sweep.)
+//!
+//! ```text
+//! cargo bench --bench scaling_n
+//! ```
+
+fn main() {
+    let paper = std::env::var("DNGD_PAPER_SCALE").is_ok();
+    dngd::bench_tables::scaling(paper);
+}

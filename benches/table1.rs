@@ -1,0 +1,13 @@
+//! Regenerates **Table 1** of the paper: wall time of one damped solve
+//! for chol / eigh / svda over the ten (n, m) shapes, plus the svda
+//! `N/A` memory cell. `DNGD_PAPER_SCALE=1` runs the paper's exact shapes
+//! (slow on CPU); default is the proportionally scaled grid.
+//!
+//! ```text
+//! cargo bench --bench table1
+//! ```
+
+fn main() {
+    let paper = std::env::var("DNGD_PAPER_SCALE").is_ok();
+    dngd::bench_tables::table1(paper);
+}

@@ -1,0 +1,66 @@
+//! Quickstart: solve one damped Fisher system with every method and
+//! verify they agree — Algorithm 1 in five minutes.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use dngd::data::rng::Rng;
+use dngd::linalg::Mat;
+use dngd::solver::{make_solver, residual_norm, RvbSolver, SolverKind};
+
+fn main() {
+    // A tall-skinny problem in the paper's regime (scaled to demo size):
+    // n samples ≪ m parameters.
+    let (n, m) = (128usize, 4096usize);
+    let lambda = 1e-3;
+    let mut rng = Rng::seed_from(2023);
+    let s = Mat::randn(n, m, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+
+    println!("(SᵀS + λI)x = v with S: {n}×{m}, λ = {lambda}\n");
+    println!("{:>8} | {:>12} | {:>12} | agreement vs chol", "solver", "time", "residual");
+
+    let mut x_ref: Option<Vec<f64>> = None;
+    for &kind in SolverKind::all() {
+        let solver = make_solver(kind);
+        let t0 = std::time::Instant::now();
+        match solver.solve(&s, &v, lambda) {
+            Ok(x) => {
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let r = residual_norm(&s, &x, &v, lambda);
+                let agree = match &x_ref {
+                    None => {
+                        x_ref = Some(x);
+                        "— (reference)".to_string()
+                    }
+                    Some(xr) => {
+                        let maxdiff =
+                            x.iter().zip(xr).fold(0.0f64, |a, (p, q)| a.max((p - q).abs()));
+                        format!("max|Δ| = {maxdiff:.2e}")
+                    }
+                };
+                println!("{:>8} | {ms:>10.2}ms | {r:>12.3e} | {agree}", kind.as_str());
+            }
+            Err(e) => println!("{:>8} | {:>12} | {:>12} | {e}", kind.as_str(), "N/A", "—"),
+        }
+    }
+
+    // The RVB least-squares identity (Appendix B): when v = Sᵀf the two
+    // methods coincide exactly.
+    let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let v_ls = s.t_matvec(&f);
+    let x_chol = make_solver(SolverKind::Chol).solve(&s, &v_ls, lambda).unwrap();
+    let x_rvb = RvbSolver::default().solve_ls(&s, &f, lambda).unwrap();
+    let maxdiff = x_chol.iter().zip(&x_rvb).fold(0.0f64, |a, (p, q)| a.max((p - q).abs()));
+    println!("\nAppendix B (v = Sᵀf): max|x_chol − x_rvb| = {maxdiff:.2e}");
+
+    // Complexity story (§2): model FLOPs at the paper's scale.
+    let (pn, pm) = (1000usize, 1_000_000usize);
+    let f_chol = dngd::solver::flops(SolverKind::Chol, pn, pm);
+    let f_naive = dngd::solver::flops(SolverKind::Naive, pn, pm);
+    println!(
+        "at the paper's scale (n=10³, m=10⁶): naive/chol FLOP ratio = {:.1e}",
+        f_naive / f_chol
+    );
+}

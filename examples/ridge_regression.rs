@@ -1,0 +1,78 @@
+//! Ridge regression via Algorithm 1 — the statistics application §3
+//! names (Hoerl & Kennard 1970). A wide-feature regression (m ≫ n) where
+//! the ridge solution `(XᵀX + λI)⁻¹Xᵀy` is exactly Eq. 1 with `v = Xᵀy`,
+//! i.e. the least-squares structured case where the RVB fast path also
+//! applies.
+//!
+//! ```text
+//! cargo run --release --example ridge_regression
+//! ```
+
+use dngd::data::rng::Rng;
+use dngd::data::tasks::regression_task;
+use dngd::solver::{CholSolver, DampedSolver, NaiveSolver, RvbSolver};
+
+fn main() {
+    let (n, m) = (200usize, 5000usize);
+    let noise = 0.5;
+    let mut rng = Rng::seed_from(1970);
+    let task = regression_task(n, m, noise, 0.02, &mut rng);
+    println!("ridge regression: {n} samples × {m} features, noise σ = {noise}");
+    println!("planted model: {} nonzero coefficients\n", task.w_true.iter().filter(|w| **w != 0.0).count());
+
+    // v = Xᵀy (least-squares gradient at w = 0).
+    let v = task.x.t_matvec(&task.y);
+
+    println!("{:>10} | {:>12} | {:>12} | {:>12}", "λ", "train RMSE", "coef RMSE", "time");
+    let mut best = (f64::INFINITY, 0.0);
+    for lambda in [1e-2, 1e0, 1e2, 1e4] {
+        let t0 = std::time::Instant::now();
+        let w = CholSolver::default().solve(&task.x, &v, lambda).unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let pred = task.x.matvec(&w);
+        let train_rmse = (pred
+            .iter()
+            .zip(&task.y)
+            .map(|(p, y)| (p - y) * (p - y))
+            .sum::<f64>()
+            / n as f64)
+            .sqrt();
+        let coef_rmse = (w
+            .iter()
+            .zip(&task.w_true)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / m as f64)
+            .sqrt();
+        if coef_rmse < best.0 {
+            best = (coef_rmse, lambda);
+        }
+        println!("{lambda:>10.0e} | {train_rmse:>12.4} | {coef_rmse:>12.5} | {ms:>10.2}ms");
+    }
+    println!("\nbest coefficient recovery at λ = {:.0e} (bias–variance tradeoff)", best.1);
+
+    // Cross-check the three equivalent routes at one λ.
+    let lambda = 1.0;
+    let x_chol = CholSolver::default().solve(&task.x, &v, lambda).unwrap();
+    let x_rvb = RvbSolver::default().solve_ls(&task.x, &task.y, lambda).unwrap();
+    let maxdiff = x_chol.iter().zip(&x_rvb).fold(0.0f64, |a, (p, q)| a.max((p - q).abs()));
+    println!("chol vs RVB identity (Appendix B): max|Δ| = {maxdiff:.2e}");
+
+    // The naive O(m³) route refuses this shape on a modeled 80 GB device
+    // budget only above ~100k features; here it is merely catastrophically
+    // slower. Demonstrate on a reduced slice instead.
+    let small = task.x.slice_cols(0, 600);
+    let v_small = small.t_matvec(&task.y);
+    let t0 = std::time::Instant::now();
+    let x_naive = NaiveSolver::default().solve(&small, &v_small, lambda).unwrap();
+    let naive_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = std::time::Instant::now();
+    let x_fast = CholSolver::default().solve(&small, &v_small, lambda).unwrap();
+    let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let maxdiff = x_naive.iter().zip(&x_fast).fold(0.0f64, |a, (p, q)| a.max((p - q).abs()));
+    println!(
+        "naive m×m solve on a 600-feature slice: {naive_ms:.1}ms vs Algorithm 1 {fast_ms:.1}ms \
+         ({:.0}× speedup), max|Δ| = {maxdiff:.2e}",
+        naive_ms / fast_ms
+    );
+}

@@ -1,0 +1,112 @@
+"""AOT pipeline: lower the L2 solve graphs to HLO **text** artifacts the
+Rust PJRT runtime loads (`rust/src/runtime/pjrt.rs`).
+
+HLO text — NOT ``lowered.compile()`` output or a serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos
+with 64-bit instruction ids which the runtime's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --solve-shapes 8x32,16x512,64x4096 --gram-shapes 16x64
+
+Artifact naming contract (parsed by ``runtime::artifacts``)::
+
+    solve_n{n}_m{m}.hlo.txt   inputs (S: f32[n,m], v: f32[m], λ: f32[])
+    gram_n{n}_m{m}.hlo.txt    inputs (S: f32[n,m], λ: f32[])
+
+Outputs are 1-tuples (lowered with return_tuple=True; the Rust side
+unwraps with ``to_tuple1``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import solvers
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_solve(n: int, m: int) -> str:
+    """Lower Algorithm 1 (Pallas-kernel composition) at a fixed shape."""
+
+    def fn(s, v, lam):
+        return (solvers.damped_solve(s, v, lam),)
+
+    args = (
+        jax.ShapeDtypeStruct((n, m), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_gram(n: int, m: int) -> str:
+    """Lower the Gram kernel alone (ablation / kernel-level artifact)."""
+    from .kernels import gram as gram_kernel
+
+    def fn(s, lam):
+        return (gram_kernel.gram(s, lam),)
+
+    args = (
+        jax.ShapeDtypeStruct((n, m), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def parse_shapes(spec: str):
+    if not spec:
+        return []
+    out = []
+    for part in spec.split(","):
+        n, m = part.lower().split("x")
+        out.append((int(n), int(m)))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--solve-shapes",
+        default="8x32,16x512,64x4096",
+        help="comma-separated NxM shapes for solve artifacts",
+    )
+    ap.add_argument(
+        "--gram-shapes",
+        default="16x64",
+        help="comma-separated NxM shapes for gram-only artifacts",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for n, m in parse_shapes(args.solve_shapes):
+        path = os.path.join(args.out_dir, f"solve_n{n}_m{m}.hlo.txt")
+        text = lower_solve(n, m)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    for n, m in parse_shapes(args.gram_shapes):
+        path = os.path.join(args.out_dir, f"gram_n{n}_m{m}.hlo.txt")
+        text = lower_gram(n, m)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

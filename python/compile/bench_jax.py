@@ -1,0 +1,99 @@
+"""L2 bench harness: regenerates the paper's Table 1 / Fig. 1 comparison
+on the JAX path (chol vs eigh vs svd), CPU edition.
+
+The paper's absolute numbers are A100 milliseconds; the reproduction
+target is the *shape* of the comparison — chol fastest, eigh next, svd
+slowest, O(n²) scaling in n and O(m) in m (see EXPERIMENTS.md). Shapes
+are scaled down from the paper's (CPU testbed); pass --paper-scale to run
+the original sizes if you have the patience.
+
+Usage::
+
+    python -m compile.bench_jax [--repeats 5] [--paper-scale]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import solvers
+
+# Scaled-down Table 1 grid (same aspect progression as the paper).
+N_SWEEP = [(64, 8192), (128, 8192), (256, 8192), (512, 8192)]
+M_SWEEP = [(256, 2048), (256, 4096), (256, 8192), (256, 16384)]
+PAPER_N_SWEEP = [(256, 100_000), (512, 100_000), (1024, 100_000), (2048, 100_000), (4096, 100_000)]
+PAPER_M_SWEEP = [(2048, 10_000), (2048, 20_000), (2048, 50_000), (2048, 100_000), (2048, 200_000)]
+
+METHODS = {
+    "chol": solvers.damped_solve_jnp,
+    "eigh": solvers.eigh_solve,
+    "svda": solvers.svd_solve,
+}
+
+
+def time_method(fn, s, v, lam, repeats):
+    jitted = jax.jit(fn)
+    jitted(s, v, lam)[0].block_until_ready() if isinstance(
+        jitted(s, v, lam), tuple
+    ) else jitted(s, v, lam).block_until_ready()  # warm-up + compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = jitted(s, v, lam)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return 1e3 * float(np.median(times))
+
+
+def run_sweep(shapes, lam, repeats, label):
+    print(f"\n== {label} ==")
+    print(f"{'shape':>18} | " + " | ".join(f"{m:>10}" for m in METHODS) + " | fastest")
+    rows = []
+    for n, m in shapes:
+        rng = np.random.default_rng(n * 7919 + m)
+        s = jnp.asarray(rng.normal(size=(n, m)), dtype=jnp.float32)
+        v = jnp.asarray(rng.normal(size=(m,)), dtype=jnp.float32)
+        ms = {name: time_method(fn, s, v, jnp.float32(lam), repeats) for name, fn in METHODS.items()}
+        fastest = min(ms, key=ms.get)
+        print(
+            f"({n:>6},{m:>9}) | "
+            + " | ".join(f"{ms[name]:>8.2f}ms" for name in METHODS)
+            + f" | {fastest}"
+        )
+        rows.append((n, m, ms))
+    return rows
+
+
+def fit_exponent(xs, ys):
+    lx, ly = np.log(xs), np.log(ys)
+    a, _ = np.polyfit(lx, ly, 1)
+    return a
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--lam", type=float, default=1e-3)
+    ap.add_argument("--paper-scale", action="store_true")
+    args = ap.parse_args()
+
+    n_sweep = PAPER_N_SWEEP if args.paper_scale else N_SWEEP
+    m_sweep = PAPER_M_SWEEP if args.paper_scale else M_SWEEP
+
+    rows_n = run_sweep(n_sweep, args.lam, args.repeats, "Fig. 1 left: time vs n (fixed m)")
+    rows_m = run_sweep(m_sweep, args.lam, args.repeats, "Fig. 1 right: time vs m (fixed n)")
+
+    # Fitted exponents vs the paper's dotted ideal lines (2 and 1).
+    ns = [r[0] for r in rows_n]
+    chol_n = [r[2]["chol"] for r in rows_n]
+    ms_ = [r[1] for r in rows_m]
+    chol_m = [r[2]["chol"] for r in rows_m]
+    print(f"\nchol scaling: n-exponent {fit_exponent(ns, chol_n):.2f} (ideal 2), "
+          f"m-exponent {fit_exponent(ms_, chol_m):.2f} (ideal 1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: VMEM-resident Cholesky factorization (Algorithm 1
+line 2).
+
+The Gram matrix is only n×n (≤ 4096² f32 = 64 MB at the paper's largest
+shape; ≤ 1 MB at the artifact shapes this repo ships), so unlike the
+O(n²m) Gram stage it is a *latency* kernel, not a bandwidth kernel. The
+whole factorization runs on one VMEM-resident block with a `fori_loop`
+over columns — the TPU analogue of cuSOLVER's single-block `potrf` panel
+factorization. Larger-than-VMEM n would use the blocked right-looking
+recursion (panel = this kernel, trailing update = the Gram kernel);
+DESIGN.md §Perf carries the estimate.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chol_kernel(w_ref, l_ref):
+    w = w_ref[...]
+    n = w.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        # Masked column-j update (Cholesky–Crout with traced j):
+        #   lj  = row j of L restricted to k < j
+        #   d   = sqrt(w[j,j] − ‖lj‖²)
+        #   col = (w[:,j] − L·lj)/d, zeroed above the diagonal.
+        mask = (idx < j).astype(w.dtype)
+        lj = l[j, :] * mask
+        d = jnp.sqrt(w[j, j] - jnp.dot(lj, lj))
+        s = l @ lj
+        col = (w[:, j] - s) / d
+        col = jnp.where(idx == j, d, col)
+        col = jnp.where(idx < j, jnp.zeros_like(col), col)
+        return l.at[:, j].set(col)
+
+    l_ref[...] = jax.lax.fori_loop(0, n, body, jnp.zeros_like(w))
+
+
+def cholesky(w):
+    """Lower Cholesky factor of an SPD matrix, single-block Pallas."""
+    n = w.shape[0]
+    assert w.shape == (n, n)
+    return pl.pallas_call(
+        _chol_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), w.dtype),
+        interpret=True,
+    )(w)

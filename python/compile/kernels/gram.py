@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: tiled Gram matrix `W = S·Sᵀ + λĨ` (Algorithm 1, line 1).
+
+This is the only O(n²m) stage of the paper's algorithm — the kernel that
+has to be right on real hardware. The GPU formulation in the paper is a
+cuBLAS SYRK over HBM; the TPU re-think (DESIGN.md §Hardware-Adaptation):
+
+* grid `(n/bn, n/bn, m/bk)` — output tiles × reduction slabs;
+* each step pulls one `bn×bk` tile of S per operand HBM→VMEM via
+  BlockSpec and feeds the MXU with a `bn×bk @ bk×bn` contraction
+  (bn=128 matches the 128×128 systolic array; bk=512 keeps the two
+  input tiles + f32 accumulator ≈ 128·512·4·2 + 128·128·4 ≈ 0.6 MB,
+  comfortably double-bufferable in ~16 MB VMEM);
+* the reduction dimension is the innermost grid axis, so the output
+  tile stays resident in VMEM across the whole m-sweep (revolving
+  accumulator), exactly the role of the K-loop in a threadblock SYRK.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; numerics are validated
+through the interpret path and perf is estimated from the tiling
+(DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(si_ref, sj_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += S[i,k] @ S[j,k]ᵀ."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        si_ref[...], sj_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x, rows, cols):
+    pr = rows - x.shape[0]
+    pc = cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def gram(s, lam, block_n=128, block_k=512):
+    """W = S·Sᵀ + λĨ via the tiled Pallas kernel.
+
+    Shapes are padded up to tile multiples with zeros — exact for a Gram
+    product (zero columns contribute nothing; zero rows only pad W with
+    zeros, sliced off afterwards).
+    """
+    n, m = s.shape
+    bn = min(block_n, max(n, 1))
+    bk = min(block_k, max(m, 1))
+    n_pad = -(-n // bn) * bn
+    m_pad = -(-m // bk) * bk
+    sp = _pad_to(s, n_pad, m_pad)
+
+    grid = (n_pad // bn, n_pad // bn, m_pad // bk)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), s.dtype),
+        interpret=True,
+    )(sp, sp)
+    w = out[:n, :n]
+    return w + lam * jnp.eye(n, dtype=s.dtype)
+
+
+def vmem_bytes(block_n=128, block_k=512, dtype_bytes=4):
+    """Modeled VMEM working set of one grid step (perf estimate input)."""
+    tiles_in = 2 * block_n * block_k * dtype_bytes  # two S tiles
+    acc = block_n * block_n * 4  # f32 accumulator
+    return 2 * tiles_in + acc  # ×2: double buffering of the input tiles

@@ -1,0 +1,94 @@
+"""L1 Pallas kernels: the two O(nm) streaming passes of Algorithm 1 line 4.
+
+* ``matvec``  — `u = S·v`   (right-to-left evaluation, first pass)
+* ``tmatvec`` — `t = Sᵀ·z`  (last pass; never materializes Sᵀ — the
+  kernel reads S tiles in their native layout and contracts on the other
+  axis, which is the TPU analogue of the paper's "Q can be inlined"
+  note: no transposed copy is ever written)
+
+Both are memory-bound: one HBM read of S per call. Tiles are
+`block_n × block_m` with the reduction axis innermost so the output
+block accumulates in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(s_ref, v_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        s_ref[...], v_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def matvec(s, v, block_n=128, block_m=2048):
+    """u = S·v (n×m @ m)."""
+    n, m = s.shape
+    bn = min(block_n, max(n, 1))
+    bm = min(block_m, max(m, 1))
+    n_pad = -(-n // bn) * bn
+    m_pad = -(-m // bm) * bm
+    sp = jnp.pad(s, ((0, n_pad - n), (0, m_pad - m)))
+    vp = jnp.pad(v, (0, m_pad - m))
+    grid = (n_pad // bn, m_pad // bm)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, k: (i, k)),
+            pl.BlockSpec((bm,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), s.dtype),
+        interpret=True,
+    )(sp, vp)
+    return out[:n]
+
+
+def _tmatvec_kernel(s_ref, z_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Contract along the row axis of the native-layout S tile: Sᵀz
+    # without a transposed copy.
+    o_ref[...] += jnp.dot(
+        z_ref[...], s_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def tmatvec(s, z, block_n=128, block_m=2048):
+    """t = Sᵀ·z (m×n @ n), streaming S in native row-major tiles."""
+    n, m = s.shape
+    bn = min(block_n, max(n, 1))
+    bm = min(block_m, max(m, 1))
+    n_pad = -(-n // bn) * bn
+    m_pad = -(-m // bm) * bm
+    sp = jnp.pad(s, ((0, n_pad - n), (0, m_pad - m)))
+    zp = jnp.pad(z, (0, n_pad - n))
+    grid = (m_pad // bm, n_pad // bn)
+    out = pl.pallas_call(
+        _tmatvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda j, k: (j,)),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), s.dtype),
+        interpret=True,
+    )(sp, zp)
+    return out[:m]

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel and for the full solve.
+
+These are the CORE correctness signal: each L1 kernel in this package is
+asserted allclose against its oracle here (pytest + hypothesis sweeps),
+and the fused solve is additionally checked against ``jnp.linalg.solve``
+on the materialized m-by-m system.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def gram_ref(s, lam):
+    """W = S·Sᵀ + λĨ — Algorithm 1 line 1."""
+    n = s.shape[0]
+    return s @ s.T + lam * jnp.eye(n, dtype=s.dtype)
+
+
+def matvec_ref(s, v):
+    """u = S·v."""
+    return s @ v
+
+
+def tmatvec_ref(s, z):
+    """t = Sᵀ·z (the kernel never materializes Sᵀ; the oracle may)."""
+    return s.T @ z
+
+
+def cholesky_ref(w):
+    """Lower-triangular L with L·Lᵀ = W."""
+    return jnp.linalg.cholesky(w)
+
+
+def trisolve_ref(l, b, trans=False):
+    """Solve L y = b (or Lᵀ y = b with trans=True), L lower-triangular."""
+    return jsl.solve_triangular(l, b, lower=True, trans=1 if trans else 0)
+
+
+def damped_solve_ref(s, v, lam):
+    """Algorithm 1 end-to-end, pure jnp (the L2 reference path)."""
+    w = gram_ref(s, lam)
+    l = cholesky_ref(w)
+    u = s @ v
+    y = trisolve_ref(l, u, trans=False)
+    z = trisolve_ref(l, y, trans=True)
+    return (v - s.T @ z) / lam
+
+
+def damped_solve_dense_oracle(s, v, lam):
+    """Independent oracle: materialize the m×m system and solve it.
+
+    O(m³) — tests only. Validates Algorithm 1 itself, not just the
+    kernel plumbing.
+    """
+    m = s.shape[1]
+    fisher = s.T @ s + lam * jnp.eye(m, dtype=s.dtype)
+    return jnp.linalg.solve(fisher, v)
+
+
+def eigh_solve_ref(s, v, lam):
+    """Appendix C, Eq. 5 via the Gram eigendecomposition ("eigh")."""
+    w = s @ s.T
+    evals, u = jnp.linalg.eigh(w)
+    evals = jnp.clip(evals, 0.0, None)
+    sigma = jnp.sqrt(evals)
+    # V = Sᵀ U Σ⁻¹, guarding σ≈0 columns (they are handled by the λ term).
+    safe = jnp.where(sigma > 1e-12 * jnp.max(sigma), sigma, jnp.inf)
+    vt = (u.T @ s) / safe[:, None]  # rows are right singular vectors
+    wv = vt @ v
+    x_range = vt.T @ (wv / (evals + lam))
+    proj = vt.T @ wv
+    return x_range + (v - proj) / lam
+
+
+def svd_solve_ref(s, v, lam):
+    """Appendix C, Eq. 5 via a direct SVD (the "svda" stand-in at L2)."""
+    u, sigma, vt = jnp.linalg.svd(s, full_matrices=False)
+    wv = vt @ v
+    x_range = vt.T @ (wv / (sigma**2 + lam))
+    proj = vt.T @ wv
+    return x_range + (v - proj) / lam

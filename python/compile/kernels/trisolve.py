@@ -1,0 +1,64 @@
+"""L1 Pallas kernels: forward / adjoint triangular solves (Algorithm 1
+line 4's `L⁻¹(·)` and `L⁻ᵀ(·)`).
+
+Like the Cholesky kernel these are VMEM-resident latency kernels over the
+n×n factor; the O(nm) work of line 4 lives in the matvec kernels. The
+substitution loop is expressed with masked rank-1 updates so the whole
+solve is one `fori_loop` over rows — no dynamic slicing beyond indexed
+gathers, which keeps the Mosaic lowering trivial.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(l_ref, b_ref, y_ref):
+    l = l_ref[...]
+    b = b_ref[...]
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(i, y):
+        # y_i = (b_i − Σ_{j<i} L[i,j]·y_j) / L[i,i]
+        mask = (idx < i).astype(l.dtype)
+        yi = (b[i] - jnp.dot(l[i, :] * mask, y)) / l[i, i]
+        return y.at[i].set(yi)
+
+    y_ref[...] = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _adj_kernel(l_ref, y_ref, z_ref):
+    l = l_ref[...]
+    y = y_ref[...]
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(t, z):
+        i = n - 1 - t
+        # z_i = (y_i − Σ_{j>i} Lᵀ[i,j]·z_j) / L[i,i];  Lᵀ[i,j] = L[j,i]
+        mask = (idx > i).astype(l.dtype)
+        zi = (y[i] - jnp.dot(l[:, i] * mask, z)) / l[i, i]
+        return z.at[i].set(zi)
+
+    z_ref[...] = jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+def solve_lower(l, b):
+    """y with L·y = b (forward substitution)."""
+    n = l.shape[0]
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(l, b)
+
+
+def solve_lower_t(l, y):
+    """z with Lᵀ·z = y (backward substitution on the transpose)."""
+    n = l.shape[0]
+    return pl.pallas_call(
+        _adj_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
+        interpret=True,
+    )(l, y)

@@ -1,0 +1,97 @@
+"""L2: JAX model with per-sample score rows, and the fused NGD step.
+
+The score matrix of §2, ``S_ij = (1/√n)·∂log P_θ(x_i)/∂θ_j``, is computed
+with ``jax.vmap(jax.grad(...))`` — the autodiff path the paper's own JAX
+implementation would use — and fed into Algorithm 1 from ``solvers.py``.
+``ngd_step`` is the end-to-end graph: scores → gradient → damped solve →
+updated parameters, lowered by ``aot.py`` when a model-step artifact is
+requested.
+
+The architecture here is an MLP classifier (matching the Rust-native
+``model::mlp`` for cross-checks); the Rust transformer computes its own
+scores natively and only offloads the *solve* to the PJRT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import solvers
+
+
+def init_mlp(sizes, key):
+    """Xavier-init MLP parameters as a flat list of (W, b) pairs."""
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (fi, fo) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        scale = jnp.sqrt(2.0 / (fi + fo))
+        params.append((scale * jax.random.normal(k, (fo, fi)), jnp.zeros(fo)))
+    return params
+
+
+def mlp_logits(params, x):
+    """Forward pass: tanh hidden layers, linear head."""
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.tanh(w @ h + b)
+    w, b = params[-1]
+    return w @ h + b
+
+
+def log_prob(params, x, y):
+    """log p(y | x) under the softmax head."""
+    logits = mlp_logits(params, x)
+    return logits[y] - jax.scipy.special.logsumexp(logits)
+
+
+def flatten(params):
+    """Flatten a pytree of parameters into a single vector."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    flat = jnp.concatenate([l.ravel() for l in leaves])
+    return flat, treedef, [l.shape for l in leaves]
+
+
+def unflatten(flat, treedef, shapes):
+    out = []
+    pos = 0
+    for shape in shapes:
+        size = 1
+        for d in shape:
+            size *= d
+        out.append(flat[pos : pos + size].reshape(shape))
+        pos += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def score_matrix(params, xs, ys):
+    """S (n×m): per-sample ∂log p/∂θ rows, scaled 1/√n (paper §2)."""
+    flat, treedef, shapes = flatten(params)
+
+    def per_sample(x, y):
+        def f(p_flat):
+            return log_prob(unflatten(p_flat, treedef, shapes), x, y)
+
+        return jax.grad(f)(flat)
+
+    rows = jax.vmap(per_sample)(xs, ys)
+    n = xs.shape[0]
+    return rows / jnp.sqrt(n)
+
+
+def batch_loss(params, xs, ys):
+    """Mean NLL over the batch."""
+    lps = jax.vmap(lambda x, y: log_prob(params, x, y))(xs, ys)
+    return -jnp.mean(lps)
+
+
+def ngd_step(params_flat, treedef, shapes, xs, ys, lam, lr):
+    """One fused NGD step on flat parameters: returns (new_flat, loss).
+
+    v = ∇L = −(1/√n)·Σᵢ Sᵢ (log-likelihood structure), then Algorithm 1.
+    """
+    params = unflatten(params_flat, treedef, shapes)
+    s = score_matrix(params, xs, ys)
+    n = xs.shape[0]
+    v = -jnp.sum(s, axis=0) / jnp.sqrt(n)
+    loss = batch_loss(params, xs, ys)
+    x = solvers.damped_solve_jnp(s, v, lam)
+    return params_flat - lr * x, loss

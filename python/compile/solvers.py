@@ -1,0 +1,74 @@
+"""L2: the damped Fisher solvers as JAX computation graphs.
+
+``damped_solve`` is the paper's Algorithm 1 composed from the L1 Pallas
+kernels (Gram → Cholesky → two triangular solves → two streaming
+matvecs); it is the function ``aot.py`` lowers to the PJRT artifacts the
+Rust runtime executes. ``eigh_solve``/``svd_solve``/``cg_solve`` are the
+baselines at L2, used by ``bench_jax.py`` to regenerate the paper's
+Table 1 comparison on this testbed's JAX path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cholesky as chol_kernel
+from .kernels import gram as gram_kernel
+from .kernels import matvec as mv_kernel
+from .kernels import ref
+from .kernels import trisolve as tri_kernel
+
+
+def damped_solve(s, v, lam):
+    """Algorithm 1: x with (SᵀS + λI)x = v, via the Pallas kernels.
+
+    Right-to-left evaluation of x = (v − SᵀL⁻ᵀL⁻¹Sv)/λ, per the paper's
+    implementation note (Q is never materialized).
+    """
+    w = gram_kernel.gram(s, lam)
+    l = chol_kernel.cholesky(w)
+    u = mv_kernel.matvec(s, v)
+    y = tri_kernel.solve_lower(l, u)
+    z = tri_kernel.solve_lower_t(l, y)
+    t = mv_kernel.tmatvec(s, z)
+    return (v - t) / lam
+
+
+def damped_solve_jnp(s, v, lam):
+    """Algorithm 1 in pure jnp (XLA-fused reference path, no Pallas)."""
+    return ref.damped_solve_ref(s, v, lam)
+
+
+def eigh_solve(s, v, lam):
+    """The paper's "eigh" baseline (Appendix C)."""
+    return ref.eigh_solve_ref(s, v, lam)
+
+
+def svd_solve(s, v, lam):
+    """The paper's "svda" baseline at L2 (LAPACK SVD stand-in)."""
+    return ref.svd_solve_ref(s, v, lam)
+
+
+def cg_solve(s, v, lam, tol=1e-10, max_iters=10_000):
+    """Conjugate-gradient baseline (§3), matrix-free."""
+
+    def fisher_apply(p):
+        return s.T @ (s @ p) + lam * p
+
+    def cond(state):
+        _, r, _, rr, it = state
+        return jnp.logical_and(rr > (tol * jnp.linalg.norm(v)) ** 2, it < max_iters)
+
+    def body(state):
+        x, r, p, rr, it = state
+        ap = fisher_apply(p)
+        alpha = rr / jnp.dot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rr_new = jnp.dot(r, r)
+        p = r + (rr_new / rr) * p
+        return (x, r, p, rr_new, it + 1)
+
+    x0 = jnp.zeros_like(v)
+    state = (x0, v, v, jnp.dot(v, v), jnp.array(0))
+    x, _, _, _, iters = jax.lax.while_loop(cond, body, state)
+    return x, iters

@@ -1,0 +1,149 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes and dtypes with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cholesky as chol_k
+from compile.kernels import gram as gram_k
+from compile.kernels import matvec as mv_k
+from compile.kernels import ref
+from compile.kernels import trisolve as tri_k
+
+# Interpret-mode Pallas is slow; keep hypothesis examples modest but
+# meaningful.
+KERNEL_SETTINGS = settings(max_examples=12, deadline=None)
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype=dtype)
+
+
+def spd(n, seed, lam=1.0, dtype=np.float32):
+    a = rand((n, n + 3), seed, dtype)
+    return a @ a.T + lam * jnp.eye(n, dtype=dtype)
+
+
+class TestGram:
+    @KERNEL_SETTINGS
+    @given(
+        n=st.integers(1, 40),
+        m=st.integers(1, 300),
+        lam=st.floats(1e-4, 10.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_swept(self, n, m, lam, seed):
+        s = rand((n, m), seed)
+        got = gram_k.gram(s, jnp.float32(lam))
+        want = ref.gram_ref(s, jnp.float32(lam))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * m**0.5)
+
+    def test_tile_boundaries(self):
+        # Exactly one tile, tile+1, tile-1, multiple tiles.
+        for n in [127, 128, 129, 256]:
+            for m in [511, 512, 513]:
+                s = rand((n, m), n * 1000 + m)
+                got = gram_k.gram(s, jnp.float32(0.5))
+                want = ref.gram_ref(s, jnp.float32(0.5))
+                np.testing.assert_allclose(got, want, rtol=3e-4, atol=2e-2)
+
+    def test_symmetry(self):
+        s = rand((33, 200), 7)
+        w = gram_k.gram(s, jnp.float32(1e-3))
+        np.testing.assert_allclose(w, w.T, rtol=0, atol=1e-5)
+
+    def test_float64(self):
+        # interpret mode runs the math in the requested dtype.
+        s = rand((9, 50), 3, np.float32)
+        w = gram_k.gram(s, jnp.float32(0.0))
+        assert w.dtype == s.dtype
+
+
+class TestMatvec:
+    @KERNEL_SETTINGS
+    @given(n=st.integers(1, 50), m=st.integers(1, 400), seed=st.integers(0, 2**31))
+    def test_matvec_swept(self, n, m, seed):
+        s = rand((n, m), seed)
+        v = rand((m,), seed + 1)
+        np.testing.assert_allclose(
+            mv_k.matvec(s, v), ref.matvec_ref(s, v), rtol=2e-4, atol=2e-4 * m**0.5
+        )
+
+    @KERNEL_SETTINGS
+    @given(n=st.integers(1, 50), m=st.integers(1, 400), seed=st.integers(0, 2**31))
+    def test_tmatvec_swept(self, n, m, seed):
+        s = rand((n, m), seed)
+        z = rand((n,), seed + 2)
+        np.testing.assert_allclose(
+            mv_k.tmatvec(s, z), ref.tmatvec_ref(s, z), rtol=2e-4, atol=1e-4 * n
+        )
+
+    def test_tile_boundaries(self):
+        for m in [2047, 2048, 2049]:
+            s = rand((130, m), m)
+            v = rand((m,), m + 1)
+            z = rand((130,), m + 2)
+            np.testing.assert_allclose(
+                mv_k.matvec(s, v), ref.matvec_ref(s, v), rtol=3e-4, atol=3e-2
+            )
+            np.testing.assert_allclose(
+                mv_k.tmatvec(s, z), ref.tmatvec_ref(s, z), rtol=3e-4, atol=3e-2
+            )
+
+
+class TestCholesky:
+    @KERNEL_SETTINGS
+    @given(n=st.integers(1, 48), seed=st.integers(0, 2**31))
+    def test_reconstruction_swept(self, n, seed):
+        w = spd(n, seed)
+        l = chol_k.cholesky(w)
+        np.testing.assert_allclose(l @ l.T, w, rtol=1e-3, atol=1e-3 * n)
+        # Lower-triangular with positive diagonal.
+        lnp = np.asarray(l)
+        assert np.allclose(np.triu(lnp, 1), 0.0)
+        assert (np.diag(lnp) > 0).all()
+
+    def test_matches_jnp_cholesky(self):
+        w = spd(20, 11)
+        np.testing.assert_allclose(
+            chol_k.cholesky(w), ref.cholesky_ref(w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_identity(self):
+        eye = jnp.eye(7, dtype=jnp.float32)
+        np.testing.assert_allclose(chol_k.cholesky(eye), eye, atol=1e-7)
+
+
+class TestTrisolve:
+    @KERNEL_SETTINGS
+    @given(n=st.integers(1, 48), seed=st.integers(0, 2**31))
+    def test_forward_swept(self, n, seed):
+        l = ref.cholesky_ref(spd(n, seed))
+        b = rand((n,), seed + 1)
+        got = tri_k.solve_lower(l, b)
+        want = ref.trisolve_ref(l, b, trans=False)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    @KERNEL_SETTINGS
+    @given(n=st.integers(1, 48), seed=st.integers(0, 2**31))
+    def test_adjoint_swept(self, n, seed):
+        l = ref.cholesky_ref(spd(n, seed))
+        y = rand((n,), seed + 2)
+        got = tri_k.solve_lower_t(l, y)
+        want = ref.trisolve_ref(l, y, trans=True)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_roundtrip(self):
+        l = ref.cholesky_ref(spd(25, 5))
+        y = rand((25,), 6)
+        b = l @ y
+        np.testing.assert_allclose(tri_k.solve_lower(l, b), y, rtol=1e-3, atol=1e-3)
+
+
+class TestVmemModel:
+    def test_gram_vmem_budget(self):
+        # Default tiling must fit VMEM (~16 MB) with double buffering.
+        assert gram_k.vmem_bytes() < 16 * 2**20

@@ -1,0 +1,75 @@
+"""L2 model: vmap'd per-sample scores vs explicit loops, NGD-step descent,
+and the score/gradient linear relation the paper's framing relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, solvers
+
+
+def setup(n=12, d=4, k=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = model.init_mlp([d, 8, k], k1)
+    xs = jax.random.normal(k2, (n, d))
+    ys = jax.random.randint(k3, (n,), 0, k)
+    return params, xs, ys
+
+
+class TestScores:
+    def test_score_rows_match_per_sample_grad_loop(self):
+        params, xs, ys = setup()
+        s = model.score_matrix(params, xs, ys)
+        flat, treedef, shapes = model.flatten(params)
+        n = xs.shape[0]
+        for i in range(n):
+            def f(p):
+                return model.log_prob(model.unflatten(p, treedef, shapes), xs[i], ys[i])
+            gi = jax.grad(f)(flat)
+            np.testing.assert_allclose(s[i] * jnp.sqrt(n), gi, rtol=1e-5, atol=1e-6)
+
+    def test_gradient_is_linear_image_of_scores(self):
+        # v = −(1/√n)·Σᵢ Sᵢ — the structure RVB exploits and Algorithm 1
+        # doesn't need (§3).
+        params, xs, ys = setup(seed=1)
+        s = model.score_matrix(params, xs, ys)
+        n = xs.shape[0]
+        v_from_s = -jnp.sum(s, axis=0) / jnp.sqrt(n)
+        flat, treedef, shapes = model.flatten(params)
+        def loss(p):
+            return model.batch_loss(model.unflatten(p, treedef, shapes), xs, ys)
+        v_autodiff = jax.grad(loss)(flat)
+        np.testing.assert_allclose(v_from_s, v_autodiff, rtol=1e-5, atol=1e-6)
+
+    def test_flatten_unflatten_roundtrip(self):
+        params, _, _ = setup(seed=2)
+        flat, treedef, shapes = model.flatten(params)
+        back = model.unflatten(flat, treedef, shapes)
+        for (w1, b1), (w2, b2) in zip(params, back):
+            np.testing.assert_array_equal(w1, w2)
+            np.testing.assert_array_equal(b1, b2)
+
+
+class TestNgdStep:
+    def test_descends(self):
+        params, xs, ys = setup(n=24, seed=3)
+        flat, treedef, shapes = model.flatten(params)
+        l0 = float(model.batch_loss(params, xs, ys))
+        # λ well above the f32 noise floor: with n ≪ m the tiny-σ
+        # directions are amplified by (σ²+λ)⁻¹, so under-damping diverges
+        # — exactly the §1 "damping becomes essential" point.
+        for _ in range(8):
+            flat, loss = model.ngd_step(flat, treedef, shapes, xs, ys, 0.1, 0.5)
+        l1 = float(model.batch_loss(model.unflatten(flat, treedef, shapes), xs, ys))
+        assert l1 < 0.7 * l0, f"{l0} → {l1}"
+
+    def test_jits_cleanly(self):
+        params, xs, ys = setup(n=8, seed=4)
+        flat, treedef, shapes = model.flatten(params)
+        step = jax.jit(
+            lambda p, x, y: model.ngd_step(p, treedef, shapes, x, y, 1e-2, 0.3)
+        )
+        new_flat, loss = step(flat, xs, ys)
+        assert new_flat.shape == flat.shape
+        assert jnp.isfinite(loss)

@@ -1,0 +1,199 @@
+//! Benchmark table generators — the code that regenerates every table and
+//! figure in the paper's evaluation section, shared by the `benches/*.rs`
+//! harnesses and the `dngd bench` CLI.
+//!
+//! * [`table1`]   — Table 1 (all ten rows): chol vs eigh vs svda wall
+//!   times, including the svda `N/A (mem)` cell from the memory model.
+//! * [`scaling`]  — Fig. 1's two panels with fitted exponents against the
+//!   dotted ideal lines (2 for the n-sweep, 1 for the m-sweep).
+//! * [`cg_conditioning`] — §3's iterative-method remark: CG iteration
+//!   blow-up vs condition number while chol stays flat.
+//!
+//! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
+//! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
+
+use crate::data::rng::Rng;
+use crate::linalg::Mat;
+use crate::metrics::{bench, fit_power_law};
+use crate::solver::{
+    flops, make_solver, CgSolver, CholSolver, DampedSolver, SolveError, SolverKind,
+};
+
+/// Table-1 shape grid. The scaled-down grid divides the paper's n by 8
+/// and m by ~12 so the full table runs in minutes on CPU while keeping
+/// the same n-vs-m aspect progression (and the same n·m ordering that
+/// triggers the svda memory cell — which is evaluated with the *paper's*
+/// shapes regardless, since it is a pure model).
+pub fn table1_shapes(paper: bool) -> Vec<(usize, usize)> {
+    if paper {
+        vec![
+            (256, 100_000),
+            (512, 100_000),
+            (1024, 100_000),
+            (2048, 100_000),
+            (4096, 100_000),
+            (2048, 10_000),
+            (2048, 20_000),
+            (2048, 50_000),
+            (2048, 100_000),
+            (2048, 200_000),
+        ]
+    } else {
+        vec![
+            (32, 8192),
+            (64, 8192),
+            (128, 8192),
+            (256, 8192),
+            (512, 8192),
+            (256, 1024),
+            (256, 2048),
+            (256, 4096),
+            (256, 8192),
+            (256, 16384),
+        ]
+    }
+}
+
+fn run_method(kind: SolverKind, s: &Mat, v: &[f64], lambda: f64) -> Result<f64, SolveError> {
+    let solver = make_solver(kind);
+    // Correctness gate before timing: the benchmark must measure a
+    // *correct* solver.
+    let x = solver.solve(s, v, lambda)?;
+    let r = crate::solver::residual_norm(s, &x, v, lambda);
+    // Backward-error gate: ‖r‖ ≲ ε·(‖F‖·‖x‖ + ‖v‖) with ‖F‖ ≈ ‖S‖_F².
+    // (An absolute gate on ‖r‖/‖v‖ would spuriously fail the SVD methods
+    // at small λ, where ‖x‖ ≫ ‖v‖ amplifies benign orthogonality error.)
+    let fro = s.fro_norm();
+    let scale = fro * fro * crate::linalg::mat::norm2(&x) + crate::linalg::mat::norm2(v);
+    assert!(r < 1e-9 * scale.max(1.0), "{} residual {r} (scale {scale:.3e})", kind.as_str());
+    let result = bench(kind.as_str(), 3, 1.0, || {
+        let _ = std::hint::black_box(solver.solve(s, v, lambda));
+    });
+    Ok(result.median_ms())
+}
+
+/// Print Table 1: per-shape medians for chol / eigh / svda plus speedups.
+pub fn table1(paper: bool) {
+    let lambda = 1e-3;
+    println!("Table 1 reproduction — time per damped solve (median ms)");
+    println!("{:>18} | {:>10} | {:>10} | {:>10} | eigh/chol | svda/chol", "shape (n, m)", "chol", "eigh", "svda");
+    let mut rng = Rng::seed_from(1234);
+    for (n, m) in table1_shapes(paper) {
+        let s = Mat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let chol = run_method(SolverKind::Chol, &s, &v, lambda).expect("chol");
+        let eigh = run_method(SolverKind::Eigh, &s, &v, lambda).expect("eigh");
+        // svda carries the paper's 80 GB A100 memory model, evaluated at
+        // the PAPER's shape for this row so the N/A cell reproduces even
+        // on the scaled grid.
+        let paper_shape = paper_shape_for(n, m, paper);
+        let svda_mem = crate::solver::memory_bytes(SolverKind::Svda, paper_shape.0, paper_shape.1);
+        let budget = crate::solver::MemoryBudget::a100_80gb();
+        let svda = if budget.fits(svda_mem) {
+            Some(run_method(SolverKind::Svda, &s, &v, lambda).expect("svda"))
+        } else {
+            None
+        };
+        match svda {
+            Some(sv) => println!(
+                "({n:>6},{m:>9}) | {chol:>8.2}ms | {eigh:>8.2}ms | {sv:>8.2}ms | {:>9.2} | {:>9.2}",
+                eigh / chol,
+                sv / chol
+            ),
+            None => println!(
+                "({n:>6},{m:>9}) | {chol:>8.2}ms | {eigh:>8.2}ms | {:>10} | {:>9.2} |       N/A",
+                "N/A (mem)",
+                eigh / chol
+            ),
+        }
+    }
+    println!("\npaper (A100): chol ≈ 2.5–5× faster than eigh, ≈ 6–40× than svda; svda N/A at (4096, 100000).");
+}
+
+/// Map a scaled-grid row back to the paper's corresponding shape (for
+/// the memory model). On the paper grid it is the identity.
+fn paper_shape_for(n: usize, m: usize, paper: bool) -> (usize, usize) {
+    if paper {
+        return (n, m);
+    }
+    let scaled = table1_shapes(false);
+    let orig = table1_shapes(true);
+    scaled
+        .iter()
+        .position(|&(a, b)| (a, b) == (n, m))
+        .map(|i| orig[i])
+        .unwrap_or((n, m))
+}
+
+/// Fig. 1 with fitted exponents: time vs n at fixed m, time vs m at
+/// fixed n, for all three methods; overlays the ideal-scaling fit.
+pub fn scaling(paper: bool) {
+    let lambda = 1e-3;
+    let (n_sweep, m_sweep): (Vec<(usize, usize)>, Vec<(usize, usize)>) = if paper {
+        (table1_shapes(true)[0..5].to_vec(), table1_shapes(true)[5..10].to_vec())
+    } else {
+        (table1_shapes(false)[0..5].to_vec(), table1_shapes(false)[5..10].to_vec())
+    };
+    let mut rng = Rng::seed_from(4321);
+    for (label, sweep, axis, ideal) in [
+        ("Fig 1 left: time vs n (fixed m)", n_sweep, 0usize, 2.0),
+        ("Fig 1 right: time vs m (fixed n)", m_sweep, 1usize, 1.0),
+    ] {
+        println!("\n== {label} ==");
+        let mut xs = Vec::new();
+        let mut chol_ts = Vec::new();
+        println!("{:>18} | {:>10} | {:>10} | {:>10}", "shape", "chol", "eigh", "svda");
+        for &(n, m) in &sweep {
+            let s = Mat::randn(n, m, &mut rng);
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let chol = run_method(SolverKind::Chol, &s, &v, lambda).expect("chol");
+            let eigh = run_method(SolverKind::Eigh, &s, &v, lambda).expect("eigh");
+            let svda = run_method(SolverKind::Svda, &s, &v, lambda).expect("svda");
+            println!("({n:>6},{m:>9}) | {chol:>8.2}ms | {eigh:>8.2}ms | {svda:>8.2}ms");
+            xs.push(if axis == 0 { n as f64 } else { m as f64 });
+            chol_ts.push(chol);
+        }
+        let (a, _) = fit_power_law(&xs, &chol_ts);
+        println!("chol fitted exponent: {a:.2} (ideal {ideal:.0} — the paper's dotted line)");
+        // Model-FLOPs ideal line for reference.
+        let f0 = flops(SolverKind::Chol, sweep[0].0, sweep[0].1);
+        let f1 = flops(SolverKind::Chol, sweep[4].0, sweep[4].1);
+        println!(
+            "model-FLOP ratio across sweep: {:.1}× (measured {:.1}×)",
+            f1 / f0,
+            chol_ts[4] / chol_ts[0]
+        );
+    }
+}
+
+/// §3: CG iterations blow up with condition number; chol time is flat.
+pub fn cg_conditioning() {
+    println!("CG vs chol under ill-conditioning (n=64, m=4096)");
+    println!("{:>10} | {:>12} | {:>12} | {:>10}", "λ", "cg iters", "cg ms", "chol ms");
+    let mut rng = Rng::seed_from(77);
+    let (n, m) = (64, 4096);
+    let mut s = Mat::randn(n, m, &mut rng);
+    // Geometric row scaling: σ spread = 1e2 ⇒ κ(SᵀS) ~ 1e4 before damping.
+    for i in 0..n {
+        let scale = 10f64.powf(i as f64 / (n - 1) as f64 * 2.0);
+        for x in s.row_mut(i) {
+            *x *= scale;
+        }
+    }
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    for lambda in [1e2, 1e0, 1e-2, 1e-4, 1e-6] {
+        let cg = CgSolver::new(1e-10, 200_000);
+        let t0 = std::time::Instant::now();
+        let ok = cg.solve(&s, &v, lambda).is_ok();
+        let cg_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let iters = cg.stats().iterations;
+        let t1 = std::time::Instant::now();
+        CholSolver::default().solve(&s, &v, lambda).unwrap();
+        let chol_ms = t1.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{lambda:>10.0e} | {:>12} | {cg_ms:>10.2}ms | {chol_ms:>8.2}ms",
+            if ok { iters.to_string() } else { format!("{iters} (fail)") }
+        );
+    }
+    println!("\npaper §3: iterative methods scale linearly but iterations grow when ill-conditioned;\nthe direct chol solve is non-iterative and flat.");
+}

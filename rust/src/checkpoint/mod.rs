@@ -1,0 +1,215 @@
+//! Binary checkpoint format: save/load/resume of training state.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  "DNGD"          4 bytes
+//! version u32            4
+//! n_tensors u32          4
+//! per tensor:
+//!   name_len u32, name utf-8 bytes
+//!   len u64, f64 data (len × 8 bytes)
+//! trailer crc64 (xor-folded FNV-1a over everything before it)  8
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DNGD";
+const VERSION: u32 = 1;
+
+/// A checkpoint: named f64 tensors (flat).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Vec<f64>>,
+}
+
+/// Checkpoint I/O errors.
+#[derive(Debug)]
+pub enum CheckpointError {
+    Io(std::io::Error),
+    Corrupt(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint I/O: {e}"),
+            CheckpointError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Checkpoint::default()
+    }
+
+    pub fn insert(&mut self, name: &str, data: Vec<f64>) {
+        self.tensors.insert(name.to_string(), data);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f64]> {
+        self.tensors.get(name).map(|v| v.as_slice())
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, data) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = fnv1a64(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Parse from bytes, verifying magic, version and checksum.
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        if buf.len() < 20 {
+            return Err(CheckpointError::Corrupt("truncated header".into()));
+        }
+        let (body, trailer) = buf.split_at(buf.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        if fnv1a64(body) != stored {
+            return Err(CheckpointError::Corrupt("checksum mismatch".into()));
+        }
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8], CheckpointError> {
+            if *pos + n > body.len() {
+                return Err(CheckpointError::Corrupt("truncated body".into()));
+            }
+            let s = &body[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            return Err(CheckpointError::Corrupt("bad magic".into()));
+        }
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if version != VERSION {
+            return Err(CheckpointError::Corrupt(format!("unsupported version {version}")));
+        }
+        let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n_tensors {
+            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|_| CheckpointError::Corrupt("non-utf8 tensor name".into()))?;
+            let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            let raw = take(&mut pos, len * 8)?;
+            let data: Vec<f64> = raw
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, data);
+        }
+        if pos != body.len() {
+            return Err(CheckpointError::Corrupt("trailing bytes".into()));
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    /// Write atomically (tmp + rename).
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        Checkpoint::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut ck = Checkpoint::new();
+        ck.insert("params", vec![1.0, -2.5, 3.25]);
+        ck.insert("velocity", vec![0.0; 7]);
+        ck.insert("step", vec![42.0]);
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut ck = Checkpoint::new();
+        ck.insert("x", vec![1.0, 2.0]);
+        let mut bytes = ck.to_bytes();
+        bytes[10] ^= 0xFF;
+        match Checkpoint::from_bytes(&bytes) {
+            Err(CheckpointError::Corrupt(m)) => assert!(m.contains("checksum")),
+            other => panic!("expected corruption error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let mut ck = Checkpoint::new();
+        ck.insert("x", vec![1.0; 100]);
+        let bytes = ck.to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_atomic() {
+        let dir = std::env::temp_dir().join("dngd_test_ckpt");
+        let path = dir.join("model.ckpt");
+        let mut ck = Checkpoint::new();
+        ck.insert("p", (0..1000).map(|i| i as f64 * 0.5).collect());
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert!(!path.with_extension("tmp").exists(), "tmp file must be renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let ck = Checkpoint::new();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert!(back.tensors.is_empty());
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system: a from-scratch TOML-subset parser, typed config
+//! structs for every subsystem, validation, and `key=value` CLI overrides.
+//!
+//! The launcher reads a config file (see `configs/` in the repo root),
+//! applies `--set section.key=value` overrides, validates, and hands the
+//! typed [`Config`] to the coordinator.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{Config, CoordinatorConfig, ModelConfig, SolverConfig, TrainConfig, VmcConfig};
+pub use toml::{parse_toml, TomlError, TomlValue};

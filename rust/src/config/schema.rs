@@ -1,0 +1,431 @@
+//! Typed configuration schema with validation and CLI overrides.
+
+use super::toml::{parse_toml, parse_value, TomlDoc};
+use crate::solver::SolverKind;
+
+/// Solver selection + damping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverConfig {
+    pub kind: SolverKind,
+    pub lambda: f64,
+    /// λ decay factor per step (1.0 = constant).
+    pub lambda_decay: f64,
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+    /// Levenberg–Marquardt adaptive damping: shrink λ on improvement,
+    /// grow on regression (overrides lambda_decay). Stabilizes
+    /// mini-batch NGD, where n ≪ m makes the per-batch Fisher noisy.
+    pub adaptive: bool,
+    pub threads: usize,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            kind: SolverKind::Chol,
+            lambda: 1e-3,
+            lambda_decay: 1.0,
+            lambda_min: 1e-6,
+            lambda_max: 1e3,
+            adaptive: false,
+            threads: 1,
+        }
+    }
+}
+
+/// Transformer-LM model shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub dim: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub context: usize,
+    pub mlp_hidden: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { dim: 16, heads: 2, layers: 2, context: 16, mlp_hidden: 64 }
+    }
+}
+
+/// Training-loop settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch_size: usize,
+    pub learning_rate: f64,
+    pub momentum: f64,
+    pub trust_radius: f64,
+    pub corpus_len: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            batch_size: 64,
+            learning_rate: 0.2,
+            momentum: 0.0,
+            trust_radius: 0.0, // 0 = disabled
+            corpus_len: 100_000,
+            seed: 42,
+            log_every: 10,
+            checkpoint_every: 0, // 0 = disabled
+            checkpoint_dir: "checkpoints".into(),
+        }
+    }
+}
+
+/// Coordinator topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Worker count for the m-axis sharding of S.
+    pub workers: usize,
+    /// Bounded-channel depth (backpressure window).
+    pub queue_depth: usize,
+    /// Use the PJRT artifact runtime when an artifact matches the shape.
+    pub use_artifacts: bool,
+    pub artifact_dir: String,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            queue_depth: 4,
+            use_artifacts: true,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// VMC / stochastic-reconfiguration settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmcConfig {
+    pub sites: usize,
+    pub coupling_j: f64,
+    pub field_h: f64,
+    pub hidden: usize,
+    pub samples: usize,
+    pub iterations: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+    /// "complex" or "real_part" (§3's two Fisher conventions).
+    pub variant: String,
+}
+
+impl Default for VmcConfig {
+    fn default() -> Self {
+        VmcConfig {
+            sites: 8,
+            coupling_j: 1.0,
+            field_h: 1.0,
+            hidden: 16,
+            samples: 400,
+            iterations: 150,
+            learning_rate: 0.08,
+            seed: 7,
+            variant: "complex".into(),
+        }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub solver: SolverConfig,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub coordinator: CoordinatorConfig,
+    pub vmc: VmcConfig,
+}
+
+impl Config {
+    /// Parse a TOML document + `section.key=value` overrides.
+    pub fn from_toml_str(text: &str, overrides: &[String]) -> Result<Config, String> {
+        let mut doc = parse_toml(text).map_err(|e| e.to_string())?;
+        for ov in overrides {
+            let eq = ov.find('=').ok_or_else(|| format!("override {ov:?} is not key=value"))?;
+            let key = ov[..eq].trim().to_string();
+            let value = parse_value(ov[eq + 1..].trim()).map_err(|e| format!("override {key}: {e}"))?;
+            doc.insert(key, value);
+        }
+        Config::from_doc(&doc)
+    }
+
+    /// Load a config file (missing path = all defaults + overrides).
+    pub fn load(path: Option<&str>, overrides: &[String]) -> Result<Config, String> {
+        let text = match path {
+            Some(p) => std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?,
+            None => String::new(),
+        };
+        Config::from_toml_str(&text, overrides)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let known = |k: &str| -> bool {
+            // Every key consumed below; used for unknown-key detection.
+            KNOWN_KEYS.contains(&k)
+        };
+        for key in doc.keys() {
+            if !known(key) {
+                return Err(format!(
+                    "unknown config key {key:?} (known keys: {})",
+                    KNOWN_KEYS.join(", ")
+                ));
+            }
+        }
+
+        get_str(doc, "solver.kind", |s| {
+            SolverKind::parse(s)
+                .map(|k| cfg.solver.kind = k)
+                .ok_or_else(|| format!("unknown solver kind {s:?}"))
+        })?;
+        get_f64(doc, "solver.lambda", &mut cfg.solver.lambda)?;
+        get_f64(doc, "solver.lambda_decay", &mut cfg.solver.lambda_decay)?;
+        get_f64(doc, "solver.lambda_min", &mut cfg.solver.lambda_min)?;
+        get_f64(doc, "solver.lambda_max", &mut cfg.solver.lambda_max)?;
+        get_bool(doc, "solver.adaptive", &mut cfg.solver.adaptive)?;
+        get_usize(doc, "solver.threads", &mut cfg.solver.threads)?;
+
+        get_usize(doc, "model.dim", &mut cfg.model.dim)?;
+        get_usize(doc, "model.heads", &mut cfg.model.heads)?;
+        get_usize(doc, "model.layers", &mut cfg.model.layers)?;
+        get_usize(doc, "model.context", &mut cfg.model.context)?;
+        get_usize(doc, "model.mlp_hidden", &mut cfg.model.mlp_hidden)?;
+
+        get_usize(doc, "train.steps", &mut cfg.train.steps)?;
+        get_usize(doc, "train.batch_size", &mut cfg.train.batch_size)?;
+        get_f64(doc, "train.learning_rate", &mut cfg.train.learning_rate)?;
+        get_f64(doc, "train.momentum", &mut cfg.train.momentum)?;
+        get_f64(doc, "train.trust_radius", &mut cfg.train.trust_radius)?;
+        get_usize(doc, "train.corpus_len", &mut cfg.train.corpus_len)?;
+        get_u64(doc, "train.seed", &mut cfg.train.seed)?;
+        get_usize(doc, "train.log_every", &mut cfg.train.log_every)?;
+        get_usize(doc, "train.checkpoint_every", &mut cfg.train.checkpoint_every)?;
+        get_string(doc, "train.checkpoint_dir", &mut cfg.train.checkpoint_dir)?;
+
+        get_usize(doc, "coordinator.workers", &mut cfg.coordinator.workers)?;
+        get_usize(doc, "coordinator.queue_depth", &mut cfg.coordinator.queue_depth)?;
+        get_bool(doc, "coordinator.use_artifacts", &mut cfg.coordinator.use_artifacts)?;
+        get_string(doc, "coordinator.artifact_dir", &mut cfg.coordinator.artifact_dir)?;
+
+        get_usize(doc, "vmc.sites", &mut cfg.vmc.sites)?;
+        get_f64(doc, "vmc.coupling_j", &mut cfg.vmc.coupling_j)?;
+        get_f64(doc, "vmc.field_h", &mut cfg.vmc.field_h)?;
+        get_usize(doc, "vmc.hidden", &mut cfg.vmc.hidden)?;
+        get_usize(doc, "vmc.samples", &mut cfg.vmc.samples)?;
+        get_usize(doc, "vmc.iterations", &mut cfg.vmc.iterations)?;
+        get_f64(doc, "vmc.learning_rate", &mut cfg.vmc.learning_rate)?;
+        get_u64(doc, "vmc.seed", &mut cfg.vmc.seed)?;
+        get_string(doc, "vmc.variant", &mut cfg.vmc.variant)?;
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.solver.lambda <= 0.0 {
+            return Err("solver.lambda must be > 0 (the damped system needs λ > 0)".into());
+        }
+        if !(0.0..=1.0).contains(&self.solver.lambda_decay) {
+            return Err("solver.lambda_decay must be in (0, 1]".into());
+        }
+        if self.model.dim % self.model.heads != 0 {
+            return Err(format!(
+                "model.heads {} must divide model.dim {}",
+                self.model.heads, self.model.dim
+            ));
+        }
+        if self.train.batch_size == 0 || self.train.steps == 0 {
+            return Err("train.batch_size and train.steps must be positive".into());
+        }
+        if self.coordinator.workers == 0 {
+            return Err("coordinator.workers must be ≥ 1".into());
+        }
+        if self.coordinator.queue_depth == 0 {
+            return Err("coordinator.queue_depth must be ≥ 1".into());
+        }
+        if self.vmc.variant != "complex" && self.vmc.variant != "real_part" {
+            return Err(format!("vmc.variant must be \"complex\" or \"real_part\", got {:?}", self.vmc.variant));
+        }
+        Ok(())
+    }
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "solver.kind",
+    "solver.lambda",
+    "solver.lambda_decay",
+    "solver.lambda_min",
+    "solver.lambda_max",
+    "solver.adaptive",
+    "solver.threads",
+    "model.dim",
+    "model.heads",
+    "model.layers",
+    "model.context",
+    "model.mlp_hidden",
+    "train.steps",
+    "train.batch_size",
+    "train.learning_rate",
+    "train.momentum",
+    "train.trust_radius",
+    "train.corpus_len",
+    "train.seed",
+    "train.log_every",
+    "train.checkpoint_every",
+    "train.checkpoint_dir",
+    "coordinator.workers",
+    "coordinator.queue_depth",
+    "coordinator.use_artifacts",
+    "coordinator.artifact_dir",
+    "vmc.sites",
+    "vmc.coupling_j",
+    "vmc.field_h",
+    "vmc.hidden",
+    "vmc.samples",
+    "vmc.iterations",
+    "vmc.learning_rate",
+    "vmc.seed",
+    "vmc.variant",
+];
+
+fn get_f64(doc: &TomlDoc, key: &str, out: &mut f64) -> Result<(), String> {
+    if let Some(v) = doc.get(key) {
+        *out = v.as_float().ok_or_else(|| format!("{key} must be a number"))?;
+    }
+    Ok(())
+}
+
+fn get_usize(doc: &TomlDoc, key: &str, out: &mut usize) -> Result<(), String> {
+    if let Some(v) = doc.get(key) {
+        let i = v.as_int().ok_or_else(|| format!("{key} must be an integer"))?;
+        if i < 0 {
+            return Err(format!("{key} must be non-negative"));
+        }
+        *out = i as usize;
+    }
+    Ok(())
+}
+
+fn get_u64(doc: &TomlDoc, key: &str, out: &mut u64) -> Result<(), String> {
+    if let Some(v) = doc.get(key) {
+        let i = v.as_int().ok_or_else(|| format!("{key} must be an integer"))?;
+        if i < 0 {
+            return Err(format!("{key} must be non-negative"));
+        }
+        *out = i as u64;
+    }
+    Ok(())
+}
+
+fn get_bool(doc: &TomlDoc, key: &str, out: &mut bool) -> Result<(), String> {
+    if let Some(v) = doc.get(key) {
+        *out = v.as_bool().ok_or_else(|| format!("{key} must be a boolean"))?;
+    }
+    Ok(())
+}
+
+fn get_string(doc: &TomlDoc, key: &str, out: &mut String) -> Result<(), String> {
+    if let Some(v) = doc.get(key) {
+        *out = v.as_str().ok_or_else(|| format!("{key} must be a string"))?.to_string();
+    }
+    Ok(())
+}
+
+fn get_str(
+    doc: &TomlDoc,
+    key: &str,
+    mut f: impl FnMut(&str) -> Result<(), String>,
+) -> Result<(), String> {
+    if let Some(v) = doc.get(key) {
+        let s = v.as_str().ok_or_else(|| format!("{key} must be a string"))?;
+        f(s)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = Config::from_toml_str(
+            r#"
+[solver]
+kind = "eigh"
+lambda = 0.01
+threads = 8
+
+[model]
+dim = 32
+heads = 4
+
+[train]
+steps = 500
+learning_rate = 0.1
+
+[coordinator]
+workers = 8
+use_artifacts = false
+
+[vmc]
+variant = "real_part"
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.kind, SolverKind::Eigh);
+        assert_eq!(cfg.solver.threads, 8);
+        assert_eq!(cfg.model.dim, 32);
+        assert_eq!(cfg.train.steps, 500);
+        assert!(!cfg.coordinator.use_artifacts);
+        assert_eq!(cfg.vmc.variant, "real_part");
+        // untouched sections keep defaults
+        assert_eq!(cfg.train.batch_size, TrainConfig::default().batch_size);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let cfg = Config::from_toml_str(
+            "[solver]\nlambda = 0.1\n",
+            &["solver.lambda=0.5".into(), "train.steps=7".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.lambda, 0.5);
+        assert_eq!(cfg.train.steps, 7);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = Config::from_toml_str("[solver]\nbogus = 1\n", &[]).unwrap_err();
+        assert!(err.contains("unknown config key"));
+    }
+
+    #[test]
+    fn validation_failures() {
+        assert!(Config::from_toml_str("[solver]\nlambda = 0.0\n", &[]).is_err());
+        assert!(Config::from_toml_str("[model]\ndim = 10\nheads = 3\n", &[]).is_err());
+        assert!(Config::from_toml_str("[vmc]\nvariant = \"bogus\"\n", &[]).is_err());
+        assert!(Config::from_toml_str("[solver]\nkind = \"lu\"\n", &[]).is_err());
+    }
+
+    #[test]
+    fn bad_override_reports() {
+        assert!(Config::from_toml_str("", &["no_equals".into()]).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Minimal TOML-subset parser (from scratch; the build is offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string, integer,
+//! float, boolean and homogeneous-array values, `#` comments, blank
+//! lines. This covers every config in `configs/`; anything else is a
+//! parse error, not silent misbehaviour.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Boolean(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lambda = 1` means 1.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Boolean(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parsed document: `section.key → value`. Top-level keys use section "".
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse a TOML-subset document into a flat `section.key` map.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |message: String| TomlError { line: lineno + 1, message };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header".into()))?
+                .trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.')
+            {
+                return Err(err(format!("invalid section name {name:?}")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(format!("expected `key = value`, got {line:?}")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            return Err(err(format!("invalid key {key:?}")));
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(&err)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.insert(full.clone(), value).is_some() {
+            return Err(err(format!("duplicate key {full:?}")));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub(crate) fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(TomlValue::String(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Boolean(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Boolean(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>, String> =
+            inner.split(',').map(|it| parse_value(it.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    // Number: integer unless it has . e E.
+    let is_floaty = s.contains('.') || s.contains('e') || s.contains('E');
+    if !is_floaty {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Integer(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalar_types() {
+        let doc = parse_toml(
+            r#"
+# top comment
+name = "dngd"       # inline comment
+steps = 100
+lr = 1e-2
+debug = false
+
+[solver]
+kind = "chol"
+lambda = 0.001
+threads = 4
+sizes = [256, 512, 1024]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["name"], TomlValue::String("dngd".into()));
+        assert_eq!(doc["steps"], TomlValue::Integer(100));
+        assert_eq!(doc["lr"], TomlValue::Float(0.01));
+        assert_eq!(doc["debug"], TomlValue::Boolean(false));
+        assert_eq!(doc["solver.kind"], TomlValue::String("chol".into()));
+        assert_eq!(doc["solver.lambda"].as_float(), Some(0.001));
+        assert_eq!(
+            doc["solver.sizes"],
+            TomlValue::Array(vec![
+                TomlValue::Integer(256),
+                TomlValue::Integer(512),
+                TomlValue::Integer(1024)
+            ])
+        );
+    }
+
+    #[test]
+    fn integer_accepted_as_float() {
+        let doc = parse_toml("lambda = 1").unwrap();
+        assert_eq!(doc["lambda"].as_float(), Some(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse_toml(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse_toml("[unclosed\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse_toml("a = 1\na = 2\n").unwrap_err();
+        assert!(err.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse_toml("x = @nope").is_err());
+        assert!(parse_toml(r#"x = "unterminated"#).is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn underscore_separators_in_numbers() {
+        let doc = parse_toml("m = 100_000").unwrap();
+        assert_eq!(doc["m"].as_int(), Some(100000));
+    }
+}

@@ -1,0 +1,39 @@
+//! L3 coordinator: the distributed training runtime.
+//!
+//! The paper (and RVB+23, whose parallelization strategy it shares — §3)
+//! distributes Algorithm 1 by sharding the score matrix **along the
+//! parameter axis m**: each of W workers owns an n×(m/W) column shard
+//! `S_k`. One damped solve then decomposes as
+//!
+//! ```text
+//! leader:  W = Σ_k S_k S_kᵀ + λĨ     ← partial Grams, tree-reduced
+//!          L = Chol(W)
+//!          u = Σ_k S_k v_k            ← partial matvecs, tree-reduced
+//!          z = L⁻ᵀ L⁻¹ u              ← O(n²), leader-local
+//! worker:  x_k = (v_k − S_kᵀ z)/λ    ← embarrassingly parallel
+//! ```
+//!
+//! Only n×n matrices and n-vectors ever cross worker boundaries — O(n²)
+//! communication for an O(nm) problem, which is what makes the scheme
+//! scale. The modules:
+//!
+//! * [`shard`] — the m-axis [`ShardPlan`] (exact-cover invariants);
+//! * [`reduce`] — pairwise tree reduction of partial results;
+//! * [`pool`] — persistent worker threads with bounded (backpressure)
+//!   channels and fault injection for tests;
+//! * [`sharded`] — [`ShardedCholSolver`], the distributed Algorithm 1
+//!   implementing [`crate::solver::DampedSolver`];
+//! * [`trainer`] — the end-to-end NGD trainer driving model, data,
+//!   solver, metrics and checkpoints.
+
+pub mod pool;
+pub mod reduce;
+pub mod shard;
+pub mod sharded;
+pub mod trainer;
+
+pub use pool::{PoolError, WorkerPool};
+pub use reduce::tree_reduce_mats;
+pub use shard::ShardPlan;
+pub use sharded::ShardedCholSolver;
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,97 @@
+//! Tree reduction of partial results — the simulated all-reduce.
+//!
+//! Partial Gram matrices from W workers are summed pairwise in ⌈log₂W⌉
+//! levels, each level's sums computed concurrently, mirroring the
+//! communication schedule a real collective would run across devices.
+
+use crate::linalg::Mat;
+
+/// Sum a vector of equally-shaped matrices by pairwise tree reduction.
+/// Level sums run on scoped threads (up to `threads` concurrent pairs).
+pub fn tree_reduce_mats(mut parts: Vec<Mat>, threads: usize) -> Mat {
+    assert!(!parts.is_empty());
+    let shape = parts[0].shape();
+    for p in &parts {
+        assert_eq!(p.shape(), shape, "tree_reduce over mismatched shapes");
+    }
+    while parts.len() > 1 {
+        let pairs = parts.len() / 2;
+        let odd = parts.len() % 2 == 1;
+        let mut next: Vec<Mat> = Vec::with_capacity(pairs + usize::from(odd));
+        if threads > 1 && pairs > 1 {
+            // Take ownership of pairs, sum concurrently.
+            let mut drained = parts;
+            let tail = if odd { drained.pop() } else { None };
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(pairs);
+                let mut iter = drained.into_iter();
+                while let (Some(mut a), Some(b)) = (iter.next(), iter.next()) {
+                    handles.push(scope.spawn(move || {
+                        a.axpy(1.0, &b);
+                        a
+                    }));
+                }
+                for h in handles {
+                    next.push(h.join().expect("reduce worker panicked"));
+                }
+            });
+            if let Some(t) = tail {
+                next.push(t);
+            }
+        } else {
+            let mut iter = parts.into_iter();
+            while let Some(mut a) = iter.next() {
+                if let Some(b) = iter.next() {
+                    a.axpy(1.0, &b);
+                }
+                next.push(a);
+            }
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
+}
+
+/// Sum vectors (leader-side reduction of partial `S_k v_k` matvecs).
+pub fn reduce_vecs(parts: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!parts.is_empty());
+    let len = parts[0].len();
+    let mut out = vec![0.0; len];
+    for p in parts {
+        assert_eq!(p.len(), len);
+        for (o, x) in out.iter_mut().zip(p) {
+            *o += x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn matches_serial_sum_any_count() {
+        let mut rng = Rng::seed_from(410);
+        for &count in &[1usize, 2, 3, 4, 5, 7, 8, 13] {
+            let parts: Vec<Mat> = (0..count).map(|_| Mat::randn(9, 9, &mut rng)).collect();
+            let mut expect = Mat::zeros(9, 9);
+            for p in &parts {
+                expect.axpy(1.0, p);
+            }
+            for &threads in &[1usize, 4] {
+                let got = tree_reduce_mats(parts.clone(), threads);
+                for (a, b) in got.as_slice().iter().zip(expect.as_slice()) {
+                    assert!((a - b).abs() < 1e-12, "count={count} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vec_reduce() {
+        let parts = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        assert_eq!(reduce_vecs(&parts), vec![111.0, 222.0]);
+    }
+}

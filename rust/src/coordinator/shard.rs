@@ -1,0 +1,104 @@
+//! Parameter-axis shard planning.
+
+/// A partition of the parameter axis `[0, m)` into contiguous worker
+/// shards, balanced to within one column.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub m: usize,
+    /// Half-open `[start, end)` per worker; non-empty, sorted, disjoint,
+    /// exact cover of `[0, m)`.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Balanced plan: first `m % workers` shards get one extra column.
+    /// Workers beyond `m` would get empty shards, so the effective worker
+    /// count is `min(workers, m)`.
+    pub fn balanced(m: usize, workers: usize) -> ShardPlan {
+        assert!(m > 0 && workers > 0);
+        let w = workers.min(m);
+        let base = m / w;
+        let rem = m % w;
+        let mut ranges = Vec::with_capacity(w);
+        let mut start = 0;
+        for i in 0..w {
+            let len = base + usize::from(i < rem);
+            ranges.push((start, start + len));
+            start += len;
+        }
+        ShardPlan { m, ranges }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Verify the exact-cover invariant (also property-tested).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut cursor = 0;
+        for &(s, e) in &self.ranges {
+            if s != cursor {
+                return Err(format!("gap or overlap at {s} (expected {cursor})"));
+            }
+            if e <= s {
+                return Err(format!("empty shard [{s},{e})"));
+            }
+            cursor = e;
+        }
+        if cursor != self.m {
+            return Err(format!("cover ends at {cursor}, expected {}", self.m));
+        }
+        Ok(())
+    }
+
+    /// Which shard owns column `j`.
+    pub fn owner(&self, j: usize) -> usize {
+        assert!(j < self.m);
+        // Balanced plans are at most two sizes; binary search is exact.
+        self.ranges.partition_point(|&(_, e)| e <= j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn balanced_plans_validate() {
+        for &(m, w) in &[(1usize, 1usize), (10, 3), (100, 7), (5, 8), (64, 64), (1000, 16)] {
+            let plan = ShardPlan::balanced(m, w);
+            plan.validate().unwrap();
+            assert_eq!(plan.workers(), w.min(m));
+            // Balance: sizes differ by at most 1.
+            let sizes: Vec<usize> = plan.ranges.iter().map(|&(s, e)| e - s).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1);
+        }
+    }
+
+    #[test]
+    fn owner_is_consistent() {
+        let plan = ShardPlan::balanced(100, 7);
+        for j in 0..100 {
+            let o = plan.owner(j);
+            let (s, e) = plan.ranges[o];
+            assert!(s <= j && j < e);
+        }
+    }
+
+    /// Property test (from-scratch randomized harness): random (m, w)
+    /// pairs must always produce an exact cover.
+    #[test]
+    fn property_exact_cover_random() {
+        let mut rng = Rng::seed_from(400);
+        for _ in 0..500 {
+            let m = 1 + rng.below(5000);
+            let w = 1 + rng.below(40);
+            let plan = ShardPlan::balanced(m, w);
+            plan.validate().unwrap();
+            let total: usize = plan.ranges.iter().map(|&(s, e)| e - s).sum();
+            assert_eq!(total, m);
+        }
+    }
+}

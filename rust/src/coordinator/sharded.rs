@@ -1,0 +1,186 @@
+//! Distributed Algorithm 1 over the worker pool.
+
+use super::pool::{Job, PoolError, WorkerPool};
+use super::reduce::{reduce_vecs, tree_reduce_mats};
+use super::shard::ShardPlan;
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+use crate::solver::{DampedSolver, SolveError};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+/// Sharded Cholesky solver: the paper's Algorithm 1 with the O(n²m) and
+/// O(nm) stages fanned out across workers and only n-sized state crossing
+/// thread boundaries.
+pub struct ShardedCholSolver {
+    pool: WorkerPool,
+    workers: usize,
+}
+
+impl ShardedCholSolver {
+    pub fn new(workers: usize, queue_depth: usize) -> ShardedCholSolver {
+        ShardedCholSolver { pool: WorkerPool::spawn(workers, queue_depth), workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Distribute column shards of `s` to the workers; returns the plan.
+    fn distribute(&self, s: &Mat) -> Result<ShardPlan, PoolError> {
+        let plan = ShardPlan::balanced(s.cols(), self.workers);
+        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
+            self.pool.send(w, Job::SetShard(s.slice_cols(c0, c1)))?;
+        }
+        Ok(plan)
+    }
+
+    fn pool_err(e: PoolError) -> SolveError {
+        SolveError::BadInput(format!("coordinator: {e}"))
+    }
+
+    /// Full distributed solve of `(SᵀS + λI) x = v`.
+    pub fn solve_distributed(
+        &self,
+        s: &Mat,
+        v: &[f64],
+        lambda: f64,
+    ) -> Result<Vec<f64>, SolveError> {
+        assert_eq!(v.len(), s.cols());
+        if lambda <= 0.0 {
+            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+        }
+        let plan = self.distribute(s).map_err(Self::pool_err)?;
+        let w_count = plan.workers();
+
+        // Phase 1: partial Grams, tree-reduced; leader adds λĨ + factors.
+        let (gtx, grx) = channel();
+        for w in 0..w_count {
+            self.pool.send(w, Job::Gram { reply: gtx.clone() }).map_err(Self::pool_err)?;
+        }
+        drop(gtx);
+        let mut parts = Vec::with_capacity(w_count);
+        for _ in 0..w_count {
+            let (_, part) = grx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
+            parts.push(part);
+        }
+        let mut w_mat = tree_reduce_mats(parts, 4);
+        w_mat.add_diag(lambda);
+        let l = cholesky(&w_mat)?;
+
+        // Phase 2: partial matvecs u_k = S_k v_k, reduced on the leader.
+        let (utx, urx) = channel();
+        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
+            self.pool
+                .send(w, Job::Matvec { v_k: v[c0..c1].to_vec(), reply: utx.clone() })
+                .map_err(Self::pool_err)?;
+        }
+        drop(utx);
+        let mut uparts = Vec::with_capacity(w_count);
+        for _ in 0..w_count {
+            let (_, part) = urx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
+            uparts.push(part);
+        }
+        let u = reduce_vecs(&uparts);
+
+        // Phase 3: leader-local O(n²) triangular solves.
+        let y = solve_lower(&l, &u);
+        let z = Arc::new(solve_lower_transpose(&l, &y));
+
+        // Phase 4: per-shard apply, gathered in shard order.
+        let (xtx, xrx) = channel();
+        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
+            self.pool
+                .send(
+                    w,
+                    Job::Apply {
+                        z: z.clone(),
+                        v_k: v[c0..c1].to_vec(),
+                        lambda,
+                        reply: xtx.clone(),
+                    },
+                )
+                .map_err(Self::pool_err)?;
+        }
+        drop(xtx);
+        let mut pieces: Vec<Option<Vec<f64>>> = vec![None; w_count];
+        for _ in 0..w_count {
+            let (wid, x_k) = xrx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
+            pieces[wid] = Some(x_k);
+        }
+        let mut x = Vec::with_capacity(s.cols());
+        for (w, piece) in pieces.into_iter().enumerate() {
+            let piece = piece.ok_or_else(|| Self::pool_err(PoolError::MissingShard(w)))?;
+            assert_eq!(piece.len(), plan.ranges[w].1 - plan.ranges[w].0);
+            x.extend_from_slice(&piece);
+        }
+        Ok(x)
+    }
+}
+
+impl DampedSolver for ShardedCholSolver {
+    fn name(&self) -> &'static str {
+        "chol-sharded"
+    }
+
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        self.solve_distributed(s, v, lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::{residual_norm, CholSolver};
+
+    #[test]
+    fn matches_serial_solver_various_topologies() {
+        let mut rng = Rng::seed_from(430);
+        for &(n, m, workers) in &[
+            (8usize, 40usize, 1usize),
+            (8, 40, 3),
+            (16, 100, 4),
+            (16, 100, 16),
+            (5, 7, 12), // more workers than columns
+        ] {
+            let s = Mat::randn(n, m, &mut rng);
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let solver = ShardedCholSolver::new(workers, 2);
+            let x = solver.solve_distributed(&s, &v, 0.05).unwrap();
+            let serial = CholSolver::default().solve(&s, &v, 0.05).unwrap();
+            for (a, b) in x.iter().zip(&serial) {
+                assert!((a - b).abs() < 1e-9, "topology ({n},{m},{workers})");
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_solves() {
+        let mut rng = Rng::seed_from(431);
+        let solver = ShardedCholSolver::new(4, 2);
+        for _ in 0..3 {
+            let s = Mat::randn(10, 50, &mut rng);
+            let v: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+            let x = solver.solve_distributed(&s, &v, 0.1).unwrap();
+            assert!(residual_norm(&s, &x, &v, 0.1) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn property_agreement_random_topologies() {
+        let mut rng = Rng::seed_from(432);
+        for _ in 0..20 {
+            let n = 2 + rng.below(12);
+            let m = n + rng.below(60);
+            let workers = 1 + rng.below(9);
+            let s = Mat::randn(n, m, &mut rng);
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let solver = ShardedCholSolver::new(workers, 1 + rng.below(3));
+            let x = solver.solve_distributed(&s, &v, 0.2).unwrap();
+            let serial = CholSolver::default().solve(&s, &v, 0.2).unwrap();
+            for (a, b) in x.iter().zip(&serial) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! End-to-end NGD trainer: corpus → tokenizer → transformer → per-sample
+//! scores (parallel over the batch) → damped solve (PJRT artifact,
+//! sharded-native, or serial-native) → parameter update → metrics →
+//! checkpoints.
+
+use crate::checkpoint::Checkpoint;
+use crate::config::Config;
+use crate::data::{BatchIter, CharTokenizer, Rng, SyntheticCorpus};
+use crate::linalg::Mat;
+use crate::metrics::MetricsLog;
+use crate::model::{BatchEval, Transformer, TransformerConfig};
+use crate::ngd::{DampingSchedule, NaturalGradient, Sgd};
+use crate::runtime::{ArtifactRegistry, Backend};
+use crate::solver::{DampedSolver, SolveError};
+use std::path::Path;
+use std::time::Instant;
+
+/// Which optimizer drives the run (the e2e example compares them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerChoice {
+    Ngd,
+    Sgd,
+}
+
+/// Final report of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub params: usize,
+    pub initial_loss: f64,
+    pub final_loss: f64,
+    /// Loss in bits/char (NLL / ln 2).
+    pub final_bits_per_char: f64,
+    pub wall_secs: f64,
+    pub backend: String,
+}
+
+/// The end-to-end trainer.
+pub struct Trainer {
+    pub cfg: Config,
+    pub model: Transformer,
+    pub tokenizer: CharTokenizer,
+    tokens: Vec<u32>,
+    pub params: Vec<f64>,
+    backend_name: String,
+    solver: TrainSolver,
+    eval_threads: usize,
+}
+
+enum TrainSolver {
+    Ngd(NaturalGradient),
+    Sgd(Sgd),
+}
+
+impl Trainer {
+    /// Build a trainer from config: generates the corpus, fits the
+    /// tokenizer, initializes the model, selects the solve backend.
+    pub fn new(cfg: &Config, optimizer: OptimizerChoice) -> Result<Trainer, String> {
+        let mut rng = Rng::seed_from(cfg.train.seed);
+        let text = SyntheticCorpus::generate(cfg.train.corpus_len, &mut rng);
+        let tokenizer = CharTokenizer::fit(&text);
+        let tokens = tokenizer.encode(&text);
+
+        let tcfg = TransformerConfig {
+            vocab: tokenizer.vocab_size(),
+            dim: cfg.model.dim,
+            heads: cfg.model.heads,
+            layers: cfg.model.layers,
+            context: cfg.model.context,
+            mlp_hidden: cfg.model.mlp_hidden,
+        };
+        tcfg.validate()?;
+        let model = Transformer::new(tcfg);
+        let params = model.init_params(&mut rng);
+        let m = model.num_params();
+        let n = cfg.train.batch_size;
+
+        // Backend selection: PJRT artifact if one matches (n, m) and
+        // artifacts are enabled; sharded-native when workers > 1; serial
+        // native otherwise.
+        let (solver_box, backend_name): (Box<dyn DampedSolver>, String) =
+            if cfg.coordinator.use_artifacts {
+                let reg = ArtifactRegistry::scan(Path::new(&cfg.coordinator.artifact_dir));
+                match Backend::select(&reg, n, m, cfg.solver.threads) {
+                    Backend::Pjrt(p) => (Box::new(p), "pjrt".to_string()),
+                    Backend::Native(_) if cfg.coordinator.workers > 1 => (
+                        Box::new(super::ShardedCholSolver::new(
+                            cfg.coordinator.workers,
+                            cfg.coordinator.queue_depth,
+                        )),
+                        format!("sharded×{}", cfg.coordinator.workers),
+                    ),
+                    Backend::Native(c) => (Box::new(c), "native".to_string()),
+                }
+            } else if cfg.coordinator.workers > 1 {
+                (
+                    Box::new(super::ShardedCholSolver::new(
+                        cfg.coordinator.workers,
+                        cfg.coordinator.queue_depth,
+                    )),
+                    format!("sharded×{}", cfg.coordinator.workers),
+                )
+            } else {
+                (
+                    Box::new(crate::solver::CholSolver::with_threads(cfg.solver.threads)),
+                    "native".to_string(),
+                )
+            };
+
+        let solver = match optimizer {
+            OptimizerChoice::Ngd => {
+                let damping = if cfg.solver.adaptive {
+                    // LM policy: grow λ when a step fails to improve the
+                    // loss — stabilizes mini-batch NGD, where n ≪ m makes
+                    // the per-batch Fisher noisy late in training.
+                    DampingSchedule::LevenbergMarquardt {
+                        lambda: cfg.solver.lambda,
+                        grow: 2.0,
+                        shrink: 0.9,
+                        min: cfg.solver.lambda_min,
+                        max: cfg.solver.lambda_max,
+                    }
+                } else if cfg.solver.lambda_decay < 1.0 {
+                    DampingSchedule::ExponentialDecay {
+                        initial: cfg.solver.lambda,
+                        decay: cfg.solver.lambda_decay,
+                        min: cfg.solver.lambda_min,
+                    }
+                } else {
+                    DampingSchedule::Constant { lambda: cfg.solver.lambda }
+                };
+                let mut ngd = NaturalGradient::new(solver_box, damping, cfg.train.learning_rate)
+                    .with_momentum(cfg.train.momentum);
+                if cfg.train.trust_radius > 0.0 {
+                    ngd = ngd.with_trust_radius(cfg.train.trust_radius);
+                }
+                TrainSolver::Ngd(ngd)
+            }
+            OptimizerChoice::Sgd => TrainSolver::Sgd(
+                Sgd::new(cfg.train.learning_rate).with_momentum(cfg.train.momentum),
+            ),
+        };
+
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            model,
+            tokenizer,
+            tokens,
+            params,
+            backend_name,
+            solver,
+            eval_threads: cfg.coordinator.workers.max(1),
+        })
+    }
+
+    /// Backend label ("pjrt", "sharded×W", "native").
+    pub fn backend(&self) -> &str {
+        &self.backend_name
+    }
+
+    /// Batch evaluation parallelized over samples: per-sample backprop is
+    /// embarrassingly parallel, so the batch is split across threads and
+    /// the 1/√n-scaled rows are restitched with the global scaling.
+    pub fn eval_batch_parallel(&self, contexts: &[Vec<u32>], targets: &[u32]) -> BatchEval {
+        let n = contexts.len();
+        let threads = self.eval_threads.min(n).max(1);
+        if threads == 1 {
+            return self.model.batch_eval(&self.params, contexts, targets);
+        }
+        let chunk = n.div_ceil(threads);
+        let mut pieces: Vec<Option<BatchEval>> = Vec::new();
+        for _ in 0..threads {
+            pieces.push(None);
+        }
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                let model = &self.model;
+                let params = &self.params;
+                let ctx = &contexts[lo..hi];
+                let tgt = &targets[lo..hi];
+                handles.push((t, scope.spawn(move || model.batch_eval(params, ctx, tgt))));
+            }
+            for (t, h) in handles {
+                pieces[t] = Some(h.join().expect("eval worker panicked"));
+            }
+        });
+        // Merge: rows were scaled by 1/√n_sub inside each piece; rescale
+        // to the global 1/√n. Loss/grad are weighted by n_sub/n.
+        let m = self.model.num_params();
+        let mut scores = Mat::zeros(n, m);
+        let mut grad = vec![0.0; m];
+        let mut loss = 0.0;
+        let mut row = 0usize;
+        for piece in pieces.into_iter().flatten() {
+            let n_sub = piece.scores.rows();
+            let rescale = (n_sub as f64).sqrt() / (n as f64).sqrt();
+            for i in 0..n_sub {
+                let src = piece.scores.row(i);
+                let dst = scores.row_mut(row);
+                for j in 0..m {
+                    dst[j] = src[j] * rescale;
+                }
+                row += 1;
+            }
+            let w = n_sub as f64 / n as f64;
+            loss += w * piece.loss;
+            for j in 0..m {
+                grad[j] += w * piece.grad[j];
+            }
+        }
+        assert_eq!(row, n);
+        BatchEval { loss, grad, scores }
+    }
+
+    /// Run the configured number of steps, logging
+    /// `(step, loss, lambda, grad_norm, step_secs)` rows.
+    pub fn run(&mut self, log: &mut MetricsLog) -> Result<TrainReport, SolveError> {
+        let cfg = self.cfg.clone();
+        let batch_rng = Rng::seed_from(cfg.train.seed ^ 0x9E3779B97F4A7C15);
+        let mut batches =
+            BatchIter::new(&self.tokens, cfg.model.context, cfg.train.batch_size, batch_rng.fork(1));
+        let started = Instant::now();
+        let mut initial_loss = f64::NAN;
+        let mut final_loss = f64::NAN;
+
+        for step in 0..cfg.train.steps {
+            let t0 = Instant::now();
+            let (contexts, targets) = batches.next_batch();
+            let eval = self.eval_batch_parallel(&contexts, &targets);
+            if step == 0 {
+                initial_loss = eval.loss;
+            }
+            final_loss = eval.loss;
+
+            let lambda = match &mut self.solver {
+                TrainSolver::Ngd(ngd) => {
+                    let report = ngd.step(&mut self.params, &eval.scores, &eval.grad, eval.loss)?;
+                    report.lambda
+                }
+                TrainSolver::Sgd(sgd) => {
+                    sgd.step(&mut self.params, &eval.grad);
+                    0.0
+                }
+            };
+
+            let grad_norm = crate::linalg::mat::norm2(&eval.grad);
+            log.push(&[step as f64, eval.loss, lambda, grad_norm, t0.elapsed().as_secs_f64()]);
+
+            if cfg.train.checkpoint_every > 0 && (step + 1) % cfg.train.checkpoint_every == 0 {
+                self.save_checkpoint(step + 1)
+                    .map_err(|e| SolveError::BadInput(format!("checkpoint: {e}")))?;
+            }
+        }
+
+        Ok(TrainReport {
+            steps: cfg.train.steps,
+            params: self.model.num_params(),
+            initial_loss,
+            final_loss,
+            final_bits_per_char: final_loss / std::f64::consts::LN_2,
+            wall_secs: started.elapsed().as_secs_f64(),
+            backend: self.backend_name.clone(),
+        })
+    }
+
+    /// Save params (+ step marker) to `checkpoint_dir/step_{k}.ckpt`.
+    pub fn save_checkpoint(&self, step: usize) -> Result<(), crate::checkpoint::CheckpointError> {
+        let mut ck = Checkpoint::new();
+        ck.insert("params", self.params.clone());
+        ck.insert("step", vec![step as f64]);
+        let path = Path::new(&self.cfg.train.checkpoint_dir).join(format!("step_{step}.ckpt"));
+        ck.save(&path)
+    }
+
+    /// Restore params from a checkpoint file.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize, String> {
+        let ck = Checkpoint::load(path).map_err(|e| e.to_string())?;
+        let params = ck.get("params").ok_or("checkpoint missing `params`")?;
+        if params.len() != self.params.len() {
+            return Err(format!(
+                "checkpoint has {} params, model needs {}",
+                params.len(),
+                self.params.len()
+            ));
+        }
+        self.params.copy_from_slice(params);
+        let step = ck.get("step").and_then(|s| s.first()).copied().unwrap_or(0.0);
+        Ok(step as usize)
+    }
+}
+
+/// Column names for the trainer's [`MetricsLog`].
+pub const TRAIN_LOG_COLUMNS: &[&str] = &["step", "loss", "lambda", "grad_norm", "step_secs"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> Config {
+        Config::from_toml_str(
+            r#"
+[model]
+dim = 8
+heads = 2
+layers = 1
+context = 8
+mlp_hidden = 16
+
+[train]
+steps = 8
+batch_size = 16
+learning_rate = 0.3
+corpus_len = 4000
+seed = 11
+
+[solver]
+lambda = 0.01
+
+[coordinator]
+workers = 2
+use_artifacts = false
+"#,
+            &[],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ngd_training_descends() {
+        let cfg = tiny_config();
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        assert!(trainer.backend().starts_with("sharded"));
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = trainer.run(&mut log).unwrap();
+        assert_eq!(log.len(), 8);
+        assert!(report.final_loss < report.initial_loss, "{report:?}");
+        assert!(report.final_bits_per_char > 0.0);
+    }
+
+    #[test]
+    fn parallel_eval_matches_serial() {
+        let cfg = tiny_config();
+        let trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let rng = Rng::seed_from(99);
+        let mut batches = BatchIter::new(&trainer.tokens, 8, 12, rng.fork(0));
+        let (contexts, targets) = batches.next_batch();
+        let par = trainer.eval_batch_parallel(&contexts, &targets);
+        let ser = trainer.model.batch_eval(&trainer.params, &contexts, &targets);
+        assert!((par.loss - ser.loss).abs() < 1e-12);
+        for (a, b) in par.grad.iter().zip(&ser.grad) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        for i in 0..12 {
+            for j in (0..trainer.model.num_params()).step_by(101) {
+                assert!((par.scores[(i, j)] - ser.scores[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_through_trainer() {
+        let mut cfg = tiny_config();
+        let dir = std::env::temp_dir().join("dngd_trainer_ckpt_test");
+        cfg.train.checkpoint_dir = dir.to_string_lossy().to_string();
+        cfg.train.checkpoint_every = 4;
+        cfg.train.steps = 4;
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        trainer.run(&mut log).unwrap();
+        let ckpt_path = dir.join("step_4.ckpt");
+        assert!(ckpt_path.exists());
+        let saved_params = trainer.params.clone();
+        // Scramble, then restore.
+        for p in trainer.params.iter_mut() {
+            *p = 0.0;
+        }
+        let step = trainer.load_checkpoint(&ckpt_path).unwrap();
+        assert_eq!(step, 4);
+        assert_eq!(trainer.params, saved_params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sgd_baseline_runs() {
+        let mut cfg = tiny_config();
+        cfg.train.learning_rate = 0.5;
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Sgd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = trainer.run(&mut log).unwrap();
+        assert!(report.final_loss.is_finite());
+    }
+}

@@ -1,0 +1,66 @@
+//! Mini-batch iteration over token streams.
+
+use super::rng::Rng;
+
+/// Iterator yielding `(context, target)` windows from a token stream for
+/// next-token-prediction training. Sampling is with replacement from
+/// uniformly random offsets (standard LM practice), deterministic in the
+/// RNG.
+pub struct BatchIter<'a> {
+    tokens: &'a [u32],
+    context: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(tokens: &'a [u32], context: usize, batch: usize, rng: Rng) -> Self {
+        assert!(tokens.len() > context + 1, "token stream shorter than context");
+        BatchIter { tokens, context, batch, rng }
+    }
+
+    /// Next batch: `batch` rows of `context` input ids plus the target id
+    /// following each window.
+    pub fn next_batch(&mut self) -> (Vec<Vec<u32>>, Vec<u32>) {
+        let max_start = self.tokens.len() - self.context - 1;
+        let mut xs = Vec::with_capacity(self.batch);
+        let mut ys = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let s = self.rng.below(max_start + 1);
+            xs.push(self.tokens[s..s + self.context].to_vec());
+            ys.push(self.tokens[s + self.context]);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_valid_windows() {
+        let tokens: Vec<u32> = (0..100u32).collect();
+        let mut it = BatchIter::new(&tokens, 8, 4, Rng::seed_from(3));
+        for _ in 0..10 {
+            let (xs, ys) = it.next_batch();
+            assert_eq!(xs.len(), 4);
+            assert_eq!(ys.len(), 4);
+            for (x, &y) in xs.iter().zip(&ys) {
+                assert_eq!(x.len(), 8);
+                // windows are consecutive and the target follows
+                for k in 1..8 {
+                    assert_eq!(x[k], x[k - 1] + 1);
+                }
+                assert_eq!(y, x[7] + 1);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_short_streams() {
+        let tokens: Vec<u32> = (0..5u32).collect();
+        BatchIter::new(&tokens, 8, 2, Rng::seed_from(0));
+    }
+}

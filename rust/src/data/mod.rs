@@ -1,0 +1,17 @@
+//! Synthetic data substrate: deterministic RNG, corpora, task generators
+//! and batching.
+//!
+//! The paper benchmarks on random score matrices and motivates the method
+//! with neural-network training and quantum Monte Carlo workloads; this
+//! module provides the deterministic synthetic equivalents used by the
+//! examples, benches and the end-to-end trainer.
+
+pub mod batch;
+pub mod corpus;
+pub mod rng;
+pub mod tasks;
+
+pub use batch::BatchIter;
+pub use corpus::{CharTokenizer, SyntheticCorpus};
+pub use rng::Rng;
+pub use tasks::{classification_task, regression_task, RegressionTask};

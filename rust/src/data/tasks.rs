@@ -1,0 +1,80 @@
+//! Synthetic supervised tasks for the ridge-regression and
+//! Levenberg–Marquardt examples and for optimizer tests.
+
+use super::rng::Rng;
+use crate::linalg::Mat;
+
+/// A planted linear-regression task: `y = X wᵀ + ε` with wide features
+/// (m ≫ n), the regime the paper targets.
+pub struct RegressionTask {
+    /// Design matrix, n×m.
+    pub x: Mat,
+    /// Targets, length n.
+    pub y: Vec<f64>,
+    /// Planted coefficient vector, length m.
+    pub w_true: Vec<f64>,
+    /// Noise std used.
+    pub noise: f64,
+}
+
+/// Generate a wide regression task with `sparsity` fraction of nonzero
+/// planted coefficients.
+pub fn regression_task(n: usize, m: usize, noise: f64, sparsity: f64, rng: &mut Rng) -> RegressionTask {
+    let x = Mat::randn(n, m, rng);
+    let mut w_true = vec![0.0; m];
+    for w in w_true.iter_mut() {
+        if rng.bernoulli(sparsity) {
+            *w = rng.normal();
+        }
+    }
+    let mut y = x.matvec(&w_true);
+    for yi in &mut y {
+        *yi += noise * rng.normal();
+    }
+    RegressionTask { x, y, w_true, noise }
+}
+
+/// Two-class Gaussian-blob classification: returns `(features n×d,
+/// labels ±1)`. Used by the NGD-vs-SGD optimizer tests.
+pub fn classification_task(n: usize, d: usize, separation: f64, rng: &mut Rng) -> (Mat, Vec<f64>) {
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let label = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        y[i] = label;
+        for j in 0..d {
+            let center = if j == 0 { label * separation } else { 0.0 };
+            x[(i, j)] = center + rng.normal();
+        }
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regression_shapes_and_noise() {
+        let mut rng = Rng::seed_from(80);
+        let t = regression_task(20, 100, 0.0, 0.2, &mut rng);
+        assert_eq!(t.x.shape(), (20, 100));
+        assert_eq!(t.y.len(), 20);
+        assert_eq!(t.w_true.len(), 100);
+        // Noise-free: y == X w exactly.
+        let pred = t.x.matvec(&t.w_true);
+        for (p, yi) in pred.iter().zip(&t.y) {
+            assert!((p - yi).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn classification_is_separable_in_first_coordinate() {
+        let mut rng = Rng::seed_from(81);
+        let (x, y) = classification_task(500, 5, 4.0, &mut rng);
+        let correct = (0..500)
+            .filter(|&i| (x[(i, 0)] > 0.0) == (y[i] > 0.0))
+            .count();
+        assert!(correct > 480, "separation should make coordinate 0 predictive");
+    }
+}

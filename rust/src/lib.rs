@@ -1,0 +1,62 @@
+//! # dngd — Efficient Damped Natural Gradient Descent at Scale
+//!
+//! A production-oriented reproduction of *"Efficient Numerical Algorithm for
+//! Large-Scale Damped Natural Gradient Descent"* (Chen, Xie & Wang, 2023).
+//!
+//! The paper's contribution is **Algorithm 1**: to solve the damped Fisher
+//! system
+//!
+//! ```text
+//! (SᵀS + λI) x = v,      S ∈ ℝ^{n×m},  m ≫ n
+//! ```
+//!
+//! compute the *small* n×n Gram matrix `W = SSᵀ + λĨ`, Cholesky-factor it
+//! `W = LLᵀ`, and recover `x = (v − SᵀL⁻ᵀL⁻¹Sv)/λ` with two triangular
+//! solves — O(n³ + n²m) time and O(nm) memory instead of O(m³) / O(m²).
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`linalg`] | dense linear-algebra substrate (GEMM, SYRK, Cholesky, triangular solves, Jacobi eigh/SVD, QR, complex) — built from scratch |
+//! | [`solver`] | the paper's Algorithm 1 (`chol`) and every baseline it benchmarks against (`eigh`, `svda`, `naive`, `cg`, `rvb`) plus complex SR variants |
+//! | [`ngd`]    | natural-gradient optimizer: damping schedules, trust region, momentum, KFAC block-diagonal baseline |
+//! | [`model`]  | native model substrate: MLP / tiny transformer with per-sample score rows |
+//! | [`vmc`]    | variational Monte Carlo: Ising Hamiltonian, complex RBM, Metropolis, stochastic reconfiguration |
+//! | [`data`]   | deterministic RNG, synthetic corpora, task generators, batching |
+//! | [`runtime`]| PJRT runtime: load AOT HLO artifacts produced by `python/compile/aot.py` |
+//! | [`coordinator`] | leader/worker sharded training runtime (m-axis sharding of S, tree reduce of the Gram matrix) |
+//! | [`config`] | TOML config parser + typed configs + CLI merging |
+//! | [`metrics`]| timers, counters, histograms, power-law fits, CSV sinks |
+//! | [`checkpoint`] | binary checkpoint save/load |
+//!
+//! ## Quickstart
+//!
+//! ```rust
+//! use dngd::data::rng::Rng;
+//! use dngd::linalg::Mat;
+//! use dngd::solver::{DampedSolver, CholSolver};
+//!
+//! let mut rng = Rng::seed_from(42);
+//! let (n, m) = (32, 512);
+//! let s = Mat::randn(n, m, &mut rng);
+//! let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+//! let x = CholSolver::default().solve(&s, &v, 1e-3).unwrap();
+//! // x satisfies (SᵀS + λI) x = v
+//! let mut resid = s.t_matvec(&s.matvec(&x));
+//! for j in 0..m { resid[j] += 1e-3 * x[j] - v[j]; }
+//! assert!(resid.iter().all(|r| r.abs() < 1e-8));
+//! ```
+
+pub mod bench_tables;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod ngd;
+pub mod runtime;
+pub mod solver;
+pub mod vmc;

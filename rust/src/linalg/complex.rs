@@ -1,0 +1,539 @@
+//! Complex scalar and matrix support for the stochastic-reconfiguration
+//! variants (§3 of the paper).
+//!
+//! When the wavefunction is complex, `S` is complex and every transpose in
+//! Algorithm 1 becomes a Hermitian conjugate: `W = SS† + λĨ` is Hermitian
+//! positive definite, `W = LL†` is the complex Cholesky factorization, and
+//! the solves run in ℂ. This module provides exactly those primitives:
+//! [`c64`], [`CMat`], [`CMat::herk`], [`cholesky_complex`], and the
+//! forward/adjoint substitutions.
+
+use crate::data::rng::Rng;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+/// Complex double — built from scratch (no external num crate).
+/// Named `c64` to match the NumPy/JAX dtype family it mirrors.
+#[allow(non_camel_case_types)]
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct c64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+#[allow(non_upper_case_globals)]
+impl c64 {
+    pub const ZERO: c64 = c64 { re: 0.0, im: 0.0 };
+    pub const ONE: c64 = c64 { re: 1.0, im: 0.0 };
+    pub const I: c64 = c64 { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        c64 { re, im }
+    }
+
+    #[inline]
+    pub fn from_re(re: f64) -> Self {
+        c64 { re, im: 0.0 }
+    }
+
+    /// Complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Self {
+        c64 { re: self.re, im: -self.im }
+    }
+
+    /// Squared modulus |z|².
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Modulus |z|.
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Principal square root.
+    pub fn sqrt(self) -> Self {
+        let r = self.abs();
+        let re = ((r + self.re) / 2.0).max(0.0).sqrt();
+        let im_mag = ((r - self.re) / 2.0).max(0.0).sqrt();
+        c64 { re, im: if self.im >= 0.0 { im_mag } else { -im_mag } }
+    }
+
+    /// Complex exponential.
+    pub fn exp(self) -> Self {
+        let e = self.re.exp();
+        c64 { re: e * self.im.cos(), im: e * self.im.sin() }
+    }
+
+    /// Principal natural logarithm.
+    pub fn ln(self) -> Self {
+        c64 { re: self.abs().ln(), im: self.im.atan2(self.re) }
+    }
+
+    /// Complex hyperbolic cosine (needed by the RBM log-wavefunction).
+    pub fn cosh(self) -> Self {
+        // cosh(a+bi) = cosh a · cos b + i sinh a · sin b
+        c64 {
+            re: self.re.cosh() * self.im.cos(),
+            im: self.re.sinh() * self.im.sin(),
+        }
+    }
+
+    /// Complex hyperbolic tangent (derivative of ln cosh).
+    pub fn tanh(self) -> Self {
+        // tanh(a+bi) = (tanh a + i tan b) / (1 + i tanh a · tan b),
+        // guarded for large |a| where tanh a → ±1.
+        let ta = self.re.tanh();
+        if self.re.abs() > 20.0 {
+            // cos/sin(b) terms vanish relative to e^{2|a|}.
+            return c64 { re: ta, im: 0.0 };
+        }
+        let tb = self.im.tan();
+        let denom = c64::new(1.0, ta * tb);
+        c64::new(ta, tb) / denom
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl Add for c64 {
+    type Output = c64;
+    #[inline]
+    fn add(self, o: c64) -> c64 {
+        c64::new(self.re + o.re, self.im + o.im)
+    }
+}
+impl Sub for c64 {
+    type Output = c64;
+    #[inline]
+    fn sub(self, o: c64) -> c64 {
+        c64::new(self.re - o.re, self.im - o.im)
+    }
+}
+impl Mul for c64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, o: c64) -> c64 {
+        c64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+}
+impl Mul<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, o: f64) -> c64 {
+        c64::new(self.re * o, self.im * o)
+    }
+}
+impl Div for c64 {
+    type Output = c64;
+    #[inline]
+    fn div(self, o: c64) -> c64 {
+        let d = o.norm_sqr();
+        c64::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+impl Div<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn div(self, o: f64) -> c64 {
+        c64::new(self.re / o, self.im / o)
+    }
+}
+impl Neg for c64 {
+    type Output = c64;
+    #[inline]
+    fn neg(self) -> c64 {
+        c64::new(-self.re, -self.im)
+    }
+}
+impl AddAssign for c64 {
+    #[inline]
+    fn add_assign(&mut self, o: c64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+impl SubAssign for c64 {
+    #[inline]
+    fn sub_assign(&mut self, o: c64) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl fmt::Debug for c64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{:.6}+{:.6}i", self.re, self.im)
+        } else {
+            write!(f, "{:.6}-{:.6}i", self.re, -self.im)
+        }
+    }
+}
+
+/// Conjugated dot product `Σ conj(a_i)·b_i`.
+#[inline]
+pub fn cdot(a: &[c64], b: &[c64]) -> c64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = c64::ZERO;
+    for (x, y) in a.iter().zip(b) {
+        s += x.conj() * *y;
+    }
+    s
+}
+
+/// Plain (unconjugated) dot product.
+#[inline]
+pub fn udot(a: &[c64], b: &[c64]) -> c64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = c64::ZERO;
+    for (x, y) in a.iter().zip(b) {
+        s += *x * *y;
+    }
+    s
+}
+
+/// Row-major dense complex matrix.
+#[derive(Clone, PartialEq)]
+pub struct CMat {
+    data: Vec<c64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CMat { data: vec![c64::ZERO; rows * cols], rows, cols }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = CMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = c64::ONE;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> c64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        CMat { data, rows, cols }
+    }
+
+    /// Complex standard normal (independent re/im ~ N(0, 1)).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        CMat::from_fn(rows, cols, |_, _| c64::new(rng.normal(), rng.normal()))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[c64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [c64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Real part as a [`super::Mat`].
+    pub fn real(&self) -> super::Mat {
+        super::Mat::from_fn(self.rows, self.cols, |i, j| self[(i, j)].re)
+    }
+
+    /// Imaginary part as a [`super::Mat`].
+    pub fn imag(&self) -> super::Mat {
+        super::Mat::from_fn(self.rows, self.cols, |i, j| self[(i, j)].im)
+    }
+
+    /// Conjugate transpose (copies; tests/oracles only).
+    pub fn dagger(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |i, j| self[(j, i)].conj())
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[c64]) -> Vec<c64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|i| udot(self.row(i), x)).collect()
+    }
+
+    /// `y = A† x` without materializing `A†`.
+    pub fn dagger_matvec(&self, x: &[c64]) -> Vec<c64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![c64::ZERO; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            let row = self.row(i);
+            for j in 0..self.cols {
+                y[j] += row[j].conj() * xi;
+            }
+        }
+        y
+    }
+
+    /// Hermitian rank-k update `W = A·A† + λI` — line 1 of Algorithm 1 in
+    /// the complex SR variant. W is Hermitian positive definite for λ>0.
+    pub fn herk(&self, lambda: f64) -> CMat {
+        let n = self.rows;
+        let mut w = CMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // W[i][j] = Σ_k A[i][k]·conj(A[j][k]) = cdot(row_j, row_i)…
+                let v = cdot(self.row(j), self.row(i));
+                w[(i, j)] = v;
+                if i != j {
+                    w[(j, i)] = v.conj();
+                }
+            }
+        }
+        for i in 0..n {
+            w[(i, i)] += c64::from_re(lambda);
+        }
+        w
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, z| a.max(z.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for CMat {
+    type Output = c64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &c64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for CMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut c64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for CMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "CMat {}x{}", self.rows, self.cols)
+    }
+}
+
+/// Complex (Hermitian) Cholesky: `W = L·L†` with `L` lower triangular and
+/// real positive diagonal. Errors mirror the real case.
+pub fn cholesky_complex(w: &CMat) -> Result<CMat, super::CholeskyError> {
+    let n = w.rows();
+    assert_eq!(w.cols(), n);
+    let mut l = w.clone();
+    for j in 0..n {
+        let mut d = l[(j, j)].re;
+        for p in 0..j {
+            d -= l[(j, p)].norm_sqr();
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(super::CholeskyError { pivot: j, value: d });
+        }
+        let djj = d.sqrt();
+        l[(j, j)] = c64::from_re(djj);
+        for i in j + 1..n {
+            let mut s = l[(i, j)];
+            for p in 0..j {
+                s -= l[(i, p)] * l[(j, p)].conj();
+            }
+            l[(i, j)] = s / djj;
+        }
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            l[(i, j)] = c64::ZERO;
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (forward substitution, complex).
+pub fn solve_lower_c(l: &CMat, b: &[c64]) -> Vec<c64> {
+    let n = l.rows();
+    let mut y = b.to_vec();
+    for i in 0..n {
+        let mut s = y[i];
+        let row = l.row(i);
+        for j in 0..i {
+            s -= row[j] * y[j];
+        }
+        y[i] = s / row[i];
+    }
+    y
+}
+
+/// Solve `L† z = y` (adjoint backward substitution, complex).
+pub fn solve_lower_dagger_c(l: &CMat, y: &[c64]) -> Vec<c64> {
+    let n = l.rows();
+    let mut z = y.to_vec();
+    for i in (0..n).rev() {
+        let zi = z[i] / l.row(i)[i].conj();
+        z[i] = zi;
+        let row = l.row(i);
+        for j in 0..i {
+            z[j] -= row[j].conj() * zi;
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c64_field_axioms_spot_checks() {
+        let a = c64::new(1.0, 2.0);
+        let b = c64::new(-3.0, 0.5);
+        assert_eq!(a + b, c64::new(-2.0, 2.5));
+        assert_eq!(a * c64::ONE, a);
+        let q = a / b;
+        let back = q * b;
+        assert!((back - a).abs() < 1e-14);
+        assert_eq!(a.conj().conj(), a);
+        assert!((a * a.conj()).im.abs() < 1e-15);
+        assert!(((a * a.conj()).re - a.norm_sqr()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn c64_transcendentals() {
+        // exp(iπ) = −1
+        let e = (c64::I * std::f64::consts::PI).exp();
+        assert!((e - c64::new(-1.0, 0.0)).abs() < 1e-14);
+        // ln(exp(z)) = z for principal branch inputs
+        let z = c64::new(0.3, -0.7);
+        assert!((z.exp().ln() - z).abs() < 1e-14);
+        // cosh matches the defining series via exp
+        let ch = z.cosh();
+        let via_exp = (z.exp() + (-z).exp()) / 2.0;
+        assert!((ch - via_exp).abs() < 1e-14);
+        // tanh = sinh/cosh via exp
+        let sh = (z.exp() - (-z).exp()) / 2.0;
+        assert!((z.tanh() - sh / ch).abs() < 1e-12);
+        // tanh saturates without NaN for large real part
+        let big = c64::new(400.0, 1.3).tanh();
+        assert!(big.is_finite());
+        assert!((big.re - 1.0).abs() < 1e-12);
+        // sqrt(z)² = z
+        let r = c64::new(-2.0, 0.8).sqrt();
+        assert!((r * r - c64::new(-2.0, 0.8)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn herk_is_hermitian_pd() {
+        let mut rng = Rng::seed_from(70);
+        let a = CMat::randn(8, 30, &mut rng);
+        let w = a.herk(0.2);
+        for i in 0..8 {
+            for j in 0..8 {
+                let wij = w[(i, j)];
+                let wji = w[(j, i)];
+                assert!((wij - wji.conj()).abs() < 1e-12);
+            }
+            assert!(w[(i, i)].re > 0.0);
+            assert!(w[(i, i)].im.abs() < 1e-12);
+        }
+        // Matches the naive A·A† + λI.
+        let ad = a.dagger();
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = c64::ZERO;
+                for k in 0..30 {
+                    s += a[(i, k)] * ad[(k, j)];
+                }
+                if i == j {
+                    s += c64::from_re(0.2);
+                }
+                assert!((w[(i, j)] - s).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn complex_cholesky_reconstructs() {
+        let mut rng = Rng::seed_from(71);
+        for &n in &[1, 2, 5, 20] {
+            let a = CMat::randn(n, n + 4, &mut rng);
+            let w = a.herk(0.5);
+            let l = cholesky_complex(&w).unwrap();
+            // L·L† == W
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = c64::ZERO;
+                    for k in 0..n {
+                        s += l[(i, k)] * l[(j, k)].conj();
+                    }
+                    assert!((s - w[(i, j)]).abs() < 1e-9, "n={n} ({i},{j})");
+                }
+            }
+            // Diagonal real positive, upper zero.
+            for i in 0..n {
+                assert!(l[(i, i)].im == 0.0 && l[(i, i)].re > 0.0);
+                for j in i + 1..n {
+                    assert_eq!(l[(i, j)], c64::ZERO);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn complex_solves_roundtrip() {
+        let mut rng = Rng::seed_from(72);
+        let n = 12;
+        let a = CMat::randn(n, n + 4, &mut rng);
+        let w = a.herk(1.0);
+        let l = cholesky_complex(&w).unwrap();
+        let x_true: Vec<c64> = (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+        // b = W x = L (L† x)
+        let b = w.matvec(&x_true);
+        let x = solve_lower_dagger_c(&l, &solve_lower_c(&l, &b));
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((*u - *v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dagger_matvec_matches_explicit() {
+        let mut rng = Rng::seed_from(73);
+        let a = CMat::randn(5, 9, &mut rng);
+        let x: Vec<c64> = (0..5).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+        let fast = a.dagger_matvec(&x);
+        let slow = a.dagger().matvec(&x);
+        for (u, v) in fast.iter().zip(&slow) {
+            assert!((*u - *v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn real_imag_split() {
+        let z = CMat::from_fn(2, 2, |i, j| c64::new((i + j) as f64, (i * j) as f64 + 0.5));
+        assert_eq!(z.real()[(1, 1)], 2.0);
+        assert_eq!(z.imag()[(1, 1)], 1.5);
+    }
+}

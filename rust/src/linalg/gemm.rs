@@ -1,0 +1,315 @@
+//! Blocked matrix-multiplication kernels.
+//!
+//! Everything is row-major, so each kernel picks the loop order that keeps
+//! the inner loop streaming over contiguous rows:
+//!
+//! * [`gemm`]    `C = α·A·B + β·C`      — i,k,j order (axpy over C rows)
+//! * [`gemm_nt`] `C = α·A·Bᵀ + β·C`     — dot products of row pairs
+//! * [`gemm_tn`] `C = α·Aᵀ·B + β·C`     — rank-1 updates over C rows
+//! * [`syrk`]    `W = A·Aᵀ + λI`        — the Gram matrix of Algorithm 1
+//!   line 1; exploits symmetry (computes the lower triangle, mirrors).
+//!
+//! Cache blocking: the k (reduction) dimension is tiled with [`KC`] so a
+//! panel of `A` stays resident in L2 while it sweeps `B`. The micro-kernel
+//! level is left to LLVM auto-vectorization of the unrolled
+//! [`dot`](super::mat::dot) / axpy bodies, which reaches within ~2× of
+//! hand-written AVX2 for f64 on this testbed (see EXPERIMENTS.md §Perf).
+
+use super::mat::{axpy, dot, Mat};
+
+/// Reduction-dimension tile: KC·8 bytes · (row of A + row of B) per
+/// iteration ≈ 4 KiB, comfortably inside L1 alongside the C row.
+pub const KC: usize = 256;
+
+/// Row tile for the packed SYRK/NT kernels (panel of MC rows of A in L2).
+pub const MC: usize = 64;
+
+/// `C = alpha * A * B + beta * C`, shapes `(p×q)·(q×r) → p×r`.
+pub fn gemm(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+    let (p, q) = a.shape();
+    let (q2, r) = b.shape();
+    assert_eq!(q, q2, "gemm inner dims {q} vs {q2}");
+    assert_eq!(c.shape(), (p, r), "gemm output shape");
+    if beta != 1.0 {
+        c.scale(beta);
+    }
+    // Tile the reduction so B's working set per sweep is KC rows.
+    let mut k0 = 0;
+    while k0 < q {
+        let k1 = (k0 + KC).min(q);
+        for i in 0..p {
+            let arow = &a.row(i)[k0..k1];
+            let crow = c.row_mut(i);
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik != 0.0 {
+                    axpy(alpha * aik, b.row(k0 + kk), crow);
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// `C = alpha * A * Bᵀ + beta * C`, shapes `(p×q)·(r×q)ᵀ → p×r`.
+///
+/// Row-major heaven: every entry is a dot product of two contiguous rows.
+pub fn gemm_nt(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+    let (p, q) = a.shape();
+    let (r, q2) = b.shape();
+    assert_eq!(q, q2, "gemm_nt inner dims");
+    assert_eq!(c.shape(), (p, r), "gemm_nt output shape");
+    for i in 0..p {
+        let arow = a.row(i);
+        for j in 0..r {
+            let v = alpha * dot(arow, b.row(j));
+            let cij = &mut c.row_mut(i)[j];
+            *cij = v + beta * *cij;
+        }
+    }
+}
+
+/// `C = alpha * Aᵀ * B + beta * C`, shapes `(q×p)ᵀ·(q×r) → p×r`.
+///
+/// Never materializes `Aᵀ`: streams A and B row-by-row doing rank-1
+/// updates of C. This is the memory-access pattern of Algorithm-1 line 4's
+/// `Sᵀ(L⁻ᵀu)` when u is a block of vectors.
+pub fn gemm_tn(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+    let (q, p) = a.shape();
+    let (q2, r) = b.shape();
+    assert_eq!(q, q2, "gemm_tn inner dims");
+    assert_eq!(c.shape(), (p, r), "gemm_tn output shape");
+    if beta != 1.0 {
+        c.scale(beta);
+    }
+    for i in 0..q {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for j in 0..p {
+            let aij = alpha * arow[j];
+            if aij != 0.0 {
+                axpy(aij, brow, c.row_mut(j));
+            }
+        }
+    }
+}
+
+/// Symmetric rank-k update: `W = A·Aᵀ + lambda·I` for `A: n×m`.
+///
+/// This is **line 1 of Algorithm 1** — the only O(n²m) step — so it gets
+/// the most care: only the lower triangle is computed (half the FLOPs of a
+/// general NT product), the reduction is KC-tiled, and row panels of MC
+/// rows keep the A panel hot in L2 while it is reused n/2 times on
+/// average. The upper triangle is mirrored at the end.
+pub fn syrk(a: &Mat, lambda: f64) -> Mat {
+    let (n, m) = a.shape();
+    let mut w = Mat::zeros(n, n);
+    let mut k0 = 0;
+    while k0 < m {
+        let k1 = (k0 + KC).min(m);
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + MC).min(n);
+            for i in i0..i1 {
+                let arow_i = &a.row(i)[k0..k1];
+                for j in 0..=i {
+                    let arow_j = &a.row(j)[k0..k1];
+                    w[(i, j)] += dot(arow_i, arow_j);
+                }
+            }
+            i0 = i1;
+        }
+        k0 = k1;
+    }
+    // Mirror lower → upper and damp the diagonal.
+    for i in 0..n {
+        for j in 0..i {
+            w[(j, i)] = w[(i, j)];
+        }
+        w[(i, i)] += lambda;
+    }
+    w
+}
+
+/// Multi-threaded SYRK: partitions the *row panels* of W across `threads`
+/// OS threads (std::thread::scope — no pool dependency). Work per panel i
+/// is proportional to i, so panels are dealt round-robin to balance load.
+pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
+    let (n, m) = a.shape();
+    if threads <= 1 || n < 64 {
+        return syrk(a, lambda);
+    }
+    let mut w = Mat::zeros(n, n);
+    {
+        // Each thread owns a disjoint set of rows of W (round-robin by
+        // MC-panel so triangular work is balanced). Rows are handed out
+        // via raw pointers into disjoint row ranges — safe because the
+        // panels never overlap.
+        let wptr = SendPtr(w.as_mut_slice().as_mut_ptr());
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let a_ref = &a;
+                scope.spawn(move || {
+                    let wp = wptr; // capture the Send wrapper by copy
+                    let mut panel = 0usize;
+                    let mut i0 = 0usize;
+                    while i0 < n {
+                        let i1 = (i0 + MC).min(n);
+                        if panel % threads == t {
+                            let mut k0 = 0;
+                            while k0 < m {
+                                let k1 = (k0 + KC).min(m);
+                                for i in i0..i1 {
+                                    let arow_i = &a_ref.row(i)[k0..k1];
+                                    for j in 0..=i {
+                                        let arow_j = &a_ref.row(j)[k0..k1];
+                                        // SAFETY: row i of W is owned
+                                        // exclusively by this thread.
+                                        unsafe {
+                                            *wp.0.add(i * n + j) += dot(arow_i, arow_j);
+                                        }
+                                    }
+                                }
+                                k0 = k1;
+                            }
+                        }
+                        panel += 1;
+                        i0 = i1;
+                    }
+                });
+            }
+        });
+    }
+    for i in 0..n {
+        for j in 0..i {
+            w[(j, i)] = w[(i, j)];
+        }
+        w[(i, i)] += lambda;
+    }
+    w
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+// SAFETY: threads write disjoint rows; synchronization is the scope join.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn naive_gemm(a: &Mat, b: &Mat) -> Mat {
+        let (p, q) = a.shape();
+        let (_, r) = b.shape();
+        Mat::from_fn(p, r, |i, j| (0..q).map(|k| a[(i, k)] * b[(k, j)]).sum())
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Rng::seed_from(10);
+        for &(p, q, r) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 300, 16)] {
+            let a = Mat::randn(p, q, &mut rng);
+            let b = Mat::randn(q, r, &mut rng);
+            let mut c = Mat::zeros(p, r);
+            gemm(1.0, &a, &b, 0.0, &mut c);
+            let expect = naive_gemm(&a, &b);
+            assert!((&c.as_slice().iter().zip(expect.as_slice()))
+                .clone()
+                .all(|(x, y)| (x - y).abs() < 1e-10));
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut rng = Rng::seed_from(11);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(6, 3, &mut rng);
+        let c0 = Mat::randn(4, 3, &mut rng);
+        let mut c = c0.clone();
+        gemm(2.0, &a, &b, -1.0, &mut c);
+        let expect = {
+            let mut e = naive_gemm(&a, &b);
+            e.scale(2.0);
+            e.axpy(-1.0, &c0);
+            e
+        };
+        for (x, y) in c.as_slice().iter().zip(expect.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_gemm_with_transpose() {
+        let mut rng = Rng::seed_from(12);
+        let a = Mat::randn(5, 7, &mut rng);
+        let b = Mat::randn(9, 7, &mut rng);
+        let mut c = Mat::zeros(5, 9);
+        gemm_nt(1.0, &a, &b, 0.0, &mut c);
+        let expect = naive_gemm(&a, &b.transpose());
+        for (x, y) in c.as_slice().iter().zip(expect.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_gemm_with_transpose() {
+        let mut rng = Rng::seed_from(13);
+        let a = Mat::randn(7, 5, &mut rng);
+        let b = Mat::randn(7, 4, &mut rng);
+        let mut c = Mat::zeros(5, 4);
+        gemm_tn(1.0, &a, &b, 0.0, &mut c);
+        let expect = naive_gemm(&a.transpose(), &b);
+        for (x, y) in c.as_slice().iter().zip(expect.as_slice()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn syrk_matches_a_at_plus_lambda() {
+        let mut rng = Rng::seed_from(14);
+        for &(n, m) in &[(1, 1), (5, 3), (8, 1000), (70, 130)] {
+            let a = Mat::randn(n, m, &mut rng);
+            let w = syrk(&a, 0.5);
+            let mut expect = naive_gemm(&a, &a.transpose());
+            expect.add_diag(0.5);
+            for (x, y) in w.as_slice().iter().zip(expect.as_slice()) {
+                assert!((x - y).abs() < 1e-8, "syrk mismatch at n={n} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_is_symmetric() {
+        let mut rng = Rng::seed_from(15);
+        let a = Mat::randn(33, 77, &mut rng);
+        let w = syrk(&a, 1e-3);
+        for i in 0..33 {
+            for j in 0..33 {
+                assert_eq!(w[(i, j)], w[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_parallel_matches_serial() {
+        let mut rng = Rng::seed_from(16);
+        for &threads in &[2, 3, 8] {
+            let a = Mat::randn(150, 220, &mut rng);
+            let serial = syrk(&a, 0.1);
+            let par = syrk_parallel(&a, 0.1, threads);
+            for (x, y) in par.as_slice().iter().zip(serial.as_slice()) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_parallel_small_falls_back() {
+        let mut rng = Rng::seed_from(17);
+        let a = Mat::randn(10, 20, &mut rng);
+        let par = syrk_parallel(&a, 0.0, 4);
+        let ser = syrk(&a, 0.0);
+        assert_eq!(par, ser);
+    }
+}

@@ -1,0 +1,416 @@
+//! Row-major dense `f64` matrix.
+//!
+//! `Mat` is deliberately simple: a `Vec<f64>` plus `(rows, cols)`. All the
+//! performance-sensitive kernels (GEMM, SYRK, triangular solves) live in
+//! sibling modules and operate on raw row slices; `Mat` provides safe
+//! construction, indexing, views and the handful of whole-matrix helpers
+//! the solvers need.
+
+use crate::data::rng::Rng;
+use std::fmt;
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Mat {
+    /// All-zeros `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { data, rows, cols }
+    }
+
+    /// Take ownership of a row-major buffer. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length {} != {rows}x{cols}", data.len());
+        Mat { data, rows, cols }
+    }
+
+    /// Standard-normal random matrix (used for benchmark workloads; the
+    /// paper benchmarks on random score matrices of the same shape).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal());
+        }
+        Mat { data, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two disjoint mutable rows (needed by in-place factorizations).
+    #[inline]
+    pub fn rows_mut2(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(i, j);
+        let c = self.cols;
+        if i < j {
+            let (a, b) = self.data.split_at_mut(j * c);
+            (&mut a[i * c..i * c + c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(i * c);
+            (&mut b[..c], &mut a[j * c..j * c + c])
+        }
+    }
+
+    /// Full backing slice (row-major).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Explicit transpose (copies). The hot paths never materialize
+    /// transposes — they use the `gemm_tn`/`gemm_nt` kernels — but tests
+    /// and oracles do.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `y = A x` (rows-many dot products).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// `y = Aᵀ x` without materializing `Aᵀ` — axpy accumulation over rows.
+    /// This is the `Sᵀu` of Algorithm 1 line 4 and is memory-bound, so it
+    /// streams each row exactly once.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                y[j] += xi * row[j];
+            }
+        }
+        y
+    }
+
+    /// Column `j` copied out (the substrate is row-major; columns are
+    /// strided so this is for tests/oracles only).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Add `lambda` to the diagonal (the damping `+ λĨ` of Algorithm 1
+    /// line 1).
+    pub fn add_diag(&mut self, lambda: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += lambda;
+        }
+    }
+
+    /// Horizontal slice `rows [r0, r1)` copied into a new matrix — used by
+    /// the coordinator to cut sample-axis shards.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+            rows: r1 - r0,
+            cols: self.cols,
+        }
+    }
+
+    /// Vertical slice `cols [c0, c1)` copied into a new matrix — used by
+    /// the coordinator to cut parameter-axis (m) shards of S.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Stack two matrices vertically (sample-axis concat — the real-part
+    /// SR trick `S ← Concat[ℜS, ℑS]` from §3 lands here).
+    pub fn vstack(top: &Mat, bottom: &Mat) -> Mat {
+        assert_eq!(top.cols, bottom.cols);
+        let mut data = Vec::with_capacity((top.rows + bottom.rows) * top.cols);
+        data.extend_from_slice(&top.data);
+        data.extend_from_slice(&bottom.data);
+        Mat { data, rows: top.rows + bottom.rows, cols: top.cols }
+    }
+
+    /// Stack two matrices horizontally (parameter-axis concat — used by the
+    /// coordinator to reassemble m-shards).
+    pub fn hstack(left: &Mat, right: &Mat) -> Mat {
+        assert_eq!(left.rows, right.rows);
+        let mut out = Mat::zeros(left.rows, left.cols + right.cols);
+        for i in 0..left.rows {
+            out.row_mut(i)[..left.cols].copy_from_slice(left.row(i));
+            out.row_mut(i)[left.cols..].copy_from_slice(right.row(i));
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(8);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Dot product, 16-way unrolled via `chunks_exact` (no bounds checks in
+/// the hot loop). With `target-cpu=native` LLVM lowers each 8-lane group
+/// to packed AVX-512 (or 2× AVX2) FMA; two independent groups hide the
+/// FMA latency chain. Measured in EXPERIMENTS.md §Perf.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = [0.0f64; 8];
+    let mut acc1 = [0.0f64; 8];
+    let mut ca = a.chunks_exact(16);
+    let mut cb = b.chunks_exact(16);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..8 {
+            acc0[l] += xa[l] * xb[l];
+            acc1[l] += xa[8 + l] * xb[8 + l];
+        }
+    }
+    let mut s = 0.0;
+    for l in 0..8 {
+        s += acc0[l] + acc1[l];
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm of a vector.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_from_fn() {
+        let z = Mat::zeros(3, 4);
+        assert_eq!(z.shape(), (3, 4));
+        assert!(z.as_slice().iter().all(|&x| x == 0.0));
+        let e = Mat::eye(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(e[(i, j)], if i == j { 1.0 } else { 0.0 });
+            }
+        }
+        let f = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(f[(1, 2)], 12.0);
+        assert_eq!(f.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn matvec_against_hand_computed() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.matvec(&[1., 1., 1.]), vec![6., 15.]);
+        assert_eq!(a.t_matvec(&[1., 2.]), vec![9., 12., 15.]);
+    }
+
+    #[test]
+    fn t_matvec_matches_transpose_matvec() {
+        let mut rng = Rng::seed_from(1);
+        let a = Mat::randn(7, 13, &mut rng);
+        let x: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let direct = a.t_matvec(&x);
+        let via_t = a.transpose().matvec(&x);
+        for (d, v) in direct.iter().zip(&via_t) {
+            assert!((d - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::randn(5, 9, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn slicing_and_stacking_roundtrip() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::randn(6, 10, &mut rng);
+        let top = a.slice_rows(0, 2);
+        let bot = a.slice_rows(2, 6);
+        assert_eq!(Mat::vstack(&top, &bot), a);
+        let l = a.slice_cols(0, 3);
+        let r = a.slice_cols(3, 10);
+        assert_eq!(Mat::hstack(&l, &r), a);
+    }
+
+    #[test]
+    fn add_diag_only_touches_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.add_diag(2.5);
+        assert_eq!(a[(0, 0)], 2.5);
+        assert_eq!(a[(1, 1)], 2.5);
+        assert_eq!(a[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in 0..9 {
+            let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+            let expect: f64 = (0..n).map(|i| (i * (i + 1)) as f64).sum();
+            assert_eq!(dot(&a, &b), expect);
+        }
+    }
+
+    #[test]
+    fn rows_mut2_disjoint_both_orders() {
+        let mut a = Mat::from_fn(4, 2, |i, _| i as f64);
+        {
+            let (r1, r3) = a.rows_mut2(1, 3);
+            r1[0] = -1.0;
+            r3[0] = -3.0;
+        }
+        assert_eq!(a[(1, 0)], -1.0);
+        assert_eq!(a[(3, 0)], -3.0);
+        {
+            let (r3, r0) = a.rows_mut2(3, 0);
+            r3[1] = 30.0;
+            r0[1] = 0.5;
+        }
+        assert_eq!(a[(3, 1)], 30.0);
+        assert_eq!(a[(0, 1)], 0.5);
+    }
+
+    #[test]
+    fn fro_and_max_norms() {
+        let a = Mat::from_vec(2, 2, vec![3., 0., 0., -4.]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Dense linear-algebra substrate, built from scratch.
+//!
+//! The paper assumes cuBLAS/cuSOLVER under JAX on an A100; this crate's
+//! native execution path needs the same primitives on CPU without external
+//! dependencies, so they are implemented here:
+//!
+//! * [`Mat`] — row-major dense `f64` matrix with blocked [`gemm`],
+//!   tall-skinny Gram products and matrix–vector kernels.
+//! * [`cholesky`] — blocked right-looking Cholesky factorization
+//!   (the `potrf` the paper leans on).
+//! * [`trisolve`] — forward/backward substitution for vectors and blocked
+//!   multi-RHS `trsm`, the `L⁻¹S` / `L⁻ᵀ(·)` of Algorithm 1 line 3–4.
+//! * [`eigh`] — cyclic Jacobi symmetric eigensolver (backs the paper's
+//!   `"eigh"` SVD baseline, Appendix C).
+//! * [`svd`] — one-sided Jacobi SVD (stand-in for CUDA `gesvda`, which is
+//!   itself a blocked Jacobi method) and the eigh-based tall-skinny SVD.
+//! * [`qr`] — Householder QR, used as an independent test oracle.
+//! * [`complex`] — `c64` scalar and [`CMat`] with Hermitian Gram,
+//!   complex Cholesky and triangular solves for the SR variants (§3).
+
+pub mod cholesky;
+pub mod complex;
+pub mod eigh;
+pub mod gemm;
+pub mod mat;
+pub mod qr;
+pub mod svd;
+pub mod trisolve;
+
+pub use cholesky::{cholesky, cholesky_in_place, CholeskyError};
+pub use complex::{c64, CMat};
+pub use eigh::eigh;
+pub use gemm::{gemm, gemm_nt, gemm_tn, syrk};
+pub use mat::Mat;
+pub use qr::qr;
+pub use svd::{svd_eigh, svd_jacobi, ThinSvd};
+pub use trisolve::{
+    solve_lower, solve_lower_multi, solve_lower_transpose, solve_lower_transpose_multi,
+};

@@ -1,0 +1,171 @@
+//! Householder QR — independent test oracle.
+//!
+//! Not on any hot path: the solvers are validated against QR-based
+//! least-squares / normal-equation solutions computed by a *different*
+//! algorithm family than Cholesky or Jacobi, which protects the test
+//! suite against a shared-bug false pass.
+
+use super::mat::{dot, Mat};
+
+/// Reduced QR of `a: p×q` with `p ≥ q`: returns `(Q: p×q, R: q×q)` with
+/// `a = Q·R`, Q having orthonormal columns and R upper triangular.
+pub fn qr(a: &Mat) -> (Mat, Mat) {
+    let (p, q) = a.shape();
+    assert!(p >= q, "qr expects p ≥ q (got {p}×{q})");
+    let mut r = a.clone(); // will be reduced in place
+    // Store Householder vectors (unit-normalized, v[0..k] = 0 implicit).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(q);
+
+    for k in 0..q {
+        // Build the Householder vector for column k below row k.
+        let mut v: Vec<f64> = (k..p).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * dot(&v, &v).sqrt();
+        if alpha.abs() < 1e-300 {
+            // Zero column — identity reflector.
+            vs.push(vec![0.0; p - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm = dot(&v, &v).sqrt();
+        if vnorm > 0.0 {
+            for x in &mut v {
+                *x /= vnorm;
+            }
+        }
+        // Apply (I − 2vvᵀ) to the trailing block of R.
+        for j in k..q {
+            let mut s = 0.0;
+            for i in k..p {
+                s += v[i - k] * r[(i, j)];
+            }
+            let s2 = 2.0 * s;
+            for i in k..p {
+                r[(i, j)] -= s2 * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Extract the q×q upper triangle as R.
+    let rq = Mat::from_fn(q, q, |i, j| if j >= i { r[(i, j)] } else { 0.0 });
+
+    // Form Q by applying the reflectors to the first q columns of I,
+    // in reverse order.
+    let mut qm = Mat::zeros(p, q);
+    for j in 0..q {
+        qm[(j, j)] = 1.0;
+    }
+    for k in (0..q).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..q {
+            let mut s = 0.0;
+            for i in k..p {
+                s += v[i - k] * qm[(i, j)];
+            }
+            let s2 = 2.0 * s;
+            for i in k..p {
+                qm[(i, j)] -= s2 * v[i - k];
+            }
+        }
+    }
+    (qm, rq)
+}
+
+/// Least-squares oracle: minimize ‖Aᵀx − b‖² + λ‖x‖² for tall-skinny
+/// problems via QR of the *augmented* matrix — used only in tests to
+/// cross-check the damped solvers. Solves `(AAᵀ+λI)x = A b_aug` style
+/// systems by QR on `[Aᵀ; √λ·I]`.
+pub fn ridge_qr_oracle(st: &Mat, v: &[f64], lambda: f64) -> Vec<f64> {
+    // Solve (SᵀS + λI) x = v exactly, by QR of the (n+m)×m stacked matrix
+    // K = [S; √λ·I]: KᵀK = SᵀS + λI, so x = R⁻¹R⁻ᵀ v with K = QR.
+    let (n, m) = st.shape();
+    assert_eq!(v.len(), m);
+    let sq = lambda.sqrt();
+    let mut k = Mat::zeros(n + m, m);
+    for i in 0..n {
+        k.row_mut(i).copy_from_slice(st.row(i));
+    }
+    for j in 0..m {
+        k[(n + j, j)] = sq;
+    }
+    let (_q, r) = qr(&k);
+    // Solve Rᵀ y = v (forward), then R x = y (backward).
+    let mut y = v.to_vec();
+    for i in 0..m {
+        let mut s = y[i];
+        for j in 0..i {
+            s -= r[(j, i)] * y[j];
+        }
+        y[i] = s / r[(i, i)];
+    }
+    let mut x = y;
+    for i in (0..m).rev() {
+        let mut s = x[i];
+        for j in i + 1..m {
+            s -= r[(i, j)] * x[j];
+        }
+        x[i] = s / r[(i, i)];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::gemm::gemm;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::seed_from(60);
+        for &(p, q) in &[(1, 1), (5, 3), (10, 10), (50, 12)] {
+            let a = Mat::randn(p, q, &mut rng);
+            let (qm, r) = qr(&a);
+            let mut recon = Mat::zeros(p, q);
+            gemm(1.0, &qm, &r, 0.0, &mut recon);
+            for i in 0..p {
+                for j in 0..q {
+                    assert!((recon[(i, j)] - a[(i, j)]).abs() < 1e-10, "({p},{q})");
+                }
+            }
+            // Q orthonormal columns.
+            let qt = qm.transpose();
+            let mut qtq = Mat::zeros(q, q);
+            gemm(1.0, &qt, &qm, 0.0, &mut qtq);
+            for i in 0..q {
+                for j in 0..q {
+                    let e = if i == j { 1.0 } else { 0.0 };
+                    assert!((qtq[(i, j)] - e).abs() < 1e-10);
+                }
+            }
+            // R upper triangular.
+            for i in 0..q {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ridge_oracle_satisfies_normal_equations() {
+        let mut rng = Rng::seed_from(61);
+        let (n, m) = (6, 25);
+        let s = Mat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let lambda = 0.37;
+        let x = ridge_qr_oracle(&s, &v, lambda);
+        // residual = SᵀS x + λx − v
+        let sx = s.matvec(&x);
+        let mut resid = s.t_matvec(&sx);
+        for j in 0..m {
+            resid[j] += lambda * x[j] - v[j];
+        }
+        for r in resid {
+            assert!(r.abs() < 1e-9);
+        }
+    }
+}

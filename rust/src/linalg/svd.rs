@@ -1,0 +1,286 @@
+//! Thin SVD of the tall-skinny score matrix — the paper's two baselines.
+//!
+//! For `S: n×m` with `n ≤ m`, the thin SVD is `S = U Σ Vᵀ` with `U: n×n`
+//! orthogonal, `Σ: n` non-negative, `V: m×n` with orthonormal columns.
+//!
+//! * [`svd_eigh`] — the paper's **"eigh"** method (Appendix C): eigendecompose
+//!   the n×n Gram matrix `SSᵀ = U Σ² Uᵀ`, then `V = SᵀUΣ⁻¹`. Previously the
+//!   fastest method known to the authors.
+//! * [`svd_jacobi`] — stand-in for the CUDA **"gesvda"** kernel (the `svda`
+//!   baseline). `gesvda` is NVIDIA's blocked one-sided-Jacobi routine for
+//!   tall-skinny batches; this is the same algorithm family: one-sided
+//!   Jacobi sweeps orthogonalizing the *rows* of S (row-major friendly),
+//!   accumulating U, with `Σ Vᵀ` read off the converged rows. Like the real
+//!   gesvda it costs O(n²m) *per sweep* with several sweeps, which is why
+//!   the paper measures it as the slowest method — behaviour preserved.
+
+use super::eigh::eigh;
+use super::mat::{dot, Mat};
+
+/// Thin SVD `S = U Σ Vᵀ`.
+pub struct ThinSvd {
+    /// Left singular vectors, n×n, orthogonal, columns are vectors.
+    pub u: Mat,
+    /// Singular values, descending. May contain (numerical) zeros.
+    pub sigma: Vec<f64>,
+    /// Right singular vectors, **n×m row-major** storing `Vᵀ` (row j is
+    /// the j-th right singular vector). Rows whose singular value is
+    /// numerically zero are zeroed out — see [`ThinSvd::rank`].
+    pub vt: Mat,
+}
+
+impl ThinSvd {
+    /// Numerical rank: number of singular values above `tol·σ_max`.
+    pub fn rank(&self, tol: f64) -> usize {
+        let smax = self.sigma.first().copied().unwrap_or(0.0);
+        self.sigma.iter().filter(|&&s| s > tol * smax).count()
+    }
+
+    /// Reconstruct `S` (tests only).
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.u.rows();
+        let m = self.vt.cols();
+        let mut s = Mat::zeros(n, m);
+        for i in 0..n {
+            for k in 0..n {
+                let c = self.u[(i, k)] * self.sigma[k];
+                if c != 0.0 {
+                    for j in 0..m {
+                        s[(i, j)] += c * self.vt[(k, j)];
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Relative cutoff below which a singular value is treated as zero.
+const SIGMA_TOL: f64 = 1e-12;
+
+/// Tall-skinny SVD via the Gram-matrix eigendecomposition (Appendix C,
+/// the `"eigh"` baseline): `SSᵀ = U Σ² Uᵀ`, `V = SᵀUΣ⁻¹`.
+pub fn svd_eigh(s: &Mat) -> ThinSvd {
+    let (n, m) = s.shape();
+    assert!(n <= m, "svd_eigh expects tall-skinny Sᵀ, i.e. n ≤ m (got {n}×{m})");
+    let w = super::gemm::syrk(s, 0.0);
+    let (vals, u_asc) = eigh(&w);
+    // eigh returns ascending; we want σ descending.
+    let mut u = Mat::zeros(n, n);
+    let mut sigma = vec![0.0; n];
+    for k in 0..n {
+        let src = n - 1 - k;
+        sigma[k] = vals[src].max(0.0).sqrt();
+        for i in 0..n {
+            u[(i, k)] = u_asc[(i, src)];
+        }
+    }
+    // Vᵀ rows: vᵀ_k = σ_k⁻¹ · u_kᵀ S  (one n×m pass, row-major streaming).
+    let smax = sigma[0].max(f64::MIN_POSITIVE);
+    let mut vt = Mat::zeros(n, m);
+    for k in 0..n {
+        if sigma[k] <= SIGMA_TOL * smax {
+            continue; // leave the row zero: direction handled by the λ branch
+        }
+        let inv = 1.0 / sigma[k];
+        // vt.row(k) = inv * (u[:,k]ᵀ S)
+        for i in 0..n {
+            let c = inv * u[(i, k)];
+            if c != 0.0 {
+                let srow = s.row(i);
+                let vrow = vt.row_mut(k);
+                for j in 0..m {
+                    vrow[j] += c * srow[j];
+                }
+            }
+        }
+    }
+    ThinSvd { u, sigma, vt }
+}
+
+/// Maximum one-sided Jacobi sweeps.
+const MAX_SWEEPS: usize = 30;
+
+/// Tall-skinny SVD via one-sided Jacobi on the rows of `S` — the `svda`
+/// stand-in. Rotates row pairs of a working copy of `S` until all rows are
+/// mutually orthogonal; converged rows are `Σ·Vᵀ` and the accumulated
+/// rotations are `U`.
+pub fn svd_jacobi(s: &Mat) -> ThinSvd {
+    let (n, m) = s.shape();
+    assert!(n <= m, "svd_jacobi expects n ≤ m (got {n}×{m})");
+    let mut b = s.clone(); // rows will converge to σ_k v_kᵀ
+    let mut u = Mat::eye(n);
+
+    let fro = s.fro_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-14 * fro * fro;
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut rotated = false;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                let (app, aqq, apq) = {
+                    let rp = b.row(p);
+                    let rq = b.row(q);
+                    (dot(rp, rp), dot(rq, rq), dot(rp, rq))
+                };
+                if apq.abs() <= tol || apq.abs() <= 1e-15 * (app * aqq).sqrt() {
+                    continue;
+                }
+                rotated = true;
+                // Jacobi rotation zeroing the off-diagonal of the 2×2 Gram
+                // block [[app, apq], [apq, aqq]].
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let sn = t * c;
+                // Rotate rows p, q of B.
+                {
+                    let (rp, rq) = b.rows_mut2(p, q);
+                    for (x, y) in rp.iter_mut().zip(rq.iter_mut()) {
+                        let xp = *x;
+                        let xq = *y;
+                        *x = c * xp - sn * xq;
+                        *y = sn * xp + c * xq;
+                    }
+                }
+                // Accumulate the same rotation into U's columns p, q
+                // (S = U·B throughout: B ← JᵀB requires U ← U·J).
+                for i in 0..n {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - sn * uq;
+                    u[(i, q)] = sn * up + c * uq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Row norms are the singular values; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n).map(|i| dot(b.row(i), b.row(i)).sqrt()).collect();
+    order.sort_by(|&a, &c| norms[c].partial_cmp(&norms[a]).unwrap());
+
+    let smax = order.first().map(|&i| norms[i]).unwrap_or(0.0).max(f64::MIN_POSITIVE);
+    let mut sigma = vec![0.0; n];
+    let mut vt = Mat::zeros(n, m);
+    let mut usorted = Mat::zeros(n, n);
+    for (k, &src) in order.iter().enumerate() {
+        sigma[k] = norms[src];
+        if sigma[k] > SIGMA_TOL * smax {
+            let inv = 1.0 / sigma[k];
+            let brow = b.row(src);
+            let vrow = vt.row_mut(k);
+            for j in 0..m {
+                vrow[j] = inv * brow[j];
+            }
+        }
+        for i in 0..n {
+            usorted[(i, k)] = u[(i, src)];
+        }
+    }
+    ThinSvd { u: usorted, sigma, vt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::gemm::gemm_nt;
+
+    fn check_svd(s: &Mat, svd: &ThinSvd, label: &str) {
+        let (n, m) = s.shape();
+        // Reconstruction.
+        let recon = svd.reconstruct();
+        let scale = s.max_abs().max(1.0);
+        for i in 0..n {
+            for j in 0..m {
+                assert!(
+                    (recon[(i, j)] - s[(i, j)]).abs() < 1e-8 * scale,
+                    "{label}: reconstruction ({i},{j})"
+                );
+            }
+        }
+        // U orthogonal.
+        let mut utu = Mat::zeros(n, n);
+        gemm_nt(1.0, &svd.u.transpose(), &svd.u.transpose(), 0.0, &mut utu);
+        for i in 0..n {
+            for j in 0..n {
+                let e = if i == j { 1.0 } else { 0.0 };
+                assert!((utu[(i, j)] - e).abs() < 1e-9, "{label}: UᵀU ({i},{j})");
+            }
+        }
+        // V columns orthonormal (rows of vt), where σ > 0.
+        let r = svd.rank(1e-10);
+        let mut vvt = Mat::zeros(n, n);
+        gemm_nt(1.0, &svd.vt, &svd.vt, 0.0, &mut vvt);
+        for i in 0..r {
+            for j in 0..r {
+                let e = if i == j { 1.0 } else { 0.0 };
+                assert!((vvt[(i, j)] - e).abs() < 1e-9, "{label}: VᵀV ({i},{j})");
+            }
+        }
+        // Descending σ.
+        for k in 1..n {
+            assert!(svd.sigma[k - 1] >= svd.sigma[k] - 1e-12, "{label}: σ ordering");
+        }
+    }
+
+    #[test]
+    fn both_methods_valid_svd_random() {
+        let mut rng = Rng::seed_from(50);
+        for &(n, m) in &[(1, 1), (2, 5), (7, 7), (13, 200), (40, 160)] {
+            let s = Mat::randn(n, m, &mut rng);
+            check_svd(&s, &svd_eigh(&s), &format!("eigh {n}x{m}"));
+            check_svd(&s, &svd_jacobi(&s), &format!("jacobi {n}x{m}"));
+        }
+    }
+
+    #[test]
+    fn methods_agree_on_singular_values() {
+        let mut rng = Rng::seed_from(51);
+        let s = Mat::randn(12, 90, &mut rng);
+        let a = svd_eigh(&s);
+        let b = svd_jacobi(&s);
+        for (x, y) in a.sigma.iter().zip(&b.sigma) {
+            assert!((x - y).abs() < 1e-8 * a.sigma[0]);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_handled() {
+        // Duplicate rows ⇒ rank n-1.
+        let mut rng = Rng::seed_from(52);
+        let mut s = Mat::randn(6, 40, &mut rng);
+        let row0 = s.row(0).to_vec();
+        s.row_mut(5).copy_from_slice(&row0);
+        for (svd, label) in [(svd_eigh(&s), "eigh"), (svd_jacobi(&s), "jacobi")] {
+            assert_eq!(svd.rank(1e-8), 5, "{label}");
+            // Reconstruction still exact.
+            let recon = svd.reconstruct();
+            for i in 0..6 {
+                for j in 0..40 {
+                    assert!((recon[(i, j)] - s[(i, j)]).abs() < 1e-8, "{label}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2) padded to 2×4: σ = {3, 2}.
+        let mut s = Mat::zeros(2, 4);
+        s[(0, 0)] = 3.0;
+        s[(1, 1)] = 2.0;
+        for svd in [svd_eigh(&s), svd_jacobi(&s)] {
+            assert!((svd.sigma[0] - 3.0).abs() < 1e-12);
+            assert!((svd.sigma[1] - 2.0).abs() < 1e-12);
+        }
+    }
+}

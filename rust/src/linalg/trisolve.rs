@@ -1,0 +1,203 @@
+//! Triangular solves — lines 3–4 of Algorithm 1.
+//!
+//! The paper stresses that `Q = L⁻¹S` should **not** be materialized;
+//! instead `QᵀQv = SᵀL⁻ᵀL⁻¹Sv` is evaluated right-to-left:
+//!
+//! ```text
+//! u  = S v          (matvec, O(nm))
+//! y  = L⁻¹ u        (forward substitution, O(n²))
+//! z  = L⁻ᵀ y        (backward substitution, O(n²))
+//! out = Sᵀ z        (transposed matvec, O(nm))
+//! ```
+//!
+//! This module provides the two substitutions for vectors and the blocked
+//! multi-RHS variants (`trsm`) used when solving for a block of gradient
+//! vectors at once (e.g. the KFAC baseline and the coordinator's batched
+//! update path).
+
+use super::mat::{dot, Mat};
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for i in 0..n {
+        let row = l.row(i);
+        let s = dot(&row[..i], &y[..i]);
+        y[i] = (y[i] - s) / row[i];
+    }
+    y
+}
+
+/// Solve `Lᵀ z = y` for lower-triangular `L` (backward substitution on the
+/// transpose, without materializing `Lᵀ`): column-oriented sweep that
+/// reads `L` row-by-row from the bottom.
+pub fn solve_lower_transpose(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(y.len(), n);
+    let mut z = y.to_vec();
+    for i in (0..n).rev() {
+        let row = l.row(i);
+        let zi = z[i] / row[i];
+        z[i] = zi;
+        // Eliminate z[i] from all earlier equations: z[j] -= L[i][j]·zi.
+        for j in 0..i {
+            z[j] -= row[j] * zi;
+        }
+    }
+    z
+}
+
+/// Multi-RHS forward solve: `L Y = B` where `B` is n×k; solves all k
+/// right-hand sides in one sweep (row-major friendly: the inner loops are
+/// axpy over B rows).
+pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let mut y = b.clone();
+    for i in 0..n {
+        // y.row(i) -= Σ_{j<i} L[i][j] · y.row(j);  then scale by 1/L[i][i].
+        for j in 0..i {
+            let lij = l[(i, j)];
+            if lij != 0.0 {
+                let (yi, yj) = y.rows_mut2(i, j);
+                for (a, c) in yi.iter_mut().zip(yj.iter()) {
+                    *a -= lij * c;
+                }
+            }
+        }
+        let inv = 1.0 / l[(i, i)];
+        for v in y.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    y
+}
+
+/// Multi-RHS transposed solve: `Lᵀ Z = Y` where `Y` is n×k.
+pub fn solve_lower_transpose_multi(l: &Mat, yy: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(yy.rows(), n);
+    let mut z = yy.clone();
+    for i in (0..n).rev() {
+        let inv = 1.0 / l[(i, i)];
+        for v in z.row_mut(i) {
+            *v *= inv;
+        }
+        for j in 0..i {
+            let lij = l[(i, j)];
+            if lij != 0.0 {
+                let (zj, zi) = z.rows_mut2(j, i);
+                for (a, c) in zj.iter_mut().zip(zi.iter()) {
+                    *a -= lij * c;
+                }
+            }
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::cholesky::cholesky;
+    use crate::linalg::gemm::syrk;
+
+    fn random_lower(n: usize, rng: &mut Rng) -> Mat {
+        // Cholesky factor of an SPD matrix: well-conditioned lower L.
+        let a = Mat::randn(n, n + 5, rng);
+        cholesky(&syrk(&a, 1.0)).unwrap()
+    }
+
+    #[test]
+    fn forward_solve_roundtrip() {
+        let mut rng = Rng::seed_from(30);
+        for &n in &[1, 2, 7, 40, 129] {
+            let l = random_lower(n, &mut rng);
+            let y_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = l.matvec(&y_true);
+            let y = solve_lower(&l, &b);
+            for (a, c) in y.iter().zip(&y_true) {
+                assert!((a - c).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_solve_roundtrip() {
+        let mut rng = Rng::seed_from(31);
+        for &n in &[1, 3, 11, 64] {
+            let l = random_lower(n, &mut rng);
+            let z_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y = l.transpose().matvec(&z_true); // Lᵀ z
+            let z = solve_lower_transpose(&l, &y);
+            for (a, c) in z.iter().zip(&z_true) {
+                assert!((a - c).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_solve_matches_explicit_transpose() {
+        let mut rng = Rng::seed_from(32);
+        let l = random_lower(23, &mut rng);
+        let y: Vec<f64> = (0..23).map(|_| rng.normal()).collect();
+        let fast = solve_lower_transpose(&l, &y);
+        // Oracle: upper-triangular back substitution on the explicit Lᵀ.
+        let u = l.transpose();
+        let mut z = y.clone();
+        for i in (0..23).rev() {
+            let mut s = z[i];
+            for j in i + 1..23 {
+                s -= u[(i, j)] * z[j];
+            }
+            z[i] = s / u[(i, i)];
+        }
+        for (a, c) in fast.iter().zip(&z) {
+            assert!((a - c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_columnwise_vector_solves() {
+        let mut rng = Rng::seed_from(33);
+        let n = 31;
+        let k = 9;
+        let l = random_lower(n, &mut rng);
+        let b = Mat::randn(n, k, &mut rng);
+        let y_multi = solve_lower_multi(&l, &b);
+        let z_multi = solve_lower_transpose_multi(&l, &b);
+        for col in 0..k {
+            let bcol = b.col(col);
+            let ycol = solve_lower(&l, &bcol);
+            let zcol = solve_lower_transpose(&l, &bcol);
+            for i in 0..n {
+                assert!((y_multi[(i, col)] - ycol[i]).abs() < 1e-11);
+                assert!((z_multi[(i, col)] - zcol[i]).abs() < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn full_normal_equation_solve_via_two_substitutions() {
+        // (L Lᵀ) x = b  ⇒  x = L⁻ᵀ (L⁻¹ b): the exact composition used in
+        // Algorithm 1 line 4.
+        let mut rng = Rng::seed_from(34);
+        let n = 50;
+        let a = Mat::randn(n, n + 8, &mut rng);
+        let w = syrk(&a, 0.7);
+        let l = cholesky(&w).unwrap();
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = w.matvec(&x_true);
+        let x = solve_lower_transpose(&l, &solve_lower(&l, &b));
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+}

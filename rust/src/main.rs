@@ -1,0 +1,300 @@
+//! `dngd` — leader entrypoint / CLI.
+//!
+//! ```text
+//! dngd solve  --n 256 --m 8192 [--lambda 1e-3] [--solver chol|eigh|svda|naive|cg|all]
+//! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd]
+//! dngd vmc    [--config cfg.toml] [--set section.key=value]…
+//! dngd bench  --table1 | --scaling | --cg [--scale small|paper]
+//! dngd artifacts [--dir artifacts]
+//! ```
+//!
+//! Arg parsing is in-tree (offline build — no clap); unknown flags are
+//! hard errors, not silent ignores.
+
+use dngd::config::Config;
+use dngd::coordinator::trainer::{OptimizerChoice, TRAIN_LOG_COLUMNS};
+use dngd::coordinator::Trainer;
+use dngd::data::rng::Rng;
+use dngd::linalg::Mat;
+use dngd::metrics::MetricsLog;
+use dngd::solver::{make_solver, residual_norm, SolverKind};
+use std::process::ExitCode;
+
+mod cli {
+    //! Tiny flag parser: `--key value`, `--key=value`, repeated flags.
+    use std::collections::BTreeMap;
+
+    pub struct Args {
+        pub flags: BTreeMap<String, Vec<String>>,
+    }
+
+    pub fn parse(args: &[String]) -> Result<Args, String> {
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.entry(name.to_string()).or_default().push(args[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.entry(name.to_string()).or_default().push(String::new());
+                }
+            } else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            }
+            i += 1;
+        }
+        Ok(Args { flags })
+    }
+
+    impl Args {
+        pub fn get(&self, key: &str) -> Option<&str> {
+            self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+        }
+
+        pub fn get_all(&self, key: &str) -> Vec<String> {
+            self.flags.get(key).cloned().unwrap_or_default()
+        }
+
+        pub fn has(&self, key: &str) -> bool {
+            self.flags.contains_key(key)
+        }
+
+        pub fn parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+            match self.get(key) {
+                None => Ok(default),
+                Some(s) => s.parse().map_err(|_| format!("--{key}: cannot parse {s:?}")),
+            }
+        }
+
+        /// Error on flags not in the allow-list.
+        pub fn expect_only(&self, allowed: &[&str]) -> Result<(), String> {
+            for k in self.flags.keys() {
+                if !allowed.contains(&k.as_str()) {
+                    return Err(format!("unknown flag --{k} (allowed: {})", allowed.join(", ")));
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "solve" => cmd_solve(rest),
+        "train" => cmd_train(rest),
+        "vmc" => cmd_vmc(rest),
+        "bench" => cmd_bench(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "--help" | "help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "dngd — damped natural gradient descent at scale (Chen, Xie & Wang 2023)
+
+USAGE:
+  dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|all] [--threads T]
+  dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
+  dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
+  dngd bench  (--table1 | --scaling | --cg) [--scale small|paper]
+  dngd artifacts [--dir artifacts]";
+
+fn cmd_solve(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&["n", "m", "lambda", "solver", "threads", "seed"])?;
+    let n: usize = a.parsed("n", 256)?;
+    let m: usize = a.parsed("m", 8192)?;
+    let lambda: f64 = a.parsed("lambda", 1e-3)?;
+    let threads: usize = a.parsed("threads", 1)?;
+    let seed: u64 = a.parsed("seed", 42)?;
+    let which = a.get("solver").unwrap_or("chol");
+
+    let mut rng = Rng::seed_from(seed);
+    let s = Mat::randn(n, m, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    println!("damped Fisher solve: n={n} m={m} λ={lambda}");
+
+    let kinds: Vec<SolverKind> = if which == "all" {
+        SolverKind::all().to_vec()
+    } else {
+        vec![SolverKind::parse(which).ok_or_else(|| format!("unknown solver {which:?}"))?]
+    };
+    for kind in kinds {
+        let solver: Box<dyn dngd::solver::DampedSolver> = if kind == SolverKind::Chol && threads > 1
+        {
+            Box::new(dngd::solver::CholSolver::with_threads(threads))
+        } else {
+            make_solver(kind)
+        };
+        let t0 = std::time::Instant::now();
+        match solver.solve(&s, &v, lambda) {
+            Ok(x) => {
+                let dt = t0.elapsed().as_secs_f64() * 1e3;
+                let r = residual_norm(&s, &x, &v, lambda);
+                println!("  {:>6}: {dt:>10.2} ms   residual {r:.3e}", kind.as_str());
+            }
+            Err(e) => println!("  {:>6}: N/A ({e})", kind.as_str()),
+        }
+    }
+    Ok(())
+}
+
+fn load_config(a: &cli::Args) -> Result<Config, String> {
+    Config::load(a.get("config"), &a.get_all("set"))
+}
+
+fn cmd_train(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&["config", "set", "optimizer", "csv", "resume"])?;
+    let cfg = load_config(&a)?;
+    let optimizer = match a.get("optimizer").unwrap_or("ngd") {
+        "ngd" => OptimizerChoice::Ngd,
+        "sgd" => OptimizerChoice::Sgd,
+        other => return Err(format!("unknown optimizer {other:?}")),
+    };
+    let mut trainer = Trainer::new(&cfg, optimizer)?;
+    if let Some(path) = a.get("resume") {
+        let step = trainer.load_checkpoint(std::path::Path::new(path))?;
+        println!("resumed from {path} (step {step})");
+    }
+    println!(
+        "training: {} params, vocab {}, backend {}, optimizer {optimizer:?}",
+        trainer.model.num_params(),
+        trainer.tokenizer.vocab_size(),
+        trainer.backend(),
+    );
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    let report = trainer.run(&mut log).map_err(|e| e.to_string())?;
+    let every = cfg.train.log_every.max(1);
+    if let (Some(steps), Some(losses)) = (log.column("step"), log.column("loss")) {
+        for (s, l) in steps.iter().zip(&losses) {
+            if (*s as usize) % every == 0 {
+                println!(
+                    "  step {:>5}  loss {:.4}  ({:.3} bits/char)",
+                    s,
+                    l,
+                    l / std::f64::consts::LN_2
+                );
+            }
+        }
+    }
+    println!(
+        "done: loss {:.4} → {:.4} ({:.3} bits/char) in {:.1}s [{}]",
+        report.initial_loss,
+        report.final_loss,
+        report.final_bits_per_char,
+        report.wall_secs,
+        report.backend
+    );
+    if let Some(csv) = a.get("csv") {
+        log.write_csv(std::path::Path::new(csv)).map_err(|e| e.to_string())?;
+        println!("loss curve written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_vmc(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&["config", "set", "csv"])?;
+    let cfg = load_config(&a)?;
+    let v = &cfg.vmc;
+    let chain = dngd::vmc::IsingChain::new(v.sites, v.coupling_j, v.field_h);
+    let exact = if v.sites <= 16 {
+        Some(dngd::vmc::ground_state_energy(&chain, 60_000, 1e-12))
+    } else {
+        None
+    };
+    let variant = if v.variant == "complex" {
+        dngd::vmc::SrVariant::FullComplex
+    } else {
+        dngd::vmc::SrVariant::RealPart
+    };
+    let mut rng = Rng::seed_from(v.seed);
+    let mut rbm = dngd::vmc::Rbm::init(v.sites, v.hidden, 0.05, &mut rng);
+    let mut sampler = dngd::vmc::MetropolisSampler::new(&rbm, &mut rng);
+    for _ in 0..100 {
+        sampler.sweep(&rbm, &mut rng);
+    }
+    let mut driver =
+        dngd::vmc::SrDriver::new(chain.clone(), v.samples, v.learning_rate, cfg.solver.lambda)
+            .with_variant(variant);
+    println!(
+        "SR on TFIM: {} sites, J={} h={}, RBM hidden {}, {} samples, variant {variant:?}",
+        v.sites, v.coupling_j, v.field_h, v.hidden, v.samples
+    );
+    if let Some(e) = exact {
+        println!("exact ground-state energy: {e:.6}");
+    }
+    let mut log = MetricsLog::new(&["iter", "energy", "energy_std", "lambda", "acceptance"]);
+    for it in 0..v.iterations {
+        let rep = driver.step(&mut rbm, &mut sampler, &mut rng).map_err(|e| e.to_string())?;
+        log.push(&[it as f64, rep.energy, rep.energy_std, rep.lambda, rep.acceptance]);
+        if it % 10 == 0 || it + 1 == v.iterations {
+            let rel = exact
+                .map(|e| format!("  (rel err {:+.4})", (rep.energy - e) / e.abs()))
+                .unwrap_or_default();
+            println!("  iter {it:>4}  E = {:.6} ± {:.4}{rel}", rep.energy, rep.energy_std);
+        }
+    }
+    if let Some(csv) = a.get("csv") {
+        log.write_csv(std::path::Path::new(csv)).map_err(|e| e.to_string())?;
+        println!("energy curve written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&["table1", "scaling", "cg", "scale"])?;
+    let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
+    let paper = match scale {
+        "paper" => true,
+        "small" => false,
+        other => return Err(format!("--scale must be small|paper, got {other:?}")),
+    };
+    if a.has("table1") {
+        dngd::bench_tables::table1(paper);
+    } else if a.has("scaling") {
+        dngd::bench_tables::scaling(paper);
+    } else if a.has("cg") {
+        dngd::bench_tables::cg_conditioning();
+    } else {
+        return Err("pick one of --table1 | --scaling | --cg".into());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&["dir"])?;
+    let dir = a.get("dir").unwrap_or("artifacts");
+    let reg = dngd::runtime::ArtifactRegistry::scan(std::path::Path::new(dir));
+    if reg.is_empty() {
+        println!("no artifacts in {dir}/ — run `make artifacts`");
+        return Ok(());
+    }
+    println!("{} artifact(s) in {dir}/:", reg.len());
+    for (kind, n, m) in reg.list() {
+        println!("  {kind:?} n={n} m={m}");
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Micro-benchmark runner — the in-tree criterion stand-in.
+//!
+//! Auto-calibrates the iteration count to a target measurement time,
+//! warms up, then reports a [`Summary`] over per-iteration wall times.
+//! Used by every `benches/*.rs` harness.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Median time in milliseconds — the unit of the paper's Table 1.
+    pub fn median_ms(&self) -> f64 {
+        self.summary.median * 1e3
+    }
+}
+
+/// Benchmark a closure: warm up, then collect ≥ `min_samples` timed runs
+/// or until `budget_secs` of measurement, whichever is later-bounded.
+pub fn bench(name: &str, min_samples: usize, budget_secs: f64, mut f: impl FnMut()) -> BenchResult {
+    // Warm-up: one run, untimed (page-faults, caches, lazy allocs).
+    f();
+    let mut samples = Vec::with_capacity(min_samples);
+    let started = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        let done_samples = samples.len() >= min_samples;
+        let done_budget = started.elapsed().as_secs_f64() >= budget_secs;
+        if done_samples && (done_budget || samples.len() >= 4 * min_samples) {
+            break;
+        }
+        if done_budget && samples.len() >= 3 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::from_samples(&samples) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_at_least_min_samples() {
+        let r = bench("noop", 5, 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.summary.count >= 5);
+        assert!(r.median_ms() >= 0.0);
+    }
+
+    #[test]
+    fn measures_sleeps_approximately() {
+        let r = bench("sleep", 3, 0.05, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.median_ms() >= 1.5, "median {}", r.median_ms());
+        assert!(r.median_ms() < 50.0);
+    }
+}

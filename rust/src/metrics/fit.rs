@@ -1,0 +1,59 @@
+//! Power-law fitting — the dotted "ideal scaling" overlays of Fig. 1.
+//!
+//! Fig. 1 plots time against n (fixed m) and against m (fixed n) on
+//! log–log axes with dotted ideal lines; the harness fits
+//! `t = c·xᵃ` by least squares in log space and reports the exponent,
+//! which the reproduction compares against the theoretical 2 (n-sweep)
+//! and 1 (m-sweep).
+
+/// Fit `y = c·xᵃ`; returns `(a, c)`. Requires ≥ 2 positive points.
+pub fn fit_power_law(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        assert!(x > 0.0 && y > 0.0, "power-law fit needs positive data");
+        let lx = x.ln();
+        let ly = y.ln();
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    let a = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let logc = (sy - a * sx) / n;
+    (a, logc.exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_power_laws() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        // y = 3·x²
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        let (a, c) = fit_power_law(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-12);
+        assert!((c - 3.0).abs() < 1e-10);
+        // y = 0.5·x
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x).collect();
+        let (a, c) = fit_power_law(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tolerates_noise() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2e-6 * x * x * (1.0 + 0.05 * ((i as f64).sin())))
+            .collect();
+        let (a, _) = fit_power_law(&xs, &ys);
+        assert!((a - 2.0).abs() < 0.1, "a = {a}");
+    }
+}

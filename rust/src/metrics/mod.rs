@@ -1,0 +1,14 @@
+//! Metrics & measurement: wall-clock timers with robust statistics, a
+//! micro-benchmark runner (the repo's criterion stand-in — the build is
+//! offline), counters, histograms, power-law fits for the Fig.-1 scaling
+//! overlays, and CSV/JSON sinks.
+
+pub mod bench;
+pub mod fit;
+pub mod sink;
+pub mod stats;
+
+pub use bench::{bench, BenchResult};
+pub use fit::fit_power_law;
+pub use sink::{CsvSink, MetricsLog};
+pub use stats::Summary;

@@ -1,0 +1,121 @@
+//! Metric sinks: in-memory training log with CSV/JSON export.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Append-only training log: one row per step, named float columns.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsLog {
+    columns: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl MetricsLog {
+    pub fn new(columns: &[&str]) -> Self {
+        MetricsLog { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Column by name.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Render as CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Streaming CSV writer for bench harnesses.
+pub struct CsvSink {
+    file: std::fs::File,
+}
+
+impl CsvSink {
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvSink { file })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", cells.join(","))
+    }
+}
+
+/// Tiny JSON object writer (flat string→number maps; enough for
+/// EXPERIMENTS.md artifacts without a serde dependency).
+pub fn to_json(map: &BTreeMap<String, f64>) -> String {
+    let fields: Vec<String> = map.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    format!("{{{}}}", fields.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_roundtrip() {
+        let mut log = MetricsLog::new(&["step", "loss"]);
+        log.push(&[0.0, 2.5]);
+        log.push(&[1.0, 1.25]);
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.column("loss"), Some(vec![2.5, 1.25]));
+        assert_eq!(log.column("nope"), None);
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,loss\n0,2.5\n"));
+    }
+
+    #[test]
+    fn csv_file_write() {
+        let dir = std::env::temp_dir().join("dngd_test_metrics");
+        let path = dir.join("log.csv");
+        let mut log = MetricsLog::new(&["a"]);
+        log.push(&[1.0]);
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a\n1\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_writer() {
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), 1.5);
+        m.insert("y".to_string(), 2.0);
+        assert_eq!(to_json(&m), "{\"x\": 1.5, \"y\": 2}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Softmax-classifier MLP with per-sample score rows.
+//!
+//! Architecture: `d → h₁ → … → h_k → K` with tanh hidden activations and
+//! a softmax output; loss is mean NLL. The manual backward pass runs once
+//! per sample, writing `∂log p(y_i|x_i)/∂θ` into row i of the score
+//! matrix (scaled 1/√n). Validated against central finite differences.
+
+use super::BatchEval;
+use crate::data::rng::Rng;
+use crate::linalg::Mat;
+
+/// Multi-layer perceptron classifier.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Layer widths, e.g. `[d, 32, 32, K]`.
+    pub sizes: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(sizes: Vec<usize>) -> Self {
+        assert!(sizes.len() >= 2, "need at least input and output layers");
+        Mlp { sizes }
+    }
+
+    /// Total parameter count (weights + biases per layer).
+    pub fn num_params(&self) -> usize {
+        self.sizes
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+
+    /// Xavier-style init.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.num_params());
+        for w in self.sizes.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (2.0 / (fan_in + fan_out) as f64).sqrt();
+            for _ in 0..fan_in * fan_out {
+                p.push(scale * rng.normal());
+            }
+            for _ in 0..fan_out {
+                p.push(0.0);
+            }
+        }
+        p
+    }
+
+    /// Forward pass returning per-layer activations (post-tanh, plus the
+    /// input as layer 0) and the final logits.
+    fn forward(&self, params: &[f64], x: &[f64]) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut acts = vec![x.to_vec()];
+        let mut offset = 0;
+        let last = self.sizes.len() - 2;
+        let mut cur = x.to_vec();
+        for (li, w) in self.sizes.windows(2).enumerate() {
+            let (fi, fo) = (w[0], w[1]);
+            let wmat = &params[offset..offset + fi * fo];
+            let bias = &params[offset + fi * fo..offset + fi * fo + fo];
+            offset += fi * fo + fo;
+            let mut next = vec![0.0; fo];
+            for o in 0..fo {
+                let mut s = bias[o];
+                let row = &wmat[o * fi..(o + 1) * fi];
+                for i in 0..fi {
+                    s += row[i] * cur[i];
+                }
+                next[o] = if li == last { s } else { s.tanh() };
+            }
+            acts.push(next.clone());
+            cur = next;
+        }
+        let logits = acts.pop().unwrap();
+        (acts, logits)
+    }
+
+    /// Per-sample backward: given d(logits), write ∂/∂θ into `out`
+    /// (accumulating with weight `scale`).
+    fn backward(
+        &self,
+        params: &[f64],
+        acts: &[Vec<f64>],
+        mut dlogits: Vec<f64>,
+        scale: f64,
+        out: &mut [f64],
+    ) {
+        // Walk layers in reverse. acts[li] is the input to layer li.
+        let mut offsets = Vec::with_capacity(self.sizes.len() - 1);
+        let mut off = 0;
+        for w in self.sizes.windows(2) {
+            offsets.push(off);
+            off += w[0] * w[1] + w[1];
+        }
+        let lcount = self.sizes.len() - 1;
+        let mut dcur = std::mem::take(&mut dlogits);
+        for li in (0..lcount).rev() {
+            let (fi, fo) = (self.sizes[li], self.sizes[li + 1]);
+            let base = offsets[li];
+            let wmat = &params[base..base + fi * fo];
+            let input = &acts[li];
+            // Weight/bias grads.
+            for o in 0..fo {
+                let d = dcur[o] * scale;
+                if d != 0.0 {
+                    let wrow = base + o * fi;
+                    for i in 0..fi {
+                        out[wrow + i] += d * input[i];
+                    }
+                    out[base + fi * fo + o] += d;
+                }
+            }
+            if li > 0 {
+                // d(input) then through the tanh of the previous layer.
+                let mut dprev = vec![0.0; fi];
+                for o in 0..fo {
+                    let d = dcur[o];
+                    if d != 0.0 {
+                        let row = &wmat[o * fi..(o + 1) * fi];
+                        for i in 0..fi {
+                            dprev[i] += d * row[i];
+                        }
+                    }
+                }
+                // acts[li] holds tanh outputs of layer li−1.
+                for i in 0..fi {
+                    let t = input[i];
+                    dprev[i] *= 1.0 - t * t;
+                }
+                dcur = dprev;
+            }
+        }
+    }
+
+    /// Evaluate a batch: inputs `x` (n×d), integer class targets `y`.
+    /// Returns loss, gradient and the 1/√n-scaled score matrix.
+    pub fn batch_eval(&self, params: &[f64], x: &Mat, y: &[usize]) -> BatchEval {
+        let n = x.rows();
+        assert_eq!(y.len(), n);
+        assert_eq!(x.cols(), self.sizes[0]);
+        let m = self.num_params();
+        let k = *self.sizes.last().unwrap();
+        let inv_sqrt_n = 1.0 / (n as f64).sqrt();
+
+        let mut scores = Mat::zeros(n, m);
+        let mut loss = 0.0;
+        for i in 0..n {
+            let (acts, logits) = self.forward(params, x.row(i));
+            // log-softmax.
+            let maxl = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let zsum: f64 = logits.iter().map(|l| (l - maxl).exp()).sum();
+            let logz = maxl + zsum.ln();
+            loss -= logits[y[i]] - logz;
+            // d(log p_y)/d logits = e_y − softmax.
+            let mut d: Vec<f64> = logits.iter().map(|l| -((l - maxl).exp() / zsum)).collect();
+            d[y[i]] += 1.0;
+            debug_assert_eq!(d.len(), k);
+            self.backward(params, &acts, d, inv_sqrt_n, scores.row_mut(i));
+        }
+        loss /= n as f64;
+        let grad = super::grad_from_scores(&scores);
+        BatchEval { loss, grad, scores }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::classification_task;
+
+    fn fd_grad(mlp: &Mlp, params: &[f64], x: &Mat, y: &[usize], eps: f64) -> Vec<f64> {
+        let mut g = vec![0.0; params.len()];
+        let mut p = params.to_vec();
+        for j in 0..params.len() {
+            p[j] = params[j] + eps;
+            let lp = mlp.batch_eval(&p, x, y).loss;
+            p[j] = params[j] - eps;
+            let lm = mlp.batch_eval(&p, x, y).loss;
+            p[j] = params[j];
+            g[j] = (lp - lm) / (2.0 * eps);
+        }
+        g
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = Rng::seed_from(220);
+        let mlp = Mlp::new(vec![3, 5, 4]);
+        let params = mlp.init_params(&mut rng);
+        let (x, yf) = classification_task(6, 3, 1.0, &mut rng);
+        let y: Vec<usize> = yf.iter().map(|&v| usize::from(v > 0.0)).collect();
+        let eval = mlp.batch_eval(&params, &x, &y);
+        let fd = fd_grad(&mlp, &params, &x, &y, 1e-5);
+        for (a, b) in eval.grad.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-6, "analytic {a} vs fd {b}");
+        }
+    }
+
+    #[test]
+    fn per_sample_scores_sum_to_grad() {
+        let mut rng = Rng::seed_from(221);
+        let mlp = Mlp::new(vec![4, 6, 3]);
+        let params = mlp.init_params(&mut rng);
+        let (x, yf) = classification_task(10, 4, 1.0, &mut rng);
+        let y: Vec<usize> = yf.iter().map(|&v| usize::from(v > 0.0)).collect();
+        let eval = mlp.batch_eval(&params, &x, &y);
+        let derived = super::super::grad_from_scores(&eval.scores);
+        for (a, b) in eval.grad.iter().zip(&derived) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn per_sample_row_is_single_sample_gradient() {
+        // Row i of √n·S must equal the gradient of log p for sample i alone.
+        let mut rng = Rng::seed_from(222);
+        let mlp = Mlp::new(vec![3, 4, 2]);
+        let params = mlp.init_params(&mut rng);
+        let (x, yf) = classification_task(5, 3, 1.0, &mut rng);
+        let y: Vec<usize> = yf.iter().map(|&v| usize::from(v > 0.0)).collect();
+        let eval = mlp.batch_eval(&params, &x, &y);
+        let i = 2;
+        let xi = x.slice_rows(i, i + 1);
+        let single = mlp.batch_eval(&params, &xi, &y[i..i + 1]);
+        // For n=1: grad = −S_row·√1 ⇒ score row = −grad.
+        let sqrt_n = (5f64).sqrt();
+        for j in 0..params.len() {
+            let from_batch = eval.scores[(i, j)] * sqrt_n;
+            let from_single = -single.grad[j];
+            assert!((from_batch - from_single).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut rng = Rng::seed_from(223);
+        let mlp = Mlp::new(vec![4, 8, 2]);
+        let mut params = mlp.init_params(&mut rng);
+        let (x, yf) = classification_task(60, 4, 2.0, &mut rng);
+        let y: Vec<usize> = yf.iter().map(|&v| usize::from(v > 0.0)).collect();
+        let l0 = mlp.batch_eval(&params, &x, &y).loss;
+        let mut opt = crate::ngd::NaturalGradient::new(
+            Box::new(crate::solver::CholSolver::default()),
+            crate::ngd::DampingSchedule::Constant { lambda: 1e-3 },
+            0.5,
+        );
+        for _ in 0..15 {
+            let e = mlp.batch_eval(&params, &x, &y);
+            opt.step(&mut params, &e.scores, &e.grad, e.loss).unwrap();
+        }
+        let l1 = mlp.batch_eval(&params, &x, &y).loss;
+        assert!(l1 < 0.3 * l0, "loss {l0} → {l1}");
+    }
+
+    #[test]
+    fn num_params_counts_weights_and_biases() {
+        let mlp = Mlp::new(vec![3, 5, 2]);
+        assert_eq!(mlp.num_params(), 3 * 5 + 5 + 5 * 2 + 2);
+        assert_eq!(mlp.init_params(&mut Rng::seed_from(0)).len(), mlp.num_params());
+    }
+}

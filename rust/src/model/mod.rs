@@ -1,0 +1,69 @@
+//! Native model substrate.
+//!
+//! NGD needs per-sample score rows `S_ij = (1/√n)·∂log P_θ(x_i)/∂θ_j`
+//! (paper §2), i.e. *per-sample* gradients, not just the batch gradient.
+//! These models implement manual reverse-mode differentiation that emits
+//! one score row per sample:
+//!
+//! * [`Mlp`] — softmax-classifier MLP (tanh hidden layers);
+//! * [`Transformer`] — a small GPT-style decoder (causal multi-head
+//!   attention, GELU MLP, pre-LayerNorm) for the char-LM end-to-end run.
+//!
+//! Both are validated against central finite differences in their tests,
+//! and against the JAX L2 model through the AOT artifact integration test
+//! (`rust/tests/runtime_artifacts.rs`).
+//!
+//! For log-likelihood losses the batch gradient is a linear image of the
+//! score matrix, `v = −(1/√n)·colsum(S)`; [`BatchEval`] carries both so
+//! callers can exploit or ignore that structure (the RVB method requires
+//! it, Algorithm 1 does not — see §3).
+
+pub mod mlp;
+pub mod transformer;
+
+pub use mlp::Mlp;
+pub use transformer::{Transformer, TransformerConfig};
+
+use crate::linalg::Mat;
+
+/// One batch evaluation: loss, gradient, and the score matrix.
+pub struct BatchEval {
+    /// Mean negative log-likelihood over the batch.
+    pub loss: f64,
+    /// Gradient of the mean loss w.r.t. all parameters (length m).
+    pub grad: Vec<f64>,
+    /// Score matrix S (n×m), rows scaled by 1/√n per the paper.
+    pub scores: Mat,
+}
+
+/// Derive the batch loss gradient from score rows for NLL losses:
+/// `v = −(1/√n)·Σ_i S_i`.
+pub fn grad_from_scores(scores: &Mat) -> Vec<f64> {
+    let (n, m) = scores.shape();
+    let mut v = vec![0.0; m];
+    for i in 0..n {
+        let row = scores.row(i);
+        for j in 0..m {
+            v[j] += row[j];
+        }
+    }
+    let scale = -1.0 / (n as f64).sqrt();
+    for x in &mut v {
+        *x *= scale;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_from_scores_matches_definition() {
+        let s = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let v = grad_from_scores(&s);
+        let scale = -1.0 / 2f64.sqrt();
+        assert!((v[0] - scale * 5.0).abs() < 1e-15);
+        assert!((v[2] - scale * 9.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,848 @@
+//! GPT-style decoder-only transformer with per-sample score rows.
+//!
+//! Pre-LayerNorm blocks: `x += Wo·MHA(LN1 x)`; `x += W2·gelu(W1·LN2 x)`,
+//! final LayerNorm + linear head, next-token NLL at the last position.
+//! The manual reverse pass produces one score row
+//! `∂log p(y|context)/∂θ / √n` per sample — the S the NGD trainer feeds
+//! to Algorithm 1. Validated against central finite differences (which is
+//! why the implementation is kept scrupulously branch-free in the math).
+
+use super::BatchEval;
+use crate::data::rng::Rng;
+use crate::linalg::Mat;
+
+/// Transformer hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    /// Embedding / residual width D.
+    pub dim: usize,
+    /// Attention heads (must divide `dim`).
+    pub heads: usize,
+    /// Decoder blocks.
+    pub layers: usize,
+    /// Context length C.
+    pub context: usize,
+    /// MLP hidden width (conventionally 4·dim).
+    pub mlp_hidden: usize,
+}
+
+impl TransformerConfig {
+    /// A small config suitable for CPU end-to-end runs.
+    pub fn small(vocab: usize, context: usize) -> Self {
+        TransformerConfig { vocab, dim: 16, heads: 2, layers: 2, context, mlp_hidden: 64 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dim % self.heads != 0 {
+            return Err(format!("heads {} must divide dim {}", self.heads, self.dim));
+        }
+        if self.vocab == 0 || self.context == 0 || self.layers == 0 {
+            return Err("vocab, context and layers must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Offsets of each parameter tensor in the flat parameter vector.
+#[derive(Clone, Debug)]
+struct Layout {
+    wte: usize,
+    wpe: usize,
+    layers: Vec<LayerLayout>,
+    lnf_g: usize,
+    lnf_b: usize,
+    head: usize,
+    total: usize,
+}
+
+#[derive(Clone, Debug)]
+struct LayerLayout {
+    ln1_g: usize,
+    ln1_b: usize,
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+}
+
+impl Layout {
+    fn new(c: &TransformerConfig) -> Layout {
+        let (v, d, f, ctx) = (c.vocab, c.dim, c.mlp_hidden, c.context);
+        let mut off = 0;
+        let mut take = |len: usize| {
+            let o = off;
+            off += len;
+            o
+        };
+        let wte = take(v * d);
+        let wpe = take(ctx * d);
+        let mut layers = Vec::with_capacity(c.layers);
+        for _ in 0..c.layers {
+            layers.push(LayerLayout {
+                ln1_g: take(d),
+                ln1_b: take(d),
+                wq: take(d * d),
+                wk: take(d * d),
+                wv: take(d * d),
+                wo: take(d * d),
+                ln2_g: take(d),
+                ln2_b: take(d),
+                w1: take(f * d),
+                b1: take(f),
+                w2: take(d * f),
+                b2: take(d),
+            });
+        }
+        let lnf_g = take(d);
+        let lnf_b = take(d);
+        let head = take(v * d);
+        Layout { wte, wpe, layers, lnf_g, lnf_b, head, total: off }
+    }
+}
+
+/// Per-layer forward cache for one sample.
+struct LayerCache {
+    x_in: Vec<f64>,  // C×D residual entering the block
+    ln1_mu: Vec<f64>,
+    ln1_rstd: Vec<f64>,
+    a: Vec<f64>,     // C×D LN1 output
+    q: Vec<f64>,     // C×D
+    k: Vec<f64>,
+    v: Vec<f64>,
+    att: Vec<f64>,   // H×C×C softmax weights (causal rows)
+    o: Vec<f64>,     // C×D pre-Wo mix
+    x_mid: Vec<f64>, // C×D residual after attention
+    ln2_mu: Vec<f64>,
+    ln2_rstd: Vec<f64>,
+    bmat: Vec<f64>,  // C×D LN2 output
+    u: Vec<f64>,     // C×F pre-GELU
+    g: Vec<f64>,     // C×F post-GELU
+}
+
+struct ForwardCache {
+    layers: Vec<LayerCache>,
+    x_final: Vec<f64>, // C×D residual leaving the last block
+    lnf_mu: f64,
+    lnf_rstd: f64,
+    f_last: Vec<f64>, // D, LN_f(x_final[last])
+    logits: Vec<f64>, // V
+}
+
+const GELU_C: f64 = 0.7978845608028654; // √(2/π)
+const GELU_A: f64 = 0.044715;
+
+#[inline]
+fn gelu(u: f64) -> f64 {
+    0.5 * u * (1.0 + (GELU_C * (u + GELU_A * u * u * u)).tanh())
+}
+
+#[inline]
+fn gelu_prime(u: f64) -> f64 {
+    let inner = GELU_C * (u + GELU_A * u * u * u);
+    let t = inner.tanh();
+    0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+/// `y = W·x` for row-major W (out×in).
+fn matvec_into(w: &[f64], x: &[f64], out: &mut [f64]) {
+    let fi = x.len();
+    for (o, yo) in out.iter_mut().enumerate() {
+        let row = &w[o * fi..(o + 1) * fi];
+        let mut s = 0.0;
+        for i in 0..fi {
+            s += row[i] * x[i];
+        }
+        *yo = s;
+    }
+}
+
+/// `dX += Wᵀ·dy`, `dW += dy ⊗ x` (the standard dense backward pair).
+fn matvec_backward(w: &[f64], x: &[f64], dy: &[f64], dx: &mut [f64], dw: &mut [f64]) {
+    let fi = x.len();
+    for (o, &d) in dy.iter().enumerate() {
+        if d == 0.0 {
+            continue;
+        }
+        let row = &w[o * fi..(o + 1) * fi];
+        let drow = &mut dw[o * fi..(o + 1) * fi];
+        for i in 0..fi {
+            dx[i] += d * row[i];
+            drow[i] += d * x[i];
+        }
+    }
+}
+
+/// LayerNorm forward over a D-slice: returns (mu, rstd) and writes
+/// `g·x̂+b` into `out`.
+fn ln_forward(x: &[f64], g: &[f64], b: &[f64], out: &mut [f64]) -> (f64, f64) {
+    let d = x.len();
+    let mu = x.iter().sum::<f64>() / d as f64;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+    let rstd = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..d {
+        out[i] = g[i] * (x[i] - mu) * rstd + b[i];
+    }
+    (mu, rstd)
+}
+
+/// LayerNorm backward: given dy, accumulates dg, db, and returns dx.
+#[allow(clippy::too_many_arguments)]
+fn ln_backward(
+    x: &[f64],
+    g: &[f64],
+    mu: f64,
+    rstd: f64,
+    dy: &[f64],
+    dg: &mut [f64],
+    db: &mut [f64],
+    dx: &mut [f64],
+) {
+    let d = x.len();
+    let inv_d = 1.0 / d as f64;
+    let mut mean_dxhat = 0.0;
+    let mut mean_dxhat_xhat = 0.0;
+    // First pass: accumulate means of dx̂ and dx̂·x̂.
+    for i in 0..d {
+        let xhat = (x[i] - mu) * rstd;
+        let dxhat = dy[i] * g[i];
+        mean_dxhat += dxhat;
+        mean_dxhat_xhat += dxhat * xhat;
+        dg[i] += dy[i] * xhat;
+        db[i] += dy[i];
+    }
+    mean_dxhat *= inv_d;
+    mean_dxhat_xhat *= inv_d;
+    for i in 0..d {
+        let xhat = (x[i] - mu) * rstd;
+        let dxhat = dy[i] * g[i];
+        dx[i] += rstd * (dxhat - mean_dxhat - xhat * mean_dxhat_xhat);
+    }
+}
+
+/// Decoder-only transformer LM.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub config: TransformerConfig,
+    layout: Layout,
+}
+
+impl Transformer {
+    pub fn new(config: TransformerConfig) -> Self {
+        config.validate().expect("invalid transformer config");
+        let layout = Layout::new(&config);
+        Transformer { config, layout }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layout.total
+    }
+
+    /// GPT-2-style init: N(0, 0.02) weights, zero biases/LN-b, unit LN-g.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f64> {
+        let mut p = vec![0.0; self.layout.total];
+        let mut fill = |range: std::ops::Range<usize>, std: f64, p: &mut Vec<f64>| {
+            for i in range {
+                p[i] = std * rng.normal();
+            }
+        };
+        let d = self.config.dim;
+        let f = self.config.mlp_hidden;
+        let v = self.config.vocab;
+        fill(self.layout.wte..self.layout.wte + v * d, 0.02, &mut p);
+        fill(self.layout.wpe..self.layout.wpe + self.config.context * d, 0.01, &mut p);
+        for ll in &self.layout.layers {
+            for i in ll.ln1_g..ll.ln1_g + d {
+                p[i] = 1.0;
+            }
+            for i in ll.ln2_g..ll.ln2_g + d {
+                p[i] = 1.0;
+            }
+            fill(ll.wq..ll.wq + d * d, 0.02, &mut p);
+            fill(ll.wk..ll.wk + d * d, 0.02, &mut p);
+            fill(ll.wv..ll.wv + d * d, 0.02, &mut p);
+            // Residual-path projections scaled down by depth (GPT-2 trick).
+            let res_std = 0.02 / (2.0 * self.config.layers as f64).sqrt();
+            fill(ll.wo..ll.wo + d * d, res_std, &mut p);
+            fill(ll.w1..ll.w1 + f * d, 0.02, &mut p);
+            fill(ll.w2..ll.w2 + d * f, res_std, &mut p);
+        }
+        for i in self.layout.lnf_g..self.layout.lnf_g + d {
+            p[i] = 1.0;
+        }
+        fill(self.layout.head..self.layout.head + v * d, 0.02, &mut p);
+        p
+    }
+
+    /// Forward pass for one sample, caching everything backward needs.
+    fn forward(&self, params: &[f64], tokens: &[u32]) -> ForwardCache {
+        let c = &self.config;
+        let (d, h, f, ctx) = (c.dim, c.heads, c.mlp_hidden, c.context);
+        assert_eq!(tokens.len(), ctx, "expected a full context window");
+        let dh = d / h;
+        let inv_sqrt_dh = 1.0 / (dh as f64).sqrt();
+
+        // Embedding.
+        let mut x = vec![0.0; ctx * d];
+        for p in 0..ctx {
+            let t = tokens[p] as usize;
+            assert!(t < c.vocab, "token id {t} out of vocab {}", c.vocab);
+            let te = &params[self.layout.wte + t * d..self.layout.wte + (t + 1) * d];
+            let pe = &params[self.layout.wpe + p * d..self.layout.wpe + (p + 1) * d];
+            for i in 0..d {
+                x[p * d + i] = te[i] + pe[i];
+            }
+        }
+
+        let mut layers = Vec::with_capacity(c.layers);
+        for ll in &self.layout.layers {
+            let x_in = x.clone();
+            // LN1 + QKV.
+            let mut a = vec![0.0; ctx * d];
+            let mut ln1_mu = vec![0.0; ctx];
+            let mut ln1_rstd = vec![0.0; ctx];
+            let g1 = &params[ll.ln1_g..ll.ln1_g + d];
+            let b1v = &params[ll.ln1_b..ll.ln1_b + d];
+            for p in 0..ctx {
+                let (mu, rstd) =
+                    ln_forward(&x_in[p * d..(p + 1) * d], g1, b1v, &mut a[p * d..(p + 1) * d]);
+                ln1_mu[p] = mu;
+                ln1_rstd[p] = rstd;
+            }
+            let mut q = vec![0.0; ctx * d];
+            let mut k = vec![0.0; ctx * d];
+            let mut v = vec![0.0; ctx * d];
+            for p in 0..ctx {
+                matvec_into(&params[ll.wq..ll.wq + d * d], &a[p * d..(p + 1) * d], &mut q[p * d..(p + 1) * d]);
+                matvec_into(&params[ll.wk..ll.wk + d * d], &a[p * d..(p + 1) * d], &mut k[p * d..(p + 1) * d]);
+                matvec_into(&params[ll.wv..ll.wv + d * d], &a[p * d..(p + 1) * d], &mut v[p * d..(p + 1) * d]);
+            }
+            // Causal attention per head.
+            let mut att = vec![0.0; h * ctx * ctx];
+            let mut o = vec![0.0; ctx * d];
+            for hd in 0..h {
+                let hoff = hd * dh;
+                for p in 0..ctx {
+                    let qrow = &q[p * d + hoff..p * d + hoff + dh];
+                    // Scores j ≤ p.
+                    let arow = &mut att[hd * ctx * ctx + p * ctx..hd * ctx * ctx + (p + 1) * ctx];
+                    let mut maxs = f64::NEG_INFINITY;
+                    for j in 0..=p {
+                        let krow = &k[j * d + hoff..j * d + hoff + dh];
+                        let mut s = 0.0;
+                        for i in 0..dh {
+                            s += qrow[i] * krow[i];
+                        }
+                        arow[j] = s * inv_sqrt_dh;
+                        maxs = maxs.max(arow[j]);
+                    }
+                    let mut z = 0.0;
+                    for j in 0..=p {
+                        arow[j] = (arow[j] - maxs).exp();
+                        z += arow[j];
+                    }
+                    for j in 0..=p {
+                        arow[j] /= z;
+                    }
+                    // Mix values.
+                    let orow = &mut o[p * d + hoff..p * d + hoff + dh];
+                    for j in 0..=p {
+                        let w = arow[j];
+                        let vrow = &v[j * d + hoff..j * d + hoff + dh];
+                        for i in 0..dh {
+                            orow[i] += w * vrow[i];
+                        }
+                    }
+                }
+            }
+            // Project + residual.
+            let mut x_mid = x_in.clone();
+            let mut tmp = vec![0.0; d];
+            for p in 0..ctx {
+                matvec_into(&params[ll.wo..ll.wo + d * d], &o[p * d..(p + 1) * d], &mut tmp);
+                for i in 0..d {
+                    x_mid[p * d + i] += tmp[i];
+                }
+            }
+            // LN2 + MLP + residual.
+            let mut bmat = vec![0.0; ctx * d];
+            let mut ln2_mu = vec![0.0; ctx];
+            let mut ln2_rstd = vec![0.0; ctx];
+            let g2 = &params[ll.ln2_g..ll.ln2_g + d];
+            let b2v = &params[ll.ln2_b..ll.ln2_b + d];
+            for p in 0..ctx {
+                let (mu, rstd) =
+                    ln_forward(&x_mid[p * d..(p + 1) * d], g2, b2v, &mut bmat[p * d..(p + 1) * d]);
+                ln2_mu[p] = mu;
+                ln2_rstd[p] = rstd;
+            }
+            let mut u = vec![0.0; ctx * f];
+            let mut gbuf = vec![0.0; ctx * f];
+            let mut x_out = x_mid.clone();
+            let b1p = &params[ll.b1..ll.b1 + f];
+            let b2p = &params[ll.b2..ll.b2 + d];
+            let mut mlp_out = vec![0.0; d];
+            for p in 0..ctx {
+                matvec_into(&params[ll.w1..ll.w1 + f * d], &bmat[p * d..(p + 1) * d], &mut u[p * f..(p + 1) * f]);
+                for i in 0..f {
+                    u[p * f + i] += b1p[i];
+                    gbuf[p * f + i] = gelu(u[p * f + i]);
+                }
+                matvec_into(&params[ll.w2..ll.w2 + d * f], &gbuf[p * f..(p + 1) * f], &mut mlp_out);
+                for i in 0..d {
+                    x_out[p * d + i] += mlp_out[i] + b2p[i];
+                }
+            }
+            layers.push(LayerCache {
+                x_in,
+                ln1_mu,
+                ln1_rstd,
+                a,
+                q,
+                k,
+                v,
+                att,
+                o,
+                x_mid,
+                ln2_mu,
+                ln2_rstd,
+                bmat,
+                u,
+                g: gbuf,
+            });
+            x = x_out;
+        }
+
+        // Final LN at the last position + head.
+        let last = ctx - 1;
+        let mut f_last = vec![0.0; d];
+        let (lnf_mu, lnf_rstd) = ln_forward(
+            &x[last * d..(last + 1) * d],
+            &params[self.layout.lnf_g..self.layout.lnf_g + d],
+            &params[self.layout.lnf_b..self.layout.lnf_b + d],
+            &mut f_last,
+        );
+        let mut logits = vec![0.0; c.vocab];
+        matvec_into(&params[self.layout.head..self.layout.head + c.vocab * d], &f_last, &mut logits);
+        ForwardCache { layers, x_final: x, lnf_mu, lnf_rstd, f_last, logits }
+    }
+
+    /// Backward for one sample: given `dlogits = ∂log p/∂logits`, write
+    /// `∂log p/∂θ` into `out` (dense accumulate).
+    fn backward(&self, params: &[f64], tokens: &[u32], cache: &ForwardCache, dlogits: &[f64], out: &mut [f64]) {
+        let c = &self.config;
+        let (d, h, f, ctx) = (c.dim, c.heads, c.mlp_hidden, c.context);
+        let dh = d / h;
+        let inv_sqrt_dh = 1.0 / (dh as f64).sqrt();
+        let last = ctx - 1;
+
+        // Head backward.
+        let mut d_f = vec![0.0; d];
+        {
+            let head = &params[self.layout.head..self.layout.head + c.vocab * d];
+            let dhead = &mut out[self.layout.head..self.layout.head + c.vocab * d];
+            matvec_backward(head, &cache.f_last, dlogits, &mut d_f, dhead);
+        }
+        // Final LN backward (last position only).
+        let mut dx = vec![0.0; ctx * d];
+        {
+            let x_last = &cache.x_final[last * d..(last + 1) * d];
+            let g = &params[self.layout.lnf_g..self.layout.lnf_g + d];
+            let (dg_range, db_range) = (
+                self.layout.lnf_g..self.layout.lnf_g + d,
+                self.layout.lnf_b..self.layout.lnf_b + d,
+            );
+            // Split-borrow dg/db out of `out`.
+            let mut dgv = vec![0.0; d];
+            let mut dbv = vec![0.0; d];
+            let mut dxl = vec![0.0; d];
+            ln_backward(x_last, g, cache.lnf_mu, cache.lnf_rstd, &d_f, &mut dgv, &mut dbv, &mut dxl);
+            for (i, idx) in dg_range.enumerate() {
+                out[idx] += dgv[i];
+            }
+            for (i, idx) in db_range.enumerate() {
+                out[idx] += dbv[i];
+            }
+            for i in 0..d {
+                dx[last * d + i] += dxl[i];
+            }
+        }
+
+        // Blocks in reverse.
+        for (li, ll) in self.layout.layers.iter().enumerate().rev() {
+            let lc = &cache.layers[li];
+            // ---- MLP backward ----
+            let mut dx_mid = dx.clone(); // residual path
+            for p in 0..ctx {
+                let dxo = &dx[p * d..(p + 1) * d];
+                if dxo.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                // b2 grad.
+                for i in 0..d {
+                    out[ll.b2 + i] += dxo[i];
+                }
+                // W2 backward.
+                let mut d_g = vec![0.0; f];
+                {
+                    let w2 = &params[ll.w2..ll.w2 + d * f];
+                    let dw2 = &mut out[ll.w2..ll.w2 + d * f];
+                    matvec_backward(w2, &lc.g[p * f..(p + 1) * f], dxo, &mut d_g, dw2);
+                }
+                // GELU backward.
+                let mut d_u = vec![0.0; f];
+                for i in 0..f {
+                    d_u[i] = d_g[i] * gelu_prime(lc.u[p * f + i]);
+                }
+                // b1 grad + W1 backward.
+                for i in 0..f {
+                    out[ll.b1 + i] += d_u[i];
+                }
+                let mut d_b = vec![0.0; d];
+                {
+                    let w1 = &params[ll.w1..ll.w1 + f * d];
+                    let dw1 = &mut out[ll.w1..ll.w1 + f * d];
+                    matvec_backward(w1, &lc.bmat[p * d..(p + 1) * d], &d_u, &mut d_b, dw1);
+                }
+                // LN2 backward.
+                let mut dgv = vec![0.0; d];
+                let mut dbv = vec![0.0; d];
+                let mut dxm = vec![0.0; d];
+                ln_backward(
+                    &lc.x_mid[p * d..(p + 1) * d],
+                    &params[ll.ln2_g..ll.ln2_g + d],
+                    lc.ln2_mu[p],
+                    lc.ln2_rstd[p],
+                    &d_b,
+                    &mut dgv,
+                    &mut dbv,
+                    &mut dxm,
+                );
+                for i in 0..d {
+                    out[ll.ln2_g + i] += dgv[i];
+                    out[ll.ln2_b + i] += dbv[i];
+                    dx_mid[p * d + i] += dxm[i];
+                }
+            }
+
+            // ---- Attention backward ----
+            let mut dx_in = dx_mid.clone(); // residual path
+            let mut d_o = vec![0.0; ctx * d];
+            for p in 0..ctx {
+                let dxm = &dx_mid[p * d..(p + 1) * d];
+                if dxm.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                let wo = &params[ll.wo..ll.wo + d * d];
+                let dwo = &mut out[ll.wo..ll.wo + d * d];
+                let mut dop = vec![0.0; d];
+                matvec_backward(wo, &lc.o[p * d..(p + 1) * d], dxm, &mut dop, dwo);
+                for i in 0..d {
+                    d_o[p * d + i] += dop[i];
+                }
+            }
+            let mut d_q = vec![0.0; ctx * d];
+            let mut d_k = vec![0.0; ctx * d];
+            let mut d_v = vec![0.0; ctx * d];
+            for hd in 0..h {
+                let hoff = hd * dh;
+                for p in 0..ctx {
+                    let dorow = &d_o[p * d + hoff..p * d + hoff + dh];
+                    if dorow.iter().all(|&v| v == 0.0) {
+                        continue;
+                    }
+                    let arow = &lc.att[hd * ctx * ctx + p * ctx..hd * ctx * ctx + (p + 1) * ctx];
+                    // datt and dv.
+                    let mut datt = vec![0.0; p + 1];
+                    for j in 0..=p {
+                        let vrow = &lc.v[j * d + hoff..j * d + hoff + dh];
+                        let mut s = 0.0;
+                        for i in 0..dh {
+                            s += dorow[i] * vrow[i];
+                        }
+                        datt[j] = s;
+                        let w = arow[j];
+                        let dvrow = &mut d_v[j * d + hoff..j * d + hoff + dh];
+                        for i in 0..dh {
+                            dvrow[i] += w * dorow[i];
+                        }
+                    }
+                    // Softmax backward.
+                    let dot: f64 = (0..=p).map(|j| arow[j] * datt[j]).sum();
+                    for j in 0..=p {
+                        let dscore = arow[j] * (datt[j] - dot) * inv_sqrt_dh;
+                        if dscore == 0.0 {
+                            continue;
+                        }
+                        let krow = &lc.k[j * d + hoff..j * d + hoff + dh];
+                        let qrow = &lc.q[p * d + hoff..p * d + hoff + dh];
+                        let dqrow = &mut d_q[p * d + hoff..p * d + hoff + dh];
+                        for i in 0..dh {
+                            dqrow[i] += dscore * krow[i];
+                        }
+                        let dkrow = &mut d_k[j * d + hoff..j * d + hoff + dh];
+                        for i in 0..dh {
+                            dkrow[i] += dscore * qrow[i];
+                        }
+                    }
+                }
+            }
+            // QKV weight backward + d_a.
+            let mut d_a = vec![0.0; ctx * d];
+            for p in 0..ctx {
+                let arow = &lc.a[p * d..(p + 1) * d];
+                let da = &mut d_a[p * d..(p + 1) * d];
+                {
+                    let w = &params[ll.wq..ll.wq + d * d];
+                    let dw = &mut out[ll.wq..ll.wq + d * d];
+                    matvec_backward(w, arow, &d_q[p * d..(p + 1) * d], da, dw);
+                }
+                {
+                    let w = &params[ll.wk..ll.wk + d * d];
+                    let dw = &mut out[ll.wk..ll.wk + d * d];
+                    matvec_backward(w, arow, &d_k[p * d..(p + 1) * d], da, dw);
+                }
+                {
+                    let w = &params[ll.wv..ll.wv + d * d];
+                    let dw = &mut out[ll.wv..ll.wv + d * d];
+                    matvec_backward(w, arow, &d_v[p * d..(p + 1) * d], da, dw);
+                }
+            }
+            // LN1 backward.
+            for p in 0..ctx {
+                let da = &d_a[p * d..(p + 1) * d];
+                if da.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                let mut dgv = vec![0.0; d];
+                let mut dbv = vec![0.0; d];
+                let mut dxi = vec![0.0; d];
+                ln_backward(
+                    &lc.x_in[p * d..(p + 1) * d],
+                    &params[ll.ln1_g..ll.ln1_g + d],
+                    lc.ln1_mu[p],
+                    lc.ln1_rstd[p],
+                    da,
+                    &mut dgv,
+                    &mut dbv,
+                    &mut dxi,
+                );
+                for i in 0..d {
+                    out[ll.ln1_g + i] += dgv[i];
+                    out[ll.ln1_b + i] += dbv[i];
+                    dx_in[p * d + i] += dxi[i];
+                }
+            }
+            dx = dx_in;
+        }
+
+        // Embedding backward.
+        for p in 0..ctx {
+            let t = tokens[p] as usize;
+            for i in 0..d {
+                let g = dx[p * d + i];
+                out[self.layout.wte + t * d + i] += g;
+                out[self.layout.wpe + p * d + i] += g;
+            }
+        }
+    }
+
+    /// Next-token log-probabilities for one context (inference).
+    pub fn log_probs(&self, params: &[f64], tokens: &[u32]) -> Vec<f64> {
+        let cache = self.forward(params, tokens);
+        let maxl = cache.logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = cache.logits.iter().map(|l| (l - maxl).exp()).sum();
+        let logz = maxl + z.ln();
+        cache.logits.iter().map(|l| l - logz).collect()
+    }
+
+    /// Evaluate a batch of `(context, target)` pairs: mean NLL, gradient,
+    /// and the 1/√n-scaled score matrix.
+    pub fn batch_eval(&self, params: &[f64], contexts: &[Vec<u32>], targets: &[u32]) -> BatchEval {
+        let n = contexts.len();
+        assert_eq!(targets.len(), n);
+        let m = self.num_params();
+        let inv_sqrt_n = 1.0 / (n as f64).sqrt();
+        let mut scores = Mat::zeros(n, m);
+        let mut loss = 0.0;
+        for i in 0..n {
+            let cache = self.forward(params, &contexts[i]);
+            let y = targets[i] as usize;
+            let maxl = cache.logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let z: f64 = cache.logits.iter().map(|l| (l - maxl).exp()).sum();
+            let logz = maxl + z.ln();
+            loss -= cache.logits[y] - logz;
+            // ∂log p_y/∂logits = e_y − softmax.
+            let mut d: Vec<f64> = cache
+                .logits
+                .iter()
+                .map(|l| -((l - maxl).exp() / z))
+                .collect();
+            d[y] += 1.0;
+            self.backward(params, &contexts[i], &cache, &d, scores.row_mut(i));
+            // Scale the row by 1/√n (paper's S definition).
+            for sv in scores.row_mut(i) {
+                *sv *= inv_sqrt_n;
+            }
+        }
+        loss /= n as f64;
+        let grad = super::grad_from_scores(&scores);
+        BatchEval { loss, grad, scores }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Transformer, Vec<f64>) {
+        let cfg = TransformerConfig {
+            vocab: 7,
+            dim: 8,
+            heads: 2,
+            layers: 2,
+            context: 5,
+            mlp_hidden: 12,
+        };
+        let model = Transformer::new(cfg);
+        let params = model.init_params(&mut Rng::seed_from(230));
+        (model, params)
+    }
+
+    #[test]
+    fn log_probs_normalized() {
+        let (model, params) = tiny();
+        let lp = model.log_probs(&params, &[0, 1, 2, 3, 4]);
+        let total: f64 = lp.iter().map(|l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (model, params) = tiny();
+        let contexts = vec![vec![0u32, 1, 2, 3, 4], vec![4, 3, 2, 1, 0], vec![1, 1, 5, 6, 2]];
+        let targets = vec![5u32, 6, 0];
+        let eval = model.batch_eval(&params, &contexts, &targets);
+        // Spot-check a spread of parameter indices (full FD would be slow).
+        let m = model.num_params();
+        let eps = 1e-5;
+        let mut p = params.clone();
+        let idxs: Vec<usize> =
+            (0..37).map(|k| (k * 977) % m).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
+        for j in idxs {
+            p[j] = params[j] + eps;
+            let lp = model.batch_eval(&p, &contexts, &targets).loss;
+            p[j] = params[j] - eps;
+            let lm = model.batch_eval(&p, &contexts, &targets).loss;
+            p[j] = params[j];
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (eval.grad[j] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                "param {j}: analytic {} vs fd {fd}",
+                eval.grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn score_rows_are_per_sample_gradients() {
+        let (model, params) = tiny();
+        let contexts = vec![vec![0u32, 1, 2, 3, 4], vec![2, 2, 2, 2, 2]];
+        let targets = vec![3u32, 1];
+        let eval = model.batch_eval(&params, &contexts, &targets);
+        // Single-sample batch: score row × √1 = ∂log p = −grad.
+        for i in 0..2 {
+            let single = model.batch_eval(&params, &contexts[i..i + 1].to_vec(), &targets[i..i + 1]);
+            let sqrt2 = 2f64.sqrt();
+            for j in (0..model.num_params()).step_by(53) {
+                assert!(
+                    (eval.scores[(i, j)] * sqrt2 + single.grad[j]).abs() < 1e-10,
+                    "sample {i} param {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn causality_later_tokens_do_not_affect_earlier_predictions() {
+        // Changing the *last* token must not change log-probs computed
+        // from a context whose prediction point is earlier. We test by
+        // comparing the hidden path: predict from [a,b,c,d,X] — the
+        // prediction reads position 4, so changing token 0..3 matters,
+        // but a model with causal masking must give identical attention
+        // rows for positions < 4 regardless of X. Here we verify the
+        // practical contract: logits depend on X only through position 4.
+        let (model, params) = tiny();
+        let lp1 = model.log_probs(&params, &[0, 1, 2, 3, 4]);
+        let lp2 = model.log_probs(&params, &[0, 1, 2, 3, 5]);
+        // They *should* differ (X feeds position 4 itself)…
+        let diff: f64 = lp1.iter().zip(&lp2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-12);
+        // …but changing a *padding-like* prefix token affects things too;
+        // true causality is structural: attention rows only cover j ≤ p.
+        // That is asserted directly on the forward cache:
+        let cache = model.forward(&params, &[0, 1, 2, 3, 4]);
+        let ctx = model.config.context;
+        for hd in 0..model.config.heads {
+            for p in 0..ctx {
+                for j in p + 1..ctx {
+                    assert_eq!(cache.layers[0].att[hd * ctx * ctx + p * ctx + j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ngd_training_step_descends() {
+        let (model, mut params) = tiny();
+        let contexts: Vec<Vec<u32>> = (0..8)
+            .map(|i| (0..5).map(|p| ((i + p) % 7) as u32).collect())
+            .collect();
+        let targets: Vec<u32> = (0..8).map(|i| ((i + 5) % 7) as u32).collect();
+        let e0 = model.batch_eval(&params, &contexts, &targets);
+        let mut opt = crate::ngd::NaturalGradient::new(
+            Box::new(crate::solver::CholSolver::default()),
+            crate::ngd::DampingSchedule::Constant { lambda: 1e-2 },
+            0.5,
+        );
+        let mut loss = e0.loss;
+        for _ in 0..10 {
+            let e = model.batch_eval(&params, &contexts, &targets);
+            loss = e.loss;
+            opt.step(&mut params, &e.scores, &e.grad, e.loss).unwrap();
+        }
+        let efinal = model.batch_eval(&params, &contexts, &targets);
+        assert!(efinal.loss < e0.loss, "{} → {}", e0.loss, efinal.loss);
+        let _ = loss;
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let (model, params) = tiny();
+        let c = &model.config;
+        let per_layer = 2 * c.dim // ln1
+            + 4 * c.dim * c.dim // qkvo
+            + 2 * c.dim // ln2
+            + c.mlp_hidden * c.dim + c.mlp_hidden // w1 b1
+            + c.dim * c.mlp_hidden + c.dim; // w2 b2
+        let expect = c.vocab * c.dim // wte
+            + c.context * c.dim // wpe
+            + c.layers * per_layer
+            + 2 * c.dim // lnf
+            + c.vocab * c.dim; // head
+        assert_eq!(model.num_params(), expect);
+        assert_eq!(params.len(), expect);
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let cfg = TransformerConfig { vocab: 5, dim: 6, heads: 4, layers: 1, context: 4, mlp_hidden: 8 };
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Damping (λ) schedules.
+//!
+//! §1: "In large-scale scenarios, where the number of samples is typically
+//! much smaller than the number of model parameters, a damping term
+//! becomes essential." How λ evolves over training is a deployment
+//! decision; three standard policies are provided.
+
+/// Policy for the damping strength λ over training.
+#[derive(Debug, Clone)]
+pub enum DampingSchedule {
+    /// Fixed λ.
+    Constant { lambda: f64 },
+    /// λ_t = max(λ₀·decay^t, λ_min) — common in SR/VMC practice.
+    ExponentialDecay { initial: f64, decay: f64, min: f64 },
+    /// Levenberg–Marquardt adaptation: shrink λ after a successful step
+    /// (loss decreased), grow it after a failed one. §3 identifies Eq. 1
+    /// with the damped-least-squares (LM) subproblem.
+    LevenbergMarquardt { lambda: f64, grow: f64, shrink: f64, min: f64, max: f64 },
+}
+
+impl DampingSchedule {
+    /// Current λ.
+    pub fn lambda(&self) -> f64 {
+        match self {
+            DampingSchedule::Constant { lambda } => *lambda,
+            DampingSchedule::ExponentialDecay { initial, .. } => *initial,
+            DampingSchedule::LevenbergMarquardt { lambda, .. } => *lambda,
+        }
+    }
+
+    /// Advance one step. `loss_improved` is only consulted by the LM policy.
+    pub fn advance(&mut self, loss_improved: bool) {
+        match self {
+            DampingSchedule::Constant { .. } => {}
+            DampingSchedule::ExponentialDecay { initial, decay, min } => {
+                *initial = (*initial * *decay).max(*min);
+            }
+            DampingSchedule::LevenbergMarquardt { lambda, grow, shrink, min, max } => {
+                if loss_improved {
+                    *lambda = (*lambda * *shrink).max(*min);
+                } else {
+                    *lambda = (*lambda * *grow).min(*max);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_never_moves() {
+        let mut d = DampingSchedule::Constant { lambda: 0.1 };
+        for improved in [true, false, true] {
+            d.advance(improved);
+            assert_eq!(d.lambda(), 0.1);
+        }
+    }
+
+    #[test]
+    fn exponential_decays_to_floor() {
+        let mut d = DampingSchedule::ExponentialDecay { initial: 1.0, decay: 0.5, min: 0.1 };
+        let mut prev = d.lambda();
+        for _ in 0..10 {
+            d.advance(true);
+            assert!(d.lambda() <= prev);
+            prev = d.lambda();
+        }
+        assert_eq!(d.lambda(), 0.1);
+    }
+
+    #[test]
+    fn lm_adapts_both_directions() {
+        let mut d = DampingSchedule::LevenbergMarquardt {
+            lambda: 1.0,
+            grow: 3.0,
+            shrink: 0.5,
+            min: 1e-8,
+            max: 1e4,
+        };
+        d.advance(true);
+        assert!((d.lambda() - 0.5).abs() < 1e-15);
+        d.advance(false);
+        assert!((d.lambda() - 1.5).abs() < 1e-15);
+        // Caps respected.
+        for _ in 0..100 {
+            d.advance(false);
+        }
+        assert_eq!(d.lambda(), 1e4);
+        for _ in 0..100 {
+            d.advance(true);
+        }
+        assert_eq!(d.lambda(), 1e-8);
+    }
+}

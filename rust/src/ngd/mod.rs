@@ -1,0 +1,24 @@
+//! Natural-gradient optimization layer.
+//!
+//! Assembles the paper's solver into a production optimizer:
+//!
+//! * [`NaturalGradient`] — damped NGD/SR update `θ ← θ − η·x` where
+//!   `(SᵀS + λI) x = ∇L`, with pluggable [`crate::solver::DampedSolver`],
+//!   damping schedule, momentum and trust-region clipping.
+//! * [`DampingSchedule`] — constant, exponential-decay, and
+//!   Levenberg–Marquardt adaptive damping (§3 relates Eq. 1 to LM).
+//! * [`kfac`] — a block-diagonal (KFAC-flavoured) approximate-Fisher
+//!   baseline, the approximation family §1 says "often falls short of
+//!   replicating the performance of the exact method". The ablation bench
+//!   compares it against the exact solve.
+//! * [`Sgd`] / [`Adam`] — first-order baselines for the end-to-end runs.
+
+pub mod damping;
+pub mod first_order;
+pub mod kfac;
+pub mod optimizer;
+
+pub use damping::DampingSchedule;
+pub use first_order::{Adam, Sgd};
+pub use kfac::BlockDiagonalFisher;
+pub use optimizer::{NaturalGradient, NgdReport};

@@ -1,0 +1,124 @@
+//! Shape-keyed artifact registry.
+//!
+//! `make artifacts` produces files named
+//!
+//! ```text
+//! artifacts/solve_n{n}_m{m}.hlo.txt       — the damped-solve graph
+//! artifacts/gram_n{n}_m{m}.hlo.txt        — SYRK-only graph (ablation)
+//! artifacts/lm_step_*.hlo.txt             — model fwd+scores graph
+//! ```
+//!
+//! The registry scans once at startup and resolves (kind, n, m) → path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which computation an artifact holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    Solve,
+    Gram,
+}
+
+impl ArtifactKind {
+    fn prefix(self) -> &'static str {
+        match self {
+            ArtifactKind::Solve => "solve",
+            ArtifactKind::Gram => "gram",
+        }
+    }
+}
+
+/// Registry of discovered artifacts.
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    entries: BTreeMap<(ArtifactKind, usize, usize), PathBuf>,
+}
+
+impl ArtifactRegistry {
+    /// Scan a directory (missing dir = empty registry; callers fall back
+    /// to the native path, so a fresh checkout works without `make
+    /// artifacts`).
+    pub fn scan(dir: &Path) -> ArtifactRegistry {
+        let mut entries = BTreeMap::new();
+        let Ok(rd) = std::fs::read_dir(dir) else {
+            return ArtifactRegistry { entries };
+        };
+        for entry in rd.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
+            for kind in [ArtifactKind::Solve, ArtifactKind::Gram] {
+                if let Some(rest) = stem.strip_prefix(&format!("{}_", kind.prefix())) {
+                    if let Some((n, m)) = parse_shape(rest) {
+                        entries.insert((kind, n, m), path.clone());
+                    }
+                }
+            }
+        }
+        ArtifactRegistry { entries }
+    }
+
+    /// Look up an artifact for an exact shape.
+    pub fn find(&self, kind: ArtifactKind, n: usize, m: usize) -> Option<PathBuf> {
+        self.entries.get(&(kind, n, m)).cloned()
+    }
+
+    /// All known (kind, n, m) triples.
+    pub fn list(&self) -> Vec<(ArtifactKind, usize, usize)> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Parse `"n{n}_m{m}"`.
+fn parse_shape(s: &str) -> Option<(usize, usize)> {
+    let rest = s.strip_prefix('n')?;
+    let (n_str, m_part) = rest.split_once("_m")?;
+    let n = n_str.parse().ok()?;
+    let m = m_part.parse().ok()?;
+    Some((n, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_shape_names() {
+        assert_eq!(parse_shape("n256_m100000"), Some((256, 100000)));
+        assert_eq!(parse_shape("n8_m32"), Some((8, 32)));
+        assert_eq!(parse_shape("256_m100"), None);
+        assert_eq!(parse_shape("n256m100"), None);
+        assert_eq!(parse_shape("nX_m100"), None);
+    }
+
+    #[test]
+    fn scans_directory() {
+        let dir = std::env::temp_dir().join("dngd_test_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("solve_n16_m64.hlo.txt"), "dummy").unwrap();
+        std::fs::write(dir.join("gram_n16_m64.hlo.txt"), "dummy").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), "dummy").unwrap();
+        std::fs::write(dir.join("solve_garbage.hlo.txt"), "dummy").unwrap();
+        let reg = ArtifactRegistry::scan(&dir);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.find(ArtifactKind::Solve, 16, 64).is_some());
+        assert!(reg.find(ArtifactKind::Gram, 16, 64).is_some());
+        assert!(reg.find(ArtifactKind::Solve, 16, 65).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        let reg = ArtifactRegistry::scan(Path::new("/definitely/not/here"));
+        assert!(reg.is_empty());
+    }
+}

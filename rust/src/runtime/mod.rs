@@ -1,0 +1,85 @@
+//! PJRT runtime — loads and executes the AOT artifacts produced by
+//! `python/compile/aot.py`, keeping Python strictly off the request path.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`).
+//!
+//! * [`ArtifactRegistry`] — scans `artifacts/` for shape-keyed HLO
+//!   modules (`solve_n{n}_m{m}.hlo.txt`, …) at startup;
+//! * [`PjrtSolver`] — a [`crate::solver::DampedSolver`] whose hot path is
+//!   a compiled XLA executable (the L2 JAX solve, which itself inlines
+//!   the L1 Pallas kernels);
+//! * [`Backend`] — dispatch between the PJRT path and the native Rust
+//!   path, by shape availability.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactKind, ArtifactRegistry};
+pub use pjrt::PjrtSolver;
+
+use crate::linalg::Mat;
+use crate::solver::{CholSolver, DampedSolver, SolveError};
+
+/// Execution backend for the damped solve.
+pub enum Backend {
+    /// Compiled XLA executable (fixed shape).
+    Pjrt(PjrtSolver),
+    /// Native Rust implementation (any shape).
+    Native(CholSolver),
+}
+
+impl Backend {
+    /// Pick PJRT when an artifact for (n, m) exists, else native.
+    /// `threads` configures the native SYRK parallelism.
+    pub fn select(registry: &ArtifactRegistry, n: usize, m: usize, threads: usize) -> Backend {
+        match registry.find(ArtifactKind::Solve, n, m) {
+            Some(path) => match PjrtSolver::load(&path, n, m) {
+                Ok(s) => Backend::Pjrt(s),
+                Err(e) => {
+                    eprintln!(
+                        "[runtime] artifact {} failed to load ({e}); falling back to native",
+                        path.display()
+                    );
+                    Backend::Native(CholSolver::with_threads(threads))
+                }
+            },
+            None => Backend::Native(CholSolver::with_threads(threads)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Native(_) => "native",
+        }
+    }
+
+    pub fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        match self {
+            Backend::Pjrt(p) => p.solve(s, v, lambda),
+            Backend::Native(c) => c.solve(s, v, lambda),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_falls_back_to_native_without_artifacts() {
+        let reg = ArtifactRegistry::scan(std::path::Path::new("/nonexistent-dir"));
+        let b = Backend::select(&reg, 8, 32, 1);
+        assert_eq!(b.name(), "native");
+        // And it solves.
+        let mut rng = crate::data::rng::Rng::seed_from(1);
+        let s = Mat::randn(8, 32, &mut rng);
+        let v = vec![1.0; 32];
+        let x = b.solve(&s, &v, 0.1).unwrap();
+        assert!(crate::solver::residual_norm(&s, &x, &v, 0.1) < 1e-8);
+    }
+}

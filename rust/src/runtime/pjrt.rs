@@ -1,0 +1,87 @@
+//! PJRT-backed damped solver: compile once, execute per request.
+//!
+//! The artifact is the L2 JAX function
+//! `solve(S, v, λ) = (v − Sᵀ·chol_solve(SSᵀ+λĨ, Sv))/λ` lowered at a
+//! fixed (n, m) with f32 dtypes (JAX default; the AOT pipeline and this
+//! loader agree on that contract). Conversions f64 ⇄ f32 happen at the
+//! boundary only.
+
+use crate::linalg::Mat;
+use crate::solver::{DampedSolver, SolveError};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled fixed-shape solve executable on the PJRT CPU client.
+pub struct PjrtSolver {
+    n: usize,
+    m: usize,
+    // PJRT structures are not Sync; the executable is guarded so the
+    // solver can be shared across coordinator threads.
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtSolver {
+    /// Load HLO text, compile on the CPU client.
+    pub fn load(path: &Path, n: usize, m: usize) -> Result<PjrtSolver, SolveError> {
+        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xla_err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(xla_err)?;
+        Ok(PjrtSolver { n, m, exe: Mutex::new(exe) })
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+}
+
+fn xla_err(e: xla::Error) -> SolveError {
+    SolveError::BadInput(format!("pjrt: {e}"))
+}
+
+impl DampedSolver for PjrtSolver {
+    fn name(&self) -> &'static str {
+        "pjrt-chol"
+    }
+
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        if s.shape() != (self.n, self.m) || v.len() != self.m {
+            return Err(SolveError::BadInput(format!(
+                "artifact compiled for shape ({}, {}), got S {:?} / v {}",
+                self.n,
+                self.m,
+                s.shape(),
+                v.len()
+            )));
+        }
+        if lambda <= 0.0 {
+            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+        }
+        // f64 → f32 at the boundary (artifact dtype contract).
+        let s32: Vec<f32> = s.as_slice().iter().map(|&x| x as f32).collect();
+        let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        let s_lit = xla::Literal::vec1(&s32)
+            .reshape(&[self.n as i64, self.m as i64])
+            .map_err(xla_err)?;
+        let v_lit = xla::Literal::vec1(&v32);
+        let l_lit = xla::Literal::scalar(lambda as f32);
+
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[s_lit, v_lit, l_lit]).map_err(xla_err)?;
+        let lit = result[0][0].to_literal_sync().map_err(xla_err)?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1().map_err(xla_err)?;
+        let x32 = out.to_vec::<f32>().map_err(xla_err)?;
+        if x32.len() != self.m {
+            return Err(SolveError::BadInput(format!(
+                "artifact returned {} values, expected {}",
+                x32.len(),
+                self.m
+            )));
+        }
+        Ok(x32.into_iter().map(f64::from).collect())
+    }
+}
+
+// Tests that require real artifacts live in `rust/tests/runtime_artifacts.rs`
+// (they skip gracefully when `make artifacts` has not run).

@@ -1,0 +1,174 @@
+//! Conjugate-gradient baseline (§3).
+//!
+//! The paper notes iterative methods "scale linearly with both n and m,
+//! but the number of iterations increases significantly when the matrix
+//! is ill-conditioned". CG on `(SᵀS + λI)x = v` needs one `Sᵀ(S·)`
+//! matvec pair per iteration — O(nm) — and √κ-ish iterations; the
+//! `cg_conditioning` bench reproduces the blow-up while `chol` stays flat.
+
+use super::{DampedSolver, SolveError};
+use crate::linalg::mat::{dot, norm2};
+use crate::linalg::Mat;
+use std::sync::Mutex;
+
+/// CG solver with convergence statistics.
+#[derive(Debug)]
+pub struct CgSolver {
+    /// Relative-residual tolerance ‖r‖/‖v‖.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+    last_stats: Mutex<CgStats>,
+}
+
+/// Convergence record of the most recent solve.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CgStats {
+    pub iterations: usize,
+    pub final_residual: f64,
+}
+
+impl Default for CgSolver {
+    fn default() -> Self {
+        CgSolver { tol: 1e-10, max_iters: 10_000, last_stats: Mutex::new(CgStats::default()) }
+    }
+}
+
+impl CgSolver {
+    pub fn new(tol: f64, max_iters: usize) -> Self {
+        CgSolver { tol, max_iters, last_stats: Mutex::new(CgStats::default()) }
+    }
+
+    /// Stats from the last `solve` call.
+    pub fn stats(&self) -> CgStats {
+        *self.last_stats.lock().unwrap()
+    }
+
+    /// `(SᵀS + λI)·p` without forming the Fisher matrix.
+    #[inline]
+    fn fisher_apply(s: &Mat, p: &[f64], lambda: f64, out: &mut Vec<f64>) {
+        let sp = s.matvec(p);
+        *out = s.t_matvec(&sp);
+        for (o, pi) in out.iter_mut().zip(p) {
+            *o += lambda * pi;
+        }
+    }
+}
+
+impl DampedSolver for CgSolver {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        assert_eq!(v.len(), s.cols());
+        if lambda <= 0.0 {
+            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+        }
+        let m = s.cols();
+        let vnorm = norm2(v).max(f64::MIN_POSITIVE);
+        let mut x = vec![0.0; m];
+        let mut r = v.to_vec(); // r = v − A·0
+        let mut p = r.clone();
+        let mut rr = dot(&r, &r);
+        let mut ap = Vec::new();
+
+        for it in 0..self.max_iters {
+            let rnorm = rr.sqrt();
+            if rnorm <= self.tol * vnorm {
+                *self.last_stats.lock().unwrap() =
+                    CgStats { iterations: it, final_residual: rnorm / vnorm };
+                return Ok(x);
+            }
+            Self::fisher_apply(s, &p, lambda, &mut ap);
+            let alpha = rr / dot(&p, &ap);
+            for j in 0..m {
+                x[j] += alpha * p[j];
+                r[j] -= alpha * ap[j];
+            }
+            let rr_new = dot(&r, &r);
+            let beta = rr_new / rr;
+            rr = rr_new;
+            for j in 0..m {
+                p[j] = r[j] + beta * p[j];
+            }
+        }
+        let final_residual = rr.sqrt() / vnorm;
+        *self.last_stats.lock().unwrap() =
+            CgStats { iterations: self.max_iters, final_residual };
+        if final_residual <= self.tol * 100.0 {
+            // Close enough to be useful — return with stats recording the cap.
+            Ok(x)
+        } else {
+            Err(SolveError::DidNotConverge { iterations: self.max_iters, residual: final_residual })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::{residual_norm, CholSolver};
+
+    #[test]
+    fn converges_on_well_conditioned() {
+        let mut rng = Rng::seed_from(150);
+        let s = Mat::randn(10, 100, &mut rng);
+        let v: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let cg = CgSolver::default();
+        let x = cg.solve(&s, &v, 1.0).unwrap();
+        assert!(residual_norm(&s, &x, &v, 1.0) < 1e-7);
+        assert!(cg.stats().iterations > 0);
+        assert!(cg.stats().iterations < 200);
+    }
+
+    #[test]
+    fn matches_chol() {
+        let mut rng = Rng::seed_from(151);
+        let s = Mat::randn(8, 60, &mut rng);
+        let v: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let xc = CholSolver::default().solve(&s, &v, 0.5).unwrap();
+        let xg = CgSolver::default().solve(&s, &v, 0.5).unwrap();
+        for (a, b) in xc.iter().zip(&xg) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn iteration_count_grows_with_condition_number() {
+        // Scale rows of S geometrically to control κ(SᵀS + λI); CG
+        // iterations must grow markedly as λ shrinks — the §3 remark.
+        let mut rng = Rng::seed_from(152);
+        let n = 24;
+        let mut s = Mat::randn(n, 150, &mut rng);
+        for i in 0..n {
+            let scale = 10f64.powf(i as f64 / (n - 1) as f64 * 3.0); // σ spread 1e3
+            for x in s.row_mut(i) {
+                *x *= scale;
+            }
+        }
+        let v: Vec<f64> = (0..150).map(|_| rng.normal()).collect();
+        let cg = CgSolver::new(1e-10, 100_000);
+        cg.solve(&s, &v, 1e-1).unwrap();
+        let well = cg.stats().iterations;
+        cg.solve(&s, &v, 1e-7).unwrap();
+        let ill = cg.stats().iterations;
+        assert!(
+            ill > 2 * well,
+            "expected iteration blow-up: well-damped {well} vs ill-damped {ill}"
+        );
+    }
+
+    #[test]
+    fn reports_nonconvergence() {
+        let mut rng = Rng::seed_from(153);
+        let s = Mat::randn(6, 30, &mut rng);
+        let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let cg = CgSolver::new(1e-14, 1); // absurd cap
+        match cg.solve(&s, &v, 1e-9) {
+            Err(SolveError::DidNotConverge { iterations, .. }) => assert_eq!(iterations, 1),
+            other => panic!("expected DidNotConverge, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Complex stochastic-reconfiguration variants (§3).
+//!
+//! In variational quantum Monte Carlo the score matrix comes from an
+//! *unnormalized* wavefunction and must be centered,
+//! `S = (O − Ō)/√n`, and when ψ is complex so is S. Two Fisher-matrix
+//! conventions exist:
+//!
+//! * **full complex** `F = S†S` → replace every transpose in Algorithm 1
+//!   with a Hermitian conjugate ([`solve_sr_complex`]);
+//! * **real part** `F = ℜ[S†S]` (the common choice) → replace
+//!   `S ← Concat[ℜS, ℑS]` along the sample axis and run the *real*
+//!   Algorithm 1 unchanged ([`solve_sr_real_part`]).
+
+use super::{DampedSolver, SolveError};
+use crate::linalg::complex::{cholesky_complex, solve_lower_c, solve_lower_dagger_c, c64, CMat};
+use crate::linalg::Mat;
+
+/// Center and scale a raw log-derivative matrix `O` (n×p) into the SR
+/// score matrix `S = (O − Ō)/√n` where `Ō` is the per-column sample mean.
+pub fn center_scores(o: &CMat) -> CMat {
+    let (n, p) = o.shape();
+    let mut mean = vec![c64::ZERO; p];
+    for i in 0..n {
+        let row = o.row(i);
+        for j in 0..p {
+            mean[j] += row[j];
+        }
+    }
+    let inv_n = 1.0 / n as f64;
+    for m in &mut mean {
+        *m = *m * inv_n;
+    }
+    let scale = 1.0 / (n as f64).sqrt();
+    CMat::from_fn(n, p, |i, j| (o[(i, j)] - mean[j]) * scale)
+}
+
+/// Full-complex SR: solve `(S†S + λI) x = v` for complex `S: n×m`,
+/// `v ∈ ℂᵐ`. Algorithm 1 with Hermitian conjugates:
+/// `W = SS† + λĨ`, `W = LL†`, `x = (v − S†L⁻†L⁻¹Sv)/λ`.
+pub fn solve_sr_complex(s: &CMat, v: &[c64], lambda: f64) -> Result<Vec<c64>, SolveError> {
+    assert_eq!(v.len(), s.cols());
+    if lambda <= 0.0 {
+        return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+    }
+    let w = s.herk(lambda);
+    let l = cholesky_complex(&w)?;
+    let u = s.matvec(v);
+    let y = solve_lower_c(&l, &u);
+    let z = solve_lower_dagger_c(&l, &y);
+    let t = s.dagger_matvec(&z);
+    let inv = 1.0 / lambda;
+    Ok(v.iter().zip(&t).map(|(vi, ti)| (*vi - *ti) * inv).collect())
+}
+
+/// Real-part SR: solve `(ℜ[S†S] + λI) x = v` for complex `S`, real `v`,
+/// via the paper's concatenation trick: `ℜ[S†S] = S̃ᵀS̃` with
+/// `S̃ = Concat[ℜS, ℑS]` stacked along the sample axis, then the real
+/// Algorithm 1 verbatim.
+pub fn solve_sr_real_part(s: &CMat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+    let stacked = Mat::vstack(&s.real(), &s.imag());
+    super::CholSolver::default().solve(&stacked, v, lambda).map_err(Into::into)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    /// Dense oracle: materialize F = S†S + λI and Gaussian-eliminate.
+    fn dense_complex_solve(s: &CMat, v: &[c64], lambda: f64) -> Vec<c64> {
+        let (n, m) = s.shape();
+        let mut f = CMat::zeros(m, m);
+        for a in 0..m {
+            for b in 0..m {
+                let mut acc = c64::ZERO;
+                for i in 0..n {
+                    acc += s[(i, a)].conj() * s[(i, b)];
+                }
+                f[(a, b)] = acc;
+            }
+        }
+        for a in 0..m {
+            f[(a, a)] += c64::from_re(lambda);
+        }
+        // Gaussian elimination with partial pivoting.
+        let mut aug = f;
+        let mut x = v.to_vec();
+        for col in 0..m {
+            let mut piv = col;
+            for r in col + 1..m {
+                if aug[(r, col)].abs() > aug[(piv, col)].abs() {
+                    piv = r;
+                }
+            }
+            if piv != col {
+                for j in 0..m {
+                    let tmp = aug[(col, j)];
+                    aug[(col, j)] = aug[(piv, j)];
+                    aug[(piv, j)] = tmp;
+                }
+                x.swap(col, piv);
+            }
+            let d = aug[(col, col)];
+            for r in 0..m {
+                if r == col {
+                    continue;
+                }
+                let factor = aug[(r, col)] / d;
+                for j in col..m {
+                    let v = aug[(col, j)];
+                    let cur = aug[(r, j)];
+                    aug[(r, j)] = cur - factor * v;
+                }
+                let xc = x[col];
+                x[r] -= factor * xc;
+            }
+        }
+        (0..m).map(|i| x[i] / aug[(i, i)]).collect()
+    }
+
+    #[test]
+    fn complex_variant_matches_dense_oracle() {
+        let mut rng = Rng::seed_from(170);
+        for &(n, m) in &[(2usize, 5usize), (6, 14), (10, 24)] {
+            let s = CMat::randn(n, m, &mut rng);
+            let v: Vec<c64> = (0..m).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+            let x = solve_sr_complex(&s, &v, 0.3).unwrap();
+            let oracle = dense_complex_solve(&s, &v, 0.3);
+            for (a, b) in x.iter().zip(&oracle) {
+                assert!((*a - *b).abs() < 1e-8, "({n},{m})");
+            }
+        }
+    }
+
+    #[test]
+    fn real_part_variant_matches_dense_real_oracle() {
+        let mut rng = Rng::seed_from(171);
+        let (n, m) = (5usize, 12usize);
+        let s = CMat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let x = solve_sr_real_part(&s, &v, 0.2).unwrap();
+        // Oracle: F = ℜ[S†S] + λI, solved densely in ℝ.
+        let mut f = Mat::zeros(m, m);
+        for a in 0..m {
+            for b in 0..m {
+                let mut acc = c64::ZERO;
+                for i in 0..n {
+                    acc += s[(i, a)].conj() * s[(i, b)];
+                }
+                f[(a, b)] = acc.re;
+            }
+        }
+        f.add_diag(0.2);
+        let l = crate::linalg::cholesky(&f).unwrap();
+        let oracle = crate::linalg::solve_lower_transpose(&l, &crate::linalg::solve_lower(&l, &v));
+        for (a, b) in x.iter().zip(&oracle) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn centering_removes_mean_and_scales() {
+        let mut rng = Rng::seed_from(172);
+        let o = CMat::randn(40, 7, &mut rng);
+        let s = center_scores(&o);
+        // Column means ≈ 0.
+        for j in 0..7 {
+            let mut mean = c64::ZERO;
+            for i in 0..40 {
+                mean += s[(i, j)];
+            }
+            assert!(mean.abs() < 1e-12);
+        }
+        // Variance scaling: ‖s_col‖² = sample-var(o_col)·(n·(1/√n)²)/... :
+        // S†S is the covariance estimate; check one column against the
+        // direct formula cov = Σ|o−ō|²/n.
+        let j = 3;
+        let mut mean = c64::ZERO;
+        for i in 0..40 {
+            mean += o[(i, j)];
+        }
+        mean = mean / 40.0;
+        let direct: f64 = (0..40).map(|i| (o[(i, j)] - mean).norm_sqr()).sum::<f64>() / 40.0;
+        let via_s: f64 = (0..40).map(|i| s[(i, j)].norm_sqr()).sum();
+        assert!((direct - via_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn real_s_reduces_complex_to_real_algorithm() {
+        // With purely real S, solve_sr_complex must agree with CholSolver.
+        let mut rng = Rng::seed_from(173);
+        let (n, m) = (6usize, 20usize);
+        let sr = Mat::randn(n, m, &mut rng);
+        let s = CMat::from_fn(n, m, |i, j| c64::from_re(sr[(i, j)]));
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let vc: Vec<c64> = v.iter().map(|&x| c64::from_re(x)).collect();
+        let xc = solve_sr_complex(&s, &vc, 0.15).unwrap();
+        let xr = crate::solver::CholSolver::default()
+            .solve(&sr, &v, 0.15)
+            .unwrap();
+        for (a, b) in xc.iter().zip(&xr) {
+            assert!((a.re - b).abs() < 1e-9);
+            assert!(a.im.abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! The `"eigh"` baseline — Appendix C, Eq. 5.
+//!
+//! Thin SVD `S = U Σ Vᵀ` obtained from the eigendecomposition of the n×n
+//! Gram matrix (`SSᵀ = U Σ² Uᵀ`, `V = SᵀUΣ⁻¹`), then
+//!
+//! ```text
+//! x = V (Σ² + λĨ)⁻¹ Vᵀ v + (v − V Vᵀ v)/λ
+//! ```
+//!
+//! This was "previously the fastest method in our experience" (paper §2).
+//! Its extra cost over Algorithm 1 is the O(n²m) formation of `V` plus a
+//! second O(nm) pass through `S`, which is where the ~3× gap in Table 1
+//! comes from.
+
+use super::{DampedSolver, SolveError};
+use crate::linalg::svd::svd_eigh;
+use crate::linalg::Mat;
+
+/// Eigh-SVD solver ("eigh").
+#[derive(Debug, Clone, Default)]
+pub struct EighSolver;
+
+impl EighSolver {
+    /// Eq. 5 applied to a precomputed thin SVD — shared with [`super::SvdaSolver`].
+    pub(crate) fn apply_svd(
+        svd: &crate::linalg::svd::ThinSvd,
+        v: &[f64],
+        lambda: f64,
+    ) -> Vec<f64> {
+        let n = svd.sigma.len();
+        // w = Vᵀ v  (rows of vt are the right singular vectors)
+        let w = svd.vt.matvec(v);
+        // a_k = w_k / (σ_k² + λ)
+        let a: Vec<f64> = (0..n)
+            .map(|k| w[k] / (svd.sigma[k] * svd.sigma[k] + lambda))
+            .collect();
+        // x = V a + (v − V w)/λ   — two transposed matvecs through vt.
+        let va = svd.vt.t_matvec(&a);
+        let vw = svd.vt.t_matvec(&w);
+        let inv = 1.0 / lambda;
+        (0..v.len()).map(|j| va[j] + inv * (v[j] - vw[j])).collect()
+    }
+}
+
+impl DampedSolver for EighSolver {
+    fn name(&self) -> &'static str {
+        "eigh"
+    }
+
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        assert_eq!(v.len(), s.cols());
+        if lambda <= 0.0 {
+            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+        }
+        let svd = svd_eigh(s);
+        Ok(Self::apply_svd(&svd, v, lambda))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::{residual_norm, CholSolver, DampedSolver};
+
+    #[test]
+    fn matches_chol_on_random_problems() {
+        let mut rng = Rng::seed_from(120);
+        for &(n, m) in &[(2, 6), (10, 80), (24, 240)] {
+            let s = Mat::randn(n, m, &mut rng);
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let xc = CholSolver::default().solve(&s, &v, 0.03).unwrap();
+            let xe = EighSolver.solve(&s, &v, 0.03).unwrap();
+            for (a, b) in xc.iter().zip(&xe) {
+                assert!((a - b).abs() < 1e-7, "({n},{m})");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_projection_branch() {
+        // With rank-deficient S, the (v − VVᵀv)/λ branch carries the
+        // null-space component — this exercises the zeroed-σ rows of vt.
+        let mut rng = Rng::seed_from(121);
+        let mut s = Mat::randn(5, 40, &mut rng);
+        let r0 = s.row(0).to_vec();
+        s.row_mut(4).copy_from_slice(&r0);
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let x = EighSolver.solve(&s, &v, 1e-3).unwrap();
+        assert!(residual_norm(&s, &x, &v, 1e-3) < 1e-7);
+    }
+
+    #[test]
+    fn pure_null_space_input_scales_by_inverse_lambda() {
+        // If v ⊥ row-space(S) then x = v/λ exactly.
+        let mut rng = Rng::seed_from(122);
+        let s = Mat::randn(3, 20, &mut rng);
+        let mut v: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        // Project v onto the orthogonal complement of S's rows (Gram–Schmidt).
+        let svd = crate::linalg::svd::svd_eigh(&s);
+        let w = svd.vt.matvec(&v);
+        let proj = svd.vt.t_matvec(&w);
+        for j in 0..20 {
+            v[j] -= proj[j];
+        }
+        let lambda = 0.25;
+        let x = EighSolver.solve(&s, &v, lambda).unwrap();
+        for (xi, vi) in x.iter().zip(&v) {
+            assert!((xi - vi / lambda).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Damped Fisher-system solvers: the paper's Algorithm 1 and every
+//! baseline its evaluation compares against.
+//!
+//! All solvers compute `x` with `(SᵀS + λI) x = v` for a score matrix
+//! `S: n×m` in the tall-skinny regime `m ≫ n`:
+//!
+//! | solver | paper label | complexity | memory | source |
+//! |--------|-------------|------------|--------|--------|
+//! | [`CholSolver`]  | "chol" | O(n³ + n²m) | O(nm) | Algorithm 1 (the contribution) |
+//! | [`EighSolver`]  | "eigh" | O(n³ + n²m), larger constant | O(nm) | Appendix C, previously fastest |
+//! | [`SvdaSolver`]  | "svda" | O(n²m·sweeps) | O(nm)+gesvda workspace | Appendix C, CUDA gesvda stand-in |
+//! | [`NaiveSolver`] | —      | O(m³) | O(m²) | §2 "naive" reference |
+//! | [`CgSolver`]    | —      | O(nm·iters) | O(m) | §3 iterative baseline |
+//! | [`RvbSolver`]   | —      | O(n³ + n²m) | O(nm) | RVB+23 identity (Appendix B), needs `v = Sᵀf` |
+//!
+//! Complex stochastic-reconfiguration variants (§3) live in [`complex_sr`]:
+//! the full-complex Fisher `F = S†S` and the real-part Fisher
+//! `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`.
+
+pub mod cg;
+pub mod chol;
+pub mod complex_sr;
+pub mod cost;
+pub mod eigh_svd;
+pub mod naive;
+pub mod rvb;
+pub mod svda;
+
+pub use cg::{CgSolver, CgStats};
+pub use chol::CholSolver;
+pub use complex_sr::{center_scores, solve_sr_complex, solve_sr_real_part};
+pub use cost::{flops, memory_bytes, MemoryBudget};
+pub use eigh_svd::EighSolver;
+pub use naive::NaiveSolver;
+pub use rvb::RvbSolver;
+pub use svda::SvdaSolver;
+
+use crate::linalg::{CholeskyError, Mat};
+
+/// Solver failure modes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveError {
+    /// Cholesky breakdown — λ too small for the sample Gram matrix.
+    NotPositiveDefinite(CholeskyError),
+    /// The method's modeled device-memory footprint exceeds the budget
+    /// (mirrors the paper's `N/A` cell for svda at (4096, 100000)).
+    OutOfMemory { required_bytes: u64, budget_bytes: u64 },
+    /// Iterative method failed to reach tolerance.
+    DidNotConverge { iterations: usize, residual: f64 },
+    /// Structural precondition violated (e.g. RVB without `v = Sᵀf`).
+    BadInput(String),
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::NotPositiveDefinite(e) => write!(f, "{e}"),
+            SolveError::OutOfMemory { required_bytes, budget_bytes } => write!(
+                f,
+                "modeled footprint {:.2} GB exceeds device budget {:.2} GB",
+                *required_bytes as f64 / 1e9,
+                *budget_bytes as f64 / 1e9
+            ),
+            SolveError::DidNotConverge { iterations, residual } => {
+                write!(f, "no convergence after {iterations} iterations (residual {residual:.3e})")
+            }
+            SolveError::BadInput(msg) => write!(f, "bad input: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+impl From<CholeskyError> for SolveError {
+    fn from(e: CholeskyError) -> Self {
+        SolveError::NotPositiveDefinite(e)
+    }
+}
+
+/// Common interface: solve `(SᵀS + λI) x = v`.
+pub trait DampedSolver {
+    /// Paper-facing label ("chol", "eigh", "svda", …).
+    fn name(&self) -> &'static str;
+
+    /// Solve for one right-hand side.
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError>;
+}
+
+/// Solver selection for configs / CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Chol,
+    Eigh,
+    Svda,
+    Naive,
+    Cg,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        Some(match s {
+            "chol" => SolverKind::Chol,
+            "eigh" => SolverKind::Eigh,
+            "svda" => SolverKind::Svda,
+            "naive" => SolverKind::Naive,
+            "cg" => SolverKind::Cg,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [SolverKind] {
+        &[SolverKind::Chol, SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SolverKind::Chol => "chol",
+            SolverKind::Eigh => "eigh",
+            SolverKind::Svda => "svda",
+            SolverKind::Naive => "naive",
+            SolverKind::Cg => "cg",
+        }
+    }
+}
+
+/// Instantiate a boxed solver by kind with default settings.
+pub fn make_solver(kind: SolverKind) -> Box<dyn DampedSolver + Send + Sync> {
+    match kind {
+        SolverKind::Chol => Box::new(CholSolver::default()),
+        SolverKind::Eigh => Box::new(EighSolver::default()),
+        SolverKind::Svda => Box::new(SvdaSolver::default()),
+        SolverKind::Naive => Box::new(NaiveSolver::default()),
+        SolverKind::Cg => Box::new(CgSolver::default()),
+    }
+}
+
+/// Residual `‖(SᵀS + λI)x − v‖₂` — the acceptance metric used across the
+/// test suite and the bench harness.
+pub fn residual_norm(s: &Mat, x: &[f64], v: &[f64], lambda: f64) -> f64 {
+    let sx = s.matvec(x);
+    let mut r = s.t_matvec(&sx);
+    let mut acc = 0.0;
+    for j in 0..x.len() {
+        let rj = r[j] + lambda * x[j] - v[j];
+        r[j] = rj;
+        acc += rj * rj;
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    /// Every solver must agree with every other one (and with the QR
+    /// oracle) on well-conditioned random problems.
+    #[test]
+    fn all_solvers_agree_cross_method() {
+        let mut rng = Rng::seed_from(100);
+        for &(n, m) in &[(4, 9), (16, 64), (32, 200)] {
+            let s = Mat::randn(n, m, &mut rng);
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let lambda = 0.05;
+            let oracle = crate::linalg::qr::ridge_qr_oracle(&s, &v, lambda);
+            for &kind in SolverKind::all() {
+                let solver = make_solver(kind);
+                let x = solver.solve(&s, &v, lambda).unwrap();
+                let vnorm = crate::linalg::mat::norm2(&v);
+                for (a, b) in x.iter().zip(&oracle) {
+                    assert!(
+                        (a - b).abs() < 1e-6 * vnorm.max(1.0),
+                        "{} disagrees with QR oracle at ({n},{m})",
+                        solver.name()
+                    );
+                }
+                assert!(residual_norm(&s, &x, &v, lambda) < 1e-6 * vnorm.max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn solver_kind_parse_roundtrip() {
+        for &k in SolverKind::all() {
+            assert_eq!(SolverKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(SolverKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn residual_norm_zero_for_exact_solution() {
+        let mut rng = Rng::seed_from(101);
+        let s = Mat::randn(3, 7, &mut rng);
+        // x=0, v=0 is exact.
+        assert_eq!(residual_norm(&s, &vec![0.0; 7], &vec![0.0; 7], 1.0), 0.0);
+    }
+}

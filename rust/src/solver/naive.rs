@@ -1,0 +1,82 @@
+//! Naive direct solver — the O(m³) reference the paper's complexity
+//! analysis compares against (§2): form the m×m matrix `SᵀS + λI` and
+//! Cholesky-solve it. Exact but "beyond capability" at the paper's scale
+//! (m ~ 10⁶ ⇒ 8 TB for the matrix alone), so it carries the same
+//! [`MemoryBudget`] model as svda and refuses paper-scale shapes.
+
+use super::cost::{memory_bytes, MemoryBudget};
+use super::{DampedSolver, SolveError, SolverKind};
+use crate::linalg::{cholesky, gemm::gemm_tn, solve_lower, solve_lower_transpose, Mat};
+
+/// Direct m×m solver.
+#[derive(Debug, Clone)]
+pub struct NaiveSolver {
+    pub budget: MemoryBudget,
+}
+
+impl Default for NaiveSolver {
+    fn default() -> Self {
+        NaiveSolver { budget: MemoryBudget::a100_80gb() }
+    }
+}
+
+impl DampedSolver for NaiveSolver {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        assert_eq!(v.len(), s.cols());
+        if lambda <= 0.0 {
+            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+        }
+        let (n, m) = s.shape();
+        let required = memory_bytes(SolverKind::Naive, n, m);
+        if !self.budget.fits(required) {
+            return Err(SolveError::OutOfMemory {
+                required_bytes: required,
+                budget_bytes: self.budget.bytes(),
+            });
+        }
+        // F = SᵀS + λI  (m×m — the whole point of the paper is avoiding this)
+        let mut f = Mat::zeros(m, m);
+        gemm_tn(1.0, s, s, 0.0, &mut f);
+        f.add_diag(lambda);
+        let l = cholesky(&f)?;
+        let y = solve_lower(&l, v);
+        Ok(solve_lower_transpose(&l, &y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::residual_norm;
+
+    #[test]
+    fn exact_on_small_problems() {
+        let mut rng = Rng::seed_from(140);
+        let s = Mat::randn(5, 30, &mut rng);
+        let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let x = NaiveSolver::default().solve(&s, &v, 0.5).unwrap();
+        assert!(residual_norm(&s, &x, &v, 0.5) < 1e-9);
+    }
+
+    #[test]
+    fn refuses_paper_scale() {
+        // m = 10⁶ ⇒ SᵀS alone is 8 TB; must OOM, not grind.
+        let budget = MemoryBudget::a100_80gb();
+        assert!(!budget.fits(memory_bytes(SolverKind::Naive, 1000, 1_000_000)));
+    }
+
+    #[test]
+    fn works_without_data_rows_dominating() {
+        // n = 1 extreme: rank-1 Fisher + damping.
+        let mut rng = Rng::seed_from(141);
+        let s = Mat::randn(1, 12, &mut rng);
+        let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let x = NaiveSolver::default().solve(&s, &v, 0.1).unwrap();
+        assert!(residual_norm(&s, &x, &v, 0.1) < 1e-10);
+    }
+}

@@ -1,0 +1,143 @@
+//! The RVB+23 method — Appendix B.
+//!
+//! When the gradient has least-squares structure `v = Sᵀf` (f ∈ ℝⁿ),
+//! Rende et al. solve
+//!
+//! ```text
+//! x_rvb = Sᵀ (SSᵀ + λĨ)⁻¹ f
+//! ```
+//!
+//! Appendix B proves `x_rvb ≡ x_chol` in that case. This module implements
+//! the method (with Cholesky solve, as the paper suggests) both to serve
+//! as the least-squares fast path and to regenerate the Appendix-B
+//! equivalence as an executable test. Its *limitation* — it requires
+//! `v ∈ rowspace(S)` and "prevents the use of regularization" on the loss
+//! — is surfaced as a checked precondition.
+
+use super::{CholSolver, DampedSolver, SolveError};
+use crate::linalg::{solve_lower, solve_lower_transpose, Mat};
+
+/// RVB+23 least-squares solver.
+#[derive(Debug, Clone, Default)]
+pub struct RvbSolver {
+    inner: CholSolver,
+}
+
+impl RvbSolver {
+    pub fn with_threads(threads: usize) -> Self {
+        RvbSolver { inner: CholSolver::with_threads(threads) }
+    }
+
+    /// Solve given the least-squares coefficient vector `f` directly:
+    /// `x = Sᵀ(SSᵀ + λĨ)⁻¹ f`. This is the method's native entry point.
+    pub fn solve_ls(&self, s: &Mat, f: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        assert_eq!(f.len(), s.rows(), "f must be n-dimensional");
+        if lambda <= 0.0 {
+            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+        }
+        let l = self.inner.factor(s, lambda)?;
+        let y = solve_lower(&l, f);
+        let u = solve_lower_transpose(&l, &y);
+        Ok(s.t_matvec(&u))
+    }
+
+    /// Recover `f` from `v = Sᵀf` by solving the (well-damped) consistency
+    /// system `SSᵀ f = S v`, then verify the reconstruction. Returns
+    /// `BadInput` if `v` is not in the row space of `S` — the structural
+    /// limitation §3 calls out.
+    pub fn recover_f(&self, s: &Mat, v: &[f64], tol: f64) -> Result<Vec<f64>, SolveError> {
+        let sv = s.matvec(v);
+        // SSᵀ may be singular; tiny ridge for the recovery only.
+        let w = crate::linalg::gemm::syrk(s, 1e-12 * frob2(s).max(1e-300));
+        let l = crate::linalg::cholesky(&w)?;
+        let f = solve_lower_transpose(&l, &solve_lower(&l, &sv));
+        // Verify v ≈ Sᵀ f.
+        let recon = s.t_matvec(&f);
+        let vnorm = crate::linalg::mat::norm2(v).max(f64::MIN_POSITIVE);
+        let err: f64 = v
+            .iter()
+            .zip(&recon)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        if err > tol * vnorm {
+            return Err(SolveError::BadInput(format!(
+                "v is not in rowspace(S): relative reconstruction error {:.3e} — the RVB method \
+                 requires least-squares structure v = Sᵀf (paper §3)",
+                err / vnorm
+            )));
+        }
+        Ok(f)
+    }
+}
+
+fn frob2(s: &Mat) -> f64 {
+    let f = s.fro_norm();
+    f * f
+}
+
+impl DampedSolver for RvbSolver {
+    fn name(&self) -> &'static str {
+        "rvb"
+    }
+
+    /// General-v entry point: recovers `f` (rejecting v ∉ rowspace(S)),
+    /// then applies the least-squares identity.
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        let f = self.recover_f(s, v, 1e-6)?;
+        self.solve_ls(s, &f, lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::CholSolver;
+
+    /// Appendix B, executable: x_rvb == x_chol when v = Sᵀf.
+    #[test]
+    fn appendix_b_equivalence() {
+        let mut rng = Rng::seed_from(160);
+        for &(n, m, lambda) in &[(3usize, 12usize, 0.5f64), (10, 80, 1e-2), (24, 300, 1e-4)] {
+            let s = Mat::randn(n, m, &mut rng);
+            let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let v = s.t_matvec(&f);
+            let x_rvb = RvbSolver::default().solve_ls(&s, &f, lambda).unwrap();
+            let x_chol = CholSolver::default().solve(&s, &v, lambda).unwrap();
+            let scale = crate::linalg::mat::norm2(&x_chol).max(1.0);
+            for (a, b) in x_rvb.iter().zip(&x_chol) {
+                assert!(
+                    (a - b).abs() < 1e-9 * scale,
+                    "Appendix-B equivalence broken at ({n},{m},λ={lambda})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_v_outside_rowspace() {
+        // Random v with m ≫ n is almost surely not Sᵀf for any f — the
+        // limitation that motivates Algorithm 1's generality.
+        let mut rng = Rng::seed_from(161);
+        let s = Mat::randn(4, 40, &mut rng);
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        match RvbSolver::default().solve(&s, &v, 0.1) {
+            Err(SolveError::BadInput(msg)) => assert!(msg.contains("rowspace")),
+            other => panic!("expected rowspace rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn accepts_v_inside_rowspace_via_general_entry() {
+        let mut rng = Rng::seed_from(162);
+        let s = Mat::randn(6, 50, &mut rng);
+        let f: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let v = s.t_matvec(&f);
+        let x = RvbSolver::default().solve(&s, &v, 0.05).unwrap();
+        let x_ref = CholSolver::default().solve(&s, &v, 0.05).unwrap();
+        for (a, b) in x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Exact ground-state oracle for small TFIM chains.
+//!
+//! Builds nothing dense: the Hamiltonian is applied matrix-free over the
+//! 2ᴺ computational basis (σᶻσᶻ diagonal + N single-flip terms), and the
+//! ground state is found by power iteration on the spectrally shifted
+//! operator `σI − H` (σ an upper bound on ‖H‖), which converges to the
+//! lowest eigenvector. Used to validate the SR example's converged energy.
+
+use super::ising::IsingChain;
+
+/// Apply H to a state vector over the 2ᴺ basis (index bit b = spin b up).
+fn apply_h(chain: &IsingChain, psi: &[f64], out: &mut [f64]) {
+    let n = chain.n;
+    let dim = 1usize << n;
+    assert_eq!(psi.len(), dim);
+    for (state, o) in out.iter_mut().enumerate() {
+        // Diagonal σᶻσᶻ term.
+        let mut diag = 0.0;
+        for i in 0..n {
+            let jn = (i + 1) % n;
+            let si = if state >> i & 1 == 1 { 1.0 } else { -1.0 };
+            let sj = if state >> jn & 1 == 1 { 1.0 } else { -1.0 };
+            diag -= chain.j * si * sj;
+        }
+        let mut acc = diag * psi[state];
+        // Off-diagonal σˣ flips.
+        for i in 0..n {
+            acc -= chain.h * psi[state ^ (1 << i)];
+        }
+        *o = acc;
+    }
+}
+
+/// Ground-state energy by shifted power iteration. `N ≤ 20` is practical;
+/// tolerance is on the Rayleigh-quotient increment.
+pub fn ground_state_energy(chain: &IsingChain, max_iters: usize, tol: f64) -> f64 {
+    let n = chain.n;
+    let dim = 1usize << n;
+    // Shift: ‖H‖₁ ≤ J·n + h·n.
+    let sigma = (chain.j.abs() + chain.h.abs()) * n as f64 + 1.0;
+    // Deterministic pseudo-random start with nonzero overlap.
+    let mut psi: Vec<f64> = (0..dim)
+        .map(|i| ((i as f64 * 0.7548776662466927 + 0.1).fract()) - 0.5 + 1e-3)
+        .collect();
+    normalize(&mut psi);
+    let mut hpsi = vec![0.0; dim];
+    let mut energy = 0.0;
+    for it in 0..max_iters {
+        apply_h(chain, &psi, &mut hpsi);
+        // Rayleigh quotient.
+        let e: f64 = psi.iter().zip(&hpsi).map(|(a, b)| a * b).sum();
+        if it > 0 && (e - energy).abs() < tol {
+            return e;
+        }
+        energy = e;
+        // psi ← normalize(σ·psi − H·psi)
+        for i in 0..dim {
+            psi[i] = sigma * psi[i] - hpsi[i];
+        }
+        normalize(&mut psi);
+    }
+    energy
+}
+
+fn normalize(v: &mut [f64]) {
+    let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    for x in v {
+        *x /= norm;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_site_closed_form() {
+        // N=2 periodic: bonds double (0-1 twice) ⇒ H = −2J σᶻσᶻ − h(σˣ₁+σˣ₂).
+        // Ground energy = −√(4J² + 4h²) for J=h=1: −2√2.
+        let chain = IsingChain::new(2, 1.0, 1.0);
+        let e = ground_state_energy(&chain, 20_000, 1e-12);
+        assert!((e + 2.0 * 2f64.sqrt()).abs() < 1e-8, "e = {e}");
+    }
+
+    #[test]
+    fn classical_limit() {
+        // h = 0: ground state all-aligned, E = −J·N.
+        let chain = IsingChain::new(6, 1.0, 0.0);
+        let e = ground_state_energy(&chain, 20_000, 1e-12);
+        assert!((e + 6.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn free_spin_limit() {
+        // J = 0: each spin independently in the x-field, E = −h·N.
+        let chain = IsingChain::new(5, 0.0, 1.5);
+        let e = ground_state_energy(&chain, 20_000, 1e-12);
+        assert!((e + 7.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn critical_point_matches_finite_size_exact() {
+        // N=8, J=h=1: exact via Jordan–Wigner,
+        // E = −Σ_k Λ(k)/… ; we cross-check against the known finite-size
+        // value E₈ ≈ −10.2516617910 (antiperiodic fermion sector).
+        let chain = IsingChain::new(8, 1.0, 1.0);
+        let e = ground_state_energy(&chain, 60_000, 1e-13);
+        assert!((e + 10.2516617910).abs() < 1e-6, "e = {e}");
+    }
+
+    #[test]
+    fn energy_below_thermodynamic_bound_times_n() {
+        // Finite ring at criticality: per-site energy below the
+        // thermodynamic value (finite-size correction is negative).
+        let chain = IsingChain::new(10, 1.0, 1.0);
+        let e = ground_state_energy(&chain, 60_000, 1e-12);
+        let per_site = e / 10.0;
+        let thermo = chain.thermodynamic_energy_per_site();
+        assert!(per_site < thermo + 1e-6, "{per_site} vs {thermo}");
+    }
+}

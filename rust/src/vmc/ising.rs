@@ -1,0 +1,101 @@
+//! Transverse-field Ising chain:
+//! `H = −J Σ_i σᶻ_i σᶻ_{i+1} − h Σ_i σˣ_i` (periodic boundary).
+//!
+//! σᶻ is diagonal in the computational basis; σˣ flips one spin, so the
+//! local energy of configuration `s` under wavefunction ψ is
+//!
+//! ```text
+//! E_loc(s) = −J Σ_i s_i s_{i+1} − h Σ_i ψ(flip_i s)/ψ(s)
+//! ```
+
+use crate::linalg::c64;
+
+/// TFIM on a ring of `n` spins.
+#[derive(Clone, Debug)]
+pub struct IsingChain {
+    pub n: usize,
+    pub j: f64,
+    pub h: f64,
+}
+
+impl IsingChain {
+    pub fn new(n: usize, j: f64, h: f64) -> Self {
+        assert!(n >= 2);
+        IsingChain { n, j, h }
+    }
+
+    /// Diagonal (σᶻσᶻ) part of the energy for spins ∈ {−1, +1}.
+    pub fn diagonal_energy(&self, spins: &[i8]) -> f64 {
+        assert_eq!(spins.len(), self.n);
+        let mut e = 0.0;
+        for i in 0..self.n {
+            let jn = (i + 1) % self.n;
+            e -= self.j * f64::from(spins[i]) * f64::from(spins[jn]);
+        }
+        e
+    }
+
+    /// Local energy given the wavefunction's amplitude ratios
+    /// `ratios[i] = ψ(flip_i s)/ψ(s)`.
+    pub fn local_energy(&self, spins: &[i8], ratios: &[c64]) -> c64 {
+        assert_eq!(ratios.len(), self.n);
+        let mut e = c64::from_re(self.diagonal_energy(spins));
+        for r in ratios {
+            e -= *r * self.h;
+        }
+        e
+    }
+
+    /// Exact ground-state energy per site in the thermodynamic limit
+    /// (Pfeuty 1970): `e₀ = −(1/2π)∫ Λ(k) dk` with
+    /// `Λ(k) = 2√(J² + h² − 2Jh·cos k)`. Used as a sanity anchor for
+    /// large chains where exact diagonalization is unavailable.
+    pub fn thermodynamic_energy_per_site(&self) -> f64 {
+        let steps = 20_000;
+        let mut acc = 0.0;
+        for i in 0..steps {
+            let k = std::f64::consts::PI * (2.0 * (i as f64 + 0.5) / steps as f64 - 1.0);
+            let lam =
+                2.0 * (self.j * self.j + self.h * self.h - 2.0 * self.j * self.h * k.cos()).sqrt();
+            acc += lam;
+        }
+        -acc / steps as f64 / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_energy_ferromagnet() {
+        let chain = IsingChain::new(4, 1.0, 0.0);
+        // All-up: every bond aligned, E = −J·n.
+        assert_eq!(chain.diagonal_energy(&[1, 1, 1, 1]), -4.0);
+        // Néel (period 2): every bond anti-aligned, E = +J·n.
+        assert_eq!(chain.diagonal_energy(&[1, -1, 1, -1]), 4.0);
+    }
+
+    #[test]
+    fn local_energy_combines_offdiagonal() {
+        let chain = IsingChain::new(3, 1.0, 0.5);
+        let ratios = vec![c64::from_re(0.2); 3];
+        let e = chain.local_energy(&[1, 1, 1], &ratios);
+        // diag = −3, offdiag = −0.5·(0.2·3) = −0.3
+        assert!((e.re + 3.3).abs() < 1e-12);
+        assert!(e.im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn pfeuty_known_points() {
+        // h = J (critical): e₀ = −4/π per site.
+        let crit = IsingChain::new(10, 1.0, 1.0);
+        assert!((crit.thermodynamic_energy_per_site() + 4.0 / std::f64::consts::PI).abs() < 1e-4);
+        // h = 0: classical ferromagnet, e₀ = −J.
+        let classical = IsingChain::new(10, 1.0, 0.0);
+        assert!((classical.thermodynamic_energy_per_site() + 1.0).abs() < 1e-6);
+        // J = 0: free spins in x-field, e₀ = −h.
+        let free = IsingChain::new(10, 0.0, 2.0);
+        assert!((free.thermodynamic_energy_per_site() + 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,30 @@
+//! Variational quantum Monte Carlo substrate — the paper's *stochastic
+//! reconfiguration* application domain (§1, §3).
+//!
+//! The paper's production context is neural-network quantum states
+//! optimized by SR, where the score matrix is the centered log-derivative
+//! of the wavefunction, `S = (O − Ō)/√n`, complex in general. We build the
+//! full pipeline from scratch:
+//!
+//! * [`ising`] — transverse-field Ising chain Hamiltonian + local energy;
+//! * [`rbm`] — complex restricted-Boltzmann-machine wavefunction with
+//!   analytic log-derivatives (the `O` matrix);
+//! * [`sampler`] — Metropolis–Hastings |ψ|² sampler with O(1) ratio
+//!   updates through the RBM's hidden-angle cache;
+//! * [`exact`] — exact ground-state oracle (power iteration on the shifted
+//!   sparse Hamiltonian) for chains up to ~16 sites;
+//! * [`sr`] — the SR optimization driver wiring the above into
+//!   Algorithm 1's complex variants
+//!   ([`crate::solver::solve_sr_complex`] / [`solve_sr_real_part`]).
+
+pub mod exact;
+pub mod ising;
+pub mod rbm;
+pub mod sampler;
+pub mod sr;
+
+pub use exact::ground_state_energy;
+pub use ising::IsingChain;
+pub use rbm::Rbm;
+pub use sampler::MetropolisSampler;
+pub use sr::{SrDriver, SrVariant};

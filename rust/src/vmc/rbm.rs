@@ -1,0 +1,232 @@
+//! Complex RBM wavefunction (Carleo–Troyer neural quantum state).
+//!
+//! ```text
+//! log ψ(s) = Σ_j a_j s_j + Σ_k log cosh(θ_k(s)),   θ_k = b_k + Σ_j W_kj s_j
+//! ```
+//!
+//! with complex parameters `a ∈ ℂᴺ`, `b ∈ ℂᴹ`, `W ∈ ℂᴹˣᴺ` — the paper's
+//! complex-S case. Log-derivatives (one row of the `O` matrix):
+//!
+//! ```text
+//! O_a_j = s_j,   O_b_k = tanh θ_k,   O_W_kj = tanh(θ_k)·s_j
+//! ```
+//!
+//! The hidden angles θ are cached and updated in O(M) per single-spin
+//! flip, giving O(M) Metropolis ratios instead of O(MN).
+
+use crate::data::rng::Rng;
+use crate::linalg::c64;
+
+/// Complex RBM over `n_visible` spins with `n_hidden` hidden units.
+#[derive(Clone, Debug)]
+pub struct Rbm {
+    pub n_visible: usize,
+    pub n_hidden: usize,
+    /// Visible biases (length N).
+    pub a: Vec<c64>,
+    /// Hidden biases (length M).
+    pub b: Vec<c64>,
+    /// Couplings, row-major M×N.
+    pub w: Vec<c64>,
+}
+
+impl Rbm {
+    /// Small random complex init (scale keeps tanh in its linear regime
+    /// at the start, standard for SR warm-up).
+    pub fn init(n_visible: usize, n_hidden: usize, scale: f64, rng: &mut Rng) -> Self {
+        let cplx = |r: &mut Rng| c64::new(scale * r.normal(), scale * r.normal());
+        Rbm {
+            n_visible,
+            n_hidden,
+            a: (0..n_visible).map(|_| cplx(rng)).collect(),
+            b: (0..n_hidden).map(|_| cplx(rng)).collect(),
+            w: (0..n_hidden * n_visible).map(|_| cplx(rng)).collect(),
+        }
+    }
+
+    /// Total complex parameter count N + M + M·N.
+    pub fn num_params(&self) -> usize {
+        self.n_visible + self.n_hidden + self.n_hidden * self.n_visible
+    }
+
+    /// Hidden angles θ_k(s).
+    pub fn angles(&self, spins: &[i8]) -> Vec<c64> {
+        assert_eq!(spins.len(), self.n_visible);
+        let mut theta = self.b.clone();
+        for k in 0..self.n_hidden {
+            let row = &self.w[k * self.n_visible..(k + 1) * self.n_visible];
+            let mut acc = c64::ZERO;
+            for j in 0..self.n_visible {
+                acc += row[j] * f64::from(spins[j]);
+            }
+            theta[k] += acc;
+        }
+        theta
+    }
+
+    /// log ψ(s) given precomputed angles.
+    pub fn log_psi_from_angles(&self, spins: &[i8], theta: &[c64]) -> c64 {
+        let mut lp = c64::ZERO;
+        for j in 0..self.n_visible {
+            lp += self.a[j] * f64::from(spins[j]);
+        }
+        for t in theta {
+            lp += t.cosh().ln();
+        }
+        lp
+    }
+
+    /// log ψ(s).
+    pub fn log_psi(&self, spins: &[i8]) -> c64 {
+        let theta = self.angles(spins);
+        self.log_psi_from_angles(spins, &theta)
+    }
+
+    /// Amplitude ratio ψ(flip_i s)/ψ(s), O(M) using cached angles.
+    pub fn flip_ratio(&self, spins: &[i8], theta: &[c64], i: usize) -> c64 {
+        let si = f64::from(spins[i]);
+        // Δlog = −2 a_i s_i + Σ_k [log cosh(θ_k − 2 W_ki s_i) − log cosh θ_k]
+        let mut dlog = -(self.a[i] * (2.0 * si));
+        for k in 0..self.n_hidden {
+            let wki = self.w[k * self.n_visible + i];
+            let new_t = theta[k] - wki * (2.0 * si);
+            dlog += new_t.cosh().ln() - theta[k].cosh().ln();
+        }
+        dlog.exp()
+    }
+
+    /// Update cached angles after flipping spin `i` (call *before*
+    /// mutating `spins[i]`).
+    pub fn update_angles(&self, spins: &[i8], theta: &mut [c64], i: usize) {
+        let si = f64::from(spins[i]);
+        for k in 0..self.n_hidden {
+            theta[k] -= self.w[k * self.n_visible + i] * (2.0 * si);
+        }
+    }
+
+    /// One row of the `O` matrix: ∂ log ψ/∂θ_p for every complex parameter,
+    /// ordered `[a | b | W (row-major)]`.
+    pub fn log_derivatives(&self, spins: &[i8], theta: &[c64], out: &mut [c64]) {
+        assert_eq!(out.len(), self.num_params());
+        let n = self.n_visible;
+        let mh = self.n_hidden;
+        for j in 0..n {
+            out[j] = c64::from_re(f64::from(spins[j]));
+        }
+        let mut tanh_t = vec![c64::ZERO; mh];
+        for k in 0..mh {
+            tanh_t[k] = theta[k].tanh();
+            out[n + k] = tanh_t[k];
+        }
+        for k in 0..mh {
+            for j in 0..n {
+                out[n + mh + k * n + j] = tanh_t[k] * f64::from(spins[j]);
+            }
+        }
+    }
+
+    /// Apply a complex parameter update `θ ← θ − δ` in the `[a|b|W]` layout.
+    pub fn apply_update(&mut self, delta: &[c64]) {
+        assert_eq!(delta.len(), self.num_params());
+        let n = self.n_visible;
+        let mh = self.n_hidden;
+        for j in 0..n {
+            self.a[j] -= delta[j];
+        }
+        for k in 0..mh {
+            self.b[k] -= delta[n + k];
+        }
+        for i in 0..mh * n {
+            self.w[i] -= delta[n + mh + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spins(bits: &[i8]) -> Vec<i8> {
+        bits.to_vec()
+    }
+
+    #[test]
+    fn flip_ratio_matches_direct_recomputation() {
+        let mut rng = Rng::seed_from(300);
+        let rbm = Rbm::init(6, 8, 0.3, &mut rng);
+        let s = spins(&[1, -1, 1, 1, -1, -1]);
+        let theta = rbm.angles(&s);
+        for i in 0..6 {
+            let fast = rbm.flip_ratio(&s, &theta, i);
+            let mut s2 = s.clone();
+            s2[i] = -s2[i];
+            let direct = (rbm.log_psi(&s2) - rbm.log_psi(&s)).exp();
+            assert!((fast - direct).abs() < 1e-10, "site {i}");
+        }
+    }
+
+    #[test]
+    fn angle_update_consistent() {
+        let mut rng = Rng::seed_from(301);
+        let rbm = Rbm::init(5, 7, 0.2, &mut rng);
+        let mut s = spins(&[1, 1, -1, 1, -1]);
+        let mut theta = rbm.angles(&s);
+        rbm.update_angles(&s, &mut theta, 2);
+        s[2] = -s[2];
+        let fresh = rbm.angles(&s);
+        for (a, b) in theta.iter().zip(&fresh) {
+            assert!((*a - *b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_derivatives_match_finite_differences() {
+        let mut rng = Rng::seed_from(302);
+        let mut rbm = Rbm::init(4, 3, 0.25, &mut rng);
+        let s = spins(&[1, -1, -1, 1]);
+        let theta = rbm.angles(&s);
+        let mut o = vec![c64::ZERO; rbm.num_params()];
+        rbm.log_derivatives(&s, &theta, &mut o);
+        let eps = 1e-6;
+        // Perturb each parameter's real part: d(log ψ)/d(Re θ_p) = O_p
+        // (holomorphic), check a sample of indices.
+        for p in [0usize, 3, 4, 6, 7, 10, 18] {
+            let base = rbm.log_psi(&s);
+            perturb(&mut rbm, p, c64::from_re(eps));
+            let plus = rbm.log_psi(&s);
+            perturb(&mut rbm, p, c64::from_re(-eps));
+            let fd = (plus - base) / eps;
+            assert!((fd - o[p]).abs() < 1e-5, "param {p}: fd {fd:?} vs {:?}", o[p]);
+        }
+    }
+
+    fn perturb(rbm: &mut Rbm, p: usize, dz: c64) {
+        let n = rbm.n_visible;
+        let mh = rbm.n_hidden;
+        if p < n {
+            rbm.a[p] += dz;
+        } else if p < n + mh {
+            rbm.b[p - n] += dz;
+        } else {
+            rbm.w[p - n - mh] += dz;
+        }
+    }
+
+    #[test]
+    fn apply_update_roundtrip() {
+        let mut rng = Rng::seed_from(303);
+        let mut rbm = Rbm::init(3, 2, 0.1, &mut rng);
+        let before = rbm.clone();
+        let delta: Vec<c64> =
+            (0..rbm.num_params()).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+        rbm.apply_update(&delta);
+        let neg: Vec<c64> = delta.iter().map(|d| -*d).collect();
+        rbm.apply_update(&neg);
+        for (x, y) in rbm.a.iter().zip(&before.a) {
+            assert!((*x - *y).abs() < 1e-12);
+        }
+        for (x, y) in rbm.w.iter().zip(&before.w) {
+            assert!((*x - *y).abs() < 1e-12);
+        }
+    }
+}

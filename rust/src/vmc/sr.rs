@@ -1,0 +1,204 @@
+//! Stochastic-reconfiguration driver: ties sampler + RBM + Hamiltonian to
+//! the paper's complex Algorithm-1 variants.
+//!
+//! Per iteration:
+//! 1. draw n configurations from |ψ|² (Metropolis);
+//! 2. build the raw log-derivative matrix `O` (n×p) and local energies;
+//! 3. center: `S = (O − Ō)/√n`, `e = (E_loc − Ē)/√n`;
+//! 4. force `v = S†e` (the quantum geometric-tensor gradient);
+//! 5. solve `(S†S + λI) δ = v` with [`solve_sr_complex`] (full-complex
+//!    Fisher) or the real-part variant via `Concat[ℜS, ℑS]` (§3);
+//! 6. `θ ← θ − η·δ`.
+
+use super::ising::IsingChain;
+use super::rbm::Rbm;
+use super::sampler::MetropolisSampler;
+use crate::data::rng::Rng;
+use crate::linalg::complex::{c64, CMat};
+use crate::ngd::DampingSchedule;
+use crate::solver::{center_scores, solve_sr_complex, solve_sr_real_part, SolveError};
+
+/// Which Fisher-matrix convention to use (§3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SrVariant {
+    /// `F = S†S` — every transpose becomes a Hermitian conjugate.
+    FullComplex,
+    /// `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]` — "more commonly employed".
+    RealPart,
+}
+
+/// SR optimization driver.
+pub struct SrDriver {
+    pub chain: IsingChain,
+    pub n_samples: usize,
+    /// Sweeps between retained samples (decorrelation).
+    pub thin: usize,
+    pub damping: DampingSchedule,
+    pub learning_rate: f64,
+    pub variant: SrVariant,
+    last_energy: Option<f64>,
+}
+
+/// Per-iteration report.
+#[derive(Debug, Clone)]
+pub struct SrStepReport {
+    pub energy: f64,
+    pub energy_per_site: f64,
+    pub energy_std: f64,
+    pub update_norm: f64,
+    pub lambda: f64,
+    pub acceptance: f64,
+}
+
+impl SrDriver {
+    pub fn new(chain: IsingChain, n_samples: usize, learning_rate: f64, lambda: f64) -> Self {
+        SrDriver {
+            chain,
+            n_samples,
+            thin: 2,
+            damping: DampingSchedule::ExponentialDecay { initial: lambda, decay: 0.98, min: 1e-4 },
+            learning_rate,
+            variant: SrVariant::FullComplex,
+            last_energy: None,
+        }
+    }
+
+    pub fn with_variant(mut self, v: SrVariant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    /// One SR iteration: sample, estimate, solve, update.
+    pub fn step(
+        &mut self,
+        rbm: &mut Rbm,
+        sampler: &mut MetropolisSampler,
+        rng: &mut Rng,
+    ) -> Result<SrStepReport, SolveError> {
+        let n = self.n_samples;
+        let p = rbm.num_params();
+        let sites = self.chain.n;
+
+        let mut o = CMat::zeros(n, p);
+        let mut e_loc = vec![c64::ZERO; n];
+        let mut ratios = vec![c64::ZERO; sites];
+        let acc0 = sampler.accepted;
+        let prop0 = sampler.proposed;
+        for i in 0..n {
+            for _ in 0..self.thin {
+                sampler.sweep(rbm, rng);
+            }
+            let theta = sampler.angles().to_vec();
+            rbm.log_derivatives(&sampler.spins, &theta, o.row_mut(i));
+            for (site, r) in ratios.iter_mut().enumerate() {
+                *r = rbm.flip_ratio(&sampler.spins, &theta, site);
+            }
+            e_loc[i] = self.chain.local_energy(&sampler.spins, &ratios);
+        }
+        let acceptance = if sampler.proposed > prop0 {
+            (sampler.accepted - acc0) as f64 / (sampler.proposed - prop0) as f64
+        } else {
+            0.0
+        };
+
+        // Energy statistics (E_loc of a Hermitian H has real mean; the
+        // imaginary part is a pure Monte-Carlo fluctuation).
+        let mean_e = e_loc.iter().fold(c64::ZERO, |a, &b| a + b) / n as f64;
+        let var_e = e_loc.iter().map(|e| (*e - mean_e).norm_sqr()).sum::<f64>() / n as f64;
+
+        // Centered score matrix and force.
+        let s = center_scores(&o);
+        let inv_sqrt_n = 1.0 / (n as f64).sqrt();
+        let e_centered: Vec<c64> = e_loc.iter().map(|e| (*e - mean_e) * inv_sqrt_n).collect();
+        let force = s.dagger_matvec(&e_centered); // v = S† e  (length p)
+
+        let improved = self.last_energy.map(|prev| mean_e.re < prev).unwrap_or(true);
+        self.damping.advance(improved);
+        self.last_energy = Some(mean_e.re);
+        let lambda = self.damping.lambda();
+
+        // Solve and update.
+        let update_norm;
+        match self.variant {
+            SrVariant::FullComplex => {
+                let delta = solve_sr_complex(&s, &force, lambda)?;
+                update_norm =
+                    delta.iter().map(|d| d.norm_sqr()).sum::<f64>().sqrt() * self.learning_rate;
+                let scaled: Vec<c64> = delta.iter().map(|d| *d * self.learning_rate).collect();
+                rbm.apply_update(&scaled);
+            }
+            SrVariant::RealPart => {
+                let force_re: Vec<f64> = force.iter().map(|f| f.re).collect();
+                let delta = solve_sr_real_part(&s, &force_re, lambda)?;
+                update_norm =
+                    delta.iter().map(|d| d * d).sum::<f64>().sqrt() * self.learning_rate;
+                let scaled: Vec<c64> =
+                    delta.iter().map(|d| c64::from_re(d * self.learning_rate)).collect();
+                rbm.apply_update(&scaled);
+            }
+        }
+
+        Ok(SrStepReport {
+            energy: mean_e.re,
+            energy_per_site: mean_e.re / sites as f64,
+            energy_std: (var_e / n as f64).sqrt(),
+            update_norm,
+            lambda,
+            acceptance,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vmc::exact::ground_state_energy;
+
+    fn run_sr(variant: SrVariant, iters: usize, seed: u64) -> (f64, f64) {
+        let sites = 6;
+        let chain = IsingChain::new(sites, 1.0, 1.0);
+        let exact = ground_state_energy(&chain, 40_000, 1e-12);
+        let mut rng = Rng::seed_from(seed);
+        let mut rbm = Rbm::init(sites, 2 * sites, 0.05, &mut rng);
+        let mut sampler = MetropolisSampler::new(&rbm, &mut rng);
+        for _ in 0..50 {
+            sampler.sweep(&rbm, &mut rng); // burn-in
+        }
+        let mut driver = SrDriver::new(chain, 300, 0.08, 0.05).with_variant(variant);
+        let mut last = f64::INFINITY;
+        for _ in 0..iters {
+            let rep = driver.step(&mut rbm, &mut sampler, &mut rng).unwrap();
+            last = rep.energy;
+        }
+        (last, exact)
+    }
+
+    #[test]
+    fn full_complex_sr_converges_to_ground_state() {
+        let (energy, exact) = run_sr(SrVariant::FullComplex, 120, 320);
+        let rel = (energy - exact).abs() / exact.abs();
+        assert!(rel < 0.03, "energy {energy:.4} vs exact {exact:.4} (rel {rel:.4})");
+    }
+
+    #[test]
+    fn real_part_sr_also_converges() {
+        let (energy, exact) = run_sr(SrVariant::RealPart, 150, 321);
+        let rel = (energy - exact).abs() / exact.abs();
+        assert!(rel < 0.05, "energy {energy:.4} vs exact {exact:.4} (rel {rel:.4})");
+    }
+
+    #[test]
+    fn report_fields_sane() {
+        let chain = IsingChain::new(4, 1.0, 0.8);
+        let mut rng = Rng::seed_from(322);
+        let mut rbm = Rbm::init(4, 8, 0.05, &mut rng);
+        let mut sampler = MetropolisSampler::new(&rbm, &mut rng);
+        let mut driver = SrDriver::new(chain, 100, 0.05, 0.02);
+        let rep = driver.step(&mut rbm, &mut sampler, &mut rng).unwrap();
+        assert!(rep.energy.is_finite());
+        assert!(rep.energy_std >= 0.0);
+        assert!(rep.update_norm > 0.0);
+        assert!(rep.acceptance > 0.0 && rep.acceptance <= 1.0);
+        assert_eq!(rep.lambda, 0.02 * 0.98);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests across the coordinator stack: distributed solves
+//! under stress topologies, fault injection, backpressure under load,
+//! and full-config trainer wiring.
+
+use dngd::config::Config;
+use dngd::coordinator::pool::{Job, WorkerPool};
+use dngd::coordinator::trainer::{OptimizerChoice, TRAIN_LOG_COLUMNS};
+use dngd::coordinator::{ShardPlan, ShardedCholSolver, Trainer};
+use dngd::data::rng::Rng;
+use dngd::linalg::Mat;
+use dngd::metrics::MetricsLog;
+use dngd::solver::{residual_norm, CholSolver, DampedSolver};
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+#[test]
+fn distributed_solve_with_stragglers_still_correct() {
+    let mut rng = Rng::seed_from(600);
+    let solver = ShardedCholSolver::new(4, 2);
+    let s = Mat::randn(12, 64, &mut rng);
+    let v: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+    let x = solver.solve_distributed(&s, &v, 0.1).unwrap();
+    assert!(residual_norm(&s, &x, &v, 0.1) < 1e-8);
+    let serial = CholSolver::default().solve(&s, &v, 0.1).unwrap();
+    for (a, b) in x.iter().zip(&serial) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn pool_survives_many_small_jobs_under_backpressure() {
+    let mut rng = Rng::seed_from(601);
+    let pool = WorkerPool::spawn(3, 1); // minimal queue: max pressure
+    let shard = Mat::randn(6, 10, &mut rng);
+    for w in 0..3 {
+        pool.send(w, Job::SetShard(shard.clone())).unwrap();
+        pool.send(w, Job::Stall(Duration::from_millis(1))).unwrap();
+    }
+    let (tx, rx) = channel();
+    let expect = shard.matvec(&vec![1.0; 10]);
+    for _round in 0..50 {
+        for w in 0..3 {
+            pool.send(w, Job::Matvec { v_k: vec![1.0; 10], reply: tx.clone() }).unwrap();
+        }
+    }
+    drop(tx);
+    let mut count = 0;
+    while let Ok((_, u)) = rx.recv() {
+        for (a, b) in u.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        count += 1;
+    }
+    assert_eq!(count, 150);
+    let processed = pool.shutdown();
+    // Every worker processed SetShard + Stall + 50 matvecs + Shutdown.
+    assert!(processed.iter().all(|&c| c == 53), "{processed:?}");
+}
+
+#[test]
+fn sharded_solver_shared_across_leader_threads() {
+    let mut rng = Rng::seed_from(602);
+    let solver = std::sync::Arc::new(ShardedCholSolver::new(4, 4));
+    let s = std::sync::Arc::new(Mat::randn(10, 80, &mut rng));
+    let v: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+    let serial = CholSolver::default().solve(&s, &v, 0.3).unwrap();
+    let mut handles = vec![];
+    for _ in 0..4 {
+        let solver = solver.clone();
+        let s = s.clone();
+        let v = v.clone();
+        let serial = serial.clone();
+        handles.push(std::thread::spawn(move || {
+            let x = solver.solve_distributed(&s, &v, 0.3).unwrap();
+            for (a, b) in x.iter().zip(&serial) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn shard_plan_owner_round_trips_with_slicing() {
+    let mut rng = Rng::seed_from(603);
+    let s = Mat::randn(5, 57, &mut rng);
+    let plan = ShardPlan::balanced(57, 7);
+    let mut rebuilt: Option<Mat> = None;
+    for &(c0, c1) in &plan.ranges {
+        let shard = s.slice_cols(c0, c1);
+        rebuilt = Some(match rebuilt {
+            None => shard,
+            Some(acc) => Mat::hstack(&acc, &shard),
+        });
+    }
+    assert_eq!(rebuilt.unwrap(), s);
+}
+
+#[test]
+fn trainer_from_config_file_and_overrides() {
+    let cfg = Config::from_toml_str(
+        r#"
+[model]
+dim = 8
+heads = 2
+layers = 1
+context = 8
+mlp_hidden = 16
+
+[train]
+steps = 3
+batch_size = 8
+corpus_len = 3000
+
+[coordinator]
+workers = 2
+use_artifacts = false
+"#,
+        &["train.steps=2".into()],
+    )
+    .unwrap();
+    assert_eq!(cfg.train.steps, 2); // override wins
+    let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    let report = trainer.run(&mut log).unwrap();
+    assert_eq!(report.steps, 2);
+    assert!(report.final_loss.is_finite());
+}
+
+#[test]
+fn adaptive_damping_reacts_to_loss() {
+    let cfg = Config::from_toml_str(
+        r#"
+[model]
+dim = 8
+heads = 2
+layers = 1
+context = 8
+mlp_hidden = 16
+
+[train]
+steps = 6
+batch_size = 8
+corpus_len = 3000
+learning_rate = 0.3
+
+[solver]
+lambda = 0.1
+adaptive = true
+
+[coordinator]
+workers = 1
+use_artifacts = false
+"#,
+        &[],
+    )
+    .unwrap();
+    let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    trainer.run(&mut log).unwrap();
+    let lambdas = log.column("lambda").unwrap();
+    assert!(lambdas.iter().any(|&l| (l - 0.1).abs() > 1e-12), "λ never adapted: {lambdas:?}");
+}

@@ -1,0 +1,123 @@
+//! End-to-end smoke of the full system at test scale: NGD training
+//! descends on real (synthetic-corpus) data through the complete
+//! coordinator path, SR converges toward the exact ground state, and
+//! checkpoint/resume works through the trainer.
+
+use dngd::config::Config;
+use dngd::coordinator::trainer::{OptimizerChoice, TRAIN_LOG_COLUMNS};
+use dngd::coordinator::Trainer;
+use dngd::data::rng::Rng;
+use dngd::metrics::MetricsLog;
+use dngd::ngd::DampingSchedule;
+use dngd::vmc::{ground_state_energy, IsingChain, MetropolisSampler, Rbm, SrDriver, SrVariant};
+
+fn small_train_cfg(extra: &[&str]) -> Config {
+    let mut overrides: Vec<String> = vec![
+        "model.dim=12".into(),
+        "model.heads=2".into(),
+        "model.layers=2".into(),
+        "model.context=12".into(),
+        "model.mlp_hidden=32".into(),
+        "train.steps=25".into(),
+        "train.batch_size=32".into(),
+        "train.corpus_len=20000".into(),
+        "train.learning_rate=0.5".into(),
+        "train.momentum=0.5".into(),
+        "solver.lambda=0.2".into(),
+        "solver.adaptive=true".into(),
+        "coordinator.workers=4".into(),
+        "coordinator.use_artifacts=false".into(),
+    ];
+    overrides.extend(extra.iter().map(|s| s.to_string()));
+    Config::load(None, &overrides).unwrap()
+}
+
+#[test]
+fn ngd_training_beats_uniform_by_a_wide_margin() {
+    let cfg = small_train_cfg(&[]);
+    let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let uniform = (trainer.tokenizer.vocab_size() as f64).ln();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    let report = trainer.run(&mut log).unwrap();
+    assert!(
+        report.final_loss < 0.8 * uniform,
+        "NGD failed to learn: {} vs uniform {uniform}",
+        report.final_loss
+    );
+    // The loss curve must be broadly decreasing.
+    let losses = log.column("loss").unwrap();
+    let q = losses.len() / 4;
+    let head: f64 = losses[..q].iter().sum::<f64>() / q as f64;
+    let tail: f64 = losses[losses.len() - q..].iter().sum::<f64>() / q as f64;
+    assert!(tail < head, "loss not decreasing: head {head} tail {tail}");
+}
+
+#[test]
+fn ngd_descends_faster_per_step_than_sgd_early() {
+    // The optimizer-quality motivation behind NGD (§1): per-step progress.
+    let cfg = small_train_cfg(&[]);
+    let mut ngd = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let mut ngd_log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    ngd.run(&mut ngd_log).unwrap();
+
+    let sgd_cfg = small_train_cfg(&["train.learning_rate=0.3", "train.momentum=0.9"]);
+    let mut sgd = Trainer::new(&sgd_cfg, OptimizerChoice::Sgd).unwrap();
+    let mut sgd_log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    sgd.run(&mut sgd_log).unwrap();
+
+    // Compare the mean over steps 8–12 (single-step comparisons are noisy).
+    let ngd_losses = ngd_log.column("loss").unwrap();
+    let sgd_losses = sgd_log.column("loss").unwrap();
+    let ngd_mid: f64 = ngd_losses[8..13].iter().sum::<f64>() / 5.0;
+    let sgd_mid: f64 = sgd_losses[8..13].iter().sum::<f64>() / 5.0;
+    assert!(
+        ngd_mid < sgd_mid,
+        "NGD not faster per-step around step 10: ngd {ngd_mid} vs sgd {sgd_mid}"
+    );
+}
+
+#[test]
+fn sr_energy_approaches_exact_ground_state() {
+    let sites = 4;
+    let chain = IsingChain::new(sites, 1.0, 1.0);
+    let exact = ground_state_energy(&chain, 40_000, 1e-12);
+    let mut rng = Rng::seed_from(700);
+    let mut rbm = Rbm::init(sites, 8, 0.05, &mut rng);
+    let mut sampler = MetropolisSampler::new(&rbm, &mut rng);
+    for _ in 0..50 {
+        sampler.sweep(&rbm, &mut rng);
+    }
+    let mut driver = SrDriver::new(chain, 200, 0.08, 0.05).with_variant(SrVariant::FullComplex);
+    driver.damping = DampingSchedule::ExponentialDecay { initial: 0.05, decay: 0.97, min: 1e-4 };
+    let mut last = f64::INFINITY;
+    for _ in 0..60 {
+        last = driver.step(&mut rbm, &mut sampler, &mut rng).unwrap().energy;
+    }
+    let rel = (last - exact).abs() / exact.abs();
+    assert!(rel < 0.05, "SR energy {last} vs exact {exact} (rel {rel})");
+}
+
+#[test]
+fn checkpoint_resume_continues_descent() {
+    let dir = std::env::temp_dir().join("dngd_e2e_resume");
+    let dir_s = dir.to_string_lossy().to_string();
+    let ckpt_override = format!("train.checkpoint_dir=\"{dir_s}\"");
+    let cfg = small_train_cfg(&[&ckpt_override, "train.checkpoint_every=25", "train.steps=25"]);
+    let mut first = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    let report1 = first.run(&mut log).unwrap();
+
+    // Fresh trainer, resume from the checkpoint: the first-step loss must
+    // be near the previous run's final loss, not the init loss.
+    let mut second = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    second.load_checkpoint(&dir.join("step_25.ckpt")).unwrap();
+    let mut log2 = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    let report2 = second.run(&mut log2).unwrap();
+    assert!(
+        report2.initial_loss < (report1.initial_loss + report1.final_loss) / 2.0,
+        "resume did not pick up trained params: {} vs init {}",
+        report2.initial_loss,
+        report1.initial_loss
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

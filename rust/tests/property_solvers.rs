@@ -1,0 +1,177 @@
+//! Randomized property tests over the whole solver surface (the in-tree
+//! proptest-style harness: deterministic seeds, wide random sweeps,
+//! shrink-free but fully reproducible — every failure prints its case).
+//!
+//! Invariants checked:
+//!  P1. Every solver satisfies the normal equations (backward error).
+//!  P2. All solvers agree pairwise on the same problem.
+//!  P3. Solutions are linear in v: solve(αv₁ + βv₂) = α·x₁ + β·x₂.
+//!  P4. Monotone damping: ‖x(λ)‖ is non-increasing in λ.
+//!  P5. λ → ∞ limit: x → v/λ (damping dominates).
+//!  P6. RVB equivalence on structured v, rejection on unstructured v.
+//!  P7. Complex SR reduces to real on real inputs; real-part variant
+//!      matches the stacked-real construction by definition and the
+//!      dense oracle by value.
+//!  P8. Sharded distributed solve == serial solve for random topologies.
+
+use dngd::coordinator::ShardedCholSolver;
+use dngd::data::rng::Rng;
+use dngd::linalg::complex::{c64, CMat};
+use dngd::linalg::Mat;
+use dngd::solver::{
+    make_solver, residual_norm, solve_sr_complex, CholSolver, DampedSolver, RvbSolver, SolverKind,
+};
+
+fn random_problem(rng: &mut Rng) -> (Mat, Vec<f64>, f64) {
+    let n = 1 + rng.below(20);
+    let m = n + rng.below(120);
+    let lambda = 10f64.powf(rng.uniform() * 4.0 - 3.0); // 1e-3 … 1e1
+    let s = Mat::randn(n, m, rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    (s, v, lambda)
+}
+
+#[test]
+fn p1_p2_backward_error_and_pairwise_agreement() {
+    let mut rng = Rng::seed_from(9001);
+    for case in 0..60 {
+        let (s, v, lambda) = random_problem(&mut rng);
+        let mut solutions: Vec<(&'static str, Vec<f64>)> = Vec::new();
+        for &kind in &[SolverKind::Chol, SolverKind::Eigh, SolverKind::Svda, SolverKind::Cg] {
+            let x = make_solver(kind)
+                .solve(&s, &v, lambda)
+                .unwrap_or_else(|e| panic!("case {case} {kind:?}: {e}"));
+            let fro = s.fro_norm();
+            let xnorm = x.iter().map(|a| a * a).sum::<f64>().sqrt();
+            let vnorm = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+            let r = residual_norm(&s, &x, &v, lambda);
+            let scale = (fro * fro + lambda) * xnorm + vnorm;
+            assert!(
+                r < 1e-8 * scale.max(1.0),
+                "case {case} {kind:?}: residual {r:.3e} scale {scale:.3e} (n={}, m={}, λ={lambda:.3e})",
+                s.rows(),
+                s.cols()
+            );
+            solutions.push((kind.as_str(), x));
+        }
+        let (ref_name, ref_x) = &solutions[0];
+        let ref_norm = ref_x.iter().map(|a| a * a).sum::<f64>().sqrt().max(1e-300);
+        for (name, x) in &solutions[1..] {
+            let diff = x
+                .iter()
+                .zip(ref_x.iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                diff < 1e-6 * ref_norm,
+                "case {case}: {name} vs {ref_name} differ by {diff:.3e} (rel)"
+            );
+        }
+    }
+}
+
+#[test]
+fn p3_linearity_in_v() {
+    let mut rng = Rng::seed_from(9002);
+    let solver = CholSolver::default();
+    for _ in 0..25 {
+        let (s, v1, lambda) = random_problem(&mut rng);
+        let m = s.cols();
+        let v2: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let (alpha, beta) = (rng.normal(), rng.normal());
+        let x1 = solver.solve(&s, &v1, lambda).unwrap();
+        let x2 = solver.solve(&s, &v2, lambda).unwrap();
+        let v12: Vec<f64> = v1.iter().zip(&v2).map(|(a, b)| alpha * a + beta * b).collect();
+        let x12 = solver.solve(&s, &v12, lambda).unwrap();
+        let scale = x12.iter().map(|a| a.abs()).fold(0.0f64, f64::max).max(1.0);
+        for j in 0..m {
+            let lin = alpha * x1[j] + beta * x2[j];
+            assert!((x12[j] - lin).abs() < 1e-8 * scale);
+        }
+    }
+}
+
+#[test]
+fn p4_p5_damping_monotonicity_and_limit() {
+    let mut rng = Rng::seed_from(9003);
+    let solver = CholSolver::default();
+    for _ in 0..20 {
+        let (s, v, _) = random_problem(&mut rng);
+        let mut prev_norm = f64::INFINITY;
+        for &lambda in &[1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0] {
+            let x = solver.solve(&s, &v, lambda).unwrap();
+            let norm = x.iter().map(|a| a * a).sum::<f64>().sqrt();
+            assert!(
+                norm <= prev_norm * (1.0 + 1e-9),
+                "‖x‖ must be non-increasing in λ: {norm} after {prev_norm} at λ={lambda}"
+            );
+            prev_norm = norm;
+        }
+        // λ → ∞: x ≈ v/λ.
+        let lambda = 1e9;
+        let x = solver.solve(&s, &v, lambda).unwrap();
+        for (xj, vj) in x.iter().zip(&v) {
+            assert!((xj - vj / lambda).abs() < 1e-12 * vj.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn p6_rvb_structured_vs_unstructured() {
+    let mut rng = Rng::seed_from(9004);
+    for _ in 0..20 {
+        let n = 2 + rng.below(10);
+        let m = n + 5 + rng.below(60);
+        let lambda = 0.05;
+        let s = Mat::randn(n, m, &mut rng);
+        let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v = s.t_matvec(&f);
+        let x_rvb = RvbSolver::default().solve_ls(&s, &f, lambda).unwrap();
+        let x_chol = CholSolver::default().solve(&s, &v, lambda).unwrap();
+        let scale = x_chol.iter().map(|a| a.abs()).fold(0.0f64, f64::max).max(1.0);
+        for (a, b) in x_rvb.iter().zip(&x_chol) {
+            assert!((a - b).abs() < 1e-8 * scale);
+        }
+        // Unstructured v must be rejected (m > n ⇒ a.s. not in rowspace).
+        let v_bad: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        assert!(RvbSolver::default().solve(&s, &v_bad, lambda).is_err());
+    }
+}
+
+#[test]
+fn p7_complex_reduces_to_real() {
+    let mut rng = Rng::seed_from(9005);
+    for _ in 0..15 {
+        let n = 2 + rng.below(8);
+        let m = n + rng.below(30);
+        let lambda = 0.1 + rng.uniform();
+        let sr = Mat::randn(n, m, &mut rng);
+        let sc = CMat::from_fn(n, m, |i, j| c64::from_re(sr[(i, j)]));
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let vc: Vec<c64> = v.iter().map(|&x| c64::from_re(x)).collect();
+        let xc = solve_sr_complex(&sc, &vc, lambda).unwrap();
+        let xr = CholSolver::default().solve(&sr, &v, lambda).unwrap();
+        for (a, b) in xc.iter().zip(&xr) {
+            assert!((a.re - b).abs() < 1e-8);
+            assert!(a.im.abs() < 1e-8);
+        }
+    }
+}
+
+#[test]
+fn p8_sharded_equals_serial_random_topologies() {
+    let mut rng = Rng::seed_from(9006);
+    for _ in 0..12 {
+        let (s, v, lambda) = random_problem(&mut rng);
+        let workers = 1 + rng.below(7);
+        let depth = 1 + rng.below(4);
+        let sharded = ShardedCholSolver::new(workers, depth);
+        let x_d = sharded.solve_distributed(&s, &v, lambda).unwrap();
+        let x_s = CholSolver::default().solve(&s, &v, lambda).unwrap();
+        let scale = x_s.iter().map(|a| a.abs()).fold(0.0f64, f64::max).max(1.0);
+        for (a, b) in x_d.iter().zip(&x_s) {
+            assert!((a - b).abs() < 1e-9 * scale, "workers={workers} depth={depth}");
+        }
+    }
+}

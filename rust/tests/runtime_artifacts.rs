@@ -1,0 +1,97 @@
+//! Integration: the Rust PJRT runtime executes the AOT artifacts that
+//! `python/compile/aot.py` lowered from the L2 JAX graphs (which inline
+//! the L1 Pallas kernels), and the numbers match the native Rust solver.
+//!
+//! These tests skip (with a notice) when `make artifacts` has not run —
+//! a fresh checkout stays green, CI with artifacts gets full coverage.
+
+use dngd::data::rng::Rng;
+use dngd::linalg::Mat;
+use dngd::runtime::{ArtifactKind, ArtifactRegistry, Backend, PjrtSolver};
+use dngd::solver::{residual_norm, CholSolver, DampedSolver};
+use std::path::Path;
+
+fn registry() -> ArtifactRegistry {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactRegistry::scan(&dir)
+}
+
+macro_rules! require_artifact {
+    ($reg:expr, $n:expr, $m:expr) => {
+        match $reg.find(ArtifactKind::Solve, $n, $m) {
+            Some(p) => p,
+            None => {
+                eprintln!(
+                    "SKIP: artifact solve_n{}_m{} not found — run `make artifacts`",
+                    $n, $m
+                );
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_solve_matches_native() {
+    let reg = registry();
+    let path = require_artifact!(reg, 8, 32);
+    let solver = PjrtSolver::load(&path, 8, 32).expect("compile artifact");
+    let mut rng = Rng::seed_from(500);
+    let s = Mat::randn(8, 32, &mut rng);
+    let v: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+    for lambda in [1.0, 0.1, 1e-2] {
+        let x_pjrt = solver.solve(&s, &v, lambda).unwrap();
+        let x_native = CholSolver::default().solve(&s, &v, lambda).unwrap();
+        // Artifact runs in f32: compare at f32-appropriate tolerance,
+        // relative to the solution scale (which grows as 1/λ).
+        let scale = x_native.iter().fold(0.0f64, |a, x| a.max(x.abs())).max(1.0);
+        for (a, b) in x_pjrt.iter().zip(&x_native) {
+            assert!(
+                (a - b).abs() < 1e-3 * scale,
+                "λ={lambda}: pjrt {a} vs native {b} (scale {scale})"
+            );
+        }
+        // And the residual itself must be small in the same scale.
+        let r = residual_norm(&s, &x_pjrt, &v, lambda);
+        assert!(r < 1e-2 * scale, "λ={lambda}: residual {r}");
+    }
+}
+
+#[test]
+fn pjrt_solver_rejects_wrong_shapes() {
+    let reg = registry();
+    let path = require_artifact!(reg, 8, 32);
+    let solver = PjrtSolver::load(&path, 8, 32).unwrap();
+    let mut rng = Rng::seed_from(501);
+    let s_wrong = Mat::randn(8, 33, &mut rng);
+    let v = vec![0.0; 33];
+    assert!(solver.solve(&s_wrong, &v, 0.1).is_err());
+}
+
+#[test]
+fn backend_selects_pjrt_when_artifact_exists() {
+    let reg = registry();
+    let _ = require_artifact!(reg, 8, 32);
+    let b = Backend::select(&reg, 8, 32, 1);
+    assert_eq!(b.name(), "pjrt");
+    // Unknown shape falls back.
+    let b2 = Backend::select(&reg, 9, 31, 1);
+    assert_eq!(b2.name(), "native");
+}
+
+#[test]
+fn pjrt_solve_repeated_calls_stable() {
+    // The executable is compiled once and reused; repeated execution must
+    // not leak or drift.
+    let reg = registry();
+    let path = require_artifact!(reg, 8, 32);
+    let solver = PjrtSolver::load(&path, 8, 32).unwrap();
+    let mut rng = Rng::seed_from(502);
+    let s = Mat::randn(8, 32, &mut rng);
+    let v: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+    let first = solver.solve(&s, &v, 0.5).unwrap();
+    for _ in 0..10 {
+        let again = solver.solve(&s, &v, 0.5).unwrap();
+        assert_eq!(first, again, "PJRT execution must be deterministic");
+    }
+}
