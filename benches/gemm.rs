@@ -1,100 +1,50 @@
 //! Kernel-level microbenches for the perf pass (EXPERIMENTS.md §Perf):
-//! SYRK (the O(n²m) Gram stage), blocked Cholesky, triangular solves and
-//! the two streaming matvecs, each with achieved-GFLOP/s so roofline
-//! headroom is visible per kernel.
+//! the packed-engine SYRK / GEMM / Cholesky / blocked TRSM against the
+//! seed scalar kernels, plus the end-to-end Algorithm-1 solve, each with
+//! achieved GFLOP/s so roofline headroom is visible per kernel.
+//!
+//! Emits the machine-readable `BENCH_PR1.json` trajectory file (path
+//! overridable via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks every
+//! shape for CI smoke runs).
 //!
 //! ```text
 //! cargo bench --bench gemm
 //! ```
 
 use dngd::data::rng::Rng;
-use dngd::linalg::gemm::{syrk, syrk_parallel};
-use dngd::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+use dngd::linalg::Mat;
 use dngd::metrics::bench;
-
-fn gflops(flops: f64, secs: f64) -> f64 {
-    flops / secs / 1e9
-}
+use std::path::Path;
 
 fn main() {
+    let quick = std::env::var("DNGD_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR1.json".to_string());
+    dngd::bench_tables::kernel_bench_report(quick, Some(Path::new(&json)))
+        .expect("write bench json");
+
+    // Streaming matvecs (memory-bound): effective GB/s for the O(nm)
+    // passes of Algorithm 1 line 4. Not part of the JSON trajectory —
+    // these are bandwidth-, not kernel-, limited.
+    let (n, m) = if quick { (64usize, 4096usize) } else { (512usize, 65536usize) };
     let mut rng = Rng::seed_from(9);
-    println!("{:>28} | {:>10} | {:>10}", "kernel", "median", "GFLOP/s");
-
-    for &(n, m) in &[(256usize, 8192usize), (512, 8192)] {
-        let s = Mat::randn(n, m, &mut rng);
-        let r = bench(&format!("syrk {n}x{m}"), 3, 2.0, || {
-            std::hint::black_box(syrk(&s, 1e-3));
-        });
-        let fl = n as f64 * n as f64 * m as f64; // n²m MACs ≈ n²m FLOPs (symmetric half ×2 ops)
-        println!(
-            "{:>28} | {:>8.2}ms | {:>10.2}",
-            format!("syrk {n}×{m}"),
-            r.median_ms(),
-            gflops(fl, r.summary.median)
-        );
-
-        for threads in [2usize, 4, 8] {
-            let r = bench(&format!("syrk-par{threads}"), 3, 2.0, || {
-                std::hint::black_box(syrk_parallel(&s, 1e-3, threads));
-            });
-            println!(
-                "{:>28} | {:>8.2}ms | {:>10.2}",
-                format!("syrk {n}×{m} ({threads} thr)"),
-                r.median_ms(),
-                gflops(fl, r.summary.median)
-            );
-        }
-    }
-
-    for &n in &[256usize, 512, 1024] {
-        let a = Mat::randn(n, n + 8, &mut rng);
-        let w = syrk(&a, 1.0);
-        let r = bench(&format!("chol {n}"), 3, 2.0, || {
-            std::hint::black_box(cholesky(&w).unwrap());
-        });
-        let fl = (n as f64).powi(3) / 3.0;
-        println!(
-            "{:>28} | {:>8.2}ms | {:>10.2}",
-            format!("cholesky {n}×{n}"),
-            r.median_ms(),
-            gflops(fl, r.summary.median)
-        );
-
-        let l = cholesky(&w).unwrap();
-        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let r = bench(&format!("trisolve {n}"), 5, 1.0, || {
-            let y = solve_lower(&l, &b);
-            std::hint::black_box(solve_lower_transpose(&l, &y));
-        });
-        let fl = 2.0 * (n as f64) * (n as f64);
-        println!(
-            "{:>28} | {:>8.3}ms | {:>10.2}",
-            format!("trisolve fwd+adj {n}"),
-            r.median_ms(),
-            gflops(fl, r.summary.median)
-        );
-    }
-
-    // Streaming matvecs (memory-bound): report effective GB/s too.
-    let (n, m) = (512usize, 65536usize);
     let s = Mat::randn(n, m, &mut rng);
     let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
     let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let bytes = (n * m * 8) as f64;
-    let r = bench("matvec", 5, 1.0, || {
+    let r = bench("matvec", 5, 0.2, || {
         std::hint::black_box(s.matvec(&v));
     });
     println!(
-        "{:>28} | {:>8.2}ms | {:>7.1} GB/s",
+        "{:>22} | {:>8.2}ms | {:>7.1} GB/s",
         format!("S·v {n}×{m}"),
         r.median_ms(),
         bytes / r.summary.median / 1e9
     );
-    let r = bench("tmatvec", 5, 1.0, || {
+    let r = bench("tmatvec", 5, 0.2, || {
         std::hint::black_box(s.t_matvec(&z));
     });
     println!(
-        "{:>28} | {:>8.2}ms | {:>7.1} GB/s",
+        "{:>22} | {:>8.2}ms | {:>7.1} GB/s",
         format!("Sᵀ·z {n}×{m}"),
         r.median_ms(),
         bytes / r.summary.median / 1e9

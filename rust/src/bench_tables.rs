@@ -8,6 +8,9 @@
 //!   dotted ideal lines (2 for the n-sweep, 1 for the m-sweep).
 //! * [`cg_conditioning`] — §3's iterative-method remark: CG iteration
 //!   blow-up vs condition number while chol stays flat.
+//! * [`kernel_bench`] — per-kernel GFLOP/s for the packed engine vs the
+//!   seed scalar kernels, emitted as machine-readable JSON
+//!   (`BENCH_PR1.json`) so later PRs have a trajectory to beat.
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -18,6 +21,7 @@ use crate::metrics::{bench, fit_power_law};
 use crate::solver::{
     flops, make_solver, CgSolver, CholSolver, DampedSolver, SolveError, SolverKind,
 };
+use std::path::Path;
 
 /// Table-1 shape grid. The scaled-down grid divides the paper's n by 8
 /// and m by ~12 so the full table runs in minutes on CPU while keeping
@@ -164,6 +168,164 @@ pub fn scaling(paper: bool) {
             chol_ts[4] / chol_ts[0]
         );
     }
+}
+
+/// One row of the kernel benchmark: a named kernel at a shape, with the
+/// median wall time and achieved GFLOP/s.
+#[derive(Debug, Clone)]
+pub struct KernelBenchRow {
+    pub kernel: &'static str,
+    /// Gram/output order n (or the square size for the GEMM rows).
+    pub n: usize,
+    /// Reduction dimension m (0 where not applicable).
+    pub m: usize,
+    /// Right-hand-side count for the TRSM row (0 elsewhere).
+    pub k: usize,
+    pub threads: usize,
+    pub median_ms: f64,
+    pub gflops: f64,
+}
+
+fn krow(
+    kernel: &'static str,
+    n: usize,
+    m: usize,
+    k: usize,
+    threads: usize,
+    flops: f64,
+    run: impl FnMut(),
+) -> KernelBenchRow {
+    let budget = if flops > 1e10 { 1.0 } else { 0.2 };
+    let r = bench(kernel, 3, budget, run);
+    let median_s = r.summary.median;
+    KernelBenchRow {
+        kernel,
+        n,
+        m,
+        k,
+        threads,
+        median_ms: median_s * 1e3,
+        gflops: flops / median_s / 1e9,
+    }
+}
+
+/// Kernel-level before/after benchmark: the packed engine vs the seed
+/// scalar kernels on the Algorithm-1 hot path (SYRK → Cholesky → TRSM),
+/// plus the end-to-end `CholSolver` wall time. `quick` shrinks every
+/// shape for CI smoke runs.
+pub fn kernel_bench(quick: bool) -> Vec<KernelBenchRow> {
+    use crate::linalg::gemm::{self, reference};
+    use crate::linalg::{cholesky, solve_lower_multi, solve_lower_transpose_multi};
+
+    let mut rng = Rng::seed_from(9);
+    let (n, m, sq, rhs) = if quick { (96, 512, 96, 8) } else { (1024, 8192, 1024, 256) };
+    let mut rows = Vec::new();
+
+    // --- SYRK (Algorithm 1 line 1, the O(n²m) stage) ---
+    let s = Mat::randn(n, m, &mut rng);
+    let syrk_fl = (n * n) as f64 * m as f64;
+    rows.push(krow("syrk_scalar_seed", n, m, 0, 1, syrk_fl, || {
+        std::hint::black_box(reference::syrk_scalar(&s, 1e-3));
+    }));
+    rows.push(krow("syrk_packed", n, m, 0, 1, syrk_fl, || {
+        std::hint::black_box(gemm::syrk(&s, 1e-3));
+    }));
+    for threads in [2usize, 4, 8] {
+        rows.push(krow("syrk_packed", n, m, 0, threads, syrk_fl, || {
+            std::hint::black_box(gemm::syrk_parallel(&s, 1e-3, threads));
+        }));
+    }
+
+    // --- Square GEMM (the trailing-update shape) ---
+    let a = Mat::randn(sq, sq, &mut rng);
+    let b = Mat::randn(sq, sq, &mut rng);
+    let gemm_fl = 2.0 * (sq as f64).powi(3);
+    let mut c = Mat::zeros(sq, sq);
+    rows.push(krow("gemm_nt_scalar_seed", sq, sq, sq, 1, gemm_fl, || {
+        reference::gemm_nt_scalar(1.0, &a, &b, 0.0, &mut c);
+        std::hint::black_box(&c);
+    }));
+    let mut c = Mat::zeros(sq, sq);
+    rows.push(krow("gemm_nt_packed", sq, sq, sq, 1, gemm_fl, || {
+        gemm::gemm_nt(1.0, &a, &b, 0.0, &mut c);
+        std::hint::black_box(&c);
+    }));
+    let mut c = Mat::zeros(sq, sq);
+    rows.push(krow("gemm_nn_packed", sq, sq, sq, 1, gemm_fl, || {
+        gemm::gemm(1.0, &a, &b, 0.0, &mut c);
+        std::hint::black_box(&c);
+    }));
+
+    // --- Cholesky (Algorithm 1 line 2) + blocked multi-RHS TRSM ---
+    let w = gemm::syrk(&Mat::randn(n, n + 8, &mut rng), 1.0);
+    let chol_fl = (n as f64).powi(3) / 3.0;
+    rows.push(krow("cholesky_blocked", n, 0, 0, 1, chol_fl, || {
+        std::hint::black_box(cholesky(&w).unwrap());
+    }));
+    let l = cholesky(&w).unwrap();
+    let bmat = Mat::randn(n, rhs, &mut rng);
+    let trsm_fl = 2.0 * (n * n) as f64 * rhs as f64;
+    rows.push(krow("trsm_multi_fwd_adj", n, 0, rhs, 1, trsm_fl, || {
+        let y = solve_lower_multi(&l, &bmat);
+        std::hint::black_box(solve_lower_transpose_multi(&l, &y));
+    }));
+
+    // --- End-to-end Algorithm 1 ---
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let e2e_fl = syrk_fl + chol_fl;
+    for threads in [1usize, 8] {
+        let solver = CholSolver::with_threads(threads);
+        rows.push(krow("chol_solver_e2e", n, m, 0, threads, e2e_fl, || {
+            std::hint::black_box(solver.solve(&s, &v, 1e-3).unwrap());
+        }));
+    }
+    rows
+}
+
+/// Render kernel-bench rows as the machine-readable `BENCH_PR1.json`
+/// payload (hand-rolled JSON — the build is offline, no serde).
+pub fn kernel_bench_json(rows: &[KernelBenchRow], quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 1,\n");
+    out.push_str("  \"bench\": \"kernel\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str("  \"unit\": {\"median_ms\": \"milliseconds\", \"gflops\": \"GFLOP/s\"},\n");
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"kernel\": \"{}\", \"n\": {}, \"m\": {}, \"k\": {}, \"threads\": {}, \
+                 \"median_ms\": {:.3}, \"gflops\": {:.2}}}",
+                r.kernel, r.n, r.m, r.k, r.threads, r.median_ms, r.gflops
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the kernel benchmark, print the table, and (optionally) write the
+/// JSON payload.
+pub fn kernel_bench_report(quick: bool, json_path: Option<&Path>) -> std::io::Result<()> {
+    let rows = kernel_bench(quick);
+    println!(
+        "{:>22} | {:>6} | {:>6} | {:>4} | {:>3} | {:>10} | {:>8}",
+        "kernel", "n", "m", "k", "thr", "median", "GFLOP/s"
+    );
+    for r in &rows {
+        println!(
+            "{:>22} | {:>6} | {:>6} | {:>4} | {:>3} | {:>8.2}ms | {:>8.2}",
+            r.kernel, r.n, r.m, r.k, r.threads, r.median_ms, r.gflops
+        );
+    }
+    if let Some(path) = json_path {
+        std::fs::write(path, kernel_bench_json(&rows, quick))?;
+        println!("kernel bench table written to {}", path.display());
+    }
+    Ok(())
 }
 
 /// §3: CG iterations blow up with condition number; chol time is flat.

@@ -7,7 +7,7 @@
 //! slow worker). Fault injection (`Job::Stall`) lets tests exercise
 //! straggler behaviour without real slow hardware.
 
-use crate::linalg::Mat;
+use crate::linalg::{KernelConfig, Mat};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;
@@ -56,15 +56,27 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `workers` threads with `queue_depth`-bounded mailboxes.
+    /// Spawn `workers` threads with `queue_depth`-bounded mailboxes,
+    /// each running its kernels serially (deterministic default).
     pub fn spawn(workers: usize, queue_depth: usize) -> WorkerPool {
+        WorkerPool::spawn_with_kernel(workers, queue_depth, KernelConfig::serial())
+    }
+
+    /// Spawn with an explicit kernel configuration: each worker's Gram
+    /// product dispatches with `kernel.threads` threads on the shared
+    /// persistent kernel pool (useful when workers ≪ cores).
+    pub fn spawn_with_kernel(
+        workers: usize,
+        queue_depth: usize,
+        kernel: KernelConfig,
+    ) -> WorkerPool {
         assert!(workers > 0 && queue_depth > 0);
         let handles = (0..workers)
             .map(|id| {
                 let (tx, rx) = sync_channel::<Job>(queue_depth);
                 let join = std::thread::Builder::new()
                     .name(format!("dngd-worker-{id}"))
-                    .spawn(move || worker_loop(id, rx))
+                    .spawn(move || worker_loop(id, rx, kernel))
                     .expect("spawn worker");
                 WorkerHandle { tx, join: Some(join) }
             })
@@ -108,7 +120,7 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(id: usize, rx: Receiver<Job>) -> u64 {
+fn worker_loop(id: usize, rx: Receiver<Job>, kernel: KernelConfig) -> u64 {
     let mut shard: Option<Mat> = None;
     let mut processed: u64 = 0;
     while let Ok(job) = rx.recv() {
@@ -117,7 +129,7 @@ fn worker_loop(id: usize, rx: Receiver<Job>) -> u64 {
             Job::SetShard(m) => shard = Some(m),
             Job::Gram { reply } => {
                 let Some(s) = shard.as_ref() else { continue };
-                let w = crate::linalg::gemm::syrk(s, 0.0);
+                let w = crate::linalg::gemm::syrk_parallel(s, 0.0, kernel.threads);
                 let _ = reply.send((id, w));
             }
             Job::Matvec { v_k, reply } => {

@@ -3,7 +3,7 @@
 use super::pool::{Job, PoolError, WorkerPool};
 use super::reduce::{reduce_vecs, tree_reduce_mats};
 use super::shard::ShardPlan;
-use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, KernelConfig, Mat};
 use crate::solver::{DampedSolver, SolveError};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -18,7 +18,21 @@ pub struct ShardedCholSolver {
 
 impl ShardedCholSolver {
     pub fn new(workers: usize, queue_depth: usize) -> ShardedCholSolver {
-        ShardedCholSolver { pool: WorkerPool::spawn(workers, queue_depth), workers }
+        ShardedCholSolver::with_kernel(workers, queue_depth, KernelConfig::serial())
+    }
+
+    /// Like [`ShardedCholSolver::new`] but with an explicit per-worker
+    /// kernel configuration (each worker's Gram product may itself run
+    /// threaded on the persistent kernel pool when workers ≪ cores).
+    pub fn with_kernel(
+        workers: usize,
+        queue_depth: usize,
+        kernel: KernelConfig,
+    ) -> ShardedCholSolver {
+        ShardedCholSolver {
+            pool: WorkerPool::spawn_with_kernel(workers, queue_depth, kernel),
+            workers,
+        }
     }
 
     pub fn workers(&self) -> usize {

@@ -1,28 +1,28 @@
-//! Blocked matrix-multiplication kernels.
+//! Matrix-multiplication front-ends over the packed kernel engine.
 //!
-//! Everything is row-major, so each kernel picks the loop order that keeps
-//! the inner loop streaming over contiguous rows:
+//! Everything is row-major; since PR 1 all of these are thin shape-checked
+//! wrappers around the packed, register-blocked engine in [`kernel`]
+//! (BLIS-style MR×NR micro-kernel with KC/MC/NC cache blocking — see the
+//! module docs there and EXPERIMENTS.md §Perf for measured numbers):
 //!
-//! * [`gemm`]    `C = α·A·B + β·C`      — i,k,j order (axpy over C rows)
-//! * [`gemm_nt`] `C = α·A·Bᵀ + β·C`     — dot products of row pairs
-//! * [`gemm_tn`] `C = α·Aᵀ·B + β·C`     — rank-1 updates over C rows
+//! * [`gemm`]    `C = α·A·B + β·C`
+//! * [`gemm_nt`] `C = α·A·Bᵀ + β·C`
+//! * [`gemm_tn`] `C = α·Aᵀ·B + β·C`
 //! * [`syrk`]    `W = A·Aᵀ + λI`        — the Gram matrix of Algorithm 1
-//!   line 1; exploits symmetry (computes the lower triangle, mirrors).
+//!   line 1; lower-triangle-aware (half the FLOPs), mirrored at the end.
+//! * [`syrk_parallel`] — SYRK with MC-row panels dealt round-robin to the
+//!   persistent [`kernel::global_pool`] workers; bit-identical to the
+//!   serial sweep for every thread count (each panel is a pure function
+//!   of `(A, panel range)`).
 //!
-//! Cache blocking: the k (reduction) dimension is tiled with [`KC`] so a
-//! panel of `A` stays resident in L2 while it sweeps `B`. The micro-kernel
-//! level is left to LLVM auto-vectorization of the unrolled
-//! [`dot`](super::mat::dot) / axpy bodies, which reaches within ~2× of
-//! hand-written AVX2 for f64 on this testbed (see EXPERIMENTS.md §Perf).
+//! The seed's scalar dot/axpy kernels live on in [`reference`] as test
+//! oracles and as the before/after baseline for the kernel benchmarks
+//! (`benches/gemm.rs` → `BENCH_PR1.json`).
 
-use super::mat::{axpy, dot, Mat};
+use super::kernel::{self, Trans};
+use super::mat::Mat;
 
-/// Reduction-dimension tile: KC·8 bytes · (row of A + row of B) per
-/// iteration ≈ 4 KiB, comfortably inside L1 alongside the C row.
-pub const KC: usize = 256;
-
-/// Row tile for the packed SYRK/NT kernels (panel of MC rows of A in L2).
-pub const MC: usize = 64;
+pub use super::kernel::{KernelConfig, KC, MC, MR, NR};
 
 /// `C = alpha * A * B + beta * C`, shapes `(p×q)·(q×r) → p×r`.
 pub fn gemm(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
@@ -30,169 +30,237 @@ pub fn gemm(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
     let (q2, r) = b.shape();
     assert_eq!(q, q2, "gemm inner dims {q} vs {q2}");
     assert_eq!(c.shape(), (p, r), "gemm output shape");
-    if beta != 1.0 {
-        c.scale(beta);
-    }
-    // Tile the reduction so B's working set per sweep is KC rows.
-    let mut k0 = 0;
-    while k0 < q {
-        let k1 = (k0 + KC).min(q);
-        for i in 0..p {
-            let arow = &a.row(i)[k0..k1];
-            let crow = c.row_mut(i);
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik != 0.0 {
-                    axpy(alpha * aik, b.row(k0 + kk), crow);
-                }
-            }
-        }
-        k0 = k1;
-    }
+    kernel::dgemm(
+        p,
+        r,
+        q,
+        alpha,
+        a.as_slice(),
+        q,
+        Trans::N,
+        b.as_slice(),
+        r,
+        Trans::N,
+        beta,
+        c.as_mut_slice(),
+        r,
+    );
 }
 
 /// `C = alpha * A * Bᵀ + beta * C`, shapes `(p×q)·(r×q)ᵀ → p×r`.
 ///
-/// Row-major heaven: every entry is a dot product of two contiguous rows.
+/// The packing stage absorbs the transpose (B is read column-panel-wise),
+/// so unlike the seed's row-dot implementation this no longer degrades to
+/// quadratic cache thrashing at square bench sizes.
 pub fn gemm_nt(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
     let (p, q) = a.shape();
     let (r, q2) = b.shape();
     assert_eq!(q, q2, "gemm_nt inner dims");
     assert_eq!(c.shape(), (p, r), "gemm_nt output shape");
-    for i in 0..p {
-        let arow = a.row(i);
-        for j in 0..r {
-            let v = alpha * dot(arow, b.row(j));
-            let cij = &mut c.row_mut(i)[j];
-            *cij = v + beta * *cij;
-        }
-    }
+    kernel::dgemm(
+        p,
+        r,
+        q,
+        alpha,
+        a.as_slice(),
+        q,
+        Trans::N,
+        b.as_slice(),
+        q,
+        Trans::T,
+        beta,
+        c.as_mut_slice(),
+        r,
+    );
 }
 
 /// `C = alpha * Aᵀ * B + beta * C`, shapes `(q×p)ᵀ·(q×r) → p×r`.
 ///
-/// Never materializes `Aᵀ`: streams A and B row-by-row doing rank-1
-/// updates of C. This is the memory-access pattern of Algorithm-1 line 4's
-/// `Sᵀ(L⁻ᵀu)` when u is a block of vectors.
+/// Never materializes `Aᵀ` — the A-packing reads the buffer transposed.
+/// This is the memory-access pattern of Algorithm-1 line 4's `Sᵀ(L⁻ᵀu)`
+/// when u is a block of vectors.
 pub fn gemm_tn(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
     let (q, p) = a.shape();
     let (q2, r) = b.shape();
     assert_eq!(q, q2, "gemm_tn inner dims");
     assert_eq!(c.shape(), (p, r), "gemm_tn output shape");
-    if beta != 1.0 {
-        c.scale(beta);
-    }
-    for i in 0..q {
-        let arow = a.row(i);
-        let brow = b.row(i);
-        for j in 0..p {
-            let aij = alpha * arow[j];
-            if aij != 0.0 {
-                axpy(aij, brow, c.row_mut(j));
-            }
+    kernel::dgemm(
+        p,
+        r,
+        q,
+        alpha,
+        a.as_slice(),
+        p,
+        Trans::T,
+        b.as_slice(),
+        r,
+        Trans::N,
+        beta,
+        c.as_mut_slice(),
+        r,
+    );
+}
+
+/// Mirror the computed lower triangle into the upper one and damp the
+/// diagonal — the tail step shared by serial and parallel SYRK.
+fn mirror_and_damp(w: &mut Mat, lambda: f64) {
+    let n = w.rows();
+    for i in 0..n {
+        for j in 0..i {
+            w[(j, i)] = w[(i, j)];
         }
+        w[(i, i)] += lambda;
     }
 }
 
 /// Symmetric rank-k update: `W = A·Aᵀ + lambda·I` for `A: n×m`.
 ///
 /// This is **line 1 of Algorithm 1** — the only O(n²m) step — so it gets
-/// the most care: only the lower triangle is computed (half the FLOPs of a
-/// general NT product), the reduction is KC-tiled, and row panels of MC
-/// rows keep the A panel hot in L2 while it is reused n/2 times on
-/// average. The upper triangle is mirrored at the end.
+/// the most care: MC row panels of W are produced by the packed engine's
+/// triangle-aware [`kernel::syrk_panel`] (only micro-tiles touching the
+/// lower triangle are computed), and the upper triangle is mirrored at
+/// the end. The serial sweep visits exactly the panels the parallel
+/// version deals out, so both produce bit-identical results.
 pub fn syrk(a: &Mat, lambda: f64) -> Mat {
     let (n, m) = a.shape();
     let mut w = Mat::zeros(n, n);
-    let mut k0 = 0;
-    while k0 < m {
-        let k1 = (k0 + KC).min(m);
+    if n > 0 && m > 0 {
         let mut i0 = 0;
         while i0 < n {
             let i1 = (i0 + MC).min(n);
-            for i in i0..i1 {
-                let arow_i = &a.row(i)[k0..k1];
-                for j in 0..=i {
-                    let arow_j = &a.row(j)[k0..k1];
-                    w[(i, j)] += dot(arow_i, arow_j);
-                }
-            }
+            let wrows = &mut w.as_mut_slice()[i0 * n..i1 * n];
+            kernel::syrk_panel(a.as_slice(), n, m, i0, i1, wrows);
             i0 = i1;
         }
-        k0 = k1;
     }
-    // Mirror lower → upper and damp the diagonal.
-    for i in 0..n {
-        for j in 0..i {
-            w[(j, i)] = w[(i, j)];
-        }
-        w[(i, i)] += lambda;
-    }
+    mirror_and_damp(&mut w, lambda);
     w
 }
 
-/// Multi-threaded SYRK: partitions the *row panels* of W across `threads`
-/// OS threads (std::thread::scope — no pool dependency). Work per panel i
-/// is proportional to i, so panels are dealt round-robin to balance load.
+#[derive(Clone, Copy)]
+struct SendMutPtr(*mut f64);
+// SAFETY: jobs write disjoint row panels; KernelPool::run joins before
+// the caller's borrow ends.
+unsafe impl Send for SendMutPtr {}
+
+#[derive(Clone, Copy)]
+struct SendConstPtr(*const f64);
+// SAFETY: read-only view of A, outlives the jobs (run() blocks).
+unsafe impl Send for SendConstPtr {}
+
+/// Multi-threaded SYRK on the persistent kernel pool.
+///
+/// MC-row panels of W are dealt round-robin across `threads` jobs (work
+/// per panel grows with the row index, so round-robin balances the
+/// triangular load). Each job computes its panels with the same
+/// [`kernel::syrk_panel`] the serial path uses, writing disjoint row
+/// ranges of W — the result is **bit-identical** for every thread count,
+/// including 1 (pinned by a test). Workers are persistent
+/// ([`kernel::global_pool`]): repeated solves do not respawn threads the
+/// way the seed's per-call `std::thread::scope` did.
 pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
     let (n, m) = a.shape();
     if threads <= 1 || n < 64 {
         return syrk(a, lambda);
     }
+    let panels: Vec<(usize, usize)> = {
+        let mut v = Vec::new();
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + MC).min(n);
+            v.push((i0, i1));
+            i0 = i1;
+        }
+        v
+    };
+    let threads = threads.min(panels.len()).max(1);
     let mut w = Mat::zeros(n, n);
     {
-        // Each thread owns a disjoint set of rows of W (round-robin by
-        // MC-panel so triangular work is balanced). Rows are handed out
-        // via raw pointers into disjoint row ranges — safe because the
-        // panels never overlap.
-        let wptr = SendPtr(w.as_mut_slice().as_mut_ptr());
-        std::thread::scope(|scope| {
-            for t in 0..threads {
-                let a_ref = &a;
-                scope.spawn(move || {
-                    let wp = wptr; // capture the Send wrapper by copy
-                    let mut panel = 0usize;
-                    let mut i0 = 0usize;
-                    while i0 < n {
-                        let i1 = (i0 + MC).min(n);
-                        if panel % threads == t {
-                            let mut k0 = 0;
-                            while k0 < m {
-                                let k1 = (k0 + KC).min(m);
-                                for i in i0..i1 {
-                                    let arow_i = &a_ref.row(i)[k0..k1];
-                                    for j in 0..=i {
-                                        let arow_j = &a_ref.row(j)[k0..k1];
-                                        // SAFETY: row i of W is owned
-                                        // exclusively by this thread.
-                                        unsafe {
-                                            *wp.0.add(i * n + j) += dot(arow_i, arow_j);
-                                        }
-                                    }
-                                }
-                                k0 = k1;
-                            }
-                        }
-                        panel += 1;
-                        i0 = i1;
-                    }
-                });
+        let aptr = SendConstPtr(a.as_slice().as_ptr());
+        let wptr = SendMutPtr(w.as_mut_slice().as_mut_ptr());
+        let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let mine: Vec<(usize, usize)> = panels
+                .iter()
+                .enumerate()
+                .filter(|(idx, _)| idx % threads == t)
+                .map(|(_, &p)| p)
+                .collect();
+            if mine.is_empty() {
+                continue;
             }
-        });
-    }
-    for i in 0..n {
-        for j in 0..i {
-            w[(j, i)] = w[(i, j)];
+            jobs.push(Box::new(move || {
+                // SAFETY: A is only read; each job's W rows are disjoint
+                // from every other job's; run() below blocks until all
+                // jobs complete, so the caller's borrows stay live.
+                let adata = unsafe { std::slice::from_raw_parts(aptr.0, n * m) };
+                for (i0, i1) in mine {
+                    let wrows =
+                        unsafe { std::slice::from_raw_parts_mut(wptr.0.add(i0 * n), (i1 - i0) * n) };
+                    kernel::syrk_panel(adata, n, m, i0, i1, wrows);
+                }
+            }));
         }
-        w[(i, i)] += lambda;
+        kernel::global_pool().run(jobs);
     }
+    mirror_and_damp(&mut w, lambda);
     w
 }
 
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
-// SAFETY: threads write disjoint rows; synchronization is the scope join.
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// The seed's scalar kernels, kept verbatim as independent test oracles
+/// and as the pre-PR1 baseline for the kernel benchmarks. Do not use on
+/// hot paths.
+pub mod reference {
+    use crate::linalg::mat::{dot, Mat};
+
+    /// Scalar KC-tiled SYRK (the seed implementation of Algorithm 1
+    /// line 1): per-element row dots, LLVM-autovectorized only.
+    pub fn syrk_scalar(a: &Mat, lambda: f64) -> Mat {
+        let (n, m) = a.shape();
+        let mut w = Mat::zeros(n, n);
+        let mut k0 = 0;
+        while k0 < m {
+            let k1 = (k0 + super::KC).min(m);
+            let mut i0 = 0;
+            while i0 < n {
+                let i1 = (i0 + super::MC).min(n);
+                for i in i0..i1 {
+                    let arow_i = &a.row(i)[k0..k1];
+                    for j in 0..=i {
+                        let arow_j = &a.row(j)[k0..k1];
+                        w[(i, j)] += dot(arow_i, arow_j);
+                    }
+                }
+                i0 = i1;
+            }
+            k0 = k1;
+        }
+        for i in 0..n {
+            for j in 0..i {
+                w[(j, i)] = w[(i, j)];
+            }
+            w[(i, i)] += lambda;
+        }
+        w
+    }
+
+    /// Scalar untiled NT product (the seed `gemm_nt`): row-pair dots,
+    /// quadratic cache behaviour at square sizes.
+    pub fn gemm_nt_scalar(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+        let (p, q) = a.shape();
+        let (r, q2) = b.shape();
+        assert_eq!(q, q2, "gemm_nt inner dims");
+        assert_eq!(c.shape(), (p, r), "gemm_nt output shape");
+        for i in 0..p {
+            let arow = a.row(i);
+            for j in 0..r {
+                let v = alpha * dot(arow, b.row(j));
+                let cij = &mut c.row_mut(i)[j];
+                *cij = v + beta * *cij;
+            }
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -205,6 +273,20 @@ mod tests {
         Mat::from_fn(p, r, |i, j| (0..q).map(|k| a[(i, k)] * b[(k, j)]).sum())
     }
 
+    fn assert_close(got: &Mat, want: &Mat, tol: f64, what: &str) {
+        assert_eq!(got.shape(), want.shape(), "{what} shape");
+        let (rows, cols) = got.shape();
+        for i in 0..rows {
+            for j in 0..cols {
+                let (x, y) = (got[(i, j)], want[(i, j)]);
+                assert!(
+                    (x - y).abs() < tol,
+                    "{what}: mismatch at ({i},{j}) of {rows}x{cols}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn gemm_matches_naive() {
         let mut rng = Rng::seed_from(10);
@@ -214,9 +296,7 @@ mod tests {
             let mut c = Mat::zeros(p, r);
             gemm(1.0, &a, &b, 0.0, &mut c);
             let expect = naive_gemm(&a, &b);
-            assert!((&c.as_slice().iter().zip(expect.as_slice()))
-                .clone()
-                .all(|(x, y)| (x - y).abs() < 1e-10));
+            assert_close(&c, &expect, 1e-10, &format!("gemm ({p},{q},{r})"));
         }
     }
 
@@ -234,9 +314,7 @@ mod tests {
             e.axpy(-1.0, &c0);
             e
         };
-        for (x, y) in c.as_slice().iter().zip(expect.as_slice()) {
-            assert!((x - y).abs() < 1e-10);
-        }
+        assert_close(&c, &expect, 1e-10, "gemm alpha/beta");
     }
 
     #[test]
@@ -247,9 +325,7 @@ mod tests {
         let mut c = Mat::zeros(5, 9);
         gemm_nt(1.0, &a, &b, 0.0, &mut c);
         let expect = naive_gemm(&a, &b.transpose());
-        for (x, y) in c.as_slice().iter().zip(expect.as_slice()) {
-            assert!((x - y).abs() < 1e-10);
-        }
+        assert_close(&c, &expect, 1e-10, "gemm_nt");
     }
 
     #[test]
@@ -260,23 +336,81 @@ mod tests {
         let mut c = Mat::zeros(5, 4);
         gemm_tn(1.0, &a, &b, 0.0, &mut c);
         let expect = naive_gemm(&a.transpose(), &b);
-        for (x, y) in c.as_slice().iter().zip(expect.as_slice()) {
-            assert!((x - y).abs() < 1e-10);
+        assert_close(&c, &expect, 1e-10, "gemm_tn");
+    }
+
+    /// Non-multiples of (MR, NR, KC, MC): primes, 1s, and ±1 around every
+    /// blocking parameter, driven through all three layout front-ends.
+    #[test]
+    fn packed_engine_edge_shapes_match_naive() {
+        let mut rng = Rng::seed_from(18);
+        let dims =
+            [1, 2, MR - 1, MR + 1, NR + 1, 13, 31, MC - 1, MC + 1, KC - 1, KC + 1];
+        for (t, &(p, q, r)) in [
+            (dims[0], dims[4], dims[5]),
+            (dims[2], dims[9], dims[3]),
+            (dims[7], dims[10], dims[1]),
+            (dims[6], dims[8], dims[4]),
+            (1, KC + 1, 1),
+            (MC + 1, 3, NR + 1),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let a = Mat::randn(p, q, &mut rng);
+            let b = Mat::randn(q, r, &mut rng);
+            let expect = naive_gemm(&a, &b);
+
+            let mut c = Mat::zeros(p, r);
+            gemm(1.0, &a, &b, 0.0, &mut c);
+            assert_close(&c, &expect, 1e-9, &format!("edge gemm #{t} ({p},{q},{r})"));
+
+            let bt = b.transpose();
+            let mut c = Mat::zeros(p, r);
+            gemm_nt(1.0, &a, &bt, 0.0, &mut c);
+            assert_close(&c, &expect, 1e-9, &format!("edge gemm_nt #{t} ({p},{q},{r})"));
+
+            let at = a.transpose();
+            let mut c = Mat::zeros(p, r);
+            gemm_tn(1.0, &at, &b, 0.0, &mut c);
+            assert_close(&c, &expect, 1e-9, &format!("edge gemm_tn #{t} ({p},{q},{r})"));
         }
     }
 
     #[test]
     fn syrk_matches_a_at_plus_lambda() {
         let mut rng = Rng::seed_from(14);
-        for &(n, m) in &[(1, 1), (5, 3), (8, 1000), (70, 130)] {
+        for &(n, m) in &[(1, 1), (5, 3), (8, 1000), (70, 130), (KC + 1, KC - 1)] {
             let a = Mat::randn(n, m, &mut rng);
             let w = syrk(&a, 0.5);
             let mut expect = naive_gemm(&a, &a.transpose());
             expect.add_diag(0.5);
-            for (x, y) in w.as_slice().iter().zip(expect.as_slice()) {
-                assert!((x - y).abs() < 1e-8, "syrk mismatch at n={n} m={m}");
-            }
+            assert_close(&w, &expect, 1e-8, &format!("syrk n={n} m={m}"));
         }
+    }
+
+    #[test]
+    fn syrk_matches_scalar_reference() {
+        let mut rng = Rng::seed_from(19);
+        for &(n, m) in &[(3, 17), (65, 129), (150, KC + 7)] {
+            let a = Mat::randn(n, m, &mut rng);
+            let packed = syrk(&a, 0.25);
+            let scalar = reference::syrk_scalar(&a, 0.25);
+            assert_close(&packed, &scalar, 1e-9, &format!("syrk vs scalar n={n} m={m}"));
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_scalar_reference() {
+        let mut rng = Rng::seed_from(23);
+        let a = Mat::randn(33, 71, &mut rng);
+        let b = Mat::randn(29, 71, &mut rng);
+        let c0 = Mat::randn(33, 29, &mut rng);
+        let mut packed = c0.clone();
+        gemm_nt(1.5, &a, &b, 0.5, &mut packed);
+        let mut scalar = c0.clone();
+        reference::gemm_nt_scalar(1.5, &a, &b, 0.5, &mut scalar);
+        assert_close(&packed, &scalar, 1e-10, "gemm_nt vs scalar");
     }
 
     #[test]
@@ -298,9 +432,27 @@ mod tests {
             let a = Mat::randn(150, 220, &mut rng);
             let serial = syrk(&a, 0.1);
             let par = syrk_parallel(&a, 0.1, threads);
-            for (x, y) in par.as_slice().iter().zip(serial.as_slice()) {
-                assert!((x - y).abs() < 1e-9);
-            }
+            assert_close(&par, &serial, 1e-9, &format!("syrk_parallel t={threads}"));
+        }
+    }
+
+    /// Threaded SYRK is deterministic: bit-identical output for every
+    /// thread count, because each MC panel's computation is a pure
+    /// function of (A, panel range) with a fixed accumulation order.
+    #[test]
+    fn syrk_parallel_bit_identical_across_thread_counts() {
+        let mut rng = Rng::seed_from(24);
+        // n > 64 with a non-multiple-of-MC panel tail; m off the KC grid.
+        let a = Mat::randn(MC + 37, KC + 13, &mut rng);
+        let baseline = syrk_parallel(&a, 1e-3, 1);
+        assert_eq!(baseline.as_slice(), syrk(&a, 1e-3).as_slice(), "threads=1 vs serial");
+        for &threads in &[2usize, 8] {
+            let w = syrk_parallel(&a, 1e-3, threads);
+            assert_eq!(
+                w.as_slice(),
+                baseline.as_slice(),
+                "threads={threads} not bit-identical to threads=1"
+            );
         }
     }
 

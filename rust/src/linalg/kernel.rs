@@ -1,0 +1,635 @@
+//! Packed register-blocked GEMM engine — the shared micro-kernel under
+//! every dense O(n³)/O(n²m) hot path in the crate.
+//!
+//! Layout follows the BLIS decomposition: the operands are repacked into
+//! contiguous panels sized for the cache hierarchy, and all FLOPs run
+//! through one MR×NR register-blocked micro-kernel:
+//!
+//! ```text
+//! for jc in n  step NC:              (B column block, stays in L3)
+//!   for pc in k step KC:             (reduction block)
+//!     pack B[pc.., jc..]  → bp       (KC×NC, NR-wide column micro-panels)
+//!     for ic in m step MC:           (A row block, stays in L2)
+//!       pack A[ic.., pc..] → ap      (MC×KC, MR-tall row micro-panels)
+//!       for each (MR × NR) tile: micro-kernel over kc
+//! ```
+//!
+//! The micro-kernel keeps an MR×NR = 4×8 accumulator block in registers
+//! and streams `ap`/`bp` linearly: per k-step it issues 4 broadcasts ×
+//! one 8-lane row FMA each, which LLVM lowers to packed AVX2/AVX-512 FMA
+//! (the inner arrays are constant-sized, so the loops fully unroll).
+//! Packing absorbs transposition, so one driver ([`dgemm`]) serves
+//! `A·B`, `A·Bᵀ` and `Aᵀ·B`, and edge tiles are handled by zero-padding
+//! the packed panels — the micro-kernel itself has no tail cases, the
+//! write-back just clips to the valid `mr_eff × nr_eff` region.
+//!
+//! [`syrk_panel`] is the lower-triangle-aware variant used by the Gram
+//! stage `W = SSᵀ` (Algorithm 1 line 1): it skips micro-tiles strictly
+//! above the diagonal and is a pure function of the row-panel range, so
+//! threaded SYRK is bit-identical for every thread count.
+//!
+//! [`KernelPool`] is the persistent worker pool behind
+//! [`syrk_parallel`](super::gemm::syrk_parallel): spawned once per
+//! process (lazily), fed closures over channels, so repeated solves do
+//! not pay thread spawn/join on every call the way the seed
+//! `std::thread::scope` implementation did.
+
+use std::sync::mpsc::{channel, sync_channel, SyncSender};
+use std::sync::{Mutex, OnceLock};
+
+/// Micro-kernel rows: accumulator height. 4 rows × 8 lanes = 32 f64
+/// accumulators ≈ half the AVX-512 (or all the AVX2-ymm) register file,
+/// leaving room for the broadcast and B-row temporaries.
+pub const MR: usize = 4;
+
+/// Micro-kernel columns: one cache line of f64 per accumulator row.
+pub const NR: usize = 8;
+
+/// Reduction-dimension block: one `ap` micro-panel (KC×MR) plus one `bp`
+/// micro-panel (KC×NR) is 24 KiB — resident in L1 across the tile sweep.
+pub const KC: usize = 256;
+
+/// Row block: the packed MC×KC A-panel is 256 KiB, sized for L2.
+pub const MC: usize = 128;
+
+/// Column block: bounds the packed KC×NC B-panel at 8 MiB (L3-resident)
+/// so huge right-hand sides do not blow out the packing buffer.
+pub const NC: usize = 4096;
+
+/// Whether an operand buffer is stored as the logical matrix (`N`) or as
+/// its transpose (`T`). Packing absorbs the difference; the micro-kernel
+/// always sees the same canonical panels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trans {
+    N,
+    T,
+}
+
+/// Shared kernel configuration plumbed through the solvers, the
+/// coordinator workers and the bench harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Worker threads for the threaded kernels (SYRK). 1 = serial.
+    pub threads: usize,
+}
+
+impl KernelConfig {
+    /// Single-threaded config — the deterministic default.
+    pub const fn serial() -> KernelConfig {
+        KernelConfig { threads: 1 }
+    }
+
+    pub fn with_threads(threads: usize) -> KernelConfig {
+        KernelConfig { threads: threads.max(1) }
+    }
+
+    /// `DNGD_THREADS` env override, else every available core.
+    pub fn from_env() -> KernelConfig {
+        let threads = std::env::var("DNGD_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            });
+        KernelConfig::with_threads(threads)
+    }
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig::serial()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack an `mb × kc` block of a row-major buffer (element `(i, p)` at
+/// `src[i * lda + p]`) into MR-tall, k-major micro-panels. Tail rows are
+/// zero-padded so the micro-kernel never branches.
+fn pack_a_n(dst: &mut Vec<f64>, src: &[f64], lda: usize, mb: usize, kc: usize) {
+    let panels = mb.div_ceil(MR);
+    dst.clear();
+    dst.resize(panels * kc * MR, 0.0);
+    for ip in 0..panels {
+        let i0 = ip * MR;
+        let rows = MR.min(mb - i0);
+        let panel = &mut dst[ip * kc * MR..(ip + 1) * kc * MR];
+        for r in 0..rows {
+            let srow = &src[(i0 + r) * lda..(i0 + r) * lda + kc];
+            for (p, &v) in srow.iter().enumerate() {
+                panel[p * MR + r] = v;
+            }
+        }
+    }
+}
+
+/// Same as [`pack_a_n`] but the buffer holds the transpose: logical
+/// element `(i, p)` lives at `src[p * lda + i]`. The packed layout is
+/// identical, so the micro-kernel is oblivious to the source layout.
+fn pack_a_t(dst: &mut Vec<f64>, src: &[f64], lda: usize, mb: usize, kc: usize) {
+    let panels = mb.div_ceil(MR);
+    dst.clear();
+    dst.resize(panels * kc * MR, 0.0);
+    for ip in 0..panels {
+        let i0 = ip * MR;
+        let rows = MR.min(mb - i0);
+        let panel = &mut dst[ip * kc * MR..(ip + 1) * kc * MR];
+        for p in 0..kc {
+            let srow = &src[p * lda + i0..p * lda + i0 + rows];
+            for (r, &v) in srow.iter().enumerate() {
+                panel[p * MR + r] = v;
+            }
+        }
+    }
+}
+
+/// Pack a `kc × nb` block of B (element `(p, j)` at `src[p * ldb + j]`)
+/// into NR-wide, k-major micro-panels with zero-padded tail columns.
+fn pack_b_n(dst: &mut Vec<f64>, src: &[f64], ldb: usize, kc: usize, nb: usize) {
+    let panels = nb.div_ceil(NR);
+    dst.clear();
+    dst.resize(panels * kc * NR, 0.0);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let cols = NR.min(nb - j0);
+        let panel = &mut dst[jp * kc * NR..(jp + 1) * kc * NR];
+        for p in 0..kc {
+            let srow = &src[p * ldb + j0..p * ldb + j0 + cols];
+            for (c, &v) in srow.iter().enumerate() {
+                panel[p * NR + c] = v;
+            }
+        }
+    }
+}
+
+/// Same as [`pack_b_n`] but the buffer holds the transpose: logical
+/// element `(p, j)` lives at `src[j * ldb + p]`.
+fn pack_b_t(dst: &mut Vec<f64>, src: &[f64], ldb: usize, kc: usize, nb: usize) {
+    let panels = nb.div_ceil(NR);
+    dst.clear();
+    dst.resize(panels * kc * NR, 0.0);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let cols = NR.min(nb - j0);
+        let panel = &mut dst[jp * kc * NR..(jp + 1) * kc * NR];
+        for c in 0..cols {
+            let scol = &src[(j0 + c) * ldb..(j0 + c) * ldb + kc];
+            for (p, &v) in scol.iter().enumerate() {
+                panel[p * NR + c] = v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro-kernel
+// ---------------------------------------------------------------------------
+
+/// The MR×NR register-blocked micro-kernel: consumes one `ap` micro-panel
+/// (kc×MR) and one `bp` micro-panel (kc×NR), returns the accumulator
+/// block. Constant-sized inner loops — LLVM unrolls them into broadcast +
+/// packed-FMA sequences with no bounds checks (`chunks_exact` + fixed
+/// array views).
+#[inline(always)]
+fn microkernel(ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let a: &[f64; MR] = a.try_into().unwrap();
+        let b: &[f64; NR] = b.try_into().unwrap();
+        for r in 0..MR {
+            let ar = a[r];
+            for j in 0..NR {
+                acc[r][j] += ar * b[j];
+            }
+        }
+    }
+    acc
+}
+
+/// Sweep the packed panels over an `mc × nc` block of C, accumulating
+/// `C += alpha * A_pack · B_pack`. `c` element `(i, j)` (block-relative
+/// plus the `(ic, jc)` block origin) lives at `c[(ic+i)*ldc + jc+j]`.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    alpha: f64,
+    ap: &[f64],
+    bp: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+) {
+    let apanels = mc.div_ceil(MR);
+    let bpanels = nc.div_ceil(NR);
+    for jp in 0..bpanels {
+        let j0 = jp * NR;
+        let ncols = NR.min(nc - j0);
+        let bpan = &bp[jp * kc * NR..(jp + 1) * kc * NR];
+        for ip in 0..apanels {
+            let i0 = ip * MR;
+            let nrows = MR.min(mc - i0);
+            let apan = &ap[ip * kc * MR..(ip + 1) * kc * MR];
+            let acc = microkernel(apan, bpan);
+            for (r, accrow) in acc.iter().enumerate().take(nrows) {
+                let off = (ic + i0 + r) * ldc + jc + j0;
+                let crow = &mut c[off..off + ncols];
+                for (cv, av) in crow.iter_mut().zip(&accrow[..ncols]) {
+                    *cv += alpha * av;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// General packed GEMM: `C = alpha · op(A) · op(B) + beta · C` with
+/// logical shapes `op(A): m×k`, `op(B): k×n`, `C: m×n`.
+///
+/// Operands are raw row-major slices with explicit leading dimensions so
+/// the same driver serves whole matrices and sub-blocks (the Cholesky
+/// trailing update and the blocked TRSM pass strided sub-views of the
+/// factor). `ta`/`tb` describe the *storage*: `Trans::T` means the buffer
+/// holds the transpose of the logical operand and packing untransposes
+/// it on the fly.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    ta: Trans,
+    b: &[f64],
+    ldb: usize,
+    tb: Trans,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if beta != 1.0 {
+        for i in 0..m {
+            for cv in &mut c[i * ldc..i * ldc + n] {
+                *cv *= beta;
+            }
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    let mut ap: Vec<f64> = Vec::new();
+    let mut bp: Vec<f64> = Vec::new();
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            match tb {
+                Trans::N => pack_b_n(&mut bp, &b[pc * ldb + jc..], ldb, kc, nc),
+                Trans::T => pack_b_t(&mut bp, &b[jc * ldb + pc..], ldb, kc, nc),
+            }
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                match ta {
+                    Trans::N => pack_a_n(&mut ap, &a[ic * lda + pc..], lda, mc, kc),
+                    Trans::T => pack_a_t(&mut ap, &a[pc * lda + ic..], lda, mc, kc),
+                }
+                macro_kernel(mc, nc, kc, alpha, &ap, &bp, c, ldc, ic, jc);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Lower-triangle SYRK row panel: accumulates rows `[i0, i1)` of
+/// `W += A·Aᵀ` for `A: n×m` into `wrows` (the contiguous row-major rows
+/// `i0..i1` of an n×n W). Only columns `0..i1` are touched — micro-tiles
+/// strictly above the diagonal are skipped, which halves the FLOPs of the
+/// Gram stage versus a general NT product.
+///
+/// The computation is a pure function of `(a, i0, i1)` — the packing,
+/// tile order and accumulation order never depend on what other panels
+/// are doing — so any panel-parallel schedule is bit-identical to the
+/// serial sweep. The SYRK determinism test pins this property.
+pub fn syrk_panel(a: &[f64], n: usize, m: usize, i0: usize, i1: usize, wrows: &mut [f64]) {
+    debug_assert!(i0 < i1 && i1 <= n);
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(wrows.len(), (i1 - i0) * n);
+    let mb = i1 - i0;
+    let jb = i1;
+    let mut ap: Vec<f64> = Vec::new();
+    let mut bp: Vec<f64> = Vec::new();
+    let mut pc = 0;
+    while pc < m {
+        let kc = KC.min(m - pc);
+        // B = Aᵀ block: logical (p, j) ↦ A[j][pc+p], columns 0..i1 only.
+        pack_b_t(&mut bp, &a[pc..], m, kc, jb);
+        pack_a_n(&mut ap, &a[i0 * m + pc..], m, mb, kc);
+        let apanels = mb.div_ceil(MR);
+        let bpanels = jb.div_ceil(NR);
+        for ip in 0..apanels {
+            let r0 = ip * MR;
+            let nrows = MR.min(mb - r0);
+            let glast = i0 + r0 + nrows - 1;
+            let apan = &ap[ip * kc * MR..(ip + 1) * kc * MR];
+            for jp in 0..bpanels {
+                let j0 = jp * NR;
+                if j0 > glast {
+                    break;
+                }
+                let ncols = NR.min(jb - j0);
+                let bpan = &bp[jp * kc * NR..(jp + 1) * kc * NR];
+                let acc = microkernel(apan, bpan);
+                for (r, accrow) in acc.iter().enumerate().take(nrows) {
+                    let off = (r0 + r) * n + j0;
+                    let crow = &mut wrows[off..off + ncols];
+                    for (cv, av) in crow.iter_mut().zip(&accrow[..ncols]) {
+                        *cv += av;
+                    }
+                }
+            }
+        }
+        pc += kc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent kernel worker pool
+// ---------------------------------------------------------------------------
+
+/// A boxed kernel job. Jobs are `'static`: callers that need to touch
+/// borrowed matrices smuggle raw pointers in (see
+/// [`syrk_parallel`](super::gemm::syrk_parallel)) and rely on
+/// [`KernelPool::run`] blocking until every job has acknowledged
+/// completion, which keeps the borrows alive across execution.
+pub type KernelJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker pool for the threaded kernels.
+///
+/// Spawned once per process ([`global_pool`]), the workers park on their
+/// channels between calls — repeated `syrk_parallel` invocations reuse
+/// the same OS threads instead of paying spawn/join per solve as the
+/// seed `std::thread::scope` version did (tens of microseconds per call,
+/// which dominated small-n Gram steps in the training loop).
+pub struct KernelPool {
+    senders: Mutex<Vec<SyncSender<KernelJob>>>,
+    size: usize,
+}
+
+/// Per-job completion beacon: reports on drop, so a job is accounted
+/// for whether it returned normally (`ok = true`), panicked mid-run, or
+/// its closure was dropped unexecuted — [`KernelPool::run`] must never
+/// return while any raw-pointer job could still be live.
+struct DoneGuard {
+    tx: std::sync::mpsc::Sender<bool>,
+    ok: bool,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(self.ok);
+    }
+}
+
+impl KernelPool {
+    /// Spawn `size` detached workers. Workers live for the process —
+    /// they exit only when the channel closes at teardown. A panicking
+    /// job is caught (`catch_unwind`) so it can never kill its worker
+    /// and poison the process-wide pool for later, unrelated solves.
+    fn spawn(size: usize) -> KernelPool {
+        let size = size.max(1);
+        let mut senders = Vec::with_capacity(size);
+        for id in 0..size {
+            let (tx, rx) = sync_channel::<KernelJob>(64);
+            std::thread::Builder::new()
+                .name(format!("dngd-kernel-{id}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    }
+                })
+                .expect("spawn kernel worker");
+            senders.push(tx);
+        }
+        KernelPool { senders: Mutex::new(senders), size }
+    }
+
+    /// Number of persistent workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run a batch of jobs to completion, dealing them round-robin
+    /// across the workers.
+    ///
+    /// Blocks until every submitted job is *accounted for* — completed,
+    /// panicked, or provably never-will-run — before returning or
+    /// panicking. This is the safety contract callers like
+    /// [`syrk_parallel`](super::gemm::syrk_parallel) rely on: their jobs
+    /// hold raw pointers into caller-owned buffers, so `run` must never
+    /// unwind while a sibling job could still be executing. Panics
+    /// (afterwards, safely) if any job failed.
+    pub fn run(&self, jobs: Vec<KernelJob>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let total = jobs.len();
+        let (done_tx, done_rx) = channel::<bool>();
+        let mut submitted = 0usize;
+        {
+            let senders = self.senders.lock().expect("kernel pool poisoned");
+            for (i, job) in jobs.into_iter().enumerate() {
+                let guard_tx = done_tx.clone();
+                let wrapped: KernelJob = Box::new(move || {
+                    let mut guard = DoneGuard { tx: guard_tx, ok: false };
+                    job();
+                    guard.ok = true;
+                });
+                // A failed send returns (and drops) the wrapped job —
+                // its guard channel clone just closes, nothing runs.
+                if senders[i % senders.len()].send(wrapped).is_err() {
+                    break;
+                }
+                submitted += 1;
+            }
+        }
+        drop(done_tx);
+        // Drain one ack per submitted job. Disconnection means every
+        // outstanding wrapped job has been destroyed (all guard senders
+        // dropped), so no job can still be running — safe to stop.
+        let mut failed = false;
+        let mut acked = 0usize;
+        while acked < submitted {
+            match done_rx.recv() {
+                Ok(true) => acked += 1,
+                Ok(false) => {
+                    acked += 1;
+                    failed = true;
+                }
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        assert!(
+            !failed && submitted == total,
+            "kernel pool batch incomplete ({acked}/{total} ok): worker panic or dead worker"
+        );
+    }
+}
+
+/// The process-wide pool, lazily spawned with one worker per available
+/// core (capped at 16 — SYRK saturates memory bandwidth well before
+/// that on the shapes this crate targets).
+pub fn global_pool() -> &'static KernelPool {
+    static POOL: OnceLock<KernelPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let size = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16);
+        KernelPool::spawn(size)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(m: usize, n: usize, k: usize, a: &dyn Fn(usize, usize) -> f64, b: &dyn Fn(usize, usize) -> f64) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a(i, p) * b(p, j);
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn fill(len: usize, seed: u64) -> Vec<f64> {
+        // Tiny LCG — enough for kernel shape tests, no Mat dependency.
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..len)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dgemm_nn_odd_shapes_match_naive() {
+        for &(m, n, k) in
+            &[(1, 1, 1), (3, 5, 7), (MR, NR, KC), (MR + 1, NR + 1, KC + 1), (13, 17, 300)]
+        {
+            let a = fill(m * k, 1);
+            let b = fill(k * n, 2);
+            let mut c = vec![0.0; m * n];
+            dgemm(m, n, k, 1.0, &a, k, Trans::N, &b, n, Trans::N, 0.0, &mut c, n);
+            let want = naive(m, n, k, &|i, p| a[i * k + p], &|p, j| b[p * n + j]);
+            for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                assert!((x - y).abs() < 1e-12, "({m},{n},{k}) idx {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn dgemm_transposed_layouts_match_naive() {
+        let (m, n, k) = (9, 11, 37);
+        let at = fill(k * m, 3); // buffer k×m: logical A[i][p] = at[p*m + i]
+        let bt = fill(n * k, 4); // buffer n×k: logical B[p][j] = bt[j*k + p]
+        let want = naive(m, n, k, &|i, p| at[p * m + i], &|p, j| bt[j * k + p]);
+        let mut c = vec![0.0; m * n];
+        dgemm(m, n, k, 1.0, &at, m, Trans::T, &bt, k, Trans::T, 0.0, &mut c, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dgemm_respects_alpha_beta_and_ldc() {
+        let (m, n, k) = (4, 3, 5);
+        let a = fill(m * k, 5);
+        let b = fill(k * n, 6);
+        // C embedded in a wider buffer: ldc = n + 2.
+        let ldc = n + 2;
+        let mut c = fill(m * ldc, 7);
+        let c0 = c.clone();
+        dgemm(m, n, k, 2.0, &a, k, Trans::N, &b, n, Trans::N, -1.0, &mut c, ldc);
+        let prod = naive(m, n, k, &|i, p| a[i * k + p], &|p, j| b[p * n + j]);
+        for i in 0..m {
+            for j in 0..ldc {
+                let got = c[i * ldc + j];
+                if j < n {
+                    let want = 2.0 * prod[i * n + j] - c0[i * ldc + j];
+                    assert!((got - want).abs() < 1e-12);
+                } else {
+                    // Padding columns are untouched.
+                    assert_eq!(got, c0[i * ldc + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_panel_matches_naive_lower_triangle() {
+        let (n, m) = (KC - 1, 2 * KC + 3);
+        let a = fill(n * m, 8);
+        let mut w = vec![0.0; n * n];
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + MC).min(n);
+            syrk_panel(&a, n, m, i0, i1, &mut w[i0 * n..i1 * n]);
+            i0 = i1;
+        }
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = 0.0;
+                for p in 0..m {
+                    s += a[i * m + p] * a[j * m + p];
+                }
+                assert!((w[i * n + j] - s).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_is_reusable() {
+        let pool = global_pool();
+        assert!(pool.size() >= 1);
+        for round in 0..3 {
+            let counter = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let jobs: Vec<KernelJob> = (0..8)
+                .map(|_| {
+                    let c = counter.clone();
+                    Box::new(move || {
+                        c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    }) as KernelJob
+                })
+                .collect();
+            pool.run(jobs);
+            assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 8, "round {round}");
+        }
+    }
+
+    #[test]
+    fn kernel_config_defaults_and_env_shape() {
+        assert_eq!(KernelConfig::default(), KernelConfig::serial());
+        assert_eq!(KernelConfig::with_threads(0).threads, 1);
+        assert!(KernelConfig::from_env().threads >= 1);
+    }
+}

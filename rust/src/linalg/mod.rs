@@ -4,12 +4,16 @@
 //! native execution path needs the same primitives on CPU without external
 //! dependencies, so they are implemented here:
 //!
-//! * [`Mat`] — row-major dense `f64` matrix with blocked [`gemm`],
-//!   tall-skinny Gram products and matrix–vector kernels.
+//! * [`kernel`] — the packed, register-blocked GEMM engine (BLIS-style
+//!   MR×NR micro-kernel, KC/MC/NC cache blocking, persistent worker
+//!   pool) that every dense hot path below routes through since PR 1.
+//! * [`Mat`] — row-major dense `f64` matrix with matrix–vector kernels;
+//!   the GEMM/SYRK front-ends live in [`gemm`] on top of the engine.
 //! * [`cholesky`] — blocked right-looking Cholesky factorization
-//!   (the `potrf` the paper leans on).
+//!   (the `potrf` the paper leans on), trailing update on the engine.
 //! * [`trisolve`] — forward/backward substitution for vectors and blocked
-//!   multi-RHS `trsm`, the `L⁻¹S` / `L⁻ᵀ(·)` of Algorithm 1 line 3–4.
+//!   multi-RHS `trsm` (panel updates on the engine), the `L⁻¹S` /
+//!   `L⁻ᵀ(·)` of Algorithm 1 line 3–4.
 //! * [`eigh`] — cyclic Jacobi symmetric eigensolver (backs the paper's
 //!   `"eigh"` SVD baseline, Appendix C).
 //! * [`svd`] — one-sided Jacobi SVD (stand-in for CUDA `gesvda`, which is
@@ -22,6 +26,7 @@ pub mod cholesky;
 pub mod complex;
 pub mod eigh;
 pub mod gemm;
+pub mod kernel;
 pub mod mat;
 pub mod qr;
 pub mod svd;
@@ -30,7 +35,8 @@ pub mod trisolve;
 pub use cholesky::{cholesky, cholesky_in_place, CholeskyError};
 pub use complex::{c64, CMat};
 pub use eigh::eigh;
-pub use gemm::{gemm, gemm_nt, gemm_tn, syrk};
+pub use gemm::{gemm, gemm_nt, gemm_tn, syrk, syrk_parallel};
+pub use kernel::KernelConfig;
 pub use mat::Mat;
 pub use qr::qr;
 pub use svd::{svd_eigh, svd_jacobi, ThinSvd};

@@ -4,7 +4,7 @@
 //! dngd solve  --n 256 --m 8192 [--lambda 1e-3] [--solver chol|eigh|svda|naive|cg|all]
 //! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd]
 //! dngd vmc    [--config cfg.toml] [--set section.key=value]…
-//! dngd bench  --table1 | --scaling | --cg [--scale small|paper]
+//! dngd bench  --table1 | --scaling | --cg | --kernels [--scale small|paper] [--json out.json]
 //! dngd artifacts [--dir artifacts]
 //! ```
 //!
@@ -115,7 +115,7 @@ USAGE:
   dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|all] [--threads T]
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg) [--scale small|paper]
+  dngd bench  (--table1 | --scaling | --cg | --kernels) [--scale small|paper] [--json out.json] [--quick]
   dngd artifacts [--dir artifacts]";
 
 fn cmd_solve(args: &[String]) -> Result<(), String> {
@@ -264,7 +264,7 @@ fn cmd_vmc(args: &[String]) -> Result<(), String> {
 
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
-    a.expect_only(&["table1", "scaling", "cg", "scale"])?;
+    a.expect_only(&["table1", "scaling", "cg", "kernels", "scale", "json", "quick"])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
         "paper" => true,
@@ -277,8 +277,12 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         dngd::bench_tables::scaling(paper);
     } else if a.has("cg") {
         dngd::bench_tables::cg_conditioning();
+    } else if a.has("kernels") {
+        let json = a.get("json").filter(|s| !s.is_empty()).map(std::path::Path::new);
+        dngd::bench_tables::kernel_bench_report(a.has("quick"), json)
+            .map_err(|e| e.to_string())?;
     } else {
-        return Err("pick one of --table1 | --scaling | --cg".into());
+        return Err("pick one of --table1 | --scaling | --cg | --kernels".into());
     }
     Ok(())
 }

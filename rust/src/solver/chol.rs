@@ -15,14 +15,16 @@
 
 use super::{DampedSolver, SolveError};
 use crate::linalg::gemm::{syrk, syrk_parallel};
-use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, KernelConfig, Mat};
 
 /// Algorithm-1 solver ("chol").
 #[derive(Debug, Clone)]
 pub struct CholSolver {
     /// Worker threads for the SYRK (Gram) step, the only O(n²m) kernel.
-    /// 1 = serial. The paper's parallelization strategy (shared with
-    /// RVB+23) shards this product; within one process we thread it.
+    /// 1 = serial (deterministic default). Threaded SYRK runs on the
+    /// persistent kernel pool and is bit-identical to serial — the
+    /// paper's parallelization strategy (shared with RVB+23) shards this
+    /// product; within one process we thread it.
     pub threads: usize,
 }
 
@@ -35,6 +37,17 @@ impl Default for CholSolver {
 impl CholSolver {
     pub fn with_threads(threads: usize) -> Self {
         CholSolver { threads: threads.max(1) }
+    }
+
+    /// Construct from the shared kernel configuration (CLI / TOML /
+    /// coordinator plumbing all funnel through [`KernelConfig`]).
+    pub fn with_config(cfg: KernelConfig) -> Self {
+        CholSolver::with_threads(cfg.threads)
+    }
+
+    /// The kernel configuration this solver dispatches with.
+    pub fn kernel_config(&self) -> KernelConfig {
+        KernelConfig::with_threads(self.threads)
     }
 
     /// The factorized form: returns `(L, u = Sv)` so callers solving many
