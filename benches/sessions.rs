@@ -1,0 +1,22 @@
+//! PR-2 session-API amortization bench (EXPERIMENTS.md §Sessions): k
+//! one-shot Algorithm-1 solves vs factor-once + blocked multi-RHS +
+//! λ-resweeps on the cached Gram, at the acceptance shapes
+//! (n ∈ {256, 1024}, m = 16384, k = 8).
+//!
+//! Emits the machine-readable `BENCH_PR2.json` trajectory file (path
+//! overridable via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks every
+//! shape for CI smoke runs). In full mode the harness *asserts* the PR-2
+//! acceptance bar: amortized ≥ 3× cold on every row.
+//!
+//! ```text
+//! cargo bench --bench sessions
+//! ```
+
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("DNGD_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR2.json".to_string());
+    dngd::bench_tables::session_bench_report(quick, Some(Path::new(&json)), !quick)
+        .expect("write session bench json");
+}

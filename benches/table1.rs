@@ -1,7 +1,9 @@
 //! Regenerates **Table 1** of the paper: wall time of one damped solve
 //! for chol / eigh / svda over the ten (n, m) shapes, plus the svda
 //! `N/A` memory cell. `DNGD_PAPER_SCALE=1` runs the paper's exact shapes
-//! (slow on CPU); default is the proportionally scaled grid.
+//! (slow on CPU); default is the proportionally scaled grid. Solves run
+//! through the PR-2 session shim (factor → solve_into); the amortized
+//! (factor-once) timings live in `cargo bench --bench sessions`.
 //!
 //! ```text
 //! cargo bench --bench table1

@@ -3,6 +3,12 @@
 //! names. Fits a sum-of-Gaussians curve with many more parameters than
 //! residuals would classically allow, using adaptive damping.
 //!
+//! Session usage (PR 2): LM's whole control flow is λ-retries against a
+//! *fixed* Jacobian — exactly what the factor/redamp session amortizes.
+//! Each outer iteration factors the Jacobian once; rejected steps grow λ
+//! and re-damp the cached Gram (O(p³), zero O(p²n) rework) instead of
+//! re-solving from scratch.
+//!
 //! ```text
 //! cargo run --release --example levenberg_marquardt
 //! ```
@@ -74,10 +80,10 @@ fn main() {
     };
 
     println!("LM curve fit: {} observations, {p} parameters, 4-Gaussian mixture", n_obs);
-    println!("{:>5} | {:>12} | {:>10}", "iter", "SSE", "λ");
+    println!("{:>5} | {:>12} | {:>10} | retries", "iter", "SSE", "λ");
     let mut current = sse(&theta);
     for it in 0..60 {
-        // Jacobian (n×p) and residual.
+        // Jacobian (n×p) and residual — the expensive model evaluation.
         let mut jac = Mat::zeros(n_obs, p);
         let mut resid = vec![0.0; n_obs];
         for (i, (&t, &y)) in ts.iter().zip(&ys).enumerate() {
@@ -85,19 +91,31 @@ fn main() {
             resid[i] = mix.eval(&theta, t) - y;
         }
         // LM step: (JᵀJ + λI)δ = Jᵀr — exactly Eq. 1 with S = J, v = Jᵀr.
+        // Factor the Jacobian once; λ-retries re-damp the cached Gram.
         let v = jac.t_matvec(&resid);
-        let lambda = damping.lambda();
-        let delta = solver.solve(&jac, &v, lambda).expect("LM subproblem");
-        let candidate: Vec<f64> = theta.iter().zip(&delta).map(|(a, d)| a - d).collect();
-        let cand_sse = sse(&candidate);
-        let improved = cand_sse < current;
-        if improved {
-            theta = candidate;
-            current = cand_sse;
+        let mut fact = solver.begin(&jac);
+        let mut lambda = damping.lambda();
+        let mut retries = 0usize;
+        loop {
+            fact.redamp(lambda).expect("LM subproblem redamp");
+            let delta = fact.solve(&v).expect("LM subproblem solve");
+            let candidate: Vec<f64> = theta.iter().zip(&delta).map(|(a, d)| a - d).collect();
+            let cand_sse = sse(&candidate);
+            if cand_sse < current {
+                theta = candidate;
+                current = cand_sse;
+                damping.advance(true);
+                break;
+            }
+            damping.advance(false);
+            retries += 1;
+            if retries > 8 || damping.lambda() <= lambda {
+                break; // λ saturated — re-evaluate the Jacobian instead.
+            }
+            lambda = damping.lambda();
         }
-        damping.advance(improved);
         if it % 5 == 0 {
-            println!("{it:>5} | {current:>12.6} | {lambda:>10.2e}");
+            println!("{it:>5} | {current:>12.6} | {lambda:>10.2e} | {retries:>7}");
         }
         if current < 1e-4 * n_obs as f64 {
             break;

@@ -11,6 +11,9 @@
 //! * [`kernel_bench`] — per-kernel GFLOP/s for the packed engine vs the
 //!   seed scalar kernels, emitted as machine-readable JSON
 //!   (`BENCH_PR1.json`) so later PRs have a trajectory to beat.
+//! * [`session_bench`] — PR 2's amortization table: k one-shot solves vs
+//!   factor-once + blocked multi-RHS + λ-resweeps on the cached Gram,
+//!   emitted as `BENCH_PR2.json` (`dngd bench --sessions`).
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -324,6 +327,158 @@ pub fn kernel_bench_report(quick: bool, json_path: Option<&Path>) -> std::io::Re
     if let Some(path) = json_path {
         std::fs::write(path, kernel_bench_json(&rows, quick))?;
         println!("kernel bench table written to {}", path.display());
+    }
+    Ok(())
+}
+
+/// One row of the session (amortization) benchmark.
+#[derive(Debug, Clone)]
+pub struct SessionBenchRow {
+    pub n: usize,
+    pub m: usize,
+    /// Right-hand-side count.
+    pub k: usize,
+    /// k independent one-shot solves (the pre-PR-2 consumer pattern).
+    pub cold_ms: f64,
+    /// One session factor: Gram (O(n²m)) + Cholesky (O(n³)).
+    pub factor_ms: f64,
+    /// Blocked k-RHS back-substitution against the cached factor.
+    pub solve_many_ms: f64,
+    /// One λ-resweep on the cached Gram (O(n³) refactor, zero GEMMs on
+    /// the Gram path).
+    pub resweep_ms: f64,
+    /// `cold_ms / (factor_ms + solve_many_ms)`.
+    pub speedup: f64,
+}
+
+/// The PR-2 amortization benchmark: cold vs session solve latency for the
+/// Algorithm-1 solver at the acceptance shapes (n ∈ {256, 1024},
+/// m = 16384, k = 8; `quick` shrinks for CI smoke).
+pub fn session_bench(quick: bool) -> Vec<SessionBenchRow> {
+    let ns: &[usize] = if quick { &[64, 128] } else { &[256, 1024] };
+    let (m, k) = if quick { (2048usize, 8usize) } else { (16384, 8) };
+    let lambda = 1e-3;
+    let ms = |t0: std::time::Instant| t0.elapsed().as_secs_f64() * 1e3;
+    let mut rng = Rng::seed_from(20);
+    let mut rows = Vec::new();
+    for &n in ns {
+        let s = Mat::randn(n, m, &mut rng);
+        let vs = Mat::randn(k, m, &mut rng);
+        let solver = CholSolver::default();
+
+        // Cold: k independent one-shot solves.
+        let t0 = std::time::Instant::now();
+        for r in 0..k {
+            std::hint::black_box(solver.solve(&s, vs.row(r), lambda).expect("cold solve"));
+        }
+        let cold_ms = ms(t0);
+
+        // Session: factor once, then one blocked k-RHS solve.
+        let t0 = std::time::Instant::now();
+        let mut fact = solver.factor(&s, lambda).expect("factor");
+        let factor_ms = ms(t0);
+        let t0 = std::time::Instant::now();
+        let x = fact.solve_many(&vs).expect("solve_many");
+        std::hint::black_box(&x);
+        let solve_many_ms = ms(t0);
+
+        // Correctness gate: the benchmark must measure a correct session.
+        let fro = s.fro_norm();
+        for r in 0..k {
+            let res = crate::solver::residual_norm(&s, x.row(r), vs.row(r), lambda);
+            let scale = fro * fro * crate::linalg::mat::norm2(x.row(r))
+                + crate::linalg::mat::norm2(vs.row(r));
+            assert!(res < 1e-9 * scale.max(1.0), "session residual {res} (rhs {r})");
+        }
+
+        // λ-resweep on the cached Gram.
+        let t0 = std::time::Instant::now();
+        let sweep = [1e-2, 1e-4, 1e-3];
+        for &l in &sweep {
+            fact.redamp(l).expect("redamp");
+        }
+        let resweep_ms = ms(t0) / sweep.len() as f64;
+
+        let speedup = cold_ms / (factor_ms + solve_many_ms).max(1e-9);
+        rows.push(SessionBenchRow {
+            n,
+            m,
+            k,
+            cold_ms,
+            factor_ms,
+            solve_many_ms,
+            resweep_ms,
+            speedup,
+        });
+    }
+    rows
+}
+
+/// Render session-bench rows as the `BENCH_PR2.json` payload
+/// (hand-rolled JSON — the build is offline, no serde).
+pub fn session_bench_json(rows: &[SessionBenchRow], quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 2,\n");
+    out.push_str("  \"bench\": \"sessions\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(
+        "  \"unit\": {\"*_ms\": \"milliseconds\", \"speedup\": \"cold / (factor + solve_many)\"},\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"n\": {}, \"m\": {}, \"k\": {}, \"cold_ms\": {:.3}, \"factor_ms\": {:.3}, \
+                 \"solve_many_ms\": {:.3}, \"resweep_ms\": {:.3}, \"speedup\": {:.2}}}",
+                r.n, r.m, r.k, r.cold_ms, r.factor_ms, r.solve_many_ms, r.resweep_ms, r.speedup
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the session benchmark, print the table, optionally write JSON.
+/// `strict` enforces the PR-2 acceptance bar (amortized ≥ 3× cold) —
+/// used by the `cargo bench --bench sessions` harness.
+pub fn session_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    let rows = session_bench(quick);
+    println!(
+        "{:>6} | {:>6} | {:>2} | {:>10} | {:>10} | {:>10} | {:>10} | {:>7}",
+        "n", "m", "k", "cold", "factor", "solve_many", "resweep/λ", "speedup"
+    );
+    for r in &rows {
+        println!(
+            "{:>6} | {:>6} | {:>2} | {:>8.1}ms | {:>8.1}ms | {:>8.1}ms | {:>8.1}ms | {:>6.2}×",
+            r.n, r.m, r.k, r.cold_ms, r.factor_ms, r.solve_many_ms, r.resweep_ms, r.speedup
+        );
+    }
+    println!(
+        "\namortized = factor once + one blocked {}-RHS solve; resweep/λ = re-damp on the cached \
+         Gram (no O(n²m) rework).",
+        rows.first().map(|r| r.k).unwrap_or(8)
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, session_bench_json(&rows, quick))?;
+        println!("session bench table written to {}", path.display());
+    }
+    if strict {
+        for r in &rows {
+            assert!(
+                r.speedup >= 3.0,
+                "PR-2 acceptance: amortized path must be ≥3× cold at n={}, got {:.2}×",
+                r.n,
+                r.speedup
+            );
+        }
+        println!("acceptance: all rows ≥ 3× ✓");
     }
     Ok(())
 }

@@ -1,9 +1,9 @@
 //! Typed configuration schema with validation and CLI overrides.
 
 use super::toml::{parse_toml, parse_value, TomlDoc};
-use crate::solver::SolverKind;
+use crate::solver::{SolverKind, SolverOptions};
 
-/// Solver selection + damping.
+/// Solver selection + damping + per-solver options.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SolverConfig {
     pub kind: SolverKind,
@@ -17,10 +17,19 @@ pub struct SolverConfig {
     /// mini-batch NGD, where n ≪ m makes the per-batch Fisher noisy.
     pub adaptive: bool,
     pub threads: usize,
+    /// CG relative-residual tolerance (`--set solver.cg_tol=…`).
+    pub cg_tol: f64,
+    /// CG iteration cap.
+    pub cg_max_iters: usize,
+    /// Modeled device budget in GB for svda/naive (0 = 80 GB A100).
+    pub budget_gb: f64,
+    /// RVB `v = Sᵀf` reconstruction tolerance.
+    pub rvb_tol: f64,
 }
 
 impl Default for SolverConfig {
     fn default() -> Self {
+        let opts = SolverOptions::default();
         SolverConfig {
             kind: SolverKind::Chol,
             lambda: 1e-3,
@@ -28,7 +37,25 @@ impl Default for SolverConfig {
             lambda_min: 1e-6,
             lambda_max: 1e3,
             adaptive: false,
-            threads: 1,
+            threads: opts.threads,
+            cg_tol: opts.cg_tol,
+            cg_max_iters: opts.cg_max_iters,
+            budget_gb: opts.budget_gb,
+            rvb_tol: opts.rvb_tol,
+        }
+    }
+}
+
+impl SolverConfig {
+    /// The per-solver options this config selects — handed to
+    /// [`crate::solver::SolverRegistry`] by the trainer and CLI.
+    pub fn options(&self) -> SolverOptions {
+        SolverOptions {
+            threads: self.threads.max(1),
+            cg_tol: self.cg_tol,
+            cg_max_iters: self.cg_max_iters,
+            budget_gb: self.budget_gb,
+            rvb_tol: self.rvb_tol,
         }
     }
 }
@@ -193,6 +220,10 @@ impl Config {
         get_f64(doc, "solver.lambda_max", &mut cfg.solver.lambda_max)?;
         get_bool(doc, "solver.adaptive", &mut cfg.solver.adaptive)?;
         get_usize(doc, "solver.threads", &mut cfg.solver.threads)?;
+        get_f64(doc, "solver.cg_tol", &mut cfg.solver.cg_tol)?;
+        get_usize(doc, "solver.cg_max_iters", &mut cfg.solver.cg_max_iters)?;
+        get_f64(doc, "solver.budget_gb", &mut cfg.solver.budget_gb)?;
+        get_f64(doc, "solver.rvb_tol", &mut cfg.solver.rvb_tol)?;
 
         get_usize(doc, "model.dim", &mut cfg.model.dim)?;
         get_usize(doc, "model.heads", &mut cfg.model.heads)?;
@@ -238,6 +269,9 @@ impl Config {
         if !(0.0..=1.0).contains(&self.solver.lambda_decay) {
             return Err("solver.lambda_decay must be in (0, 1]".into());
         }
+        // Per-solver option ranges: one source of truth with the CLI
+        // `--set solver.*` path.
+        self.solver.options().validate()?;
         if self.model.dim % self.model.heads != 0 {
             return Err(format!(
                 "model.heads {} must divide model.dim {}",
@@ -268,6 +302,10 @@ const KNOWN_KEYS: &[&str] = &[
     "solver.lambda_max",
     "solver.adaptive",
     "solver.threads",
+    "solver.cg_tol",
+    "solver.cg_max_iters",
+    "solver.budget_gb",
+    "solver.rvb_tol",
     "model.dim",
     "model.heads",
     "model.layers",
@@ -422,6 +460,26 @@ variant = "real_part"
         assert!(Config::from_toml_str("[model]\ndim = 10\nheads = 3\n", &[]).is_err());
         assert!(Config::from_toml_str("[vmc]\nvariant = \"bogus\"\n", &[]).is_err());
         assert!(Config::from_toml_str("[solver]\nkind = \"lu\"\n", &[]).is_err());
+        assert!(Config::from_toml_str("[solver]\ncg_tol = 0.0\n", &[]).is_err());
+        assert!(Config::from_toml_str("[solver]\ncg_max_iters = 0\n", &[]).is_err());
+    }
+
+    #[test]
+    fn per_solver_options_flow_through() {
+        let cfg = Config::from_toml_str(
+            "[solver]\nkind = \"cg\"\ncg_tol = 1e-8\ncg_max_iters = 321\nbudget_gb = 40.0\n",
+            &["solver.rvb_tol=1e-5".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.kind, SolverKind::Cg);
+        let opts = cfg.solver.options();
+        assert_eq!(opts.cg_tol, 1e-8);
+        assert_eq!(opts.cg_max_iters, 321);
+        assert_eq!(opts.budget_gb, 40.0);
+        assert_eq!(opts.rvb_tol, 1e-5);
+        // rvb is parseable as a config kind (the PR-2 bug fix).
+        let cfg = Config::from_toml_str("[solver]\nkind = \"rvb\"\n", &[]).unwrap();
+        assert_eq!(cfg.solver.kind, SolverKind::Rvb);
     }
 
     #[test]

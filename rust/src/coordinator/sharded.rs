@@ -1,10 +1,17 @@
 //! Distributed Algorithm 1 over the worker pool.
+//!
+//! Session note (PR 2): [`ShardedFactor`] stages the distributed solve —
+//! shard distribution and the tree-reduced Gram happen once per score
+//! matrix; λ-resweeps refactor the cached n×n Gram on the leader in
+//! O(n³) with **zero** worker traffic, and each right-hand side costs one
+//! matvec/apply round-trip (phases 2–4).
 
 use super::pool::{Job, PoolError, WorkerPool};
 use super::reduce::{reduce_vecs, tree_reduce_mats};
 use super::shard::ShardPlan;
-use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, KernelConfig, Mat};
-use crate::solver::{DampedSolver, SolveError};
+use crate::linalg::{solve_lower, solve_lower_transpose, KernelConfig, Mat};
+use crate::solver::session::{check_lambda, refactor_damped, undamped_err};
+use crate::solver::{DampedSolver, Factorization, SolveError};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -52,21 +59,10 @@ impl ShardedCholSolver {
         SolveError::BadInput(format!("coordinator: {e}"))
     }
 
-    /// Full distributed solve of `(SᵀS + λI) x = v`.
-    pub fn solve_distributed(
-        &self,
-        s: &Mat,
-        v: &[f64],
-        lambda: f64,
-    ) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols());
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let plan = self.distribute(s).map_err(Self::pool_err)?;
+    /// Phase 1: partial Grams on the workers, tree-reduced on the leader
+    /// (un-damped — the session adds λ when refactoring).
+    fn gram_reduced(&self, plan: &ShardPlan) -> Result<Mat, SolveError> {
         let w_count = plan.workers();
-
-        // Phase 1: partial Grams, tree-reduced; leader adds λĨ + factors.
         let (gtx, grx) = channel();
         for w in 0..w_count {
             self.pool.send(w, Job::Gram { reply: gtx.clone() }).map_err(Self::pool_err)?;
@@ -77,9 +73,19 @@ impl ShardedCholSolver {
             let (_, part) = grx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
             parts.push(part);
         }
-        let mut w_mat = tree_reduce_mats(parts, 4);
-        w_mat.add_diag(lambda);
-        let l = cholesky(&w_mat)?;
+        Ok(tree_reduce_mats(parts, 4))
+    }
+
+    /// Phases 2–4 for one right-hand side against a leader-local factor.
+    fn apply_phases(
+        &self,
+        plan: &ShardPlan,
+        l: &Mat,
+        v: &[f64],
+        lambda: f64,
+        x: &mut [f64],
+    ) -> Result<(), SolveError> {
+        let w_count = plan.workers();
 
         // Phase 2: partial matvecs u_k = S_k v_k, reduced on the leader.
         let (utx, urx) = channel();
@@ -97,8 +103,8 @@ impl ShardedCholSolver {
         let u = reduce_vecs(&uparts);
 
         // Phase 3: leader-local O(n²) triangular solves.
-        let y = solve_lower(&l, &u);
-        let z = Arc::new(solve_lower_transpose(&l, &y));
+        let y = solve_lower(l, &u);
+        let z = Arc::new(solve_lower_transpose(l, &y));
 
         // Phase 4: per-shard apply, gathered in shard order.
         let (xtx, xrx) = channel();
@@ -121,13 +127,93 @@ impl ShardedCholSolver {
             let (wid, x_k) = xrx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
             pieces[wid] = Some(x_k);
         }
-        let mut x = Vec::with_capacity(s.cols());
         for (w, piece) in pieces.into_iter().enumerate() {
             let piece = piece.ok_or_else(|| Self::pool_err(PoolError::MissingShard(w)))?;
-            assert_eq!(piece.len(), plan.ranges[w].1 - plan.ranges[w].0);
-            x.extend_from_slice(&piece);
+            let (c0, c1) = plan.ranges[w];
+            assert_eq!(piece.len(), c1 - c0);
+            x[c0..c1].copy_from_slice(&piece);
         }
-        Ok(x)
+        Ok(())
+    }
+
+    /// Full distributed solve of `(SᵀS + λI) x = v` — one-shot shim over
+    /// the [`ShardedFactor`] session.
+    pub fn solve_distributed(
+        &self,
+        s: &Mat,
+        v: &[f64],
+        lambda: f64,
+    ) -> Result<Vec<f64>, SolveError> {
+        let mut fact = self.factor(s, lambda)?;
+        fact.solve(v)
+    }
+}
+
+/// Distributed session: shard distribution + reduced Gram staged once,
+/// λ-resweeps leader-local, each RHS one pipelined worker round-trip.
+///
+/// Sessions on one [`ShardedCholSolver`] share its worker pool (workers
+/// hold one shard set at a time), so interleaving two *live* sessions on
+/// the same solver is not supported — the same sequential-use contract
+/// the one-shot path always had.
+pub struct ShardedFactor<'s> {
+    solver: &'s ShardedCholSolver,
+    s: &'s Mat,
+    lambda: f64,
+    plan: Option<ShardPlan>,
+    /// Tree-reduced un-damped Gram, cached on the leader.
+    gram: Option<Mat>,
+    l: Option<Mat>,
+}
+
+impl<'s> ShardedFactor<'s> {
+    fn new(solver: &'s ShardedCholSolver, s: &'s Mat) -> Self {
+        ShardedFactor { solver, s, lambda: 0.0, plan: None, gram: None, l: None }
+    }
+}
+
+impl Factorization for ShardedFactor<'_> {
+    fn name(&self) -> &'static str {
+        "chol-sharded"
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        if self.plan.is_none() {
+            let plan = self.solver.distribute(self.s).map_err(ShardedCholSolver::pool_err)?;
+            self.gram = Some(self.solver.gram_reduced(&plan)?);
+            self.plan = Some(plan);
+        }
+        match refactor_damped(self.gram.as_ref().unwrap(), lambda) {
+            Ok(l) => {
+                self.l = Some(l);
+                self.lambda = lambda;
+                Ok(())
+            }
+            Err(e) => {
+                self.l = None;
+                self.lambda = 0.0;
+                Err(e)
+            }
+        }
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.s.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        let (Some(plan), Some(l)) = (self.plan.as_ref(), self.l.as_ref()) else {
+            return Err(undamped_err());
+        };
+        self.solver.apply_phases(plan, l, v, self.lambda, x)
     }
 }
 
@@ -136,8 +222,8 @@ impl DampedSolver for ShardedCholSolver {
         "chol-sharded"
     }
 
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        self.solve_distributed(s, v, lambda)
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(ShardedFactor::new(self, s))
     }
 }
 
@@ -178,6 +264,27 @@ mod tests {
             let x = solver.solve_distributed(&s, &v, 0.1).unwrap();
             assert!(residual_norm(&s, &x, &v, 0.1) < 1e-8);
         }
+    }
+
+    #[test]
+    fn session_amortizes_rhs_and_resweeps() {
+        let mut rng = Rng::seed_from(433);
+        let solver = ShardedCholSolver::new(3, 2);
+        let s = Mat::randn(12, 70, &mut rng);
+        let mut fact = solver.factor(&s, 0.2).unwrap();
+        for _ in 0..3 {
+            let v: Vec<f64> = (0..70).map(|_| rng.normal()).collect();
+            let x = fact.solve(&v).unwrap();
+            let serial = CholSolver::default().solve(&s, &v, 0.2).unwrap();
+            for (a, b) in x.iter().zip(&serial) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+        // λ-resweep: leader-local refactor, then solve again.
+        fact.redamp(0.002).unwrap();
+        let v: Vec<f64> = (0..70).map(|_| rng.normal()).collect();
+        let x = fact.solve(&v).unwrap();
+        assert!(residual_norm(&s, &x, &v, 0.002) < 1e-8);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::metrics::MetricsLog;
 use crate::model::{BatchEval, Transformer, TransformerConfig};
 use crate::ngd::{DampingSchedule, NaturalGradient, Sgd};
 use crate::runtime::{ArtifactRegistry, Backend};
-use crate::solver::{DampedSolver, SolveError};
+use crate::solver::{DampedSolver, SolveError, SolverKind, SolverRegistry};
 use std::path::Path;
 use std::time::Instant;
 
@@ -75,36 +75,46 @@ impl Trainer {
         let m = model.num_params();
         let n = cfg.train.batch_size;
 
-        // Backend selection: PJRT artifact if one matches (n, m) and
-        // artifacts are enabled; sharded-native when workers > 1; serial
-        // native otherwise.
+        // Backend selection through the solver registry: PJRT artifact if
+        // one matches (n, m) and artifacts are enabled; sharded-native
+        // when workers > 1 and the kind is the shardable `chol`; otherwise
+        // a registry-built serial solver of the configured kind with its
+        // per-solver options (cg tolerance, budgets, threads, …).
+        let registry = SolverRegistry::new(cfg.solver.options());
+        let shardable = cfg.solver.kind == SolverKind::Chol && cfg.coordinator.workers > 1;
+        if cfg.solver.kind != SolverKind::Chol
+            && (cfg.coordinator.workers > 1 || cfg.coordinator.use_artifacts)
+        {
+            // Not silently ignored (the config policy): only `chol` has a
+            // sharded / PJRT-artifact backend today.
+            eprintln!(
+                "[trainer] solver.kind = {:?} has no sharded/artifact backend; \
+                 coordinator.workers/use_artifacts apply to batch eval only — \
+                 the solve runs serial native",
+                cfg.solver.kind.as_str()
+            );
+        }
+        let sharded = || -> (Box<dyn DampedSolver>, String) {
+            (
+                Box::new(super::ShardedCholSolver::new(
+                    cfg.coordinator.workers,
+                    cfg.coordinator.queue_depth,
+                )),
+                format!("sharded×{}", cfg.coordinator.workers),
+            )
+        };
         let (solver_box, backend_name): (Box<dyn DampedSolver>, String) =
-            if cfg.coordinator.use_artifacts {
+            if cfg.coordinator.use_artifacts && cfg.solver.kind == SolverKind::Chol {
                 let reg = ArtifactRegistry::scan(Path::new(&cfg.coordinator.artifact_dir));
                 match Backend::select(&reg, n, m, cfg.solver.threads) {
                     Backend::Pjrt(p) => (Box::new(p), "pjrt".to_string()),
-                    Backend::Native(_) if cfg.coordinator.workers > 1 => (
-                        Box::new(super::ShardedCholSolver::new(
-                            cfg.coordinator.workers,
-                            cfg.coordinator.queue_depth,
-                        )),
-                        format!("sharded×{}", cfg.coordinator.workers),
-                    ),
+                    Backend::Native(_) if shardable => sharded(),
                     Backend::Native(c) => (Box::new(c), "native".to_string()),
                 }
-            } else if cfg.coordinator.workers > 1 {
-                (
-                    Box::new(super::ShardedCholSolver::new(
-                        cfg.coordinator.workers,
-                        cfg.coordinator.queue_depth,
-                    )),
-                    format!("sharded×{}", cfg.coordinator.workers),
-                )
+            } else if shardable {
+                sharded()
             } else {
-                (
-                    Box::new(crate::solver::CholSolver::with_threads(cfg.solver.threads)),
-                    "native".to_string(),
-                )
+                (registry.build(cfg.solver.kind), "native".to_string())
             };
 
         let solver = match optimizer {
@@ -384,6 +394,20 @@ use_artifacts = false
         assert_eq!(step, 4);
         assert_eq!(trainer.params, saved_params);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_chol_kind_routes_through_registry() {
+        let mut cfg = tiny_config();
+        cfg.solver.kind = crate::solver::SolverKind::Cg;
+        cfg.train.steps = 3;
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        // CG is not shardable: the registry hands back a serial native
+        // solver even with workers > 1.
+        assert_eq!(trainer.backend(), "native");
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = trainer.run(&mut log).unwrap();
+        assert!(report.final_loss.is_finite());
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! | module | role |
 //! |--------|------|
 //! | [`linalg`] | dense linear-algebra substrate (GEMM, SYRK, Cholesky, triangular solves, Jacobi eigh/SVD, QR, complex) — built from scratch |
-//! | [`solver`] | the paper's Algorithm 1 (`chol`) and every baseline it benchmarks against (`eigh`, `svda`, `naive`, `cg`, `rvb`) plus complex SR variants |
+//! | [`solver`] | the paper's Algorithm 1 (`chol`) and every baseline it benchmarks against (`eigh`, `svda`, `naive`, `cg`, `rvb`), behind the plan/factor/solve session API (Gram cached across λ-resweeps, blocked multi-RHS), plus complex SR variants |
 //! | [`ngd`]    | natural-gradient optimizer: damping schedules, trust region, momentum, KFAC block-diagonal baseline |
 //! | [`model`]  | native model substrate: MLP / tiny transformer with per-sample score rows |
 //! | [`vmc`]    | variational Monte Carlo: Ising Hamiltonian, complex RBM, Metropolis, stochastic reconfiguration |

@@ -315,6 +315,15 @@ impl CMat {
         w
     }
 
+    /// Add `lambda` to the (real part of the) diagonal — re-damping a
+    /// cached un-damped Hermitian Gram in the complex SR session.
+    pub fn add_diag(&mut self, lambda: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += c64::from_re(lambda);
+        }
+    }
+
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |a, z| a.max(z.abs()))
     }

@@ -122,6 +122,7 @@ fn mirror_and_damp(w: &mut Mat, lambda: f64) {
 /// the end. The serial sweep visits exactly the panels the parallel
 /// version deals out, so both produce bit-identical results.
 pub fn syrk(a: &Mat, lambda: f64) -> Mat {
+    kernel::counters::record_syrk();
     let (n, m) = a.shape();
     let mut w = Mat::zeros(n, n);
     if n > 0 && m > 0 {
@@ -163,6 +164,7 @@ pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
     if threads <= 1 || n < 64 {
         return syrk(a, lambda);
     }
+    kernel::counters::record_syrk();
     let panels: Vec<(usize, usize)> = {
         let mut v = Vec::new();
         let mut i0 = 0;

@@ -37,6 +37,46 @@
 use std::sync::mpsc::{channel, sync_channel, SyncSender};
 use std::sync::{Mutex, OnceLock};
 
+/// Thread-local kernel-invocation counters.
+///
+/// The session API (PR 2) promises that re-damping a cached
+/// [`Factorization`](crate::solver::Factorization) with a new λ performs
+/// **zero** Gram-forming GEMM work; these counters make that promise
+/// testable. Counts are per-thread so concurrently running tests cannot
+/// pollute each other's deltas; work dispatched to pool workers (threaded
+/// SYRK panels, coordinator shards) is counted on the worker threads, not
+/// the caller's — the counters track front-end *invocations* on the
+/// current thread, not FLOPs.
+pub mod counters {
+    use std::cell::Cell;
+
+    thread_local! {
+        static DGEMM: Cell<u64> = Cell::new(0);
+        static SYRK: Cell<u64> = Cell::new(0);
+    }
+
+    pub(crate) fn record_dgemm() {
+        DGEMM.with(|c| c.set(c.get() + 1));
+    }
+
+    pub(crate) fn record_syrk() {
+        SYRK.with(|c| c.set(c.get() + 1));
+    }
+
+    /// [`dgemm`](super::dgemm) invocations on this thread since start.
+    pub fn dgemm_calls() -> u64 {
+        DGEMM.with(|c| c.get())
+    }
+
+    /// Gram-stage front-end invocations
+    /// ([`syrk`](crate::linalg::gemm::syrk) /
+    /// [`syrk_parallel`](crate::linalg::gemm::syrk_parallel)) on this
+    /// thread since start.
+    pub fn syrk_calls() -> u64 {
+        SYRK.with(|c| c.get())
+    }
+}
+
 /// Micro-kernel rows: accumulator height. 4 rows × 8 lanes = 32 f64
 /// accumulators ≈ half the AVX-512 (or all the AVX2-ymm) register file,
 /// leaving room for the broadcast and B-row temporaries.
@@ -275,6 +315,7 @@ pub fn dgemm(
     c: &mut [f64],
     ldc: usize,
 ) {
+    counters::record_dgemm();
     if beta != 1.0 {
         for i in 0..m {
             for cv in &mut c[i * ldc..i * ldc + n] {

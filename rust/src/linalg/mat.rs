@@ -148,6 +148,32 @@ impl Mat {
         y
     }
 
+    /// `out = A x` into caller storage — the allocation-free variant the
+    /// session solve path uses on every right-hand side.
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// `out = Aᵀ x` into caller storage (allocation-free [`Mat::t_matvec`]).
+    pub fn t_matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &r) in out.iter_mut().zip(self.row(i)) {
+                *o += xi * r;
+            }
+        }
+    }
+
     /// Column `j` copied out (the substrate is row-major; columns are
     /// strided so this is for tests/oracles only).
     pub fn col(&self, j: usize) -> Vec<f64> {

@@ -17,7 +17,7 @@ use dngd::coordinator::Trainer;
 use dngd::data::rng::Rng;
 use dngd::linalg::Mat;
 use dngd::metrics::MetricsLog;
-use dngd::solver::{make_solver, residual_norm, SolverKind};
+use dngd::solver::{residual_norm, SolveError, SolverKind, SolverRegistry};
 use std::process::ExitCode;
 
 mod cli {
@@ -112,26 +112,71 @@ fn main() -> ExitCode {
 const USAGE: &str = "dngd — damped natural gradient descent at scale (Chen, Xie & Wang 2023)
 
 USAGE:
-  dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|all] [--threads T]
+  dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|rvb|all] [--threads T]
+              [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels) [--scale small|paper] [--json out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions) [--scale small|paper] [--json out.json] [--quick]
   dngd artifacts [--dir artifacts]";
+
+/// Parse a `--lambda-sweep a,b,c` list.
+fn parse_lambda_sweep(spec: &str) -> Result<Vec<f64>, String> {
+    let sweep: Result<Vec<f64>, String> = spec
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<f64>().map_err(|_| format!("--lambda-sweep: cannot parse {t:?}"))
+        })
+        .collect();
+    let sweep = sweep?;
+    if sweep.is_empty() || sweep.iter().any(|&l| l <= 0.0) {
+        return Err("--lambda-sweep needs a non-empty list of positive λ values".into());
+    }
+    Ok(sweep)
+}
 
 fn cmd_solve(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
-    a.expect_only(&["n", "m", "lambda", "solver", "threads", "seed"])?;
+    a.expect_only(&[
+        "n", "m", "lambda", "lambda-sweep", "solver", "threads", "seed", "rhs", "set",
+    ])?;
     let n: usize = a.parsed("n", 256)?;
     let m: usize = a.parsed("m", 8192)?;
     let lambda: f64 = a.parsed("lambda", 1e-3)?;
     let threads: usize = a.parsed("threads", 1)?;
     let seed: u64 = a.parsed("seed", 42)?;
+    let rhs: usize = a.parsed("rhs", 1)?;
+    if rhs == 0 {
+        return Err("--rhs must be ≥ 1".into());
+    }
     let which = a.get("solver").unwrap_or("chol");
+    if a.has("lambda") && a.has("lambda-sweep") {
+        // No-silent-ignore: the sweep would discard --lambda.
+        return Err("--lambda and --lambda-sweep are mutually exclusive; put every λ in the sweep"
+            .into());
+    }
+    let sweep: Vec<f64> = match a.get("lambda-sweep").filter(|s| !s.is_empty()) {
+        Some(spec) => parse_lambda_sweep(spec)?,
+        None => vec![lambda],
+    };
+
+    // Per-solver options: --threads T is shorthand for
+    // --set solver.threads=T (prepended, so an explicit --set wins).
+    // Unknown keys are hard errors (no-silent-ignore).
+    let mut overrides = Vec::new();
+    if threads > 1 {
+        overrides.push(format!("solver.threads={threads}"));
+    }
+    overrides.extend(a.get_all("set"));
+    let registry = SolverRegistry::from_overrides(&overrides)?;
 
     let mut rng = Rng::seed_from(seed);
     let s = Mat::randn(n, m, &mut rng);
-    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
-    println!("damped Fisher solve: n={n} m={m} λ={lambda}");
+    println!("damped Fisher solve: n={n} m={m} k={rhs} RHS, λ sweep {sweep:?}");
+    println!(
+        "{:>6} | {:>12} | {:>12} | {:>8} | residual",
+        "solver", "cold (ms)", "session (ms)", "speedup"
+    );
 
     let kinds: Vec<SolverKind> = if which == "all" {
         SolverKind::all().to_vec()
@@ -139,20 +184,64 @@ fn cmd_solve(args: &[String]) -> Result<(), String> {
         vec![SolverKind::parse(which).ok_or_else(|| format!("unknown solver {which:?}"))?]
     };
     for kind in kinds {
-        let solver: Box<dyn dngd::solver::DampedSolver> = if kind == SolverKind::Chol && threads > 1
-        {
-            Box::new(dngd::solver::CholSolver::with_threads(threads))
-        } else {
-            make_solver(kind)
-        };
-        let t0 = std::time::Instant::now();
-        match solver.solve(&s, &v, lambda) {
-            Ok(x) => {
-                let dt = t0.elapsed().as_secs_f64() * 1e3;
-                let r = residual_norm(&s, &x, &v, lambda);
-                println!("  {:>6}: {dt:>10.2} ms   residual {r:.3e}", kind.as_str());
+        // rvb requires v = Sᵀf; give it its native structured input so the
+        // row documents the fast path instead of always printing N/A.
+        let vs = if kind == SolverKind::Rvb {
+            let mut vs = Mat::zeros(rhs, m);
+            for r in 0..rhs {
+                let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                vs.row_mut(r).copy_from_slice(&s.t_matvec(&f));
             }
-            Err(e) => println!("  {:>6}: N/A ({e})", kind.as_str()),
+            vs
+        } else {
+            Mat::randn(rhs, m, &mut rng)
+        };
+        let solver = registry.build(kind);
+
+        // Cold: one full one-shot solve per (λ, RHS) pair — the pre-PR-2
+        // behaviour every consumer used to pay.
+        let t0 = std::time::Instant::now();
+        let mut cold_err = None;
+        'cold: for &l in &sweep {
+            for r in 0..rhs {
+                if let Err(e) = solver.solve(&s, vs.row(r), l) {
+                    cold_err = Some(e);
+                    break 'cold;
+                }
+            }
+        }
+        let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if let Some(e) = cold_err {
+            println!("{:>6} | {:>25} N/A ({e})", kind.as_str(), "");
+            continue;
+        }
+
+        // Session: stage once (the λ-independent state is computed by the
+        // first redamp — no double-factorization), resweep λ on the
+        // cached Gram, blocked multi-RHS back-substitution. Any session
+        // failure prints N/A like the cold path, so `--solver all` always
+        // emits every row.
+        let t0 = std::time::Instant::now();
+        let session: Result<(f64, Mat), SolveError> = (|| {
+            let mut fact = solver.begin(&s);
+            let mut last = None;
+            for &l in &sweep {
+                fact.redamp(l)?;
+                last = Some((l, fact.solve_many(&vs)?));
+            }
+            Ok(last.expect("non-empty sweep"))
+        })();
+        let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+        match session {
+            Ok((l_last, x)) => {
+                let r = residual_norm(&s, x.row(0), vs.row(0), l_last);
+                println!(
+                    "{:>6} | {cold_ms:>12.2} | {warm_ms:>12.2} | {:>7.2}× | {r:.3e}",
+                    kind.as_str(),
+                    cold_ms / warm_ms.max(1e-9)
+                );
+            }
+            Err(e) => println!("{:>6} | {:>25} N/A ({e})", kind.as_str(), ""),
         }
     }
     Ok(())
@@ -264,7 +353,7 @@ fn cmd_vmc(args: &[String]) -> Result<(), String> {
 
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
-    a.expect_only(&["table1", "scaling", "cg", "kernels", "scale", "json", "quick"])?;
+    a.expect_only(&["table1", "scaling", "cg", "kernels", "sessions", "scale", "json", "quick"])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
         "paper" => true,
@@ -281,8 +370,16 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         let json = a.get("json").filter(|s| !s.is_empty()).map(std::path::Path::new);
         dngd::bench_tables::kernel_bench_report(a.has("quick"), json)
             .map_err(|e| e.to_string())?;
+    } else if a.has("sessions") {
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR2.json");
+        dngd::bench_tables::session_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
-        return Err("pick one of --table1 | --scaling | --cg | --kernels".into());
+        return Err("pick one of --table1 | --scaling | --cg | --kernels | --sessions".into());
     }
     Ok(())
 }

@@ -3,7 +3,7 @@
 use super::DampingSchedule;
 use crate::linalg::mat::norm2;
 use crate::linalg::Mat;
-use crate::solver::{DampedSolver, SolveError};
+use crate::solver::{solve_with_backoff, DampedSolver, SolveError};
 
 /// Damped NGD/SR optimizer state.
 ///
@@ -23,7 +23,9 @@ pub struct NaturalGradient {
     steps: usize,
     /// Cholesky retry policy: on `NotPositiveDefinite`, multiply λ by 10
     /// and retry up to this many times (damping is the fix the error
-    /// message recommends; the optimizer automates it).
+    /// message recommends; the optimizer automates it). Since PR 2 the
+    /// retry re-damps the cached session factorization, so each backoff
+    /// costs O(n³) instead of repeating the O(n²m) Gram product.
     pub pd_retries: usize,
 }
 
@@ -89,18 +91,12 @@ impl NaturalGradient {
         self.damping.advance(improved);
         self.last_loss = Some(loss);
 
-        let mut lambda = self.damping.lambda();
-        let mut retries = 0usize;
-        let x = loop {
-            match self.solver.solve(scores, grad, lambda) {
-                Ok(x) => break x,
-                Err(SolveError::NotPositiveDefinite(_)) if retries < self.pd_retries => {
-                    retries += 1;
-                    lambda *= 10.0;
-                }
-                Err(e) => return Err(e),
-            }
-        };
+        // Session path: the λ-independent state (Gram/SVD) is staged once;
+        // PD backoff re-damps it in place.
+        let mut fact = self.solver.begin(scores);
+        let (x, lambda, retries) =
+            solve_with_backoff(fact.as_mut(), grad, self.damping.lambda(), self.pd_retries)?;
+        drop(fact);
 
         let nat_grad_norm = norm2(&x);
         // Trust region: scale the natural gradient down to the radius.

@@ -5,8 +5,15 @@
 //! is ill-conditioned". CG on `(SᵀS + λI)x = v` needs one `Sᵀ(S·)`
 //! matvec pair per iteration — O(nm) — and √κ-ish iterations; the
 //! `cg_conditioning` bench reproduces the blow-up while `chol` stays flat.
+//!
+//! Session note (PR 2): CG has no separable factorization, so its
+//! "factorization" is the captured iteration workspace ([`CgFactor`]):
+//! the r/p/Ap/Sp buffers are allocated once and reused across every
+//! right-hand side and λ-resweep — the allocation-free counterpart of the
+//! Gram cache in the direct methods.
 
-use super::{DampedSolver, SolveError};
+use super::session::{check_lambda, undamped_err};
+use super::{DampedSolver, Factorization, SolveError};
 use crate::linalg::mat::{dot, norm2};
 use crate::linalg::Mat;
 use std::sync::Mutex;
@@ -43,14 +50,108 @@ impl CgSolver {
     pub fn stats(&self) -> CgStats {
         *self.last_stats.lock().unwrap()
     }
+}
 
-    /// `(SᵀS + λI)·p` without forming the Fisher matrix.
-    #[inline]
-    fn fisher_apply(s: &Mat, p: &[f64], lambda: f64, out: &mut Vec<f64>) {
-        let sp = s.matvec(p);
-        *out = s.t_matvec(&sp);
-        for (o, pi) in out.iter_mut().zip(p) {
-            *o += lambda * pi;
+/// CG session: preallocated Krylov workspace bound to one score matrix.
+pub struct CgFactor<'s> {
+    solver: &'s CgSolver,
+    s: &'s Mat,
+    lambda: f64,
+    // Iteration workspace, sized once at session open.
+    r: Vec<f64>,
+    p: Vec<f64>,
+    ap: Vec<f64>,
+    /// n-sized intermediate `S·p`.
+    sp: Vec<f64>,
+}
+
+impl<'s> CgFactor<'s> {
+    fn new(solver: &'s CgSolver, s: &'s Mat) -> Self {
+        let (n, m) = s.shape();
+        CgFactor {
+            solver,
+            s,
+            lambda: 0.0,
+            r: vec![0.0; m],
+            p: vec![0.0; m],
+            ap: vec![0.0; m],
+            sp: vec![0.0; n],
+        }
+    }
+
+    /// `ap = (SᵀS + λI)·p` without forming the Fisher matrix,
+    /// allocation-free through the session buffers.
+    fn fisher_apply(&mut self) {
+        self.s.matvec_into(&self.p, &mut self.sp);
+        self.s.t_matvec_into(&self.sp, &mut self.ap);
+        for (o, pi) in self.ap.iter_mut().zip(&self.p) {
+            *o += self.lambda * pi;
+        }
+    }
+}
+
+impl Factorization for CgFactor<'_> {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        self.lambda = lambda;
+        Ok(())
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.s.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        if self.lambda <= 0.0 {
+            return Err(undamped_err());
+        }
+        let tol = self.solver.tol;
+        let max_iters = self.solver.max_iters;
+        let vnorm = norm2(v).max(f64::MIN_POSITIVE);
+        x.fill(0.0);
+        self.r.copy_from_slice(v); // r = v − A·0
+        self.p.copy_from_slice(v);
+        let mut rr = dot(&self.r, &self.r);
+
+        for it in 0..max_iters {
+            let rnorm = rr.sqrt();
+            if rnorm <= tol * vnorm {
+                *self.solver.last_stats.lock().unwrap() =
+                    CgStats { iterations: it, final_residual: rnorm / vnorm };
+                return Ok(());
+            }
+            self.fisher_apply();
+            let alpha = rr / dot(&self.p, &self.ap);
+            for j in 0..m {
+                x[j] += alpha * self.p[j];
+                self.r[j] -= alpha * self.ap[j];
+            }
+            let rr_new = dot(&self.r, &self.r);
+            let beta = rr_new / rr;
+            rr = rr_new;
+            for j in 0..m {
+                self.p[j] = self.r[j] + beta * self.p[j];
+            }
+        }
+        let final_residual = rr.sqrt() / vnorm;
+        *self.solver.last_stats.lock().unwrap() =
+            CgStats { iterations: max_iters, final_residual };
+        if final_residual <= tol * 100.0 {
+            // Close enough to be useful — return with stats recording the cap.
+            Ok(())
+        } else {
+            Err(SolveError::DidNotConverge { iterations: max_iters, residual: final_residual })
         }
     }
 }
@@ -60,48 +161,8 @@ impl DampedSolver for CgSolver {
         "cg"
     }
 
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols());
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let m = s.cols();
-        let vnorm = norm2(v).max(f64::MIN_POSITIVE);
-        let mut x = vec![0.0; m];
-        let mut r = v.to_vec(); // r = v − A·0
-        let mut p = r.clone();
-        let mut rr = dot(&r, &r);
-        let mut ap = Vec::new();
-
-        for it in 0..self.max_iters {
-            let rnorm = rr.sqrt();
-            if rnorm <= self.tol * vnorm {
-                *self.last_stats.lock().unwrap() =
-                    CgStats { iterations: it, final_residual: rnorm / vnorm };
-                return Ok(x);
-            }
-            Self::fisher_apply(s, &p, lambda, &mut ap);
-            let alpha = rr / dot(&p, &ap);
-            for j in 0..m {
-                x[j] += alpha * p[j];
-                r[j] -= alpha * ap[j];
-            }
-            let rr_new = dot(&r, &r);
-            let beta = rr_new / rr;
-            rr = rr_new;
-            for j in 0..m {
-                p[j] = r[j] + beta * p[j];
-            }
-        }
-        let final_residual = rr.sqrt() / vnorm;
-        *self.last_stats.lock().unwrap() =
-            CgStats { iterations: self.max_iters, final_residual };
-        if final_residual <= self.tol * 100.0 {
-            // Close enough to be useful — return with stats recording the cap.
-            Ok(x)
-        } else {
-            Err(SolveError::DidNotConverge { iterations: self.max_iters, residual: final_residual })
-        }
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(CgFactor::new(self, s))
     }
 }
 
@@ -133,6 +194,25 @@ mod tests {
         for (a, b) in xc.iter().zip(&xg) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn session_reuses_workspace_across_rhs() {
+        let mut rng = Rng::seed_from(154);
+        let s = Mat::randn(9, 45, &mut rng);
+        let cg = CgSolver::default();
+        let mut fact = cg.factor(&s, 0.3).unwrap();
+        for _ in 0..3 {
+            let v: Vec<f64> = (0..45).map(|_| rng.normal()).collect();
+            let x = fact.solve(&v).unwrap();
+            assert!(residual_norm(&s, &x, &v, 0.3) < 1e-7);
+            assert!(cg.stats().iterations > 0);
+        }
+        // λ-resweep through the same session.
+        fact.redamp(0.01).unwrap();
+        let v: Vec<f64> = (0..45).map(|_| rng.normal()).collect();
+        let x = fact.solve(&v).unwrap();
+        assert!(residual_norm(&s, &x, &v, 0.01) < 1e-7);
     }
 
     #[test]

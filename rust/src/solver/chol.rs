@@ -12,10 +12,20 @@
 //! line 4: `QᵀQv = SᵀL⁻ᵀL⁻¹Sv` is evaluated right-to-left as
 //! matvec → forward solve → backward solve → transposed matvec, which
 //! avoids the O(n²m) cost and O(nm) extra memory of forming `Q`.
+//!
+//! Since PR 2 the primary surface is the session path: [`CholFactor`]
+//! caches the *un-damped* Gram `SSᵀ` so a λ-resweep (the optimizer's
+//! Levenberg–Marquardt backoff) repeats only the O(n³) Cholesky — zero
+//! Gram GEMMs, pinned by a kernel-counter test — and multi-RHS solves go
+//! through the blocked TRSM instead of a loop of vector substitutions.
 
-use super::{DampedSolver, SolveError};
-use crate::linalg::gemm::{syrk, syrk_parallel};
-use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, KernelConfig, Mat};
+use super::session::{check_lambda, refactor_damped, undamped_err};
+use super::{DampedSolver, Factorization, SolveError};
+use crate::linalg::gemm::{gemm_nt, gemm_tn, syrk, syrk_parallel};
+use crate::linalg::{
+    cholesky, solve_lower, solve_lower_multi, solve_lower_transpose, solve_lower_transpose_multi,
+    KernelConfig, Mat,
+};
 
 /// Algorithm-1 solver ("chol").
 #[derive(Debug, Clone)]
@@ -50,10 +60,12 @@ impl CholSolver {
         KernelConfig::with_threads(self.threads)
     }
 
-    /// The factorized form: returns `(L, u = Sv)` so callers solving many
-    /// right-hand sides against the same S (e.g. the KFAC-vs-exact
-    /// ablation) can reuse the factor.
-    pub fn factor(&self, s: &Mat, lambda: f64) -> Result<Mat, SolveError> {
+    /// The raw factor `L = Chol(SSᵀ + λĨ)`. Prefer the session path
+    /// ([`DampedSolver::factor`]) which additionally caches the un-damped
+    /// Gram for λ-resweeps; this remains for call sites that want the
+    /// triangular factor itself. (Named `gram_factor` so the session
+    /// trait's `factor` is not shadowed on concrete solvers.)
+    pub fn gram_factor(&self, s: &Mat, lambda: f64) -> Result<Mat, SolveError> {
         let w = if self.threads > 1 {
             syrk_parallel(s, lambda, self.threads)
         } else {
@@ -63,13 +75,7 @@ impl CholSolver {
     }
 
     /// Apply Algorithm 1 line 4 given a precomputed factor `L`.
-    pub fn solve_with_factor(
-        &self,
-        s: &Mat,
-        l: &Mat,
-        v: &[f64],
-        lambda: f64,
-    ) -> Vec<f64> {
+    pub fn solve_with_factor(&self, s: &Mat, l: &Mat, v: &[f64], lambda: f64) -> Vec<f64> {
         // u = S v                       O(nm)
         let u = s.matvec(v);
         // y = L⁻¹ u,  z = L⁻ᵀ y         O(n²)
@@ -83,18 +89,131 @@ impl CholSolver {
     }
 }
 
+/// Session-native Algorithm-1 factorization: un-damped Gram cached across
+/// λ-resweeps, preallocated O(n) scratch reused across right-hand sides.
+pub struct CholFactor<'s> {
+    s: &'s Mat,
+    threads: usize,
+    lambda: f64,
+    /// Cached `SSᵀ` (no damping) — computed once, λ-independent.
+    gram: Option<Mat>,
+    /// `Chol(SSᵀ + λĨ)` for the current λ.
+    l: Option<Mat>,
+    /// n-sized scratch for `u = Sv`.
+    u: Vec<f64>,
+}
+
+impl<'s> CholFactor<'s> {
+    pub fn new(s: &'s Mat, threads: usize) -> Self {
+        CholFactor {
+            s,
+            threads: threads.max(1),
+            lambda: 0.0,
+            gram: None,
+            l: None,
+            u: vec![0.0; s.rows()],
+        }
+    }
+
+    fn ensure_gram(&mut self) -> &Mat {
+        if self.gram.is_none() {
+            let g = if self.threads > 1 {
+                syrk_parallel(self.s, 0.0, self.threads)
+            } else {
+                syrk(self.s, 0.0)
+            };
+            self.gram = Some(g);
+        }
+        self.gram.as_ref().unwrap()
+    }
+}
+
+impl Factorization for CholFactor<'_> {
+    fn name(&self) -> &'static str {
+        "chol"
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        match refactor_damped(self.ensure_gram(), lambda) {
+            Ok(l) => {
+                self.l = Some(l);
+                self.lambda = lambda;
+                Ok(())
+            }
+            Err(e) => {
+                // Gram stays cached: the caller's λ backoff retries in
+                // O(n³) without re-touching S.
+                self.l = None;
+                self.lambda = 0.0;
+                Err(e)
+            }
+        }
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.s.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        let l = self.l.as_ref().ok_or_else(undamped_err)?;
+        let s = self.s;
+        s.matvec_into(v, &mut self.u);
+        let y = solve_lower(l, &self.u);
+        let z = solve_lower_transpose(l, &y);
+        s.t_matvec_into(&z, x);
+        let inv = 1.0 / self.lambda;
+        for (xj, vj) in x.iter_mut().zip(v) {
+            *xj = inv * (vj - *xj);
+        }
+        Ok(())
+    }
+
+    /// Blocked multi-RHS Algorithm 1: one `S·Vᵀ` panel GEMM, the blocked
+    /// TRSM pair, one `Sᵀ·Z` panel GEMM — O(n²k) at GEMM speed instead of
+    /// k separate vector substitutions.
+    fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
+        let (n, m) = self.s.shape();
+        assert_eq!(vs.cols(), m, "each row of vs must be m-dimensional");
+        let l = self.l.as_ref().ok_or_else(undamped_err)?;
+        let k = vs.rows();
+        // U = S·Vᵀ  (n×k)
+        let mut u = Mat::zeros(n, k);
+        gemm_nt(1.0, self.s, vs, 0.0, &mut u);
+        // Z = L⁻ᵀ(L⁻¹U) — the PR-1 blocked TRSM pair.
+        let y = solve_lower_multi(l, &u);
+        let z = solve_lower_transpose_multi(l, &y);
+        // T = Sᵀ·Z  (m×k)
+        let mut t = Mat::zeros(m, k);
+        gemm_tn(1.0, self.s, &z, 0.0, &mut t);
+        // X = (V − Tᵀ)/λ  (k×m, rows are solutions)
+        let inv = 1.0 / self.lambda;
+        let mut x = Mat::zeros(k, m);
+        for r in 0..k {
+            let vrow = vs.row(r);
+            let xrow = x.row_mut(r);
+            for j in 0..m {
+                xrow[j] = inv * (vrow[j] - t[(j, r)]);
+            }
+        }
+        Ok(x)
+    }
+}
+
 impl DampedSolver for CholSolver {
     fn name(&self) -> &'static str {
         "chol"
     }
 
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols(), "v must be m-dimensional");
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let l = self.factor(s, lambda)?;
-        Ok(self.solve_with_factor(s, &l, v, lambda))
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(CholFactor::new(s, self.threads))
     }
 }
 
@@ -153,11 +272,30 @@ mod tests {
         let mut rng = Rng::seed_from(113);
         let s = Mat::randn(16, 120, &mut rng);
         let solver = CholSolver::default();
-        let l = solver.factor(&s, 0.02).unwrap();
+        let l = solver.gram_factor(&s, 0.02).unwrap();
         for _ in 0..3 {
             let v: Vec<f64> = (0..120).map(|_| rng.normal()).collect();
             let x = solver.solve_with_factor(&s, &l, &v, 0.02);
             assert!(residual_norm(&s, &x, &v, 0.02) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn session_matches_one_shot_across_rhs_and_lambdas() {
+        let mut rng = Rng::seed_from(117);
+        let s = Mat::randn(20, 150, &mut rng);
+        let solver = CholSolver::default();
+        let mut fact = solver.factor(&s, 0.3).unwrap();
+        for &lambda in &[0.3, 0.05, 1e-3] {
+            fact.redamp(lambda).unwrap();
+            for _ in 0..2 {
+                let v: Vec<f64> = (0..150).map(|_| rng.normal()).collect();
+                let warm = fact.solve(&v).unwrap();
+                let cold = solver.solve(&s, &v, lambda).unwrap();
+                for (a, b) in warm.iter().zip(&cold) {
+                    assert!((a - b).abs() < 1e-12, "λ={lambda}");
+                }
+            }
         }
     }
 

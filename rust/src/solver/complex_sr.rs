@@ -11,6 +11,12 @@
 //!   `S ← Concat[ℜS, ℑS]` along the sample axis and run the *real*
 //!   Algorithm 1 unchanged ([`solve_sr_real_part`]).
 
+//! Session note (PR 2): [`ComplexSrFactor`] is the complex counterpart of
+//! the real [`Factorization`](super::Factorization) sessions — it caches
+//! the un-damped Hermitian Gram `SS†` so the SR driver's λ-backoff
+//! retries repeat only the O(n³) complex Cholesky.
+
+use super::session::check_lambda;
 use super::{DampedSolver, SolveError};
 use crate::linalg::complex::{cholesky_complex, solve_lower_c, solve_lower_dagger_c, c64, CMat};
 use crate::linalg::Mat;
@@ -34,30 +40,85 @@ pub fn center_scores(o: &CMat) -> CMat {
     CMat::from_fn(n, p, |i, j| (o[(i, j)] - mean[j]) * scale)
 }
 
+/// Complex Algorithm-1 session: `W = SS†` cached un-damped, re-damped and
+/// re-factored in O(n³) per λ, solved in O(nm) per force vector.
+pub struct ComplexSrFactor<'s> {
+    s: &'s CMat,
+    lambda: f64,
+    gram: Option<CMat>,
+    l: Option<CMat>,
+}
+
+impl<'s> ComplexSrFactor<'s> {
+    pub fn new(s: &'s CMat) -> Self {
+        ComplexSrFactor { s, lambda: 0.0, gram: None, l: None }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// (Re-)damp with `lambda`, reusing the cached Hermitian Gram.
+    pub fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        if self.gram.is_none() {
+            self.gram = Some(self.s.herk(0.0));
+        }
+        let mut w = self.gram.as_ref().unwrap().clone();
+        w.add_diag(lambda);
+        match cholesky_complex(&w) {
+            Ok(l) => {
+                self.l = Some(l);
+                self.lambda = lambda;
+                Ok(())
+            }
+            Err(e) => {
+                self.l = None;
+                self.lambda = 0.0;
+                Err(e.into())
+            }
+        }
+    }
+
+    /// `x = (v − S†L⁻†L⁻¹Sv)/λ` against the cached factor.
+    pub fn solve(&self, v: &[c64]) -> Result<Vec<c64>, SolveError> {
+        assert_eq!(v.len(), self.s.cols());
+        let l = self
+            .l
+            .as_ref()
+            .ok_or_else(super::session::undamped_err)?;
+        let u = self.s.matvec(v);
+        let y = solve_lower_c(l, &u);
+        let z = solve_lower_dagger_c(l, &y);
+        let t = self.s.dagger_matvec(&z);
+        let inv = 1.0 / self.lambda;
+        Ok(v.iter().zip(&t).map(|(vi, ti)| (*vi - *ti) * inv).collect())
+    }
+}
+
 /// Full-complex SR: solve `(S†S + λI) x = v` for complex `S: n×m`,
 /// `v ∈ ℂᵐ`. Algorithm 1 with Hermitian conjugates:
 /// `W = SS† + λĨ`, `W = LL†`, `x = (v − S†L⁻†L⁻¹Sv)/λ`.
+/// One-shot shim over [`ComplexSrFactor`].
 pub fn solve_sr_complex(s: &CMat, v: &[c64], lambda: f64) -> Result<Vec<c64>, SolveError> {
     assert_eq!(v.len(), s.cols());
-    if lambda <= 0.0 {
-        return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-    }
-    let w = s.herk(lambda);
-    let l = cholesky_complex(&w)?;
-    let u = s.matvec(v);
-    let y = solve_lower_c(&l, &u);
-    let z = solve_lower_dagger_c(&l, &y);
-    let t = s.dagger_matvec(&z);
-    let inv = 1.0 / lambda;
-    Ok(v.iter().zip(&t).map(|(vi, ti)| (*vi - *ti) * inv).collect())
+    let mut fact = ComplexSrFactor::new(s);
+    fact.redamp(lambda)?;
+    fact.solve(v)
+}
+
+/// The §3 concatenation trick: `ℜ[S†S] = S̃ᵀS̃` with `S̃ = Concat[ℜS, ℑS]`
+/// stacked along the sample axis — the one place the real-part Fisher is
+/// constructed (shared by [`solve_sr_real_part`] and the SR driver's
+/// session path).
+pub fn stack_real_part(s: &CMat) -> Mat {
+    Mat::vstack(&s.real(), &s.imag())
 }
 
 /// Real-part SR: solve `(ℜ[S†S] + λI) x = v` for complex `S`, real `v`,
-/// via the paper's concatenation trick: `ℜ[S†S] = S̃ᵀS̃` with
-/// `S̃ = Concat[ℜS, ℑS]` stacked along the sample axis, then the real
-/// Algorithm 1 verbatim.
+/// via [`stack_real_part`], then the real Algorithm 1 verbatim.
 pub fn solve_sr_real_part(s: &CMat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-    let stacked = Mat::vstack(&s.real(), &s.imag());
+    let stacked = stack_real_part(s);
     super::CholSolver::default().solve(&stacked, v, lambda).map_err(Into::into)
 }
 

@@ -35,6 +35,9 @@ pub fn flops(kind: SolverKind, n: usize, m: usize) -> f64 {
         // Per iteration 4nm + 10m; iterations depend on conditioning —
         // assume √κ ≈ 30 for the overlay.
         SolverKind::Cg => 30.0 * (4.0 * n * m + 10.0 * m),
+        // Like chol plus the recovery factorization (second n³/3) and the
+        // extra O(nm) reconstruction-check passes.
+        SolverKind::Rvb => n * n * m + 2.0 * n * n * n / 3.0 + 6.0 * n * m,
     }
 }
 
@@ -53,6 +56,8 @@ pub fn memory_bytes(kind: SolverKind, n: usize, m: usize) -> u64 {
         // SᵀS is m×m.
         SolverKind::Naive => m * m * W + n * m * W,
         SolverKind::Cg => n * m * W + 6.0 * m * W,
+        // chol's footprint plus the cached recovery factor (one more n×n).
+        SolverKind::Rvb => 1.0 * n * m * W + 3.0 * n * n * W + 4.0 * m * W,
     };
     bytes as u64
 }

@@ -11,9 +11,14 @@
 //! Its extra cost over Algorithm 1 is the O(n²m) formation of `V` plus a
 //! second O(nm) pass through `S`, which is where the ~3× gap in Table 1
 //! comes from.
+//!
+//! Session note (PR 2): the thin SVD is entirely λ-independent, so
+//! [`SvdFactor`] (shared with the `svda` solver) computes it once and a
+//! λ-resweep is *free* — Eq. 5 just re-evaluates with the new λ.
 
-use super::{DampedSolver, SolveError};
-use crate::linalg::svd::svd_eigh;
+use super::session::{check_lambda, undamped_err};
+use super::{DampedSolver, Factorization, SolveError};
+use crate::linalg::svd::{svd_eigh, svd_jacobi, ThinSvd};
 use crate::linalg::Mat;
 
 /// Eigh-SVD solver ("eigh").
@@ -42,18 +47,85 @@ impl EighSolver {
     }
 }
 
+/// Which backend computes the thin SVD for an [`SvdFactor`] session.
+pub(crate) enum SvdMethod {
+    /// Gram eigendecomposition (the `"eigh"` path).
+    Eigh,
+    /// One-sided Jacobi with the modeled device budget (the `"svda"`
+    /// path; the budget is checked before the sweeps run).
+    Jacobi { budget: super::MemoryBudget },
+}
+
+/// Session for the SVD-based baselines: the thin SVD is computed on the
+/// first `redamp` and cached — it is λ-independent, so resweeps cost
+/// nothing and every RHS is two O(nm) passes through `Vᵀ`.
+pub struct SvdFactor<'s> {
+    s: &'s Mat,
+    method: SvdMethod,
+    label: &'static str,
+    lambda: f64,
+    svd: Option<ThinSvd>,
+}
+
+impl<'s> SvdFactor<'s> {
+    pub(crate) fn new(s: &'s Mat, method: SvdMethod, label: &'static str) -> Self {
+        SvdFactor { s, method, label, lambda: 0.0, svd: None }
+    }
+}
+
+impl Factorization for SvdFactor<'_> {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        if self.svd.is_none() {
+            match &self.method {
+                SvdMethod::Eigh => self.svd = Some(svd_eigh(self.s)),
+                SvdMethod::Jacobi { budget } => {
+                    let (n, m) = self.s.shape();
+                    let required = super::memory_bytes(super::SolverKind::Svda, n, m);
+                    if !budget.fits(required) {
+                        return Err(SolveError::OutOfMemory {
+                            required_bytes: required,
+                            budget_bytes: budget.bytes(),
+                        });
+                    }
+                    self.svd = Some(svd_jacobi(self.s));
+                }
+            }
+        }
+        self.lambda = lambda;
+        Ok(())
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.s.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        let svd = self.svd.as_ref().ok_or_else(undamped_err)?;
+        let r = EighSolver::apply_svd(svd, v, self.lambda);
+        x.copy_from_slice(&r);
+        Ok(())
+    }
+}
+
 impl DampedSolver for EighSolver {
     fn name(&self) -> &'static str {
         "eigh"
     }
 
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols());
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let svd = svd_eigh(s);
-        Ok(Self::apply_svd(&svd, v, lambda))
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(SvdFactor::new(s, SvdMethod::Eigh, "eigh"))
     }
 }
 
@@ -73,6 +145,23 @@ mod tests {
             let xe = EighSolver.solve(&s, &v, 0.03).unwrap();
             for (a, b) in xc.iter().zip(&xe) {
                 assert!((a - b).abs() < 1e-7, "({n},{m})");
+            }
+        }
+    }
+
+    #[test]
+    fn session_resweep_reuses_the_svd() {
+        let mut rng = Rng::seed_from(123);
+        let s = Mat::randn(8, 40, &mut rng);
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let solver = EighSolver;
+        let mut fact = solver.factor(&s, 0.5).unwrap();
+        for &lambda in &[0.5, 0.05, 1e-3] {
+            fact.redamp(lambda).unwrap();
+            let warm = fact.solve(&v).unwrap();
+            let cold = solver.solve(&s, &v, lambda).unwrap();
+            for (a, b) in warm.iter().zip(&cold) {
+                assert!((a - b).abs() < 1e-12, "λ={lambda}");
             }
         }
     }

@@ -1,21 +1,58 @@
 //! Damped Fisher-system solvers: the paper's Algorithm 1 and every
-//! baseline its evaluation compares against.
+//! baseline its evaluation compares against, behind the PR-2
+//! **plan → factor → solve** session API.
 //!
 //! All solvers compute `x` with `(SᵀS + λI) x = v` for a score matrix
 //! `S: n×m` in the tall-skinny regime `m ≫ n`:
 //!
-//! | solver | paper label | complexity | memory | source |
-//! |--------|-------------|------------|--------|--------|
-//! | [`CholSolver`]  | "chol" | O(n³ + n²m) | O(nm) | Algorithm 1 (the contribution) |
-//! | [`EighSolver`]  | "eigh" | O(n³ + n²m), larger constant | O(nm) | Appendix C, previously fastest |
-//! | [`SvdaSolver`]  | "svda" | O(n²m·sweeps) | O(nm)+gesvda workspace | Appendix C, CUDA gesvda stand-in |
-//! | [`NaiveSolver`] | —      | O(m³) | O(m²) | §2 "naive" reference |
-//! | [`CgSolver`]    | —      | O(nm·iters) | O(m) | §3 iterative baseline |
-//! | [`RvbSolver`]   | —      | O(n³ + n²m) | O(nm) | RVB+23 identity (Appendix B), needs `v = Sᵀf` |
+//! | solver | paper label | complexity (factor / per-RHS) | memory | source |
+//! |--------|-------------|-------------------------------|--------|--------|
+//! | [`CholSolver`]  | "chol"  | O(n²m + n³) / O(nm) | O(nm) | Algorithm 1 (the contribution) |
+//! | [`EighSolver`]  | "eigh"  | O(n²m + n³), larger constant / O(nm) | O(nm) | Appendix C, previously fastest |
+//! | [`SvdaSolver`]  | "svda"  | O(n²m·sweeps) / O(nm) | O(nm)+gesvda workspace | Appendix C, CUDA gesvda stand-in |
+//! | [`NaiveSolver`] | —       | O(m²n + m³) / O(m²) | O(m²) | §2 "naive" reference |
+//! | [`CgSolver`]    | —       | none / O(nm·iters) | O(m) | §3 iterative baseline |
+//! | [`RvbSolver`]   | "rvb"   | O(n²m + n³) / O(nm) | O(nm) | RVB+23 identity (Appendix B), needs `v = Sᵀf` |
 //!
-//! Complex stochastic-reconfiguration variants (§3) live in [`complex_sr`]:
-//! the full-complex Fisher `F = S†S` and the real-part Fisher
-//! `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`.
+//! ## The session API (PR 2)
+//!
+//! The expensive part of every direct method — forming the n×n Gram
+//! matrix (O(n²m)) and factoring it (O(n³)) — is separable from the
+//! cheap O(nm) back-substitution per right-hand side, and the Gram is
+//! λ-independent. The [`Factorization`] session makes both amortizations
+//! first-class:
+//!
+//! ```rust
+//! use dngd::data::rng::Rng;
+//! use dngd::linalg::Mat;
+//! use dngd::solver::{CholSolver, DampedSolver};
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let s = Mat::randn(16, 256, &mut rng);
+//! let solver = CholSolver::default();
+//! // Stage once: Gram + Cholesky.
+//! let mut fact = solver.factor(&s, 1e-2).unwrap();
+//! // Many cheap solves against the same factor…
+//! let v: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+//! let x1 = fact.solve(&v).unwrap();
+//! // …and λ-resweeps that reuse the cached Gram (no O(n²m) rework).
+//! fact.redamp(1e-4).unwrap();
+//! let x2 = fact.solve(&v).unwrap();
+//! assert!(x2.iter().zip(&x1).any(|(a, b)| a != b));
+//! ```
+//!
+//! [`SolverRegistry`] builds solvers from a [`SolverKind`] plus
+//! [`SolverOptions`] (config / `--set solver.key=value`), and
+//! [`SolverPlan`] pins a registry-built solver to a problem shape for
+//! reuse across training steps. The pre-PR-2 one-shot
+//! [`DampedSolver::solve`] survives as a default-method shim
+//! (factor → solve_into), so old call sites keep working — now routed
+//! through the session path.
+//!
+//! Complex stochastic-reconfiguration variants (§3) live in
+//! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part
+//! Fisher `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`, with the same
+//! Gram-caching session shape ([`complex_sr::ComplexSrFactor`]).
 
 pub mod cg;
 pub mod chol;
@@ -24,15 +61,21 @@ pub mod cost;
 pub mod eigh_svd;
 pub mod naive;
 pub mod rvb;
+pub mod session;
 pub mod svda;
 
 pub use cg::{CgSolver, CgStats};
 pub use chol::CholSolver;
-pub use complex_sr::{center_scores, solve_sr_complex, solve_sr_real_part};
+pub use complex_sr::{
+    center_scores, solve_sr_complex, solve_sr_real_part, stack_real_part, ComplexSrFactor,
+};
 pub use cost::{flops, memory_bytes, MemoryBudget};
 pub use eigh_svd::EighSolver;
 pub use naive::NaiveSolver;
 pub use rvb::RvbSolver;
+pub use session::{
+    solve_with_backoff, Factorization, OneShot, SolverOptions, SolverPlan, SolverRegistry,
+};
 pub use svda::SvdaSolver;
 
 use crate::linalg::{CholeskyError, Mat};
@@ -78,12 +121,50 @@ impl From<CholeskyError> for SolveError {
 }
 
 /// Common interface: solve `(SᵀS + λI) x = v`.
+///
+/// Since PR 2 the primary entry point is the session path —
+/// [`DampedSolver::begin`] / [`DampedSolver::factor`] return a
+/// [`Factorization`] that amortizes the O(n²m) Gram and O(n³) factor
+/// across right-hand sides and λ-resweeps — and [`DampedSolver::solve`]
+/// is a default-method shim over it.
+///
+/// Implementors **must override at least one** of `begin` or `solve`:
+/// the default `solve` routes through `begin`, and the default `begin`
+/// falls back to a one-shot session that calls `solve` per right-hand
+/// side (for backends with no separable factorization, e.g. a compiled
+/// fixed-function PJRT executable).
 pub trait DampedSolver {
     /// Paper-facing label ("chol", "eigh", "svda", …).
     fn name(&self) -> &'static str;
 
-    /// Solve for one right-hand side.
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError>;
+    /// Open a session against `s`. Cheap: no numerical work happens
+    /// until the first [`Factorization::redamp`], which computes the
+    /// λ-independent state (Gram matrix, SVD, shard distribution) once
+    /// and caches it for every later re-damping.
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(OneShot::new(self, s))
+    }
+
+    /// Stage the factorization for (`s`, `lambda`): [`DampedSolver::begin`]
+    /// plus the first [`Factorization::redamp`].
+    fn factor<'s>(
+        &'s self,
+        s: &'s Mat,
+        lambda: f64,
+    ) -> Result<Box<dyn Factorization + 's>, SolveError> {
+        let mut fact = self.begin(s);
+        fact.redamp(lambda)?;
+        Ok(fact)
+    }
+
+    /// One-shot solve for a single right-hand side — the pre-PR-2 API,
+    /// now a thin shim over the session path.
+    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
+        let mut fact = self.factor(s, lambda)?;
+        let mut x = vec![0.0; s.cols()];
+        fact.solve_into(v, &mut x)?;
+        Ok(x)
+    }
 }
 
 /// Solver selection for configs / CLI.
@@ -94,6 +175,9 @@ pub enum SolverKind {
     Svda,
     Naive,
     Cg,
+    /// RVB+23 least-squares method — requires `v = Sᵀf` (rejected as
+    /// [`SolveError::BadInput`] otherwise).
+    Rvb,
 }
 
 impl SolverKind {
@@ -104,11 +188,27 @@ impl SolverKind {
             "svda" => SolverKind::Svda,
             "naive" => SolverKind::Naive,
             "cg" => SolverKind::Cg,
+            "rvb" => SolverKind::Rvb,
             _ => return None,
         })
     }
 
+    /// Every selectable solver, including the structurally-restricted
+    /// `rvb` (which only accepts `v ∈ rowspace(S)`).
     pub fn all() -> &'static [SolverKind] {
+        &[
+            SolverKind::Chol,
+            SolverKind::Eigh,
+            SolverKind::Svda,
+            SolverKind::Naive,
+            SolverKind::Cg,
+            SolverKind::Rvb,
+        ]
+    }
+
+    /// The solvers valid for an arbitrary right-hand side (excludes
+    /// `rvb`, whose precondition `v = Sᵀf` fails for random v).
+    pub fn general() -> &'static [SolverKind] {
         &[SolverKind::Chol, SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg]
     }
 
@@ -119,19 +219,15 @@ impl SolverKind {
             SolverKind::Svda => "svda",
             SolverKind::Naive => "naive",
             SolverKind::Cg => "cg",
+            SolverKind::Rvb => "rvb",
         }
     }
 }
 
-/// Instantiate a boxed solver by kind with default settings.
+/// Instantiate a boxed solver by kind with default settings. Use
+/// [`SolverRegistry`] to build with per-solver options.
 pub fn make_solver(kind: SolverKind) -> Box<dyn DampedSolver + Send + Sync> {
-    match kind {
-        SolverKind::Chol => Box::new(CholSolver::default()),
-        SolverKind::Eigh => Box::new(EighSolver::default()),
-        SolverKind::Svda => Box::new(SvdaSolver::default()),
-        SolverKind::Naive => Box::new(NaiveSolver::default()),
-        SolverKind::Cg => Box::new(CgSolver::default()),
-    }
+    SolverRegistry::default().build(kind)
 }
 
 /// Residual `‖(SᵀS + λI)x − v‖₂` — the acceptance metric used across the
@@ -153,8 +249,9 @@ mod tests {
     use super::*;
     use crate::data::rng::Rng;
 
-    /// Every solver must agree with every other one (and with the QR
-    /// oracle) on well-conditioned random problems.
+    /// Every general-RHS solver must agree with every other one (and with
+    /// the QR oracle) on well-conditioned random problems; `rvb` is
+    /// checked on structured `v = Sᵀf` where its precondition holds.
     #[test]
     fn all_solvers_agree_cross_method() {
         let mut rng = Rng::seed_from(100);
@@ -163,7 +260,7 @@ mod tests {
             let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
             let lambda = 0.05;
             let oracle = crate::linalg::qr::ridge_qr_oracle(&s, &v, lambda);
-            for &kind in SolverKind::all() {
+            for &kind in SolverKind::general() {
                 let solver = make_solver(kind);
                 let x = solver.solve(&s, &v, lambda).unwrap();
                 let vnorm = crate::linalg::mat::norm2(&v);
@@ -176,6 +273,15 @@ mod tests {
                 }
                 assert!(residual_norm(&s, &x, &v, lambda) < 1e-6 * vnorm.max(1.0));
             }
+            // rvb on its native structured input.
+            let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let v_ls = s.t_matvec(&f);
+            let x_rvb = make_solver(SolverKind::Rvb).solve(&s, &v_ls, lambda).unwrap();
+            let x_ref = make_solver(SolverKind::Chol).solve(&s, &v_ls, lambda).unwrap();
+            let scale = crate::linalg::mat::norm2(&x_ref).max(1.0);
+            for (a, b) in x_rvb.iter().zip(&x_ref) {
+                assert!((a - b).abs() < 1e-7 * scale, "rvb vs chol at ({n},{m})");
+            }
         }
     }
 
@@ -185,6 +291,10 @@ mod tests {
             assert_eq!(SolverKind::parse(k.as_str()), Some(k));
         }
         assert_eq!(SolverKind::parse("bogus"), None);
+        // rvb is reachable from the string side too (the PR-2 bug fix).
+        assert_eq!(SolverKind::parse("rvb"), Some(SolverKind::Rvb));
+        assert!(SolverKind::all().contains(&SolverKind::Rvb));
+        assert!(!SolverKind::general().contains(&SolverKind::Rvb));
     }
 
     #[test]

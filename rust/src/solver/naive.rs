@@ -3,10 +3,15 @@
 //! Cholesky-solve it. Exact but "beyond capability" at the paper's scale
 //! (m ~ 10⁶ ⇒ 8 TB for the matrix alone), so it carries the same
 //! [`MemoryBudget`] model as svda and refuses paper-scale shapes.
+//!
+//! Session note (PR 2): the m×m `SᵀS` is the (huge) λ-independent state;
+//! [`NaiveFactor`] caches it so a λ-resweep repeats only the O(m³)
+//! refactorization, mirroring the Algorithm-1 session at m×m scale.
 
 use super::cost::{memory_bytes, MemoryBudget};
-use super::{DampedSolver, SolveError, SolverKind};
-use crate::linalg::{cholesky, gemm::gemm_tn, solve_lower, solve_lower_transpose, Mat};
+use super::session::{check_lambda, refactor_damped, undamped_err};
+use super::{DampedSolver, Factorization, SolveError, SolverKind};
+use crate::linalg::{gemm::gemm_tn, solve_lower, solve_lower_transpose, Mat};
 
 /// Direct m×m solver.
 #[derive(Debug, Clone)]
@@ -20,31 +25,83 @@ impl Default for NaiveSolver {
     }
 }
 
+/// Session for the naive method: cached un-damped m×m Fisher `SᵀS`.
+pub struct NaiveFactor<'s> {
+    s: &'s Mat,
+    budget: MemoryBudget,
+    lambda: f64,
+    fisher: Option<Mat>,
+    l: Option<Mat>,
+}
+
+impl<'s> NaiveFactor<'s> {
+    fn new(s: &'s Mat, budget: MemoryBudget) -> Self {
+        NaiveFactor { s, budget, lambda: 0.0, fisher: None, l: None }
+    }
+}
+
+impl Factorization for NaiveFactor<'_> {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        if self.fisher.is_none() {
+            let (n, m) = self.s.shape();
+            let required = memory_bytes(SolverKind::Naive, n, m);
+            if !self.budget.fits(required) {
+                return Err(SolveError::OutOfMemory {
+                    required_bytes: required,
+                    budget_bytes: self.budget.bytes(),
+                });
+            }
+            // F = SᵀS  (m×m — the whole point of the paper is avoiding this)
+            let mut f = Mat::zeros(m, m);
+            gemm_tn(1.0, self.s, self.s, 0.0, &mut f);
+            self.fisher = Some(f);
+        }
+        match refactor_damped(self.fisher.as_ref().unwrap(), lambda) {
+            Ok(l) => {
+                self.l = Some(l);
+                self.lambda = lambda;
+                Ok(())
+            }
+            Err(e) => {
+                self.l = None;
+                self.lambda = 0.0;
+                Err(e)
+            }
+        }
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.s.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        let l = self.l.as_ref().ok_or_else(undamped_err)?;
+        let y = solve_lower(l, v);
+        let z = solve_lower_transpose(l, &y);
+        x.copy_from_slice(&z);
+        Ok(())
+    }
+}
+
 impl DampedSolver for NaiveSolver {
     fn name(&self) -> &'static str {
         "naive"
     }
 
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols());
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let (n, m) = s.shape();
-        let required = memory_bytes(SolverKind::Naive, n, m);
-        if !self.budget.fits(required) {
-            return Err(SolveError::OutOfMemory {
-                required_bytes: required,
-                budget_bytes: self.budget.bytes(),
-            });
-        }
-        // F = SᵀS + λI  (m×m — the whole point of the paper is avoiding this)
-        let mut f = Mat::zeros(m, m);
-        gemm_tn(1.0, s, s, 0.0, &mut f);
-        f.add_diag(lambda);
-        let l = cholesky(&f)?;
-        let y = solve_lower(&l, v);
-        Ok(solve_lower_transpose(&l, &y))
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(NaiveFactor::new(s, self.budget))
     }
 }
 
@@ -71,6 +128,18 @@ mod tests {
     }
 
     #[test]
+    fn tiny_budget_surfaces_oom_through_the_session() {
+        let mut rng = Rng::seed_from(142);
+        let solver = NaiveSolver { budget: MemoryBudget::bytes_for_test(64) };
+        let s = Mat::randn(4, 16, &mut rng);
+        let v = vec![1.0; 16];
+        assert!(matches!(
+            solver.solve(&s, &v, 0.1),
+            Err(SolveError::OutOfMemory { .. })
+        ));
+    }
+
+    #[test]
     fn works_without_data_rows_dominating() {
         // n = 1 extreme: rank-1 Fisher + damping.
         let mut rng = Rng::seed_from(141);
@@ -78,5 +147,20 @@ mod tests {
         let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
         let x = NaiveSolver::default().solve(&s, &v, 0.1).unwrap();
         assert!(residual_norm(&s, &x, &v, 0.1) < 1e-10);
+    }
+
+    #[test]
+    fn session_resweep_matches_cold() {
+        let mut rng = Rng::seed_from(143);
+        let s = Mat::randn(5, 24, &mut rng);
+        let v: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let solver = NaiveSolver::default();
+        let mut fact = solver.factor(&s, 0.8).unwrap();
+        fact.redamp(0.05).unwrap();
+        let warm = fact.solve(&v).unwrap();
+        let cold = solver.solve(&s, &v, 0.05).unwrap();
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a - b).abs() < 1e-12);
+        }
     }
 }

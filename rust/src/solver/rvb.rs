@@ -12,30 +12,51 @@
 //! as the least-squares fast path and to regenerate the Appendix-B
 //! equivalence as an executable test. Its *limitation* — it requires
 //! `v ∈ rowspace(S)` and "prevents the use of regularization" on the loss
-//! — is surfaced as a checked precondition.
+//! — is surfaced as a checked precondition ([`SolveError::BadInput`]),
+//! reachable from configs and the CLI via `SolverKind::Rvb` since PR 2.
+//!
+//! Session note (PR 2): [`RvbFactor`] caches *two* λ-independent objects —
+//! the un-damped Gram `SSᵀ` (shared with the damped factor) and the
+//! tiny-ridge recovery factor used to reconstruct `f` from `v` — so both
+//! λ-resweeps and repeated right-hand sides skip all O(n²m) work.
 
-use super::{CholSolver, DampedSolver, SolveError};
-use crate::linalg::{solve_lower, solve_lower_transpose, Mat};
+use super::session::{check_lambda, refactor_damped, undamped_err};
+use super::{CholSolver, DampedSolver, Factorization, SolveError};
+use crate::linalg::gemm::{syrk, syrk_parallel};
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
 
 /// RVB+23 least-squares solver.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct RvbSolver {
     inner: CholSolver,
+    /// Relative tolerance for the `v = Sᵀf` reconstruction check.
+    pub recovery_tol: f64,
+}
+
+impl Default for RvbSolver {
+    fn default() -> Self {
+        RvbSolver { inner: CholSolver::default(), recovery_tol: 1e-6 }
+    }
 }
 
 impl RvbSolver {
     pub fn with_threads(threads: usize) -> Self {
-        RvbSolver { inner: CholSolver::with_threads(threads) }
+        RvbSolver { inner: CholSolver::with_threads(threads), recovery_tol: 1e-6 }
+    }
+
+    /// Override the `v = Sᵀf` reconstruction tolerance
+    /// (`solver.rvb_tol` in configs).
+    pub fn with_recovery_tol(mut self, tol: f64) -> Self {
+        self.recovery_tol = tol;
+        self
     }
 
     /// Solve given the least-squares coefficient vector `f` directly:
     /// `x = Sᵀ(SSᵀ + λĨ)⁻¹ f`. This is the method's native entry point.
     pub fn solve_ls(&self, s: &Mat, f: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
         assert_eq!(f.len(), s.rows(), "f must be n-dimensional");
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let l = self.inner.factor(s, lambda)?;
+        check_lambda(lambda)?;
+        let l = self.inner.gram_factor(s, lambda)?;
         let y = solve_lower(&l, f);
         let u = solve_lower_transpose(&l, &y);
         Ok(s.t_matvec(&u))
@@ -48,32 +69,139 @@ impl RvbSolver {
     pub fn recover_f(&self, s: &Mat, v: &[f64], tol: f64) -> Result<Vec<f64>, SolveError> {
         let sv = s.matvec(v);
         // SSᵀ may be singular; tiny ridge for the recovery only.
-        let w = crate::linalg::gemm::syrk(s, 1e-12 * frob2(s).max(1e-300));
-        let l = crate::linalg::cholesky(&w)?;
+        let w = syrk(s, recovery_ridge(s));
+        let l = cholesky(&w)?;
         let f = solve_lower_transpose(&l, &solve_lower(&l, &sv));
-        // Verify v ≈ Sᵀ f.
-        let recon = s.t_matvec(&f);
-        let vnorm = crate::linalg::mat::norm2(v).max(f64::MIN_POSITIVE);
-        let err: f64 = v
-            .iter()
-            .zip(&recon)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum::<f64>()
-            .sqrt();
-        if err > tol * vnorm {
-            return Err(SolveError::BadInput(format!(
-                "v is not in rowspace(S): relative reconstruction error {:.3e} — the RVB method \
-                 requires least-squares structure v = Sᵀf (paper §3)",
-                err / vnorm
-            )));
-        }
+        verify_reconstruction(s, v, &f, tol)?;
         Ok(f)
     }
 }
 
-fn frob2(s: &Mat) -> f64 {
+/// Ridge used to regularize the (possibly singular) recovery system.
+fn recovery_ridge(s: &Mat) -> f64 {
     let f = s.fro_norm();
-    f * f
+    (1e-12 * f * f).max(1e-300)
+}
+
+/// Check `v ≈ Sᵀf`; error with the §3 limitation message otherwise.
+fn verify_reconstruction(s: &Mat, v: &[f64], f: &[f64], tol: f64) -> Result<(), SolveError> {
+    let recon = s.t_matvec(f);
+    let vnorm = crate::linalg::mat::norm2(v).max(f64::MIN_POSITIVE);
+    let err: f64 = v
+        .iter()
+        .zip(&recon)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    if err > tol * vnorm {
+        return Err(SolveError::BadInput(format!(
+            "v is not in rowspace(S): relative reconstruction error {:.3e} — the RVB method \
+             requires least-squares structure v = Sᵀf (paper §3)",
+            err / vnorm
+        )));
+    }
+    Ok(())
+}
+
+/// RVB session: un-damped Gram + λ-independent recovery factor cached.
+pub struct RvbFactor<'s> {
+    s: &'s Mat,
+    threads: usize,
+    recovery_tol: f64,
+    lambda: f64,
+    /// Cached `SSᵀ` (no damping).
+    gram: Option<Mat>,
+    /// `Chol(SSᵀ + λĨ)` for the current λ.
+    l: Option<Mat>,
+    /// `Chol(SSᵀ + εĨ)` for the f-recovery (λ-independent).
+    recovery_l: Option<Mat>,
+}
+
+impl<'s> RvbFactor<'s> {
+    fn new(s: &'s Mat, threads: usize, recovery_tol: f64) -> Self {
+        RvbFactor {
+            s,
+            threads: threads.max(1),
+            recovery_tol,
+            lambda: 0.0,
+            gram: None,
+            l: None,
+            recovery_l: None,
+        }
+    }
+
+    fn ensure_gram(&mut self) -> &Mat {
+        if self.gram.is_none() {
+            let g = if self.threads > 1 {
+                syrk_parallel(self.s, 0.0, self.threads)
+            } else {
+                syrk(self.s, 0.0)
+            };
+            self.gram = Some(g);
+        }
+        self.gram.as_ref().unwrap()
+    }
+
+    fn ensure_recovery(&mut self) -> Result<(), SolveError> {
+        if self.recovery_l.is_none() {
+            let ridge = recovery_ridge(self.s);
+            self.recovery_l = Some(refactor_damped(self.ensure_gram(), ridge)?);
+        }
+        Ok(())
+    }
+}
+
+impl Factorization for RvbFactor<'_> {
+    fn name(&self) -> &'static str {
+        "rvb"
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        match refactor_damped(self.ensure_gram(), lambda) {
+            Ok(l) => {
+                self.l = Some(l);
+                self.lambda = lambda;
+                Ok(())
+            }
+            Err(e) => {
+                self.l = None;
+                self.lambda = 0.0;
+                Err(e)
+            }
+        }
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.s.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        if self.l.is_none() {
+            return Err(undamped_err());
+        }
+        self.ensure_recovery()?;
+        let s = self.s;
+        // Recover f (rejecting v ∉ rowspace(S) — the precondition the
+        // registry surfaces as BadInput).
+        let rl = self.recovery_l.as_ref().unwrap();
+        let sv = s.matvec(v);
+        let f = solve_lower_transpose(rl, &solve_lower(rl, &sv));
+        verify_reconstruction(s, v, &f, self.recovery_tol)?;
+        // x = Sᵀ(SSᵀ + λĨ)⁻¹ f through the cached damped factor.
+        let l = self.l.as_ref().unwrap();
+        let y = solve_lower(l, &f);
+        let u = solve_lower_transpose(l, &y);
+        s.t_matvec_into(&u, x);
+        Ok(())
+    }
 }
 
 impl DampedSolver for RvbSolver {
@@ -81,11 +209,11 @@ impl DampedSolver for RvbSolver {
         "rvb"
     }
 
-    /// General-v entry point: recovers `f` (rejecting v ∉ rowspace(S)),
-    /// then applies the least-squares identity.
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        let f = self.recover_f(s, v, 1e-6)?;
-        self.solve_ls(s, &f, lambda)
+    /// General-v session: recovers `f` per right-hand side (rejecting
+    /// v ∉ rowspace(S)), then applies the least-squares identity against
+    /// the cached factors.
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(RvbFactor::new(s, self.inner.threads, self.recovery_tol))
     }
 }
 
@@ -139,5 +267,24 @@ mod tests {
         for (a, b) in x.iter().zip(&x_ref) {
             assert!((a - b).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn session_resweep_matches_cold_and_keeps_precondition() {
+        let mut rng = Rng::seed_from(163);
+        let s = Mat::randn(5, 30, &mut rng);
+        let f: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let v = s.t_matvec(&f);
+        let solver = RvbSolver::default();
+        let mut fact = solver.factor(&s, 0.2).unwrap();
+        fact.redamp(0.02).unwrap();
+        let warm = fact.solve(&v).unwrap();
+        let cold = solver.solve(&s, &v, 0.02).unwrap();
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // The precondition survives the session path too.
+        let bad: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        assert!(matches!(fact.solve(&bad), Err(SolveError::BadInput(_))));
     }
 }

@@ -1,0 +1,476 @@
+//! The plan → factor → solve session layer (PR 2).
+//!
+//! The paper's speedup comes from the separability of the damped solve:
+//! the O(n²m) Gram product and the O(n³) factorization are independent of
+//! the right-hand side, and the Gram is independent of λ. Real consumers
+//! (the trainer's damping schedule, Levenberg–Marquardt λ-retries,
+//! multi-RHS K-FAC-style solves) hit the *same* score matrix repeatedly
+//! with varying `v` and λ, so the API stages the work in three tiers:
+//!
+//! ```text
+//! SolverRegistry ── build(kind, options) ──► boxed DampedSolver
+//!        │
+//!        └─ plan(kind, n, m) ──► SolverPlan        (reusable across steps)
+//!                                    │
+//!                 plan.factor(&S, λ) ╵──► Factorization   (Gram/SVD cached)
+//!                                              │
+//!               fact.redamp(λ') ──► O(n³) only ╵(zero Gram GEMMs — tested)
+//!               fact.solve_into(&v, &mut x) ──► O(nm) per RHS
+//!               fact.solve_many(&V) ──► blocked multi-RHS (TRSM panels)
+//! ```
+//!
+//! Every solver kind implements the session natively (`chol` caches the
+//! Gram, `eigh`/`svda` cache the λ-independent SVD, `naive` caches SᵀS,
+//! `cg` captures its iteration workspace, `rvb` additionally caches the
+//! recovery factor for `v = Sᵀf`), and [`OneShot`] adapts backends with
+//! no separable factorization (PJRT executables).
+
+use super::{DampedSolver, SolveError, SolverKind};
+use crate::linalg::{KernelConfig, Mat};
+
+/// A staged factorization of `(SᵀS + λI)` bound to a borrowed score
+/// matrix: the output of [`DampedSolver::begin`] / [`DampedSolver::factor`].
+///
+/// λ-independent state (Gram matrix, SVD, shard distribution, iteration
+/// workspace) is computed on the first [`Factorization::redamp`] and
+/// cached for the lifetime of the session; re-damping never repeats the
+/// O(n²m) Gram stage.
+pub trait Factorization {
+    /// Label of the solver that produced this factorization.
+    fn name(&self) -> &'static str;
+
+    /// Parameter dimension m (the solution length).
+    fn dim(&self) -> usize;
+
+    /// The currently applied damping (0.0 before the first successful
+    /// [`Factorization::redamp`]).
+    fn lambda(&self) -> f64;
+
+    /// (Re-)damp with `lambda`: refactor `cached_gram + λĨ` in O(n³)
+    /// without re-forming the Gram. On error the factorization is left
+    /// un-damped; a later `redamp` (e.g. the optimizer's ×10 λ backoff)
+    /// may still succeed against the cached state.
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError>;
+
+    /// Solve one right-hand side into caller storage (`x.len() == dim()`),
+    /// allocation-free on the session's hot path.
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError>;
+
+    /// Solve one right-hand side into a fresh vector.
+    fn solve(&mut self, v: &[f64]) -> Result<Vec<f64>, SolveError> {
+        let mut x = vec![0.0; self.dim()];
+        self.solve_into(v, &mut x)?;
+        Ok(x)
+    }
+
+    /// Blocked multi-RHS solve: each **row** of `vs` (k×m) is one
+    /// right-hand side; returns the k×m solution block. The default
+    /// loops [`Factorization::solve_into`]; the Algorithm-1 session
+    /// overrides it with panel GEMMs + the blocked TRSM.
+    fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
+        assert_eq!(vs.cols(), self.dim(), "each row of vs must be m-dimensional");
+        let mut x = Mat::zeros(vs.rows(), vs.cols());
+        for r in 0..vs.rows() {
+            self.solve_into(vs.row(r), x.row_mut(r))?;
+        }
+        Ok(x)
+    }
+}
+
+/// Shared λ validation for every session implementation.
+pub(crate) fn check_lambda(lambda: f64) -> Result<(), SolveError> {
+    if lambda <= 0.0 {
+        return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
+    }
+    Ok(())
+}
+
+/// Error for solving through a factorization whose `redamp` never
+/// succeeded.
+pub(crate) fn undamped_err() -> SolveError {
+    SolveError::BadInput("factorization is not damped — call redamp(λ) first".to_string())
+}
+
+/// The shared redamp kernel of the direct-method sessions: re-damp a
+/// cached λ-independent matrix (`SSᵀ` for chol/rvb/sharded, `SᵀS` for
+/// naive) and Cholesky-factor it — O(n³), zero Gram GEMMs.
+pub(crate) fn refactor_damped(
+    cached: &Mat,
+    lambda: f64,
+) -> Result<Mat, SolveError> {
+    let mut w = cached.clone();
+    w.add_diag(lambda);
+    crate::linalg::cholesky(&w).map_err(Into::into)
+}
+
+/// Re-damp `fact` at `lambda` and solve `v`, retrying with a ×10 λ
+/// backoff on Cholesky breakdown (up to `max_retries` times) — the
+/// Levenberg–Marquardt-style rescue shared by the NGD optimizer and the
+/// SR driver. Each retry refactors the session's cached Gram in O(n³);
+/// the O(n²m) Gram stage is never repeated. Returns `(x, λ_used,
+/// retries)`.
+pub fn solve_with_backoff(
+    fact: &mut dyn Factorization,
+    v: &[f64],
+    lambda: f64,
+    max_retries: usize,
+) -> Result<(Vec<f64>, f64, usize), SolveError> {
+    let mut lambda = lambda;
+    let mut retries = 0usize;
+    loop {
+        match fact.redamp(lambda).and_then(|()| fact.solve(v)) {
+            Ok(x) => return Ok((x, lambda, retries)),
+            Err(SolveError::NotPositiveDefinite(_)) if retries < max_retries => {
+                retries += 1;
+                lambda *= 10.0;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Fallback session for backends with no separable factorization: every
+/// `solve_into` performs one full one-shot solve. Used by the default
+/// [`DampedSolver::begin`] (e.g. the PJRT fixed-shape executable).
+pub struct OneShot<'s, S: DampedSolver + ?Sized> {
+    solver: &'s S,
+    s: &'s Mat,
+    lambda: f64,
+}
+
+impl<'s, S: DampedSolver + ?Sized> OneShot<'s, S> {
+    pub fn new(solver: &'s S, s: &'s Mat) -> Self {
+        OneShot { solver, s, lambda: 0.0 }
+    }
+}
+
+impl<S: DampedSolver + ?Sized> Factorization for OneShot<'_, S> {
+    fn name(&self) -> &'static str {
+        self.solver.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        check_lambda(lambda)?;
+        self.lambda = lambda;
+        Ok(())
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        if self.lambda <= 0.0 {
+            return Err(undamped_err());
+        }
+        assert_eq!(x.len(), self.s.cols(), "x must be m-dimensional");
+        let r = self.solver.solve(self.s, v, self.lambda)?;
+        x.copy_from_slice(&r);
+        Ok(())
+    }
+}
+
+/// Per-solver tunables, settable from the `[solver]` config section or
+/// `--set solver.key=value` CLI overrides. Unknown keys are hard errors
+/// (the CLI's no-silent-ignore policy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverOptions {
+    /// Worker threads for the Gram (SYRK) stage of `chol`/`rvb`.
+    pub threads: usize,
+    /// CG relative-residual tolerance ‖r‖/‖v‖.
+    pub cg_tol: f64,
+    /// CG iteration cap.
+    pub cg_max_iters: usize,
+    /// Modeled device-memory budget in GB for `svda`/`naive`
+    /// (0 = the paper's 80 GB A100).
+    pub budget_gb: f64,
+    /// RVB `v = Sᵀf` reconstruction tolerance (relative).
+    pub rvb_tol: f64,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        SolverOptions {
+            threads: 1,
+            cg_tol: 1e-10,
+            cg_max_iters: 10_000,
+            budget_gb: 0.0,
+            rvb_tol: 1e-6,
+        }
+    }
+}
+
+impl SolverOptions {
+    /// Range validation — the single source of truth shared by
+    /// [`SolverOptions::apply`] (CLI `--set`) and the TOML config path.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cg_tol <= 0.0 {
+            return Err(format!("solver.cg_tol must be > 0, got {}", self.cg_tol));
+        }
+        if self.cg_max_iters == 0 {
+            return Err("solver.cg_max_iters must be ≥ 1".to_string());
+        }
+        if self.budget_gb < 0.0 {
+            return Err(format!("solver.budget_gb must be ≥ 0, got {}", self.budget_gb));
+        }
+        if self.rvb_tol <= 0.0 {
+            return Err(format!("solver.rvb_tol must be > 0, got {}", self.rvb_tol));
+        }
+        Ok(())
+    }
+
+    /// Set one option by key. Unknown keys, unparsable values and
+    /// out-of-range values are hard errors; on error the options are
+    /// left unchanged.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn parse<T: std::str::FromStr>(key: &str, value: &str) -> Result<T, String> {
+            value.parse().map_err(|_| format!("solver.{key}: cannot parse {value:?}"))
+        }
+        let mut next = self.clone();
+        match key {
+            "threads" => next.threads = parse::<usize>(key, value)?.max(1),
+            "cg_tol" => next.cg_tol = parse(key, value)?,
+            "cg_max_iters" => next.cg_max_iters = parse(key, value)?,
+            "budget_gb" => next.budget_gb = parse(key, value)?,
+            "rvb_tol" => next.rvb_tol = parse(key, value)?,
+            other => {
+                return Err(format!(
+                    "unknown solver option {other:?} (known: threads, cg_tol, cg_max_iters, \
+                     budget_gb, rvb_tol)"
+                ))
+            }
+        }
+        next.validate()?;
+        *self = next;
+        Ok(())
+    }
+
+    /// Parse `solver.key=value` overrides (the CLI `--set` form). Keys
+    /// outside the `solver.` namespace are hard errors.
+    pub fn from_overrides(overrides: &[String]) -> Result<SolverOptions, String> {
+        let mut opts = SolverOptions::default();
+        for ov in overrides {
+            let eq =
+                ov.find('=').ok_or_else(|| format!("override {ov:?} is not key=value"))?;
+            let key = ov[..eq].trim();
+            let value = ov[eq + 1..].trim();
+            let Some(skey) = key.strip_prefix("solver.") else {
+                return Err(format!(
+                    "override {key:?} is not a solver option (expected solver.<key>)"
+                ));
+            };
+            opts.apply(skey, value)?;
+        }
+        Ok(opts)
+    }
+
+    /// The kernel configuration implied by these options.
+    pub fn kernel(&self) -> KernelConfig {
+        KernelConfig::with_threads(self.threads)
+    }
+
+    /// The modeled device budget (`budget_gb`, defaulting to the paper's
+    /// 80 GB A100 when unset).
+    pub fn budget(&self) -> super::MemoryBudget {
+        if self.budget_gb > 0.0 {
+            super::MemoryBudget::bytes_for_test((self.budget_gb * 1e9) as u64)
+        } else {
+            super::MemoryBudget::a100_80gb()
+        }
+    }
+}
+
+/// Builds boxed solvers/sessions from a [`SolverKind`] plus
+/// [`SolverOptions`] — the one place config, CLI and the trainer funnel
+/// solver construction through.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SolverRegistry {
+    pub opts: SolverOptions,
+}
+
+impl SolverRegistry {
+    pub fn new(opts: SolverOptions) -> SolverRegistry {
+        SolverRegistry { opts }
+    }
+
+    /// Registry from CLI `--set solver.key=value` overrides.
+    pub fn from_overrides(overrides: &[String]) -> Result<SolverRegistry, String> {
+        Ok(SolverRegistry { opts: SolverOptions::from_overrides(overrides)? })
+    }
+
+    /// Build a boxed solver of `kind` with this registry's options.
+    pub fn build(&self, kind: SolverKind) -> Box<dyn DampedSolver + Send + Sync> {
+        match kind {
+            SolverKind::Chol => Box::new(super::CholSolver::with_config(self.opts.kernel())),
+            SolverKind::Eigh => Box::new(super::EighSolver),
+            SolverKind::Svda => Box::new(super::SvdaSolver { budget: self.opts.budget() }),
+            SolverKind::Naive => Box::new(super::NaiveSolver { budget: self.opts.budget() }),
+            SolverKind::Cg => {
+                Box::new(super::CgSolver::new(self.opts.cg_tol, self.opts.cg_max_iters))
+            }
+            SolverKind::Rvb => Box::new(
+                super::RvbSolver::with_threads(self.opts.threads)
+                    .with_recovery_tol(self.opts.rvb_tol),
+            ),
+        }
+    }
+
+    /// Build a [`SolverPlan`] pinned to problem shape (n, m).
+    pub fn plan(&self, kind: SolverKind, n: usize, m: usize) -> SolverPlan {
+        SolverPlan { kind, n, m, opts: self.opts.clone(), solver: self.build(kind) }
+    }
+}
+
+/// A reusable solve plan: solver kind + options + problem shape, built
+/// once (e.g. per training run) and used to open per-step sessions. The
+/// plan validates shapes up front so a mis-wired consumer fails with a
+/// [`SolveError::BadInput`] instead of a kernel assert.
+pub struct SolverPlan {
+    kind: SolverKind,
+    n: usize,
+    m: usize,
+    opts: SolverOptions,
+    solver: Box<dyn DampedSolver + Send + Sync>,
+}
+
+impl SolverPlan {
+    /// Plan with default options (tests / examples).
+    pub fn new(kind: SolverKind, n: usize, m: usize) -> SolverPlan {
+        SolverRegistry::default().plan(kind, n, m)
+    }
+
+    pub fn kind(&self) -> SolverKind {
+        self.kind
+    }
+
+    /// The (n, m) shape this plan was built for.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.solver.name()
+    }
+
+    pub fn options(&self) -> &SolverOptions {
+        &self.opts
+    }
+
+    /// The underlying solver (escape hatch for one-shot call sites).
+    pub fn solver(&self) -> &(dyn DampedSolver + Send + Sync) {
+        self.solver.as_ref()
+    }
+
+    fn check_shape(&self, s: &Mat) -> Result<(), SolveError> {
+        if s.shape() != (self.n, self.m) {
+            return Err(SolveError::BadInput(format!(
+                "plan built for shape ({}, {}), got S {:?}",
+                self.n,
+                self.m,
+                s.shape()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Open an un-damped session against `s` (shape-checked).
+    pub fn begin<'s>(&'s self, s: &'s Mat) -> Result<Box<dyn Factorization + 's>, SolveError> {
+        self.check_shape(s)?;
+        Ok(self.solver.begin(s))
+    }
+
+    /// Stage the factorization for (`s`, `lambda`) — the session entry
+    /// point consumers call once per step / per λ-sweep.
+    pub fn factor<'s>(
+        &'s self,
+        s: &'s Mat,
+        lambda: f64,
+    ) -> Result<Box<dyn Factorization + 's>, SolveError> {
+        self.check_shape(s)?;
+        self.solver.factor(s, lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::residual_norm;
+
+    #[test]
+    fn options_reject_unknown_keys_and_bad_values() {
+        let mut o = SolverOptions::default();
+        assert!(o.apply("bogus", "1").is_err());
+        assert!(o.apply("cg_tol", "not-a-number").is_err());
+        assert!(o.apply("cg_tol", "0").is_err());
+        assert!(o.apply("cg_max_iters", "0").is_err());
+        assert!(o.apply("budget_gb", "-1").is_err());
+        o.apply("cg_tol", "1e-8").unwrap();
+        o.apply("cg_max_iters", "500").unwrap();
+        o.apply("threads", "4").unwrap();
+        assert_eq!(o.cg_tol, 1e-8);
+        assert_eq!(o.cg_max_iters, 500);
+        assert_eq!(o.threads, 4);
+    }
+
+    #[test]
+    fn overrides_require_solver_namespace() {
+        assert!(SolverOptions::from_overrides(&["solver.cg_tol=1e-9".into()]).is_ok());
+        assert!(SolverOptions::from_overrides(&["train.steps=5".into()]).is_err());
+        assert!(SolverOptions::from_overrides(&["solver.nope=1".into()]).is_err());
+        assert!(SolverOptions::from_overrides(&["no_equals".into()]).is_err());
+    }
+
+    #[test]
+    fn plan_rejects_wrong_shape() {
+        let mut rng = Rng::seed_from(500);
+        let plan = SolverPlan::new(SolverKind::Chol, 8, 32);
+        let wrong = Mat::randn(8, 33, &mut rng);
+        assert!(matches!(plan.factor(&wrong, 0.1), Err(SolveError::BadInput(_))));
+        let right = Mat::randn(8, 32, &mut rng);
+        assert!(plan.factor(&right, 0.1).is_ok());
+    }
+
+    #[test]
+    fn plan_session_solves_and_resweeps() {
+        let mut rng = Rng::seed_from(501);
+        let (n, m) = (10usize, 50usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let plan = SolverPlan::new(SolverKind::Chol, n, m);
+        let mut fact = plan.factor(&s, 0.5).unwrap();
+        let x1 = fact.solve(&v).unwrap();
+        assert!(residual_norm(&s, &x1, &v, 0.5) < 1e-8);
+        fact.redamp(0.01).unwrap();
+        let x2 = fact.solve(&v).unwrap();
+        assert!(residual_norm(&s, &x2, &v, 0.01) < 1e-8);
+    }
+
+    #[test]
+    fn undamped_session_refuses_to_solve() {
+        let mut rng = Rng::seed_from(502);
+        let s = Mat::randn(4, 12, &mut rng);
+        let plan = SolverPlan::new(SolverKind::Chol, 4, 12);
+        let mut fact = plan.begin(&s).unwrap();
+        let v = vec![1.0; 12];
+        let mut x = vec![0.0; 12];
+        assert!(matches!(fact.solve_into(&v, &mut x), Err(SolveError::BadInput(_))));
+        assert!(matches!(fact.redamp(0.0), Err(SolveError::BadInput(_))));
+        fact.redamp(0.1).unwrap();
+        fact.solve_into(&v, &mut x).unwrap();
+        assert!(residual_norm(&s, &x, &v, 0.1) < 1e-8);
+    }
+
+    #[test]
+    fn registry_builds_every_kind() {
+        let reg = SolverRegistry::default();
+        for &kind in SolverKind::all() {
+            let solver = reg.build(kind);
+            assert_eq!(solver.name(), kind.as_str());
+        }
+    }
+}

@@ -11,10 +11,14 @@
 //! The memory exhaustion is reproduced with an explicit [`MemoryBudget`]
 //! model (see [`super::cost`]): the paper's A100 had 80 GB; `gesvda`'s
 //! workspace grows superlinearly in n and overflows it first.
+//!
+//! Session note (PR 2): like `eigh`, the Jacobi SVD is λ-independent, so
+//! the [`super::eigh_svd::SvdFactor`] session pays the sweeps once and
+//! λ-resweeps / extra right-hand sides are O(nm) each.
 
-use super::cost::{memory_bytes, MemoryBudget};
-use super::{DampedSolver, SolveError, SolverKind};
-use crate::linalg::svd::svd_jacobi;
+use super::cost::MemoryBudget;
+use super::eigh_svd::{SvdFactor, SvdMethod};
+use super::{DampedSolver, Factorization};
 use crate::linalg::Mat;
 
 /// Jacobi-SVD solver ("svda") with a modeled device-memory budget.
@@ -42,21 +46,8 @@ impl DampedSolver for SvdaSolver {
         "svda"
     }
 
-    fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols());
-        if lambda <= 0.0 {
-            return Err(SolveError::BadInput(format!("damping λ must be > 0, got {lambda}")));
-        }
-        let (n, m) = s.shape();
-        let required = memory_bytes(SolverKind::Svda, n, m);
-        if !self.budget.fits(required) {
-            return Err(SolveError::OutOfMemory {
-                required_bytes: required,
-                budget_bytes: self.budget.bytes(),
-            });
-        }
-        let svd = svd_jacobi(s);
-        Ok(super::EighSolver::apply_svd(&svd, v, lambda))
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(SvdFactor::new(s, SvdMethod::Jacobi { budget: self.budget }, "svda"))
     }
 }
 
@@ -64,7 +55,9 @@ impl DampedSolver for SvdaSolver {
 mod tests {
     use super::*;
     use crate::data::rng::Rng;
-    use crate::solver::{residual_norm, CholSolver, DampedSolver};
+    use crate::solver::{
+        memory_bytes, residual_norm, CholSolver, DampedSolver, SolveError, SolverKind,
+    };
 
     #[test]
     fn matches_chol() {
@@ -105,6 +98,23 @@ mod tests {
                 assert!(required_bytes > budget_bytes);
             }
             other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn session_resweep_reuses_the_jacobi_svd() {
+        let mut rng = Rng::seed_from(132);
+        let s = Mat::randn(6, 30, &mut rng);
+        let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let solver = SvdaSolver::unlimited();
+        let mut fact = solver.factor(&s, 0.4).unwrap();
+        for &lambda in &[0.4, 0.01] {
+            fact.redamp(lambda).unwrap();
+            let warm = fact.solve(&v).unwrap();
+            let cold = solver.solve(&s, &v, lambda).unwrap();
+            for (a, b) in warm.iter().zip(&cold) {
+                assert!((a - b).abs() < 1e-12);
+            }
         }
     }
 }

@@ -16,7 +16,10 @@ use super::sampler::MetropolisSampler;
 use crate::data::rng::Rng;
 use crate::linalg::complex::{c64, CMat};
 use crate::ngd::DampingSchedule;
-use crate::solver::{center_scores, solve_sr_complex, solve_sr_real_part, SolveError};
+use crate::solver::{
+    center_scores, solve_with_backoff, stack_real_part, CholSolver, ComplexSrFactor,
+    DampedSolver, SolveError,
+};
 
 /// Which Fisher-matrix convention to use (§3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,13 +118,29 @@ impl SrDriver {
         let improved = self.last_energy.map(|prev| mean_e.re < prev).unwrap_or(true);
         self.damping.advance(improved);
         self.last_energy = Some(mean_e.re);
-        let lambda = self.damping.lambda();
+        let mut lambda = self.damping.lambda();
 
-        // Solve and update.
+        // Solve through the session API (PR 2): the Gram is staged once;
+        // a Cholesky breakdown at small λ re-damps the cached Gram
+        // (×10 backoff) instead of recomputing the O(p²n) product.
+        const PD_RETRIES: usize = 3;
         let update_norm;
         match self.variant {
             SrVariant::FullComplex => {
-                let delta = solve_sr_complex(&s, &force, lambda)?;
+                let mut fact = ComplexSrFactor::new(&s);
+                let delta = {
+                    let mut retries = 0;
+                    loop {
+                        match fact.redamp(lambda).and_then(|()| fact.solve(&force)) {
+                            Ok(d) => break d,
+                            Err(SolveError::NotPositiveDefinite(_)) if retries < PD_RETRIES => {
+                                retries += 1;
+                                lambda *= 10.0;
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                };
                 update_norm =
                     delta.iter().map(|d| d.norm_sqr()).sum::<f64>().sqrt() * self.learning_rate;
                 let scaled: Vec<c64> = delta.iter().map(|d| *d * self.learning_rate).collect();
@@ -129,7 +148,14 @@ impl SrDriver {
             }
             SrVariant::RealPart => {
                 let force_re: Vec<f64> = force.iter().map(|f| f.re).collect();
-                let delta = solve_sr_real_part(&s, &force_re, lambda)?;
+                // ℜ[S†S] = S̃ᵀS̃ with S̃ = Concat[ℜS, ℑS] (§3), then the
+                // real Algorithm-1 session verbatim.
+                let stacked = stack_real_part(&s);
+                let solver = CholSolver::default();
+                let mut fact = solver.begin(&stacked);
+                let (delta, lambda_used, _) =
+                    solve_with_backoff(fact.as_mut(), &force_re, lambda, PD_RETRIES)?;
+                lambda = lambda_used;
                 update_norm =
                     delta.iter().map(|d| d * d).sum::<f64>().sqrt() * self.learning_rate;
                 let scaled: Vec<c64> =

@@ -1,0 +1,232 @@
+//! Property tests for the PR-2 plan/factor/solve session API.
+//!
+//! Invariants checked:
+//!  S1. `solve_many` ≡ looped single-RHS `solve` for every solver kind
+//!      (structured right-hand sides for `rvb`, whose precondition is
+//!      `v = Sᵀf`).
+//!  S2. Re-damping a cached `Factorization` with a new λ matches a cold
+//!      `factor` at that λ to ≤ 1e-12 — the session path performs exactly
+//!      the arithmetic of the cold path.
+//!  S3. A λ-resweep on a cached factorization performs **zero** GEMM
+//!      calls on the Gram path, and factor-once + k solves forms the Gram
+//!      exactly once — pinned by the thread-local kernel call counters.
+//!  S4. The registry surfaces `rvb`'s precondition as `BadInput` and
+//!      rejects unknown per-solver options as hard errors.
+//!  S5. The distributed sharded session agrees with the serial session
+//!      across right-hand sides and λ-resweeps.
+
+use dngd::coordinator::ShardedCholSolver;
+use dngd::data::rng::Rng;
+use dngd::linalg::kernel::counters;
+use dngd::linalg::Mat;
+use dngd::solver::{
+    make_solver, residual_norm, CholSolver, DampedSolver, SolveError, SolverKind, SolverOptions,
+    SolverRegistry,
+};
+
+/// Right-hand-side block for `kind`: random rows in general, rows from
+/// the rowspace of S for `rvb`.
+fn rhs_block(kind: SolverKind, s: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let (n, m) = s.shape();
+    if kind == SolverKind::Rvb {
+        let mut vs = Mat::zeros(k, m);
+        for r in 0..k {
+            let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            vs.row_mut(r).copy_from_slice(&s.t_matvec(&f));
+        }
+        vs
+    } else {
+        Mat::randn(k, m, rng)
+    }
+}
+
+#[test]
+fn s1_solve_many_matches_looped_solve_for_every_kind() {
+    let mut rng = Rng::seed_from(7001);
+    for &kind in SolverKind::all() {
+        for &(n, m, k) in &[(6usize, 30usize, 1usize), (14, 60, 5), (17, 90, 9)] {
+            let s = Mat::randn(n, m, &mut rng);
+            let vs = rhs_block(kind, &s, k, &mut rng);
+            let lambda = 0.05;
+            let solver = make_solver(kind);
+            let mut fact = solver.factor(&s, lambda).unwrap_or_else(|e| {
+                panic!("{kind:?} factor failed at ({n},{m}): {e}")
+            });
+            let many = fact.solve_many(&vs).unwrap();
+            assert_eq!(many.shape(), (k, m));
+            for r in 0..k {
+                let one = fact.solve(vs.row(r)).unwrap();
+                let scale = one.iter().fold(1.0f64, |a, x| a.max(x.abs()));
+                for j in 0..m {
+                    assert!(
+                        (many[(r, j)] - one[j]).abs() < 1e-9 * scale,
+                        "{kind:?} ({n},{m}) rhs {r} col {j}: {} vs {}",
+                        many[(r, j)],
+                        one[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn s2_redamp_matches_cold_factor() {
+    let mut rng = Rng::seed_from(7002);
+    for &kind in SolverKind::all() {
+        let (n, m) = (12usize, 48usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let vs = rhs_block(kind, &s, 1, &mut rng);
+        let v = vs.row(0);
+        let (l1, l2) = (0.5, 0.003);
+        let solver = make_solver(kind);
+        // Warm: factor at λ1, then resweep to λ2 on the cached state.
+        let mut warm = solver.factor(&s, l1).unwrap();
+        warm.redamp(l2).unwrap();
+        let x_warm = warm.solve(v).unwrap();
+        // Cold: factor directly at λ2.
+        let mut cold = solver.factor(&s, l2).unwrap();
+        let x_cold = cold.solve(v).unwrap();
+        let scale = x_cold.iter().fold(1.0f64, |a, x| a.max(x.abs()));
+        for (a, b) in x_warm.iter().zip(&x_cold) {
+            assert!(
+                (a - b).abs() <= 1e-12 * scale,
+                "{kind:?}: warm {a} vs cold {b}"
+            );
+        }
+        // And the resweep really solves the λ2 system.
+        let res = residual_norm(&s, &x_warm, v, l2);
+        assert!(res < 1e-7 * scale.max(1.0), "{kind:?}: residual {res}");
+    }
+}
+
+#[test]
+fn s3_lambda_resweep_performs_zero_gram_gemms() {
+    // Thread-local counters: this test's deltas cannot be polluted by
+    // concurrently running tests (serial SYRK runs on the calling thread).
+    let mut rng = Rng::seed_from(7003);
+    let (n, m, k) = (48usize, 256usize, 8usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let solver = CholSolver::default();
+
+    // Factor once + k RHS + a 3-λ resweep: exactly ONE Gram formation.
+    let syrk0 = counters::syrk_calls();
+    let mut fact = solver.factor(&s, 1e-2).unwrap();
+    assert_eq!(counters::syrk_calls() - syrk0, 1, "factor must form the Gram exactly once");
+
+    let syrk1 = counters::syrk_calls();
+    let x = fact.solve_many(&vs).unwrap();
+    for r in 0..k {
+        fact.solve(vs.row(r)).unwrap();
+    }
+    assert_eq!(
+        counters::syrk_calls() - syrk1,
+        0,
+        "per-RHS solves must not re-form the Gram"
+    );
+
+    // λ-resweep: zero GEMM calls of any flavour — n=48 < NB keeps the
+    // refactor inside the unblocked Cholesky panel, so the whole resweep
+    // is kernel-silent.
+    let (syrk2, dgemm2) = (counters::syrk_calls(), counters::dgemm_calls());
+    fact.redamp(1e-3).unwrap();
+    fact.redamp(1e-4).unwrap();
+    fact.redamp(1e-2).unwrap();
+    assert_eq!(counters::syrk_calls() - syrk2, 0, "λ resweep must not re-form the Gram");
+    assert_eq!(counters::dgemm_calls() - dgemm2, 0, "λ resweep at n<NB must be GEMM-free");
+
+    // Still correct after the sweep (back at λ=1e-2).
+    let res = residual_norm(&s, x.row(0), vs.row(0), 1e-2);
+    let scale = s.fro_norm().powi(2) * dngd::linalg::mat::norm2(x.row(0))
+        + dngd::linalg::mat::norm2(vs.row(0));
+    assert!(res < 1e-9 * scale.max(1.0));
+}
+
+#[test]
+fn s4_registry_surfaces_rvb_precondition_and_rejects_unknown_options() {
+    let mut rng = Rng::seed_from(7004);
+    let s = Mat::randn(5, 40, &mut rng);
+
+    // rvb reachable by name through parse + registry…
+    let kind = SolverKind::parse("rvb").expect("rvb must be parseable");
+    let solver = SolverRegistry::default().build(kind);
+    assert_eq!(solver.name(), "rvb");
+    // …and its v = Sᵀf precondition surfaces as BadInput.
+    let v_bad: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+    match solver.solve(&s, &v_bad, 0.1) {
+        Err(SolveError::BadInput(msg)) => assert!(msg.contains("rowspace"), "{msg}"),
+        other => panic!("expected BadInput(rowspace), got {other:?}"),
+    }
+    // Structured input goes through and matches chol.
+    let f: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+    let v = s.t_matvec(&f);
+    let x = solver.solve(&s, &v, 0.1).unwrap();
+    let x_ref = CholSolver::default().solve(&s, &v, 0.1).unwrap();
+    for (a, b) in x.iter().zip(&x_ref) {
+        assert!((a - b).abs() < 1e-7);
+    }
+
+    // Per-solver options flow through the registry; unknown keys are
+    // hard errors (no-silent-ignore), including from --set strings.
+    let reg = SolverRegistry::from_overrides(&[
+        "solver.cg_tol=1e-6".into(),
+        "solver.cg_max_iters=77".into(),
+    ])
+    .unwrap();
+    assert_eq!(reg.opts.cg_tol, 1e-6);
+    assert_eq!(reg.opts.cg_max_iters, 77);
+    assert!(SolverRegistry::from_overrides(&["solver.tolerance=1e-6".into()]).is_err());
+    assert!(SolverRegistry::from_overrides(&["train.steps=5".into()]).is_err());
+    let mut opts = SolverOptions::default();
+    assert!(opts.apply("nope", "1").is_err());
+    assert!(opts.apply("threads", "3").is_ok());
+}
+
+#[test]
+fn s5_sharded_session_matches_serial_across_rhs_and_resweeps() {
+    let mut rng = Rng::seed_from(7005);
+    let (n, m, k) = (10usize, 64usize, 4usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let sharded = ShardedCholSolver::new(3, 2);
+    let serial = CholSolver::default();
+
+    let mut fd = sharded.factor(&s, 0.1).unwrap();
+    let mut fs = serial.factor(&s, 0.1).unwrap();
+    for &lambda in &[0.1, 0.004] {
+        fd.redamp(lambda).unwrap();
+        fs.redamp(lambda).unwrap();
+        let xd = fd.solve_many(&vs).unwrap();
+        let xs = fs.solve_many(&vs).unwrap();
+        for r in 0..k {
+            for j in 0..m {
+                assert!(
+                    (xd[(r, j)] - xs[(r, j)]).abs() < 1e-9,
+                    "λ={lambda} rhs {r} col {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn s6_plan_shape_gate_and_factor_reuse_across_steps() {
+    let mut rng = Rng::seed_from(7006);
+    let (n, m) = (8usize, 32usize);
+    let plan = SolverRegistry::default().plan(SolverKind::Chol, n, m);
+    assert_eq!(plan.shape(), (n, m));
+    // A training loop: one factor per step, several RHS per factor.
+    for _ in 0..3 {
+        let s = Mat::randn(n, m, &mut rng);
+        let mut fact = plan.factor(&s, 0.05).unwrap();
+        for _ in 0..2 {
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let x = fact.solve(&v).unwrap();
+            assert!(residual_norm(&s, &x, &v, 0.05) < 1e-8);
+        }
+    }
+    // Wrong shape is a typed error, not a kernel assert.
+    let wrong = Mat::randn(n + 1, m, &mut rng);
+    assert!(matches!(plan.factor(&wrong, 0.05), Err(SolveError::BadInput(_))));
+}
