@@ -1,0 +1,25 @@
+//! PR-3 thread-scaling bench (EXPERIMENTS.md §Threading): SYRK, GEMM,
+//! Cholesky, multi-RHS TRSM and the end-to-end chol session
+//! (`begin → redamp → 16-RHS solve_many`) swept over 1/2/4/8 pool
+//! threads, with every threaded output checked bit-identical to its
+//! serial counterpart.
+//!
+//! Emits the machine-readable `BENCH_PR3.json` trajectory file (path
+//! overridable via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks every
+//! shape for CI smoke runs). In full mode the harness *asserts* the PR-3
+//! acceptance bar: end-to-end session ≥ 3× serial at 8 threads (quick
+//! mode skips it — CI boxes have arbitrary core counts — but asserts
+//! bit-identity in every mode).
+//!
+//! ```text
+//! cargo bench --bench threading
+//! ```
+
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("DNGD_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR3.json".to_string());
+    dngd::bench_tables::thread_bench_report(quick, Some(Path::new(&json)), !quick)
+        .expect("write thread bench json");
+}

@@ -14,6 +14,11 @@
 //! * [`session_bench`] — PR 2's amortization table: k one-shot solves vs
 //!   factor-once + blocked multi-RHS + λ-resweeps on the cached Gram,
 //!   emitted as `BENCH_PR2.json` (`dngd bench --sessions`).
+//! * [`thread_bench`] — PR 3's thread-scaling table: every stage of the
+//!   dense pipeline (SYRK, GEMM, Cholesky, multi-RHS TRSM) plus the
+//!   end-to-end chol session, swept over 1/2/4/8 pool threads with a
+//!   bit-identity check against the serial result on every row, emitted
+//!   as `BENCH_PR3.json` (`dngd bench --threads`).
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -479,6 +484,258 @@ pub fn session_bench_report(
             );
         }
         println!("acceptance: all rows ≥ 3× ✓");
+    }
+    Ok(())
+}
+
+/// One row of the PR-3 thread-scaling benchmark.
+#[derive(Debug, Clone)]
+pub struct ThreadBenchRow {
+    pub stage: &'static str,
+    pub n: usize,
+    pub m: usize,
+    /// Right-hand-side count (TRSM / session rows; 0 elsewhere).
+    pub k: usize,
+    pub threads: usize,
+    pub median_ms: f64,
+    pub gflops: f64,
+    /// `median(threads=1) / median(threads)`.
+    pub speedup: f64,
+    /// Output bit-identical to the serial (threads = 1) result.
+    pub bit_identical: bool,
+}
+
+/// Thread counts swept by [`thread_bench`].
+pub const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// The PR-3 thread-scaling benchmark: per-stage and end-to-end medians
+/// at [`THREAD_SWEEP`] pool-thread counts (the counts are passed to the
+/// kernels directly; `DNGD_THREADS` only sets the env default of
+/// [`KernelConfig`](crate::linalg::KernelConfig) and does not affect
+/// the sweep), with a bit-identity check of
+/// every threaded output against its serial counterpart. The end-to-end row
+/// is the acceptance workload: a chol session `begin` (n×m), one
+/// `redamp` (Gram + lookahead Cholesky) and one 16-RHS `solve_many`.
+/// `quick` shrinks the shapes for CI smoke runs.
+pub fn thread_bench(quick: bool) -> Vec<ThreadBenchRow> {
+    use crate::linalg::gemm::{self, syrk_parallel};
+    use crate::linalg::{
+        cholesky_threaded, solve_lower_multi_threaded, solve_lower_transpose_multi_threaded,
+    };
+
+    let mut rng = Rng::seed_from(31);
+    let (n, m, sq, rhs) = if quick { (256, 1024, 384, 8) } else { (2048, 8192, 1024, 16) };
+    let mut rows: Vec<ThreadBenchRow> = Vec::new();
+    let push = |rows: &mut Vec<ThreadBenchRow>,
+                    stage: &'static str,
+                    n: usize,
+                    m: usize,
+                    k: usize,
+                    threads: usize,
+                    fl: f64,
+                    median_ms: f64,
+                    bit_identical: bool| {
+        let serial_ms = rows
+            .iter()
+            .find(|r| r.stage == stage && r.threads == 1)
+            .map(|r| r.median_ms)
+            .unwrap_or(median_ms);
+        rows.push(ThreadBenchRow {
+            stage,
+            n,
+            m,
+            k,
+            threads,
+            median_ms,
+            gflops: fl / (median_ms / 1e3) / 1e9,
+            speedup: serial_ms / median_ms.max(1e-9),
+            bit_identical,
+        });
+    };
+
+    // --- SYRK (Algorithm 1 line 1) ---
+    let s = Mat::randn(n, m, &mut rng);
+    let syrk_fl = (n * n) as f64 * m as f64;
+    let syrk_ref = syrk_parallel(&s, 1e-3, 1);
+    for threads in THREAD_SWEEP {
+        let r = bench("syrk", 3, 0.5, || {
+            std::hint::black_box(syrk_parallel(&s, 1e-3, threads));
+        });
+        let bits = syrk_parallel(&s, 1e-3, threads).as_slice() == syrk_ref.as_slice();
+        push(&mut rows, "syrk", n, m, 0, threads, syrk_fl, r.median_ms(), bits);
+    }
+
+    // --- Square GEMM (trailing-update / panel-product shape) ---
+    let a = Mat::randn(sq, sq, &mut rng);
+    let b = Mat::randn(sq, sq, &mut rng);
+    let gemm_fl = 2.0 * (sq as f64).powi(3);
+    let mut gemm_ref = Mat::zeros(sq, sq);
+    gemm::gemm_threaded(1.0, &a, &b, 0.0, &mut gemm_ref, 1);
+    for threads in THREAD_SWEEP {
+        let mut c = Mat::zeros(sq, sq);
+        let r = bench("gemm", 3, 0.5, || {
+            gemm::gemm_threaded(1.0, &a, &b, 0.0, &mut c, threads);
+            std::hint::black_box(&c);
+        });
+        let mut c = Mat::zeros(sq, sq);
+        gemm::gemm_threaded(1.0, &a, &b, 0.0, &mut c, threads);
+        let bits = c.as_slice() == gemm_ref.as_slice();
+        push(&mut rows, "gemm_nn", sq, sq, 0, threads, gemm_fl, r.median_ms(), bits);
+    }
+
+    // --- Cholesky (Algorithm 1 line 2, lookahead-threaded) ---
+    let w = gemm::syrk(&Mat::randn(n, n + 8, &mut rng), 1.0);
+    let chol_fl = (n as f64).powi(3) / 3.0;
+    let chol_ref = cholesky_threaded(&w, 1).unwrap();
+    for threads in THREAD_SWEEP {
+        let r = bench("cholesky", 3, 0.5, || {
+            std::hint::black_box(cholesky_threaded(&w, threads).unwrap());
+        });
+        let bits = cholesky_threaded(&w, threads).unwrap().as_slice() == chol_ref.as_slice();
+        push(&mut rows, "cholesky", n, 0, 0, threads, chol_fl, r.median_ms(), bits);
+    }
+
+    // --- Blocked multi-RHS TRSM (fwd + adj), RHS-column panels ---
+    let bmat = Mat::randn(n, rhs, &mut rng);
+    let trsm_fl = 2.0 * (n * n) as f64 * rhs as f64;
+    let trsm_ref = {
+        let y = solve_lower_multi_threaded(&chol_ref, &bmat, 1);
+        solve_lower_transpose_multi_threaded(&chol_ref, &y, 1)
+    };
+    for threads in THREAD_SWEEP {
+        let r = bench("trsm", 3, 0.5, || {
+            let y = solve_lower_multi_threaded(&chol_ref, &bmat, threads);
+            std::hint::black_box(solve_lower_transpose_multi_threaded(&chol_ref, &y, threads));
+        });
+        let y = solve_lower_multi_threaded(&chol_ref, &bmat, threads);
+        let z = solve_lower_transpose_multi_threaded(&chol_ref, &y, threads);
+        let bits = z.as_slice() == trsm_ref.as_slice();
+        push(&mut rows, "trsm", n, 0, rhs, threads, trsm_fl, r.median_ms(), bits);
+    }
+
+    // --- End-to-end chol session: begin → redamp → 16-RHS solve_many ---
+    let vs = Mat::randn(rhs, m, &mut rng);
+    let e2e_fl = syrk_fl + chol_fl + 3.0 * 2.0 * (n * m) as f64 * rhs as f64;
+    let session = |threads: usize| -> Mat {
+        let solver = CholSolver::with_threads(threads);
+        let mut fact = solver.begin(&s);
+        fact.redamp(1e-3).expect("redamp");
+        fact.solve_many(&vs).expect("solve_many")
+    };
+    let e2e_ref = session(1);
+    for threads in THREAD_SWEEP {
+        let r = bench("session", 3, 0.5, || {
+            std::hint::black_box(session(threads));
+        });
+        let bits = session(threads).as_slice() == e2e_ref.as_slice();
+        push(&mut rows, "session_e2e", n, m, rhs, threads, e2e_fl, r.median_ms(), bits);
+    }
+    rows
+}
+
+/// Render thread-bench rows as the `BENCH_PR3.json` payload
+/// (hand-rolled JSON — the build is offline, no serde).
+pub fn thread_bench_json(rows: &[ThreadBenchRow], quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 3,\n");
+    out.push_str("  \"bench\": \"threads\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(
+        "  \"unit\": {\"median_ms\": \"milliseconds\", \"gflops\": \"GFLOP/s\", \
+         \"speedup\": \"median(threads=1) / median(threads)\"},\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"stage\": \"{}\", \"n\": {}, \"m\": {}, \"k\": {}, \"threads\": {}, \
+                 \"median_ms\": {:.3}, \"gflops\": {:.2}, \"speedup\": {:.2}, \
+                 \"bit_identical\": {}}}",
+                r.stage, r.n, r.m, r.k, r.threads, r.median_ms, r.gflops, r.speedup,
+                r.bit_identical
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the thread-scaling benchmark, print the table, optionally write
+/// JSON. Bit-identity is asserted in every mode (it is a correctness
+/// property, not a performance one); `strict` additionally enforces the
+/// PR-3 acceptance bar — end-to-end session ≥ 3× at 8 threads — which
+/// the full-mode `cargo bench --bench threading` harness enables (CI
+/// quick smoke skips it: CI boxes have arbitrary core counts).
+pub fn thread_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    let rows = thread_bench(quick);
+    println!(
+        "{:>12} | {:>6} | {:>6} | {:>4} | {:>3} | {:>10} | {:>8} | {:>7} | {:>4}",
+        "stage", "n", "m", "k", "thr", "median", "GFLOP/s", "speedup", "bits"
+    );
+    for r in &rows {
+        println!(
+            "{:>12} | {:>6} | {:>6} | {:>4} | {:>3} | {:>8.2}ms | {:>8.2} | {:>6.2}× | {:>4}",
+            r.stage,
+            r.n,
+            r.m,
+            r.k,
+            r.threads,
+            r.median_ms,
+            r.gflops,
+            r.speedup,
+            if r.bit_identical { "ok" } else { "DIFF" }
+        );
+    }
+    println!(
+        "\nspeedup = serial median / threaded median per stage; bits = threaded output \
+         bit-identical to serial. Scaling saturates at the machine's core count \
+         ({} available here).",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    );
+    // Ideal-scaling overlay from the thread-aware cost model: what the
+    // e2e session speedup would be with unlimited cores (only the
+    // O(nm) streaming passes staying serial) — the dotted line the
+    // measured column converges to from below.
+    if let Some(e2e1) = rows.iter().find(|r| r.stage == "session_e2e" && r.threads == 1) {
+        let ideal: Vec<String> = THREAD_SWEEP
+            .iter()
+            .map(|&t| {
+                let f1 = crate::solver::flops_threaded(SolverKind::Chol, e2e1.n, e2e1.m, 1);
+                let ft = crate::solver::flops_threaded(SolverKind::Chol, e2e1.n, e2e1.m, t);
+                format!("{t}T {:.2}×", f1 / ft)
+            })
+            .collect();
+        println!("model ideal (flops_threaded, chol): {}", ideal.join(", "));
+    }
+    if let Some(path) = json_path {
+        std::fs::write(path, thread_bench_json(&rows, quick))?;
+        println!("thread bench table written to {}", path.display());
+    }
+    for r in &rows {
+        assert!(
+            r.bit_identical,
+            "determinism violation: {} at {} threads differs from serial",
+            r.stage, r.threads
+        );
+    }
+    if strict {
+        let e2e8 = rows
+            .iter()
+            .find(|r| r.stage == "session_e2e" && r.threads == 8)
+            .expect("session row");
+        assert!(
+            e2e8.speedup >= 3.0,
+            "PR-3 acceptance: end-to-end session at 8 threads must be ≥3× serial, got {:.2}×",
+            e2e8.speedup
+        );
+        println!("acceptance: session_e2e ≥ 3× at 8 threads ✓");
     }
     Ok(())
 }

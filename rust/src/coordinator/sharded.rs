@@ -21,6 +21,11 @@ use std::sync::Arc;
 pub struct ShardedCholSolver {
     pool: WorkerPool,
     workers: usize,
+    /// Kernel configuration shared by the workers' Gram products and the
+    /// leader's local O(n³) work (the λ-resweep refactor) — since PR 3 a
+    /// resweep runs the lookahead-threaded Cholesky with this thread
+    /// count instead of silently dropping to serial.
+    kernel: KernelConfig,
 }
 
 impl ShardedCholSolver {
@@ -39,6 +44,7 @@ impl ShardedCholSolver {
         ShardedCholSolver {
             pool: WorkerPool::spawn_with_kernel(workers, queue_depth, kernel),
             workers,
+            kernel,
         }
     }
 
@@ -192,7 +198,7 @@ impl Factorization for ShardedFactor<'_> {
             self.gram = Some(self.solver.gram_reduced(&plan)?);
             self.plan = Some(plan);
         }
-        match refactor_damped(self.gram.as_ref().unwrap(), lambda) {
+        match refactor_damped(self.gram.as_ref().unwrap(), lambda, self.solver.kernel.threads) {
             Ok(l) => {
                 self.l = Some(l);
                 self.lambda = lambda;

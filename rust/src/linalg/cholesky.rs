@@ -10,9 +10,25 @@
 //! ([`kernel::dgemm`](super::kernel::dgemm) in NT form over the copied
 //! panel) in MC-row strips that cover only the lower triangle, instead
 //! of the seed's per-element row dots.
+//!
+//! Since PR 3 the factorization is threaded end-to-end
+//! ([`cholesky_in_place_threaded`]) with a **one-panel lookahead**: the
+//! rank-NB downdate of the *next* panel's column slab runs first on the
+//! caller, the rest of the trailing downdate is dealt as MC-row-strip
+//! jobs to the persistent kernel pool, and while those run the caller
+//! factors the next diagonal block and triangular-solves the panel
+//! below it — the serial critical path overlaps the previous downdate.
+//! The panel solve itself goes through the blocked kernel TRSM core
+//! ([`trisolve::fwd_multi_core`](super::trisolve)), so it vectorizes
+//! over the panel rows even at `threads: 1` instead of the pre-PR-3
+//! per-element scalar dots. Every strip/slab decomposition keeps the
+//! rank-NB reduction unsplit and panels are applied in pivot order, so
+//! the factor is **bit-identical for every thread count** (see the
+//! determinism notes in [`kernel`](super::kernel)).
 
-use super::kernel::{self, Trans};
+use super::kernel::{self, SendConst, SendMut, Trans};
 use super::mat::{dot, Mat};
+use super::trisolve::fwd_multi_core;
 
 /// Panel width. A multiple of the micro-kernel tile (MR=4, NR=8) so the
 /// packed trailing update runs on full tiles; the O(n·NB²) unblocked
@@ -43,70 +59,178 @@ impl std::error::Error for CholeskyError {}
 
 /// Cholesky-factor `w` (symmetric positive definite), returning lower `L`.
 pub fn cholesky(w: &Mat) -> Result<Mat, CholeskyError> {
+    cholesky_threaded(w, 1)
+}
+
+/// Like [`cholesky`] but with the trailing downdates dealt across
+/// `threads` persistent-pool jobs (bit-identical to serial).
+pub fn cholesky_threaded(w: &Mat, threads: usize) -> Result<Mat, CholeskyError> {
     let mut l = w.clone();
-    cholesky_in_place(&mut l)?;
+    cholesky_in_place_threaded(&mut l, threads)?;
     Ok(l)
 }
 
 /// In-place blocked Cholesky. On success the lower triangle (incl.
 /// diagonal) of `w` holds `L` and the strict upper triangle is zeroed.
 pub fn cholesky_in_place(w: &mut Mat) -> Result<(), CholeskyError> {
+    cholesky_in_place_threaded(w, 1)
+}
+
+/// In-place blocked Cholesky with a threaded, lookahead-pipelined
+/// trailing downdate. `threads = 1` runs everything on the caller; any
+/// thread count produces a bit-identical factor (pinned by tests).
+///
+/// Per panel `[k0, k1)` the schedule is:
+///
+/// 1. copy the solved panel `P = L[k1.., k0..k1]` out of the matrix;
+/// 2. downdate the *next* panel's column slab `W[k1.., k1..k2)` inline
+///    (cheap — O((n−k1)·NB²) — and it unblocks the critical path);
+/// 3. deal the rest of the downdate (`W[k2.., k2..]`, lower strips of
+///    MC rows) round-robin to the kernel pool;
+/// 4. while those run, factor the next diagonal block and
+///    triangular-solve the next panel (they touch only the slab columns
+///    finished in step 2 — disjoint from every in-flight strip);
+/// 5. wait for the strips, advance.
+pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), CholeskyError> {
     let (n, n2) = w.shape();
     assert_eq!(n, n2, "cholesky needs a square matrix");
+    let threads = threads.max(1);
+    if n == 0 {
+        return Ok(());
+    }
+    let mut k1 = NB.min(n);
+    factor_diagonal_block(w, 0, k1)?;
+    panel_solve(w, 0, k1);
     let mut k0 = 0;
-    while k0 < n {
-        let k1 = (k0 + NB).min(n);
-        // 1. Unblocked factorization of the diagonal block W[k0..k1, k0..k1].
-        factor_diagonal_block(w, k0, k1)?;
-        // 2. Panel solve: L[k1.., k0..k1] = W[k1.., k0..k1] · L_d⁻ᵀ
-        //    (forward substitution against the rows of the diagonal block).
+    while k1 < n {
+        let k2 = (k1 + NB).min(n);
+        let nb = k1 - k0;
+        let rows = n - k1;
+        // 1. Copy the panel: the downdate reads it while step 4 below
+        //    overwrites neighbouring columns of the same rows.
+        let mut panel = vec![0.0; rows * nb];
         for i in k1..n {
-            for j in k0..k1 {
-                let s = {
-                    let ri = w.row(i);
-                    let rj = w.row(j);
-                    ri[j] - dot(&ri[k0..j], &rj[k0..j])
-                };
-                w[(i, j)] = s / w[(j, j)];
-            }
+            panel[(i - k1) * nb..(i - k1 + 1) * nb].copy_from_slice(&w.row(i)[k0..k1]);
         }
-        // 3. Trailing symmetric downdate on the packed engine:
-        //    W[k1.., k1..] -= P·Pᵀ with P = L[k1.., k0..k1], applied in
-        //    MC-row strips whose column span stops at the strip's last
-        //    row — covers the lower triangle (plus the tiny in-strip
-        //    upper wedge, overwritten by the final zeroing) at half the
-        //    FLOPs of a full square update.
-        if k1 < n {
-            let nb = k1 - k0;
-            let rows = n - k1;
-            let mut panel = vec![0.0; rows * nb];
-            for i in k1..n {
-                panel[(i - k1) * nb..(i - k1 + 1) * nb].copy_from_slice(&w.row(i)[k0..k1]);
-            }
-            let wdata = w.as_mut_slice();
-            let mut i0 = k1;
+        // 2. Downdate the next panel's column slab (all trailing rows):
+        //    W[k1.., k1..k2) -= P · P[..k2-k1, :]ᵀ. Covers the slab's
+        //    upper wedge too — never read, zeroed at the end — which
+        //    keeps it one rectangular product.
+        kernel::dgemm(
+            rows,
+            k2 - k1,
+            nb,
+            -1.0,
+            &panel,
+            nb,
+            Trans::N,
+            &panel[..(k2 - k1) * nb],
+            nb,
+            Trans::T,
+            1.0,
+            &mut w.as_mut_slice()[k1 * n + k1..],
+            n,
+        );
+        // 3. Rest of the trailing downdate, W[k2.., k2..]: MC-row strips
+        //    whose column span stops at the strip's last row (covers the
+        //    lower triangle plus the tiny in-strip wedge at half the
+        //    FLOPs of a square update), dealt round-robin so the
+        //    triangular strip loads balance.
+        let strips: Vec<(usize, usize)> = {
+            let mut v = Vec::new();
+            let mut i0 = k2;
             while i0 < n {
                 let i1 = (i0 + kernel::MC).min(n);
-                let cols = i1 - k1;
-                kernel::dgemm(
-                    i1 - i0,
-                    cols,
-                    nb,
-                    -1.0,
-                    &panel[(i0 - k1) * nb..],
-                    nb,
-                    Trans::N,
-                    &panel,
-                    nb,
-                    Trans::T,
-                    1.0,
-                    &mut wdata[i0 * n + k1..],
-                    n,
-                );
+                v.push((i0, i1));
                 i0 = i1;
             }
+            v
+        };
+        let diag;
+        if threads > 1 && !strips.is_empty() {
+            // One raw pointer serves both the strip jobs and the
+            // lookahead work below, so no safe re-borrow of `w` can
+            // overlap an in-flight job.
+            let wp = w.as_mut_slice().as_mut_ptr();
+            let wptr = SendMut(wp);
+            let pptr = SendConst(panel.as_ptr());
+            let plen = panel.len();
+            let jobs_n = threads.min(strips.len());
+            let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(jobs_n);
+            for t in 0..jobs_n {
+                let mine: Vec<(usize, usize)> = strips
+                    .iter()
+                    .enumerate()
+                    .filter(|(idx, _)| idx % jobs_n == t)
+                    .map(|(_, &s)| s)
+                    .collect();
+                jobs.push(Box::new(move || {
+                    // Each strip is gathered into an owned contiguous
+                    // buffer, downdated there, and scattered back, so
+                    // every reference this job creates is restricted
+                    // per row to columns [k2, i1) — byte-disjoint from
+                    // the other strips (different rows) AND from the
+                    // caller's concurrent lookahead (columns < k2).
+                    // A single wide W[i0.., k2..] slice would wrap
+                    // around row ends and alias the lookahead's panel
+                    // columns, which is UB even with disjoint writes.
+                    // The gather/scatter is O(rows·cols) against the
+                    // downdate's O(rows·cols·NB) — noise. Identical
+                    // per-element arithmetic (dgemm sums are invariant
+                    // to the output leading dimension), so this stays
+                    // bit-identical to the serial in-place strips.
+                    // SAFETY: per-row ranges as argued above; the panel
+                    // copy is only read; the guard blocks before
+                    // `panel`/`w` go out of scope.
+                    let p = unsafe { std::slice::from_raw_parts(pptr.0, plen) };
+                    for (i0, i1) in mine {
+                        let cols = i1 - k2;
+                        let rows_s = i1 - i0;
+                        let mut local = vec![0.0; rows_s * cols];
+                        for r in 0..rows_s {
+                            let src = unsafe {
+                                std::slice::from_raw_parts(wptr.0.add((i0 + r) * n + k2), cols)
+                            };
+                            local[r * cols..(r + 1) * cols].copy_from_slice(src);
+                        }
+                        downdate_strip(p, nb, k1, k2, i0, i1, &mut local, cols);
+                        for r in 0..rows_s {
+                            let dst = unsafe {
+                                std::slice::from_raw_parts_mut(wptr.0.add((i0 + r) * n + k2), cols)
+                            };
+                            dst.copy_from_slice(&local[r * cols..(r + 1) * cols]);
+                        }
+                    }
+                }));
+            }
+            let guard = kernel::global_pool().submit(jobs);
+            // 4. Lookahead: factor the next diagonal block and solve the
+            //    next panel on the caller while the strips run. Both
+            //    touch only columns [k1, k2) — finished in step 2,
+            //    untouched by any in-flight job.
+            // SAFETY: disjointness argued in the job above; the guard
+            // (waited or dropped on an unwinding path) pins every job
+            // before `panel`/`w` can be released.
+            diag = unsafe { factor_diagonal_block_raw(wp, n, k1, k2) };
+            if diag.is_ok() {
+                unsafe { panel_solve_raw(wp, n, k1, k2) };
+            }
+            guard.wait();
+        } else {
+            {
+                let wdata = w.as_mut_slice();
+                for &(i0, i1) in &strips {
+                    downdate_strip(&panel, nb, k1, k2, i0, i1, &mut wdata[i0 * n + k2..], n);
+                }
+            }
+            diag = factor_diagonal_block(w, k1, k2);
+            if diag.is_ok() {
+                panel_solve(w, k1, k2);
+            }
         }
+        diag?;
         k0 = k1;
+        k1 = k2;
     }
     // Zero the strict upper triangle so the result is exactly L.
     for i in 0..n {
@@ -117,24 +241,120 @@ pub fn cholesky_in_place(w: &mut Mat) -> Result<(), CholeskyError> {
     Ok(())
 }
 
+/// One MC-row strip of the trailing symmetric downdate:
+/// `W[i0..i1, k2..i1) -= P[i0-k1.., :] · P[k2-k1.., :]ᵀ` with `c`
+/// pointing at `W[i0][k2]` (leading dimension `ldc`).
+fn downdate_strip(
+    panel: &[f64],
+    nb: usize,
+    k1: usize,
+    k2: usize,
+    i0: usize,
+    i1: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    kernel::dgemm(
+        i1 - i0,
+        i1 - k2,
+        nb,
+        -1.0,
+        &panel[(i0 - k1) * nb..],
+        nb,
+        Trans::N,
+        &panel[(k2 - k1) * nb..],
+        nb,
+        Trans::T,
+        1.0,
+        c,
+        ldc,
+    );
+}
+
+/// Panel solve below a factored diagonal block:
+/// `L[k1.., k0..k1] = W[k1.., k0..k1] · L_d⁻ᵀ`, i.e. the forward solve
+/// `L_d · Xᵀ = Bᵀ` run through the blocked kernel-TRSM core on a
+/// transposed gather of the panel — vectorized over the panel rows
+/// (the RHS columns) instead of the pre-PR-3 per-element scalar dots.
+fn panel_solve(w: &mut Mat, k0: usize, k1: usize) {
+    let n = w.rows();
+    // SAFETY: exclusive access through the &mut borrow; no jobs in
+    // flight on this path.
+    unsafe { panel_solve_raw(w.as_mut_slice().as_mut_ptr(), n, k0, k1) }
+}
+
+/// Raw-pointer core of [`panel_solve`], safe to run while pool jobs
+/// write columns ≥ `k1 + NB` of rows ≥ `k1 + NB` (the lookahead): every
+/// access here stays inside columns `[k0, k1)` plus the diagonal block.
+///
+/// # Safety
+/// `wp` must point at an n×n row-major buffer; no other thread may
+/// concurrently access rows `k0..k1` or columns `[k0, k1)`.
+unsafe fn panel_solve_raw(wp: *mut f64, n: usize, k0: usize, k1: usize) {
+    if k1 >= n || k1 == k0 {
+        return;
+    }
+    let nb = k1 - k0;
+    let rows = n - k1;
+    // Gather Bᵀ: bt[j][i] = W[k1+i][k0+j]  (nb × rows, row-major).
+    let mut bt = vec![0.0; nb * rows];
+    for i in 0..rows {
+        let wrow = std::slice::from_raw_parts(wp.add((k1 + i) * n + k0), nb);
+        for (j, &v) in wrow.iter().enumerate() {
+            bt[j * rows + i] = v;
+        }
+    }
+    // The diagonal block as an ldl = n view covering only rows k0..k1
+    // (those rows are never touched by trailing-downdate jobs).
+    let ld = std::slice::from_raw_parts(wp.add(k0 * n + k0), (nb - 1) * n + nb);
+    fwd_multi_core(ld, n, nb, &mut bt, rows);
+    // Scatter Xᵀ back into the panel.
+    for i in 0..rows {
+        let wrow = std::slice::from_raw_parts_mut(wp.add((k1 + i) * n + k0), nb);
+        for (j, v) in wrow.iter_mut().enumerate() {
+            *v = bt[j * rows + i];
+        }
+    }
+}
+
 fn factor_diagonal_block(w: &mut Mat, k0: usize, k1: usize) -> Result<(), CholeskyError> {
+    let n = w.rows();
+    // SAFETY: exclusive access through the &mut borrow; no jobs in
+    // flight on this path.
+    unsafe { factor_diagonal_block_raw(w.as_mut_slice().as_mut_ptr(), n, k0, k1) }
+}
+
+/// Raw-pointer core of [`factor_diagonal_block`] — unblocked Cholesky of
+/// `W[k0..k1, k0..k1]`, touching only that block (reads columns
+/// `[k0, j)` of its own rows), so it can overlap trailing-downdate jobs
+/// that write columns ≥ `k1`.
+///
+/// # Safety
+/// `wp` must point at an n×n row-major buffer; no other thread may
+/// concurrently access the `[k0, k1)²` block.
+unsafe fn factor_diagonal_block_raw(
+    wp: *mut f64,
+    n: usize,
+    k0: usize,
+    k1: usize,
+) -> Result<(), CholeskyError> {
     for j in k0..k1 {
         let d = {
-            let rj = &w.row(j)[k0..j];
-            w[(j, j)] - dot(rj, rj)
+            let rj = std::slice::from_raw_parts(wp.add(j * n + k0), j - k0);
+            *wp.add(j * n + j) - dot(rj, rj)
         };
         if d <= 0.0 || !d.is_finite() {
             return Err(CholeskyError { pivot: j, value: d });
         }
         let djj = d.sqrt();
-        w[(j, j)] = djj;
+        *wp.add(j * n + j) = djj;
         for i in j + 1..k1 {
             let s = {
-                let ri = w.row(i);
-                let rj = w.row(j);
-                ri[j] - dot(&ri[k0..j], &rj[k0..j])
+                let ri = std::slice::from_raw_parts(wp.add(i * n + k0), j - k0);
+                let rj = std::slice::from_raw_parts(wp.add(j * n + k0), j - k0);
+                *wp.add(i * n + j) - dot(ri, rj)
             };
-            w[(i, j)] = s / djj;
+            *wp.add(i * n + j) = s / djj;
         }
     }
     Ok(())
@@ -211,6 +431,37 @@ mod tests {
         // …but fine with damping, which is the paper's whole point.
         let wd = syrk(&a, 1e-6);
         assert!(cholesky(&wd).is_ok());
+    }
+
+    #[test]
+    fn threaded_breakdown_in_late_panel_is_clean() {
+        // Indefiniteness far into the matrix: the lookahead discovers it
+        // while downdate jobs for the previous panel are in flight — the
+        // guard must drain them and the error must surface with the
+        // right pivot, bit-for-bit the same as the serial path reports.
+        let mut rng = Rng::seed_from(25);
+        let mut w = spd(300, &mut rng);
+        let pivot = 233;
+        w[(pivot, pivot)] = -1e6;
+        let serial = cholesky_threaded(&w, 1).unwrap_err();
+        assert_eq!(serial.pivot, pivot);
+        for threads in [2usize, 4, 8] {
+            let err = cholesky_threaded(&w, threads).unwrap_err();
+            assert_eq!(err, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        let mut rng = Rng::seed_from(26);
+        for &n in &[NB - 1, NB + 1, 200, 3 * NB + 5] {
+            let w = spd(n, &mut rng);
+            let reference = cholesky(&w).unwrap();
+            for threads in [2usize, 4, 8] {
+                let l = cholesky_threaded(&w, threads).unwrap();
+                assert_eq!(l, reference, "n={n} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,16 @@
 //!   serial sweep for every thread count (each panel is a pure function
 //!   of `(A, panel range)`).
 //!
+//! Since PR 3 the general products are threaded too: [`gemm_threaded`],
+//! [`gemm_nt_threaded`] and [`gemm_tn_threaded`] route through
+//! [`kernel::dgemm_threaded`], which deals contiguous MC-row bands of C
+//! to the same persistent pool — also bit-identical to serial at every
+//! thread count (the C-partition never changes a per-element summation
+//! order; see the determinism notes in [`kernel`]). The sessions use
+//! these for their multi-RHS panel products (`S·Vᵀ`, `Sᵀ·Z`, `SᵀS`, the
+//! eigh `V = SᵀUΣ⁻¹` tall GEMM), so `solver.threads` reaches every
+//! stage of Algorithm 1, not just the Gram.
+//!
 //! The seed's scalar dot/axpy kernels live on in [`reference`] as test
 //! oracles and as the before/after baseline for the kernel benchmarks
 //! (`benches/gemm.rs` → `BENCH_PR1.json`).
@@ -101,6 +111,83 @@ pub fn gemm_tn(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
     );
 }
 
+/// Threaded [`gemm`]: `C = alpha · A · B + beta · C` with MC-row bands
+/// of C dealt across the persistent kernel pool. Bit-identical to the
+/// serial product for every thread count.
+pub fn gemm_threaded(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat, threads: usize) {
+    let (p, q) = a.shape();
+    let (q2, r) = b.shape();
+    assert_eq!(q, q2, "gemm inner dims {q} vs {q2}");
+    assert_eq!(c.shape(), (p, r), "gemm output shape");
+    kernel::dgemm_threaded(
+        p,
+        r,
+        q,
+        alpha,
+        a.as_slice(),
+        q,
+        Trans::N,
+        b.as_slice(),
+        r,
+        Trans::N,
+        beta,
+        c.as_mut_slice(),
+        r,
+        threads,
+    );
+}
+
+/// Threaded [`gemm_nt`]: `C = alpha · A · Bᵀ + beta · C` on the pool,
+/// bit-identical to serial at every thread count.
+pub fn gemm_nt_threaded(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat, threads: usize) {
+    let (p, q) = a.shape();
+    let (r, q2) = b.shape();
+    assert_eq!(q, q2, "gemm_nt inner dims");
+    assert_eq!(c.shape(), (p, r), "gemm_nt output shape");
+    kernel::dgemm_threaded(
+        p,
+        r,
+        q,
+        alpha,
+        a.as_slice(),
+        q,
+        Trans::N,
+        b.as_slice(),
+        q,
+        Trans::T,
+        beta,
+        c.as_mut_slice(),
+        r,
+        threads,
+    );
+}
+
+/// Threaded [`gemm_tn`]: `C = alpha · Aᵀ · B + beta · C` on the pool,
+/// bit-identical to serial at every thread count. This is the shape of
+/// the sessions' `Sᵀ·Z` multi-RHS pass and the naive solver's `SᵀS`.
+pub fn gemm_tn_threaded(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat, threads: usize) {
+    let (q, p) = a.shape();
+    let (q2, r) = b.shape();
+    assert_eq!(q, q2, "gemm_tn inner dims");
+    assert_eq!(c.shape(), (p, r), "gemm_tn output shape");
+    kernel::dgemm_threaded(
+        p,
+        r,
+        q,
+        alpha,
+        a.as_slice(),
+        p,
+        Trans::T,
+        b.as_slice(),
+        r,
+        Trans::N,
+        beta,
+        c.as_mut_slice(),
+        r,
+        threads,
+    );
+}
+
 /// Mirror the computed lower triangle into the upper one and damp the
 /// diagonal — the tail step shared by serial and parallel SYRK.
 fn mirror_and_damp(w: &mut Mat, lambda: f64) {
@@ -138,16 +225,7 @@ pub fn syrk(a: &Mat, lambda: f64) -> Mat {
     w
 }
 
-#[derive(Clone, Copy)]
-struct SendMutPtr(*mut f64);
-// SAFETY: jobs write disjoint row panels; KernelPool::run joins before
-// the caller's borrow ends.
-unsafe impl Send for SendMutPtr {}
-
-#[derive(Clone, Copy)]
-struct SendConstPtr(*const f64);
-// SAFETY: read-only view of A, outlives the jobs (run() blocks).
-unsafe impl Send for SendConstPtr {}
+use super::kernel::{SendConst, SendMut};
 
 /// Multi-threaded SYRK on the persistent kernel pool.
 ///
@@ -178,8 +256,8 @@ pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
     let threads = threads.min(panels.len()).max(1);
     let mut w = Mat::zeros(n, n);
     {
-        let aptr = SendConstPtr(a.as_slice().as_ptr());
-        let wptr = SendMutPtr(w.as_mut_slice().as_mut_ptr());
+        let aptr = SendConst(a.as_slice().as_ptr());
+        let wptr = SendMut(w.as_mut_slice().as_mut_ptr());
         let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(threads);
         for t in 0..threads {
             let mine: Vec<(usize, usize)> = panels

@@ -28,11 +28,32 @@
 //! above the diagonal and is a pure function of the row-panel range, so
 //! threaded SYRK is bit-identical for every thread count.
 //!
-//! [`KernelPool`] is the persistent worker pool behind
-//! [`syrk_parallel`](super::gemm::syrk_parallel): spawned once per
-//! process (lazily), fed closures over channels, so repeated solves do
-//! not pay thread spawn/join on every call the way the seed
-//! `std::thread::scope` implementation did.
+//! ## Determinism of the threaded engine (PR 3)
+//!
+//! Since PR 3 the *whole* engine is threaded, not just SYRK:
+//! [`dgemm_threaded`] deals contiguous MC-row bands of C to the
+//! persistent pool, and the blocked Cholesky / multi-RHS TRSM drivers
+//! (in [`cholesky`](super::cholesky) / [`trisolve`](super::trisolve))
+//! partition their trailing updates and RHS column panels the same way.
+//! Every scheme is **bit-identical to serial for every thread count**
+//! because of one invariant of the packed driver: each C element
+//! accumulates `alpha · Σ_p a[i][p]·b[p][j]` with `p` swept in strictly
+//! increasing order inside each KC block and KC blocks applied in
+//! increasing order — the partitioning of C into tiles/bands/panels
+//! changes which packed buffer a value lands in, never the per-element
+//! summation order. Only the reduction (k) dimension must not be split
+//! differently, and no threaded path in this crate splits k.
+//!
+//! [`KernelPool`] is the persistent worker pool behind the threaded
+//! kernels: spawned once per process (lazily), fed closures over
+//! channels, so repeated solves do not pay thread spawn/join on every
+//! call the way the seed `std::thread::scope` implementation did.
+//! [`KernelPool::run`] blocks until a batch completes;
+//! [`KernelPool::submit`] returns a [`BatchGuard`] so a caller can
+//! overlap its own critical-path work with in-flight jobs (the blocked
+//! Cholesky's one-panel lookahead). Pool jobs must only call *serial*
+//! kernels — a job that re-entered the pool could deadlock behind its
+//! own worker.
 
 use std::sync::mpsc::{channel, sync_channel, SyncSender};
 use std::sync::{Mutex, OnceLock};
@@ -109,7 +130,11 @@ pub enum Trans {
 /// coordinator workers and the bench harness.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KernelConfig {
-    /// Worker threads for the threaded kernels (SYRK). 1 = serial.
+    /// Worker threads for the threaded dense pipeline — GEMM, SYRK, the
+    /// blocked Cholesky and the multi-RHS TRSM all partition their work
+    /// across this many pool jobs. 1 = serial. Every threaded kernel is
+    /// bit-identical to its serial result at every thread count (see the
+    /// module docs), so this is purely a throughput knob.
     pub threads: usize,
 }
 
@@ -316,6 +341,27 @@ pub fn dgemm(
     ldc: usize,
 ) {
     counters::record_dgemm();
+    dgemm_core(m, n, k, alpha, a, lda, ta, b, ldb, tb, beta, c, ldc);
+}
+
+/// The counter-free serial driver body, shared by [`dgemm`] and the
+/// per-band pool jobs of [`dgemm_threaded`].
+#[allow(clippy::too_many_arguments)]
+fn dgemm_core(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    ta: Trans,
+    b: &[f64],
+    ldb: usize,
+    tb: Trans,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
     if beta != 1.0 {
         for i in 0..m {
             for cv in &mut c[i * ldc..i * ldc + n] {
@@ -352,6 +398,96 @@ pub fn dgemm(
         }
         jc += nc;
     }
+}
+
+/// Raw-pointer Send wrappers for smuggling borrowed buffers into
+/// `'static` pool jobs. SAFETY contract: the submitting call must not
+/// return (or otherwise end the underlying borrow) before every job is
+/// accounted for — [`KernelPool::run`] / [`BatchGuard`] enforce this.
+#[derive(Clone, Copy)]
+pub(crate) struct SendMut(pub(crate) *mut f64);
+unsafe impl Send for SendMut {}
+
+#[derive(Clone, Copy)]
+pub(crate) struct SendConst(pub(crate) *const f64);
+unsafe impl Send for SendConst {}
+
+/// Minimum FLOP count (2mnk) below which [`dgemm_threaded`] stays
+/// serial: splitting pays two pool round-trips (~µs) plus duplicated
+/// B-packing, which small products never recover.
+const PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// Multi-threaded GEMM on the persistent kernel pool: `C = alpha ·
+/// op(A) · op(B) + beta · C`, **bit-identical to [`dgemm`] for every
+/// thread count**.
+///
+/// The m dimension is split into contiguous bands of whole MC row
+/// blocks, one pool job per band; each job beta-scales and accumulates
+/// only its own C rows, running the same packed driver over the same KC
+/// reduction blocks as the serial sweep (see the module docs for why
+/// any C-partitioning is bit-exact). Unlike SYRK's triangular load,
+/// GEMM load is uniform in rows, so contiguous bands balance and keep
+/// each job's C region a single disjoint slice.
+///
+/// Falls back to the serial driver when `threads ≤ 1`, when there are
+/// not at least two MC bands to deal, or when the product is too small
+/// to amortize the pool round-trip.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_threaded(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    ta: Trans,
+    b: &[f64],
+    ldb: usize,
+    tb: Trans,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+    threads: usize,
+) {
+    let blocks = m.div_ceil(MC.max(1));
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if threads <= 1 || blocks < 2 || flops < PAR_MIN_FLOPS {
+        dgemm(m, n, k, alpha, a, lda, ta, b, ldb, tb, beta, c, ldc);
+        return;
+    }
+    counters::record_dgemm();
+    let jobs_n = threads.min(blocks);
+    let chunk_blocks = blocks.div_ceil(jobs_n);
+    let aptr = SendConst(a.as_ptr());
+    let alen = a.len();
+    let bptr = SendConst(b.as_ptr());
+    let blen = b.len();
+    let cptr = SendMut(c.as_mut_ptr());
+    let clen = c.len();
+    let mut jobs: Vec<KernelJob> = Vec::with_capacity(jobs_n);
+    let mut r0 = 0usize;
+    while r0 < m {
+        let r1 = (r0 + chunk_blocks * MC).min(m);
+        jobs.push(Box::new(move || {
+            // SAFETY: rows [r0, r1) of C form the contiguous region
+            // [r0*ldc, r1*ldc) (clipped to the buffer for the last
+            // band), disjoint from every other job's region; A and B
+            // are only read. The caller blocks in `run` below until all
+            // jobs are accounted for, keeping the borrows alive.
+            let a = unsafe { std::slice::from_raw_parts(aptr.0, alen) };
+            let b = unsafe { std::slice::from_raw_parts(bptr.0, blen) };
+            let cend = (r1 * ldc).min(clen);
+            let cband =
+                unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * ldc), cend - r0 * ldc) };
+            let asub = match ta {
+                Trans::N => &a[r0 * lda..],
+                Trans::T => &a[r0..],
+            };
+            dgemm_core(r1 - r0, n, k, alpha, asub, lda, ta, b, ldb, tb, beta, cband, ldc);
+        }));
+        r0 = r1;
+    }
+    global_pool().run(jobs);
 }
 
 /// Lower-triangle SYRK row panel: accumulates rows `[i0, i1)` of
@@ -483,9 +619,16 @@ impl KernelPool {
     /// unwind while a sibling job could still be executing. Panics
     /// (afterwards, safely) if any job failed.
     pub fn run(&self, jobs: Vec<KernelJob>) {
-        if jobs.is_empty() {
-            return;
-        }
+        self.submit(jobs).wait();
+    }
+
+    /// Submit a batch without blocking, returning a [`BatchGuard`] that
+    /// must be waited on (and waits on drop regardless, so an early
+    /// return or unwind can never leave a raw-pointer job live). This
+    /// is the lookahead primitive: the blocked Cholesky submits the
+    /// trailing downdate, factors the next diagonal panel on the caller
+    /// thread, then waits.
+    pub fn submit(&self, jobs: Vec<KernelJob>) -> BatchGuard {
         let total = jobs.len();
         let (done_tx, done_rx) = channel::<bool>();
         let mut submitted = 0usize;
@@ -507,28 +650,67 @@ impl KernelPool {
             }
         }
         drop(done_tx);
-        // Drain one ack per submitted job. Disconnection means every
-        // outstanding wrapped job has been destroyed (all guard senders
-        // dropped), so no job can still be running — safe to stop.
-        let mut failed = false;
-        let mut acked = 0usize;
-        while acked < submitted {
-            match done_rx.recv() {
-                Ok(true) => acked += 1,
+        BatchGuard { done_rx, submitted, total, acked: 0, failed: false, drained: false }
+    }
+}
+
+/// Handle for an in-flight [`KernelPool::submit`] batch.
+///
+/// Dropping the guard blocks until every submitted job is accounted for
+/// (completed, panicked, or provably never-will-run) — the same safety
+/// contract as [`KernelPool::run`] — so raw-pointer jobs can never
+/// outlive the borrows they capture, even on an unwinding path.
+/// [`BatchGuard::wait`] additionally surfaces job failures as a panic;
+/// the drop path stays silent to avoid a double panic during unwind.
+#[must_use = "the batch is only known complete after wait()"]
+pub struct BatchGuard {
+    done_rx: std::sync::mpsc::Receiver<bool>,
+    submitted: usize,
+    total: usize,
+    acked: usize,
+    failed: bool,
+    drained: bool,
+}
+
+impl BatchGuard {
+    /// Drain one ack per submitted job. Disconnection means every
+    /// outstanding wrapped job has been destroyed (all guard senders
+    /// dropped), so no job can still be running — safe to stop.
+    fn drain(&mut self) {
+        if self.drained {
+            return;
+        }
+        while self.acked < self.submitted {
+            match self.done_rx.recv() {
+                Ok(true) => self.acked += 1,
                 Ok(false) => {
-                    acked += 1;
-                    failed = true;
+                    self.acked += 1;
+                    self.failed = true;
                 }
                 Err(_) => {
-                    failed = true;
+                    self.failed = true;
                     break;
                 }
             }
         }
+        self.drained = true;
+    }
+
+    /// Block until the batch completes; panic if any job failed.
+    pub fn wait(mut self) {
+        self.drain();
         assert!(
-            !failed && submitted == total,
-            "kernel pool batch incomplete ({acked}/{total} ok): worker panic or dead worker"
+            !self.failed && self.submitted == self.total,
+            "kernel pool batch incomplete ({}/{} ok): worker panic or dead worker",
+            self.acked,
+            self.total
         );
+    }
+}
+
+impl Drop for BatchGuard {
+    fn drop(&mut self) {
+        self.drain();
     }
 }
 
@@ -665,6 +847,47 @@ mod tests {
             pool.run(jobs);
             assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 8, "round {round}");
         }
+    }
+
+    #[test]
+    fn submit_overlaps_caller_work_and_waits() {
+        // The lookahead primitive: jobs run while the caller computes;
+        // wait() establishes the barrier.
+        let pool = global_pool();
+        let flag = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let jobs: Vec<KernelJob> = (0..4)
+            .map(|_| {
+                let f = flag.clone();
+                Box::new(move || {
+                    f.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }) as KernelJob
+            })
+            .collect();
+        let guard = pool.submit(jobs);
+        // Caller-side "critical path" work while jobs are in flight.
+        let mut acc = 0u64;
+        for i in 0..1000u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        guard.wait();
+        assert_eq!(flag.load(std::sync::atomic::Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn dgemm_threaded_bit_identical_to_serial() {
+        // Cross-checked at scale in tests/threading.rs; this in-module
+        // case keeps the invariant pinned next to the implementation.
+        // Big enough that the threaded path engages (≥ 2 MC bands and
+        // above the PAR_MIN_FLOPS fallback) with every dim off-grid.
+        let (m, n, k) = (2 * MC + 9, 8 * NR + 3, KC / 2 + 1);
+        let a = fill(m * k, 40);
+        let b = fill(k * n, 41);
+        let mut c1 = fill(m * n, 42);
+        let mut c2 = c1.clone();
+        dgemm(m, n, k, 1.5, &a, k, Trans::N, &b, n, Trans::N, 0.5, &mut c1, n);
+        dgemm_threaded(m, n, k, 1.5, &a, k, Trans::N, &b, n, Trans::N, 0.5, &mut c2, n, 4);
+        assert_eq!(c1, c2);
     }
 
     #[test]

@@ -32,14 +32,19 @@ pub mod qr;
 pub mod svd;
 pub mod trisolve;
 
-pub use cholesky::{cholesky, cholesky_in_place, CholeskyError};
+pub use cholesky::{
+    cholesky, cholesky_in_place, cholesky_in_place_threaded, cholesky_threaded, CholeskyError,
+};
 pub use complex::{c64, CMat};
 pub use eigh::eigh;
-pub use gemm::{gemm, gemm_nt, gemm_tn, syrk, syrk_parallel};
+pub use gemm::{
+    gemm, gemm_nt, gemm_nt_threaded, gemm_threaded, gemm_tn, gemm_tn_threaded, syrk, syrk_parallel,
+};
 pub use kernel::KernelConfig;
 pub use mat::Mat;
 pub use qr::qr;
-pub use svd::{svd_eigh, svd_jacobi, ThinSvd};
+pub use svd::{svd_eigh, svd_eigh_threaded, svd_jacobi, ThinSvd};
 pub use trisolve::{
-    solve_lower, solve_lower_multi, solve_lower_transpose, solve_lower_transpose_multi,
+    solve_lower, solve_lower_multi, solve_lower_multi_threaded, solve_lower_transpose,
+    solve_lower_transpose_multi, solve_lower_transpose_multi_threaded,
 };

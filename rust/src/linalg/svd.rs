@@ -61,9 +61,19 @@ const SIGMA_TOL: f64 = 1e-12;
 /// Tall-skinny SVD via the Gram-matrix eigendecomposition (Appendix C,
 /// the `"eigh"` baseline): `SSᵀ = U Σ² Uᵀ`, `V = SᵀUΣ⁻¹`.
 pub fn svd_eigh(s: &Mat) -> ThinSvd {
+    svd_eigh_threaded(s, 1)
+}
+
+/// [`svd_eigh`] with its two O(n²m) passes threaded on the persistent
+/// kernel pool: the Gram SYRK and the `Vᵀ = (UΣ⁻¹)ᵀ·S` tall GEMM — the
+/// stages that dominate the eigh baseline in the tall-skinny regime.
+/// The O(n³) Jacobi eigendecomposition itself is inherently sequential
+/// (each rotation feeds the next) and stays on the caller. Bit-identical
+/// to the serial path at every thread count.
+pub fn svd_eigh_threaded(s: &Mat, threads: usize) -> ThinSvd {
     let (n, m) = s.shape();
     assert!(n <= m, "svd_eigh expects tall-skinny Sᵀ, i.e. n ≤ m (got {n}×{m})");
-    let w = super::gemm::syrk(s, 0.0);
+    let w = super::gemm::syrk_parallel(s, 0.0, threads);
     let (vals, u_asc) = eigh(&w);
     // eigh returns ascending; we want σ descending.
     let mut u = Mat::zeros(n, n);
@@ -75,26 +85,22 @@ pub fn svd_eigh(s: &Mat) -> ThinSvd {
             u[(i, k)] = u_asc[(i, src)];
         }
     }
-    // Vᵀ rows: vᵀ_k = σ_k⁻¹ · u_kᵀ S  (one n×m pass, row-major streaming).
+    // Vᵀ = (U·Σ⁻¹)ᵀ · S as one tall GEMM (zeroed columns for numerically
+    // zero σ keep those vt rows exactly zero: the direction is handled
+    // by the λ branch of Eq. 5).
     let smax = sigma[0].max(f64::MIN_POSITIVE);
-    let mut vt = Mat::zeros(n, m);
+    let mut uscaled = Mat::zeros(n, n);
     for k in 0..n {
         if sigma[k] <= SIGMA_TOL * smax {
-            continue; // leave the row zero: direction handled by the λ branch
+            continue;
         }
         let inv = 1.0 / sigma[k];
-        // vt.row(k) = inv * (u[:,k]ᵀ S)
         for i in 0..n {
-            let c = inv * u[(i, k)];
-            if c != 0.0 {
-                let srow = s.row(i);
-                let vrow = vt.row_mut(k);
-                for j in 0..m {
-                    vrow[j] += c * srow[j];
-                }
-            }
+            uscaled[(i, k)] = inv * u[(i, k)];
         }
     }
+    let mut vt = Mat::zeros(n, m);
+    super::gemm::gemm_tn_threaded(1.0, &uscaled, s, 0.0, &mut vt, threads);
     ThinSvd { u, sigma, vt }
 }
 

@@ -18,8 +18,18 @@
 //! right-hand-side rows is one panel product on the packed kernel engine
 //! ([`kernel::dgemm`](super::kernel::dgemm)) — O(n²k) FLOPs run at GEMM
 //! speed instead of axpy speed.
+//!
+//! Since PR 3 the multi-RHS solves are also threaded
+//! ([`solve_lower_multi_threaded`] / [`solve_lower_transpose_multi_threaded`]):
+//! every RHS *column* evolves independently through the blocked
+//! substitution, so the columns are partitioned into contiguous panels,
+//! one persistent-pool job per panel, each running the identical serial
+//! core on a gathered copy of its panel — **bit-identical to the serial
+//! sweep for every thread count** (no cross-column arithmetic exists to
+//! reorder). The gathered copies also keep each job's writes on
+//! disjoint cache-friendly buffers instead of interleaved columns.
 
-use super::kernel::{self, Trans};
+use super::kernel::{self, SendConst, SendMut, Trans};
 use super::mat::{dot, Mat};
 
 /// Diagonal-block size for the blocked multi-RHS solves. Matches the
@@ -61,46 +71,47 @@ pub fn solve_lower_transpose(l: &Mat, y: &[f64]) -> Vec<f64> {
     z
 }
 
-/// Multi-RHS forward solve: `L Y = B` where `B` is n×k.
+/// The blocked forward-substitution core: solves `L Y = Y` in place for
+/// an `nb × nb` lower-triangular `L` stored with leading dimension
+/// `ldl` (so sub-blocks of a larger factor work — the Cholesky panel
+/// solve passes its NB×NB diagonal block), against a contiguous
+/// row-major `nb × k` RHS buffer.
 ///
-/// Blocked: rows `[j0, j1)` are solved unblocked against the diagonal
-/// block, then all remaining rows are updated at once with
-/// `Y[j1.., :] -= L[j1.., j0..j1] · Y[j0..j1, :]` on the packed engine.
-pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
-    let n = l.rows();
-    assert_eq!(l.cols(), n);
-    assert_eq!(b.rows(), n);
-    let k = b.cols();
-    let mut y = b.clone();
+/// Shared verbatim by the serial multi-RHS solve, the per-panel pool
+/// jobs of [`solve_lower_multi_threaded`], and the Cholesky panel TRSM
+/// — one arithmetic, every caller bit-identical.
+pub(crate) fn fwd_multi_core(l: &[f64], ldl: usize, nb: usize, y: &mut [f64], k: usize) {
     let mut j0 = 0;
-    while j0 < n {
-        let j1 = (j0 + TB).min(n);
+    while j0 < nb {
+        let j1 = (j0 + TB).min(nb);
         // Unblocked solve of the diagonal block rows.
         for i in j0..j1 {
+            let (head, tail) = y.split_at_mut(i * k);
+            let yi = &mut tail[..k];
             for j in j0..i {
-                let lij = l[(i, j)];
+                let lij = l[i * ldl + j];
                 if lij != 0.0 {
-                    let (yi, yj) = y.rows_mut2(i, j);
+                    let yj = &head[j * k..(j + 1) * k];
                     for (a, c) in yi.iter_mut().zip(yj.iter()) {
                         *a -= lij * c;
                     }
                 }
             }
-            let inv = 1.0 / l[(i, i)];
-            for v in y.row_mut(i) {
+            let inv = 1.0 / l[i * ldl + i];
+            for v in yi.iter_mut() {
                 *v *= inv;
             }
         }
         // Panel update of everything below the block.
-        if j1 < n {
-            let (head, tail) = y.as_mut_slice().split_at_mut(j1 * k);
+        if j1 < nb {
+            let (head, tail) = y.split_at_mut(j1 * k);
             kernel::dgemm(
-                n - j1,
+                nb - j1,
                 k,
                 j1 - j0,
                 -1.0,
-                &l.as_slice()[j1 * n + j0..],
-                n,
+                &l[j1 * ldl + j0..],
+                ldl,
                 Trans::N,
                 &head[j0 * k..],
                 k,
@@ -112,6 +123,68 @@ pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
         }
         j0 = j1;
     }
+}
+
+/// The blocked backward-substitution core: solves `Lᵀ Z = Z` in place —
+/// the transpose counterpart of [`fwd_multi_core`], same sharing and
+/// bit-identity contract.
+pub(crate) fn bwd_multi_core(l: &[f64], ldl: usize, nb: usize, z: &mut [f64], k: usize) {
+    let mut j1 = nb;
+    while j1 > 0 {
+        let j0 = j1.saturating_sub(TB);
+        // Unblocked backward solve within the diagonal block.
+        for i in (j0..j1).rev() {
+            let (head, tail) = z.split_at_mut(i * k);
+            let zi = &mut tail[..k];
+            let inv = 1.0 / l[i * ldl + i];
+            for v in zi.iter_mut() {
+                *v *= inv;
+            }
+            for j in j0..i {
+                let lij = l[i * ldl + j];
+                if lij != 0.0 {
+                    let zj = &mut head[j * k..(j + 1) * k];
+                    for (a, c) in zj.iter_mut().zip(zi.iter()) {
+                        *a -= lij * c;
+                    }
+                }
+            }
+        }
+        // Panel update of everything above the block.
+        if j0 > 0 {
+            let (head, tail) = z.split_at_mut(j0 * k);
+            kernel::dgemm(
+                j0,
+                k,
+                j1 - j0,
+                -1.0,
+                &l[j0 * ldl..],
+                ldl,
+                Trans::T,
+                &tail[..(j1 - j0) * k],
+                k,
+                Trans::N,
+                1.0,
+                head,
+                k,
+            );
+        }
+        j1 = j0;
+    }
+}
+
+/// Multi-RHS forward solve: `L Y = B` where `B` is n×k.
+///
+/// Blocked: rows `[j0, j1)` are solved unblocked against the diagonal
+/// block, then all remaining rows are updated at once with
+/// `Y[j1.., :] -= L[j1.., j0..j1] · Y[j0..j1, :]` on the packed engine.
+pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let k = b.cols();
+    let mut y = b.clone();
+    fwd_multi_core(l.as_slice(), n, n, y.as_mut_slice(), k);
     y
 }
 
@@ -126,47 +199,98 @@ pub fn solve_lower_transpose_multi(l: &Mat, yy: &Mat) -> Mat {
     assert_eq!(yy.rows(), n);
     let k = yy.cols();
     let mut z = yy.clone();
-    let mut j1 = n;
-    while j1 > 0 {
-        let j0 = j1.saturating_sub(TB);
-        // Unblocked backward solve within the diagonal block.
-        for i in (j0..j1).rev() {
-            let inv = 1.0 / l[(i, i)];
-            for v in z.row_mut(i) {
-                *v *= inv;
-            }
-            for j in j0..i {
-                let lij = l[(i, j)];
-                if lij != 0.0 {
-                    let (zj, zi) = z.rows_mut2(j, i);
-                    for (a, c) in zj.iter_mut().zip(zi.iter()) {
-                        *a -= lij * c;
-                    }
-                }
-            }
-        }
-        // Panel update of everything above the block.
-        if j0 > 0 {
-            let (head, tail) = z.as_mut_slice().split_at_mut(j0 * k);
-            kernel::dgemm(
-                j0,
-                k,
-                j1 - j0,
-                -1.0,
-                &l.as_slice()[j0 * n..],
-                n,
-                Trans::T,
-                &tail[..(j1 - j0) * k],
-                k,
-                Trans::N,
-                1.0,
-                head,
-                k,
-            );
-        }
-        j1 = j0;
-    }
+    bwd_multi_core(l.as_slice(), n, n, z.as_mut_slice(), k);
     z
+}
+
+/// Minimum RHS columns per panel job (and, ×2, the width below which
+/// the threaded solves stay serial). Half an NR micro-tile row: any
+/// narrower and most packed-engine lanes in the panel GEMM are padding,
+/// so extra jobs would shred the work without adding throughput.
+const PAR_MIN_COLS: usize = 4;
+
+/// Minimum order for the threaded solves — below TB there is no panel
+/// GEMM to speed up and the substitution is latency-bound.
+const PAR_MIN_N: usize = TB;
+
+/// Run `op` over the RHS columns of `b` split into `threads` contiguous
+/// panels on the kernel pool: each job gathers its columns into a
+/// contiguous n×kc buffer, applies the serial core, and scatters the
+/// result into `out`. Columns are arithmetically independent, so the
+/// result is bit-identical to the serial full-width solve.
+fn solve_multi_panels(
+    l: &Mat,
+    b: &Mat,
+    threads: usize,
+    core: fn(&[f64], usize, usize, &mut [f64], usize),
+) -> Mat {
+    let n = l.rows();
+    let k = b.cols();
+    let mut out = Mat::zeros(n, k);
+    let jobs_n = threads.min(k.div_ceil(PAR_MIN_COLS)).max(1);
+    let chunk = k.div_ceil(jobs_n);
+    {
+        let lptr = SendConst(l.as_slice().as_ptr());
+        let llen = l.as_slice().len();
+        let bptr = SendConst(b.as_slice().as_ptr());
+        let optr = SendMut(out.as_mut_slice().as_mut_ptr());
+        let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(jobs_n);
+        let mut c0 = 0usize;
+        while c0 < k {
+            let c1 = (c0 + chunk).min(k);
+            let kc = c1 - c0;
+            jobs.push(Box::new(move || {
+                // SAFETY: L and B are only read; each job scatters into
+                // the disjoint column range [c0, c1) of `out` (disjoint
+                // element ranges per row). The caller blocks in `run`
+                // until every job is accounted for.
+                let ldata = unsafe { std::slice::from_raw_parts(lptr.0, llen) };
+                let bdata = unsafe { std::slice::from_raw_parts(bptr.0, n * k) };
+                let mut panel = vec![0.0; n * kc];
+                for i in 0..n {
+                    panel[i * kc..(i + 1) * kc].copy_from_slice(&bdata[i * k + c0..i * k + c1]);
+                }
+                core(ldata, n, n, &mut panel, kc);
+                for i in 0..n {
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * k + c0), kc) };
+                    dst.copy_from_slice(&panel[i * kc..(i + 1) * kc]);
+                }
+            }));
+            c0 = c1;
+        }
+        kernel::global_pool().run(jobs);
+    }
+    out
+}
+
+/// Threaded multi-RHS forward solve — [`solve_lower_multi`] with the
+/// RHS columns partitioned into contiguous panels across the persistent
+/// kernel pool. **Bit-identical to the serial solve for every thread
+/// count**: each column's substitution arithmetic is independent of
+/// every other column, so panelization cannot reorder a single sum.
+pub fn solve_lower_multi_threaded(l: &Mat, b: &Mat, threads: usize) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    if threads <= 1 || b.cols() < 2 * PAR_MIN_COLS || n < PAR_MIN_N {
+        return solve_lower_multi(l, b);
+    }
+    solve_multi_panels(l, b, threads, fwd_multi_core)
+}
+
+/// Threaded multi-RHS transposed solve — the
+/// [`solve_lower_transpose_multi`] counterpart of
+/// [`solve_lower_multi_threaded`], same partitioning and bit-identity
+/// contract.
+pub fn solve_lower_transpose_multi_threaded(l: &Mat, yy: &Mat, threads: usize) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(yy.rows(), n);
+    if threads <= 1 || yy.cols() < 2 * PAR_MIN_COLS || n < PAR_MIN_N {
+        return solve_lower_transpose_multi(l, yy);
+    }
+    solve_multi_panels(l, yy, threads, bwd_multi_core)
 }
 
 #[cfg(test)]

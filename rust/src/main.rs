@@ -116,7 +116,7 @@ USAGE:
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions) [--scale small|paper] [--json out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads) [--scale small|paper] [--json out.json] [--quick]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -353,7 +353,9 @@ fn cmd_vmc(args: &[String]) -> Result<(), String> {
 
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
-    a.expect_only(&["table1", "scaling", "cg", "kernels", "sessions", "scale", "json", "quick"])?;
+    a.expect_only(&[
+        "table1", "scaling", "cg", "kernels", "sessions", "threads", "scale", "json", "quick",
+    ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
         "paper" => true,
@@ -378,8 +380,29 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
             false,
         )
         .map_err(|e| e.to_string())?;
+    } else if a.has("threads") {
+        // Sweeps pool thread counts {1, 2, 4, 8} over every pipeline
+        // stage plus the end-to-end session; bit-identity asserted
+        // always, the ≥3× acceptance bar only in the bench harness's
+        // full mode. The sweep is fixed — reject a value rather than
+        // silently ignoring it (no-silent-ignore policy).
+        if let Some(v) = a.get("threads").filter(|s| !s.is_empty()) {
+            return Err(format!(
+                "--threads takes no value for `bench` (got {v:?}): the harness always sweeps \
+                 1/2/4/8 pool threads"
+            ));
+        }
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR3.json");
+        dngd::bench_tables::thread_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
-        return Err("pick one of --table1 | --scaling | --cg | --kernels | --sessions".into());
+        return Err(
+            "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads".into()
+        );
     }
     Ok(())
 }

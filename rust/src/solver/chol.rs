@@ -21,20 +21,24 @@
 
 use super::session::{check_lambda, refactor_damped, undamped_err};
 use super::{DampedSolver, Factorization, SolveError};
-use crate::linalg::gemm::{gemm_nt, gemm_tn, syrk, syrk_parallel};
+use crate::linalg::gemm::{gemm_nt_threaded, gemm_tn_threaded, syrk, syrk_parallel};
 use crate::linalg::{
-    cholesky, solve_lower, solve_lower_multi, solve_lower_transpose, solve_lower_transpose_multi,
-    KernelConfig, Mat,
+    cholesky_threaded, solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
+    solve_lower_transpose_multi_threaded, KernelConfig, Mat,
 };
 
 /// Algorithm-1 solver ("chol").
 #[derive(Debug, Clone)]
 pub struct CholSolver {
-    /// Worker threads for the SYRK (Gram) step, the only O(n²m) kernel.
-    /// 1 = serial (deterministic default). Threaded SYRK runs on the
-    /// persistent kernel pool and is bit-identical to serial — the
-    /// paper's parallelization strategy (shared with RVB+23) shards this
-    /// product; within one process we thread it.
+    /// Worker threads for the whole dense pipeline: the Gram SYRK
+    /// (line 1), the blocked Cholesky (line 2, lookahead-pipelined),
+    /// and the multi-RHS TRSM + panel GEMMs of the session's
+    /// `solve_many` (lines 3–4). 1 = serial (deterministic default);
+    /// every threaded stage runs on the persistent kernel pool and is
+    /// bit-identical to serial — the paper's parallelization strategy
+    /// (shared with RVB+23) shards the Gram across devices; within one
+    /// process we thread every stage so Amdahl's law does not cap the
+    /// end-to-end solve at the SYRK fraction.
     pub threads: usize,
 }
 
@@ -71,7 +75,7 @@ impl CholSolver {
         } else {
             syrk(s, lambda)
         };
-        Ok(cholesky(&w)?)
+        Ok(cholesky_threaded(&w, self.threads)?)
     }
 
     /// Apply Algorithm 1 line 4 given a precomputed factor `L`.
@@ -143,7 +147,9 @@ impl Factorization for CholFactor<'_> {
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
         check_lambda(lambda)?;
-        match refactor_damped(self.ensure_gram(), lambda) {
+        let threads = self.threads;
+        self.ensure_gram();
+        match refactor_damped(self.gram.as_ref().unwrap(), lambda, threads) {
             Ok(l) => {
                 self.l = Some(l);
                 self.lambda = lambda;
@@ -178,7 +184,8 @@ impl Factorization for CholFactor<'_> {
 
     /// Blocked multi-RHS Algorithm 1: one `S·Vᵀ` panel GEMM, the blocked
     /// TRSM pair, one `Sᵀ·Z` panel GEMM — O(n²k) at GEMM speed instead of
-    /// k separate vector substitutions.
+    /// k separate vector substitutions. Every stage partitions across
+    /// the session's `threads` pool jobs (bit-identical to serial).
     fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
         let (n, m) = self.s.shape();
         assert_eq!(vs.cols(), m, "each row of vs must be m-dimensional");
@@ -186,13 +193,14 @@ impl Factorization for CholFactor<'_> {
         let k = vs.rows();
         // U = S·Vᵀ  (n×k)
         let mut u = Mat::zeros(n, k);
-        gemm_nt(1.0, self.s, vs, 0.0, &mut u);
-        // Z = L⁻ᵀ(L⁻¹U) — the PR-1 blocked TRSM pair.
-        let y = solve_lower_multi(l, &u);
-        let z = solve_lower_transpose_multi(l, &y);
+        gemm_nt_threaded(1.0, self.s, vs, 0.0, &mut u, self.threads);
+        // Z = L⁻ᵀ(L⁻¹U) — the blocked TRSM pair, RHS columns paneled
+        // across the pool.
+        let y = solve_lower_multi_threaded(l, &u, self.threads);
+        let z = solve_lower_transpose_multi_threaded(l, &y, self.threads);
         // T = Sᵀ·Z  (m×k)
         let mut t = Mat::zeros(m, k);
-        gemm_tn(1.0, self.s, &z, 0.0, &mut t);
+        gemm_tn_threaded(1.0, self.s, &z, 0.0, &mut t, self.threads);
         // X = (V − Tᵀ)/λ  (k×m, rows are solutions)
         let inv = 1.0 / self.lambda;
         let mut x = Mat::zeros(k, m);

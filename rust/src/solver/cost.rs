@@ -18,6 +18,39 @@ use super::SolverKind;
 /// Bytes per scalar in the modeled device arrays (f64).
 const W: f64 = 8.0;
 
+/// Modeled *time-proportional* FLOP count of one solve at `threads`
+/// kernel-pool jobs: the GEMM-shaped and factorization terms (Gram
+/// products, Cholesky/eigh/SVD sweeps — everything the PR-3 threaded
+/// engine partitions) divide by the thread count, while the O(nm)
+/// streaming passes stay serial (they are memory-bandwidth-bound, and
+/// the per-RHS matvecs run on the caller). This is what a
+/// registry/backend choosing between kinds at a given `solver.threads`
+/// should compare — the unthreaded [`flops`] would overstate the cost
+/// of factorization-heavy kinds on a multi-core box and bias selection
+/// toward iterative methods that cannot use the pool. Today's consumer
+/// is the thread bench's ideal-scaling overlay
+/// (`bench_tables::thread_bench_report`).
+pub fn flops_threaded(kind: SolverKind, n: usize, m: usize, threads: usize) -> f64 {
+    let t = threads.max(1) as f64;
+    let nf = n as f64;
+    let mf = m as f64;
+    // Serial remainder per kind: the streaming O(nm)-class passes, plus
+    // everything rotation- or iteration-sequential.
+    let serial = match kind {
+        SolverKind::Chol => 4.0 * nf * mf,
+        // The Jacobi eigendecomposition (9n³) is rotation-sequential
+        // and stays on the caller — only the two O(n²m) passes thread.
+        SolverKind::Eigh => 9.0 * nf * nf * nf + 6.0 * nf * mf,
+        // One-sided Jacobi: each rotation feeds the next — no partition.
+        SolverKind::Svda => flops(SolverKind::Svda, n, m),
+        SolverKind::Naive => 0.0,
+        // CG is a chain of dependent matvecs — nothing partitions.
+        SolverKind::Cg => flops(SolverKind::Cg, n, m),
+        SolverKind::Rvb => 6.0 * nf * mf,
+    };
+    serial + (flops(kind, n, m) - serial) / t
+}
+
 /// Modeled FLOP count of one solve. Leading-order terms only; used for
 /// ideal-scaling overlays, not for timing claims.
 pub fn flops(kind: SolverKind, n: usize, m: usize) -> f64 {
@@ -121,6 +154,33 @@ mod tests {
         let an = memory_bytes(SolverKind::Naive, 512, 100_000) as f64;
         let bn = memory_bytes(SolverKind::Naive, 512, 200_000) as f64;
         assert!((bn / an - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn threaded_model_divides_parallel_work_only() {
+        let (n, m) = (1024usize, 100_000usize);
+        for &kind in &[SolverKind::Chol, SolverKind::Eigh, SolverKind::Naive, SolverKind::Rvb] {
+            let f1 = flops_threaded(kind, n, m, 1);
+            assert_eq!(f1, flops(kind, n, m), "{kind:?} at 1 thread");
+            let f8 = flops_threaded(kind, n, m, 8);
+            // Dominated by parallel terms at this shape: close to /8 but
+            // strictly above it (the serial streaming passes remain).
+            assert!(f8 < f1 / 4.0, "{kind:?} should scale");
+            assert!(f8 >= f1 / 8.0, "{kind:?} cannot beat ideal");
+        }
+        // CG is sequential: threads change nothing.
+        assert_eq!(
+            flops_threaded(SolverKind::Cg, n, m, 8),
+            flops(SolverKind::Cg, n, m)
+        );
+        // Kind selection stays honest: chol remains the cheapest direct
+        // method at the paper's shapes for every thread count.
+        for &t in &[1usize, 2, 8] {
+            let c = flops_threaded(SolverKind::Chol, 2048, 100_000, t);
+            assert!(c < flops_threaded(SolverKind::Eigh, 2048, 100_000, t));
+            assert!(c < flops_threaded(SolverKind::Svda, 2048, 100_000, t));
+            assert!(c < flops_threaded(SolverKind::Naive, 2048, 100_000, t));
+        }
     }
 
     #[test]

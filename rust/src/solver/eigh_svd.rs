@@ -18,12 +18,17 @@
 
 use super::session::{check_lambda, undamped_err};
 use super::{DampedSolver, Factorization, SolveError};
-use crate::linalg::svd::{svd_eigh, svd_jacobi, ThinSvd};
+use crate::linalg::svd::{svd_eigh_threaded, svd_jacobi, ThinSvd};
 use crate::linalg::Mat;
 
 /// Eigh-SVD solver ("eigh").
 #[derive(Debug, Clone, Default)]
-pub struct EighSolver;
+pub struct EighSolver {
+    /// Kernel-pool jobs for the two O(n²m) passes of the SVD stage (the
+    /// Gram SYRK and the `V = SᵀUΣ⁻¹` tall GEMM). 0/1 = serial; any
+    /// count is bit-identical.
+    pub threads: usize,
+}
 
 impl EighSolver {
     /// Eq. 5 applied to a precomputed thin SVD — shared with [`super::SvdaSolver`].
@@ -49,10 +54,12 @@ impl EighSolver {
 
 /// Which backend computes the thin SVD for an [`SvdFactor`] session.
 pub(crate) enum SvdMethod {
-    /// Gram eigendecomposition (the `"eigh"` path).
-    Eigh,
+    /// Gram eigendecomposition (the `"eigh"` path) with its O(n²m)
+    /// passes split across `threads` kernel-pool jobs.
+    Eigh { threads: usize },
     /// One-sided Jacobi with the modeled device budget (the `"svda"`
-    /// path; the budget is checked before the sweeps run).
+    /// path; the budget is checked before the sweeps run). The sweeps
+    /// are rotation-sequential, so no thread count here.
     Jacobi { budget: super::MemoryBudget },
 }
 
@@ -90,7 +97,9 @@ impl Factorization for SvdFactor<'_> {
         check_lambda(lambda)?;
         if self.svd.is_none() {
             match &self.method {
-                SvdMethod::Eigh => self.svd = Some(svd_eigh(self.s)),
+                SvdMethod::Eigh { threads } => {
+                    self.svd = Some(svd_eigh_threaded(self.s, (*threads).max(1)))
+                }
                 SvdMethod::Jacobi { budget } => {
                     let (n, m) = self.s.shape();
                     let required = super::memory_bytes(super::SolverKind::Svda, n, m);
@@ -125,7 +134,7 @@ impl DampedSolver for EighSolver {
     }
 
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
-        Box::new(SvdFactor::new(s, SvdMethod::Eigh, "eigh"))
+        Box::new(SvdFactor::new(s, SvdMethod::Eigh { threads: self.threads }, "eigh"))
     }
 }
 
@@ -142,7 +151,7 @@ mod tests {
             let s = Mat::randn(n, m, &mut rng);
             let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
             let xc = CholSolver::default().solve(&s, &v, 0.03).unwrap();
-            let xe = EighSolver.solve(&s, &v, 0.03).unwrap();
+            let xe = EighSolver::default().solve(&s, &v, 0.03).unwrap();
             for (a, b) in xc.iter().zip(&xe) {
                 assert!((a - b).abs() < 1e-7, "({n},{m})");
             }
@@ -154,7 +163,7 @@ mod tests {
         let mut rng = Rng::seed_from(123);
         let s = Mat::randn(8, 40, &mut rng);
         let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
-        let solver = EighSolver;
+        let solver = EighSolver::default();
         let mut fact = solver.factor(&s, 0.5).unwrap();
         for &lambda in &[0.5, 0.05, 1e-3] {
             fact.redamp(lambda).unwrap();
@@ -175,7 +184,7 @@ mod tests {
         let r0 = s.row(0).to_vec();
         s.row_mut(4).copy_from_slice(&r0);
         let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
-        let x = EighSolver.solve(&s, &v, 1e-3).unwrap();
+        let x = EighSolver::default().solve(&s, &v, 1e-3).unwrap();
         assert!(residual_norm(&s, &x, &v, 1e-3) < 1e-7);
     }
 
@@ -193,7 +202,7 @@ mod tests {
             v[j] -= proj[j];
         }
         let lambda = 0.25;
-        let x = EighSolver.solve(&s, &v, lambda).unwrap();
+        let x = EighSolver::default().solve(&s, &v, lambda).unwrap();
         for (xi, vi) in x.iter().zip(&v) {
             assert!((xi - vi / lambda).abs() < 1e-9);
         }

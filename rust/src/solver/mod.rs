@@ -49,6 +49,32 @@
 //! (factor → solve_into), so old call sites keep working — now routed
 //! through the session path.
 //!
+//! ## Threading (PR 3): `solver.threads` reaches every stage
+//!
+//! `solver.threads` (TOML `[solver] threads = T`, CLI `--threads T` /
+//! `--set solver.threads=T`, env `DNGD_THREADS` for the bench harness)
+//! is no longer a SYRK-only knob. A registry-built solver partitions
+//! **every** dense stage across that many persistent kernel-pool jobs:
+//!
+//! | stage | where it threads |
+//! |-------|------------------|
+//! | Gram `SSᵀ` (line 1) | `syrk_parallel` MC-row panels |
+//! | `Chol(W)` (line 2), incl. every λ-resweep | lookahead-pipelined blocked Cholesky (`linalg::cholesky_threaded`) |
+//! | multi-RHS TRSM (lines 3–4) | RHS column panels (`linalg::solve_lower_multi_threaded`) |
+//! | session panel GEMMs (`S·Vᵀ`, `Sᵀ·Z`, `SᵀS`, eigh's `V = SᵀUΣ⁻¹`) | `dgemm_threaded` MC-row bands |
+//! | sharded coordinator's leader-local resweep | same threaded Cholesky on the leader |
+//!
+//! Every threaded kernel is **bit-identical to its serial result at
+//! every thread count** (pinned by `rust/tests/threading.rs`), so
+//! `threads` is a pure throughput knob: runs reproduce exactly across
+//! machines with different core counts. [`flops_threaded`] is the
+//! matching cost model — it divides only the partitionable GEMM/factor
+//! terms by the thread count, keeping cross-kind comparisons honest at
+//! a configured thread count; the thread bench prints it as the
+//! ideal-scaling overlay next to the measured speedups. Measured
+//! scaling lives in EXPERIMENTS.md §Threading
+//! (`dngd bench --threads` → `BENCH_PR3.json`).
+//!
 //! Complex stochastic-reconfiguration variants (§3) live in
 //! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part
 //! Fisher `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`, with the same
@@ -69,7 +95,7 @@ pub use chol::CholSolver;
 pub use complex_sr::{
     center_scores, solve_sr_complex, solve_sr_real_part, stack_real_part, ComplexSrFactor,
 };
-pub use cost::{flops, memory_bytes, MemoryBudget};
+pub use cost::{flops, flops_threaded, memory_bytes, MemoryBudget};
 pub use eigh_svd::EighSolver;
 pub use naive::NaiveSolver;
 pub use rvb::RvbSolver;

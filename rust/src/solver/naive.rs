@@ -11,17 +11,20 @@
 use super::cost::{memory_bytes, MemoryBudget};
 use super::session::{check_lambda, refactor_damped, undamped_err};
 use super::{DampedSolver, Factorization, SolveError, SolverKind};
-use crate::linalg::{gemm::gemm_tn, solve_lower, solve_lower_transpose, Mat};
+use crate::linalg::{gemm::gemm_tn_threaded, solve_lower, solve_lower_transpose, Mat};
 
 /// Direct m×m solver.
 #[derive(Debug, Clone)]
 pub struct NaiveSolver {
     pub budget: MemoryBudget,
+    /// Kernel-pool jobs for the m×m `SᵀS` GEMM and the m³ Cholesky
+    /// (bit-identical to serial at every count).
+    pub threads: usize,
 }
 
 impl Default for NaiveSolver {
     fn default() -> Self {
-        NaiveSolver { budget: MemoryBudget::a100_80gb() }
+        NaiveSolver { budget: MemoryBudget::a100_80gb(), threads: 1 }
     }
 }
 
@@ -29,14 +32,15 @@ impl Default for NaiveSolver {
 pub struct NaiveFactor<'s> {
     s: &'s Mat,
     budget: MemoryBudget,
+    threads: usize,
     lambda: f64,
     fisher: Option<Mat>,
     l: Option<Mat>,
 }
 
 impl<'s> NaiveFactor<'s> {
-    fn new(s: &'s Mat, budget: MemoryBudget) -> Self {
-        NaiveFactor { s, budget, lambda: 0.0, fisher: None, l: None }
+    fn new(s: &'s Mat, budget: MemoryBudget, threads: usize) -> Self {
+        NaiveFactor { s, budget, threads, lambda: 0.0, fisher: None, l: None }
     }
 }
 
@@ -66,10 +70,10 @@ impl Factorization for NaiveFactor<'_> {
             }
             // F = SᵀS  (m×m — the whole point of the paper is avoiding this)
             let mut f = Mat::zeros(m, m);
-            gemm_tn(1.0, self.s, self.s, 0.0, &mut f);
+            gemm_tn_threaded(1.0, self.s, self.s, 0.0, &mut f, self.threads);
             self.fisher = Some(f);
         }
-        match refactor_damped(self.fisher.as_ref().unwrap(), lambda) {
+        match refactor_damped(self.fisher.as_ref().unwrap(), lambda, self.threads) {
             Ok(l) => {
                 self.l = Some(l);
                 self.lambda = lambda;
@@ -101,7 +105,7 @@ impl DampedSolver for NaiveSolver {
     }
 
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
-        Box::new(NaiveFactor::new(s, self.budget))
+        Box::new(NaiveFactor::new(s, self.budget, self.threads.max(1)))
     }
 }
 
@@ -130,7 +134,7 @@ mod tests {
     #[test]
     fn tiny_budget_surfaces_oom_through_the_session() {
         let mut rng = Rng::seed_from(142);
-        let solver = NaiveSolver { budget: MemoryBudget::bytes_for_test(64) };
+        let solver = NaiveSolver { budget: MemoryBudget::bytes_for_test(64), threads: 1 };
         let s = Mat::randn(4, 16, &mut rng);
         let v = vec![1.0; 16];
         assert!(matches!(

@@ -23,7 +23,7 @@
 use super::session::{check_lambda, refactor_damped, undamped_err};
 use super::{CholSolver, DampedSolver, Factorization, SolveError};
 use crate::linalg::gemm::{syrk, syrk_parallel};
-use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+use crate::linalg::{cholesky_threaded, solve_lower, solve_lower_transpose, Mat};
 
 /// RVB+23 least-squares solver.
 #[derive(Debug, Clone)]
@@ -69,8 +69,12 @@ impl RvbSolver {
     pub fn recover_f(&self, s: &Mat, v: &[f64], tol: f64) -> Result<Vec<f64>, SolveError> {
         let sv = s.matvec(v);
         // SSᵀ may be singular; tiny ridge for the recovery only.
-        let w = syrk(s, recovery_ridge(s));
-        let l = cholesky(&w)?;
+        let w = if self.inner.threads > 1 {
+            syrk_parallel(s, recovery_ridge(s), self.inner.threads)
+        } else {
+            syrk(s, recovery_ridge(s))
+        };
+        let l = cholesky_threaded(&w, self.inner.threads)?;
         let f = solve_lower_transpose(&l, &solve_lower(&l, &sv));
         verify_reconstruction(s, v, &f, tol)?;
         Ok(f)
@@ -145,7 +149,9 @@ impl<'s> RvbFactor<'s> {
     fn ensure_recovery(&mut self) -> Result<(), SolveError> {
         if self.recovery_l.is_none() {
             let ridge = recovery_ridge(self.s);
-            self.recovery_l = Some(refactor_damped(self.ensure_gram(), ridge)?);
+            let threads = self.threads;
+            self.ensure_gram();
+            self.recovery_l = Some(refactor_damped(self.gram.as_ref().unwrap(), ridge, threads)?);
         }
         Ok(())
     }
@@ -166,7 +172,9 @@ impl Factorization for RvbFactor<'_> {
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
         check_lambda(lambda)?;
-        match refactor_damped(self.ensure_gram(), lambda) {
+        let threads = self.threads;
+        self.ensure_gram();
+        match refactor_damped(self.gram.as_ref().unwrap(), lambda, threads) {
             Ok(l) => {
                 self.l = Some(l);
                 self.lambda = lambda;

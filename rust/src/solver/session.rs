@@ -93,14 +93,18 @@ pub(crate) fn undamped_err() -> SolveError {
 
 /// The shared redamp kernel of the direct-method sessions: re-damp a
 /// cached λ-independent matrix (`SSᵀ` for chol/rvb/sharded, `SᵀS` for
-/// naive) and Cholesky-factor it — O(n³), zero Gram GEMMs.
+/// naive) and Cholesky-factor it — O(n³), zero Gram GEMMs. The
+/// factorization runs on `threads` kernel-pool jobs (lookahead-blocked
+/// Cholesky, bit-identical to serial), so a λ-resweep scales with the
+/// session's `solver.threads` like every other stage.
 pub(crate) fn refactor_damped(
     cached: &Mat,
     lambda: f64,
+    threads: usize,
 ) -> Result<Mat, SolveError> {
     let mut w = cached.clone();
     w.add_diag(lambda);
-    crate::linalg::cholesky(&w).map_err(Into::into)
+    crate::linalg::cholesky_threaded(&w, threads).map_err(Into::into)
 }
 
 /// Re-damp `fact` at `lambda` and solve `v`, retrying with a ×10 λ
@@ -179,7 +183,11 @@ impl<S: DampedSolver + ?Sized> Factorization for OneShot<'_, S> {
 /// (the CLI's no-silent-ignore policy).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SolverOptions {
-    /// Worker threads for the Gram (SYRK) stage of `chol`/`rvb`.
+    /// Worker threads for every dense stage of the direct solvers —
+    /// Gram SYRK, the blocked Cholesky (λ-resweeps included), the
+    /// multi-RHS TRSM and the session panel GEMMs all partition across
+    /// this many kernel-pool jobs. Threaded results are bit-identical
+    /// to serial at every count.
     pub threads: usize,
     /// CG relative-residual tolerance ‖r‖/‖v‖.
     pub cg_tol: f64,
@@ -306,9 +314,15 @@ impl SolverRegistry {
     pub fn build(&self, kind: SolverKind) -> Box<dyn DampedSolver + Send + Sync> {
         match kind {
             SolverKind::Chol => Box::new(super::CholSolver::with_config(self.opts.kernel())),
-            SolverKind::Eigh => Box::new(super::EighSolver),
-            SolverKind::Svda => Box::new(super::SvdaSolver { budget: self.opts.budget() }),
-            SolverKind::Naive => Box::new(super::NaiveSolver { budget: self.opts.budget() }),
+            SolverKind::Eigh => Box::new(super::EighSolver { threads: self.opts.threads }),
+            SolverKind::Svda => Box::new(super::SvdaSolver {
+                budget: self.opts.budget(),
+                threads: self.opts.threads,
+            }),
+            SolverKind::Naive => Box::new(super::NaiveSolver {
+                budget: self.opts.budget(),
+                threads: self.opts.threads,
+            }),
             SolverKind::Cg => {
                 Box::new(super::CgSolver::new(self.opts.cg_tol, self.opts.cg_max_iters))
             }

@@ -26,18 +26,24 @@ use crate::linalg::Mat;
 pub struct SvdaSolver {
     /// Simulated device memory (defaults to the paper's 80 GB A100).
     pub budget: MemoryBudget,
+    /// Accepted for registry parity with the other direct methods; the
+    /// Jacobi sweeps are rotation-sequential (each 2×2 rotation feeds
+    /// the next), so the SVD stage itself cannot be pool-partitioned —
+    /// only the session's per-RHS O(nm) passes would benefit, and those
+    /// are bandwidth-bound.
+    pub threads: usize,
 }
 
 impl Default for SvdaSolver {
     fn default() -> Self {
-        SvdaSolver { budget: MemoryBudget::a100_80gb() }
+        SvdaSolver { budget: MemoryBudget::a100_80gb(), threads: 1 }
     }
 }
 
 impl SvdaSolver {
     /// Solver with an unlimited budget (tests that only care about math).
     pub fn unlimited() -> Self {
-        SvdaSolver { budget: MemoryBudget::unlimited() }
+        SvdaSolver { budget: MemoryBudget::unlimited(), threads: 1 }
     }
 }
 
@@ -89,7 +95,7 @@ mod tests {
     #[test]
     fn oom_error_is_reported_not_panicked() {
         // A tiny synthetic budget forces the OOM path on a small matrix.
-        let solver = SvdaSolver { budget: MemoryBudget::bytes_for_test(1024) };
+        let solver = SvdaSolver { budget: MemoryBudget::bytes_for_test(1024), threads: 1 };
         let mut rng = Rng::seed_from(131);
         let s = Mat::randn(8, 64, &mut rng);
         let v = vec![1.0; 64];

@@ -14,6 +14,11 @@
 //!      rejects unknown per-solver options as hard errors.
 //!  S5. The distributed sharded session agrees with the serial session
 //!      across right-hand sides and λ-resweeps.
+//!  S7. (PR 3) A chol session built through the registry with
+//!      `solver.threads = t` produces bit-identical results for every
+//!      t — the full `begin → redamp → solve_many` pipeline (Gram,
+//!      lookahead Cholesky, panel GEMMs, threaded TRSM) is
+//!      deterministic, so `threads` is a pure throughput knob.
 
 use dngd::coordinator::ShardedCholSolver;
 use dngd::data::rng::Rng;
@@ -208,6 +213,38 @@ fn s5_sharded_session_matches_serial_across_rhs_and_resweeps() {
             }
         }
     }
+}
+
+#[test]
+fn s7_registry_threaded_session_bit_identical_round_trip() {
+    let mut rng = Rng::seed_from(7007);
+    let (n, m, k) = (160usize, 512usize, 6usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let run = |threads: usize| -> Mat {
+        let mut opts = SolverOptions::default();
+        opts.apply("threads", &threads.to_string()).unwrap();
+        let reg = SolverRegistry::new(opts);
+        let plan = reg.plan(SolverKind::Chol, n, m);
+        let fact = plan.begin(&s);
+        let mut fact = fact.unwrap();
+        fact.redamp(5e-3).unwrap();
+        fact.solve_many(&vs).unwrap()
+    };
+    let reference = run(1);
+    for threads in [2usize, 4, 8] {
+        let x = run(threads);
+        assert_eq!(
+            x.as_slice(),
+            reference.as_slice(),
+            "registry chol session at solver.threads={threads} is not bit-identical to serial"
+        );
+    }
+    // And it actually solves the damped system.
+    let res = residual_norm(&s, reference.row(0), vs.row(0), 5e-3);
+    let scale = s.fro_norm().powi(2) * dngd::linalg::mat::norm2(reference.row(0))
+        + dngd::linalg::mat::norm2(vs.row(0));
+    assert!(res < 1e-9 * scale.max(1.0), "residual {res}");
 }
 
 #[test]

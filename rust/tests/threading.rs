@@ -1,0 +1,231 @@
+//! PR-3 determinism suite: every threaded kernel in the dense pipeline
+//! must be **bit-identical** to its serial result for every thread
+//! count. This is what makes `solver.threads` a pure throughput knob —
+//! a training run, a λ-backoff trajectory, or a checkpoint produced at
+//! 8 threads replays exactly at 1.
+//!
+//! Invariants checked (threads ∈ {1, 2, 4, 8} throughout):
+//!  T1. `dgemm_threaded` ≡ `dgemm` bitwise for all four N/T layout
+//!      pairs, with non-trivial alpha/beta and off-grid shapes.
+//!  T2. `cholesky_in_place_threaded` (lookahead pipeline) ≡ serial
+//!      bitwise, and still reconstructs `L·Lᵀ = W`.
+//!  T3. The threaded multi-RHS TRSM pair ≡ serial bitwise, and matches
+//!      per-column vector substitution numerically.
+//!  T4. The threaded gemm/gemm_nt/gemm_tn front-ends ≡ serial bitwise.
+//!  T5. A full chol session round-trip (`begin → redamp → solve_many →
+//!      redamp → solve_many`) is bitwise reproducible across thread
+//!      counts end-to-end.
+
+use dngd::data::rng::Rng;
+use dngd::linalg::kernel::{self, Trans};
+use dngd::linalg::{
+    cholesky_in_place_threaded, cholesky_threaded, gemm_nt_threaded, gemm_threaded,
+    gemm_tn_threaded, solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
+    solve_lower_transpose_multi_threaded, syrk, Mat,
+};
+use dngd::solver::{CholSolver, DampedSolver};
+
+const SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+#[test]
+fn t1_dgemm_bit_identical_across_thread_counts_all_layouts() {
+    let mut rng = Rng::seed_from(8101);
+    // m spans several MC blocks with a ragged tail so the band split is
+    // non-trivial; n/k sit off the NR/KC grids.
+    let (m, n, k) = (5 * kernel::MC + 37, 67, kernel::KC + 19);
+    let fill = |rows: usize, cols: usize, rng: &mut Rng| Mat::randn(rows, cols, rng);
+    // Buffers for each storage layout: N stores the logical operand,
+    // T stores its transpose.
+    let a_n = fill(m, k, &mut rng);
+    let a_t = a_n.transpose();
+    let b_n = fill(k, n, &mut rng);
+    let b_t = b_n.transpose();
+    let c0 = fill(m, n, &mut rng);
+    for (ta, tb) in [
+        (Trans::N, Trans::N),
+        (Trans::N, Trans::T),
+        (Trans::T, Trans::N),
+        (Trans::T, Trans::T),
+    ] {
+        let (a, lda) = match ta {
+            Trans::N => (&a_n, k),
+            Trans::T => (&a_t, m),
+        };
+        let (b, ldb) = match tb {
+            Trans::N => (&b_n, n),
+            Trans::T => (&b_t, k),
+        };
+        let mut reference = c0.clone();
+        kernel::dgemm(
+            m,
+            n,
+            k,
+            1.25,
+            a.as_slice(),
+            lda,
+            ta,
+            b.as_slice(),
+            ldb,
+            tb,
+            -0.5,
+            reference.as_mut_slice(),
+            n,
+        );
+        for threads in SWEEP {
+            let mut c = c0.clone();
+            kernel::dgemm_threaded(
+                m,
+                n,
+                k,
+                1.25,
+                a.as_slice(),
+                lda,
+                ta,
+                b.as_slice(),
+                ldb,
+                tb,
+                -0.5,
+                c.as_mut_slice(),
+                n,
+                threads,
+            );
+            assert_eq!(
+                c.as_slice(),
+                reference.as_slice(),
+                "dgemm {ta:?}/{tb:?} at {threads} threads is not bit-identical to serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn t2_cholesky_bit_identical_and_reconstructs() {
+    let mut rng = Rng::seed_from(8102);
+    // Several NB panels with a ragged tail, and enough trailing rows
+    // past the lookahead slab for multiple MC strips.
+    for &n in &[97usize, 300, 2 * kernel::MC + 61] {
+        let w = syrk(&Mat::randn(n, n + 9, &mut rng), 1.0);
+        let mut reference = w.clone();
+        cholesky_in_place_threaded(&mut reference, 1).unwrap();
+        for threads in SWEEP {
+            let l = cholesky_threaded(&w, threads).unwrap();
+            assert_eq!(
+                l.as_slice(),
+                reference.as_slice(),
+                "cholesky n={n} at {threads} threads is not bit-identical to serial"
+            );
+        }
+        // And the factor is right: L·Lᵀ = W.
+        let mut recon = Mat::zeros(n, n);
+        gemm_nt_threaded(1.0, &reference, &reference, 0.0, &mut recon, 4);
+        let scale = w.max_abs().max(1.0);
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (recon[(i, j)] - w[(i, j)]).abs() < 1e-9 * scale,
+                    "LLᵀ mismatch n={n} ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn t3_trsm_bit_identical_and_matches_columnwise() {
+    let mut rng = Rng::seed_from(8103);
+    for &(n, k) in &[(200usize, 23usize), (129, 8), (96, 3)] {
+        let l = cholesky_threaded(&syrk(&Mat::randn(n, n + 5, &mut rng), 1.0), 1).unwrap();
+        let b = Mat::randn(n, k, &mut rng);
+        let y_ref = solve_lower_multi_threaded(&l, &b, 1);
+        let z_ref = solve_lower_transpose_multi_threaded(&l, &y_ref, 1);
+        for threads in SWEEP {
+            let y = solve_lower_multi_threaded(&l, &b, threads);
+            assert_eq!(
+                y.as_slice(),
+                y_ref.as_slice(),
+                "fwd TRSM ({n},{k}) at {threads} threads differs from serial"
+            );
+            let z = solve_lower_transpose_multi_threaded(&l, &y, threads);
+            assert_eq!(
+                z.as_slice(),
+                z_ref.as_slice(),
+                "adj TRSM ({n},{k}) at {threads} threads differs from serial"
+            );
+        }
+        // Numerical anchor: the blocked panels match per-column vector
+        // substitution.
+        for col in 0..k {
+            let bcol = b.col(col);
+            let ycol = solve_lower(&l, &bcol);
+            let zcol = solve_lower_transpose(&l, &ycol);
+            for i in 0..n {
+                assert!((y_ref[(i, col)] - ycol[i]).abs() < 1e-9, "fwd ({n},{k}) ({i},{col})");
+                assert!((z_ref[(i, col)] - zcol[i]).abs() < 1e-9, "adj ({n},{k}) ({i},{col})");
+            }
+        }
+    }
+}
+
+#[test]
+fn t4_gemm_front_ends_bit_identical() {
+    let mut rng = Rng::seed_from(8104);
+    let (p, q, r) = (3 * kernel::MC + 11, 150, 41);
+    let a = Mat::randn(p, q, &mut rng);
+    let b = Mat::randn(q, r, &mut rng);
+    let c0 = Mat::randn(p, r, &mut rng);
+
+    let mut nn_ref = c0.clone();
+    gemm_threaded(2.0, &a, &b, 0.25, &mut nn_ref, 1);
+    let bt = b.transpose();
+    let mut nt_ref = c0.clone();
+    gemm_nt_threaded(2.0, &a, &bt, 0.25, &mut nt_ref, 1);
+    let at = a.transpose();
+    let mut tn_ref = c0.clone();
+    gemm_tn_threaded(2.0, &at, &b, 0.25, &mut tn_ref, 1);
+    assert_eq!(nn_ref.as_slice(), nt_ref.as_slice(), "layout front-ends disagree");
+
+    for threads in SWEEP {
+        let mut c = c0.clone();
+        gemm_threaded(2.0, &a, &b, 0.25, &mut c, threads);
+        assert_eq!(c.as_slice(), nn_ref.as_slice(), "gemm at {threads} threads");
+        let mut c = c0.clone();
+        gemm_nt_threaded(2.0, &a, &bt, 0.25, &mut c, threads);
+        assert_eq!(c.as_slice(), nt_ref.as_slice(), "gemm_nt at {threads} threads");
+        let mut c = c0.clone();
+        gemm_tn_threaded(2.0, &at, &b, 0.25, &mut c, threads);
+        assert_eq!(c.as_slice(), tn_ref.as_slice(), "gemm_tn at {threads} threads");
+    }
+}
+
+#[test]
+fn t5_chol_session_round_trip_bit_identical_end_to_end() {
+    let mut rng = Rng::seed_from(8105);
+    let (n, m, k) = (200usize, 640usize, 8usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let run = |threads: usize| -> (Mat, Mat) {
+        let solver = CholSolver::with_threads(threads);
+        let mut fact = solver.begin(&s);
+        fact.redamp(1e-2).unwrap();
+        let x1 = fact.solve_many(&vs).unwrap();
+        // λ-resweep on the cached Gram, then solve again — the full
+        // consumer trajectory (optimizer backoff / LM retry).
+        fact.redamp(1e-3).unwrap();
+        let x2 = fact.solve_many(&vs).unwrap();
+        (x1, x2)
+    };
+    let (x1_ref, x2_ref) = run(1);
+    for threads in SWEEP {
+        let (x1, x2) = run(threads);
+        assert_eq!(
+            x1.as_slice(),
+            x1_ref.as_slice(),
+            "session solve_many (λ=1e-2) at {threads} threads differs from serial"
+        );
+        assert_eq!(
+            x2.as_slice(),
+            x2_ref.as_slice(),
+            "session resweep solve_many (λ=1e-3) at {threads} threads differs from serial"
+        );
+    }
+}
