@@ -1,11 +1,16 @@
-//! Kernel-level microbenches for the perf pass (EXPERIMENTS.md §Perf):
-//! the packed-engine SYRK / GEMM / Cholesky / blocked TRSM against the
-//! seed scalar kernels, plus the end-to-end Algorithm-1 solve, each with
-//! achieved GFLOP/s so roofline headroom is visible per kernel.
+//! Kernel-level microbenches for the perf pass (EXPERIMENTS.md §Perf,
+//! §SIMD): the packed-engine SYRK / GEMM / Cholesky / blocked TRSM
+//! against the seed scalar kernels, plus the end-to-end Algorithm-1
+//! solve, each with achieved GFLOP/s so roofline headroom is visible
+//! per kernel — followed by the PR-4 ISA-tier sweep (scalar tier vs
+//! best dispatched tier, single-threaded).
 //!
 //! Emits the machine-readable `BENCH_PR1.json` trajectory file (path
-//! overridable via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks every
-//! shape for CI smoke runs).
+//! overridable via `DNGD_BENCH_JSON`) and `BENCH_PR4.json`
+//! (`DNGD_BENCH_JSON_SIMD`); `DNGD_BENCH_QUICK=1` shrinks every shape
+//! for CI smoke runs and skips the PR-4 acceptance assert (best tier
+//! ≥ 2× scalar on 512³ single-threaded DGEMM), which full mode
+//! enforces.
 //!
 //! ```text
 //! cargo bench --bench gemm
@@ -21,6 +26,12 @@ fn main() {
     let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR1.json".to_string());
     dngd::bench_tables::kernel_bench_report(quick, Some(Path::new(&json)))
         .expect("write bench json");
+
+    // PR-4 ISA-tier sweep + acceptance (strict in full mode only).
+    let json4 = std::env::var("DNGD_BENCH_JSON_SIMD")
+        .unwrap_or_else(|_| "BENCH_PR4.json".to_string());
+    dngd::bench_tables::simd_bench_report(quick, Some(Path::new(&json4)), !quick)
+        .expect("write simd bench json");
 
     // Streaming matvecs (memory-bound): effective GB/s for the O(nm)
     // passes of Algorithm 1 line 4. Not part of the JSON trajectory —

@@ -19,6 +19,12 @@
 //!   end-to-end chol session, swept over 1/2/4/8 pool threads with a
 //!   bit-identity check against the serial result on every row, emitted
 //!   as `BENCH_PR3.json` (`dngd bench --threads`).
+//! * [`simd_bench`] — PR 4's ISA-tier roofline table: every stage
+//!   single-threaded at the scalar tier vs the best dispatched tier
+//!   (AVX-512 / AVX2 / NEON), with per-stage GF/s and speedups, emitted
+//!   as `BENCH_PR4.json` (also from `dngd bench --kernels`, which
+//!   reports the active tier). Full mode asserts the PR-4 acceptance
+//!   bar: best tier ≥ 2× scalar on 512³ DGEMM single-threaded.
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -736,6 +742,222 @@ pub fn thread_bench_report(
             e2e8.speedup
         );
         println!("acceptance: session_e2e ≥ 3× at 8 threads ✓");
+    }
+    Ok(())
+}
+
+/// One row of the PR-4 ISA-tier benchmark.
+#[derive(Debug, Clone)]
+pub struct SimdBenchRow {
+    pub stage: &'static str,
+    /// Tier label ("scalar", "avx2", "avx512", "neon").
+    pub isa: &'static str,
+    pub n: usize,
+    pub m: usize,
+    /// Right-hand-side count (TRSM row; 0 elsewhere).
+    pub k: usize,
+    pub median_ms: f64,
+    pub gflops: f64,
+    /// `median(scalar) / median(this tier)` for the same stage.
+    pub speedup_vs_scalar: f64,
+}
+
+/// The PR-4 ISA roofline benchmark: each dense-pipeline stage
+/// **single-threaded** (per-core headroom is the whole point — thread
+/// scaling is PR 3's table) at the forced scalar tier and at the best
+/// dispatched tier. Stages: square DGEMM (the acceptance stage at 512³
+/// in full mode), SYRK, blocked Cholesky, blocked multi-RHS TRSM
+/// (fwd+adj), and the end-to-end one-shot chol solve.
+pub fn simd_bench(quick: bool) -> Vec<SimdBenchRow> {
+    use crate::linalg::gemm;
+    use crate::linalg::{
+        cholesky, solve_lower_multi, solve_lower_transpose_multi, with_isa, KernelIsa,
+    };
+
+    let mut rng = Rng::seed_from(41);
+    let (sq, n, m, rhs) = if quick { (128usize, 96usize, 512usize, 8usize) } else { (512, 512, 4096, 128) };
+    // The "best" tier is the *active* one, not raw CPUID: a forced
+    // DNGD_KERNEL=scalar run (the CI fallback job, or a user avoiding
+    // AVX throttling) must never execute SIMD kernels from the bench.
+    let best = crate::linalg::active_isa();
+    let tiers: Vec<KernelIsa> = if best == KernelIsa::Scalar {
+        vec![KernelIsa::Scalar]
+    } else {
+        vec![KernelIsa::Scalar, best]
+    };
+
+    let a = Mat::randn(sq, sq, &mut rng);
+    let b = Mat::randn(sq, sq, &mut rng);
+    let s = Mat::randn(n, m, &mut rng);
+    let w = gemm::syrk(&Mat::randn(n, n + 8, &mut rng), 1.0);
+    let l = cholesky(&w).unwrap();
+    let bmat = Mat::randn(n, rhs, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+
+    let gemm_fl = 2.0 * (sq as f64).powi(3);
+    let syrk_fl = (n * n) as f64 * m as f64;
+    let chol_fl = (n as f64).powi(3) / 3.0;
+    let trsm_fl = 2.0 * (n * n) as f64 * rhs as f64;
+    let e2e_fl = syrk_fl + chol_fl;
+
+    let mut rows: Vec<SimdBenchRow> = Vec::new();
+    let push = |rows: &mut Vec<SimdBenchRow>,
+                stage: &'static str,
+                isa: KernelIsa,
+                n: usize,
+                m: usize,
+                k: usize,
+                fl: f64,
+                r: crate::metrics::BenchResult| {
+        let median_ms = r.median_ms();
+        let scalar_ms = rows
+            .iter()
+            .find(|row| row.stage == stage && row.isa == KernelIsa::Scalar.as_str())
+            .map(|row| row.median_ms)
+            .unwrap_or(median_ms);
+        rows.push(SimdBenchRow {
+            stage,
+            isa: isa.as_str(),
+            n,
+            m,
+            k,
+            median_ms,
+            gflops: fl / (median_ms / 1e3) / 1e9,
+            speedup_vs_scalar: scalar_ms / median_ms.max(1e-9),
+        });
+    };
+
+    for &isa in &tiers {
+        with_isa(isa, || {
+            let mut c = Mat::zeros(sq, sq);
+            let r = bench("gemm_nn", 3, 0.5, || {
+                gemm::gemm(1.0, &a, &b, 0.0, &mut c);
+                std::hint::black_box(&c);
+            });
+            push(&mut rows, "gemm_nn", isa, sq, sq, 0, gemm_fl, r);
+
+            let r = bench("syrk", 3, 0.5, || {
+                std::hint::black_box(gemm::syrk(&s, 1e-3));
+            });
+            push(&mut rows, "syrk", isa, n, m, 0, syrk_fl, r);
+
+            let r = bench("cholesky", 3, 0.5, || {
+                std::hint::black_box(cholesky(&w).unwrap());
+            });
+            push(&mut rows, "cholesky", isa, n, 0, 0, chol_fl, r);
+
+            let r = bench("trsm", 3, 0.3, || {
+                let y = solve_lower_multi(&l, &bmat);
+                std::hint::black_box(solve_lower_transpose_multi(&l, &y));
+            });
+            push(&mut rows, "trsm", isa, n, 0, rhs, trsm_fl, r);
+
+            let solver = CholSolver::default();
+            let r = bench("e2e", 3, 0.5, || {
+                std::hint::black_box(solver.solve(&s, &v, 1e-3).unwrap());
+            });
+            push(&mut rows, "chol_solver_e2e", isa, n, m, 0, e2e_fl, r);
+        });
+    }
+    rows
+}
+
+/// Render SIMD-bench rows as the `BENCH_PR4.json` payload (hand-rolled
+/// JSON — the build is offline, no serde).
+pub fn simd_bench_json(rows: &[SimdBenchRow], quick: bool) -> String {
+    use crate::linalg::KernelIsa;
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 4,\n");
+    out.push_str("  \"bench\": \"simd\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!("  \"active_isa\": \"{}\",\n", crate::linalg::active_isa()));
+    out.push_str(&format!(
+        "  \"supported\": [{}],\n",
+        KernelIsa::supported_tiers()
+            .iter()
+            .map(|i| format!("\"{i}\""))
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+    out.push_str(
+        "  \"unit\": {\"median_ms\": \"milliseconds\", \"gflops\": \"GFLOP/s\", \
+         \"speedup_vs_scalar\": \"median(scalar) / median(tier)\"},\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"stage\": \"{}\", \"isa\": \"{}\", \"n\": {}, \"m\": {}, \"k\": {}, \
+                 \"median_ms\": {:.3}, \"gflops\": {:.2}, \"speedup_vs_scalar\": {:.2}}}",
+                r.stage, r.isa, r.n, r.m, r.k, r.median_ms, r.gflops, r.speedup_vs_scalar
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the ISA-tier benchmark, print the table (including the active
+/// tier, which `dngd bench --kernels` reports), optionally write
+/// `BENCH_PR4.json`. `strict` enforces the PR-4 acceptance bar — best
+/// dispatched tier ≥ 2× the scalar tier on the single-threaded square
+/// DGEMM — which the full-mode `cargo bench --bench gemm` harness
+/// enables (skipped when this host has no SIMD tier: the contract
+/// compares dispatched tiers, and scalar-only hosts have one tier).
+pub fn simd_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    use crate::linalg::KernelIsa;
+    let active = crate::linalg::active_isa();
+    let supported: Vec<&str> = KernelIsa::supported_tiers().iter().map(|i| i.as_str()).collect();
+    println!(
+        "active ISA tier: {active} (supported: {}; override with DNGD_KERNEL or solver.isa)",
+        supported.join(", ")
+    );
+    let rows = simd_bench(quick);
+    println!(
+        "{:>16} | {:>7} | {:>5} | {:>5} | {:>4} | {:>10} | {:>8} | {:>10}",
+        "stage", "isa", "n", "m", "k", "median", "GFLOP/s", "vs scalar"
+    );
+    for r in &rows {
+        println!(
+            "{:>16} | {:>7} | {:>5} | {:>5} | {:>4} | {:>8.2}ms | {:>8.2} | {:>9.2}×",
+            r.stage, r.isa, r.n, r.m, r.k, r.median_ms, r.gflops, r.speedup_vs_scalar
+        );
+    }
+    if let Some(path) = json_path {
+        std::fs::write(path, simd_bench_json(&rows, quick))?;
+        println!("simd bench table written to {}", path.display());
+    }
+    if strict {
+        let best = active;
+        if best == KernelIsa::Scalar {
+            println!(
+                "acceptance: skipped (scalar is the active tier — no SIMD tier on this host, \
+                 or the process tier is forced to scalar)"
+            );
+        } else {
+            let gemm_best = rows
+                .iter()
+                .find(|r| r.stage == "gemm_nn" && r.isa == best.as_str())
+                .expect("best-tier gemm row");
+            assert!(
+                gemm_best.speedup_vs_scalar >= 2.0,
+                "PR-4 acceptance: {} must be ≥2× the scalar tier on single-threaded square \
+                 DGEMM, got {:.2}×",
+                best,
+                gemm_best.speedup_vs_scalar
+            );
+            println!(
+                "acceptance: gemm_nn {} = {:.2}× scalar (≥ 2× required) ✓",
+                best, gemm_best.speedup_vs_scalar
+            );
+        }
     }
     Ok(())
 }

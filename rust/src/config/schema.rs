@@ -1,6 +1,7 @@
 //! Typed configuration schema with validation and CLI overrides.
 
 use super::toml::{parse_toml, parse_value, TomlDoc};
+use crate::linalg::KernelIsa;
 use crate::solver::{SolverKind, SolverOptions};
 
 /// Solver selection + damping + per-solver options.
@@ -17,6 +18,10 @@ pub struct SolverConfig {
     /// mini-batch NGD, where n ≪ m makes the per-batch Fisher noisy.
     pub adaptive: bool,
     pub threads: usize,
+    /// ISA tier override for the dense kernels (`[solver] isa =
+    /// "scalar"|"avx2"|"avx512"|"neon"|"auto"`, PR 4). `None`/`auto`
+    /// dispatches on the process tier (CPUID / `DNGD_KERNEL`).
+    pub isa: Option<KernelIsa>,
     /// CG relative-residual tolerance (`--set solver.cg_tol=…`).
     pub cg_tol: f64,
     /// CG iteration cap.
@@ -38,6 +43,7 @@ impl Default for SolverConfig {
             lambda_max: 1e3,
             adaptive: false,
             threads: opts.threads,
+            isa: opts.isa,
             cg_tol: opts.cg_tol,
             cg_max_iters: opts.cg_max_iters,
             budget_gb: opts.budget_gb,
@@ -52,6 +58,7 @@ impl SolverConfig {
     pub fn options(&self) -> SolverOptions {
         SolverOptions {
             threads: self.threads.max(1),
+            isa: self.isa,
             cg_tol: self.cg_tol,
             cg_max_iters: self.cg_max_iters,
             budget_gb: self.budget_gb,
@@ -220,6 +227,13 @@ impl Config {
         get_f64(doc, "solver.lambda_max", &mut cfg.solver.lambda_max)?;
         get_bool(doc, "solver.adaptive", &mut cfg.solver.adaptive)?;
         get_usize(doc, "solver.threads", &mut cfg.solver.threads)?;
+        get_str(doc, "solver.isa", |s| {
+            // One parser/validator with the CLI `--set solver.isa` path.
+            let mut opts = SolverOptions::default();
+            opts.apply("isa", s)?;
+            cfg.solver.isa = opts.isa;
+            Ok(())
+        })?;
         get_f64(doc, "solver.cg_tol", &mut cfg.solver.cg_tol)?;
         get_usize(doc, "solver.cg_max_iters", &mut cfg.solver.cg_max_iters)?;
         get_f64(doc, "solver.budget_gb", &mut cfg.solver.budget_gb)?;
@@ -302,6 +316,7 @@ const KNOWN_KEYS: &[&str] = &[
     "solver.lambda_max",
     "solver.adaptive",
     "solver.threads",
+    "solver.isa",
     "solver.cg_tol",
     "solver.cg_max_iters",
     "solver.budget_gb",
@@ -480,6 +495,20 @@ variant = "real_part"
         // rvb is parseable as a config kind (the PR-2 bug fix).
         let cfg = Config::from_toml_str("[solver]\nkind = \"rvb\"\n", &[]).unwrap();
         assert_eq!(cfg.solver.kind, SolverKind::Rvb);
+    }
+
+    #[test]
+    fn solver_isa_parses_and_rejects_unknown_tiers() {
+        // "scalar" is supported on every host; "auto" restores None.
+        let cfg = Config::from_toml_str("[solver]\nisa = \"scalar\"\n", &[]).unwrap();
+        assert_eq!(cfg.solver.isa, Some(KernelIsa::Scalar));
+        assert_eq!(cfg.solver.options().isa, Some(KernelIsa::Scalar));
+        let cfg = Config::from_toml_str("[solver]\nisa = \"auto\"\n", &[]).unwrap();
+        assert_eq!(cfg.solver.isa, None);
+        assert!(Config::from_toml_str("[solver]\nisa = \"sse9\"\n", &[]).is_err());
+        // The --set override path goes through the same parser.
+        let cfg = Config::from_toml_str("", &["solver.isa=scalar".into()]).unwrap();
+        assert_eq!(cfg.solver.isa, Some(KernelIsa::Scalar));
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //!
 //! | module | role |
 //! |--------|------|
-//! | [`linalg`] | dense linear-algebra substrate (GEMM, SYRK, Cholesky, triangular solves, Jacobi eigh/SVD, QR, complex) — built from scratch |
+//! | [`linalg`] | dense linear-algebra substrate (GEMM, SYRK, Cholesky, triangular solves, Jacobi eigh/SVD, QR, complex) — built from scratch, with runtime-dispatched AVX2/AVX-512/NEON micro-kernels and zero-allocation packing arenas |
 //! | [`solver`] | the paper's Algorithm 1 (`chol`) and every baseline it benchmarks against (`eigh`, `svda`, `naive`, `cg`, `rvb`), behind the plan/factor/solve session API (Gram cached across λ-resweeps, blocked multi-RHS), plus complex SR variants |
 //! | [`ngd`]    | natural-gradient optimizer: damping schedules, trust region, momentum, KFAC block-diagonal baseline |
 //! | [`model`]  | native model substrate: MLP / tiny transformer with per-sample score rows |

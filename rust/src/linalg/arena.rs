@@ -1,0 +1,203 @@
+//! Thread-local, 64-byte-aligned packing arenas (PR 4).
+//!
+//! Every `dgemm`/SYRK call used to allocate fresh `ap`/`bp` packing
+//! panels, and the blocked Cholesky / multi-RHS TRSM allocated panel
+//! copies and gather buffers per call — microseconds of allocator
+//! traffic on every hot-path invocation, paid again inside every pool
+//! job. This module replaces all of them with per-thread arena slots:
+//!
+//! * each slot holds one [`ArenaBuf`] — a raw 64-byte-aligned `f64`
+//!   allocation (cache-line / AVX-512-register aligned) that grows
+//!   **monotonically** and is reused forever after;
+//! * a kernel *checks a slot out* (`take`), sizes it with
+//!   [`ArenaBuf::ensure`], and returns it (`put`) when done — the
+//!   checkout pattern keeps nested kernels (a TRSM gather whose core
+//!   calls `dgemm`, which needs the pack slots) from aliasing a buffer;
+//! * growth is counted in a thread-local counter surfaced as
+//!   [`kernel::counters::arena_allocs`](super::kernel::counters::arena_allocs),
+//!   which pins the steady-state promise: once warmed, a redamp+solve
+//!   iteration performs **zero** pack-buffer allocations
+//!   (`rust/tests/session_api.rs` s8).
+//!
+//! Slots are thread-local, so pool workers each warm their own arenas;
+//! [`KernelPool::submit`](super::kernel::KernelPool::submit) deals jobs
+//! round-robin from worker 0 on every batch, so a repeated workload
+//! lands each job on the same (already-warm) worker. A panic while a
+//! slot is checked out drops the buffer (its slot re-warms on next
+//! use); nothing leaks and no pointer outlives its allocation.
+//!
+//! Retained footprint per thread is bounded by the largest shapes seen:
+//! the B-pack slot tops out at KC×NC f64 = 8 MiB, the others well
+//! below it.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::cell::Cell;
+
+/// Alignment of every arena allocation: one cache line, which is also
+/// the AVX-512 register width — packed panels never split a vector
+/// load across lines.
+pub const ARENA_ALIGN: usize = 64;
+
+thread_local! {
+    static ARENA_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Arena (re)allocations performed by the calling thread since start —
+/// the growth events of [`ArenaBuf::ensure`]. Steady-state kernels stop
+/// incrementing this once their shapes have been seen.
+pub fn allocs() -> u64 {
+    ARENA_ALLOCS.with(|c| c.get())
+}
+
+/// A 64-byte-aligned, monotonically-grown `f64` buffer. Contents are
+/// zeroed on (re)allocation and *stale* on reuse — callers either
+/// overwrite the whole slice or zero-fill (the packing routines do the
+/// latter, which they needed for edge-tile padding anyway).
+pub struct ArenaBuf {
+    ptr: *mut f64,
+    cap: usize,
+}
+
+// SAFETY: ArenaBuf owns its allocation exclusively; moving it between
+// threads moves ownership of raw memory, which has no thread affinity.
+unsafe impl Send for ArenaBuf {}
+
+impl Default for ArenaBuf {
+    fn default() -> Self {
+        ArenaBuf { ptr: std::ptr::null_mut(), cap: 0 }
+    }
+}
+
+impl ArenaBuf {
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<f64>(), ARENA_ALIGN)
+            .expect("arena layout")
+    }
+
+    /// Current capacity in f64 elements.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// A `len`-element view, growing the allocation if needed (to at
+    /// least double the old capacity, so repeated mild growth is
+    /// amortized). Never shrinks. Growth zero-initializes and bumps the
+    /// thread's arena-allocation counter.
+    pub fn ensure(&mut self, len: usize) -> &mut [f64] {
+        if len == 0 {
+            return &mut [];
+        }
+        if self.cap < len {
+            let new_cap = len.max(self.cap * 2).next_multiple_of(ARENA_ALIGN / 8);
+            // SAFETY: layout is non-zero-sized here (len ≥ 1); the old
+            // pointer (if any) was allocated with Self::layout(old cap).
+            unsafe {
+                let new_ptr = alloc_zeroed(Self::layout(new_cap)) as *mut f64;
+                if new_ptr.is_null() {
+                    handle_alloc_error(Self::layout(new_cap));
+                }
+                if !self.ptr.is_null() {
+                    dealloc(self.ptr as *mut u8, Self::layout(self.cap));
+                }
+                self.ptr = new_ptr;
+                self.cap = new_cap;
+            }
+            ARENA_ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        // SAFETY: ptr is a live allocation of cap ≥ len f64s, zeroed at
+        // allocation time (so never uninitialized), exclusively owned.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, len) }
+    }
+}
+
+impl Drop for ArenaBuf {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            // SAFETY: allocated with exactly this layout.
+            unsafe { dealloc(self.ptr as *mut u8, Self::layout(self.cap)) }
+        }
+    }
+}
+
+/// The per-thread arena slots. Co-checkouts that must never share a
+/// slot: `PackA` + `PackB` inside one `dgemm`/SYRK; `Strip` (the
+/// Cholesky panel copy) across a trailing downdate whose lookahead
+/// solves use `Gather`; `Gather` inside a pool job whose core calls
+/// `dgemm` (which uses the pack slots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Slot {
+    /// MR-tall A micro-panels (≤ MC×KC f64).
+    PackA,
+    /// NR-wide B micro-panels (≤ KC×NC f64).
+    PackB,
+    /// Gather/compute copies: TRSM RHS panels, Cholesky strip copies,
+    /// the panel-solve transposed RHS.
+    Gather,
+    /// The Cholesky solved-panel copy that trailing-downdate jobs read.
+    Strip,
+}
+
+thread_local! {
+    static SLOTS: [Cell<ArenaBuf>; 4] = Default::default();
+}
+
+/// Check a slot's buffer out of the thread-local arena. While checked
+/// out, a re-take of the same slot sees an empty buffer and would
+/// allocate — keep each slot to one live checkout (see [`Slot`]).
+pub(crate) fn take(slot: Slot) -> ArenaBuf {
+    SLOTS.with(|s| s[slot as usize].take())
+}
+
+/// Return a checked-out buffer so the next kernel on this thread reuses
+/// its allocation.
+pub(crate) fn put(slot: Slot, buf: ArenaBuf) {
+    SLOTS.with(|s| s[slot as usize].set(buf));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_grows_monotonically_and_counts() {
+        let mut buf = ArenaBuf::default();
+        let a0 = allocs();
+        assert_eq!(buf.ensure(0).len(), 0);
+        assert_eq!(allocs() - a0, 0, "zero-length view must not allocate");
+        {
+            let s = buf.ensure(100);
+            assert_eq!(s.len(), 100);
+            assert!(s.iter().all(|&x| x == 0.0), "fresh memory is zeroed");
+            s[99] = 7.0;
+        }
+        assert_eq!(allocs() - a0, 1);
+        let cap = buf.capacity();
+        assert!(cap >= 100 && cap % (ARENA_ALIGN / 8) == 0);
+        assert_eq!(buf.ptr as usize % ARENA_ALIGN, 0, "64-byte aligned");
+        // Shrinking and equal-size views reuse the allocation…
+        buf.ensure(40);
+        buf.ensure(100);
+        assert_eq!(allocs() - a0, 1);
+        assert_eq!(buf.capacity(), cap);
+        // …and stale contents survive (callers overwrite or zero-fill).
+        assert_eq!(buf.ensure(100)[99], 7.0);
+        // Growth reallocates once, at least doubling.
+        buf.ensure(cap + 1);
+        assert_eq!(allocs() - a0, 2);
+        assert!(buf.capacity() >= 2 * cap);
+    }
+
+    #[test]
+    fn slots_check_out_and_back_in() {
+        let mut buf = take(Slot::Gather);
+        buf.ensure(64);
+        let cap = buf.capacity();
+        put(Slot::Gather, buf);
+        let a0 = allocs();
+        let mut again = take(Slot::Gather);
+        assert_eq!(again.capacity(), cap, "returned buffer is reused");
+        again.ensure(64);
+        assert_eq!(allocs() - a0, 0, "warm slot must not allocate");
+        put(Slot::Gather, again);
+    }
+}

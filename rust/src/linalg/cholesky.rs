@@ -23,11 +23,21 @@
 //! over the panel rows even at `threads: 1` instead of the pre-PR-3
 //! per-element scalar dots. Every strip/slab decomposition keeps the
 //! rank-NB reduction unsplit and panels are applied in pivot order, so
-//! the factor is **bit-identical for every thread count** (see the
-//! determinism notes in [`kernel`](super::kernel)).
+//! the factor is **bit-identical for every thread count** within a
+//! fixed ISA tier (see the determinism notes in
+//! [`kernel`](super::kernel)).
+//!
+//! Since PR 4 every FLOP here is ISA-dispatched (the trailing downdate
+//! and panel TRSM through the tiered packed engine, the unblocked
+//! diagonal factor through the tiered `dot`), strip jobs re-establish
+//! the caller's tier, and the panel copy / gather buffers live in the
+//! thread-local [`arena`](super::arena) — a λ-resweep refactor in
+//! steady state performs zero pack-buffer allocations.
 
+use super::arena::{self, Slot};
 use super::kernel::{self, SendConst, SendMut, Trans};
-use super::mat::{dot, Mat};
+use super::mat::Mat;
+use super::simd::{self, dot_isa};
 use super::trisolve::fwd_multi_core;
 
 /// Panel width. A multiple of the micro-kernel tile (MR=4, NR=8) so the
@@ -92,6 +102,7 @@ pub fn cholesky_in_place(w: &mut Mat) -> Result<(), CholeskyError> {
 ///    finished in step 2 — disjoint from every in-flight strip);
 /// 5. wait for the strips, advance.
 pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), CholeskyError> {
+    kernel::counters::record_cholesky();
     let (n, n2) = w.shape();
     assert_eq!(n, n2, "cholesky needs a square matrix");
     let threads = threads.max(1);
@@ -106,12 +117,15 @@ pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), Cho
         let k2 = (k1 + NB).min(n);
         let nb = k1 - k0;
         let rows = n - k1;
-        // 1. Copy the panel: the downdate reads it while step 4 below
-        //    overwrites neighbouring columns of the same rows.
-        let mut panel = vec![0.0; rows * nb];
+        // 1. Copy the panel (arena `Strip` slot — reused every panel and
+        //    across factorizations): the downdate reads it while step 4
+        //    below overwrites neighbouring columns of the same rows.
+        let mut panelbuf = arena::take(Slot::Strip);
+        let panel = panelbuf.ensure(rows * nb);
         for i in k1..n {
             panel[(i - k1) * nb..(i - k1 + 1) * nb].copy_from_slice(&w.row(i)[k0..k1]);
         }
+        let panel: &[f64] = panel;
         // 2. Downdate the next panel's column slab (all trailing rows):
         //    W[k1.., k1..k2) -= P · P[..k2-k1, :]ᵀ. Covers the slab's
         //    upper wedge too — never read, zeroed at the end — which
@@ -121,7 +135,7 @@ pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), Cho
             k2 - k1,
             nb,
             -1.0,
-            &panel,
+            panel,
             nb,
             Trans::N,
             &panel[..(k2 - k1) * nb],
@@ -155,6 +169,7 @@ pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), Cho
             let wptr = SendMut(wp);
             let pptr = SendConst(panel.as_ptr());
             let plen = panel.len();
+            let isa = simd::active_isa();
             let jobs_n = threads.min(strips.len());
             let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(jobs_n);
             for t in 0..jobs_n {
@@ -165,42 +180,55 @@ pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), Cho
                     .map(|(_, &s)| s)
                     .collect();
                 jobs.push(Box::new(move || {
-                    // Each strip is gathered into an owned contiguous
-                    // buffer, downdated there, and scattered back, so
-                    // every reference this job creates is restricted
-                    // per row to columns [k2, i1) — byte-disjoint from
-                    // the other strips (different rows) AND from the
-                    // caller's concurrent lookahead (columns < k2).
-                    // A single wide W[i0.., k2..] slice would wrap
-                    // around row ends and alias the lookahead's panel
-                    // columns, which is UB even with disjoint writes.
-                    // The gather/scatter is O(rows·cols) against the
-                    // downdate's O(rows·cols·NB) — noise. Identical
-                    // per-element arithmetic (dgemm sums are invariant
-                    // to the output leading dimension), so this stays
-                    // bit-identical to the serial in-place strips.
+                    // Each strip is gathered into a contiguous buffer
+                    // (the worker's arena `Gather` slot — the downdate's
+                    // dgemm uses the distinct pack slots), downdated
+                    // there, and scattered back, so every reference this
+                    // job creates is restricted per row to columns
+                    // [k2, i1) — byte-disjoint from the other strips
+                    // (different rows) AND from the caller's concurrent
+                    // lookahead (columns < k2). A single wide
+                    // W[i0.., k2..] slice would wrap around row ends and
+                    // alias the lookahead's panel columns, which is UB
+                    // even with disjoint writes. The gather/scatter is
+                    // O(rows·cols) against the downdate's
+                    // O(rows·cols·NB) — noise. Identical per-element
+                    // arithmetic (dgemm sums are invariant to the output
+                    // leading dimension) on the caller's captured ISA
+                    // tier, so this stays bit-identical to the serial
+                    // in-place strips.
                     // SAFETY: per-row ranges as argued above; the panel
                     // copy is only read; the guard blocks before
                     // `panel`/`w` go out of scope.
-                    let p = unsafe { std::slice::from_raw_parts(pptr.0, plen) };
-                    for (i0, i1) in mine {
-                        let cols = i1 - k2;
-                        let rows_s = i1 - i0;
-                        let mut local = vec![0.0; rows_s * cols];
-                        for r in 0..rows_s {
-                            let src = unsafe {
-                                std::slice::from_raw_parts(wptr.0.add((i0 + r) * n + k2), cols)
-                            };
-                            local[r * cols..(r + 1) * cols].copy_from_slice(src);
+                    kernel::with_isa(isa, || {
+                        let p = unsafe { std::slice::from_raw_parts(pptr.0, plen) };
+                        let max_len =
+                            mine.iter().map(|&(i0, i1)| (i1 - i0) * (i1 - k2)).max().unwrap_or(0);
+                        let mut localbuf = arena::take(Slot::Gather);
+                        let scratch = localbuf.ensure(max_len);
+                        for &(i0, i1) in &mine {
+                            let cols = i1 - k2;
+                            let rows_s = i1 - i0;
+                            let local = &mut scratch[..rows_s * cols];
+                            for r in 0..rows_s {
+                                let src = unsafe {
+                                    std::slice::from_raw_parts(wptr.0.add((i0 + r) * n + k2), cols)
+                                };
+                                local[r * cols..(r + 1) * cols].copy_from_slice(src);
+                            }
+                            downdate_strip(p, nb, k1, k2, i0, i1, local, cols);
+                            for r in 0..rows_s {
+                                let dst = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        wptr.0.add((i0 + r) * n + k2),
+                                        cols,
+                                    )
+                                };
+                                dst.copy_from_slice(&local[r * cols..(r + 1) * cols]);
+                            }
                         }
-                        downdate_strip(p, nb, k1, k2, i0, i1, &mut local, cols);
-                        for r in 0..rows_s {
-                            let dst = unsafe {
-                                std::slice::from_raw_parts_mut(wptr.0.add((i0 + r) * n + k2), cols)
-                            };
-                            dst.copy_from_slice(&local[r * cols..(r + 1) * cols]);
-                        }
-                    }
+                        arena::put(Slot::Gather, localbuf);
+                    });
                 }));
             }
             let guard = kernel::global_pool().submit(jobs);
@@ -220,7 +248,7 @@ pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), Cho
             {
                 let wdata = w.as_mut_slice();
                 for &(i0, i1) in &strips {
-                    downdate_strip(&panel, nb, k1, k2, i0, i1, &mut wdata[i0 * n + k2..], n);
+                    downdate_strip(panel, nb, k1, k2, i0, i1, &mut wdata[i0 * n + k2..], n);
                 }
             }
             diag = factor_diagonal_block(w, k1, k2);
@@ -228,6 +256,9 @@ pub fn cholesky_in_place_threaded(w: &mut Mat, threads: usize) -> Result<(), Cho
                 panel_solve(w, k1, k2);
             }
         }
+        // Return the panel buffer before any early error exit so the
+        // next factorization (a λ backoff retry) finds a warm slot.
+        arena::put(Slot::Strip, panelbuf);
         diag?;
         k0 = k1;
         k1 = k2;
@@ -296,8 +327,12 @@ unsafe fn panel_solve_raw(wp: *mut f64, n: usize, k0: usize, k1: usize) {
     }
     let nb = k1 - k0;
     let rows = n - k1;
-    // Gather Bᵀ: bt[j][i] = W[k1+i][k0+j]  (nb × rows, row-major).
-    let mut bt = vec![0.0; nb * rows];
+    // Gather Bᵀ: bt[j][i] = W[k1+i][k0+j]  (nb × rows, row-major) into
+    // the caller thread's arena `Gather` slot (distinct from the
+    // `Strip` panel copy held across this call, and from the pack slots
+    // the TRSM core's dgemm uses).
+    let mut btbuf = arena::take(Slot::Gather);
+    let bt = btbuf.ensure(nb * rows);
     for i in 0..rows {
         let wrow = std::slice::from_raw_parts(wp.add((k1 + i) * n + k0), nb);
         for (j, &v) in wrow.iter().enumerate() {
@@ -307,7 +342,7 @@ unsafe fn panel_solve_raw(wp: *mut f64, n: usize, k0: usize, k1: usize) {
     // The diagonal block as an ldl = n view covering only rows k0..k1
     // (those rows are never touched by trailing-downdate jobs).
     let ld = std::slice::from_raw_parts(wp.add(k0 * n + k0), (nb - 1) * n + nb);
-    fwd_multi_core(ld, n, nb, &mut bt, rows);
+    fwd_multi_core(ld, n, nb, bt, rows);
     // Scatter Xᵀ back into the panel.
     for i in 0..rows {
         let wrow = std::slice::from_raw_parts_mut(wp.add((k1 + i) * n + k0), nb);
@@ -315,6 +350,7 @@ unsafe fn panel_solve_raw(wp: *mut f64, n: usize, k0: usize, k1: usize) {
             *v = bt[j * rows + i];
         }
     }
+    arena::put(Slot::Gather, btbuf);
 }
 
 fn factor_diagonal_block(w: &mut Mat, k0: usize, k1: usize) -> Result<(), CholeskyError> {
@@ -338,10 +374,14 @@ unsafe fn factor_diagonal_block_raw(
     k0: usize,
     k1: usize,
 ) -> Result<(), CholeskyError> {
+    // One tier for the whole block: the row dots below run on the
+    // ISA-dispatched kernel captured here (identical on the caller's
+    // lookahead path and the serial path — same thread, same tier).
+    let isa = simd::active_isa();
     for j in k0..k1 {
         let d = {
             let rj = std::slice::from_raw_parts(wp.add(j * n + k0), j - k0);
-            *wp.add(j * n + j) - dot(rj, rj)
+            *wp.add(j * n + j) - dot_isa(isa, rj, rj)
         };
         if d <= 0.0 || !d.is_finite() {
             return Err(CholeskyError { pivot: j, value: d });
@@ -352,7 +392,7 @@ unsafe fn factor_diagonal_block_raw(
             let s = {
                 let ri = std::slice::from_raw_parts(wp.add(i * n + k0), j - k0);
                 let rj = std::slice::from_raw_parts(wp.add(j * n + k0), j - k0);
-                *wp.add(i * n + j) - dot(ri, rj)
+                *wp.add(i * n + j) - dot_isa(isa, ri, rj)
             };
             *wp.add(i * n + j) = s / djj;
         }

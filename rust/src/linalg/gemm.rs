@@ -25,14 +25,22 @@
 //! eigh `V = SᵀUΣ⁻¹` tall GEMM), so `solver.threads` reaches every
 //! stage of Algorithm 1, not just the Gram.
 //!
+//! Since PR 4 every front-end dispatches on the process's [`KernelIsa`]
+//! tier (explicit AVX2/AVX-512/NEON micro-kernels, scalar fallback —
+//! see [`kernel`] and [`simd`](super::simd)): within a fixed tier the
+//! threaded products stay bit-identical to serial at every thread count
+//! (the parallel dispatchers re-establish the caller's tier inside
+//! their pool jobs); across tiers results are only tolerance-equal,
+//! with [`reference`] as the oracle.
+//!
 //! The seed's scalar dot/axpy kernels live on in [`reference`] as test
 //! oracles and as the before/after baseline for the kernel benchmarks
-//! (`benches/gemm.rs` → `BENCH_PR1.json`).
+//! (`benches/gemm.rs` → `BENCH_PR1.json`, `BENCH_PR4.json`).
 
 use super::kernel::{self, Trans};
 use super::mat::Mat;
 
-pub use super::kernel::{KernelConfig, KC, MC, MR, NR};
+pub use super::kernel::{KernelConfig, KernelIsa, KC, MC, MR, NR};
 
 /// `C = alpha * A * B + beta * C`, shapes `(p×q)·(q×r) → p×r`.
 pub fn gemm(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
@@ -256,6 +264,9 @@ pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
     let threads = threads.min(panels.len()).max(1);
     let mut w = Mat::zeros(n, n);
     {
+        // Captured once: every job re-establishes the caller's tier so
+        // a scoped with_isa override stays bit-identical to serial.
+        let isa = kernel::active_isa();
         let aptr = SendConst(a.as_slice().as_ptr());
         let wptr = SendMut(w.as_mut_slice().as_mut_ptr());
         let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(threads);
@@ -273,12 +284,15 @@ pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
                 // SAFETY: A is only read; each job's W rows are disjoint
                 // from every other job's; run() below blocks until all
                 // jobs complete, so the caller's borrows stay live.
-                let adata = unsafe { std::slice::from_raw_parts(aptr.0, n * m) };
-                for (i0, i1) in mine {
-                    let wrows =
-                        unsafe { std::slice::from_raw_parts_mut(wptr.0.add(i0 * n), (i1 - i0) * n) };
-                    kernel::syrk_panel(adata, n, m, i0, i1, wrows);
-                }
+                kernel::with_isa(isa, || {
+                    let adata = unsafe { std::slice::from_raw_parts(aptr.0, n * m) };
+                    for &(i0, i1) in &mine {
+                        let wrows = unsafe {
+                            std::slice::from_raw_parts_mut(wptr.0.add(i0 * n), (i1 - i0) * n)
+                        };
+                        kernel::syrk_panel(adata, n, m, i0, i1, wrows);
+                    }
+                });
             }));
         }
         kernel::global_pool().run(jobs);
@@ -291,7 +305,17 @@ pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
 /// and as the pre-PR1 baseline for the kernel benchmarks. Do not use on
 /// hot paths.
 pub mod reference {
-    use crate::linalg::mat::{dot, Mat};
+    use crate::linalg::mat::Mat;
+    use crate::linalg::simd::{dot_isa, KernelIsa};
+
+    /// The seed's 16-way-unrolled scalar dot, pinned to the scalar tier
+    /// so the reference stays tier-independent (PR 4: `mat::dot` now
+    /// dispatches on the active ISA tier — an oracle that varied with
+    /// the ambient tier would no longer be the seed arithmetic, and the
+    /// PR-1 baseline bench rows would silently vectorize).
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        dot_isa(KernelIsa::Scalar, a, b)
+    }
 
     /// Scalar KC-tiled SYRK (the seed implementation of Algorithm 1
     /// line 1): per-element row dots, LLVM-autovectorized only.

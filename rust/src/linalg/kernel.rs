@@ -14,14 +14,23 @@
 //!       for each (MR × NR) tile: micro-kernel over kc
 //! ```
 //!
-//! The micro-kernel keeps an MR×NR = 4×8 accumulator block in registers
-//! and streams `ap`/`bp` linearly: per k-step it issues 4 broadcasts ×
-//! one 8-lane row FMA each, which LLVM lowers to packed AVX2/AVX-512 FMA
-//! (the inner arrays are constant-sized, so the loops fully unroll).
-//! Packing absorbs transposition, so one driver ([`dgemm`]) serves
-//! `A·B`, `A·Bᵀ` and `Aᵀ·B`, and edge tiles are handled by zero-padding
-//! the packed panels — the micro-kernel itself has no tail cases, the
-//! write-back just clips to the valid `mr_eff × nr_eff` region.
+//! Since PR 4 the micro-kernel is **runtime-dispatched** on a
+//! [`KernelIsa`] tier selected once per process (CPUID detection or the
+//! `DNGD_KERNEL=scalar|avx2|avx512|neon` override — see
+//! [`simd`](super::simd)): explicit `std::arch` AVX2+FMA (4×8 tile),
+//! AVX-512F (8×8 tile over paired row panels) and NEON (4×8) kernels,
+//! with the seed scalar kernel as the guaranteed fallback. Packing
+//! absorbs transposition, so one driver ([`dgemm`]) serves `A·B`,
+//! `A·Bᵀ` and `Aᵀ·B`, and edge tiles are handled by zero-padding the
+//! packed panels — the micro-kernels have no tail cases, the write-back
+//! just clips to the valid `mr_eff × nr_eff` region.
+//!
+//! Also since PR 4, the packing panels live in thread-local, 64-byte
+//! aligned **arenas** ([`arena`](super::arena)) instead of per-call
+//! `Vec`s: grown monotonically and reused across calls and pool jobs,
+//! so steady-state training iterations perform zero pack-buffer
+//! allocation ([`counters::arena_allocs`] pins this in
+//! `rust/tests/session_api.rs`).
 //!
 //! [`syrk_panel`] is the lower-triangle-aware variant used by the Gram
 //! stage `W = SSᵀ` (Algorithm 1 line 1): it skips micro-tiles strictly
@@ -35,14 +44,21 @@
 //! persistent pool, and the blocked Cholesky / multi-RHS TRSM drivers
 //! (in [`cholesky`](super::cholesky) / [`trisolve`](super::trisolve))
 //! partition their trailing updates and RHS column panels the same way.
-//! Every scheme is **bit-identical to serial for every thread count**
-//! because of one invariant of the packed driver: each C element
-//! accumulates `alpha · Σ_p a[i][p]·b[p][j]` with `p` swept in strictly
-//! increasing order inside each KC block and KC blocks applied in
-//! increasing order — the partitioning of C into tiles/bands/panels
-//! changes which packed buffer a value lands in, never the per-element
-//! summation order. Only the reduction (k) dimension must not be split
-//! differently, and no threaded path in this crate splits k.
+//! Every scheme is **bit-identical to serial for every thread count
+//! *within a fixed ISA tier*** because of one invariant of the packed
+//! driver: each C element accumulates `alpha · Σ_p a[i][p]·b[p][j]`
+//! with `p` swept in strictly increasing order inside each KC block and
+//! KC blocks applied in increasing order — the partitioning of C into
+//! tiles/bands/panels changes which packed buffer a value lands in,
+//! never the per-element summation order, and the lane-blocked order
+//! inside a micro-kernel is a pure function of the tier (PR 4), never
+//! of the partitioning. Only the reduction (k) dimension must not be
+//! split differently, and no threaded path in this crate splits k.
+//! Every threaded dispatcher captures the caller's [`active_isa`] and
+//! re-establishes it inside its pool jobs, so a scoped
+//! [`with_isa`] override keeps caller and workers on one tier.
+//! *Across* tiers results are only tolerance-equal (FMA vs the scalar
+//! tier's two-rounding arithmetic); `gemm::reference` stays the oracle.
 //!
 //! [`KernelPool`] is the persistent worker pool behind the threaded
 //! kernels: spawned once per process (lazily), fed closures over
@@ -55,8 +71,12 @@
 //! kernels — a job that re-entered the pool could deadlock behind its
 //! own worker.
 
+use super::arena::{self, Slot};
+use super::simd::{microkernel_4x8, microkernel_8x8};
 use std::sync::mpsc::{channel, sync_channel, SyncSender};
 use std::sync::{Mutex, OnceLock};
+
+pub use super::simd::{active_isa, process_default_isa, with_isa, with_isa_opt, KernelIsa};
 
 /// Thread-local kernel-invocation counters.
 ///
@@ -74,6 +94,8 @@ pub mod counters {
     thread_local! {
         static DGEMM: Cell<u64> = Cell::new(0);
         static SYRK: Cell<u64> = Cell::new(0);
+        static CHOLESKY: Cell<u64> = Cell::new(0);
+        static TRSM: Cell<u64> = Cell::new(0);
     }
 
     pub(crate) fn record_dgemm() {
@@ -82,6 +104,14 @@ pub mod counters {
 
     pub(crate) fn record_syrk() {
         SYRK.with(|c| c.set(c.get() + 1));
+    }
+
+    pub(crate) fn record_cholesky() {
+        CHOLESKY.with(|c| c.set(c.get() + 1));
+    }
+
+    pub(crate) fn record_trsm() {
+        TRSM.with(|c| c.set(c.get() + 1));
     }
 
     /// [`dgemm`](super::dgemm) invocations on this thread since start.
@@ -95,6 +125,30 @@ pub mod counters {
     /// thread since start.
     pub fn syrk_calls() -> u64 {
         SYRK.with(|c| c.get())
+    }
+
+    /// Blocked-Cholesky front-end invocations
+    /// ([`cholesky_in_place_threaded`](crate::linalg::cholesky::cholesky_in_place_threaded)
+    /// and its wrappers) on this thread since start.
+    pub fn cholesky_calls() -> u64 {
+        CHOLESKY.with(|c| c.get())
+    }
+
+    /// Blocked multi-RHS TRSM front-end invocations
+    /// ([`solve_lower_multi`](crate::linalg::trisolve::solve_lower_multi),
+    /// [`solve_lower_transpose_multi`](crate::linalg::trisolve::solve_lower_transpose_multi)
+    /// and their threaded variants) on this thread since start.
+    pub fn trsm_calls() -> u64 {
+        TRSM.with(|c| c.get())
+    }
+
+    /// Packing-arena (re)allocations on this thread since start —
+    /// growth events of the thread-local
+    /// [`arena`](crate::linalg::arena) buffers. In steady state
+    /// (repeated solves at the same shapes) this must not advance; the
+    /// session zero-allocation test pins it.
+    pub fn arena_allocs() -> u64 {
+        crate::linalg::arena::allocs()
     }
 }
 
@@ -133,22 +187,52 @@ pub struct KernelConfig {
     /// Worker threads for the threaded dense pipeline — GEMM, SYRK, the
     /// blocked Cholesky and the multi-RHS TRSM all partition their work
     /// across this many pool jobs. 1 = serial. Every threaded kernel is
-    /// bit-identical to its serial result at every thread count (see the
-    /// module docs), so this is purely a throughput knob.
+    /// bit-identical to its serial result at every thread count within
+    /// a fixed ISA tier (see the module docs), so this is purely a
+    /// throughput knob.
     pub threads: usize,
+    /// ISA tier override for the dense kernels (`solver.isa` in
+    /// configs). `None` (the default) dispatches on the process tier —
+    /// CPUID detection or `DNGD_KERNEL`; `Some(tier)` scopes the
+    /// consumer's kernel calls to that tier via [`with_isa`]. Changing
+    /// the tier changes low-order result bits (FMA vs scalar
+    /// arithmetic), so runs only replay exactly at the same tier.
+    pub isa: Option<KernelIsa>,
 }
 
 impl KernelConfig {
-    /// Single-threaded config — the deterministic default.
+    /// Single-threaded config on the process ISA tier — the
+    /// deterministic default.
     pub const fn serial() -> KernelConfig {
-        KernelConfig { threads: 1 }
+        KernelConfig { threads: 1, isa: None }
     }
 
     pub fn with_threads(threads: usize) -> KernelConfig {
-        KernelConfig { threads: threads.max(1) }
+        KernelConfig { threads: threads.max(1), isa: None }
     }
 
-    /// `DNGD_THREADS` env override, else every available core.
+    /// Builder: pin the ISA tier (`None` = process default).
+    pub fn with_isa(mut self, isa: Option<KernelIsa>) -> KernelConfig {
+        self.isa = isa;
+        self
+    }
+
+    /// The tier this config's kernels dispatch on when run through
+    /// [`KernelConfig::run`] (the override, else the ambient tier).
+    pub fn resolved_isa(&self) -> KernelIsa {
+        self.isa.unwrap_or_else(active_isa)
+    }
+
+    /// Run `f` with this config's ISA override established on the
+    /// calling thread (no-op when `isa` is `None`). The threaded
+    /// kernels propagate the tier into their pool jobs themselves.
+    pub fn run<R>(&self, f: impl FnOnce() -> R) -> R {
+        with_isa_opt(self.isa, f)
+    }
+
+    /// `DNGD_THREADS` env override, else every available core. (The ISA
+    /// tier has its own env knob, `DNGD_KERNEL`, which sets the process
+    /// default rather than this per-config override.)
     pub fn from_env() -> KernelConfig {
         let threads = std::env::var("DNGD_THREADS")
             .ok()
@@ -170,13 +254,28 @@ impl Default for KernelConfig {
 // Packing
 // ---------------------------------------------------------------------------
 
+/// Packed length of an A block: `mb` rows in MR-tall panels over a `kc`
+/// reduction block. The [`arena`] buffer for a pack destination is
+/// sized with this before packing.
+#[inline]
+fn packed_a_len(mb: usize, kc: usize) -> usize {
+    mb.div_ceil(MR) * kc * MR
+}
+
+/// Packed length of a B block: `nb` columns in NR-wide panels.
+#[inline]
+fn packed_b_len(nb: usize, kc: usize) -> usize {
+    nb.div_ceil(NR) * kc * NR
+}
+
 /// Pack an `mb × kc` block of a row-major buffer (element `(i, p)` at
-/// `src[i * lda + p]`) into MR-tall, k-major micro-panels. Tail rows are
-/// zero-padded so the micro-kernel never branches.
-fn pack_a_n(dst: &mut Vec<f64>, src: &[f64], lda: usize, mb: usize, kc: usize) {
+/// `src[i * lda + p]`) into MR-tall, k-major micro-panels. `dst` must be
+/// [`packed_a_len`]-sized (an arena view); it is zero-filled first so
+/// tail rows are zero-padded and the micro-kernel never branches.
+fn pack_a_n(dst: &mut [f64], src: &[f64], lda: usize, mb: usize, kc: usize) {
     let panels = mb.div_ceil(MR);
-    dst.clear();
-    dst.resize(panels * kc * MR, 0.0);
+    debug_assert_eq!(dst.len(), panels * kc * MR);
+    dst.fill(0.0);
     for ip in 0..panels {
         let i0 = ip * MR;
         let rows = MR.min(mb - i0);
@@ -193,10 +292,10 @@ fn pack_a_n(dst: &mut Vec<f64>, src: &[f64], lda: usize, mb: usize, kc: usize) {
 /// Same as [`pack_a_n`] but the buffer holds the transpose: logical
 /// element `(i, p)` lives at `src[p * lda + i]`. The packed layout is
 /// identical, so the micro-kernel is oblivious to the source layout.
-fn pack_a_t(dst: &mut Vec<f64>, src: &[f64], lda: usize, mb: usize, kc: usize) {
+fn pack_a_t(dst: &mut [f64], src: &[f64], lda: usize, mb: usize, kc: usize) {
     let panels = mb.div_ceil(MR);
-    dst.clear();
-    dst.resize(panels * kc * MR, 0.0);
+    debug_assert_eq!(dst.len(), panels * kc * MR);
+    dst.fill(0.0);
     for ip in 0..panels {
         let i0 = ip * MR;
         let rows = MR.min(mb - i0);
@@ -212,10 +311,11 @@ fn pack_a_t(dst: &mut Vec<f64>, src: &[f64], lda: usize, mb: usize, kc: usize) {
 
 /// Pack a `kc × nb` block of B (element `(p, j)` at `src[p * ldb + j]`)
 /// into NR-wide, k-major micro-panels with zero-padded tail columns.
-fn pack_b_n(dst: &mut Vec<f64>, src: &[f64], ldb: usize, kc: usize, nb: usize) {
+/// `dst` must be [`packed_b_len`]-sized.
+fn pack_b_n(dst: &mut [f64], src: &[f64], ldb: usize, kc: usize, nb: usize) {
     let panels = nb.div_ceil(NR);
-    dst.clear();
-    dst.resize(panels * kc * NR, 0.0);
+    debug_assert_eq!(dst.len(), panels * kc * NR);
+    dst.fill(0.0);
     for jp in 0..panels {
         let j0 = jp * NR;
         let cols = NR.min(nb - j0);
@@ -231,10 +331,10 @@ fn pack_b_n(dst: &mut Vec<f64>, src: &[f64], ldb: usize, kc: usize, nb: usize) {
 
 /// Same as [`pack_b_n`] but the buffer holds the transpose: logical
 /// element `(p, j)` lives at `src[j * ldb + p]`.
-fn pack_b_t(dst: &mut Vec<f64>, src: &[f64], ldb: usize, kc: usize, nb: usize) {
+fn pack_b_t(dst: &mut [f64], src: &[f64], ldb: usize, kc: usize, nb: usize) {
     let panels = nb.div_ceil(NR);
-    dst.clear();
-    dst.resize(panels * kc * NR, 0.0);
+    debug_assert_eq!(dst.len(), panels * kc * NR);
+    dst.fill(0.0);
     for jp in 0..panels {
         let j0 = jp * NR;
         let cols = NR.min(nb - j0);
@@ -249,35 +349,46 @@ fn pack_b_t(dst: &mut Vec<f64>, src: &[f64], ldb: usize, kc: usize, nb: usize) {
 }
 
 // ---------------------------------------------------------------------------
-// Micro-kernel
+// Macro-kernel (micro-kernels live in `simd`, dispatched per tier)
 // ---------------------------------------------------------------------------
 
-/// The MR×NR register-blocked micro-kernel: consumes one `ap` micro-panel
-/// (kc×MR) and one `bp` micro-panel (kc×NR), returns the accumulator
-/// block. Constant-sized inner loops — LLVM unrolls them into broadcast +
-/// packed-FMA sequences with no bounds checks (`chunks_exact` + fixed
-/// array views).
-#[inline(always)]
-fn microkernel(ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
-    let mut acc = [[0.0f64; NR]; MR];
-    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
-        let a: &[f64; MR] = a.try_into().unwrap();
-        let b: &[f64; NR] = b.try_into().unwrap();
-        for r in 0..MR {
-            let ar = a[r];
-            for j in 0..NR {
-                acc[r][j] += ar * b[j];
-            }
+/// Accumulate `alpha ·` the first `nrows` rows of a micro-tile into C
+/// at block-relative origin `(i0, j0)` (plus the `(ic, jc)` block
+/// origin), clipping to `ncols` valid columns.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn writeback_tile(
+    acc: &[[f64; NR]],
+    nrows: usize,
+    ncols: usize,
+    alpha: f64,
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+) {
+    for (r, accrow) in acc.iter().enumerate().take(nrows) {
+        let off = (row0 + r) * ldc + col0;
+        let crow = &mut c[off..off + ncols];
+        for (cv, av) in crow.iter_mut().zip(&accrow[..ncols]) {
+            *cv += alpha * av;
         }
     }
-    acc
 }
 
 /// Sweep the packed panels over an `mc × nc` block of C, accumulating
-/// `C += alpha * A_pack · B_pack`. `c` element `(i, j)` (block-relative
-/// plus the `(ic, jc)` block origin) lives at `c[(ic+i)*ldc + jc+j]`.
+/// `C += alpha * A_pack · B_pack` on the `isa` tier's micro-kernel.
+/// `c` element `(i, j)` (block-relative plus the `(ic, jc)` block
+/// origin) lives at `c[(ic+i)*ldc + jc+j]`.
+///
+/// On the AVX-512 tier adjacent MR-panels are paired into one 8×8 zmm
+/// tile (identical per-element arithmetic to two 4×8 FMA tiles — see
+/// [`simd::microkernel_8x8`] — so the pairing cannot perturb the
+/// threaded band-partition bit-identity); the odd tail panel and every
+/// other tier run the 4×8 kernel.
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
+    isa: KernelIsa,
     mc: usize,
     nc: usize,
     kc: usize,
@@ -291,21 +402,27 @@ fn macro_kernel(
 ) {
     let apanels = mc.div_ceil(MR);
     let bpanels = nc.div_ceil(NR);
+    let pair = isa == KernelIsa::Avx512;
     for jp in 0..bpanels {
         let j0 = jp * NR;
         let ncols = NR.min(nc - j0);
         let bpan = &bp[jp * kc * NR..(jp + 1) * kc * NR];
-        for ip in 0..apanels {
+        let mut ip = 0;
+        while ip < apanels {
             let i0 = ip * MR;
-            let nrows = MR.min(mc - i0);
-            let apan = &ap[ip * kc * MR..(ip + 1) * kc * MR];
-            let acc = microkernel(apan, bpan);
-            for (r, accrow) in acc.iter().enumerate().take(nrows) {
-                let off = (ic + i0 + r) * ldc + jc + j0;
-                let crow = &mut c[off..off + ncols];
-                for (cv, av) in crow.iter_mut().zip(&accrow[..ncols]) {
-                    *cv += alpha * av;
-                }
+            if pair && ip + 1 < apanels {
+                let apan0 = &ap[ip * kc * MR..(ip + 1) * kc * MR];
+                let apan1 = &ap[(ip + 1) * kc * MR..(ip + 2) * kc * MR];
+                let acc = microkernel_8x8(isa, apan0, apan1, bpan);
+                let nrows = (2 * MR).min(mc - i0);
+                writeback_tile(&acc, nrows, ncols, alpha, c, ldc, ic + i0, jc + j0);
+                ip += 2;
+            } else {
+                let apan = &ap[ip * kc * MR..(ip + 1) * kc * MR];
+                let acc = microkernel_4x8(isa, apan, bpan);
+                let nrows = MR.min(mc - i0);
+                writeback_tile(&acc, nrows, ncols, alpha, c, ldc, ic + i0, jc + j0);
+                ip += 1;
             }
         }
     }
@@ -341,13 +458,16 @@ pub fn dgemm(
     ldc: usize,
 ) {
     counters::record_dgemm();
-    dgemm_core(m, n, k, alpha, a, lda, ta, b, ldb, tb, beta, c, ldc);
+    dgemm_core(active_isa(), m, n, k, alpha, a, lda, ta, b, ldb, tb, beta, c, ldc);
 }
 
 /// The counter-free serial driver body, shared by [`dgemm`] and the
-/// per-band pool jobs of [`dgemm_threaded`].
+/// per-band pool jobs of [`dgemm_threaded`]. Runs on the explicit `isa`
+/// tier; packing panels come from the calling thread's arena slots
+/// (zero allocation once warm).
 #[allow(clippy::too_many_arguments)]
 fn dgemm_core(
+    isa: KernelIsa,
     m: usize,
     n: usize,
     k: usize,
@@ -372,32 +492,36 @@ fn dgemm_core(
     if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         return;
     }
-    let mut ap: Vec<f64> = Vec::new();
-    let mut bp: Vec<f64> = Vec::new();
+    let mut apbuf = arena::take(Slot::PackA);
+    let mut bpbuf = arena::take(Slot::PackB);
     let mut jc = 0;
     while jc < n {
         let nc = NC.min(n - jc);
         let mut pc = 0;
         while pc < k {
             let kc = KC.min(k - pc);
+            let bp = bpbuf.ensure(packed_b_len(nc, kc));
             match tb {
-                Trans::N => pack_b_n(&mut bp, &b[pc * ldb + jc..], ldb, kc, nc),
-                Trans::T => pack_b_t(&mut bp, &b[jc * ldb + pc..], ldb, kc, nc),
+                Trans::N => pack_b_n(bp, &b[pc * ldb + jc..], ldb, kc, nc),
+                Trans::T => pack_b_t(bp, &b[jc * ldb + pc..], ldb, kc, nc),
             }
             let mut ic = 0;
             while ic < m {
                 let mc = MC.min(m - ic);
+                let ap = apbuf.ensure(packed_a_len(mc, kc));
                 match ta {
-                    Trans::N => pack_a_n(&mut ap, &a[ic * lda + pc..], lda, mc, kc),
-                    Trans::T => pack_a_t(&mut ap, &a[pc * lda + ic..], lda, mc, kc),
+                    Trans::N => pack_a_n(ap, &a[ic * lda + pc..], lda, mc, kc),
+                    Trans::T => pack_a_t(ap, &a[pc * lda + ic..], lda, mc, kc),
                 }
-                macro_kernel(mc, nc, kc, alpha, &ap, &bp, c, ldc, ic, jc);
+                macro_kernel(isa, mc, nc, kc, alpha, ap, bp, c, ldc, ic, jc);
                 ic += mc;
             }
             pc += kc;
         }
         jc += nc;
     }
+    arena::put(Slot::PackA, apbuf);
+    arena::put(Slot::PackB, bpbuf);
 }
 
 /// Raw-pointer Send wrappers for smuggling borrowed buffers into
@@ -456,6 +580,10 @@ pub fn dgemm_threaded(
         return;
     }
     counters::record_dgemm();
+    // One tier for the whole call: captured here, passed into every
+    // band job, so a caller-side `with_isa` override (thread-local)
+    // cannot desynchronize the workers from the serial reference.
+    let isa = active_isa();
     let jobs_n = threads.min(blocks);
     let chunk_blocks = blocks.div_ceil(jobs_n);
     let aptr = SendConst(a.as_ptr());
@@ -483,7 +611,7 @@ pub fn dgemm_threaded(
                 Trans::N => &a[r0 * lda..],
                 Trans::T => &a[r0..],
             };
-            dgemm_core(r1 - r0, n, k, alpha, asub, lda, ta, b, ldb, tb, beta, cband, ldc);
+            dgemm_core(isa, r1 - r0, n, k, alpha, asub, lda, ta, b, ldb, tb, beta, cband, ldc);
         }));
         r0 = r1;
     }
@@ -496,24 +624,32 @@ pub fn dgemm_threaded(
 /// strictly above the diagonal are skipped, which halves the FLOPs of the
 /// Gram stage versus a general NT product.
 ///
-/// The computation is a pure function of `(a, i0, i1)` — the packing,
-/// tile order and accumulation order never depend on what other panels
-/// are doing — so any panel-parallel schedule is bit-identical to the
-/// serial sweep. The SYRK determinism test pins this property.
+/// The computation is a pure function of `(a, i0, i1)` *and the active
+/// ISA tier* — the packing, tile order and accumulation order never
+/// depend on what other panels are doing — so any panel-parallel
+/// schedule is bit-identical to the serial sweep within a tier
+/// ([`syrk_parallel`](super::gemm::syrk_parallel) re-establishes the
+/// caller's tier inside its jobs). The SYRK determinism test pins this
+/// property. All tiers use the 4×8 micro-kernel here: the diagonal
+/// skip is decided per MR-panel, so the AVX-512 8×8 pairing would
+/// complicate the triangle logic for no arithmetic difference.
 pub fn syrk_panel(a: &[f64], n: usize, m: usize, i0: usize, i1: usize, wrows: &mut [f64]) {
     debug_assert!(i0 < i1 && i1 <= n);
     debug_assert_eq!(a.len(), n * m);
     debug_assert_eq!(wrows.len(), (i1 - i0) * n);
+    let isa = active_isa();
     let mb = i1 - i0;
     let jb = i1;
-    let mut ap: Vec<f64> = Vec::new();
-    let mut bp: Vec<f64> = Vec::new();
+    let mut apbuf = arena::take(Slot::PackA);
+    let mut bpbuf = arena::take(Slot::PackB);
     let mut pc = 0;
     while pc < m {
         let kc = KC.min(m - pc);
         // B = Aᵀ block: logical (p, j) ↦ A[j][pc+p], columns 0..i1 only.
-        pack_b_t(&mut bp, &a[pc..], m, kc, jb);
-        pack_a_n(&mut ap, &a[i0 * m + pc..], m, mb, kc);
+        let bp = bpbuf.ensure(packed_b_len(jb, kc));
+        pack_b_t(bp, &a[pc..], m, kc, jb);
+        let ap = apbuf.ensure(packed_a_len(mb, kc));
+        pack_a_n(ap, &a[i0 * m + pc..], m, mb, kc);
         let apanels = mb.div_ceil(MR);
         let bpanels = jb.div_ceil(NR);
         for ip in 0..apanels {
@@ -528,7 +664,7 @@ pub fn syrk_panel(a: &[f64], n: usize, m: usize, i0: usize, i1: usize, wrows: &m
                 }
                 let ncols = NR.min(jb - j0);
                 let bpan = &bp[jp * kc * NR..(jp + 1) * kc * NR];
-                let acc = microkernel(apan, bpan);
+                let acc = microkernel_4x8(isa, apan, bpan);
                 for (r, accrow) in acc.iter().enumerate().take(nrows) {
                     let off = (r0 + r) * n + j0;
                     let crow = &mut wrows[off..off + ncols];
@@ -540,6 +676,8 @@ pub fn syrk_panel(a: &[f64], n: usize, m: usize, i0: usize, i1: usize, wrows: &m
         }
         pc += kc;
     }
+    arena::put(Slot::PackA, apbuf);
+    arena::put(Slot::PackB, bpbuf);
 }
 
 // ---------------------------------------------------------------------------
@@ -895,5 +1033,26 @@ mod tests {
         assert_eq!(KernelConfig::default(), KernelConfig::serial());
         assert_eq!(KernelConfig::with_threads(0).threads, 1);
         assert!(KernelConfig::from_env().threads >= 1);
+        assert_eq!(KernelConfig::serial().isa, None);
+        assert_eq!(KernelConfig::serial().resolved_isa(), active_isa());
+        let pinned = KernelConfig::serial().with_isa(Some(KernelIsa::Scalar));
+        assert_eq!(pinned.resolved_isa(), KernelIsa::Scalar);
+        pinned.run(|| assert_eq!(active_isa(), KernelIsa::Scalar));
+    }
+
+    #[test]
+    fn dgemm_steady_state_is_arena_allocation_free() {
+        let (m, n, k) = (MC + 3, NR + 5, KC + 9);
+        let a = fill(m * k, 50);
+        let b = fill(k * n, 51);
+        let mut c = vec![0.0; m * n];
+        // Warm the pack slots at this shape…
+        dgemm(m, n, k, 1.0, &a, k, Trans::N, &b, n, Trans::N, 0.0, &mut c, n);
+        // …then repeat: zero arena growth.
+        let a0 = counters::arena_allocs();
+        for _ in 0..3 {
+            dgemm(m, n, k, 1.0, &a, k, Trans::N, &b, n, Trans::N, 0.0, &mut c, n);
+        }
+        assert_eq!(counters::arena_allocs() - a0, 0, "steady-state dgemm must not allocate");
     }
 }

@@ -129,22 +129,13 @@ impl Mat {
         y
     }
 
-    /// `y = Aᵀ x` without materializing `Aᵀ` — axpy accumulation over rows.
-    /// This is the `Sᵀu` of Algorithm 1 line 4 and is memory-bound, so it
-    /// streams each row exactly once.
+    /// `y = Aᵀ x` without materializing `Aᵀ` — [`axpy`] accumulation
+    /// over rows (ISA-dispatched since PR 4). This is the `Sᵀu` of
+    /// Algorithm 1 line 4 and is memory-bound, so it streams each row
+    /// exactly once.
     pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let row = self.row(i);
-            for j in 0..self.cols {
-                y[j] += xi * row[j];
-            }
-        }
+        self.t_matvec_into(x, &mut y);
         y
     }
 
@@ -158,7 +149,8 @@ impl Mat {
         }
     }
 
-    /// `out = Aᵀ x` into caller storage (allocation-free [`Mat::t_matvec`]).
+    /// `out = Aᵀ x` into caller storage (allocation-free
+    /// [`Mat::t_matvec`]) — one ISA-dispatched [`axpy`] per row.
     pub fn t_matvec_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(out.len(), self.cols);
@@ -168,9 +160,7 @@ impl Mat {
             if xi == 0.0 {
                 continue;
             }
-            for (o, &r) in out.iter_mut().zip(self.row(i)) {
-                *o += xi * r;
-            }
+            axpy(xi, self.row(i), out);
         }
     }
 
@@ -190,12 +180,11 @@ impl Mat {
         self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
     }
 
-    /// `self += alpha * other` (same shape).
+    /// `self += alpha * other` (same shape) — one ISA-dispatched
+    /// [`axpy`] over the whole backing buffer.
     pub fn axpy(&mut self, alpha: f64, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        axpy(alpha, &other.data, &mut self.data);
     }
 
     /// In-place scale.
@@ -295,40 +284,26 @@ impl fmt::Debug for Mat {
     }
 }
 
-/// Dot product, 16-way unrolled via `chunks_exact` (no bounds checks in
-/// the hot loop). With `target-cpu=native` LLVM lowers each 8-lane group
-/// to packed AVX-512 (or 2× AVX2) FMA; two independent groups hide the
-/// FMA latency chain. Measured in EXPERIMENTS.md §Perf.
+/// Dot product on the active [`KernelIsa`](super::simd::KernelIsa)
+/// tier (PR 4): explicit AVX2/AVX-512/NEON FMA kernels with multiple
+/// independent accumulators to hide the FMA latency chain, falling back
+/// to the seed's 16-way-unrolled scalar loop on the scalar tier. This
+/// is the CG solver's and the unblocked Cholesky panel's inner kernel.
+/// The result is a pure function of `(a, b, tier)` — see the
+/// determinism notes in [`simd`](super::simd).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc0 = [0.0f64; 8];
-    let mut acc1 = [0.0f64; 8];
-    let mut ca = a.chunks_exact(16);
-    let mut cb = b.chunks_exact(16);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for l in 0..8 {
-            acc0[l] += xa[l] * xb[l];
-            acc1[l] += xa[8 + l] * xb[8 + l];
-        }
-    }
-    let mut s = 0.0;
-    for l in 0..8 {
-        s += acc0[l] + acc1[l];
-    }
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += x * y;
-    }
-    s
+    super::simd::dot_isa(super::simd::active_isa(), a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` on the active ISA tier — unrolled/vectorized like
+/// [`dot`] (PR 4; it was a plain element loop despite backing the CG
+/// update and the forward/backward substitution sweeps).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    super::simd::axpy_isa(super::simd::active_isa(), alpha, x, y);
 }
 
 /// Euclidean norm of a vector.

@@ -7,6 +7,13 @@
 //! * [`kernel`] — the packed, register-blocked GEMM engine (BLIS-style
 //!   MR×NR micro-kernel, KC/MC/NC cache blocking, persistent worker
 //!   pool) that every dense hot path below routes through since PR 1.
+//! * [`simd`] — the runtime-dispatched ISA tier under the engine
+//!   (PR 4): explicit AVX2/AVX-512/NEON `std::arch` micro-kernels and
+//!   `dot`/`axpy` primitives, scalar fallback, `DNGD_KERNEL` override.
+//! * [`arena`] — thread-local 64-byte-aligned packing arenas (PR 4):
+//!   `ap`/`bp` panels, TRSM gathers and Cholesky strip buffers grown
+//!   monotonically and reused, so steady-state solves perform zero
+//!   pack-buffer allocation.
 //! * [`Mat`] — row-major dense `f64` matrix with matrix–vector kernels;
 //!   the GEMM/SYRK front-ends live in [`gemm`] on top of the engine.
 //! * [`cholesky`] — blocked right-looking Cholesky factorization
@@ -22,6 +29,7 @@
 //! * [`complex`] — `c64` scalar and [`CMat`] with Hermitian Gram,
 //!   complex Cholesky and triangular solves for the SR variants (§3).
 
+pub mod arena;
 pub mod cholesky;
 pub mod complex;
 pub mod eigh;
@@ -29,6 +37,7 @@ pub mod gemm;
 pub mod kernel;
 pub mod mat;
 pub mod qr;
+pub mod simd;
 pub mod svd;
 pub mod trisolve;
 
@@ -42,6 +51,7 @@ pub use gemm::{
 };
 pub use kernel::KernelConfig;
 pub use mat::Mat;
+pub use simd::{active_isa, with_isa, KernelIsa};
 pub use qr::qr;
 pub use svd::{svd_eigh, svd_eigh_threaded, svd_jacobi, ThinSvd};
 pub use trisolve::{

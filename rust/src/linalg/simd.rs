@@ -1,0 +1,769 @@
+//! Runtime-dispatched SIMD tier under the packed kernel engine (PR 4).
+//!
+//! The packed micro-kernel of [`kernel`](super::kernel) used to be plain
+//! scalar Rust that only vectorized if LLVM felt like it at the default
+//! `target-cpu`. This module makes the instruction set explicit: one
+//! [`KernelIsa`] tier is selected per process (CPUID detection, or the
+//! `DNGD_KERNEL` env override) and every FLOP of the dense pipeline —
+//! the GEMM/SYRK micro-kernels, the [`dot`](super::mat::dot)/
+//! [`axpy`](super::mat::axpy) primitives under the CG solver, the
+//! Cholesky diagonal factor and the blocked-TRSM inner cores — runs on
+//! that tier's `std::arch` kernel:
+//!
+//! | tier | micro-tile | dot/axpy width | requires |
+//! |------|-----------|----------------|----------|
+//! | `scalar` | 4×8 (LLVM autovec) | 16-way unrolled | nothing — guaranteed fallback |
+//! | `avx2`   | 4×8, 8 ymm accumulators, FMA | 4×4 f64 lanes | x86-64 AVX2+FMA |
+//! | `avx512` | 8×8, 8 zmm accumulators, FMA (4×8 edge tiles) | 4×8 f64 lanes | x86-64 AVX-512F (+AVX2/FMA) |
+//! | `neon`   | 4×8, 16 q-register accumulators, FMA | 8×2 f64 lanes | aarch64 (always on) |
+//!
+//! ## Determinism contract (amended in PR 4)
+//!
+//! *Within a fixed tier*, every threaded kernel remains **bit-identical
+//! to serial at every thread count**: each tier's accumulation order is
+//! a pure function of the tier and the operand shapes, never of the
+//! thread partitioning — threaded dispatchers capture the caller's
+//! active tier and re-establish it inside every pool job
+//! ([`with_isa`]), so a scoped override cannot desynchronize caller and
+//! workers. *Across tiers* results are only tolerance-equal (FMA
+//! contracts the multiply-add into one rounding; the scalar tier keeps
+//! the seed's two-rounding arithmetic), with
+//! [`gemm::reference`](super::gemm::reference) remaining the oracle.
+//!
+//! ## Selection
+//!
+//! The process default is the best supported tier
+//! ([`KernelIsa::detect`]), overridable with
+//! `DNGD_KERNEL=scalar|avx2|avx512|neon` (unknown or unsupported values
+//! are hard errors — a forced tier that silently fell back would
+//! invalidate the CI scalar job). [`with_isa`] scopes a tier to a
+//! closure on the current thread (tests sweep every supported tier in
+//! one process); `solver.isa` reaches the chol/rvb sessions through
+//! [`KernelConfig::isa`](super::kernel::KernelConfig).
+
+use super::kernel::{MR, NR};
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Instruction-set tier for the dense kernels. See the module docs for
+/// the per-tier micro-kernel shapes and the determinism contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable Rust loops (the seed arithmetic) — always available.
+    Scalar,
+    /// x86-64 AVX2 + FMA: 256-bit lanes, 4×8 micro-tile.
+    Avx2,
+    /// x86-64 AVX-512F: 512-bit lanes, 8×8 micro-tile (4×8 on edges).
+    Avx512,
+    /// aarch64 NEON: 128-bit lanes, 4×8 micro-tile.
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx512() -> bool {
+    have_avx2() && std::arch::is_x86_feature_detected!("avx512f")
+}
+
+impl KernelIsa {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Avx512 => "avx512",
+            KernelIsa::Neon => "neon",
+        }
+    }
+
+    /// Parse the `DNGD_KERNEL` / `solver.isa` spelling.
+    pub fn parse(s: &str) -> Option<KernelIsa> {
+        Some(match s {
+            "scalar" => KernelIsa::Scalar,
+            "avx2" => KernelIsa::Avx2,
+            "avx512" => KernelIsa::Avx512,
+            "neon" => KernelIsa::Neon,
+            _ => return None,
+        })
+    }
+
+    /// Whether this host can execute the tier's kernels.
+    pub fn supported(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelIsa::Avx2 => have_avx2(),
+            #[cfg(target_arch = "x86_64")]
+            KernelIsa::Avx512 => have_avx512(),
+            #[cfg(target_arch = "aarch64")]
+            KernelIsa::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every tier this host supports, worst to best. Always starts with
+    /// [`KernelIsa::Scalar`]; [`KernelIsa::detect`] is the last entry.
+    pub fn supported_tiers() -> Vec<KernelIsa> {
+        [KernelIsa::Scalar, KernelIsa::Neon, KernelIsa::Avx2, KernelIsa::Avx512]
+            .into_iter()
+            .filter(|isa| isa.supported())
+            .collect()
+    }
+
+    /// The best tier this host supports (CPUID / target detection).
+    pub fn detect() -> KernelIsa {
+        *KernelIsa::supported_tiers().last().expect("scalar tier is always supported")
+    }
+}
+
+impl std::fmt::Display for KernelIsa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The process-wide default tier: `DNGD_KERNEL` if set (hard error on
+/// unknown or unsupported values — no silent fallback), else
+/// [`KernelIsa::detect`]. Resolved once and cached.
+pub fn process_default_isa() -> KernelIsa {
+    static DEFAULT: OnceLock<KernelIsa> = OnceLock::new();
+    *DEFAULT.get_or_init(|| match std::env::var("DNGD_KERNEL") {
+        Err(_) => KernelIsa::detect(),
+        Ok(spec) => {
+            let isa = KernelIsa::parse(&spec).unwrap_or_else(|| {
+                panic!("DNGD_KERNEL={spec:?} unknown (expected scalar|avx2|avx512|neon)")
+            });
+            assert!(
+                isa.supported(),
+                "DNGD_KERNEL={spec} requests a tier this CPU does not support (supported: {})",
+                KernelIsa::supported_tiers()
+                    .iter()
+                    .map(|i| i.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            isa
+        }
+    })
+}
+
+thread_local! {
+    /// Scoped per-thread override, set by [`with_isa`]. Threaded kernel
+    /// dispatchers capture [`active_isa`] at entry and re-establish it
+    /// inside each pool job so the whole call runs one tier.
+    static ISA_OVERRIDE: Cell<Option<KernelIsa>> = const { Cell::new(None) };
+}
+
+/// The tier the calling thread's kernels dispatch on: the innermost
+/// [`with_isa`] override, else the process default.
+pub fn active_isa() -> KernelIsa {
+    ISA_OVERRIDE.with(|c| c.get()).unwrap_or_else(process_default_isa)
+}
+
+/// Run `f` with `isa` as the calling thread's active tier, restoring
+/// the previous tier afterwards (panic-safe). The override is
+/// thread-local; the threaded kernels propagate it into their pool jobs
+/// themselves, so a `with_isa` scope still produces within-tier
+/// bit-identical results at every thread count.
+///
+/// Panics if this host cannot execute `isa` — the gate that keeps a
+/// hand-built [`KernelConfig::isa`](super::kernel::KernelConfig)
+/// override (which bypasses the validated `DNGD_KERNEL` / `solver.isa`
+/// parsers) from reaching `#[target_feature]` kernels the CPU lacks
+/// (undefined behavior). The check is a cached feature lookup — noise
+/// against any kernel call.
+pub fn with_isa<R>(isa: KernelIsa, f: impl FnOnce() -> R) -> R {
+    assert!(isa.supported(), "with_isa({isa}): tier not supported by this CPU");
+    struct Restore(Option<KernelIsa>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ISA_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(ISA_OVERRIDE.with(|c| c.replace(Some(isa))));
+    f()
+}
+
+/// [`with_isa`] when the override is optional (`KernelConfig.isa` /
+/// `solver.isa` plumbing): `None` runs `f` on the ambient tier.
+pub fn with_isa_opt<R>(isa: Option<KernelIsa>, f: impl FnOnce() -> R) -> R {
+    match isa {
+        Some(isa) => with_isa(isa, f),
+        None => f(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4×8 micro-kernels
+// ---------------------------------------------------------------------------
+
+/// The scalar MR×NR micro-kernel — the seed arithmetic (separate
+/// multiply and add roundings), kept verbatim as the guaranteed
+/// fallback. Constant-sized inner loops; LLVM may autovectorize but the
+/// summation order per C element is fixed: `p` strictly increasing.
+fn mk4x8_scalar(ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let a: &[f64; MR] = a.try_into().unwrap();
+        let b: &[f64; NR] = b.try_into().unwrap();
+        for r in 0..MR {
+            let ar = a[r];
+            for j in 0..NR {
+                acc[r][j] += ar * b[j];
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2+FMA 4×8: 8 ymm accumulators (4 rows × 2 lanes-of-4), 2 B loads
+/// and 4 broadcasts per k-step. Per C element the sum is a single FMA
+/// chain with `p` strictly increasing — same order as scalar, one
+/// rounding per step instead of two.
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk4x8_avx2(ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    use core::arch::x86_64::*;
+    let kc = bp.len() / NR;
+    debug_assert_eq!(ap.len(), kc * MR);
+    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_pd(b);
+        let b1 = _mm256_loadu_pd(b.add(4));
+        for r in 0..MR {
+            let ar = _mm256_set1_pd(*a.add(r));
+            acc[r][0] = _mm256_fmadd_pd(ar, b0, acc[r][0]);
+            acc[r][1] = _mm256_fmadd_pd(ar, b1, acc[r][1]);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    let mut out = [[0.0f64; NR]; MR];
+    for r in 0..MR {
+        _mm256_storeu_pd(out[r].as_mut_ptr(), acc[r][0]);
+        _mm256_storeu_pd(out[r].as_mut_ptr().add(4), acc[r][1]);
+    }
+    out
+}
+
+/// NEON 4×8: 16 q-register accumulators (4 rows × 4 lanes-of-2), FMA
+/// via `vfmaq_f64`. Same per-element `p`-increasing FMA chain as the
+/// x86 tiers.
+///
+/// # Safety
+/// Caller must be on aarch64 with NEON (baseline for the arch).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mk4x8_neon(ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    use core::arch::aarch64::*;
+    let kc = bp.len() / NR;
+    debug_assert_eq!(ap.len(), kc * MR);
+    let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = vld1q_f64(b);
+        let b1 = vld1q_f64(b.add(2));
+        let b2 = vld1q_f64(b.add(4));
+        let b3 = vld1q_f64(b.add(6));
+        for r in 0..MR {
+            let ar = vdupq_n_f64(*a.add(r));
+            acc[r][0] = vfmaq_f64(acc[r][0], ar, b0);
+            acc[r][1] = vfmaq_f64(acc[r][1], ar, b1);
+            acc[r][2] = vfmaq_f64(acc[r][2], ar, b2);
+            acc[r][3] = vfmaq_f64(acc[r][3], ar, b3);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    let mut out = [[0.0f64; NR]; MR];
+    for r in 0..MR {
+        for l in 0..4 {
+            vst1q_f64(out[r].as_mut_ptr().add(2 * l), acc[r][l]);
+        }
+    }
+    out
+}
+
+/// Dispatch the 4×8 micro-kernel for `isa`. The AVX-512 tier uses the
+/// AVX2 4×8 kernel here (AVX-512F detection implies AVX2+FMA) — its
+/// native 8×8 tile lives in [`microkernel_8x8`] and is only engaged by
+/// the GEMM macro-kernel when two adjacent row panels are available.
+#[inline]
+pub(crate) fn microkernel_4x8(isa: KernelIsa, ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: tier selection guarantees AVX2+FMA on this host.
+        return unsafe { mk4x8_avx2(ap, bp) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { mk4x8_neon(ap, bp) };
+    }
+    let _ = isa;
+    mk4x8_scalar(ap, bp)
+}
+
+// ---------------------------------------------------------------------------
+// 8×8 micro-kernel (AVX-512)
+// ---------------------------------------------------------------------------
+
+/// AVX-512F 8×8 over two adjacent MR-panels: 8 zmm accumulators (one
+/// full C row each), 1 B load and 8 broadcasts per k-step — eight
+/// independent FMA chains hide the FMA latency without touching the
+/// MR=4 packed layout. Per C element the arithmetic is the *same*
+/// `p`-increasing FMA chain as the 4×8 FMA kernels, so pairing panels
+/// never changes a value (and therefore cannot break the threaded
+/// band-partition bit-identity).
+///
+/// # Safety
+/// Caller must ensure AVX-512F is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn mk8x8_avx512(ap0: &[f64], ap1: &[f64], bp: &[f64]) -> [[f64; NR]; 2 * MR] {
+    use core::arch::x86_64::*;
+    let kc = bp.len() / NR;
+    debug_assert_eq!(ap0.len(), kc * MR);
+    debug_assert_eq!(ap1.len(), kc * MR);
+    let mut acc = [_mm512_setzero_pd(); 2 * MR];
+    let mut a0 = ap0.as_ptr();
+    let mut a1 = ap1.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let bv = _mm512_loadu_pd(b);
+        for r in 0..MR {
+            acc[r] = _mm512_fmadd_pd(_mm512_set1_pd(*a0.add(r)), bv, acc[r]);
+            acc[MR + r] = _mm512_fmadd_pd(_mm512_set1_pd(*a1.add(r)), bv, acc[MR + r]);
+        }
+        a0 = a0.add(MR);
+        a1 = a1.add(MR);
+        b = b.add(NR);
+    }
+    let mut out = [[0.0f64; NR]; 2 * MR];
+    for (row, acc) in out.iter_mut().zip(acc) {
+        _mm512_storeu_pd(row.as_mut_ptr(), acc);
+    }
+    out
+}
+
+/// Two stacked 4×8 tiles (`ap0` rows on top of `ap1` rows) in one call.
+/// On the AVX-512 tier this is the native 8×8 zmm kernel; every other
+/// tier computes the two 4×8 tiles back to back (identical arithmetic,
+/// so the macro-kernel may pair unconditionally).
+#[inline]
+pub(crate) fn microkernel_8x8(
+    isa: KernelIsa,
+    ap0: &[f64],
+    ap1: &[f64],
+    bp: &[f64],
+) -> [[f64; NR]; 2 * MR] {
+    #[cfg(target_arch = "x86_64")]
+    if isa == KernelIsa::Avx512 {
+        // SAFETY: tier selection guarantees AVX-512F on this host.
+        return unsafe { mk8x8_avx512(ap0, ap1, bp) };
+    }
+    let top = microkernel_4x8(isa, ap0, bp);
+    let bot = microkernel_4x8(isa, ap1, bp);
+    let mut out = [[0.0f64; NR]; 2 * MR];
+    out[..MR].copy_from_slice(&top);
+    out[MR..].copy_from_slice(&bot);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// dot / axpy
+// ---------------------------------------------------------------------------
+
+/// The seed 16-way-unrolled scalar dot (two groups of 8 lane
+/// accumulators hide the add latency), kept verbatim as the scalar
+/// tier.
+fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc0 = [0.0f64; 8];
+    let mut acc1 = [0.0f64; 8];
+    let mut ca = a.chunks_exact(16);
+    let mut cb = b.chunks_exact(16);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..8 {
+            acc0[l] += xa[l] * xb[l];
+            acc1[l] += xa[8 + l] * xb[8 + l];
+        }
+    }
+    let mut s = 0.0;
+    for l in 0..8 {
+        s += acc0[l] + acc1[l];
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// AVX2+FMA dot: 4 ymm accumulators over 16-element chunks, fixed-order
+/// horizontal reduction, scalar tail.
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 16;
+    let mut acc = [_mm256_setzero_pd(); 4];
+    let mut pa = a.as_ptr();
+    let mut pb = b.as_ptr();
+    for _ in 0..chunks {
+        for (l, acc) in acc.iter_mut().enumerate() {
+            *acc = _mm256_fmadd_pd(
+                _mm256_loadu_pd(pa.add(4 * l)),
+                _mm256_loadu_pd(pb.add(4 * l)),
+                *acc,
+            );
+        }
+        pa = pa.add(16);
+        pb = pb.add(16);
+    }
+    let v = _mm256_add_pd(_mm256_add_pd(acc[0], acc[1]), _mm256_add_pd(acc[2], acc[3]));
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), v);
+    let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+    for i in chunks * 16..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// AVX-512F dot: 4 zmm accumulators over 32-element chunks.
+///
+/// # Safety
+/// Caller must ensure AVX-512F is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn dot_avx512(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 32;
+    let mut acc = [_mm512_setzero_pd(); 4];
+    let mut pa = a.as_ptr();
+    let mut pb = b.as_ptr();
+    for _ in 0..chunks {
+        for (l, acc) in acc.iter_mut().enumerate() {
+            *acc = _mm512_fmadd_pd(
+                _mm512_loadu_pd(pa.add(8 * l)),
+                _mm512_loadu_pd(pb.add(8 * l)),
+                *acc,
+            );
+        }
+        pa = pa.add(32);
+        pb = pb.add(32);
+    }
+    let v = _mm512_add_pd(_mm512_add_pd(acc[0], acc[1]), _mm512_add_pd(acc[2], acc[3]));
+    let mut lanes = [0.0f64; 8];
+    _mm512_storeu_pd(lanes.as_mut_ptr(), v);
+    let mut s = 0.0;
+    for l in lanes {
+        s += l;
+    }
+    for i in chunks * 32..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// NEON dot: 8 q-register accumulators over 16-element chunks.
+///
+/// # Safety
+/// Caller must be on aarch64 with NEON.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::aarch64::*;
+    let n = a.len();
+    let chunks = n / 16;
+    let mut acc = [vdupq_n_f64(0.0); 8];
+    let mut pa = a.as_ptr();
+    let mut pb = b.as_ptr();
+    for _ in 0..chunks {
+        for (l, acc) in acc.iter_mut().enumerate() {
+            *acc = vfmaq_f64(*acc, vld1q_f64(pa.add(2 * l)), vld1q_f64(pb.add(2 * l)));
+        }
+        pa = pa.add(16);
+        pb = pb.add(16);
+    }
+    let mut s = 0.0;
+    for acc in acc {
+        s += vaddvq_f64(acc);
+    }
+    for i in chunks * 16..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `⟨a, b⟩` on an explicit tier. [`super::mat::dot`] wraps this with
+/// [`active_isa`]; the unblocked Cholesky/TRSM cores capture the tier
+/// once per call instead.
+#[inline]
+pub(crate) fn dot_isa(isa: KernelIsa, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY (both arms): tier selection guarantees the features.
+        if isa == KernelIsa::Avx512 {
+            return unsafe { dot_avx512(a, b) };
+        }
+        if isa == KernelIsa::Avx2 {
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { dot_neon(a, b) };
+    }
+    let _ = isa;
+    dot_scalar(a, b)
+}
+
+/// Scalar `y += alpha · x`, 8-way unrolled through `chunks_exact` (no
+/// bounds checks in the hot loop) — the scalar-tier counterpart of
+/// [`dot_scalar`]'s unrolling.
+fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let mut cx = x.chunks_exact(8);
+    let mut cy = y.chunks_exact_mut(8);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        for l in 0..8 {
+            ys[l] += alpha * xs[l];
+        }
+    }
+    for (x, y) in cx.remainder().iter().zip(cy.into_remainder()) {
+        *y += alpha * x;
+    }
+}
+
+/// AVX2+FMA `y += alpha · x` over 8-element chunks (2 ymm per step).
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let n = x.len();
+    let chunks = n / 8;
+    let av = _mm256_set1_pd(alpha);
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    for _ in 0..chunks {
+        let y0 = _mm256_fmadd_pd(av, _mm256_loadu_pd(px), _mm256_loadu_pd(py));
+        let y1 = _mm256_fmadd_pd(av, _mm256_loadu_pd(px.add(4)), _mm256_loadu_pd(py.add(4)));
+        _mm256_storeu_pd(py, y0);
+        _mm256_storeu_pd(py.add(4), y1);
+        px = px.add(8);
+        py = py.add(8);
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// AVX-512F `y += alpha · x` over 16-element chunks (2 zmm per step).
+///
+/// # Safety
+/// Caller must ensure AVX-512F is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn axpy_avx512(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let n = x.len();
+    let chunks = n / 16;
+    let av = _mm512_set1_pd(alpha);
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    for _ in 0..chunks {
+        let y0 = _mm512_fmadd_pd(av, _mm512_loadu_pd(px), _mm512_loadu_pd(py));
+        let y1 = _mm512_fmadd_pd(av, _mm512_loadu_pd(px.add(8)), _mm512_loadu_pd(py.add(8)));
+        _mm512_storeu_pd(py, y0);
+        _mm512_storeu_pd(py.add(8), y1);
+        px = px.add(16);
+        py = py.add(16);
+    }
+    for i in chunks * 16..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// NEON `y += alpha · x` over 8-element chunks (4 q-registers per step).
+///
+/// # Safety
+/// Caller must be on aarch64 with NEON.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::aarch64::*;
+    let n = x.len();
+    let chunks = n / 8;
+    let av = vdupq_n_f64(alpha);
+    let mut px = x.as_ptr();
+    let mut py = y.as_mut_ptr();
+    for _ in 0..chunks {
+        for l in 0..4 {
+            let yv = vfmaq_f64(vld1q_f64(py.add(2 * l)), av, vld1q_f64(px.add(2 * l)));
+            vst1q_f64(py.add(2 * l), yv);
+        }
+        px = px.add(8);
+        py = py.add(8);
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y += alpha · x` on an explicit tier — see [`dot_isa`].
+#[inline]
+pub(crate) fn axpy_isa(isa: KernelIsa, alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY (both arms): tier selection guarantees the features.
+        if isa == KernelIsa::Avx512 {
+            return unsafe { axpy_avx512(alpha, x, y) };
+        }
+        if isa == KernelIsa::Avx2 {
+            return unsafe { axpy_avx2(alpha, x, y) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { axpy_neon(alpha, x, y) };
+    }
+    let _ = isa;
+    axpy_scalar(alpha, x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(len: usize, seed: u64) -> Vec<f64> {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..len)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parse_roundtrip_and_detect() {
+        for isa in [KernelIsa::Scalar, KernelIsa::Avx2, KernelIsa::Avx512, KernelIsa::Neon] {
+            assert_eq!(KernelIsa::parse(isa.as_str()), Some(isa));
+        }
+        assert_eq!(KernelIsa::parse("sse9"), None);
+        let tiers = KernelIsa::supported_tiers();
+        assert_eq!(tiers[0], KernelIsa::Scalar);
+        assert_eq!(*tiers.last().unwrap(), KernelIsa::detect());
+        assert!(KernelIsa::detect().supported());
+        assert!(active_isa().supported());
+    }
+
+    #[test]
+    fn with_isa_scopes_and_restores() {
+        let ambient = active_isa();
+        with_isa(KernelIsa::Scalar, || {
+            assert_eq!(active_isa(), KernelIsa::Scalar);
+            for &tier in &KernelIsa::supported_tiers() {
+                with_isa(tier, || assert_eq!(active_isa(), tier));
+            }
+            assert_eq!(active_isa(), KernelIsa::Scalar);
+        });
+        assert_eq!(active_isa(), ambient);
+        // Panic inside the scope still restores the ambient tier.
+        let caught = std::panic::catch_unwind(|| {
+            with_isa(KernelIsa::Scalar, || panic!("boom"));
+        });
+        assert!(caught.is_err());
+        assert_eq!(active_isa(), ambient);
+    }
+
+    #[test]
+    fn every_tier_dot_matches_scalar() {
+        for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 257] {
+            let a = fill(n, 1);
+            let b = fill(n, 2);
+            let want = dot_scalar(&a, &b);
+            for &isa in &KernelIsa::supported_tiers() {
+                let got = dot_isa(isa, &a, &b);
+                assert!(
+                    (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "dot[{isa}] n={n}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_tier_axpy_matches_scalar() {
+        for n in [0usize, 1, 7, 8, 9, 16, 17, 63, 130] {
+            let x = fill(n, 3);
+            let y0 = fill(n, 4);
+            let mut want = y0.clone();
+            axpy_scalar(0.37, &x, &mut want);
+            for &isa in &KernelIsa::supported_tiers() {
+                let mut got = y0.clone();
+                axpy_isa(isa, 0.37, &x, &mut got);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() <= 1e-14, "axpy[{isa}] n={n}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_tier_microkernels_match_scalar_tile() {
+        for kc in [1usize, 2, 3, 8, 37] {
+            let ap0 = fill(kc * MR, 5);
+            let ap1 = fill(kc * MR, 6);
+            let bp = fill(kc * NR, 7);
+            let want4 = mk4x8_scalar(&ap0, &bp);
+            let want8 = {
+                let mut w = [[0.0; NR]; 2 * MR];
+                w[..MR].copy_from_slice(&mk4x8_scalar(&ap0, &bp));
+                w[MR..].copy_from_slice(&mk4x8_scalar(&ap1, &bp));
+                w
+            };
+            for &isa in &KernelIsa::supported_tiers() {
+                let got4 = microkernel_4x8(isa, &ap0, &bp);
+                let got8 = microkernel_8x8(isa, &ap0, &ap1, &bp);
+                for r in 0..MR {
+                    for j in 0..NR {
+                        assert!(
+                            (got4[r][j] - want4[r][j]).abs() <= 1e-12 * (kc as f64),
+                            "4x8[{isa}] kc={kc} ({r},{j})"
+                        );
+                    }
+                }
+                for r in 0..2 * MR {
+                    for j in 0..NR {
+                        assert!(
+                            (got8[r][j] - want8[r][j]).abs() <= 1e-12 * (kc as f64),
+                            "8x8[{isa}] kc={kc} ({r},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -25,12 +25,23 @@
 //! substitution, so the columns are partitioned into contiguous panels,
 //! one persistent-pool job per panel, each running the identical serial
 //! core on a gathered copy of its panel — **bit-identical to the serial
-//! sweep for every thread count** (no cross-column arithmetic exists to
-//! reorder). The gathered copies also keep each job's writes on
-//! disjoint cache-friendly buffers instead of interleaved columns.
+//! sweep for every thread count** within a fixed ISA tier (no
+//! cross-column arithmetic exists to reorder; each panel job
+//! re-establishes the caller's tier). The gathered copies also keep
+//! each job's writes on disjoint cache-friendly buffers instead of
+//! interleaved columns.
+//!
+//! Since PR 4 the unblocked diagonal sweeps of the cores run on the
+//! ISA-dispatched [`axpy`](super::mat::axpy)/[`dot`](super::mat::dot)
+//! primitives (the panel updates were already packed-engine GEMMs), the
+//! gather panels come from the thread-local [`arena`](super::arena)
+//! (zero steady-state allocation), and the front-ends feed the
+//! [`kernel::counters`] TRSM invocation counter.
 
+use super::arena::{self, Slot};
 use super::kernel::{self, SendConst, SendMut, Trans};
 use super::mat::{dot, Mat};
+use super::simd::{self, axpy_isa};
 
 /// Diagonal-block size for the blocked multi-RHS solves. Matches the
 /// Cholesky panel width so a factor solved panel-by-panel streams
@@ -81,20 +92,19 @@ pub fn solve_lower_transpose(l: &Mat, y: &[f64]) -> Vec<f64> {
 /// jobs of [`solve_lower_multi_threaded`], and the Cholesky panel TRSM
 /// — one arithmetic, every caller bit-identical.
 pub(crate) fn fwd_multi_core(l: &[f64], ldl: usize, nb: usize, y: &mut [f64], k: usize) {
+    let isa = simd::active_isa();
     let mut j0 = 0;
     while j0 < nb {
         let j1 = (j0 + TB).min(nb);
-        // Unblocked solve of the diagonal block rows.
+        // Unblocked solve of the diagonal block rows: one ISA-dispatched
+        // axpy per (i, j) pair, vectorized over the RHS columns.
         for i in j0..j1 {
             let (head, tail) = y.split_at_mut(i * k);
             let yi = &mut tail[..k];
             for j in j0..i {
                 let lij = l[i * ldl + j];
                 if lij != 0.0 {
-                    let yj = &head[j * k..(j + 1) * k];
-                    for (a, c) in yi.iter_mut().zip(yj.iter()) {
-                        *a -= lij * c;
-                    }
+                    axpy_isa(isa, -lij, &head[j * k..(j + 1) * k], yi);
                 }
             }
             let inv = 1.0 / l[i * ldl + i];
@@ -129,10 +139,12 @@ pub(crate) fn fwd_multi_core(l: &[f64], ldl: usize, nb: usize, y: &mut [f64], k:
 /// the transpose counterpart of [`fwd_multi_core`], same sharing and
 /// bit-identity contract.
 pub(crate) fn bwd_multi_core(l: &[f64], ldl: usize, nb: usize, z: &mut [f64], k: usize) {
+    let isa = simd::active_isa();
     let mut j1 = nb;
     while j1 > 0 {
         let j0 = j1.saturating_sub(TB);
-        // Unblocked backward solve within the diagonal block.
+        // Unblocked backward solve within the diagonal block, axpy over
+        // the RHS columns like the forward core.
         for i in (j0..j1).rev() {
             let (head, tail) = z.split_at_mut(i * k);
             let zi = &mut tail[..k];
@@ -143,10 +155,7 @@ pub(crate) fn bwd_multi_core(l: &[f64], ldl: usize, nb: usize, z: &mut [f64], k:
             for j in j0..i {
                 let lij = l[i * ldl + j];
                 if lij != 0.0 {
-                    let zj = &mut head[j * k..(j + 1) * k];
-                    for (a, c) in zj.iter_mut().zip(zi.iter()) {
-                        *a -= lij * c;
-                    }
+                    axpy_isa(isa, -lij, &*zi, &mut head[j * k..(j + 1) * k]);
                 }
             }
         }
@@ -179,6 +188,7 @@ pub(crate) fn bwd_multi_core(l: &[f64], ldl: usize, nb: usize, z: &mut [f64], k:
 /// block, then all remaining rows are updated at once with
 /// `Y[j1.., :] -= L[j1.., j0..j1] · Y[j0..j1, :]` on the packed engine.
 pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
+    kernel::counters::record_trsm();
     let n = l.rows();
     assert_eq!(l.cols(), n);
     assert_eq!(b.rows(), n);
@@ -194,6 +204,7 @@ pub fn solve_lower_multi(l: &Mat, b: &Mat) -> Mat {
 /// unblocked, then the rows above it are updated in one panel product
 /// `Z[..j0, :] -= L[j0..j1, ..j0]ᵀ · Z[j0..j1, :]` on the packed engine.
 pub fn solve_lower_transpose_multi(l: &Mat, yy: &Mat) -> Mat {
+    kernel::counters::record_trsm();
     let n = l.rows();
     assert_eq!(l.cols(), n);
     assert_eq!(yy.rows(), n);
@@ -224,12 +235,16 @@ fn solve_multi_panels(
     threads: usize,
     core: fn(&[f64], usize, usize, &mut [f64], usize),
 ) -> Mat {
+    kernel::counters::record_trsm();
     let n = l.rows();
     let k = b.cols();
     let mut out = Mat::zeros(n, k);
     let jobs_n = threads.min(k.div_ceil(PAR_MIN_COLS)).max(1);
     let chunk = k.div_ceil(jobs_n);
     {
+        // Captured once so every panel job substitutes on the caller's
+        // tier — required for the within-tier bit-identity contract.
+        let isa = simd::active_isa();
         let lptr = SendConst(l.as_slice().as_ptr());
         let llen = l.as_slice().len();
         let bptr = SendConst(b.as_slice().as_ptr());
@@ -244,18 +259,25 @@ fn solve_multi_panels(
                 // the disjoint column range [c0, c1) of `out` (disjoint
                 // element ranges per row). The caller blocks in `run`
                 // until every job is accounted for.
-                let ldata = unsafe { std::slice::from_raw_parts(lptr.0, llen) };
-                let bdata = unsafe { std::slice::from_raw_parts(bptr.0, n * k) };
-                let mut panel = vec![0.0; n * kc];
-                for i in 0..n {
-                    panel[i * kc..(i + 1) * kc].copy_from_slice(&bdata[i * k + c0..i * k + c1]);
-                }
-                core(ldata, n, n, &mut panel, kc);
-                for i in 0..n {
-                    let dst =
-                        unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * k + c0), kc) };
-                    dst.copy_from_slice(&panel[i * kc..(i + 1) * kc]);
-                }
+                kernel::with_isa(isa, || {
+                    let ldata = unsafe { std::slice::from_raw_parts(lptr.0, llen) };
+                    let bdata = unsafe { std::slice::from_raw_parts(bptr.0, n * k) };
+                    // Worker-thread arena gather: the core's dgemm panel
+                    // updates use the (distinct) pack slots.
+                    let mut panelbuf = arena::take(Slot::Gather);
+                    let panel = panelbuf.ensure(n * kc);
+                    for i in 0..n {
+                        panel[i * kc..(i + 1) * kc]
+                            .copy_from_slice(&bdata[i * k + c0..i * k + c1]);
+                    }
+                    core(ldata, n, n, panel, kc);
+                    for i in 0..n {
+                        let dst =
+                            unsafe { std::slice::from_raw_parts_mut(optr.0.add(i * k + c0), kc) };
+                        dst.copy_from_slice(&panel[i * kc..(i + 1) * kc]);
+                    }
+                    arena::put(Slot::Gather, panelbuf);
+                });
             }));
             c0 = c1;
         }

@@ -116,7 +116,7 @@ USAGE:
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads) [--scale small|paper] [--json out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -354,7 +354,8 @@ fn cmd_vmc(args: &[String]) -> Result<(), String> {
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
-        "table1", "scaling", "cg", "kernels", "sessions", "threads", "scale", "json", "quick",
+        "table1", "scaling", "cg", "kernels", "sessions", "threads", "scale", "json",
+        "json-simd", "quick",
     ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
@@ -372,6 +373,16 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         let json = a.get("json").filter(|s| !s.is_empty()).map(std::path::Path::new);
         dngd::bench_tables::kernel_bench_report(a.has("quick"), json)
             .map_err(|e| e.to_string())?;
+        // PR 4: report the active ISA tier + per-stage GF/s at scalar
+        // vs best tier, and emit BENCH_PR4.json (no acceptance assert
+        // on the CLI path — that lives in `cargo bench --bench gemm`).
+        let json4 = a.get("json-simd").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR4.json");
+        dngd::bench_tables::simd_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json4)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else if a.has("sessions") {
         let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR2.json");
         dngd::bench_tables::session_bench_report(

@@ -24,7 +24,7 @@ use super::{DampedSolver, Factorization, SolveError};
 use crate::linalg::gemm::{gemm_nt_threaded, gemm_tn_threaded, syrk, syrk_parallel};
 use crate::linalg::{
     cholesky_threaded, solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
-    solve_lower_transpose_multi_threaded, KernelConfig, Mat,
+    solve_lower_transpose_multi_threaded, KernelConfig, KernelIsa, Mat,
 };
 
 /// Algorithm-1 solver ("chol").
@@ -40,28 +40,34 @@ pub struct CholSolver {
     /// process we thread every stage so Amdahl's law does not cap the
     /// end-to-end solve at the SYRK fraction.
     pub threads: usize,
+    /// ISA tier override for the dense pipeline (`solver.isa` plumbing,
+    /// PR 4). `None` dispatches on the process tier; `Some(tier)`
+    /// scopes every kernel this solver (and its sessions) runs to that
+    /// tier — results are bit-identical across thread counts within
+    /// the tier, only tolerance-equal across tiers.
+    pub isa: Option<KernelIsa>,
 }
 
 impl Default for CholSolver {
     fn default() -> Self {
-        CholSolver { threads: 1 }
+        CholSolver { threads: 1, isa: None }
     }
 }
 
 impl CholSolver {
     pub fn with_threads(threads: usize) -> Self {
-        CholSolver { threads: threads.max(1) }
+        CholSolver { threads: threads.max(1), isa: None }
     }
 
     /// Construct from the shared kernel configuration (CLI / TOML /
     /// coordinator plumbing all funnel through [`KernelConfig`]).
     pub fn with_config(cfg: KernelConfig) -> Self {
-        CholSolver::with_threads(cfg.threads)
+        CholSolver { threads: cfg.threads.max(1), isa: cfg.isa }
     }
 
     /// The kernel configuration this solver dispatches with.
     pub fn kernel_config(&self) -> KernelConfig {
-        KernelConfig::with_threads(self.threads)
+        KernelConfig::with_threads(self.threads).with_isa(self.isa)
     }
 
     /// The raw factor `L = Chol(SSᵀ + λĨ)`. Prefer the session path
@@ -70,26 +76,30 @@ impl CholSolver {
     /// triangular factor itself. (Named `gram_factor` so the session
     /// trait's `factor` is not shadowed on concrete solvers.)
     pub fn gram_factor(&self, s: &Mat, lambda: f64) -> Result<Mat, SolveError> {
-        let w = if self.threads > 1 {
-            syrk_parallel(s, lambda, self.threads)
-        } else {
-            syrk(s, lambda)
-        };
-        Ok(cholesky_threaded(&w, self.threads)?)
+        self.kernel_config().run(|| {
+            let w = if self.threads > 1 {
+                syrk_parallel(s, lambda, self.threads)
+            } else {
+                syrk(s, lambda)
+            };
+            Ok(cholesky_threaded(&w, self.threads)?)
+        })
     }
 
     /// Apply Algorithm 1 line 4 given a precomputed factor `L`.
     pub fn solve_with_factor(&self, s: &Mat, l: &Mat, v: &[f64], lambda: f64) -> Vec<f64> {
-        // u = S v                       O(nm)
-        let u = s.matvec(v);
-        // y = L⁻¹ u,  z = L⁻ᵀ y         O(n²)
-        let y = solve_lower(l, &u);
-        let z = solve_lower_transpose(l, &y);
-        // t = Sᵀ z                      O(nm)
-        let t = s.t_matvec(&z);
-        // x = (v − t)/λ
-        let inv = 1.0 / lambda;
-        v.iter().zip(&t).map(|(vi, ti)| inv * (vi - ti)).collect()
+        self.kernel_config().run(|| {
+            // u = S v                       O(nm)
+            let u = s.matvec(v);
+            // y = L⁻¹ u,  z = L⁻ᵀ y         O(n²)
+            let y = solve_lower(l, &u);
+            let z = solve_lower_transpose(l, &y);
+            // t = Sᵀ z                      O(nm)
+            let t = s.t_matvec(&z);
+            // x = (v − t)/λ
+            let inv = 1.0 / lambda;
+            v.iter().zip(&t).map(|(vi, ti)| inv * (vi - ti)).collect()
+        })
     }
 }
 
@@ -97,7 +107,7 @@ impl CholSolver {
 /// λ-resweeps, preallocated O(n) scratch reused across right-hand sides.
 pub struct CholFactor<'s> {
     s: &'s Mat,
-    threads: usize,
+    cfg: KernelConfig,
     lambda: f64,
     /// Cached `SSᵀ` (no damping) — computed once, λ-independent.
     gram: Option<Mat>,
@@ -108,10 +118,10 @@ pub struct CholFactor<'s> {
 }
 
 impl<'s> CholFactor<'s> {
-    pub fn new(s: &'s Mat, threads: usize) -> Self {
+    pub fn new(s: &'s Mat, cfg: KernelConfig) -> Self {
         CholFactor {
             s,
-            threads: threads.max(1),
+            cfg: KernelConfig::with_threads(cfg.threads).with_isa(cfg.isa),
             lambda: 0.0,
             gram: None,
             l: None,
@@ -121,11 +131,14 @@ impl<'s> CholFactor<'s> {
 
     fn ensure_gram(&mut self) -> &Mat {
         if self.gram.is_none() {
-            let g = if self.threads > 1 {
-                syrk_parallel(self.s, 0.0, self.threads)
-            } else {
-                syrk(self.s, 0.0)
-            };
+            let threads = self.cfg.threads;
+            let g = self.cfg.run(|| {
+                if threads > 1 {
+                    syrk_parallel(self.s, 0.0, threads)
+                } else {
+                    syrk(self.s, 0.0)
+                }
+            });
             self.gram = Some(g);
         }
         self.gram.as_ref().unwrap()
@@ -147,9 +160,9 @@ impl Factorization for CholFactor<'_> {
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
         check_lambda(lambda)?;
-        let threads = self.threads;
+        let cfg = self.cfg;
         self.ensure_gram();
-        match refactor_damped(self.gram.as_ref().unwrap(), lambda, threads) {
+        match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
             Ok(l) => {
                 self.l = Some(l);
                 self.lambda = lambda;
@@ -171,10 +184,13 @@ impl Factorization for CholFactor<'_> {
         assert_eq!(x.len(), m, "x must be m-dimensional");
         let l = self.l.as_ref().ok_or_else(undamped_err)?;
         let s = self.s;
-        s.matvec_into(v, &mut self.u);
-        let y = solve_lower(l, &self.u);
-        let z = solve_lower_transpose(l, &y);
-        s.t_matvec_into(&z, x);
+        let u = &mut self.u;
+        self.cfg.run(|| {
+            s.matvec_into(v, u);
+            let y = solve_lower(l, u);
+            let z = solve_lower_transpose(l, &y);
+            s.t_matvec_into(&z, x);
+        });
         let inv = 1.0 / self.lambda;
         for (xj, vj) in x.iter_mut().zip(v) {
             *xj = inv * (vj - *xj);
@@ -191,16 +207,20 @@ impl Factorization for CholFactor<'_> {
         assert_eq!(vs.cols(), m, "each row of vs must be m-dimensional");
         let l = self.l.as_ref().ok_or_else(undamped_err)?;
         let k = vs.rows();
-        // U = S·Vᵀ  (n×k)
-        let mut u = Mat::zeros(n, k);
-        gemm_nt_threaded(1.0, self.s, vs, 0.0, &mut u, self.threads);
-        // Z = L⁻ᵀ(L⁻¹U) — the blocked TRSM pair, RHS columns paneled
-        // across the pool.
-        let y = solve_lower_multi_threaded(l, &u, self.threads);
-        let z = solve_lower_transpose_multi_threaded(l, &y, self.threads);
-        // T = Sᵀ·Z  (m×k)
-        let mut t = Mat::zeros(m, k);
-        gemm_tn_threaded(1.0, self.s, &z, 0.0, &mut t, self.threads);
+        let threads = self.cfg.threads;
+        let t = self.cfg.run(|| {
+            // U = S·Vᵀ  (n×k)
+            let mut u = Mat::zeros(n, k);
+            gemm_nt_threaded(1.0, self.s, vs, 0.0, &mut u, threads);
+            // Z = L⁻ᵀ(L⁻¹U) — the blocked TRSM pair, RHS columns paneled
+            // across the pool.
+            let y = solve_lower_multi_threaded(l, &u, threads);
+            let z = solve_lower_transpose_multi_threaded(l, &y, threads);
+            // T = Sᵀ·Z  (m×k)
+            let mut t = Mat::zeros(m, k);
+            gemm_tn_threaded(1.0, self.s, &z, 0.0, &mut t, threads);
+            t
+        });
         // X = (V − Tᵀ)/λ  (k×m, rows are solutions)
         let inv = 1.0 / self.lambda;
         let mut x = Mat::zeros(k, m);
@@ -221,7 +241,7 @@ impl DampedSolver for CholSolver {
     }
 
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
-        Box::new(CholFactor::new(s, self.threads))
+        Box::new(CholFactor::new(s, self.kernel_config()))
     }
 }
 

@@ -65,9 +65,14 @@
 //! | sharded coordinator's leader-local resweep | same threaded Cholesky on the leader |
 //!
 //! Every threaded kernel is **bit-identical to its serial result at
-//! every thread count** (pinned by `rust/tests/threading.rs`), so
+//! every thread count within a fixed ISA tier** (pinned by
+//! `rust/tests/threading.rs` and `rust/tests/isa_dispatch.rs`), so
 //! `threads` is a pure throughput knob: runs reproduce exactly across
-//! machines with different core counts. [`flops_threaded`] is the
+//! machines with the same tier. Since PR 4 the tier itself is explicit
+//! — runtime-dispatched AVX2/AVX-512/NEON micro-kernels with a scalar
+//! fallback ([`linalg::simd`](crate::linalg::simd)), selected per
+//! process (`DNGD_KERNEL`) or per solver (`solver.isa`, honored by the
+//! chol/rvb sessions); cross-tier results are only tolerance-equal. [`flops_threaded`] is the
 //! matching cost model — it divides only the partitionable GEMM/factor
 //! terms by the thread count, keeping cross-kind comparisons honest at
 //! a configured thread count; the thread bench prints it as the

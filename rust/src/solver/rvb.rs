@@ -23,7 +23,7 @@
 use super::session::{check_lambda, refactor_damped, undamped_err};
 use super::{CholSolver, DampedSolver, Factorization, SolveError};
 use crate::linalg::gemm::{syrk, syrk_parallel};
-use crate::linalg::{cholesky_threaded, solve_lower, solve_lower_transpose, Mat};
+use crate::linalg::{cholesky_threaded, solve_lower, solve_lower_transpose, KernelConfig, Mat};
 
 /// RVB+23 least-squares solver.
 #[derive(Debug, Clone)]
@@ -44,6 +44,12 @@ impl RvbSolver {
         RvbSolver { inner: CholSolver::with_threads(threads), recovery_tol: 1e-6 }
     }
 
+    /// Construct from the shared kernel configuration — threads and the
+    /// PR-4 ISA tier override both flow through to every dense stage.
+    pub fn with_config(cfg: KernelConfig) -> Self {
+        RvbSolver { inner: CholSolver::with_config(cfg), recovery_tol: 1e-6 }
+    }
+
     /// Override the `v = Sᵀf` reconstruction tolerance
     /// (`solver.rvb_tol` in configs).
     pub fn with_recovery_tol(mut self, tol: f64) -> Self {
@@ -57,9 +63,11 @@ impl RvbSolver {
         assert_eq!(f.len(), s.rows(), "f must be n-dimensional");
         check_lambda(lambda)?;
         let l = self.inner.gram_factor(s, lambda)?;
-        let y = solve_lower(&l, f);
-        let u = solve_lower_transpose(&l, &y);
-        Ok(s.t_matvec(&u))
+        self.inner.kernel_config().run(|| {
+            let y = solve_lower(&l, f);
+            let u = solve_lower_transpose(&l, &y);
+            Ok(s.t_matvec(&u))
+        })
     }
 
     /// Recover `f` from `v = Sᵀf` by solving the (well-damped) consistency
@@ -67,17 +75,19 @@ impl RvbSolver {
     /// `BadInput` if `v` is not in the row space of `S` — the structural
     /// limitation §3 calls out.
     pub fn recover_f(&self, s: &Mat, v: &[f64], tol: f64) -> Result<Vec<f64>, SolveError> {
-        let sv = s.matvec(v);
-        // SSᵀ may be singular; tiny ridge for the recovery only.
-        let w = if self.inner.threads > 1 {
-            syrk_parallel(s, recovery_ridge(s), self.inner.threads)
-        } else {
-            syrk(s, recovery_ridge(s))
-        };
-        let l = cholesky_threaded(&w, self.inner.threads)?;
-        let f = solve_lower_transpose(&l, &solve_lower(&l, &sv));
-        verify_reconstruction(s, v, &f, tol)?;
-        Ok(f)
+        self.inner.kernel_config().run(|| {
+            let sv = s.matvec(v);
+            // SSᵀ may be singular; tiny ridge for the recovery only.
+            let w = if self.inner.threads > 1 {
+                syrk_parallel(s, recovery_ridge(s), self.inner.threads)
+            } else {
+                syrk(s, recovery_ridge(s))
+            };
+            let l = cholesky_threaded(&w, self.inner.threads)?;
+            let f = solve_lower_transpose(&l, &solve_lower(&l, &sv));
+            verify_reconstruction(s, v, &f, tol)?;
+            Ok(f)
+        })
     }
 }
 
@@ -110,7 +120,7 @@ fn verify_reconstruction(s: &Mat, v: &[f64], f: &[f64], tol: f64) -> Result<(), 
 /// RVB session: un-damped Gram + λ-independent recovery factor cached.
 pub struct RvbFactor<'s> {
     s: &'s Mat,
-    threads: usize,
+    cfg: KernelConfig,
     recovery_tol: f64,
     lambda: f64,
     /// Cached `SSᵀ` (no damping).
@@ -122,10 +132,10 @@ pub struct RvbFactor<'s> {
 }
 
 impl<'s> RvbFactor<'s> {
-    fn new(s: &'s Mat, threads: usize, recovery_tol: f64) -> Self {
+    fn new(s: &'s Mat, cfg: KernelConfig, recovery_tol: f64) -> Self {
         RvbFactor {
             s,
-            threads: threads.max(1),
+            cfg: KernelConfig::with_threads(cfg.threads).with_isa(cfg.isa),
             recovery_tol,
             lambda: 0.0,
             gram: None,
@@ -136,11 +146,14 @@ impl<'s> RvbFactor<'s> {
 
     fn ensure_gram(&mut self) -> &Mat {
         if self.gram.is_none() {
-            let g = if self.threads > 1 {
-                syrk_parallel(self.s, 0.0, self.threads)
-            } else {
-                syrk(self.s, 0.0)
-            };
+            let threads = self.cfg.threads;
+            let g = self.cfg.run(|| {
+                if threads > 1 {
+                    syrk_parallel(self.s, 0.0, threads)
+                } else {
+                    syrk(self.s, 0.0)
+                }
+            });
             self.gram = Some(g);
         }
         self.gram.as_ref().unwrap()
@@ -149,9 +162,11 @@ impl<'s> RvbFactor<'s> {
     fn ensure_recovery(&mut self) -> Result<(), SolveError> {
         if self.recovery_l.is_none() {
             let ridge = recovery_ridge(self.s);
-            let threads = self.threads;
+            let cfg = self.cfg;
             self.ensure_gram();
-            self.recovery_l = Some(refactor_damped(self.gram.as_ref().unwrap(), ridge, threads)?);
+            let rl =
+                cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), ridge, cfg.threads))?;
+            self.recovery_l = Some(rl);
         }
         Ok(())
     }
@@ -172,9 +187,9 @@ impl Factorization for RvbFactor<'_> {
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
         check_lambda(lambda)?;
-        let threads = self.threads;
+        let cfg = self.cfg;
         self.ensure_gram();
-        match refactor_damped(self.gram.as_ref().unwrap(), lambda, threads) {
+        match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
             Ok(l) => {
                 self.l = Some(l);
                 self.lambda = lambda;
@@ -197,18 +212,21 @@ impl Factorization for RvbFactor<'_> {
         }
         self.ensure_recovery()?;
         let s = self.s;
-        // Recover f (rejecting v ∉ rowspace(S) — the precondition the
-        // registry surfaces as BadInput).
+        let recovery_tol = self.recovery_tol;
         let rl = self.recovery_l.as_ref().unwrap();
-        let sv = s.matvec(v);
-        let f = solve_lower_transpose(rl, &solve_lower(rl, &sv));
-        verify_reconstruction(s, v, &f, self.recovery_tol)?;
-        // x = Sᵀ(SSᵀ + λĨ)⁻¹ f through the cached damped factor.
         let l = self.l.as_ref().unwrap();
-        let y = solve_lower(l, &f);
-        let u = solve_lower_transpose(l, &y);
-        s.t_matvec_into(&u, x);
-        Ok(())
+        self.cfg.run(|| {
+            // Recover f (rejecting v ∉ rowspace(S) — the precondition
+            // the registry surfaces as BadInput).
+            let sv = s.matvec(v);
+            let f = solve_lower_transpose(rl, &solve_lower(rl, &sv));
+            verify_reconstruction(s, v, &f, recovery_tol)?;
+            // x = Sᵀ(SSᵀ + λĨ)⁻¹ f through the cached damped factor.
+            let y = solve_lower(l, &f);
+            let u = solve_lower_transpose(l, &y);
+            s.t_matvec_into(&u, x);
+            Ok(())
+        })
     }
 }
 
@@ -221,7 +239,7 @@ impl DampedSolver for RvbSolver {
     /// v ∉ rowspace(S)), then applies the least-squares identity against
     /// the cached factors.
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
-        Box::new(RvbFactor::new(s, self.inner.threads, self.recovery_tol))
+        Box::new(RvbFactor::new(s, self.inner.kernel_config(), self.recovery_tol))
     }
 }
 

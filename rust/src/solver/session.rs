@@ -26,7 +26,7 @@
 //! no separable factorization (PJRT executables).
 
 use super::{DampedSolver, SolveError, SolverKind};
-use crate::linalg::{KernelConfig, Mat};
+use crate::linalg::{KernelConfig, KernelIsa, Mat};
 
 /// A staged factorization of `(SᵀS + λI)` bound to a borrowed score
 /// matrix: the output of [`DampedSolver::begin`] / [`DampedSolver::factor`].
@@ -187,8 +187,16 @@ pub struct SolverOptions {
     /// Gram SYRK, the blocked Cholesky (λ-resweeps included), the
     /// multi-RHS TRSM and the session panel GEMMs all partition across
     /// this many kernel-pool jobs. Threaded results are bit-identical
-    /// to serial at every count.
+    /// to serial at every count (within a fixed ISA tier).
     pub threads: usize,
+    /// ISA tier override (`solver.isa = scalar|avx2|avx512|neon|auto`)
+    /// for the dense kernels. `None`/`auto` (the default) dispatches on
+    /// the process tier — CPUID detection or the `DNGD_KERNEL` env
+    /// override. Honored by the chol and rvb sessions (the Algorithm-1
+    /// pipeline); the remaining solvers always follow the process tier.
+    /// Requesting a tier this CPU cannot run is a hard error at
+    /// option-parse time, not a silent fallback.
+    pub isa: Option<KernelIsa>,
     /// CG relative-residual tolerance ‖r‖/‖v‖.
     pub cg_tol: f64,
     /// CG iteration cap.
@@ -204,6 +212,7 @@ impl Default for SolverOptions {
     fn default() -> Self {
         SolverOptions {
             threads: 1,
+            isa: None,
             cg_tol: 1e-10,
             cg_max_iters: 10_000,
             budget_gb: 0.0,
@@ -241,13 +250,37 @@ impl SolverOptions {
         let mut next = self.clone();
         match key {
             "threads" => next.threads = parse::<usize>(key, value)?.max(1),
+            "isa" => {
+                next.isa = match value {
+                    "auto" => None,
+                    spec => {
+                        let isa = KernelIsa::parse(spec).ok_or_else(|| {
+                            format!(
+                                "solver.isa: unknown tier {spec:?} (known: scalar, avx2, avx512, \
+                                 neon, auto)"
+                            )
+                        })?;
+                        if !isa.supported() {
+                            return Err(format!(
+                                "solver.isa={spec} is not supported by this CPU (supported: {})",
+                                KernelIsa::supported_tiers()
+                                    .iter()
+                                    .map(|i| i.as_str())
+                                    .collect::<Vec<_>>()
+                                    .join(", ")
+                            ));
+                        }
+                        Some(isa)
+                    }
+                }
+            }
             "cg_tol" => next.cg_tol = parse(key, value)?,
             "cg_max_iters" => next.cg_max_iters = parse(key, value)?,
             "budget_gb" => next.budget_gb = parse(key, value)?,
             "rvb_tol" => next.rvb_tol = parse(key, value)?,
             other => {
                 return Err(format!(
-                    "unknown solver option {other:?} (known: threads, cg_tol, cg_max_iters, \
+                    "unknown solver option {other:?} (known: threads, isa, cg_tol, cg_max_iters, \
                      budget_gb, rvb_tol)"
                 ))
             }
@@ -278,7 +311,7 @@ impl SolverOptions {
 
     /// The kernel configuration implied by these options.
     pub fn kernel(&self) -> KernelConfig {
-        KernelConfig::with_threads(self.threads)
+        KernelConfig::with_threads(self.threads).with_isa(self.isa)
     }
 
     /// The modeled device budget (`budget_gb`, defaulting to the paper's
@@ -327,7 +360,7 @@ impl SolverRegistry {
                 Box::new(super::CgSolver::new(self.opts.cg_tol, self.opts.cg_max_iters))
             }
             SolverKind::Rvb => Box::new(
-                super::RvbSolver::with_threads(self.opts.threads)
+                super::RvbSolver::with_config(self.opts.kernel())
                     .with_recovery_tol(self.opts.rvb_tol),
             ),
         }
@@ -429,6 +462,35 @@ mod tests {
         assert_eq!(o.cg_tol, 1e-8);
         assert_eq!(o.cg_max_iters, 500);
         assert_eq!(o.threads, 4);
+    }
+
+    #[test]
+    fn isa_option_parses_validates_and_reaches_kernel_config() {
+        use crate::linalg::KernelIsa;
+        let mut o = SolverOptions::default();
+        assert_eq!(o.isa, None);
+        assert!(o.apply("isa", "sse9").is_err(), "unknown tier is a hard error");
+        // Scalar is supported everywhere; auto restores the default.
+        o.apply("isa", "scalar").unwrap();
+        assert_eq!(o.isa, Some(KernelIsa::Scalar));
+        assert_eq!(o.kernel().isa, Some(KernelIsa::Scalar));
+        assert_eq!(o.kernel().resolved_isa(), KernelIsa::Scalar);
+        o.apply("isa", "auto").unwrap();
+        assert_eq!(o.isa, None);
+        // Every supported tier is accepted; an unsupported one is a
+        // hard error, not a silent fallback.
+        for tier in KernelIsa::supported_tiers() {
+            o.apply("isa", tier.as_str()).unwrap();
+            assert_eq!(o.isa, Some(tier));
+        }
+        for tier in [KernelIsa::Avx2, KernelIsa::Avx512, KernelIsa::Neon] {
+            if !tier.supported() {
+                assert!(o.apply("isa", tier.as_str()).is_err());
+            }
+        }
+        // And the --set path reaches the registry.
+        let reg = SolverRegistry::from_overrides(&["solver.isa=scalar".into()]).unwrap();
+        assert_eq!(reg.opts.isa, Some(KernelIsa::Scalar));
     }
 
     #[test]

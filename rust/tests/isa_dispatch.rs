@@ -1,0 +1,243 @@
+//! Property tests for the PR-4 SIMD dispatch tier.
+//!
+//! Invariants checked:
+//!  I1. Every supported ISA tier's packed `dgemm` matches the naive
+//!      oracle over the edge-shape grid m,n,k ∈ {1, 3, MR±1, NR±1, 63,
+//!      64, 65} in all three storage layouts (N/N, N/T, T/N).
+//!  I2. Within every tier, `dgemm_threaded` is bit-identical to the
+//!      serial driver at thread counts 1/2/4/8 (the amended PR-4
+//!      determinism contract: bit-identity holds *within* a tier; the
+//!      tier is re-established inside every pool job).
+//!  I3. Within every tier, threaded SYRK / Cholesky / multi-RHS TRSM
+//!      are bit-identical to their serial counterparts, and SYRK
+//!      matches the seed scalar reference (`gemm::reference`) to
+//!      tolerance.
+//!  I4. A chol session pinned to a tier via `solver.isa` produces
+//!      bit-identical output to the same session run under a
+//!      `with_isa` scope of that tier, and stays tolerance-equal to
+//!      the scalar tier.
+//!
+//! The CI job that exports `DNGD_KERNEL=scalar` runs this whole file
+//! (and the rest of the suite) with the process default forced to the
+//! fallback tier, which keeps the scalar path from rotting.
+
+use dngd::data::rng::Rng;
+use dngd::linalg::gemm::{self, reference};
+use dngd::linalg::kernel::{self, Trans, MC, MR, NR};
+use dngd::linalg::{
+    cholesky_threaded, solve_lower_multi_threaded, solve_lower_transpose_multi_threaded, with_isa,
+    KernelIsa, Mat,
+};
+use dngd::solver::{SolverKind, SolverOptions, SolverRegistry};
+
+fn naive_gemm(a: &Mat, b: &Mat) -> Mat {
+    let (p, q) = a.shape();
+    let (_, r) = b.shape();
+    Mat::from_fn(p, r, |i, j| (0..q).map(|k| a[(i, k)] * b[(k, j)]).sum())
+}
+
+/// The satellite edge-shape grid: 1, 3, MR±1, NR±1, 63, 64, 65.
+fn edge_dims() -> Vec<usize> {
+    let mut dims = vec![1, 3, MR - 1, MR + 1, NR - 1, NR + 1, 63, 64, 65];
+    dims.dedup();
+    dims
+}
+
+#[test]
+fn i1_every_tier_matches_naive_on_edge_shapes_all_layouts() {
+    let mut rng = Rng::seed_from(9100);
+    let dims = edge_dims();
+    for &isa in &KernelIsa::supported_tiers() {
+        // One representative per (m-class, n-class, k-class) diagonal
+        // sweep of the full grid keeps the cross product bounded while
+        // still hitting every dim in every role.
+        for (ti, &m) in dims.iter().enumerate() {
+            let n = dims[(ti + 3) % dims.len()];
+            let k = dims[(ti + 6) % dims.len()];
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let expect = naive_gemm(&a, &b);
+            let tol = 1e-11 * (k as f64).max(1.0);
+            with_isa(isa, || {
+                let mut c = Mat::zeros(m, n);
+                gemm::gemm(1.0, &a, &b, 0.0, &mut c);
+                let bt = b.transpose();
+                let mut cnt = Mat::zeros(m, n);
+                gemm::gemm_nt(1.0, &a, &bt, 0.0, &mut cnt);
+                let at = a.transpose();
+                let mut ctn = Mat::zeros(m, n);
+                gemm::gemm_tn(1.0, &at, &b, 0.0, &mut ctn);
+                for i in 0..m {
+                    for j in 0..n {
+                        let want = expect[(i, j)];
+                        assert!(
+                            (c[(i, j)] - want).abs() < tol,
+                            "[{isa}] gemm ({m},{n},{k}) at ({i},{j})"
+                        );
+                        assert!(
+                            (cnt[(i, j)] - want).abs() < tol,
+                            "[{isa}] gemm_nt ({m},{n},{k}) at ({i},{j})"
+                        );
+                        assert!(
+                            (ctn[(i, j)] - want).abs() < tol,
+                            "[{isa}] gemm_tn ({m},{n},{k}) at ({i},{j})"
+                        );
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn i2_threaded_gemm_bit_identical_within_every_tier() {
+    let mut rng = Rng::seed_from(9200);
+    // ≥ 2 MC bands and above the threaded-dispatch FLOP floor, every
+    // dim off the blocking grid.
+    let (m, n, k) = (2 * MC + 9, 8 * NR + 3, 129);
+    let a = Mat::randn(m, k, &mut rng);
+    let b = Mat::randn(k, n, &mut rng);
+    let c0 = Mat::randn(m, n, &mut rng);
+    for &isa in &KernelIsa::supported_tiers() {
+        with_isa(isa, || {
+            let mut serial = c0.clone();
+            kernel::dgemm(
+                m,
+                n,
+                k,
+                1.5,
+                a.as_slice(),
+                k,
+                Trans::N,
+                b.as_slice(),
+                n,
+                Trans::N,
+                0.5,
+                serial.as_mut_slice(),
+                n,
+            );
+            for threads in [1usize, 2, 4, 8] {
+                let mut c = c0.clone();
+                kernel::dgemm_threaded(
+                    m,
+                    n,
+                    k,
+                    1.5,
+                    a.as_slice(),
+                    k,
+                    Trans::N,
+                    b.as_slice(),
+                    n,
+                    Trans::N,
+                    0.5,
+                    c.as_mut_slice(),
+                    n,
+                    threads,
+                );
+                assert_eq!(
+                    c.as_slice(),
+                    serial.as_slice(),
+                    "[{isa}] dgemm_threaded at {threads} threads differs from serial"
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn i3_syrk_cholesky_trsm_bit_identical_within_every_tier() {
+    let mut rng = Rng::seed_from(9300);
+    let (n, m, k) = (MC + 37, 300usize, 13usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let bmat = Mat::randn(n, k, &mut rng);
+    let scalar_ref = reference::syrk_scalar(&s, 0.5);
+    for &isa in &KernelIsa::supported_tiers() {
+        with_isa(isa, || {
+            // SYRK: serial vs threaded bit-identity, and the seed scalar
+            // oracle to tolerance (cross-tier is only tolerance-equal).
+            let w = gemm::syrk(&s, 0.5);
+            for threads in [1usize, 2, 4, 8] {
+                let wp = gemm::syrk_parallel(&s, 0.5, threads);
+                assert_eq!(
+                    wp.as_slice(),
+                    w.as_slice(),
+                    "[{isa}] syrk_parallel at {threads} threads differs from serial"
+                );
+            }
+            let scale = scalar_ref.max_abs().max(1.0);
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (w[(i, j)] - scalar_ref[(i, j)]).abs() < 1e-11 * scale,
+                        "[{isa}] syrk vs scalar reference at ({i},{j})"
+                    );
+                }
+            }
+            // Cholesky of the (SPD) Gram: threaded ≡ serial, bitwise.
+            let l = cholesky_threaded(&w, 1).unwrap();
+            for threads in [2usize, 4, 8] {
+                let lt = cholesky_threaded(&w, threads).unwrap();
+                assert_eq!(
+                    lt.as_slice(),
+                    l.as_slice(),
+                    "[{isa}] cholesky at {threads} threads differs from serial"
+                );
+            }
+            // Multi-RHS TRSM pair: threaded ≡ serial, bitwise.
+            let y = solve_lower_multi_threaded(&l, &bmat, 1);
+            let z = solve_lower_transpose_multi_threaded(&l, &y, 1);
+            for threads in [2usize, 4, 8] {
+                let yt = solve_lower_multi_threaded(&l, &bmat, threads);
+                let zt = solve_lower_transpose_multi_threaded(&l, &yt, threads);
+                assert_eq!(
+                    zt.as_slice(),
+                    z.as_slice(),
+                    "[{isa}] trsm at {threads} threads differs from serial"
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn i4_solver_isa_option_pins_the_session_tier() {
+    let mut rng = Rng::seed_from(9400);
+    let (n, m, k) = (96usize, 320usize, 5usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let session_with_opts = |isa: Option<KernelIsa>| -> Mat {
+        let mut opts = SolverOptions::default();
+        if let Some(isa) = isa {
+            opts.apply("isa", isa.as_str()).unwrap();
+        }
+        let reg = SolverRegistry::new(opts);
+        let plan = reg.plan(SolverKind::Chol, n, m);
+        let mut fact = plan.factor(&s, 1e-2).unwrap();
+        fact.solve_many(&vs).unwrap()
+    };
+    let scalar = session_with_opts(Some(KernelIsa::Scalar));
+    for &isa in &KernelIsa::supported_tiers() {
+        // solver.isa = tier  ≡  the whole default session under with_isa.
+        let via_option = session_with_opts(Some(isa));
+        let via_scope = with_isa(isa, || session_with_opts(None));
+        assert_eq!(
+            via_option.as_slice(),
+            via_scope.as_slice(),
+            "[{isa}] solver.isa and with_isa disagree"
+        );
+        // Cross-tier: tolerance-equal to the scalar tier, and correct.
+        let scale = scalar.max_abs().max(1.0);
+        for i in 0..k {
+            for j in 0..m {
+                assert!(
+                    (via_option[(i, j)] - scalar[(i, j)]).abs() < 1e-7 * scale,
+                    "[{isa}] vs scalar tier at ({i},{j})"
+                );
+            }
+        }
+        let res = dngd::solver::residual_norm(&s, via_option.row(0), vs.row(0), 1e-2);
+        let rscale = s.fro_norm().powi(2) * dngd::linalg::mat::norm2(via_option.row(0))
+            + dngd::linalg::mat::norm2(vs.row(0));
+        assert!(res < 1e-9 * rscale.max(1.0), "[{isa}] residual {res}");
+    }
+}

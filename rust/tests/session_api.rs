@@ -19,6 +19,12 @@
 //!      t — the full `begin → redamp → solve_many` pipeline (Gram,
 //!      lookahead Cholesky, panel GEMMs, threaded TRSM) is
 //!      deterministic, so `threads` is a pure throughput knob.
+//!  S8. (PR 4) Steady-state `redamp + solve` on a warmed chol/rvb
+//!      session performs **zero** pack-buffer allocations — the
+//!      thread-local packing arenas are grown monotonically and reused
+//!      — pinned by the arena-allocation counter; the new TRSM/Cholesky
+//!      invocation counters account for exactly the expected kernel
+//!      front-end calls.
 
 use dngd::coordinator::ShardedCholSolver;
 use dngd::data::rng::Rng;
@@ -245,6 +251,58 @@ fn s7_registry_threaded_session_bit_identical_round_trip() {
     let scale = s.fro_norm().powi(2) * dngd::linalg::mat::norm2(reference.row(0))
         + dngd::linalg::mat::norm2(vs.row(0));
     assert!(res < 1e-9 * scale.max(1.0), "residual {res}");
+}
+
+#[test]
+fn s8_steady_state_redamp_solve_is_pack_allocation_free() {
+    // Serial sessions (threads = 1): every kernel — Gram SYRK, blocked
+    // Cholesky, TRSM, panel GEMMs — runs on this thread, so the
+    // thread-local arena/invocation counters capture all of it and
+    // concurrently running tests cannot pollute the deltas.
+    let mut rng = Rng::seed_from(7008);
+    // n > NB = 64 so the blocked Cholesky, its panel TRSM and the
+    // trailing-downdate dgemm all engage (a λ-resweep is NOT
+    // kernel-silent at this size, unlike s3's n = 48).
+    let (n, m, k) = (160usize, 384usize, 6usize);
+    for &kind in &[SolverKind::Chol, SolverKind::Rvb] {
+        let s = Mat::randn(n, m, &mut rng);
+        let vs = rhs_block(kind, &s, k, &mut rng);
+        let solver = make_solver(kind);
+
+        // Warm-up: factor + solve_many at two λs grows every arena slot
+        // (pack A/B, Cholesky strip + gathers, TRSM panels) to its
+        // steady-state size for these shapes.
+        let mut fact = solver.factor(&s, 1e-2).unwrap();
+        fact.solve_many(&vs).unwrap();
+        fact.redamp(1e-3).unwrap();
+        fact.solve_many(&vs).unwrap();
+
+        // Steady state: one more redamp + blocked solve must perform
+        // ZERO pack-buffer allocations.
+        let arena0 = counters::arena_allocs();
+        let chol0 = counters::cholesky_calls();
+        let trsm0 = counters::trsm_calls();
+        fact.redamp(1e-2).unwrap();
+        let x = fact.solve_many(&vs).unwrap();
+        assert_eq!(
+            counters::arena_allocs() - arena0,
+            0,
+            "{kind:?}: steady-state redamp+solve_many must not grow the packing arenas"
+        );
+        // Invocation accounting: one refactor per redamp; the chol
+        // session's solve_many runs the blocked TRSM pair, while rvb's
+        // per-RHS identity path uses vector substitutions (no multi-RHS
+        // TRSM front-end).
+        assert_eq!(counters::cholesky_calls() - chol0, 1, "{kind:?}: one Cholesky per redamp");
+        let expected_trsm = if kind == SolverKind::Chol { 2 } else { 0 };
+        assert_eq!(counters::trsm_calls() - trsm0, expected_trsm, "{kind:?}: TRSM front-ends");
+
+        // And the steady-state result is still correct.
+        let res = residual_norm(&s, x.row(0), vs.row(0), 1e-2);
+        let scale = s.fro_norm().powi(2) * dngd::linalg::mat::norm2(x.row(0))
+            + dngd::linalg::mat::norm2(vs.row(0));
+        assert!(res < 1e-9 * scale.max(1.0), "{kind:?}: residual {res}");
+    }
 }
 
 #[test]
