@@ -1,0 +1,28 @@
+//! PR-5 streaming (sliding-window) bench (EXPERIMENTS.md §Streaming):
+//! per-step cost of rotating k of the window's n score rows through a
+//! chol owned-window session — `update_rows` (Gram patch + O(kn²)
+//! factor rotation) + same-λ `redamp` + solve — against the cold
+//! factor path (fresh Gram SYRK + Cholesky + solve) every consumer
+//! paid before, with a reconstruct-the-window correctness gate pinning
+//! the rotated session to a cold factor at 1e-9.
+//!
+//! Emits the machine-readable `BENCH_PR5.json` trajectory file (path
+//! overridable via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks the
+//! shape for CI smoke runs). In full mode the harness *asserts* the
+//! PR-5 acceptance bar: rotating ≤10% of a 512-row window is ≥5×
+//! faster end-to-end than the cold path (quick mode skips it — tiny
+//! shapes under-amortize fixed overheads — but runs the correctness
+//! gate in every mode).
+//!
+//! ```text
+//! cargo bench --bench streaming
+//! ```
+
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("DNGD_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR5.json".to_string());
+    dngd::bench_tables::streaming_bench_report(quick, Some(Path::new(&json)), !quick)
+        .expect("write streaming bench json");
+}

@@ -25,6 +25,12 @@
 //!   as `BENCH_PR4.json` (also from `dngd bench --kernels`, which
 //!   reports the active tier). Full mode asserts the PR-4 acceptance
 //!   bar: best tier ≥ 2× scalar on 512³ DGEMM single-threaded.
+//! * [`streaming_bench`] — PR 5's sliding-window table: per-step cost
+//!   of rotating k window rows through the chol owned-window session
+//!   (Gram patch + O(kn²) factor rotation + solve) vs the cold factor
+//!   path, with a reconstruct-and-compare correctness gate, emitted as
+//!   `BENCH_PR5.json` (`dngd bench --streaming`). Full mode asserts
+//!   the PR-5 acceptance bar: ≥ 5× at ≤10% rotation, n = 512.
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -958,6 +964,206 @@ pub fn simd_bench_report(
                 best, gemm_best.speedup_vs_scalar
             );
         }
+    }
+    Ok(())
+}
+
+/// One row of the PR-5 streaming (sliding-window) benchmark.
+#[derive(Debug, Clone)]
+pub struct StreamingBenchRow {
+    pub n: usize,
+    pub m: usize,
+    /// Rows rotated per step (the window overlap is n − k).
+    pub k: usize,
+    /// Cold path per step: fresh factor (Gram SYRK + Cholesky) on the
+    /// rotated window + one solve.
+    pub cold_ms: f64,
+    /// Streaming update per step: `update_rows` (Gram patch + O(kn²)
+    /// factor rotation) + the same-λ `redamp` (a no-op on a rotated
+    /// session).
+    pub update_ms: f64,
+    /// One RHS against the rotated factor.
+    pub solve_ms: f64,
+    /// `cold_ms / (update_ms + solve_ms)` — the amortization factor.
+    pub speedup: f64,
+}
+
+/// The PR-5 streaming benchmark: per-step cost of rotating k of the
+/// window's n rows through a chol owned-window session (update + redamp
+/// + solve) versus the cold factor path (fresh Gram + Cholesky + solve)
+/// every consumer paid before. Full mode runs the acceptance shape
+/// (n = 512, k = n/16 ≈ 6% ≤ the 10% bar); `quick` shrinks for CI
+/// smoke. Fresh random rows rotate in from a cycling pool so the window
+/// never degenerates to repeated rows.
+pub fn streaming_bench(quick: bool) -> Vec<StreamingBenchRow> {
+    let (n, m) = if quick { (96usize, 1024usize) } else { (512, 8192) };
+    let k = n / 16;
+    let lambda = 1e-3;
+    let mut rng = Rng::seed_from(57);
+    let s = Mat::randn(n, m, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    // Rotation pool: 32 distinct k-row batches; the window holds n/k
+    // batches at a time, so cycling keeps it full-rank.
+    let pool = Mat::randn(32 * k, m, &mut rng);
+    let removed: Vec<usize> = (0..k).collect();
+    let solver = CholSolver::default();
+
+    // Cold path: what a per-step consumer pays without streaming —
+    // factor the (already-rotated) window from scratch + one solve.
+    let rotated = {
+        let mut w = Mat::zeros(n, m);
+        for i in 0..n - k {
+            w.row_mut(i).copy_from_slice(s.row(i + k));
+        }
+        for j in 0..k {
+            w.row_mut(n - k + j).copy_from_slice(pool.row(j));
+        }
+        w
+    };
+    let cold = bench("stream_cold", 3, 0.5, || {
+        let mut fact = solver.factor(&rotated, lambda).expect("cold factor");
+        std::hint::black_box(fact.solve(&v).expect("cold solve"));
+    });
+
+    // Warm path: one persistent owned-window session, rotated in place.
+    let mut fact = solver
+        .begin_window(s.clone())
+        .expect("chol has an owned-window session");
+    fact.redamp(lambda).expect("redamp");
+    let mut batch = 0usize;
+    let next_added = |batch: &mut usize| -> Mat {
+        let b = *batch % 32;
+        *batch += 1;
+        pool.slice_rows(b * k, (b + 1) * k)
+    };
+    let warm = bench("stream_update", 3, 0.5, || {
+        let added = next_added(&mut batch);
+        fact.update_rows(&removed, &added).expect("update_rows");
+        fact.redamp(lambda).expect("redamp");
+        std::hint::black_box(fact.solve(&v).expect("warm solve"));
+    });
+    let solve_only = bench("stream_solve", 3, 0.2, || {
+        std::hint::black_box(fact.solve(&v).expect("warm solve"));
+    });
+
+    // Correctness gate: reconstruct the session's window from the
+    // rotation history (it is deterministic: `batch` rotations, each
+    // dropping the k oldest rows and appending pool batch i % 32) and
+    // pin the rotated session against a cold factor of that window to
+    // the PR-5 acceptance tolerance of 1e-9 — measured, not assumed.
+    {
+        let mut rows: Vec<(bool, usize)> = (0..n).map(|i| (false, i)).collect();
+        for i in 0..batch {
+            rows.drain(..k);
+            let b = i % 32;
+            rows.extend((b * k..(b + 1) * k).map(|r| (true, r)));
+        }
+        let mut expected = Mat::zeros(n, m);
+        for (i, &(from_pool, idx)) in rows.iter().enumerate() {
+            let src = if from_pool { pool.row(idx) } else { s.row(idx) };
+            expected.row_mut(i).copy_from_slice(src);
+        }
+        let warm_x = fact.solve(&v).expect("warm solve");
+        let cold_x = solver.solve(&expected, &v, lambda).expect("cold check");
+        let scale = crate::linalg::mat::norm2(&cold_x).max(1.0);
+        for (a, b) in warm_x.iter().zip(&cold_x) {
+            assert!(
+                (a - b).abs() < 1e-9 * scale,
+                "rotated session diverged from the cold factor: {a} vs {b}"
+            );
+        }
+    }
+
+    let cold_ms = cold.median_ms();
+    let warm_ms = warm.median_ms();
+    let solve_ms = solve_only.median_ms();
+    let update_ms = (warm_ms - solve_ms).max(0.0);
+    vec![StreamingBenchRow {
+        n,
+        m,
+        k,
+        cold_ms,
+        update_ms,
+        solve_ms,
+        speedup: cold_ms / warm_ms.max(1e-9),
+    }]
+}
+
+/// Render streaming-bench rows as the `BENCH_PR5.json` payload
+/// (hand-rolled JSON — the build is offline, no serde).
+pub fn streaming_bench_json(rows: &[StreamingBenchRow], quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 5,\n");
+    out.push_str("  \"bench\": \"streaming\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(
+        "  \"unit\": {\"*_ms\": \"milliseconds\", \"speedup\": \"cold / (update + solve)\"},\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"n\": {}, \"m\": {}, \"k\": {}, \"cold_ms\": {:.3}, \
+                 \"update_ms\": {:.3}, \"solve_ms\": {:.3}, \"speedup\": {:.2}}}",
+                r.n, r.m, r.k, r.cold_ms, r.update_ms, r.solve_ms, r.speedup
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the streaming benchmark, print the table, optionally write
+/// `BENCH_PR5.json`. `strict` enforces the PR-5 acceptance bar —
+/// rotating ≤10% of a 512-row window end-to-end (update + redamp +
+/// solve) ≥ 5× faster than the cold factor path — enabled by the
+/// full-mode `cargo bench --bench streaming` harness (quick mode skips
+/// it: tiny shapes under-amortize the fixed per-call overheads).
+pub fn streaming_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    let rows = streaming_bench(quick);
+    println!(
+        "{:>6} | {:>6} | {:>4} | {:>10} | {:>10} | {:>10} | {:>7}",
+        "n", "m", "k", "cold", "update", "solve", "speedup"
+    );
+    for r in &rows {
+        println!(
+            "{:>6} | {:>6} | {:>4} | {:>8.2}ms | {:>8.2}ms | {:>8.2}ms | {:>6.2}×",
+            r.n, r.m, r.k, r.cold_ms, r.update_ms, r.solve_ms, r.speedup
+        );
+    }
+    println!(
+        "\ncold = fresh Gram+Cholesky+solve per step; update = update_rows (Gram patch + \
+         O(kn²) factor rotation) + same-λ redamp. Model ideal: flops / flops_streaming = {:.1}×.",
+        rows.first()
+            .map(|r| {
+                crate::solver::flops(SolverKind::Chol, r.n, r.m)
+                    / crate::solver::flops_streaming(SolverKind::Chol, r.n, r.m, r.k)
+            })
+            .unwrap_or(0.0)
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, streaming_bench_json(&rows, quick))?;
+        println!("streaming bench table written to {}", path.display());
+    }
+    if strict {
+        for r in &rows {
+            assert!(
+                r.speedup >= 5.0,
+                "PR-5 acceptance: rotating {} of {} window rows must be ≥5× faster than the \
+                 cold factor path, got {:.2}×",
+                r.k,
+                r.n,
+                r.speedup
+            );
+        }
+        println!("acceptance: streaming ≥ 5× cold at ≤10% rotation ✓");
     }
     Ok(())
 }

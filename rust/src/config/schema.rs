@@ -26,10 +26,21 @@ pub struct SolverConfig {
     pub cg_tol: f64,
     /// CG iteration cap.
     pub cg_max_iters: usize,
+    /// Accept capped CG solves within 100×cg_tol true residual
+    /// (`solver.cg_loose_accept`; default false — PR-5 made the old
+    /// silent leniency an explicit opt-in).
+    pub cg_loose_accept: bool,
     /// Modeled device budget in GB for svda/naive (0 = 80 GB A100).
     pub budget_gb: f64,
     /// RVB `v = Sᵀf` reconstruction tolerance.
     pub rvb_tol: f64,
+    /// Sliding-window size for streaming NGD (`[solver] window = W`,
+    /// PR 5; 0 = classic per-batch Fisher). Must exceed
+    /// `train.batch_size` so successive batches overlap in the window.
+    pub window: usize,
+    /// Rotations between full streaming refactors (drift backstop;
+    /// 0 = never).
+    pub refresh_every: usize,
 }
 
 impl Default for SolverConfig {
@@ -46,8 +57,11 @@ impl Default for SolverConfig {
             isa: opts.isa,
             cg_tol: opts.cg_tol,
             cg_max_iters: opts.cg_max_iters,
+            cg_loose_accept: opts.cg_loose_accept,
             budget_gb: opts.budget_gb,
             rvb_tol: opts.rvb_tol,
+            window: opts.window,
+            refresh_every: opts.refresh_every,
         }
     }
 }
@@ -61,8 +75,11 @@ impl SolverConfig {
             isa: self.isa,
             cg_tol: self.cg_tol,
             cg_max_iters: self.cg_max_iters,
+            cg_loose_accept: self.cg_loose_accept,
             budget_gb: self.budget_gb,
             rvb_tol: self.rvb_tol,
+            window: self.window,
+            refresh_every: self.refresh_every,
         }
     }
 }
@@ -236,8 +253,11 @@ impl Config {
         })?;
         get_f64(doc, "solver.cg_tol", &mut cfg.solver.cg_tol)?;
         get_usize(doc, "solver.cg_max_iters", &mut cfg.solver.cg_max_iters)?;
+        get_bool(doc, "solver.cg_loose_accept", &mut cfg.solver.cg_loose_accept)?;
         get_f64(doc, "solver.budget_gb", &mut cfg.solver.budget_gb)?;
         get_f64(doc, "solver.rvb_tol", &mut cfg.solver.rvb_tol)?;
+        get_usize(doc, "solver.window", &mut cfg.solver.window)?;
+        get_usize(doc, "solver.refresh_every", &mut cfg.solver.refresh_every)?;
 
         get_usize(doc, "model.dim", &mut cfg.model.dim)?;
         get_usize(doc, "model.heads", &mut cfg.model.heads)?;
@@ -286,6 +306,14 @@ impl Config {
         // Per-solver option ranges: one source of truth with the CLI
         // `--set solver.*` path.
         self.solver.options().validate()?;
+        if self.solver.window > 0 && self.solver.window <= self.train.batch_size {
+            return Err(format!(
+                "solver.window ({}) must exceed train.batch_size ({}): a window no larger than \
+                 one batch has no cross-step overlap to amortize — raise the window or disable \
+                 streaming (window = 0)",
+                self.solver.window, self.train.batch_size
+            ));
+        }
         if self.model.dim % self.model.heads != 0 {
             return Err(format!(
                 "model.heads {} must divide model.dim {}",
@@ -319,8 +347,11 @@ const KNOWN_KEYS: &[&str] = &[
     "solver.isa",
     "solver.cg_tol",
     "solver.cg_max_iters",
+    "solver.cg_loose_accept",
     "solver.budget_gb",
     "solver.rvb_tol",
+    "solver.window",
+    "solver.refresh_every",
     "model.dim",
     "model.heads",
     "model.layers",
@@ -482,7 +513,8 @@ variant = "real_part"
     #[test]
     fn per_solver_options_flow_through() {
         let cfg = Config::from_toml_str(
-            "[solver]\nkind = \"cg\"\ncg_tol = 1e-8\ncg_max_iters = 321\nbudget_gb = 40.0\n",
+            "[solver]\nkind = \"cg\"\ncg_tol = 1e-8\ncg_max_iters = 321\n\
+             cg_loose_accept = true\nbudget_gb = 40.0\n",
             &["solver.rvb_tol=1e-5".into()],
         )
         .unwrap();
@@ -490,11 +522,42 @@ variant = "real_part"
         let opts = cfg.solver.options();
         assert_eq!(opts.cg_tol, 1e-8);
         assert_eq!(opts.cg_max_iters, 321);
+        assert!(opts.cg_loose_accept, "cg_loose_accept must reach the options");
         assert_eq!(opts.budget_gb, 40.0);
         assert_eq!(opts.rvb_tol, 1e-5);
+        // …and default off (the strict PR-5 behaviour).
+        assert!(!Config::from_toml_str("", &[]).unwrap().solver.cg_loose_accept);
         // rvb is parseable as a config kind (the PR-2 bug fix).
         let cfg = Config::from_toml_str("[solver]\nkind = \"rvb\"\n", &[]).unwrap();
         assert_eq!(cfg.solver.kind, SolverKind::Rvb);
+    }
+
+    #[test]
+    fn streaming_window_keys_parse_and_cross_validate() {
+        let cfg = Config::from_toml_str(
+            "[solver]\nwindow = 256\nrefresh_every = 16\n\n[train]\nbatch_size = 64\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.window, 256);
+        assert_eq!(cfg.solver.refresh_every, 16);
+        assert_eq!(cfg.solver.options().window, 256);
+        // Window must exceed the batch (no overlap otherwise).
+        let err = Config::from_toml_str(
+            "[solver]\nwindow = 64\n\n[train]\nbatch_size = 64\n",
+            &[],
+        )
+        .unwrap_err();
+        assert!(err.contains("solver.window"), "{err}");
+        // window = 1 is rejected by the shared option validator.
+        assert!(Config::from_toml_str("[solver]\nwindow = 1\n", &[]).is_err());
+        // The --set path goes through the same keys.
+        let cfg = Config::from_toml_str("", &["solver.window=128".into()]).unwrap();
+        assert_eq!(cfg.solver.window, 128);
+        // Defaults: streaming off, backstop at 64 rotations.
+        let cfg = Config::from_toml_str("", &[]).unwrap();
+        assert_eq!(cfg.solver.window, 0);
+        assert_eq!(cfg.solver.refresh_every, 64);
     }
 
     #[test]

@@ -22,6 +22,15 @@ pub enum Job {
     Matvec { v_k: Vec<f64>, reply: Sender<(usize, Vec<f64>)> },
     /// Compute the shard solution `x_k = (v_k − S_kᵀ z)/λ`.
     Apply { z: Arc<Vec<f64>>, v_k: Vec<f64>, lambda: f64, reply: Sender<(usize, Vec<f64>)> },
+    /// Batched [`Job::Matvec`] (PR-5 bugfix): a k-RHS column panel
+    /// `V_k` (k × shard_width, rows are right-hand-side slices) in one
+    /// message — the partial `U_k = S_k·V_kᵀ` (n × k) comes back as one
+    /// panel GEMM instead of k round-trips.
+    MatvecMany { v_k: Mat, reply: Sender<(usize, Mat)> },
+    /// Batched [`Job::Apply`]: the shard solution block
+    /// `X_k = (V_k − (S_kᵀZ)ᵀ)/λ` (k × shard_width) for all k
+    /// right-hand sides in one message.
+    ApplyMany { z: Arc<Mat>, v_k: Mat, lambda: f64, reply: Sender<(usize, Mat)> },
     /// Fault injection: sleep before processing the next job (straggler).
     Stall(Duration),
     Shutdown,
@@ -142,6 +151,32 @@ fn worker_loop(id: usize, rx: Receiver<Job>, kernel: KernelConfig) -> u64 {
                 let inv = 1.0 / lambda;
                 let x_k: Vec<f64> =
                     v_k.iter().zip(&t).map(|(vj, tj)| inv * (vj - tj)).collect();
+                let _ = reply.send((id, x_k));
+            }
+            Job::MatvecMany { v_k, reply } => {
+                let Some(s) = shard.as_ref() else { continue };
+                // U_k = S_k·V_kᵀ (n × k): one panel GEMM on the worker's
+                // kernel configuration.
+                let mut u = Mat::zeros(s.rows(), v_k.rows());
+                crate::linalg::gemm::gemm_nt_threaded(1.0, s, &v_k, 0.0, &mut u, kernel.threads);
+                let _ = reply.send((id, u));
+            }
+            Job::ApplyMany { z, v_k, lambda, reply } => {
+                let Some(s) = shard.as_ref() else { continue };
+                // T = S_kᵀ·Z (shard_width × k), then the Algorithm-1
+                // line-4 combination per right-hand side.
+                let (k, w) = v_k.shape();
+                let mut t = Mat::zeros(w, k);
+                crate::linalg::gemm::gemm_tn_threaded(1.0, s, &z, 0.0, &mut t, kernel.threads);
+                let inv = 1.0 / lambda;
+                let mut x_k = Mat::zeros(k, w);
+                for r in 0..k {
+                    let vrow = v_k.row(r);
+                    let xrow = x_k.row_mut(r);
+                    for j in 0..w {
+                        xrow[j] = inv * (vrow[j] - t[(j, r)]);
+                    }
+                }
                 let _ = reply.send((id, x_k));
             }
             Job::Stall(d) => std::thread::sleep(d),

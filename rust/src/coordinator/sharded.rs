@@ -9,7 +9,10 @@
 use super::pool::{Job, PoolError, WorkerPool};
 use super::reduce::{reduce_vecs, tree_reduce_mats};
 use super::shard::ShardPlan;
-use crate::linalg::{solve_lower, solve_lower_transpose, KernelConfig, Mat};
+use crate::linalg::{
+    solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
+    solve_lower_transpose_multi_threaded, KernelConfig, Mat,
+};
 use crate::solver::session::{check_lambda, refactor_damped, undamped_err};
 use crate::solver::{DampedSolver, Factorization, SolveError};
 use std::sync::mpsc::channel;
@@ -142,6 +145,85 @@ impl ShardedCholSolver {
         Ok(())
     }
 
+    /// Batched phases 2–4 for a k-RHS block (PR-5 bugfix): the default
+    /// `solve_many` inherited by [`ShardedFactor`] paid k full worker
+    /// round-trips (k× Matvec/Apply message latency); this sends each
+    /// worker its whole column panel once per phase —
+    /// [`Job::MatvecMany`] / [`Job::ApplyMany`] — so a k-RHS solve is
+    /// one matvec round-trip, one leader-local blocked TRSM pair, and
+    /// one apply round-trip, mirroring the serial session's panel path.
+    fn apply_phases_many(
+        &self,
+        plan: &ShardPlan,
+        l: &Mat,
+        vs: &Mat,
+        lambda: f64,
+    ) -> Result<Mat, SolveError> {
+        let w_count = plan.workers();
+        let (k, m) = vs.shape();
+
+        // Phase 2 (batched): U = Σ_k S_k·V_kᵀ, reduced on the leader.
+        let (utx, urx) = channel();
+        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
+            self.pool
+                .send(w, Job::MatvecMany { v_k: vs.slice_cols(c0, c1), reply: utx.clone() })
+                .map_err(Self::pool_err)?;
+        }
+        drop(utx);
+        let mut uparts = Vec::with_capacity(w_count);
+        for _ in 0..w_count {
+            let (_, part) = urx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
+            uparts.push(part);
+        }
+        let u = tree_reduce_mats(uparts, 4);
+
+        // Phase 3: leader-local blocked TRSM pair on the kernel pool.
+        let threads = self.kernel.threads;
+        let z = Arc::new(self.kernel.run(|| {
+            let y = solve_lower_multi_threaded(l, &u, threads);
+            solve_lower_transpose_multi_threaded(l, &y, threads)
+        }));
+
+        // Phase 4 (batched): per-shard apply, stitched in shard order.
+        let (xtx, xrx) = channel();
+        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
+            self.pool
+                .send(
+                    w,
+                    Job::ApplyMany {
+                        z: z.clone(),
+                        v_k: vs.slice_cols(c0, c1),
+                        lambda,
+                        reply: xtx.clone(),
+                    },
+                )
+                .map_err(Self::pool_err)?;
+        }
+        drop(xtx);
+        let mut pieces: Vec<Option<Mat>> = vec![None; w_count];
+        for _ in 0..w_count {
+            let (wid, x_k) = xrx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
+            pieces[wid] = Some(x_k);
+        }
+        let mut x = Mat::zeros(k, m);
+        for (w, piece) in pieces.into_iter().enumerate() {
+            let piece = piece.ok_or_else(|| Self::pool_err(PoolError::MissingShard(w)))?;
+            let (c0, c1) = plan.ranges[w];
+            assert_eq!(piece.shape(), (k, c1 - c0));
+            for r in 0..k {
+                x.row_mut(r)[c0..c1].copy_from_slice(piece.row(r));
+            }
+        }
+        Ok(x)
+    }
+
+    /// Drain the worker pool, returning per-worker processed-job counts
+    /// (tests use this to pin message-count properties, e.g. that a
+    /// k-RHS `solve_many` costs one round-trip, not k).
+    pub fn shutdown(self) -> Vec<u64> {
+        self.pool.shutdown()
+    }
+
     /// Full distributed solve of `(SᵀS + λI) x = v` — one-shot shim over
     /// the [`ShardedFactor`] session.
     pub fn solve_distributed(
@@ -220,6 +302,19 @@ impl Factorization for ShardedFactor<'_> {
             return Err(undamped_err());
         };
         self.solver.apply_phases(plan, l, v, self.lambda, x)
+    }
+
+    /// Batched k-RHS distributed solve: one `MatvecMany` round-trip,
+    /// one leader-local blocked TRSM pair, one `ApplyMany` round-trip —
+    /// instead of the k× message latency the inherited default paid
+    /// (the PR-5 sharded bugfix; message accounting pinned in
+    /// `coordinator_integration.rs`).
+    fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
+        assert_eq!(vs.cols(), self.s.cols(), "each row of vs must be m-dimensional");
+        let (Some(plan), Some(l)) = (self.plan.as_ref(), self.l.as_ref()) else {
+            return Err(undamped_err());
+        };
+        self.solver.apply_phases_many(plan, l, vs, self.lambda)
     }
 }
 

@@ -1,0 +1,456 @@
+//! O(n²) Cholesky factor updates — the streaming/sliding-window engine
+//! behind the PR-5 row-rotation subsystem.
+//!
+//! The paper's separability argument (the Gram `W = SSᵀ + λĨ` is
+//! RHS-independent, and `SSᵀ` is λ-independent) extends across *steps*
+//! of an online consumer: when successive minibatches overlap in all but
+//! k of their n sample rows, the new Gram differs from the old one by k
+//! symmetric row/column deletions and k bordered appends. Both have
+//! classical O(n²) factor updates, so a k-row rotation costs O(kn²)
+//! against the O(n³) of a fresh `Chol(W)` — and, crucially, **zero**
+//! O(n²m) Gram SYRKs (the cached Gram is patched with O(knm) panel
+//! products, not re-formed).
+//!
+//! Primitives:
+//!
+//! * [`UpdatableChol::delete_row`] — symmetric row/column **delete**:
+//!   removing row r of `L` leaves an (n−1)×n matrix `M` with
+//!   `MMᵀ = W∖{r}` (row products are unchanged); a right-applied sweep
+//!   of Givens rotations on column pairs (j, j+1), j = r…n−2,
+//!   annihilates the one stray super-diagonal per row and restores
+//!   lower-triangularity. Orthogonal rotations preserve `MMᵀ`, so the
+//!   result is exactly `Chol(W∖{r})` — no breakdown mode exists.
+//! * [`UpdatableChol::append_row`] — symmetric **append** by bordering:
+//!   solve `L y = w` (forward substitution, O(n²)), set
+//!   `δ = √(d − ‖y‖²)`, and the factor of the bordered matrix is
+//!   `[[L, 0], [yᵀ, δ]]`. The pivot `δ²` can lose positivity (the
+//!   appended sample makes the damped Gram numerically singular);
+//!   that breakdown surfaces as [`CholeskyError`] so consumers reuse
+//!   the same λ-backoff / refactor rescue as a cold factorization.
+//! * [`chol_update_rank1`] / [`chol_downdate_rank1`] — the classical
+//!   rank-one Givens update and its **hyperbolic** downdate
+//!   counterpart for `W ± xxᵀ` perturbations that keep the sample set
+//!   fixed. The hyperbolic rotations are not orthogonal, so the
+//!   downdate has the same breakdown mode as the bordered append
+//!   (`L[k][k]² − x[k]² ≤ 0`), surfaced as [`CholeskyError`].
+//!
+//! [`UpdatableChol`] holds the factor in a fixed-leading-dimension
+//! buffer (`ld = capacity`), so deletes and appends move O(n²) data at
+//! worst and **zero** reallocation happens in steady state (a sliding
+//! window rotates k rows out and k rows in, returning to the same
+//! order). The session layer (`solver/chol.rs`, `solver/rvb.rs`) drives
+//! these primitives from `Factorization::update_rows` and keeps a full
+//! refactor of the patched Gram as the drift/breakdown backstop.
+
+use super::cholesky::CholeskyError;
+use super::mat::Mat;
+
+/// A Cholesky factor held in a fixed-leading-dimension buffer so its
+/// order can shrink (row/column delete) and grow (bordered append)
+/// without repacking. Row i lives at `data[i*ld .. i*ld + n]`; entries
+/// above the diagonal (and beyond the current order) are kept zero.
+pub struct UpdatableChol {
+    data: Vec<f64>,
+    /// Current order (the factor is n×n).
+    n: usize,
+    /// Fixed leading dimension (= allocated max order).
+    ld: usize,
+}
+
+impl UpdatableChol {
+    /// Wrap an existing lower-triangular factor, reserving capacity for
+    /// orders up to `cap` (so a rotation that appends before deleting —
+    /// or a growing fill-up window — never reallocates mid-update).
+    pub fn from_factor(l: &Mat, cap: usize) -> UpdatableChol {
+        let n = l.rows();
+        assert_eq!(l.cols(), n, "factor must be square");
+        let ld = cap.max(n).max(1);
+        let mut data = vec![0.0; ld * ld];
+        for i in 0..n {
+            data[i * ld..i * ld + i + 1].copy_from_slice(&l.row(i)[..i + 1]);
+        }
+        UpdatableChol { data, n, ld }
+    }
+
+    /// Current order of the factor.
+    pub fn order(&self) -> usize {
+        self.n
+    }
+
+    /// Capacity (maximum order without reallocation).
+    pub fn capacity(&self) -> usize {
+        self.ld
+    }
+
+    /// Grow the capacity to at least `cap`, repacking once. No-op when
+    /// the current capacity suffices (the steady-state case).
+    pub fn ensure_capacity(&mut self, cap: usize) {
+        if cap <= self.ld {
+            return;
+        }
+        let new_ld = cap;
+        let mut data = vec![0.0; new_ld * new_ld];
+        for i in 0..self.n {
+            data[i * new_ld..i * new_ld + i + 1]
+                .copy_from_slice(&self.data[i * self.ld..i * self.ld + i + 1]);
+        }
+        self.data = data;
+        self.ld = new_ld;
+    }
+
+    /// Materialize the current factor as a dense lower-triangular
+    /// [`Mat`] (strict upper zeroed), reusing `out`'s allocation when
+    /// the shape already matches.
+    pub fn write_to(&self, out: &mut Mat) {
+        if out.shape() != (self.n, self.n) {
+            *out = Mat::zeros(self.n, self.n);
+        }
+        for i in 0..self.n {
+            let row = out.row_mut(i);
+            row[..i + 1].copy_from_slice(&self.data[i * self.ld..i * self.ld + i + 1]);
+            row[i + 1..].fill(0.0);
+        }
+    }
+
+    /// Delete row/column `r` of the underlying symmetric matrix:
+    /// after this call the factor has order n−1 and satisfies
+    /// `L'L'ᵀ = W` with row and column `r` removed. O((n−r)·n) for the
+    /// row shift plus O((n−r)²) for the Givens sweep; cannot break down
+    /// (the rotations are orthogonal).
+    pub fn delete_row(&mut self, r: usize) {
+        let (n, ld) = (self.n, self.ld);
+        assert!(r < n, "delete_row: row {r} out of range (order {n})");
+        // 1. Shift rows r+1..n up by one. Row i+1 of a lower-triangular
+        //    factor has nonzeros through column i+1, so the shifted
+        //    block is lower-Hessenberg: one stray super-diagonal entry
+        //    per shifted row.
+        for i in r..n - 1 {
+            let (src0, dst0) = ((i + 1) * ld, i * ld);
+            self.data.copy_within(src0..src0 + i + 2, dst0);
+            // Keep the zero invariant above the Hessenberg band.
+            self.data[dst0 + i + 2..dst0 + n].fill(0.0);
+        }
+        let n = n - 1;
+        self.data[n * ld..n * ld + n + 1].fill(0.0);
+        // 2. Right-applied Givens sweep: for each j, rotate columns
+        //    (j, j+1) so the stray entry at (j, j+1) vanishes; the
+        //    rotation touches only rows ≥ j (rows above are already
+        //    triangular with zeros in both columns).
+        for j in r..n {
+            let a = self.data[j * ld + j];
+            let b = self.data[j * ld + j + 1];
+            if b == 0.0 {
+                continue;
+            }
+            let rho = a.hypot(b);
+            let (c, s) = (a / rho, b / rho);
+            for i in j..n {
+                let x = self.data[i * ld + j];
+                let y = self.data[i * ld + j + 1];
+                self.data[i * ld + j] = c * x + s * y;
+                self.data[i * ld + j + 1] = c * y - s * x;
+            }
+            // Exact zero at the annihilated position (the arithmetic
+            // above leaves rounding dust there).
+            self.data[j * ld + j + 1] = 0.0;
+            // The diagonal came out as ±ρ with ρ > 0; flip the column
+            // sign if needed so the factor keeps a positive diagonal
+            // (LLᵀ is invariant under column sign flips).
+            if self.data[j * ld + j] < 0.0 {
+                for i in j..n {
+                    self.data[i * ld + j] = -self.data[i * ld + j];
+                }
+            }
+        }
+        self.n = n;
+    }
+
+    /// Append a row/column to the underlying symmetric matrix by
+    /// bordering: `col` is the new off-diagonal column (length n, the
+    /// inner products of the new sample against the current window) and
+    /// `diag` its diagonal entry (‖new sample‖² + λ). O(n²).
+    ///
+    /// `rel_floor` rejects pivots that survive in exact arithmetic but
+    /// are numerically meaningless: breakdown is declared when
+    /// `δ² ≤ rel_floor·|diag|` (pass 0.0 for the exact-arithmetic
+    /// criterion δ² ≤ 0). On breakdown the factor is left unchanged and
+    /// the caller falls back to a full refactor of the patched Gram.
+    pub fn append_row(
+        &mut self,
+        col: &[f64],
+        diag: f64,
+        rel_floor: f64,
+    ) -> Result<(), CholeskyError> {
+        let (n, ld) = (self.n, self.ld);
+        assert_eq!(col.len(), n, "append_row: column must match the current order");
+        assert!(n < ld, "append_row: capacity exhausted (ensure_capacity first)");
+        // y = L⁻¹ col, written straight into the new row's slot.
+        let (head, tail) = self.data.split_at_mut(n * ld);
+        let y = &mut tail[..n + 1];
+        let mut ynorm2 = 0.0;
+        for i in 0..n {
+            let li = &head[i * ld..i * ld + i];
+            let mut acc = col[i];
+            for (j, &lij) in li.iter().enumerate() {
+                acc -= lij * y[j];
+            }
+            let yi = acc / head[i * ld + i];
+            y[i] = yi;
+            ynorm2 += yi * yi;
+        }
+        let delta2 = diag - ynorm2;
+        if !delta2.is_finite() || delta2 <= rel_floor * diag.abs() {
+            // Leave the factor untouched (the new row slot holds only
+            // scratch below the current order).
+            y.fill(0.0);
+            return Err(CholeskyError { pivot: n, value: delta2 });
+        }
+        y[n] = delta2.sqrt();
+        tail[n + 1..ld].fill(0.0);
+        self.n = n + 1;
+        Ok(())
+    }
+}
+
+/// Rank-one update `W ← W + xxᵀ` applied to the factor in place via a
+/// sweep of Givens rotations — O(n²), never breaks down (the updated
+/// matrix is SPD whenever W was). `x` is consumed as workspace.
+pub fn chol_update_rank1(l: &mut Mat, x: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(l.cols(), n, "factor must be square");
+    assert_eq!(x.len(), n, "x must match the factor order");
+    for k in 0..n {
+        let lkk = l[(k, k)];
+        let xk = x[k];
+        let r = lkk.hypot(xk);
+        let c = r / lkk;
+        let s = xk / lkk;
+        l[(k, k)] = r;
+        for i in k + 1..n {
+            let lik = (l[(i, k)] + s * x[i]) / c;
+            l[(i, k)] = lik;
+            x[i] = c * x[i] - s * lik;
+        }
+    }
+}
+
+/// Rank-one **hyperbolic downdate** `W ← W − xxᵀ`: the same sweep with
+/// hyperbolic instead of circular rotations — O(n²), and it breaks down
+/// (`L[k][k]² − x[k]² ≤ 0`) exactly when the downdated matrix stops
+/// being positive definite. On breakdown the factor is left partially
+/// rotated and must be discarded (callers refactor from the patched
+/// Gram — the same rescue as a bordered-append breakdown). `x` is
+/// consumed as workspace.
+pub fn chol_downdate_rank1(l: &mut Mat, x: &mut [f64]) -> Result<(), CholeskyError> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n, "factor must be square");
+    assert_eq!(x.len(), n, "x must match the factor order");
+    for k in 0..n {
+        let lkk = l[(k, k)];
+        let xk = x[k];
+        let r2 = lkk * lkk - xk * xk;
+        if r2 <= 0.0 || !r2.is_finite() {
+            return Err(CholeskyError { pivot: k, value: r2 });
+        }
+        let r = r2.sqrt();
+        let c = r / lkk;
+        let s = xk / lkk;
+        l[(k, k)] = r;
+        for i in k + 1..n {
+            let lik = (l[(i, k)] - s * x[i]) / c;
+            l[(i, k)] = lik;
+            x[i] = c * x[i] - s * lik;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::linalg::cholesky::cholesky;
+    use crate::linalg::gemm::{gemm_nt, syrk};
+
+    fn spd(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::randn(n, n + 4, rng);
+        syrk(&a, 1.0)
+    }
+
+    fn assert_factor_of(l: &UpdatableChol, w: &Mat, tol: f64, what: &str) {
+        let n = l.order();
+        assert_eq!(w.shape(), (n, n), "{what}: order mismatch");
+        let mut lm = Mat::zeros(0, 0);
+        l.write_to(&mut lm);
+        let mut recon = Mat::zeros(n, n);
+        gemm_nt(1.0, &lm, &lm, 0.0, &mut recon);
+        let scale = w.max_abs().max(1.0);
+        for i in 0..n {
+            assert!(lm[(i, i)] > 0.0, "{what}: non-positive diagonal at {i}");
+            for j in 0..n {
+                assert!(
+                    (recon[(i, j)] - w[(i, j)]).abs() < tol * scale,
+                    "{what}: LLᵀ mismatch at ({i},{j}): {} vs {}",
+                    recon[(i, j)],
+                    w[(i, j)]
+                );
+            }
+        }
+    }
+
+    /// W with row/col `r` removed.
+    fn sym_delete(w: &Mat, r: usize) -> Mat {
+        let n = w.rows();
+        Mat::from_fn(n - 1, n - 1, |i, j| {
+            let oi = if i < r { i } else { i + 1 };
+            let oj = if j < r { j } else { j + 1 };
+            w[(oi, oj)]
+        })
+    }
+
+    #[test]
+    fn delete_every_row_position_matches_fresh_factor() {
+        let mut rng = Rng::seed_from(50);
+        for &n in &[2usize, 5, 17, 40] {
+            let w = spd(n, &mut rng);
+            let l0 = cholesky(&w).unwrap();
+            for r in 0..n {
+                let mut u = UpdatableChol::from_factor(&l0, n);
+                u.delete_row(r);
+                assert_eq!(u.order(), n - 1);
+                assert_factor_of(&u, &sym_delete(&w, r), 1e-11, &format!("delete r={r} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn append_matches_fresh_factor() {
+        let mut rng = Rng::seed_from(51);
+        let n = 20;
+        let w = spd(n + 1, &mut rng);
+        // Factor the leading n×n block, then append the last row/col.
+        let wl = Mat::from_fn(n, n, |i, j| w[(i, j)]);
+        let l0 = cholesky(&wl).unwrap();
+        let mut u = UpdatableChol::from_factor(&l0, n + 1);
+        let col: Vec<f64> = (0..n).map(|i| w[(n, i)]).collect();
+        u.append_row(&col, w[(n, n)], 0.0).unwrap();
+        assert_eq!(u.order(), n + 1);
+        assert_factor_of(&u, &w, 1e-11, "append");
+    }
+
+    #[test]
+    fn rotation_roundtrip_delete_then_append() {
+        // Delete a middle row, append a new one: the net rotation that
+        // the sliding-window session performs, checked against a cold
+        // factor of the rotated matrix.
+        let mut rng = Rng::seed_from(52);
+        let n = 30;
+        let s = Mat::randn(n + 1, n + 40, &mut rng);
+        let window = s.slice_rows(0, n);
+        let w = syrk(&window, 0.5);
+        let mut u = UpdatableChol::from_factor(&cholesky(&w).unwrap(), n);
+        let r = 11;
+        u.delete_row(r);
+        // Rotated window: rows of `window` minus r, plus the last row of s.
+        let kept: Vec<usize> = (0..n).filter(|&i| i != r).collect();
+        let mut rotated = Mat::zeros(n, n + 40);
+        for (i, &oi) in kept.iter().enumerate() {
+            rotated.row_mut(i).copy_from_slice(window.row(oi));
+        }
+        rotated.row_mut(n - 1).copy_from_slice(s.row(n));
+        let col: Vec<f64> = (0..n - 1)
+            .map(|i| crate::linalg::mat::dot(rotated.row(i), rotated.row(n - 1)))
+            .collect();
+        let d = crate::linalg::mat::dot(rotated.row(n - 1), rotated.row(n - 1)) + 0.5;
+        u.append_row(&col, d, 0.0).unwrap();
+        assert_factor_of(&u, &syrk(&rotated, 0.5), 1e-10, "rotation");
+    }
+
+    #[test]
+    fn append_breakdown_leaves_factor_usable() {
+        // A column incompatible with positive-definiteness: y = L⁻¹c has
+        // ‖y‖² > d, so the bordered pivot is negative.
+        let l0 = Mat::eye(2);
+        let mut u = UpdatableChol::from_factor(&l0, 3);
+        let err = u.append_row(&[10.0, 0.0], 1.0, 0.0).unwrap_err();
+        assert_eq!(err.pivot, 2);
+        assert!(err.value <= 0.0);
+        // The factor is untouched and still accepts a good append.
+        assert_eq!(u.order(), 2);
+        u.append_row(&[0.5, 0.5], 4.0, 0.0).unwrap();
+        assert_eq!(u.order(), 3);
+    }
+
+    #[test]
+    fn append_relative_floor_rejects_tiny_pivots() {
+        let l0 = Mat::eye(2);
+        let mut u = UpdatableChol::from_factor(&l0, 3);
+        // δ² = 4 − (1+1) = 2, ratio δ²/d = 0.5: fine at floor 0.1,
+        // breakdown at floor 0.6.
+        assert!(u.append_row(&[1.0, 1.0], 4.0, 0.6).is_err());
+        assert_eq!(u.order(), 2);
+        u.append_row(&[1.0, 1.0], 4.0, 0.1).unwrap();
+        assert_eq!(u.order(), 3);
+    }
+
+    #[test]
+    fn capacity_growth_repacks_and_steady_state_rotation_is_allocation_free() {
+        let mut rng = Rng::seed_from(53);
+        let n = 12;
+        let w = spd(n, &mut rng);
+        let mut u = UpdatableChol::from_factor(&cholesky(&w).unwrap(), n);
+        assert_eq!(u.capacity(), n);
+        u.ensure_capacity(n + 3);
+        assert_eq!(u.capacity(), n + 3);
+        assert_factor_of(&u, &w, 1e-12, "repack");
+        // A steady-state rotation (delete + append at constant order)
+        // needs no further capacity.
+        u.ensure_capacity(n + 3);
+        assert_eq!(u.capacity(), n + 3);
+    }
+
+    #[test]
+    fn rank1_update_then_downdate_roundtrips() {
+        let mut rng = Rng::seed_from(54);
+        let n = 16;
+        let w = spd(n, &mut rng);
+        let l0 = cholesky(&w).unwrap();
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // Update W + xxᵀ matches a fresh factor…
+        let mut l = l0.clone();
+        let mut xbuf = x.clone();
+        chol_update_rank1(&mut l, &mut xbuf);
+        let mut wx = w.clone();
+        for i in 0..n {
+            for j in 0..n {
+                wx[(i, j)] += x[i] * x[j];
+            }
+        }
+        let fresh = cholesky(&wx).unwrap();
+        for i in 0..n {
+            for j in 0..=i {
+                assert!((l[(i, j)] - fresh[(i, j)]).abs() < 1e-9, "update ({i},{j})");
+            }
+        }
+        // …and the hyperbolic downdate undoes it.
+        let mut xbuf = x.clone();
+        chol_downdate_rank1(&mut l, &mut xbuf).unwrap();
+        for i in 0..n {
+            for j in 0..=i {
+                assert!((l[(i, j)] - l0[(i, j)]).abs() < 1e-8, "downdate ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn hyperbolic_downdate_breaks_down_when_not_pd() {
+        // W − xxᵀ with x too large is indefinite: the hyperbolic sweep
+        // must report the non-positive pivot instead of emitting NaNs.
+        let mut l = Mat::eye(3);
+        let mut x = vec![2.0, 0.0, 0.0];
+        let err = chol_downdate_rank1(&mut l, &mut x).unwrap_err();
+        assert_eq!(err.pivot, 0);
+        assert!(err.value <= 0.0);
+        assert!(err.to_string().contains("damping"));
+    }
+}

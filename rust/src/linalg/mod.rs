@@ -18,6 +18,10 @@
 //!   the GEMM/SYRK front-ends live in [`gemm`] on top of the engine.
 //! * [`cholesky`] — blocked right-looking Cholesky factorization
 //!   (the `potrf` the paper leans on), trailing update on the engine.
+//! * [`chol_update`] — O(n²) factor updates for the streaming
+//!   subsystem (PR 5): symmetric row/column delete (Givens restoration
+//!   of triangularity), bordered append, and the rank-one
+//!   circular/hyperbolic update pair.
 //! * [`trisolve`] — forward/backward substitution for vectors and blocked
 //!   multi-RHS `trsm` (panel updates on the engine), the `L⁻¹S` /
 //!   `L⁻ᵀ(·)` of Algorithm 1 line 3–4.
@@ -30,6 +34,7 @@
 //!   complex Cholesky and triangular solves for the SR variants (§3).
 
 pub mod arena;
+pub mod chol_update;
 pub mod cholesky;
 pub mod complex;
 pub mod eigh;
@@ -41,6 +46,7 @@ pub mod simd;
 pub mod svd;
 pub mod trisolve;
 
+pub use chol_update::{chol_downdate_rank1, chol_update_rank1, UpdatableChol};
 pub use cholesky::{
     cholesky, cholesky_in_place, cholesky_in_place_threaded, cholesky_threaded, CholeskyError,
 };

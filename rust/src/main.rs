@@ -116,7 +116,7 @@ USAGE:
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -354,8 +354,8 @@ fn cmd_vmc(args: &[String]) -> Result<(), String> {
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
-        "table1", "scaling", "cg", "kernels", "sessions", "threads", "scale", "json",
-        "json-simd", "quick",
+        "table1", "scaling", "cg", "kernels", "sessions", "threads", "streaming", "scale",
+        "json", "json-simd", "quick",
     ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
@@ -410,9 +410,22 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
             false,
         )
         .map_err(|e| e.to_string())?;
+    } else if a.has("streaming") {
+        // PR 5: sliding-window rotation vs cold factor per step; the
+        // ≥5× acceptance assert lives in `cargo bench --bench
+        // streaming` full mode, not the CLI path.
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR5.json");
+        dngd::bench_tables::streaming_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
         return Err(
-            "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads".into()
+            "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads | \
+             --streaming"
+                .into(),
         );
     }
     Ok(())

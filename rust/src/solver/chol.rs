@@ -21,11 +21,158 @@
 
 use super::session::{check_lambda, refactor_damped, undamped_err};
 use super::{DampedSolver, Factorization, SolveError};
+use crate::linalg::chol_update::UpdatableChol;
 use crate::linalg::gemm::{gemm_nt_threaded, gemm_tn_threaded, syrk, syrk_parallel};
 use crate::linalg::{
     cholesky_threaded, solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
     solve_lower_transpose_multi_threaded, KernelConfig, KernelIsa, Mat,
 };
+
+/// Relative pivot floor for the streaming bordered append: a pivot
+/// `δ² ≤ 1e-10·d` is numerically meaningless after the O(n²) rotation
+/// arithmetic, so the session treats it as a breakdown and falls back
+/// to the full refactor of the patched Gram (which decides PD-ness with
+/// the blocked factorization's own criterion). Legitimate damped pivots
+/// sit at δ²/d ≳ λ/‖row‖², far above this floor for any λ a consumer
+/// would run.
+const APPEND_REL_FLOOR: f64 = 1e-10;
+
+/// Shared streaming-rotation engine for the Gram-caching sessions
+/// (`chol` here, `rvb` via re-use): validates the rotation, patches the
+/// cached un-damped Gram with O(knm) panel products (zero full-Gram
+/// SYRKs), rotates `damped` factors in O(kn²) (delete sweeps + bordered
+/// appends at `lambda` extra diagonal), and returns the rotated window.
+/// A bordered-append breakdown clears the broken factor's slot in
+/// `damped` — the caller refactors it from the patched Gram.
+///
+/// `window`/`gram` are replaced by their rotated versions; factors in
+/// `damped` are `(factor_slot, extra_diagonal)` pairs rotated in place.
+///
+/// Cost note: the window/Gram are rebuilt into fresh buffers and each
+/// factor round-trips through an [`UpdatableChol`] copy — O(nm + n²)
+/// bytes of copy per rotation, deliberately traded for simplicity.
+/// That is bandwidth-bound noise against the O(knm) patch FLOPs at the
+/// bench shapes; if a profile ever shows otherwise, the fix is to keep
+/// a persistent `UpdatableChol` (and ring-ordered window) in the
+/// session, which the fixed-leading-dimension layout already supports.
+pub(crate) fn rotate_gram_session(
+    window: &mut Mat,
+    gram: &mut Mat,
+    damped: &mut [(&mut Option<Mat>, f64)],
+    removed: &[usize],
+    added: &Mat,
+    cfg: KernelConfig,
+) -> Result<(), SolveError> {
+    let (n_old, m) = window.shape();
+    let k_add = added.rows();
+    if k_add > 0 && added.cols() != m {
+        return Err(SolveError::BadInput(format!(
+            "update_rows: added rows have {} columns, window has {m}",
+            added.cols()
+        )));
+    }
+    let mut rem: Vec<usize> = removed.to_vec();
+    rem.sort_unstable();
+    if rem.windows(2).any(|w| w[0] == w[1]) {
+        return Err(SolveError::BadInput(
+            "update_rows: duplicate removal index".to_string(),
+        ));
+    }
+    if rem.last().is_some_and(|&r| r >= n_old) {
+        return Err(SolveError::BadInput(format!(
+            "update_rows: removal index {} out of range (window has {n_old} rows)",
+            rem.last().unwrap()
+        )));
+    }
+    let n_kept = n_old - rem.len();
+    let n_new = n_kept + k_add;
+    if n_new == 0 {
+        return Err(SolveError::BadInput(
+            "update_rows: rotation would leave an empty window".to_string(),
+        ));
+    }
+    let kept: Vec<usize> = {
+        let mut drop = vec![false; n_old];
+        for &r in &rem {
+            drop[r] = true;
+        }
+        (0..n_old).filter(|&i| !drop[i]).collect()
+    };
+
+    // Rotated window: kept rows in order, added rows at the end.
+    let mut new_window = Mat::zeros(n_new, m);
+    for (i, &oi) in kept.iter().enumerate() {
+        new_window.row_mut(i).copy_from_slice(window.row(oi));
+    }
+    for j in 0..k_add {
+        new_window.row_mut(n_kept + j).copy_from_slice(added.row(j));
+    }
+
+    // Patched Gram: kept entries copied, new cross/diagonal blocks from
+    // panel products on the packed engine — O(knm + k²m), no SYRK.
+    let mut new_gram = Mat::zeros(n_new, n_new);
+    for (i, &oi) in kept.iter().enumerate() {
+        let dst = new_gram.row_mut(i);
+        let src = gram.row(oi);
+        for (j, &oj) in kept.iter().enumerate() {
+            dst[j] = src[oj];
+        }
+    }
+    if k_add > 0 {
+        let (cross, block) = cfg.run(|| {
+            let mut cross = Mat::zeros(n_kept, k_add);
+            if n_kept > 0 {
+                let kept_rows = new_window.slice_rows(0, n_kept);
+                gemm_nt_threaded(1.0, &kept_rows, added, 0.0, &mut cross, cfg.threads);
+            }
+            let mut block = Mat::zeros(k_add, k_add);
+            gemm_nt_threaded(1.0, added, added, 0.0, &mut block, cfg.threads);
+            (cross, block)
+        });
+        for i in 0..n_kept {
+            for j in 0..k_add {
+                new_gram[(i, n_kept + j)] = cross[(i, j)];
+                new_gram[(n_kept + j, i)] = cross[(i, j)];
+            }
+        }
+        for i in 0..k_add {
+            for j in 0..k_add {
+                new_gram[(n_kept + i, n_kept + j)] = block[(i, j)];
+            }
+        }
+    }
+
+    // Rotate each damped factor: deletes descending (indices stay
+    // valid), then bordered appends reading the patched Gram columns.
+    for (slot, extra) in damped.iter_mut() {
+        let Some(mut l) = slot.take() else { continue };
+        let mut upd = UpdatableChol::from_factor(&l, n_old.max(n_new));
+        for &r in rem.iter().rev() {
+            upd.delete_row(r);
+        }
+        let mut broke = false;
+        for j in 0..k_add {
+            let cur = n_kept + j;
+            let col: Vec<f64> = (0..cur).map(|i| new_gram[(i, cur)]).collect();
+            let diag = new_gram[(cur, cur)] + *extra;
+            if upd.append_row(&col, diag, APPEND_REL_FLOOR).is_err() {
+                broke = true;
+                break;
+            }
+        }
+        if broke {
+            // Breakdown backstop: leave the slot empty — the caller
+            // refactors it from the (exact) patched Gram.
+            continue;
+        }
+        upd.write_to(&mut l);
+        **slot = Some(l);
+    }
+
+    *window = new_window;
+    *gram = new_gram;
+    Ok(())
+}
 
 /// Algorithm-1 solver ("chol").
 #[derive(Debug, Clone)]
@@ -105,11 +252,27 @@ impl CholSolver {
 
 /// Session-native Algorithm-1 factorization: un-damped Gram cached across
 /// λ-resweeps, preallocated O(n) scratch reused across right-hand sides.
+///
+/// Two ownership modes share the implementation (PR 5):
+///
+/// * **borrowed** ([`CholFactor::new`]) — the classic per-step session
+///   against a caller-owned score matrix;
+/// * **owned window** ([`CholFactor::from_window`], lifetime
+///   `'static`) — the streaming session: the factor owns its sliding
+///   window and rotates rows through [`Factorization::update_rows`]
+///   (Gram patched with panel products, factor rotated in O(kn²) by
+///   the [`chol_update`](crate::linalg::chol_update) primitives). A
+///   borrowed session switches to an owned window automatically on its
+///   first `update_rows` (one O(nm) clone).
 pub struct CholFactor<'s> {
-    s: &'s Mat,
+    /// Borrowed score matrix; `None` in owned-window mode.
+    s: Option<&'s Mat>,
+    /// Owned sliding window; populated in streaming mode.
+    window: Option<Mat>,
     cfg: KernelConfig,
     lambda: f64,
-    /// Cached `SSᵀ` (no damping) — computed once, λ-independent.
+    /// Cached `SSᵀ` (no damping) — computed once, λ-independent,
+    /// patched (never re-formed) by window rotations.
     gram: Option<Mat>,
     /// `Chol(SSᵀ + λĨ)` for the current λ.
     l: Option<Mat>,
@@ -120,7 +283,8 @@ pub struct CholFactor<'s> {
 impl<'s> CholFactor<'s> {
     pub fn new(s: &'s Mat, cfg: KernelConfig) -> Self {
         CholFactor {
-            s,
+            s: Some(s),
+            window: None,
             cfg: KernelConfig::with_threads(cfg.threads).with_isa(cfg.isa),
             lambda: 0.0,
             gram: None,
@@ -129,14 +293,50 @@ impl<'s> CholFactor<'s> {
         }
     }
 
+    /// Streaming session owning its score window (no borrow — can be
+    /// held across training steps and rotated in place).
+    pub fn from_window(window: Mat, cfg: KernelConfig) -> CholFactor<'static> {
+        let rows = window.rows();
+        CholFactor {
+            s: None,
+            window: Some(window),
+            cfg: KernelConfig::with_threads(cfg.threads).with_isa(cfg.isa),
+            lambda: 0.0,
+            gram: None,
+            l: None,
+            u: vec![0.0; rows],
+        }
+    }
+
+    /// The active score matrix: the owned window when streaming, the
+    /// borrowed matrix otherwise.
+    pub fn score(&self) -> &Mat {
+        match &self.window {
+            Some(w) => w,
+            None => self.s.expect("session has a score matrix"),
+        }
+    }
+
+    /// The cached damped factor, if the session is currently damped
+    /// (tests and the streaming bench compare it against a cold
+    /// `gram_factor` of the rotated window).
+    pub fn cached_factor(&self) -> Option<&Mat> {
+        self.l.as_ref()
+    }
+
     fn ensure_gram(&mut self) -> &Mat {
         if self.gram.is_none() {
             let threads = self.cfg.threads;
-            let g = self.cfg.run(|| {
+            let cfg = self.cfg;
+            let s = match &self.window {
+                Some(w) => w,
+                None => self.s.expect("session has a score matrix"),
+            };
+            let g = cfg.run(|| {
                 if threads > 1 {
-                    syrk_parallel(self.s, 0.0, threads)
+                    syrk_parallel(s, 0.0, threads)
                 } else {
-                    syrk(self.s, 0.0)
+                    syrk(s, 0.0)
                 }
             });
             self.gram = Some(g);
@@ -151,7 +351,7 @@ impl Factorization for CholFactor<'_> {
     }
 
     fn dim(&self) -> usize {
-        self.s.cols()
+        self.score().cols()
     }
 
     fn lambda(&self) -> f64 {
@@ -160,6 +360,12 @@ impl Factorization for CholFactor<'_> {
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
         check_lambda(lambda)?;
+        // Streaming fast path: a window rotation keeps the damped
+        // factor current, so re-damping at the unchanged λ (the
+        // trainer's per-step redamp) must not pay the O(n³) refactor.
+        if lambda == self.lambda && self.l.is_some() {
+            return Ok(());
+        }
         let cfg = self.cfg;
         self.ensure_gram();
         match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
@@ -179,19 +385,25 @@ impl Factorization for CholFactor<'_> {
     }
 
     fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
-        let m = self.s.cols();
+        let CholFactor { s, window, l, u, cfg, lambda, .. } = self;
+        let s: &Mat = match window.as_ref() {
+            Some(w) => w,
+            None => s.expect("session has a score matrix"),
+        };
+        let m = s.cols();
         assert_eq!(v.len(), m, "v must be m-dimensional");
         assert_eq!(x.len(), m, "x must be m-dimensional");
-        let l = self.l.as_ref().ok_or_else(undamped_err)?;
-        let s = self.s;
-        let u = &mut self.u;
-        self.cfg.run(|| {
+        let l = l.as_ref().ok_or_else(undamped_err)?;
+        if u.len() != s.rows() {
+            u.resize(s.rows(), 0.0);
+        }
+        cfg.run(|| {
             s.matvec_into(v, u);
             let y = solve_lower(l, u);
             let z = solve_lower_transpose(l, &y);
             s.t_matvec_into(&z, x);
         });
-        let inv = 1.0 / self.lambda;
+        let inv = 1.0 / *lambda;
         for (xj, vj) in x.iter_mut().zip(v) {
             *xj = inv * (vj - *xj);
         }
@@ -203,7 +415,11 @@ impl Factorization for CholFactor<'_> {
     /// k separate vector substitutions. Every stage partitions across
     /// the session's `threads` pool jobs (bit-identical to serial).
     fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
-        let (n, m) = self.s.shape();
+        let s = match &self.window {
+            Some(w) => w,
+            None => self.s.expect("session has a score matrix"),
+        };
+        let (n, m) = s.shape();
         assert_eq!(vs.cols(), m, "each row of vs must be m-dimensional");
         let l = self.l.as_ref().ok_or_else(undamped_err)?;
         let k = vs.rows();
@@ -211,14 +427,14 @@ impl Factorization for CholFactor<'_> {
         let t = self.cfg.run(|| {
             // U = S·Vᵀ  (n×k)
             let mut u = Mat::zeros(n, k);
-            gemm_nt_threaded(1.0, self.s, vs, 0.0, &mut u, threads);
+            gemm_nt_threaded(1.0, s, vs, 0.0, &mut u, threads);
             // Z = L⁻ᵀ(L⁻¹U) — the blocked TRSM pair, RHS columns paneled
             // across the pool.
             let y = solve_lower_multi_threaded(l, &u, threads);
             let z = solve_lower_transpose_multi_threaded(l, &y, threads);
             // T = Sᵀ·Z  (m×k)
             let mut t = Mat::zeros(m, k);
-            gemm_tn_threaded(1.0, self.s, &z, 0.0, &mut t, threads);
+            gemm_tn_threaded(1.0, s, &z, 0.0, &mut t, threads);
             t
         });
         // X = (V − Tᵀ)/λ  (k×m, rows are solutions)
@@ -233,6 +449,59 @@ impl Factorization for CholFactor<'_> {
         }
         Ok(x)
     }
+
+    /// Streaming row rotation: O(knm) Gram patch + O(kn²) factor
+    /// rotation, zero full-Gram SYRKs (pinned by a kernel-counter
+    /// test). A bordered-append breakdown falls back to an O(n³)
+    /// refactor of the patched Gram; only if that also breaks down does
+    /// the error surface (and the session stays redampable at a larger
+    /// λ — the usual Levenberg–Marquardt rescue).
+    fn update_rows(&mut self, removed: &[usize], added: &Mat) -> Result<(), SolveError> {
+        self.ensure_gram();
+        if self.window.is_none() {
+            // First rotation on a borrowed session: switch to an owned
+            // window (one O(nm) clone, then never again).
+            self.window = Some(self.s.expect("session has a score matrix").clone());
+        }
+        let cfg = self.cfg;
+        let lambda = self.lambda;
+        let window = self.window.as_mut().unwrap();
+        let gram = self.gram.as_mut().unwrap();
+        rotate_gram_session(
+            window,
+            gram,
+            &mut [(&mut self.l, lambda)],
+            removed,
+            added,
+            cfg,
+        )?;
+        if self.l.is_none() && lambda > 0.0 {
+            // Rotation breakdown backstop: refactor the patched Gram.
+            match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
+                Ok(l) => self.l = Some(l),
+                Err(e) => {
+                    self.lambda = 0.0;
+                    return Err(e);
+                }
+            }
+        }
+        self.u.resize(self.gram.as_ref().unwrap().rows(), 0.0);
+        Ok(())
+    }
+
+    /// Streaming drift backstop: drop the patched Gram and rotated
+    /// factor, recompute both from the current window from scratch.
+    fn refresh(&mut self) -> Result<(), SolveError> {
+        self.gram = None;
+        self.l = None;
+        let lambda = self.lambda;
+        self.lambda = 0.0;
+        self.ensure_gram();
+        if lambda > 0.0 {
+            self.redamp(lambda)?;
+        }
+        Ok(())
+    }
 }
 
 impl DampedSolver for CholSolver {
@@ -242,6 +511,10 @@ impl DampedSolver for CholSolver {
 
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
         Box::new(CholFactor::new(s, self.kernel_config()))
+    }
+
+    fn begin_window(&self, window: Mat) -> Option<Box<dyn Factorization>> {
+        Some(Box::new(CholFactor::from_window(window, self.kernel_config())))
     }
 }
 

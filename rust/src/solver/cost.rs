@@ -51,6 +51,37 @@ pub fn flops_threaded(kind: SolverKind, n: usize, m: usize, threads: usize) -> f
     serial + (flops(kind, n, m) - serial) / t
 }
 
+/// Modeled FLOP count of one **sliding-window step** (PR 5): rotate `k`
+/// of the window's `n` sample rows, then solve one right-hand side
+/// against the updated factor.
+///
+/// For the streaming-capable kinds (`chol`, `rvb` — the sessions with
+/// O(kn²)-rotatable Cholesky factors) the cost is
+///
+/// ```text
+/// 2knm + k²m     cross-product Gram patch (panel GEMMs; NO n²m SYRK)
+/// + 4kn²         factor rotation: Givens delete sweeps + bordered appends
+/// + 4nm + 2n²    the per-RHS Algorithm-1 line-4 passes
+/// ```
+///
+/// versus the cold `flops(kind, n, m)` ≈ n²m + n³/3 per step — an
+/// amortization factor of ≈ n/2k when k ≪ n (the `benches/streaming.rs`
+/// acceptance bar). Kinds with no separable update (eigh/svda/naive/cg)
+/// pay the full cold cost every step, which is what this model returns
+/// for them — keeping cross-kind comparisons honest when a registry
+/// weighs streaming against its alternatives.
+pub fn flops_streaming(kind: SolverKind, n: usize, m: usize, k: usize) -> f64 {
+    let nf = n as f64;
+    let mf = m as f64;
+    let kf = k.min(n) as f64;
+    match kind {
+        SolverKind::Chol | SolverKind::Rvb => {
+            2.0 * kf * nf * mf + kf * kf * mf + 4.0 * kf * nf * nf + 4.0 * nf * mf + 2.0 * nf * nf
+        }
+        _ => flops(kind, n, m),
+    }
+}
+
 /// Modeled FLOP count of one solve. Leading-order terms only; used for
 /// ideal-scaling overlays, not for timing claims.
 pub fn flops(kind: SolverKind, n: usize, m: usize) -> f64 {
@@ -180,6 +211,28 @@ mod tests {
             assert!(c < flops_threaded(SolverKind::Eigh, 2048, 100_000, t));
             assert!(c < flops_threaded(SolverKind::Svda, 2048, 100_000, t));
             assert!(c < flops_threaded(SolverKind::Naive, 2048, 100_000, t));
+        }
+    }
+
+    #[test]
+    fn streaming_model_amortizes_small_rotations() {
+        let (n, m) = (512usize, 100_000usize);
+        for &kind in &[SolverKind::Chol, SolverKind::Rvb] {
+            let cold = flops(kind, n, m);
+            let stream = flops_streaming(kind, n, m, n / 10);
+            assert!(cold / stream > 4.0, "{kind:?}: {}", cold / stream);
+            // The bench acceptance bar (≥5× end-to-end at ≤10%
+            // rotation) must be reachable in the model: the harness
+            // rotates n/16 of the window.
+            let bench = flops_streaming(kind, n, m, n / 16);
+            assert!(cold / bench > 5.0, "{kind:?}: {}", cold / bench);
+            // Monotone in k, and a full rotation stops being a win.
+            assert!(flops_streaming(kind, n, m, 8) < stream);
+            assert!(flops_streaming(kind, n, m, n) > cold, "{kind:?} full rotation");
+        }
+        // Non-streaming kinds pay the cold cost every step.
+        for &kind in &[SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg] {
+            assert_eq!(flops_streaming(kind, n, m, 8), flops(kind, n, m));
         }
     }
 

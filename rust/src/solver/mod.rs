@@ -80,6 +80,34 @@
 //! scaling lives in EXPERIMENTS.md §Threading
 //! (`dngd bench --threads` → `BENCH_PR3.json`).
 //!
+//! ## Streaming (PR 5): sliding-window row rotation
+//!
+//! The separability argument extends across *steps*: successive
+//! minibatches of an online consumer overlap in all but k of their n
+//! sample rows, so the new Gram differs by k symmetric row/column
+//! deletions + k bordered appends — both with O(n²) factor updates
+//! ([`linalg::chol_update`](crate::linalg::chol_update)). The session
+//! trait exposes this as [`Factorization::update_rows`] (plus the
+//! [`Factorization::refresh`] drift backstop), and
+//! [`DampedSolver::begin_window`] opens a session that *owns* its
+//! window so a trainer can hold it across steps:
+//!
+//! | mode | per-step cost | Gram SYRKs | sessions |
+//! |------|---------------|------------|----------|
+//! | cold factor (pre-PR-5) | O(n²m + n³) | 1 | every kind |
+//! | `update_rows` rotation | O(knm + kn²) | **0** (patched) | `chol`, `rvb` (native) |
+//! | rotated-window refactor fallback | O(n²m + n³) | 1 | every other kind |
+//!
+//! Config: `solver.window` (sliding-window size, 0 = off) and
+//! `solver.refresh_every` (rotations per full refactor, 0 = never);
+//! the NGD trainer wires both through
+//! [`NaturalGradient::with_window`](crate::ngd::NaturalGradient::with_window).
+//! A bordered-append breakdown (the hyperbolic-downdate failure mode)
+//! falls back to an O(n³) refactor of the patched Gram and only then
+//! surfaces as [`SolveError::NotPositiveDefinite`]; [`flops_streaming`]
+//! is the matching cost model and `dngd bench --streaming` →
+//! `BENCH_PR5.json` the measured table (EXPERIMENTS.md §Streaming).
+//!
 //! Complex stochastic-reconfiguration variants (§3) live in
 //! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part
 //! Fisher `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`, with the same
@@ -100,7 +128,7 @@ pub use chol::CholSolver;
 pub use complex_sr::{
     center_scores, solve_sr_complex, solve_sr_real_part, stack_real_part, ComplexSrFactor,
 };
-pub use cost::{flops, flops_threaded, memory_bytes, MemoryBudget};
+pub use cost::{flops, flops_streaming, flops_threaded, memory_bytes, MemoryBudget};
 pub use eigh_svd::EighSolver;
 pub use naive::NaiveSolver;
 pub use rvb::RvbSolver;
@@ -174,6 +202,19 @@ pub trait DampedSolver {
     /// and caches it for every later re-damping.
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
         Box::new(OneShot::new(self, s))
+    }
+
+    /// Open a session that **owns** its score window — the streaming
+    /// entry point (PR 5). The returned factorization has no borrow of
+    /// the caller's matrices, so an online consumer (the NGD trainer's
+    /// sliding-window mode) can hold it across steps and rotate rows
+    /// through [`Factorization::update_rows`]. `None` means this kind
+    /// has no owned-window session; streaming drivers then fall back
+    /// to a cold refactor per rotation. Implemented by `chol` and
+    /// `rvb` (the kinds with O(kn²)-rotatable factors).
+    fn begin_window(&self, window: Mat) -> Option<Box<dyn Factorization>> {
+        let _ = window;
+        None
     }
 
     /// Stage the factorization for (`s`, `lambda`): [`DampedSolver::begin`]

@@ -20,6 +20,7 @@
 //! tiny-ridge recovery factor used to reconstruct `f` from `v` — so both
 //! λ-resweeps and repeated right-hand sides skip all O(n²m) work.
 
+use super::chol::rotate_gram_session;
 use super::session::{check_lambda, refactor_damped, undamped_err};
 use super::{CholSolver, DampedSolver, Factorization, SolveError};
 use crate::linalg::gemm::{syrk, syrk_parallel};
@@ -75,13 +76,14 @@ impl RvbSolver {
     /// `BadInput` if `v` is not in the row space of `S` — the structural
     /// limitation §3 calls out.
     pub fn recover_f(&self, s: &Mat, v: &[f64], tol: f64) -> Result<Vec<f64>, SolveError> {
+        let ridge = recovery_ridge(s)?;
         self.inner.kernel_config().run(|| {
             let sv = s.matvec(v);
             // SSᵀ may be singular; tiny ridge for the recovery only.
             let w = if self.inner.threads > 1 {
-                syrk_parallel(s, recovery_ridge(s), self.inner.threads)
+                syrk_parallel(s, ridge, self.inner.threads)
             } else {
-                syrk(s, recovery_ridge(s))
+                syrk(s, ridge)
             };
             let l = cholesky_threaded(&w, self.inner.threads)?;
             let f = solve_lower_transpose(&l, &solve_lower(&l, &sv));
@@ -92,9 +94,31 @@ impl RvbSolver {
 }
 
 /// Ridge used to regularize the (possibly singular) recovery system.
-fn recovery_ridge(s: &Mat) -> f64 {
+///
+/// A degenerate scale is rejected up front (PR-5 bugfix): for an
+/// all-zero or subnormally-scaled score matrix the old
+/// `max(1e-12·‖S‖²_F, 1e-300)` floor still fed Cholesky a numerically
+/// zero pivot, so the user saw an unactionable `NotPositiveDefinite`
+/// ("increase damping") instead of the real problem — the scores
+/// themselves. The threshold is `f64::MIN_POSITIVE`: any normal ridge
+/// passes, a zero/subnormal one names the score matrix.
+fn recovery_ridge(s: &Mat) -> Result<f64, SolveError> {
     let f = s.fro_norm();
-    (1e-12 * f * f).max(1e-300)
+    let ridge = 1e-12 * f * f;
+    if !ridge.is_finite() {
+        return Err(SolveError::BadInput(format!(
+            "score matrix is not finite (‖S‖_F = {f:.3e}) — the RVB recovery system SSᵀf = Sv \
+             cannot be formed"
+        )));
+    }
+    if ridge < f64::MIN_POSITIVE {
+        return Err(SolveError::BadInput(format!(
+            "score matrix is zero or ill-scaled (‖S‖_F = {f:.3e}): the RVB recovery system \
+             SSᵀf = Sv is numerically singular — rescale the scores or use a general solver \
+             (chol)"
+        )));
+    }
+    Ok(ridge)
 }
 
 /// Check `v ≈ Sᵀf`; error with the §3 limitation message otherwise.
@@ -118,8 +142,19 @@ fn verify_reconstruction(s: &Mat, v: &[f64], f: &[f64], tol: f64) -> Result<(), 
 }
 
 /// RVB session: un-damped Gram + λ-independent recovery factor cached.
+///
+/// Like [`CholFactor`](super::chol::CholFactor) it supports both the
+/// borrowed per-step mode and the PR-5 owned-window streaming mode; a
+/// rotation patches the shared Gram once and rotates **both** cached
+/// factors (damped + recovery) in O(kn²). The recovery ridge is frozen
+/// at its first computation so rotations stay consistent — it is a pure
+/// regularizer, and the periodic [`Factorization::refresh`] re-derives
+/// it from the current window.
 pub struct RvbFactor<'s> {
-    s: &'s Mat,
+    /// Borrowed score matrix; `None` in owned-window mode.
+    s: Option<&'s Mat>,
+    /// Owned sliding window; populated in streaming mode.
+    window: Option<Mat>,
     cfg: KernelConfig,
     recovery_tol: f64,
     lambda: f64,
@@ -129,29 +164,61 @@ pub struct RvbFactor<'s> {
     l: Option<Mat>,
     /// `Chol(SSᵀ + εĨ)` for the f-recovery (λ-independent).
     recovery_l: Option<Mat>,
+    /// The ε of the recovery factor, frozen when first computed so
+    /// streaming rotations append with a consistent diagonal.
+    ridge: Option<f64>,
 }
 
 impl<'s> RvbFactor<'s> {
     fn new(s: &'s Mat, cfg: KernelConfig, recovery_tol: f64) -> Self {
         RvbFactor {
-            s,
+            s: Some(s),
+            window: None,
             cfg: KernelConfig::with_threads(cfg.threads).with_isa(cfg.isa),
             recovery_tol,
             lambda: 0.0,
             gram: None,
             l: None,
             recovery_l: None,
+            ridge: None,
+        }
+    }
+
+    /// Streaming session owning its score window.
+    fn from_window(window: Mat, cfg: KernelConfig, recovery_tol: f64) -> RvbFactor<'static> {
+        RvbFactor {
+            s: None,
+            window: Some(window),
+            cfg: KernelConfig::with_threads(cfg.threads).with_isa(cfg.isa),
+            recovery_tol,
+            lambda: 0.0,
+            gram: None,
+            l: None,
+            recovery_l: None,
+            ridge: None,
+        }
+    }
+
+    fn score(&self) -> &Mat {
+        match &self.window {
+            Some(w) => w,
+            None => self.s.expect("session has a score matrix"),
         }
     }
 
     fn ensure_gram(&mut self) -> &Mat {
         if self.gram.is_none() {
             let threads = self.cfg.threads;
-            let g = self.cfg.run(|| {
+            let cfg = self.cfg;
+            let s = match &self.window {
+                Some(w) => w,
+                None => self.s.expect("session has a score matrix"),
+            };
+            let g = cfg.run(|| {
                 if threads > 1 {
-                    syrk_parallel(self.s, 0.0, threads)
+                    syrk_parallel(s, 0.0, threads)
                 } else {
-                    syrk(self.s, 0.0)
+                    syrk(s, 0.0)
                 }
             });
             self.gram = Some(g);
@@ -161,7 +228,14 @@ impl<'s> RvbFactor<'s> {
 
     fn ensure_recovery(&mut self) -> Result<(), SolveError> {
         if self.recovery_l.is_none() {
-            let ridge = recovery_ridge(self.s);
+            let ridge = match self.ridge {
+                Some(r) => r,
+                None => {
+                    let r = recovery_ridge(self.score())?;
+                    self.ridge = Some(r);
+                    r
+                }
+            };
             let cfg = self.cfg;
             self.ensure_gram();
             let rl =
@@ -178,7 +252,7 @@ impl Factorization for RvbFactor<'_> {
     }
 
     fn dim(&self) -> usize {
-        self.s.cols()
+        self.score().cols()
     }
 
     fn lambda(&self) -> f64 {
@@ -187,6 +261,11 @@ impl Factorization for RvbFactor<'_> {
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
         check_lambda(lambda)?;
+        // Streaming fast path — a rotation keeps the factor damped at
+        // the current λ (see the chol session).
+        if lambda == self.lambda && self.l.is_some() {
+            return Ok(());
+        }
         let cfg = self.cfg;
         self.ensure_gram();
         match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
@@ -204,14 +283,14 @@ impl Factorization for RvbFactor<'_> {
     }
 
     fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
-        let m = self.s.cols();
+        let m = self.score().cols();
         assert_eq!(v.len(), m, "v must be m-dimensional");
         assert_eq!(x.len(), m, "x must be m-dimensional");
         if self.l.is_none() {
             return Err(undamped_err());
         }
         self.ensure_recovery()?;
-        let s = self.s;
+        let s = self.score();
         let recovery_tol = self.recovery_tol;
         let rl = self.recovery_l.as_ref().unwrap();
         let l = self.l.as_ref().unwrap();
@@ -228,6 +307,55 @@ impl Factorization for RvbFactor<'_> {
             Ok(())
         })
     }
+
+    /// Streaming row rotation: the shared Gram is patched once and
+    /// **both** cached factors (damped at λ, recovery at the frozen ε)
+    /// rotate in O(kn²); breakdowns refactor from the patched Gram.
+    fn update_rows(&mut self, removed: &[usize], added: &Mat) -> Result<(), SolveError> {
+        self.ensure_gram();
+        if self.window.is_none() {
+            self.window = Some(self.s.expect("session has a score matrix").clone());
+        }
+        let cfg = self.cfg;
+        let lambda = self.lambda;
+        let ridge = self.ridge.unwrap_or(0.0);
+        let window = self.window.as_mut().unwrap();
+        let gram = self.gram.as_mut().unwrap();
+        rotate_gram_session(
+            window,
+            gram,
+            &mut [(&mut self.l, lambda), (&mut self.recovery_l, ridge)],
+            removed,
+            added,
+            cfg,
+        )?;
+        if self.l.is_none() && lambda > 0.0 {
+            match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
+                Ok(l) => self.l = Some(l),
+                Err(e) => {
+                    self.lambda = 0.0;
+                    return Err(e);
+                }
+            }
+        }
+        // A broken-down recovery factor just rebuilds lazily (ridge is
+        // kept frozen; `refresh` re-derives it from the live window).
+        Ok(())
+    }
+
+    fn refresh(&mut self) -> Result<(), SolveError> {
+        self.gram = None;
+        self.l = None;
+        self.recovery_l = None;
+        self.ridge = None;
+        let lambda = self.lambda;
+        self.lambda = 0.0;
+        self.ensure_gram();
+        if lambda > 0.0 {
+            self.redamp(lambda)?;
+        }
+        Ok(())
+    }
 }
 
 impl DampedSolver for RvbSolver {
@@ -240,6 +368,14 @@ impl DampedSolver for RvbSolver {
     /// the cached factors.
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
         Box::new(RvbFactor::new(s, self.inner.kernel_config(), self.recovery_tol))
+    }
+
+    fn begin_window(&self, window: Mat) -> Option<Box<dyn Factorization>> {
+        Some(Box::new(RvbFactor::from_window(
+            window,
+            self.inner.kernel_config(),
+            self.recovery_tol,
+        )))
     }
 }
 
@@ -292,6 +428,72 @@ mod tests {
         let x_ref = CholSolver::default().solve(&s, &v, 0.05).unwrap();
         for (a, b) in x.iter().zip(&x_ref) {
             assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_or_ill_scaled_scores_surface_as_bad_input_not_npd() {
+        // PR-5 bugfix: an all-zero (or subnormal) score matrix used to
+        // reach Cholesky with a 1e-300 ridge and fail as
+        // NotPositiveDefinite ("increase damping") — misdirecting the
+        // user from the real problem. It must name the score matrix.
+        let zero = Mat::zeros(4, 20);
+        let v = vec![0.0; 20];
+        match RvbSolver::default().solve(&zero, &v, 0.1) {
+            Err(SolveError::BadInput(msg)) => {
+                assert!(msg.contains("zero or ill-scaled"), "{msg}")
+            }
+            other => panic!("expected BadInput naming the scores, got {other:?}"),
+        }
+        // Subnormal scale: ‖S‖²_F underflows the ridge.
+        let mut tiny = Mat::zeros(4, 20);
+        tiny[(0, 0)] = 1e-155;
+        match RvbSolver::default().solve(&tiny, &v, 0.1) {
+            Err(SolveError::BadInput(msg)) => {
+                assert!(msg.contains("zero or ill-scaled"), "{msg}")
+            }
+            other => panic!("expected BadInput naming the scores, got {other:?}"),
+        }
+        // The one-shot ls entry hits the damped factor directly and is
+        // unaffected; a healthy matrix still solves.
+        let mut rng = Rng::seed_from(164);
+        let s = Mat::randn(4, 20, &mut rng);
+        let f: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let v = s.t_matvec(&f);
+        RvbSolver::default().solve(&s, &v, 0.1).unwrap();
+    }
+
+    #[test]
+    fn streaming_rotation_matches_cold_session() {
+        // Rotate two rows through an rvb window session: both cached
+        // factors (damped + recovery) rotate, and the result matches a
+        // cold session on the rotated window.
+        let mut rng = Rng::seed_from(165);
+        let (n, m) = (10usize, 60usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let solver = RvbSolver::default();
+        let mut fact = solver
+            .begin_window(s.clone())
+            .expect("rvb has an owned-window session");
+        fact.redamp(0.05).unwrap();
+        let added = Mat::randn(2, m, &mut rng);
+        fact.update_rows(&[0, 3], &added).unwrap();
+        // Rotated window: rows {1,2,4..n} then the two added rows.
+        let kept: Vec<usize> = (0..n).filter(|&i| i != 0 && i != 3).collect();
+        let mut rotated = Mat::zeros(n, m);
+        for (i, &oi) in kept.iter().enumerate() {
+            rotated.row_mut(i).copy_from_slice(s.row(oi));
+        }
+        for j in 0..2 {
+            rotated.row_mut(n - 2 + j).copy_from_slice(added.row(j));
+        }
+        let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v = rotated.t_matvec(&f);
+        let warm = fact.solve(&v).unwrap();
+        let cold = solver.solve(&rotated, &v, 0.05).unwrap();
+        let scale = crate::linalg::mat::norm2(&cold).max(1.0);
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a - b).abs() < 1e-9 * scale);
         }
     }
 

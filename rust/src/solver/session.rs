@@ -75,6 +75,45 @@ pub trait Factorization {
         }
         Ok(x)
     }
+
+    /// Sliding-window row rotation (PR 5): delete the window rows at
+    /// `removed` (indices into the *current* window, in any order) and
+    /// append the rows of `added` (k×m) at the end of the window.
+    ///
+    /// Native for the `chol`/`rvb` sessions, which patch the cached
+    /// un-damped Gram with O(knm) panel products (zero full-Gram
+    /// SYRKs) and rotate the Cholesky factor in O(kn²) per the
+    /// [`chol_update`](crate::linalg::chol_update) primitives — a
+    /// bordered-append breakdown falls back to an O(n³) refactor of
+    /// the patched Gram, and only if *that* breaks down does the error
+    /// surface (as [`SolveError::NotPositiveDefinite`], so the usual
+    /// λ backoff applies).
+    ///
+    /// The default signals "no native rotation" as
+    /// [`SolveError::BadInput`]; streaming drivers treat that as the
+    /// cue to rebuild the session cold on the rotated window (the
+    /// refactor fallback for kinds with no separable update).
+    fn update_rows(&mut self, removed: &[usize], added: &Mat) -> Result<(), SolveError> {
+        let _ = (removed, added);
+        Err(SolveError::BadInput(format!(
+            "solver {:?} has no native window rotation — rebuild the session on the rotated \
+             window instead",
+            self.name()
+        )))
+    }
+
+    /// Streaming drift backstop (PR 5): rebuild every cached
+    /// λ-independent object (Gram, factor) from the session's current
+    /// window from scratch — the periodic full refactor that bounds
+    /// rounding drift accumulated by O(n²) rotations. Supported by the
+    /// sessions that support [`Factorization::update_rows`]; the
+    /// default signals unsupported as [`SolveError::BadInput`].
+    fn refresh(&mut self) -> Result<(), SolveError> {
+        Err(SolveError::BadInput(format!(
+            "solver {:?} has no streaming session to refresh",
+            self.name()
+        )))
+    }
 }
 
 /// Shared λ validation for every session implementation.
@@ -201,11 +240,26 @@ pub struct SolverOptions {
     pub cg_tol: f64,
     /// CG iteration cap.
     pub cg_max_iters: usize,
+    /// Accept CG solves that hit the iteration cap with a true residual
+    /// within 100×`cg_tol` (`solver.cg_loose_accept`; default false —
+    /// the PR-5 bugfix made the pre-existing silent leniency explicit,
+    /// and this key is the config-surface opt-in back into it).
+    pub cg_loose_accept: bool,
     /// Modeled device-memory budget in GB for `svda`/`naive`
     /// (0 = the paper's 80 GB A100).
     pub budget_gb: f64,
     /// RVB `v = Sᵀf` reconstruction tolerance (relative).
     pub rvb_tol: f64,
+    /// Sliding-window size for the streaming NGD mode (`solver.window`;
+    /// 0 = disabled). When set, the trainer's optimizer maintains a
+    /// window of the last `window` score rows and rotates each step's
+    /// batch through it with [`Factorization::update_rows`] — O(knm +
+    /// kn²) per step instead of the O(n²m + n³) cold factor.
+    pub window: usize,
+    /// Rotations between full streaming refactors
+    /// (`solver.refresh_every`; 0 = never) — the drift backstop that
+    /// bounds rounding accumulation in the O(n²) factor rotations.
+    pub refresh_every: usize,
 }
 
 impl Default for SolverOptions {
@@ -215,8 +269,11 @@ impl Default for SolverOptions {
             isa: None,
             cg_tol: 1e-10,
             cg_max_iters: 10_000,
+            cg_loose_accept: false,
             budget_gb: 0.0,
             rvb_tol: 1e-6,
+            window: 0,
+            refresh_every: 64,
         }
     }
 }
@@ -236,6 +293,13 @@ impl SolverOptions {
         }
         if self.rvb_tol <= 0.0 {
             return Err(format!("solver.rvb_tol must be > 0, got {}", self.rvb_tol));
+        }
+        if self.window == 1 {
+            return Err(
+                "solver.window must be 0 (disabled) or ≥ 2: a one-row window has no overlap \
+                 to amortize"
+                    .to_string(),
+            );
         }
         Ok(())
     }
@@ -276,12 +340,15 @@ impl SolverOptions {
             }
             "cg_tol" => next.cg_tol = parse(key, value)?,
             "cg_max_iters" => next.cg_max_iters = parse(key, value)?,
+            "cg_loose_accept" => next.cg_loose_accept = parse(key, value)?,
             "budget_gb" => next.budget_gb = parse(key, value)?,
             "rvb_tol" => next.rvb_tol = parse(key, value)?,
+            "window" => next.window = parse(key, value)?,
+            "refresh_every" => next.refresh_every = parse(key, value)?,
             other => {
                 return Err(format!(
                     "unknown solver option {other:?} (known: threads, isa, cg_tol, cg_max_iters, \
-                     budget_gb, rvb_tol)"
+                     cg_loose_accept, budget_gb, rvb_tol, window, refresh_every)"
                 ))
             }
         }
@@ -356,9 +423,10 @@ impl SolverRegistry {
                 budget: self.opts.budget(),
                 threads: self.opts.threads,
             }),
-            SolverKind::Cg => {
-                Box::new(super::CgSolver::new(self.opts.cg_tol, self.opts.cg_max_iters))
-            }
+            SolverKind::Cg => Box::new(
+                super::CgSolver::new(self.opts.cg_tol, self.opts.cg_max_iters)
+                    .with_loose_accept(self.opts.cg_loose_accept),
+            ),
             SolverKind::Rvb => Box::new(
                 super::RvbSolver::with_config(self.opts.kernel())
                     .with_recovery_tol(self.opts.rvb_tol),
@@ -462,6 +530,33 @@ mod tests {
         assert_eq!(o.cg_tol, 1e-8);
         assert_eq!(o.cg_max_iters, 500);
         assert_eq!(o.threads, 4);
+        // The CG cap-leniency opt-in is config-reachable (PR 5) and a
+        // hard error on non-boolean values.
+        assert!(!o.cg_loose_accept);
+        o.apply("cg_loose_accept", "true").unwrap();
+        assert!(o.cg_loose_accept);
+        assert!(o.apply("cg_loose_accept", "definitely").is_err());
+    }
+
+    #[test]
+    fn streaming_window_options_parse_and_validate() {
+        let mut o = SolverOptions::default();
+        assert_eq!(o.window, 0, "streaming is off by default");
+        assert_eq!(o.refresh_every, 64);
+        o.apply("window", "256").unwrap();
+        o.apply("refresh_every", "16").unwrap();
+        assert_eq!(o.window, 256);
+        assert_eq!(o.refresh_every, 16);
+        // refresh_every = 0 disables the periodic backstop; window = 1
+        // is rejected (no overlap to amortize), window = 0 disables.
+        o.apply("refresh_every", "0").unwrap();
+        o.apply("window", "0").unwrap();
+        assert!(o.apply("window", "1").is_err());
+        assert!(o.apply("window", "-3").is_err());
+        assert_eq!(o.window, 0, "failed apply leaves options unchanged");
+        // And the --set path reaches the registry.
+        let reg = SolverRegistry::from_overrides(&["solver.window=128".into()]).unwrap();
+        assert_eq!(reg.opts.window, 128);
     }
 
     #[test]

@@ -28,6 +28,46 @@ fn distributed_solve_with_stragglers_still_correct() {
 }
 
 #[test]
+fn sharded_solve_many_matches_serial_session_in_one_round_trip() {
+    // PR-5 bugfix: ShardedFactor used to inherit the default
+    // solve_many, paying k full Matvec/Apply round-trips for a k-RHS
+    // block. The batched path must (a) agree with the serial session
+    // and (b) cost exactly one MatvecMany + one ApplyMany message per
+    // worker — pinned via the pool's processed-job counts.
+    let mut rng = Rng::seed_from(604);
+    let (n, m, k) = (12usize, 96usize, 5usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let sharded = ShardedCholSolver::new(3, 2);
+    let serial = CholSolver::default();
+    {
+        let mut fd = sharded.factor(&s, 0.05).unwrap();
+        let mut fs = serial.factor(&s, 0.05).unwrap();
+        let xd = fd.solve_many(&vs).unwrap();
+        let xs = fs.solve_many(&vs).unwrap();
+        assert_eq!(xd.shape(), (k, m));
+        for r in 0..k {
+            for j in 0..m {
+                assert!(
+                    (xd[(r, j)] - xs[(r, j)]).abs() < 1e-9,
+                    "rhs {r} col {j}: {} vs {}",
+                    xd[(r, j)],
+                    xs[(r, j)]
+                );
+            }
+        }
+    }
+    // Per worker: SetShard + Gram + MatvecMany + ApplyMany + Shutdown
+    // = 5 jobs. The pre-fix default would have cost 3 + 2k = 13.
+    let counts = sharded.shutdown();
+    assert_eq!(counts.len(), 3);
+    assert!(
+        counts.iter().all(|&c| c == 5),
+        "k-RHS solve must be one batched round-trip per phase, got job counts {counts:?}"
+    );
+}
+
+#[test]
 fn pool_survives_many_small_jobs_under_backpressure() {
     let mut rng = Rng::seed_from(601);
     let pool = WorkerPool::spawn(3, 1); // minimal queue: max pressure

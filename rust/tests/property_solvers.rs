@@ -13,13 +13,23 @@
 //!      matches the stacked-real construction by definition and the
 //!      dense oracle by value.
 //!  P8. Sharded distributed solve == serial solve for random topologies.
+//!  P9. (PR 5) A streaming window rotation (k rows deleted + appended)
+//!      leaves a factor that matches a from-scratch `gram_factor` of
+//!      the rotated window to 1e-9 — at every thread count and every
+//!      supported ISA tier.
+//!  P10. (PR 5) A bordered-append pivot below the relative floor
+//!      triggers the downdate-breakdown → full-refactor fallback
+//!      (observable on the Cholesky front-end counter) and the result
+//!      still matches the cold factor.
 
 use dngd::coordinator::ShardedCholSolver;
 use dngd::data::rng::Rng;
 use dngd::linalg::complex::{c64, CMat};
-use dngd::linalg::Mat;
+use dngd::linalg::{KernelConfig, Mat};
+use dngd::solver::chol::CholFactor;
 use dngd::solver::{
-    make_solver, residual_norm, solve_sr_complex, CholSolver, DampedSolver, RvbSolver, SolverKind,
+    make_solver, residual_norm, solve_sr_complex, CholSolver, DampedSolver, Factorization,
+    RvbSolver, SolverKind,
 };
 
 fn random_problem(rng: &mut Rng) -> (Mat, Vec<f64>, f64) {
@@ -157,6 +167,136 @@ fn p7_complex_reduces_to_real() {
             assert!(a.im.abs() < 1e-8);
         }
     }
+}
+
+/// Apply the same rotation a session performs to a plain matrix: drop
+/// `removed` rows (any order), append the rows of `added`.
+fn rotate_rows(s: &Mat, removed: &[usize], added: &Mat) -> Mat {
+    let (n, m) = s.shape();
+    let kept: Vec<usize> = (0..n).filter(|i| !removed.contains(i)).collect();
+    let mut out = Mat::zeros(kept.len() + added.rows(), m);
+    for (i, &oi) in kept.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(s.row(oi));
+    }
+    for j in 0..added.rows() {
+        out.row_mut(kept.len() + j).copy_from_slice(added.row(j));
+    }
+    out
+}
+
+#[test]
+fn p9_streaming_rotation_matches_fresh_factor_across_threads_and_tiers() {
+    let mut rng = Rng::seed_from(9009);
+    let tiers = dngd::linalg::KernelIsa::supported_tiers();
+    for case in 0..8 {
+        let n = 6 + rng.below(40);
+        let m = n + 10 + rng.below(100);
+        let k_del = 1 + rng.below(n.min(5));
+        let k_add = 1 + rng.below(5);
+        let lambda = 10f64.powf(rng.uniform() * 3.0 - 3.0); // 1e-3 … 1
+        let s = Mat::randn(n, m, &mut rng);
+        let added = Mat::randn(k_add, m, &mut rng);
+        // k distinct removal indices, deliberately unsorted.
+        let mut removed: Vec<usize> = Vec::new();
+        while removed.len() < k_del {
+            let r = rng.below(n);
+            if !removed.contains(&r) {
+                removed.push(r);
+            }
+        }
+        let rotated = rotate_rows(&s, &removed, &added);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        for &threads in &[1usize, 2, 4, 8] {
+            for &isa in &tiers {
+                let cfg = KernelConfig::with_threads(threads).with_isa(Some(isa));
+                let mut fact = CholFactor::from_window(s.clone(), cfg);
+                fact.redamp(lambda).unwrap();
+                fact.update_rows(&removed, &added).unwrap();
+                // Factor agreement ≤ 1e-9 against a cold gram_factor of
+                // the rotated window (the PR-5 acceptance bar).
+                let cold_l = CholSolver::with_config(cfg).gram_factor(&rotated, lambda).unwrap();
+                let warm_l = fact.cached_factor().expect("rotated session stays damped");
+                assert_eq!(warm_l.shape(), cold_l.shape());
+                let scale = cold_l.max_abs().max(1.0);
+                for i in 0..cold_l.rows() {
+                    for j in 0..=i {
+                        assert!(
+                            (warm_l[(i, j)] - cold_l[(i, j)]).abs() < 1e-9 * scale,
+                            "case {case} threads={threads} isa={isa}: factor ({i},{j}): {} vs {}",
+                            warm_l[(i, j)],
+                            cold_l[(i, j)]
+                        );
+                    }
+                }
+                // And the full operator agrees on a solve.
+                let x = fact.solve(&v).unwrap();
+                let res = residual_norm(&rotated, &x, &v, lambda);
+                let fro = rotated.fro_norm();
+                let sc = fro * fro * dngd::linalg::mat::norm2(&x)
+                    + dngd::linalg::mat::norm2(&v);
+                assert!(
+                    res < 1e-9 * sc.max(1.0),
+                    "case {case} threads={threads} isa={isa}: residual {res}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn p10_streaming_append_breakdown_falls_back_to_full_refactor() {
+    use dngd::linalg::kernel::counters;
+    // λ = 1e-9 with an appended row that duplicates a window row: the
+    // bordered pivot is δ² ≈ 2λ, so δ²/d ≈ 2λ/‖row‖² ≈ 3e-11 sits
+    // below the session's 1e-10 relative floor — deterministically a
+    // "breakdown" — while the full refactor of the patched Gram
+    // succeeds robustly (its pivot ≈ 2e-9 ≫ rounding). The fallback is
+    // observable: a pure rotation never invokes the Cholesky
+    // front-end, the fallback does exactly once.
+    let mut rng = Rng::seed_from(9010);
+    let (n, m) = (24usize, 60usize);
+    let lambda = 1e-9;
+    let s = Mat::randn(n, m, &mut rng);
+    let mut fact = CholFactor::from_window(s.clone(), KernelConfig::serial());
+    fact.redamp(lambda).unwrap();
+
+    // Control: a benign rotation is Cholesky-silent.
+    let benign = Mat::randn(1, m, &mut rng);
+    let chol0 = counters::cholesky_calls();
+    fact.update_rows(&[0], &benign).unwrap();
+    assert_eq!(
+        counters::cholesky_calls() - chol0,
+        0,
+        "benign rotation must be a pure O(kn²) factor rotation"
+    );
+
+    // Breakdown: append a duplicate of a current window row.
+    let dup = {
+        let cur = fact.score().row(3).to_vec();
+        let mut d = Mat::zeros(1, m);
+        d.row_mut(0).copy_from_slice(&cur);
+        d
+    };
+    let window_before = fact.score().clone();
+    let chol1 = counters::cholesky_calls();
+    fact.update_rows(&[0], &dup).unwrap();
+    assert_eq!(
+        counters::cholesky_calls() - chol1,
+        1,
+        "sub-floor bordered pivot must fall back to one full refactor"
+    );
+    // …and the fallback result still solves the rotated system. (At
+    // λ = 1e-9 on a deliberately singular Gram, κ ≈ ‖G‖/λ ~ 1e10
+    // amplifies last-bit Gram differences between the patched and
+    // re-formed products, so the meaningful gate is backward error —
+    // not elementwise agreement with an equally-rounded cold solve.)
+    let rotated = rotate_rows(&window_before, &[0], &dup);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let warm = fact.solve(&v).unwrap();
+    let res = residual_norm(&rotated, &warm, &v, lambda);
+    let fro = rotated.fro_norm();
+    let scale = fro * fro * dngd::linalg::mat::norm2(&warm) + dngd::linalg::mat::norm2(&v);
+    assert!(res < 1e-6 * scale.max(1.0), "fallback residual {res} (scale {scale:.3e})");
 }
 
 #[test]

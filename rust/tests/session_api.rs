@@ -306,6 +306,62 @@ fn s8_steady_state_redamp_solve_is_pack_allocation_free() {
 }
 
 #[test]
+fn s9_window_rotation_performs_zero_full_gram_syrks() {
+    // PR 5: a sliding-window rotation on the chol/rvb owned-window
+    // sessions patches the cached Gram with panel GEMMs and rotates
+    // the factor in O(kn²) — the SYRK and Cholesky front-ends must
+    // both stay silent (the Gram is never re-formed, the factor never
+    // re-factored), and the same-λ redamp after a rotation must be a
+    // no-op rather than an O(n³) refactor.
+    let mut rng = Rng::seed_from(7009);
+    let (n, m, k) = (32usize, 128usize, 4usize);
+    for &kind in &[SolverKind::Chol, SolverKind::Rvb] {
+        let s = Mat::randn(n, m, &mut rng);
+        let solver = make_solver(kind);
+        let mut fact = solver
+            .begin_window(s.clone())
+            .expect("chol/rvb have owned-window sessions");
+        fact.redamp(1e-2).unwrap();
+        // Warm every lazy cache (rvb's recovery factor) pre-rotation.
+        let warm_v = rhs_block(kind, &s, 1, &mut rng);
+        fact.solve(warm_v.row(0)).unwrap();
+
+        let added = Mat::randn(k, m, &mut rng);
+        let removed: Vec<usize> = (0..k).collect();
+        let syrk0 = counters::syrk_calls();
+        let chol0 = counters::cholesky_calls();
+        fact.update_rows(&removed, &added).unwrap();
+        fact.redamp(1e-2).unwrap();
+        assert_eq!(
+            counters::syrk_calls() - syrk0,
+            0,
+            "{kind:?}: a window rotation must never re-form the Gram (zero full-Gram SYRKs)"
+        );
+        assert_eq!(
+            counters::cholesky_calls() - chol0,
+            0,
+            "{kind:?}: rotation + same-λ redamp must rotate the factor, not refactor it"
+        );
+
+        // The rotated session still solves its rotated window.
+        let mut rotated = Mat::zeros(n, m);
+        for i in 0..n - k {
+            rotated.row_mut(i).copy_from_slice(s.row(i + k));
+        }
+        for j in 0..k {
+            rotated.row_mut(n - k + j).copy_from_slice(added.row(j));
+        }
+        let vs = rhs_block(kind, &rotated, 1, &mut rng);
+        let x = fact.solve(vs.row(0)).unwrap();
+        let res = residual_norm(&rotated, &x, vs.row(0), 1e-2);
+        let fro = rotated.fro_norm();
+        let scale = fro * fro * dngd::linalg::mat::norm2(&x)
+            + dngd::linalg::mat::norm2(vs.row(0));
+        assert!(res < 1e-8 * scale.max(1.0), "{kind:?}: rotated residual {res}");
+    }
+}
+
+#[test]
 fn s6_plan_shape_gate_and_factor_reuse_across_steps() {
     let mut rng = Rng::seed_from(7006);
     let (n, m) = (8usize, 32usize);
