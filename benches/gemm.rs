@@ -33,6 +33,14 @@ fn main() {
     dngd::bench_tables::simd_bench_report(quick, Some(Path::new(&json4)), !quick)
         .expect("write simd bench json");
 
+    // PR-6 mixed-precision sweep + acceptance (f32 GEMM/SYRK ≥ 1.5×
+    // f64 on the best tier; strict in full mode only, and skipped on
+    // scalar-only hosts by the report itself).
+    let json6 = std::env::var("DNGD_BENCH_JSON_PRECISION")
+        .unwrap_or_else(|_| "BENCH_PR6.json".to_string());
+    dngd::bench_tables::precision_bench_report(quick, Some(Path::new(&json6)), !quick)
+        .expect("write precision bench json");
+
     // Streaming matvecs (memory-bound): effective GB/s for the O(nm)
     // passes of Algorithm 1 line 4. Not part of the JSON trajectory —
     // these are bandwidth-, not kernel-, limited.

@@ -2,7 +2,7 @@
 
 use super::toml::{parse_toml, parse_value, TomlDoc};
 use crate::linalg::KernelIsa;
-use crate::solver::{SolverKind, SolverOptions};
+use crate::solver::{Precision, SolverKind, SolverOptions};
 
 /// Solver selection + damping + per-solver options.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,6 +41,13 @@ pub struct SolverConfig {
     /// Rotations between full streaming refactors (drift backstop;
     /// 0 = never).
     pub refresh_every: usize,
+    /// Kernel precision mode (`[solver] precision = "f64"|"mixed"`,
+    /// PR 6). `mixed` factors the Gram in f32 and recovers f64 accuracy
+    /// by iterative refinement; only `chol`/`rvb` support it —
+    /// validation rejects the combination for every other kind.
+    pub precision: Precision,
+    /// Mixed-mode relative true-residual target per right-hand side.
+    pub tol: f64,
 }
 
 impl Default for SolverConfig {
@@ -62,6 +69,8 @@ impl Default for SolverConfig {
             rvb_tol: opts.rvb_tol,
             window: opts.window,
             refresh_every: opts.refresh_every,
+            precision: opts.precision,
+            tol: opts.tol,
         }
     }
 }
@@ -80,6 +89,8 @@ impl SolverConfig {
             rvb_tol: self.rvb_tol,
             window: self.window,
             refresh_every: self.refresh_every,
+            precision: self.precision,
+            tol: self.tol,
         }
     }
 }
@@ -258,6 +269,15 @@ impl Config {
         get_f64(doc, "solver.rvb_tol", &mut cfg.solver.rvb_tol)?;
         get_usize(doc, "solver.window", &mut cfg.solver.window)?;
         get_usize(doc, "solver.refresh_every", &mut cfg.solver.refresh_every)?;
+        get_str(doc, "solver.precision", |s| {
+            // One parser/validator with the CLI `--set solver.precision`
+            // path (kind compatibility is cross-checked in validate()).
+            let mut opts = SolverOptions::default();
+            opts.apply("precision", s)?;
+            cfg.solver.precision = opts.precision;
+            Ok(())
+        })?;
+        get_f64(doc, "solver.tol", &mut cfg.solver.tol)?;
 
         get_usize(doc, "model.dim", &mut cfg.model.dim)?;
         get_usize(doc, "model.heads", &mut cfg.model.heads)?;
@@ -304,8 +324,9 @@ impl Config {
             return Err("solver.lambda_decay must be in (0, 1]".into());
         }
         // Per-solver option ranges: one source of truth with the CLI
-        // `--set solver.*` path.
-        self.solver.options().validate()?;
+        // `--set solver.*` path — including the precision/kind
+        // compatibility check (mixed needs a chol/rvb session).
+        self.solver.options().validate_for(self.solver.kind)?;
         if self.solver.window > 0 && self.solver.window <= self.train.batch_size {
             return Err(format!(
                 "solver.window ({}) must exceed train.batch_size ({}): a window no larger than \
@@ -352,6 +373,8 @@ const KNOWN_KEYS: &[&str] = &[
     "solver.rvb_tol",
     "solver.window",
     "solver.refresh_every",
+    "solver.precision",
+    "solver.tol",
     "model.dim",
     "model.heads",
     "model.layers",
@@ -572,6 +595,45 @@ variant = "real_part"
         // The --set override path goes through the same parser.
         let cfg = Config::from_toml_str("", &["solver.isa=scalar".into()]).unwrap();
         assert_eq!(cfg.solver.isa, Some(KernelIsa::Scalar));
+    }
+
+    #[test]
+    fn solver_precision_parses_and_cross_validates_with_kind() {
+        // Default: pure f64 on every kind.
+        let cfg = Config::from_toml_str("", &[]).unwrap();
+        assert_eq!(cfg.solver.precision, Precision::F64);
+        assert_eq!(cfg.solver.tol, 1e-10);
+        // mixed is accepted for the session kinds and flows to options.
+        for kind in ["chol", "rvb"] {
+            let cfg = Config::from_toml_str(
+                &format!("[solver]\nkind = \"{kind}\"\nprecision = \"mixed\"\ntol = 1e-9\n"),
+                &[],
+            )
+            .unwrap();
+            assert_eq!(cfg.solver.precision, Precision::Mixed);
+            assert_eq!(cfg.solver.options().precision, Precision::Mixed);
+            assert_eq!(cfg.solver.options().tol, 1e-9);
+        }
+        // …and rejected with a clear error for every other kind.
+        for kind in ["eigh", "svda", "naive", "cg"] {
+            let err = Config::from_toml_str(
+                &format!("[solver]\nkind = \"{kind}\"\nprecision = \"mixed\"\n"),
+                &[],
+            )
+            .unwrap_err();
+            assert!(err.contains("precision=mixed") && err.contains(kind), "{err}");
+        }
+        // Unknown modes and bad tolerances are hard errors.
+        assert!(Config::from_toml_str("[solver]\nprecision = \"f16\"\n", &[]).is_err());
+        assert!(Config::from_toml_str("[solver]\ntol = 0.0\n", &[]).is_err());
+        // The --set override path goes through the same parser.
+        let cfg = Config::from_toml_str("", &["solver.precision=mixed".into()]).unwrap();
+        assert_eq!(cfg.solver.precision, Precision::Mixed);
+        assert!(Config::from_toml_str(
+            "",
+            &["solver.kind=cg".into(), "solver.precision=mixed".into()]
+        )
+        .is_err());
     }
 
     #[test]

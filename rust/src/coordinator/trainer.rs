@@ -11,7 +11,7 @@ use crate::metrics::MetricsLog;
 use crate::model::{BatchEval, Transformer, TransformerConfig};
 use crate::ngd::{DampingSchedule, NaturalGradient, Sgd};
 use crate::runtime::{ArtifactRegistry, Backend};
-use crate::solver::{DampedSolver, SolveError, SolverKind, SolverRegistry};
+use crate::solver::{DampedSolver, Precision, SolveError, SolverKind, SolverRegistry};
 use std::path::Path;
 use std::time::Instant;
 
@@ -81,7 +81,21 @@ impl Trainer {
         // a registry-built serial solver of the configured kind with its
         // per-solver options (cg tolerance, budgets, threads, …).
         let registry = SolverRegistry::new(cfg.solver.options());
-        let shardable = cfg.solver.kind == SolverKind::Chol && cfg.coordinator.workers > 1;
+        // Mixed precision (PR 6) lives in the native chol/rvb sessions;
+        // the sharded and PJRT backends are f64-only, so requesting it
+        // pins the solve to the registry-built native solver rather than
+        // silently dropping the mode.
+        let mixed = cfg.solver.precision == Precision::Mixed;
+        if mixed && cfg.solver.kind == SolverKind::Chol
+            && (cfg.coordinator.workers > 1 || cfg.coordinator.use_artifacts)
+        {
+            eprintln!(
+                "[trainer] solver.precision = mixed has no sharded/artifact backend; \
+                 the solve runs on the native mixed-precision session"
+            );
+        }
+        let shardable =
+            cfg.solver.kind == SolverKind::Chol && cfg.coordinator.workers > 1 && !mixed;
         if cfg.solver.kind != SolverKind::Chol
             && (cfg.coordinator.workers > 1 || cfg.coordinator.use_artifacts)
         {
@@ -104,7 +118,7 @@ impl Trainer {
             )
         };
         let (solver_box, backend_name): (Box<dyn DampedSolver>, String) =
-            if cfg.coordinator.use_artifacts && cfg.solver.kind == SolverKind::Chol {
+            if cfg.coordinator.use_artifacts && cfg.solver.kind == SolverKind::Chol && !mixed {
                 let reg = ArtifactRegistry::scan(Path::new(&cfg.coordinator.artifact_dir));
                 match Backend::select(&reg, n, m, cfg.solver.threads) {
                     Backend::Pjrt(p) => (Box::new(p), "pjrt".to_string()),
@@ -420,6 +434,26 @@ use_artifacts = false
         let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
         let report = trainer.run(&mut log).unwrap();
         assert!(report.final_loss < report.initial_loss, "{report:?}");
+    }
+
+    #[test]
+    fn mixed_precision_training_descends_on_native_backend() {
+        // PR 6: solver.precision = mixed pins the solve to the native
+        // mixed-precision session (the sharded/PJRT backends are
+        // f64-only) and the f32 factor actually runs.
+        let mut cfg = tiny_config();
+        cfg.solver.precision = crate::solver::Precision::Mixed;
+        cfg.validate().unwrap();
+        let mf0 = crate::solver::mixed_counters::mixed_factors();
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        assert_eq!(trainer.backend(), "native", "mixed must not shard");
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = trainer.run(&mut log).unwrap();
+        assert!(report.final_loss < report.initial_loss, "{report:?}");
+        assert!(
+            crate::solver::mixed_counters::mixed_factors() > mf0,
+            "training never exercised the f32 factor"
+        );
     }
 
     #[test]

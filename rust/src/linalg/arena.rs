@@ -1,4 +1,5 @@
-//! Thread-local, 64-byte-aligned packing arenas (PR 4).
+//! Thread-local, 64-byte-aligned packing arenas (PR 4; element-typed
+//! views since PR 6).
 //!
 //! Every `dgemm`/SYRK call used to allocate fresh `ap`/`bp` packing
 //! panels, and the blocked Cholesky / multi-RHS TRSM allocated panel
@@ -6,13 +7,18 @@
 //! traffic on every hot-path invocation, paid again inside every pool
 //! job. This module replaces all of them with per-thread arena slots:
 //!
-//! * each slot holds one [`ArenaBuf`] — a raw 64-byte-aligned `f64`
+//! * each slot holds one [`ArenaBuf`] — a raw 64-byte-aligned
 //!   allocation (cache-line / AVX-512-register aligned) that grows
-//!   **monotonically** and is reused forever after;
-//! * a kernel *checks a slot out* (`take`), sizes it with
-//!   [`ArenaBuf::ensure`], and returns it (`put`) when done — the
-//!   checkout pattern keeps nested kernels (a TRSM gather whose core
-//!   calls `dgemm`, which needs the pack slots) from aliasing a buffer;
+//!   **monotonically** and is reused forever after. The allocation is
+//!   untyped underneath; callers size it in **elements** of the type
+//!   they need ([`ArenaBuf::ensure`] for `f64`,
+//!   [`ArenaBuf::ensure_f32`] for `f32`), so the f64 and f32 kernel
+//!   paths (PR 6) share one warm buffer per slot instead of doubling
+//!   the retained footprint;
+//! * a kernel *checks a slot out* (`take`), sizes it with an
+//!   `ensure_*` call, and returns it (`put`) when done — the checkout
+//!   pattern keeps nested kernels (a TRSM gather whose core calls
+//!   `dgemm`, which needs the pack slots) from aliasing a buffer;
 //! * growth is counted in a thread-local counter surfaced as
 //!   [`kernel::counters::arena_allocs`](super::kernel::counters::arena_allocs),
 //!   which pins the steady-state promise: once warmed, a redamp+solve
@@ -43,18 +49,22 @@ thread_local! {
 }
 
 /// Arena (re)allocations performed by the calling thread since start —
-/// the growth events of [`ArenaBuf::ensure`]. Steady-state kernels stop
+/// the growth events of the `ensure_*` calls. Steady-state kernels stop
 /// incrementing this once their shapes have been seen.
 pub fn allocs() -> u64 {
     ARENA_ALLOCS.with(|c| c.get())
 }
 
-/// A 64-byte-aligned, monotonically-grown `f64` buffer. Contents are
-/// zeroed on (re)allocation and *stale* on reuse — callers either
-/// overwrite the whole slice or zero-fill (the packing routines do the
-/// latter, which they needed for edge-tile padding anyway).
+/// A 64-byte-aligned, monotonically-grown buffer, viewed as `f64` or
+/// `f32` elements per call. Contents are zeroed on (re)allocation and
+/// *stale* on reuse — callers either overwrite the whole slice or
+/// zero-fill (the packing routines do the latter, which they needed
+/// for edge-tile padding anyway). Stale bytes may even be a view of
+/// the *other* element type from an earlier checkout; every consumer
+/// already treats the contents as garbage until written.
 pub struct ArenaBuf {
-    ptr: *mut f64,
+    ptr: *mut u8,
+    /// Capacity in bytes (always a multiple of [`ARENA_ALIGN`]).
     cap: usize,
 }
 
@@ -69,44 +79,62 @@ impl Default for ArenaBuf {
 }
 
 impl ArenaBuf {
-    fn layout(cap: usize) -> Layout {
-        Layout::from_size_align(cap * std::mem::size_of::<f64>(), ARENA_ALIGN)
-            .expect("arena layout")
+    fn layout(cap_bytes: usize) -> Layout {
+        Layout::from_size_align(cap_bytes, ARENA_ALIGN).expect("arena layout")
     }
 
-    /// Current capacity in f64 elements.
+    /// Current capacity in f64 elements (the coarser of the two views).
     pub fn capacity(&self) -> usize {
-        self.cap
+        self.cap / std::mem::size_of::<f64>()
     }
 
-    /// A `len`-element view, growing the allocation if needed (to at
-    /// least double the old capacity, so repeated mild growth is
-    /// amortized). Never shrinks. Growth zero-initializes and bumps the
-    /// thread's arena-allocation counter.
+    /// Grow the raw allocation to at least `bytes` (doubling, so
+    /// repeated mild growth is amortized). Never shrinks.
+    fn ensure_bytes(&mut self, bytes: usize) {
+        if self.cap >= bytes {
+            return;
+        }
+        let new_cap = bytes.max(self.cap * 2).next_multiple_of(ARENA_ALIGN);
+        // SAFETY: layout is non-zero-sized here (bytes ≥ 1); the old
+        // pointer (if any) was allocated with Self::layout(old cap).
+        unsafe {
+            let new_ptr = alloc_zeroed(Self::layout(new_cap));
+            if new_ptr.is_null() {
+                handle_alloc_error(Self::layout(new_cap));
+            }
+            if !self.ptr.is_null() {
+                dealloc(self.ptr, Self::layout(self.cap));
+            }
+            self.ptr = new_ptr;
+            self.cap = new_cap;
+        }
+        ARENA_ALLOCS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// A `len`-element `f64` view, growing the allocation if needed.
+    /// Growth zero-initializes and bumps the thread's arena-allocation
+    /// counter.
     pub fn ensure(&mut self, len: usize) -> &mut [f64] {
         if len == 0 {
             return &mut [];
         }
-        if self.cap < len {
-            let new_cap = len.max(self.cap * 2).next_multiple_of(ARENA_ALIGN / 8);
-            // SAFETY: layout is non-zero-sized here (len ≥ 1); the old
-            // pointer (if any) was allocated with Self::layout(old cap).
-            unsafe {
-                let new_ptr = alloc_zeroed(Self::layout(new_cap)) as *mut f64;
-                if new_ptr.is_null() {
-                    handle_alloc_error(Self::layout(new_cap));
-                }
-                if !self.ptr.is_null() {
-                    dealloc(self.ptr as *mut u8, Self::layout(self.cap));
-                }
-                self.ptr = new_ptr;
-                self.cap = new_cap;
-            }
-            ARENA_ALLOCS.with(|c| c.set(c.get() + 1));
+        self.ensure_bytes(len * std::mem::size_of::<f64>());
+        // SAFETY: ptr is a live allocation of ≥ len f64s, 64-byte
+        // aligned (≥ align_of::<f64>()), zeroed at allocation time (so
+        // never uninitialized; any bit pattern is a valid f64),
+        // exclusively owned.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr as *mut f64, len) }
+    }
+
+    /// A `len`-element `f32` view over the same allocation (PR 6 —
+    /// the f32 kernel path packs into the same warm slots).
+    pub fn ensure_f32(&mut self, len: usize) -> &mut [f32] {
+        if len == 0 {
+            return &mut [];
         }
-        // SAFETY: ptr is a live allocation of cap ≥ len f64s, zeroed at
-        // allocation time (so never uninitialized), exclusively owned.
-        unsafe { std::slice::from_raw_parts_mut(self.ptr, len) }
+        self.ensure_bytes(len * std::mem::size_of::<f32>());
+        // SAFETY: as `ensure`, and any bit pattern is a valid f32.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr as *mut f32, len) }
     }
 }
 
@@ -114,7 +142,7 @@ impl Drop for ArenaBuf {
     fn drop(&mut self) {
         if !self.ptr.is_null() {
             // SAFETY: allocated with exactly this layout.
-            unsafe { dealloc(self.ptr as *mut u8, Self::layout(self.cap)) }
+            unsafe { dealloc(self.ptr, Self::layout(self.cap)) }
         }
     }
 }
@@ -126,9 +154,9 @@ impl Drop for ArenaBuf {
 /// `dgemm` (which uses the pack slots).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum Slot {
-    /// MR-tall A micro-panels (≤ MC×KC f64).
+    /// MR-tall A micro-panels (≤ MC×KC elements).
     PackA,
-    /// NR-wide B micro-panels (≤ KC×NC f64).
+    /// NR-wide B micro-panels (≤ KC×NC elements).
     PackB,
     /// Gather/compute copies: TRSM RHS panels, Cholesky strip copies,
     /// the panel-solve transposed RHS.
@@ -172,7 +200,7 @@ mod tests {
         }
         assert_eq!(allocs() - a0, 1);
         let cap = buf.capacity();
-        assert!(cap >= 100 && cap % (ARENA_ALIGN / 8) == 0);
+        assert!(cap >= 100 && (cap * 8) % ARENA_ALIGN == 0);
         assert_eq!(buf.ptr as usize % ARENA_ALIGN, 0, "64-byte aligned");
         // Shrinking and equal-size views reuse the allocation…
         buf.ensure(40);
@@ -185,6 +213,25 @@ mod tests {
         buf.ensure(cap + 1);
         assert_eq!(allocs() - a0, 2);
         assert!(buf.capacity() >= 2 * cap);
+    }
+
+    #[test]
+    fn f32_views_share_the_allocation() {
+        let mut buf = ArenaBuf::default();
+        let a0 = allocs();
+        // 100 f32 = 400 bytes; a following 50-f64 view (400 bytes)
+        // must reuse the same allocation.
+        assert_eq!(buf.ensure_f32(100).len(), 100);
+        assert_eq!(allocs() - a0, 1);
+        let cap = buf.capacity();
+        buf.ensure(cap);
+        assert_eq!(allocs() - a0, 1, "f64 view within capacity must not grow");
+        // An f32 view twice as long as the f64 capacity also fits.
+        buf.ensure_f32(cap * 2);
+        assert_eq!(allocs() - a0, 1);
+        // Growing past the byte capacity reallocates once.
+        buf.ensure_f32(cap * 2 + 1);
+        assert_eq!(allocs() - a0, 2);
     }
 
     #[test]

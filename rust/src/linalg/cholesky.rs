@@ -38,7 +38,7 @@ use super::arena::{self, Slot};
 use super::kernel::{self, SendConst, SendMut, Trans};
 use super::mat::Mat;
 use super::simd::{self, dot_isa};
-use super::trisolve::fwd_multi_core;
+use super::trisolve::{fwd_multi_core, fwd_multi_core_f32};
 
 /// Panel width. A multiple of the micro-kernel tile (MR=4, NR=8) so the
 /// packed trailing update runs on full tiles; the O(n·NB²) unblocked
@@ -400,6 +400,139 @@ unsafe fn factor_diagonal_block_raw(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// f32 factorization (PR 6 — mixed-precision path)
+// ---------------------------------------------------------------------------
+
+/// In-place blocked right-looking Cholesky of a row-major n×n f32
+/// buffer — the factorization stage of the mixed-precision sessions
+/// (`solver.precision = "mixed"`). On success the lower triangle holds
+/// `L` in f32 and the strict upper triangle is zeroed.
+///
+/// Per NB panel: the diagonal block factors unblocked in plain scalar
+/// f32 (tier-independent, so the f32 factor is identical across ISA
+/// tiers up to the GEMM-shaped stages), the panel below solves through
+/// [`fwd_multi_core_f32`], and the trailing downdate runs on
+/// [`kernel::sgemm`] in MC-row lower-triangle strips. The routine is
+/// serial by design — the f64 refinement downstream re-checks the true
+/// residual, the O(n²m) Gram dominates the mixed pipeline and *is*
+/// threaded (`ssyrk_parallel`), and a serial factor makes the
+/// "f32 threaded ≡ f32 serial bitwise" contract hold trivially here.
+///
+/// Breakdown (`d ≤ 0` or non-finite — the f32 overflow case) reports
+/// the same [`CholeskyError`] as the f64 path; the mixed session treats
+/// it as a fallback trigger rather than retrying in f32. Refinement
+/// convergence: with κ = κ(λI + SᵀS/m) and f32 unit roundoff u₃₂, each
+/// f64 refinement sweep against this factor contracts the error by
+/// ≈ κ·u₃₂, so the pipeline reaches f64-grade answers iff κ·u₃₂ ≪ 1.
+pub fn cholesky_in_place_f32(w: &mut [f32], n: usize) -> Result<(), CholeskyError> {
+    kernel::counters::record_cholesky();
+    assert_eq!(w.len(), n * n, "cholesky_in_place_f32 needs a square matrix");
+    if n == 0 {
+        return Ok(());
+    }
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + NB).min(n);
+        factor_diagonal_block_f32(w, n, k0, k1)?;
+        if k1 < n {
+            let nb = k1 - k0;
+            let rows = n - k1;
+            // Panel solve: L[k1.., k0..k1] = W[k1.., k0..k1] · L_d⁻ᵀ via
+            // the forward solve L_d · Xᵀ = Bᵀ on a transposed gather.
+            {
+                let (head, tail) = w.split_at_mut(k1 * n);
+                let mut btbuf = arena::take(Slot::Gather);
+                let bt = btbuf.ensure_f32(nb * rows);
+                for i in 0..rows {
+                    for j in 0..nb {
+                        bt[j * rows + i] = tail[i * n + k0 + j];
+                    }
+                }
+                let ld = &head[k0 * n + k0..(k1 - 1) * n + k1];
+                fwd_multi_core_f32(ld, n, nb, bt, rows);
+                for i in 0..rows {
+                    for j in 0..nb {
+                        tail[i * n + k0 + j] = bt[j * rows + i];
+                    }
+                }
+                arena::put(Slot::Gather, btbuf);
+            }
+            // Copy the solved panel, then downdate the trailing lower
+            // triangle in MC-row strips whose column span stops at the
+            // strip's last row (half the FLOPs of a square update).
+            let mut panelbuf = arena::take(Slot::Strip);
+            let panel = panelbuf.ensure_f32(rows * nb);
+            for i in 0..rows {
+                panel[i * nb..(i + 1) * nb]
+                    .copy_from_slice(&w[(k1 + i) * n + k0..(k1 + i) * n + k1]);
+            }
+            let panel: &[f32] = panel;
+            let mut i0 = k1;
+            while i0 < n {
+                let i1 = (i0 + kernel::MC).min(n);
+                kernel::sgemm(
+                    i1 - i0,
+                    i1 - k1,
+                    nb,
+                    -1.0,
+                    &panel[(i0 - k1) * nb..],
+                    nb,
+                    Trans::N,
+                    panel,
+                    nb,
+                    Trans::T,
+                    1.0,
+                    &mut w[i0 * n + k1..],
+                    n,
+                );
+                i0 = i1;
+            }
+            arena::put(Slot::Strip, panelbuf);
+        }
+        k0 = k1;
+    }
+    // Zero the strict upper triangle so the result is exactly L.
+    for i in 0..n {
+        for j in i + 1..n {
+            w[i * n + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Unblocked f32 Cholesky of `W[k0..k1, k0..k1]` — plain scalar f32
+/// accumulation (the block is ≤ NB wide, so the O(NB³) work is noise
+/// and tier independence keeps the factor reproducible everywhere).
+fn factor_diagonal_block_f32(
+    w: &mut [f32],
+    n: usize,
+    k0: usize,
+    k1: usize,
+) -> Result<(), CholeskyError> {
+    for j in k0..k1 {
+        let mut s = 0.0f32;
+        for p in k0..j {
+            let v = w[j * n + p];
+            s += v * v;
+        }
+        let d = w[j * n + j] - s;
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholeskyError { pivot: j, value: d as f64 });
+        }
+        let djj = d.sqrt();
+        w[j * n + j] = djj;
+        for i in j + 1..k1 {
+            let mut s = 0.0f32;
+            for p in k0..j {
+                s += w[i * n + p] * w[j * n + p];
+            }
+            w[i * n + j] = (w[i * n + j] - s) / djj;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -512,5 +645,56 @@ mod tests {
         assert!((l[(0, 0)] - 2.0).abs() < 1e-15);
         assert!((l[(1, 0)] - 1.0).abs() < 1e-15);
         assert!((l[(1, 1)] - 2f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn f32_factor_reconstructs_llt_within_single_precision() {
+        let mut rng = Rng::seed_from(27);
+        for &n in &[1usize, 5, NB - 1, NB, NB + 1, 2 * NB + 7, 150] {
+            let w = spd(n, &mut rng);
+            let mut l32: Vec<f32> = w.as_slice().iter().map(|&x| x as f32).collect();
+            cholesky_in_place_f32(&mut l32, n).unwrap();
+            // Strict upper triangle zeroed, diagonal positive.
+            for i in 0..n {
+                assert!(l32[i * n + i] > 0.0, "n={n} diag {i}");
+                for j in i + 1..n {
+                    assert_eq!(l32[i * n + j], 0.0, "n={n} ({i},{j})");
+                }
+            }
+            // LLᵀ ≈ W to f32 tolerance (κ-free check: elementwise).
+            let scale = w.max_abs().max(1.0);
+            for i in 0..n {
+                for j in 0..=i {
+                    let mut s = 0.0f64;
+                    for p in 0..=j {
+                        s += l32[i * n + p] as f64 * l32[j * n + p] as f64;
+                    }
+                    assert!(
+                        (s - w[(i, j)]).abs() < 2e-3 * scale * (n as f64).sqrt(),
+                        "f32 LLᵀ mismatch at n={n} ({i},{j}): {s} vs {}",
+                        w[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_factor_rejects_indefinite_and_non_finite() {
+        // Indefinite: same breakdown semantics as the f64 path.
+        let mut w = vec![0.0f32; 9];
+        for i in 0..3 {
+            w[i * 3 + i] = 1.0;
+        }
+        w[8] = -1.0;
+        let err = cholesky_in_place_f32(&mut w, 3).unwrap_err();
+        assert_eq!(err.pivot, 2);
+        assert!(err.value <= 0.0);
+        // An f32 overflow in the Gram (infinite diagonal) is a breakdown,
+        // not a garbage factor — the mixed session's fallback trigger.
+        let mut w = vec![0.0f32; 4];
+        w[0] = 1.0;
+        w[3] = f32::INFINITY;
+        assert!(cholesky_in_place_f32(&mut w, 2).is_err());
     }
 }

@@ -33,6 +33,13 @@
 //! their pool jobs); across tiers results are only tolerance-equal,
 //! with [`reference`] as the oracle.
 //!
+//! Since PR 6 the Gram has an f32 twin — [`syrk_f32`] /
+//! [`syrk_parallel_f32`] over [`kernel::syrk_panel_f32`] — feeding the
+//! mixed-precision sessions (f32 factorization + f64 iterative
+//! refinement; see `solver/chol.rs`). The f32 sweep keeps the same
+//! MC-panel partition, so the threaded variant is bit-identical to
+//! serial within a tier, exactly like the f64 one.
+//!
 //! The seed's scalar dot/axpy kernels live on in [`reference`] as test
 //! oracles and as the before/after baseline for the kernel benchmarks
 //! (`benches/gemm.rs` → `BENCH_PR1.json`, `BENCH_PR4.json`).
@@ -301,6 +308,102 @@ pub fn syrk_parallel(a: &Mat, lambda: f64, threads: usize) -> Mat {
     w
 }
 
+/// Mirror/damp tail step for the f32 Gram (raw row-major slice — the
+/// f32 path has no `Mat` wrapper).
+fn mirror_and_damp_f32(w: &mut [f32], n: usize, lambda: f32) {
+    for i in 0..n {
+        for j in 0..i {
+            w[j * n + i] = w[i * n + j];
+        }
+        w[i * n + i] += lambda;
+    }
+}
+
+/// f32 symmetric rank-k update: `W = A·Aᵀ + lambda·I` for row-major
+/// `A: n×m` (PR 6 — the mixed-precision Gram of Algorithm 1 line 1).
+///
+/// Same structure as [`syrk`]: MC row panels through the
+/// triangle-aware [`kernel::syrk_panel_f32`], upper triangle mirrored
+/// at the end. The mixed-precision sessions pass `lambda = 0` and
+/// overwrite the diagonal with an f64-accumulated damped diagonal
+/// afterwards (see `solver/chol.rs`), so single-precision cancellation
+/// never touches the damping term.
+pub fn syrk_f32(a: &[f32], n: usize, m: usize, lambda: f32, w: &mut [f32]) {
+    assert_eq!(a.len(), n * m, "syrk_f32 A shape");
+    assert_eq!(w.len(), n * n, "syrk_f32 W shape");
+    kernel::counters::record_syrk();
+    w.fill(0.0);
+    if n > 0 && m > 0 {
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + MC).min(n);
+            kernel::syrk_panel_f32(a, n, m, i0, i1, &mut w[i0 * n..i1 * n]);
+            i0 = i1;
+        }
+    }
+    mirror_and_damp_f32(w, n, lambda);
+}
+
+use super::kernel::{SendConstF32, SendMutF32};
+
+/// Multi-threaded [`syrk_f32`] on the persistent kernel pool — the same
+/// round-robin MC-panel deal as [`syrk_parallel`], so it is likewise
+/// **bit-identical** to the serial sweep for every thread count within
+/// a fixed ISA tier (each job re-establishes the caller's tier).
+pub fn syrk_parallel_f32(a: &[f32], n: usize, m: usize, lambda: f32, w: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), n * m, "syrk_parallel_f32 A shape");
+    assert_eq!(w.len(), n * n, "syrk_parallel_f32 W shape");
+    if threads <= 1 || n < 64 {
+        return syrk_f32(a, n, m, lambda, w);
+    }
+    kernel::counters::record_syrk();
+    w.fill(0.0);
+    let panels: Vec<(usize, usize)> = {
+        let mut v = Vec::new();
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + MC).min(n);
+            v.push((i0, i1));
+            i0 = i1;
+        }
+        v
+    };
+    let threads = threads.min(panels.len()).max(1);
+    {
+        let isa = kernel::active_isa();
+        let aptr = SendConstF32(a.as_ptr());
+        let wptr = SendMutF32(w.as_mut_ptr());
+        let mut jobs: Vec<kernel::KernelJob> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let mine: Vec<(usize, usize)> = panels
+                .iter()
+                .enumerate()
+                .filter(|(idx, _)| idx % threads == t)
+                .map(|(_, &p)| p)
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            jobs.push(Box::new(move || {
+                // SAFETY: A is only read; each job's W rows are disjoint
+                // from every other job's; run() below blocks until all
+                // jobs complete, so the caller's borrows stay live.
+                kernel::with_isa(isa, || {
+                    let adata = unsafe { std::slice::from_raw_parts(aptr.0, n * m) };
+                    for &(i0, i1) in &mine {
+                        let wrows = unsafe {
+                            std::slice::from_raw_parts_mut(wptr.0.add(i0 * n), (i1 - i0) * n)
+                        };
+                        kernel::syrk_panel_f32(adata, n, m, i0, i1, wrows);
+                    }
+                });
+            }));
+        }
+        kernel::global_pool().run(jobs);
+    }
+    mirror_and_damp_f32(w, n, lambda);
+}
+
 /// The seed's scalar kernels, kept verbatim as independent test oracles
 /// and as the pre-PR1 baseline for the kernel benchmarks. Do not use on
 /// hot paths.
@@ -556,6 +659,53 @@ mod tests {
                 w.as_slice(),
                 baseline.as_slice(),
                 "threads={threads} not bit-identical to threads=1"
+            );
+        }
+    }
+
+    #[test]
+    fn syrk_f32_tracks_f64_within_single_precision() {
+        let mut rng = Rng::seed_from(25);
+        for &(n, m) in &[(1, 1), (5, 3), (70, 130), (150, KC + 7)] {
+            let a = Mat::randn(n, m, &mut rng);
+            let a32: Vec<f32> = a.as_slice().iter().map(|&x| x as f32).collect();
+            let mut w32 = vec![0.0f32; n * n];
+            syrk_f32(&a32, n, m, 0.5, &mut w32);
+            let w64 = syrk(&a, 0.5);
+            // Entries are sums of m products of O(1) values: absolute
+            // error scales like eps32 · m.
+            let tol = 1e-5 * (m as f64) + 1e-5;
+            for i in 0..n {
+                for j in 0..n {
+                    let (x, y) = (w32[i * n + j] as f64, w64[(i, j)]);
+                    assert!(
+                        (x - y).abs() < tol,
+                        "syrk_f32 n={n} m={m} at ({i},{j}): {x} vs {y}"
+                    );
+                }
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(w32[i * n + j].to_bits(), w32[j * n + i].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_parallel_f32_bit_identical_across_thread_counts() {
+        let mut rng = Rng::seed_from(26);
+        let a = Mat::randn(MC + 37, KC + 13, &mut rng);
+        let (n, m) = a.shape();
+        let a32: Vec<f32> = a.as_slice().iter().map(|&x| x as f32).collect();
+        let mut baseline = vec![0.0f32; n * n];
+        syrk_f32(&a32, n, m, 1e-3, &mut baseline);
+        for &threads in &[1usize, 2, 8] {
+            let mut w = vec![0.0f32; n * n];
+            syrk_parallel_f32(&a32, n, m, 1e-3, &mut w, threads);
+            assert!(
+                w.iter().zip(&baseline).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "syrk_parallel_f32 threads={threads} not bit-identical to serial"
             );
         }
     }

@@ -72,7 +72,7 @@
 //! own worker.
 
 use super::arena::{self, Slot};
-use super::simd::{microkernel_4x8, microkernel_8x8};
+use super::simd::{microkernel_16x8_f32, microkernel_4x8, microkernel_8x8, microkernel_8x8_f32};
 use std::sync::mpsc::{channel, sync_channel, SyncSender};
 use std::sync::{Mutex, OnceLock};
 
@@ -93,6 +93,7 @@ pub mod counters {
 
     thread_local! {
         static DGEMM: Cell<u64> = Cell::new(0);
+        static SGEMM: Cell<u64> = Cell::new(0);
         static SYRK: Cell<u64> = Cell::new(0);
         static CHOLESKY: Cell<u64> = Cell::new(0);
         static TRSM: Cell<u64> = Cell::new(0);
@@ -100,6 +101,10 @@ pub mod counters {
 
     pub(crate) fn record_dgemm() {
         DGEMM.with(|c| c.set(c.get() + 1));
+    }
+
+    pub(crate) fn record_sgemm() {
+        SGEMM.with(|c| c.set(c.get() + 1));
     }
 
     pub(crate) fn record_syrk() {
@@ -117,6 +122,12 @@ pub mod counters {
     /// [`dgemm`](super::dgemm) invocations on this thread since start.
     pub fn dgemm_calls() -> u64 {
         DGEMM.with(|c| c.get())
+    }
+
+    /// f32 [`sgemm`](super::sgemm) invocations on this thread since
+    /// start (the PR 6 mixed-precision kernel path).
+    pub fn sgemm_calls() -> u64 {
+        SGEMM.with(|c| c.get())
     }
 
     /// Gram-stage front-end invocations
@@ -159,6 +170,17 @@ pub const MR: usize = 4;
 
 /// Micro-kernel columns: one cache line of f64 per accumulator row.
 pub const NR: usize = 8;
+
+/// f32 micro-kernel rows (PR 6): 8 rows × 8 lanes doubles the f64
+/// tile's row count at the same ymm register budget (one 8-float ymm
+/// accumulator per row on AVX2; AVX-512 pairs two panels into 16×8).
+pub const MR32: usize = 8;
+
+/// f32 micro-kernel columns: half a cache line of f32 per accumulator
+/// row — kept equal to [`NR`] so the f32 and f64 packed B layouts share
+/// panel arithmetic (and the arena slots, sized in elements, reuse the
+/// same byte capacity).
+pub const NR32: usize = 8;
 
 /// Reduction-dimension block: one `ap` micro-panel (KC×MR) plus one `bp`
 /// micro-panel (KC×NR) is 24 KiB — resident in L1 across the tile sweep.
@@ -681,6 +703,385 @@ pub fn syrk_panel(a: &[f64], n: usize, m: usize, i0: usize, i1: usize, wrows: &m
 }
 
 // ---------------------------------------------------------------------------
+// f32 drivers (PR 6 — mixed-precision path)
+// ---------------------------------------------------------------------------
+//
+// Structural mirror of the f64 driver stack above at the f32 tile
+// shape MR32×NR32 (AVX-512 pairs panels into 16×8): same BLIS
+// blocking (KC/MC/NC element counts, so the f32 packed panels occupy
+// half the bytes of the f64 ones and reuse the same warm arena slots),
+// same `p`-increasing per-element accumulation, same band-partition
+// threading — so the determinism contract carries over verbatim:
+// f32 threaded ≡ f32 serial bitwise at every thread count within a
+// fixed ISA tier. These drivers feed the mixed-precision sessions,
+// whose f64 iterative refinement (see `solver::chol`) converges
+// whenever κ(λI + SᵀS/m)·u₃₂ ≪ 1.
+
+/// Packed length of an f32 A block: `mb` rows in MR32-tall panels.
+#[inline]
+fn packed_a_len_f32(mb: usize, kc: usize) -> usize {
+    mb.div_ceil(MR32) * kc * MR32
+}
+
+/// Packed length of an f32 B block: `nb` columns in NR32-wide panels.
+#[inline]
+fn packed_b_len_f32(nb: usize, kc: usize) -> usize {
+    nb.div_ceil(NR32) * kc * NR32
+}
+
+/// [`pack_a_n`] at f32: MR32-tall, k-major micro-panels, zero-padded
+/// tail rows.
+fn pack_a_n_f32(dst: &mut [f32], src: &[f32], lda: usize, mb: usize, kc: usize) {
+    let panels = mb.div_ceil(MR32);
+    debug_assert_eq!(dst.len(), panels * kc * MR32);
+    dst.fill(0.0);
+    for ip in 0..panels {
+        let i0 = ip * MR32;
+        let rows = MR32.min(mb - i0);
+        let panel = &mut dst[ip * kc * MR32..(ip + 1) * kc * MR32];
+        for r in 0..rows {
+            let srow = &src[(i0 + r) * lda..(i0 + r) * lda + kc];
+            for (p, &v) in srow.iter().enumerate() {
+                panel[p * MR32 + r] = v;
+            }
+        }
+    }
+}
+
+/// [`pack_a_t`] at f32: the buffer holds the transpose, the packed
+/// layout is identical.
+fn pack_a_t_f32(dst: &mut [f32], src: &[f32], lda: usize, mb: usize, kc: usize) {
+    let panels = mb.div_ceil(MR32);
+    debug_assert_eq!(dst.len(), panels * kc * MR32);
+    dst.fill(0.0);
+    for ip in 0..panels {
+        let i0 = ip * MR32;
+        let rows = MR32.min(mb - i0);
+        let panel = &mut dst[ip * kc * MR32..(ip + 1) * kc * MR32];
+        for p in 0..kc {
+            let srow = &src[p * lda + i0..p * lda + i0 + rows];
+            for (r, &v) in srow.iter().enumerate() {
+                panel[p * MR32 + r] = v;
+            }
+        }
+    }
+}
+
+/// [`pack_b_n`] at f32: NR32-wide, k-major micro-panels, zero-padded
+/// tail columns.
+fn pack_b_n_f32(dst: &mut [f32], src: &[f32], ldb: usize, kc: usize, nb: usize) {
+    let panels = nb.div_ceil(NR32);
+    debug_assert_eq!(dst.len(), panels * kc * NR32);
+    dst.fill(0.0);
+    for jp in 0..panels {
+        let j0 = jp * NR32;
+        let cols = NR32.min(nb - j0);
+        let panel = &mut dst[jp * kc * NR32..(jp + 1) * kc * NR32];
+        for p in 0..kc {
+            let srow = &src[p * ldb + j0..p * ldb + j0 + cols];
+            for (c, &v) in srow.iter().enumerate() {
+                panel[p * NR32 + c] = v;
+            }
+        }
+    }
+}
+
+/// [`pack_b_t`] at f32.
+fn pack_b_t_f32(dst: &mut [f32], src: &[f32], ldb: usize, kc: usize, nb: usize) {
+    let panels = nb.div_ceil(NR32);
+    debug_assert_eq!(dst.len(), panels * kc * NR32);
+    dst.fill(0.0);
+    for jp in 0..panels {
+        let j0 = jp * NR32;
+        let cols = NR32.min(nb - j0);
+        let panel = &mut dst[jp * kc * NR32..(jp + 1) * kc * NR32];
+        for c in 0..cols {
+            let scol = &src[(j0 + c) * ldb..(j0 + c) * ldb + kc];
+            for (p, &v) in scol.iter().enumerate() {
+                panel[p * NR32 + c] = v;
+            }
+        }
+    }
+}
+
+/// [`writeback_tile`] at f32.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn writeback_tile_f32(
+    acc: &[[f32; NR32]],
+    nrows: usize,
+    ncols: usize,
+    alpha: f32,
+    c: &mut [f32],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+) {
+    for (r, accrow) in acc.iter().enumerate().take(nrows) {
+        let off = (row0 + r) * ldc + col0;
+        let crow = &mut c[off..off + ncols];
+        for (cv, av) in crow.iter_mut().zip(&accrow[..ncols]) {
+            *cv += alpha * av;
+        }
+    }
+}
+
+/// [`macro_kernel`] at f32: sweep the packed panels over an `mc × nc`
+/// block of C on the `isa` tier's 8×8 micro-kernel, pairing adjacent
+/// MR32-panels into the native 16×8 tile on AVX-512 (value-preserving —
+/// see [`simd::microkernel_16x8_f32`]).
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel_f32(
+    isa: KernelIsa,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    alpha: f32,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+) {
+    let apanels = mc.div_ceil(MR32);
+    let bpanels = nc.div_ceil(NR32);
+    let pair = isa == KernelIsa::Avx512;
+    for jp in 0..bpanels {
+        let j0 = jp * NR32;
+        let ncols = NR32.min(nc - j0);
+        let bpan = &bp[jp * kc * NR32..(jp + 1) * kc * NR32];
+        let mut ip = 0;
+        while ip < apanels {
+            let i0 = ip * MR32;
+            if pair && ip + 1 < apanels {
+                let apan0 = &ap[ip * kc * MR32..(ip + 1) * kc * MR32];
+                let apan1 = &ap[(ip + 1) * kc * MR32..(ip + 2) * kc * MR32];
+                let acc = microkernel_16x8_f32(isa, apan0, apan1, bpan);
+                let nrows = (2 * MR32).min(mc - i0);
+                writeback_tile_f32(&acc, nrows, ncols, alpha, c, ldc, ic + i0, jc + j0);
+                ip += 2;
+            } else {
+                let apan = &ap[ip * kc * MR32..(ip + 1) * kc * MR32];
+                let acc = microkernel_8x8_f32(isa, apan, bpan);
+                let nrows = MR32.min(mc - i0);
+                writeback_tile_f32(&acc, nrows, ncols, alpha, c, ldc, ic + i0, jc + j0);
+                ip += 1;
+            }
+        }
+    }
+}
+
+/// f32 packed GEMM: `C = alpha · op(A) · op(B) + beta · C` — the
+/// [`dgemm`] driver at f32 (same blocking, same packing-absorbed
+/// transposition, same arena slots).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    ta: Trans,
+    b: &[f32],
+    ldb: usize,
+    tb: Trans,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    counters::record_sgemm();
+    sgemm_core(active_isa(), m, n, k, alpha, a, lda, ta, b, ldb, tb, beta, c, ldc);
+}
+
+/// The counter-free serial f32 driver body, shared by [`sgemm`] and the
+/// per-band pool jobs of [`sgemm_threaded`].
+#[allow(clippy::too_many_arguments)]
+fn sgemm_core(
+    isa: KernelIsa,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    ta: Trans,
+    b: &[f32],
+    ldb: usize,
+    tb: Trans,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if beta != 1.0 {
+        for i in 0..m {
+            for cv in &mut c[i * ldc..i * ldc + n] {
+                *cv *= beta;
+            }
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    let mut apbuf = arena::take(Slot::PackA);
+    let mut bpbuf = arena::take(Slot::PackB);
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let bp = bpbuf.ensure_f32(packed_b_len_f32(nc, kc));
+            match tb {
+                Trans::N => pack_b_n_f32(bp, &b[pc * ldb + jc..], ldb, kc, nc),
+                Trans::T => pack_b_t_f32(bp, &b[jc * ldb + pc..], ldb, kc, nc),
+            }
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let ap = apbuf.ensure_f32(packed_a_len_f32(mc, kc));
+                match ta {
+                    Trans::N => pack_a_n_f32(ap, &a[ic * lda + pc..], lda, mc, kc),
+                    Trans::T => pack_a_t_f32(ap, &a[pc * lda + ic..], lda, mc, kc),
+                }
+                macro_kernel_f32(isa, mc, nc, kc, alpha, ap, bp, c, ldc, ic, jc);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+    arena::put(Slot::PackA, apbuf);
+    arena::put(Slot::PackB, bpbuf);
+}
+
+/// f32 raw-pointer Send wrappers — see [`SendMut`]/[`SendConst`] for
+/// the safety contract (the submitting call must outlive every job).
+#[derive(Clone, Copy)]
+pub(crate) struct SendMutF32(pub(crate) *mut f32);
+unsafe impl Send for SendMutF32 {}
+
+#[derive(Clone, Copy)]
+pub(crate) struct SendConstF32(pub(crate) *const f32);
+unsafe impl Send for SendConstF32 {}
+
+/// Multi-threaded f32 GEMM on the persistent kernel pool —
+/// [`dgemm_threaded`]'s MC-band partition at f32, **bit-identical to
+/// [`sgemm`] for every thread count** within a fixed ISA tier (the
+/// band partition changes packing locality, never the per-element
+/// summation order, and k is never split).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_threaded(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    ta: Trans,
+    b: &[f32],
+    ldb: usize,
+    tb: Trans,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+    threads: usize,
+) {
+    let blocks = m.div_ceil(MC.max(1));
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if threads <= 1 || blocks < 2 || flops < PAR_MIN_FLOPS {
+        sgemm(m, n, k, alpha, a, lda, ta, b, ldb, tb, beta, c, ldc);
+        return;
+    }
+    counters::record_sgemm();
+    let isa = active_isa();
+    let jobs_n = threads.min(blocks);
+    let chunk_blocks = blocks.div_ceil(jobs_n);
+    let aptr = SendConstF32(a.as_ptr());
+    let alen = a.len();
+    let bptr = SendConstF32(b.as_ptr());
+    let blen = b.len();
+    let cptr = SendMutF32(c.as_mut_ptr());
+    let clen = c.len();
+    let mut jobs: Vec<KernelJob> = Vec::with_capacity(jobs_n);
+    let mut r0 = 0usize;
+    while r0 < m {
+        let r1 = (r0 + chunk_blocks * MC).min(m);
+        jobs.push(Box::new(move || {
+            // SAFETY: as in `dgemm_threaded` — rows [r0, r1) of C are a
+            // contiguous region disjoint from every other job's; A and
+            // B are only read; the caller blocks in `run` below.
+            let a = unsafe { std::slice::from_raw_parts(aptr.0, alen) };
+            let b = unsafe { std::slice::from_raw_parts(bptr.0, blen) };
+            let cend = (r1 * ldc).min(clen);
+            let cband =
+                unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * ldc), cend - r0 * ldc) };
+            let asub = match ta {
+                Trans::N => &a[r0 * lda..],
+                Trans::T => &a[r0..],
+            };
+            sgemm_core(isa, r1 - r0, n, k, alpha, asub, lda, ta, b, ldb, tb, beta, cband, ldc);
+        }));
+        r0 = r1;
+    }
+    global_pool().run(jobs);
+}
+
+/// Lower-triangle f32 SYRK row panel — [`syrk_panel`] at f32:
+/// accumulates rows `[i0, i1)` of `W += A·Aᵀ` for `A: n×m`, touching
+/// only columns `0..i1`. A pure function of `(a, i0, i1)` and the
+/// active tier, so any panel-parallel schedule is bit-identical to the
+/// serial sweep within a tier. All tiers use the 8×8 micro-kernel here
+/// (the per-MR32-panel diagonal skip keeps the triangle logic simple,
+/// and pairing would not change a value anyway).
+pub fn syrk_panel_f32(a: &[f32], n: usize, m: usize, i0: usize, i1: usize, wrows: &mut [f32]) {
+    debug_assert!(i0 < i1 && i1 <= n);
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(wrows.len(), (i1 - i0) * n);
+    let isa = active_isa();
+    let mb = i1 - i0;
+    let jb = i1;
+    let mut apbuf = arena::take(Slot::PackA);
+    let mut bpbuf = arena::take(Slot::PackB);
+    let mut pc = 0;
+    while pc < m {
+        let kc = KC.min(m - pc);
+        let bp = bpbuf.ensure_f32(packed_b_len_f32(jb, kc));
+        pack_b_t_f32(bp, &a[pc..], m, kc, jb);
+        let ap = apbuf.ensure_f32(packed_a_len_f32(mb, kc));
+        pack_a_n_f32(ap, &a[i0 * m + pc..], m, mb, kc);
+        let apanels = mb.div_ceil(MR32);
+        let bpanels = jb.div_ceil(NR32);
+        for ip in 0..apanels {
+            let r0 = ip * MR32;
+            let nrows = MR32.min(mb - r0);
+            let glast = i0 + r0 + nrows - 1;
+            let apan = &ap[ip * kc * MR32..(ip + 1) * kc * MR32];
+            for jp in 0..bpanels {
+                let j0 = jp * NR32;
+                if j0 > glast {
+                    break;
+                }
+                let ncols = NR32.min(jb - j0);
+                let bpan = &bp[jp * kc * NR32..(jp + 1) * kc * NR32];
+                let acc = microkernel_8x8_f32(isa, apan, bpan);
+                for (r, accrow) in acc.iter().enumerate().take(nrows) {
+                    let off = (r0 + r) * n + j0;
+                    let crow = &mut wrows[off..off + ncols];
+                    for (cv, av) in crow.iter_mut().zip(&accrow[..ncols]) {
+                        *cv += av;
+                    }
+                }
+            }
+        }
+        pc += kc;
+    }
+    arena::put(Slot::PackA, apbuf);
+    arena::put(Slot::PackB, bpbuf);
+}
+
+// ---------------------------------------------------------------------------
 // Persistent kernel worker pool
 // ---------------------------------------------------------------------------
 
@@ -1054,5 +1455,93 @@ mod tests {
             dgemm(m, n, k, 1.0, &a, k, Trans::N, &b, n, Trans::N, 0.0, &mut c, n);
         }
         assert_eq!(counters::arena_allocs() - a0, 0, "steady-state dgemm must not allocate");
+    }
+
+    fn fill_f32(len: usize, seed: u64) -> Vec<f32> {
+        fill(len, seed).iter().map(|&x| x as f32).collect()
+    }
+
+    #[test]
+    fn sgemm_odd_shapes_and_layouts_match_naive() {
+        for &(m, n, k) in
+            &[(1, 1, 1), (3, 5, 7), (MR32, NR32, KC), (MR32 + 1, NR32 + 1, KC + 1), (13, 17, 300)]
+        {
+            let a = fill_f32(m * k, 11);
+            let b = fill_f32(k * n, 12);
+            let mut c = vec![0.0f32; m * n];
+            sgemm(m, n, k, 1.0, &a, k, Trans::N, &b, n, Trans::N, 0.0, &mut c, n);
+            // f64 oracle over the f32 inputs.
+            let want = naive(m, n, k, &|i, p| a[i * k + p] as f64, &|p, j| b[p * n + j] as f64);
+            let tol = 1e-4 * (k as f64).max(1.0) as f32;
+            for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+                assert!((x - *y as f32).abs() < tol, "({m},{n},{k}) idx {i}: {x} vs {y}");
+            }
+        }
+        // Transposed storage layouts pack to the same panels.
+        let (m, n, k) = (9, 11, 37);
+        let at = fill_f32(k * m, 13);
+        let bt = fill_f32(n * k, 14);
+        let want = naive(m, n, k, &|i, p| at[p * m + i] as f64, &|p, j| bt[j * k + p] as f64);
+        let mut c = vec![0.0f32; m * n];
+        sgemm(m, n, k, 1.0, &at, m, Trans::T, &bt, k, Trans::T, 0.0, &mut c, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - *y as f32).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn sgemm_threaded_bit_identical_to_serial() {
+        let (m, n, k) = (2 * MC + 9, 8 * NR32 + 3, KC / 2 + 1);
+        let a = fill_f32(m * k, 43);
+        let b = fill_f32(k * n, 44);
+        let mut c1 = fill_f32(m * n, 45);
+        let mut c2 = c1.clone();
+        sgemm(m, n, k, 1.5, &a, k, Trans::N, &b, n, Trans::N, 0.5, &mut c1, n);
+        sgemm_threaded(m, n, k, 1.5, &a, k, Trans::N, &b, n, Trans::N, 0.5, &mut c2, n, 4);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn syrk_panel_f32_matches_naive_lower_triangle() {
+        let (n, m) = (KC - 1, KC + 3);
+        let a = fill_f32(n * m, 15);
+        let mut w = vec![0.0f32; n * n];
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + MC).min(n);
+            syrk_panel_f32(&a, n, m, i0, i1, &mut w[i0 * n..i1 * n]);
+            i0 = i1;
+        }
+        let tol = 1e-3 * (m as f32);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = 0.0f64;
+                for p in 0..m {
+                    s += a[i * m + p] as f64 * a[j * m + p] as f64;
+                }
+                assert!((w[i * n + j] - s as f32).abs() < tol, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_and_f64_paths_share_warm_arena_slots() {
+        // The element-typed arena (PR 6): alternating f64 and f32 GEMMs
+        // at byte-compatible shapes must not grow the slots once warm.
+        let (m, n, k) = (MC + 3, NR + 5, KC + 9);
+        let a64 = fill(m * k, 60);
+        let b64 = fill(k * n, 61);
+        let mut c64 = vec![0.0; m * n];
+        let a32 = fill_f32(m * k, 62);
+        let b32 = fill_f32(k * n, 63);
+        let mut c32 = vec![0.0f32; m * n];
+        dgemm(m, n, k, 1.0, &a64, k, Trans::N, &b64, n, Trans::N, 0.0, &mut c64, n);
+        sgemm(m, n, k, 1.0, &a32, k, Trans::N, &b32, n, Trans::N, 0.0, &mut c32, n);
+        let a0 = counters::arena_allocs();
+        for _ in 0..3 {
+            dgemm(m, n, k, 1.0, &a64, k, Trans::N, &b64, n, Trans::N, 0.0, &mut c64, n);
+            sgemm(m, n, k, 1.0, &a32, k, Trans::N, &b32, n, Trans::N, 0.0, &mut c32, n);
+        }
+        assert_eq!(counters::arena_allocs() - a0, 0, "alternating precisions must not allocate");
     }
 }

@@ -32,6 +32,13 @@
 //! * [`qr`] — Householder QR, used as an independent test oracle.
 //! * [`complex`] — `c64` scalar and [`CMat`] with Hermitian Gram,
 //!   complex Cholesky and triangular solves for the SR variants (§3).
+//!
+//! Since PR 6 the engine carries an **f32 twin** of the Gram→factor→
+//! solve chain (`sgemm`, `syrk_f32`, `cholesky_in_place_f32`, f32
+//! triangular solves) for the mixed-precision sessions: factor in
+//! single precision, then recover f64 accuracy by iterative refinement
+//! against the f64 matvec (converges when κ(W)·u₃₂ ≪ 1; the sessions
+//! fall back to the f64 path otherwise — see `solver/chol.rs`).
 
 pub mod arena;
 pub mod chol_update;
@@ -48,12 +55,14 @@ pub mod trisolve;
 
 pub use chol_update::{chol_downdate_rank1, chol_update_rank1, UpdatableChol};
 pub use cholesky::{
-    cholesky, cholesky_in_place, cholesky_in_place_threaded, cholesky_threaded, CholeskyError,
+    cholesky, cholesky_in_place, cholesky_in_place_f32, cholesky_in_place_threaded,
+    cholesky_threaded, CholeskyError,
 };
 pub use complex::{c64, CMat};
 pub use eigh::eigh;
 pub use gemm::{
-    gemm, gemm_nt, gemm_nt_threaded, gemm_threaded, gemm_tn, gemm_tn_threaded, syrk, syrk_parallel,
+    gemm, gemm_nt, gemm_nt_threaded, gemm_threaded, gemm_tn, gemm_tn_threaded, syrk, syrk_f32,
+    syrk_parallel, syrk_parallel_f32,
 };
 pub use kernel::KernelConfig;
 pub use mat::Mat;
@@ -61,6 +70,7 @@ pub use simd::{active_isa, with_isa, KernelIsa};
 pub use qr::qr;
 pub use svd::{svd_eigh, svd_eigh_threaded, svd_jacobi, ThinSvd};
 pub use trisolve::{
-    solve_lower, solve_lower_multi, solve_lower_multi_threaded, solve_lower_transpose,
-    solve_lower_transpose_multi, solve_lower_transpose_multi_threaded,
+    solve_lower, solve_lower_f32, solve_lower_multi, solve_lower_multi_threaded,
+    solve_lower_transpose, solve_lower_transpose_f32, solve_lower_transpose_multi,
+    solve_lower_transpose_multi_threaded,
 };

@@ -10,12 +10,12 @@
 //! Cholesky diagonal factor and the blocked-TRSM inner cores — runs on
 //! that tier's `std::arch` kernel:
 //!
-//! | tier | micro-tile | dot/axpy width | requires |
-//! |------|-----------|----------------|----------|
-//! | `scalar` | 4×8 (LLVM autovec) | 16-way unrolled | nothing — guaranteed fallback |
-//! | `avx2`   | 4×8, 8 ymm accumulators, FMA | 4×4 f64 lanes | x86-64 AVX2+FMA |
-//! | `avx512` | 8×8, 8 zmm accumulators, FMA (4×8 edge tiles) | 4×8 f64 lanes | x86-64 AVX-512F (+AVX2/FMA) |
-//! | `neon`   | 4×8, 16 q-register accumulators, FMA | 8×2 f64 lanes | aarch64 (always on) |
+//! | tier | f64 micro-tile | f32 micro-tile (PR 6) | dot/axpy width | requires |
+//! |------|---------------|-----------------------|----------------|----------|
+//! | `scalar` | 4×8 (LLVM autovec) | 8×8 oracle | 16-way unrolled | nothing — guaranteed fallback |
+//! | `avx2`   | 4×8, 8 ymm accumulators, FMA | 8×8, 8 ymm | 4×4 f64 lanes | x86-64 AVX2+FMA |
+//! | `avx512` | 8×8, 8 zmm accumulators, FMA (4×8 edge tiles) | 16×8, 8 zmm (8×8 edges) | 4×8 f64 lanes | x86-64 AVX-512F (+AVX2/FMA) |
+//! | `neon`   | 4×8, 16 q-register accumulators, FMA | 8×8, 16 q-registers | 8×2 f64 lanes | aarch64 (always on) |
 //!
 //! ## Determinism contract (amended in PR 4)
 //!
@@ -41,7 +41,7 @@
 //! one process); `solver.isa` reaches the chol/rvb sessions through
 //! [`KernelConfig::isa`](super::kernel::KernelConfig).
 
-use super::kernel::{MR, NR};
+use super::kernel::{MR, MR32, NR, NR32};
 use std::cell::Cell;
 use std::sync::OnceLock;
 
@@ -377,6 +377,202 @@ pub(crate) fn microkernel_8x8(
     let mut out = [[0.0f64; NR]; 2 * MR];
     out[..MR].copy_from_slice(&top);
     out[MR..].copy_from_slice(&bot);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// f32 micro-kernels (PR 6 — mixed-precision path)
+// ---------------------------------------------------------------------------
+//
+// The f32 tiles double every lane count of the f64 tiles at the same
+// register budget: the base tile is MR32×NR32 = 8×8 on every tier
+// (scalar oracle, AVX2 ymm, NEON q-registers), and the AVX-512 tier
+// pairs two adjacent 8-row panels into a native 16×8 zmm kernel — the
+// same panel-pairing design as the f64 4×8 → 8×8 promotion, so the
+// macro-kernel logic is shared in shape.
+//
+// These kernels feed `kernel::sgemm`/`ssyrk` under the mixed-precision
+// sessions (`solver.precision = "mixed"`): the Gram and Cholesky factor
+// are computed here in f32 (unit roundoff u₃₂ ≈ 6·10⁻⁸) and the solve
+// is corrected by f64 iterative refinement. Convergence condition: one
+// refinement sweep contracts the error by ≈ κ(λI + SᵀS/m)·u₃₂ per
+// iteration, so the loop converges to f64-grade answers whenever
+// κ·u₃₂ ≪ 1 (κ ≲ 10⁶); beyond that the sessions detect stagnation and
+// fall back to the f64 factorization.
+//
+// Determinism: per C element every FMA tier computes one `p`-strictly-
+// increasing FMA chain (the scalar oracle keeps two-rounding seed
+// arithmetic), so AVX-512 panel pairing never changes a value and the
+// threaded band partition stays bitwise-deterministic within a tier.
+
+/// The scalar MR32×NR32 f32 micro-kernel — the f32 oracle tier.
+/// Separate multiply and add roundings (seed arithmetic), `p` strictly
+/// increasing per C element.
+fn mk8x8_scalar_f32(ap: &[f32], bp: &[f32]) -> [[f32; NR32]; MR32] {
+    let mut acc = [[0.0f32; NR32]; MR32];
+    for (a, b) in ap.chunks_exact(MR32).zip(bp.chunks_exact(NR32)) {
+        let a: &[f32; MR32] = a.try_into().unwrap();
+        let b: &[f32; NR32] = b.try_into().unwrap();
+        for r in 0..MR32 {
+            let ar = a[r];
+            for j in 0..NR32 {
+                acc[r][j] += ar * b[j];
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2+FMA 8×8 f32: 8 ymm accumulators (one full C row of 8 floats
+/// each), 1 B load and 8 broadcasts per k-step. Single FMA chain per C
+/// element, `p` strictly increasing.
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk8x8_avx2_f32(ap: &[f32], bp: &[f32]) -> [[f32; NR32]; MR32] {
+    use core::arch::x86_64::*;
+    let kc = bp.len() / NR32;
+    debug_assert_eq!(ap.len(), kc * MR32);
+    let mut acc = [_mm256_setzero_ps(); MR32];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let bv = _mm256_loadu_ps(b);
+        for (r, acc) in acc.iter_mut().enumerate() {
+            *acc = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(r)), bv, *acc);
+        }
+        a = a.add(MR32);
+        b = b.add(NR32);
+    }
+    let mut out = [[0.0f32; NR32]; MR32];
+    for (row, acc) in out.iter_mut().zip(acc) {
+        _mm256_storeu_ps(row.as_mut_ptr(), acc);
+    }
+    out
+}
+
+/// NEON 8×8 f32: 16 q-register accumulators (8 rows × 2 lanes-of-4),
+/// FMA via `vfmaq_f32`. Same per-element `p`-increasing FMA chain as
+/// the x86 tiers.
+///
+/// # Safety
+/// Caller must be on aarch64 with NEON (baseline for the arch).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mk8x8_neon_f32(ap: &[f32], bp: &[f32]) -> [[f32; NR32]; MR32] {
+    use core::arch::aarch64::*;
+    let kc = bp.len() / NR32;
+    debug_assert_eq!(ap.len(), kc * MR32);
+    let mut acc = [[vdupq_n_f32(0.0); 2]; MR32];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = vld1q_f32(b);
+        let b1 = vld1q_f32(b.add(4));
+        for (r, acc) in acc.iter_mut().enumerate() {
+            let ar = vdupq_n_f32(*a.add(r));
+            acc[0] = vfmaq_f32(acc[0], ar, b0);
+            acc[1] = vfmaq_f32(acc[1], ar, b1);
+        }
+        a = a.add(MR32);
+        b = b.add(NR32);
+    }
+    let mut out = [[0.0f32; NR32]; MR32];
+    for (row, acc) in out.iter_mut().zip(acc) {
+        vst1q_f32(row.as_mut_ptr(), acc[0]);
+        vst1q_f32(row.as_mut_ptr().add(4), acc[1]);
+    }
+    out
+}
+
+/// AVX-512F 16×8 f32 over two adjacent MR32-panels, column-major
+/// accumulators: `acc[j]` is one zmm holding C[0..16][j]. Per k-step
+/// the two 8-row A panels are fused into one zmm
+/// (`_mm512_shuffle_f32x4`, an AVX-512F op — `insertf32x8` would need
+/// AVX-512DQ) and FMA'd against 8 broadcasts of the B row. Per C
+/// element this is the *same* single `p`-increasing FMA chain as the
+/// 8×8 f32 kernels, so pairing panels never changes a value.
+///
+/// # Safety
+/// Caller must ensure AVX-512F is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn mk16x8_avx512_f32(ap0: &[f32], ap1: &[f32], bp: &[f32]) -> [[f32; NR32]; 2 * MR32] {
+    use core::arch::x86_64::*;
+    let kc = bp.len() / NR32;
+    debug_assert_eq!(ap0.len(), kc * MR32);
+    debug_assert_eq!(ap1.len(), kc * MR32);
+    let mut acc = [_mm512_setzero_ps(); NR32];
+    let mut a0 = ap0.as_ptr();
+    let mut a1 = ap1.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        // av = [ap0 row (8 f32), ap1 row (8 f32)] — 0x44 selects 128-bit
+        // lanes [x0, x1, y0, y1], i.e. the low 256 bits of each operand.
+        let lo = _mm512_castps256_ps512(_mm256_loadu_ps(a0));
+        let hi = _mm512_castps256_ps512(_mm256_loadu_ps(a1));
+        let av = _mm512_shuffle_f32x4(lo, hi, 0x44);
+        for (j, acc) in acc.iter_mut().enumerate() {
+            *acc = _mm512_fmadd_ps(av, _mm512_set1_ps(*b.add(j)), *acc);
+        }
+        a0 = a0.add(MR32);
+        a1 = a1.add(MR32);
+        b = b.add(NR32);
+    }
+    let mut out = [[0.0f32; NR32]; 2 * MR32];
+    for (j, acc) in acc.iter().enumerate() {
+        let mut col = [0.0f32; 2 * MR32];
+        _mm512_storeu_ps(col.as_mut_ptr(), *acc);
+        for (r, c) in col.iter().enumerate() {
+            out[r][j] = *c;
+        }
+    }
+    out
+}
+
+/// Dispatch the 8×8 f32 micro-kernel for `isa`. The AVX-512 tier uses
+/// the AVX2 8×8 kernel here (AVX-512F detection implies AVX2+FMA) —
+/// its native 16×8 tile lives in [`microkernel_16x8_f32`] and is only
+/// engaged when two adjacent row panels are available.
+#[inline]
+pub(crate) fn microkernel_8x8_f32(isa: KernelIsa, ap: &[f32], bp: &[f32]) -> [[f32; NR32]; MR32] {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(isa, KernelIsa::Avx2 | KernelIsa::Avx512) {
+        // SAFETY: tier selection guarantees AVX2+FMA on this host.
+        return unsafe { mk8x8_avx2_f32(ap, bp) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == KernelIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { mk8x8_neon_f32(ap, bp) };
+    }
+    let _ = isa;
+    mk8x8_scalar_f32(ap, bp)
+}
+
+/// Two stacked 8×8 f32 tiles (`ap0` rows on top of `ap1` rows) in one
+/// call. On the AVX-512 tier this is the native 16×8 zmm kernel; every
+/// other tier computes the two 8×8 tiles back to back (identical
+/// arithmetic, so the macro-kernel may pair unconditionally).
+#[inline]
+pub(crate) fn microkernel_16x8_f32(
+    isa: KernelIsa,
+    ap0: &[f32],
+    ap1: &[f32],
+    bp: &[f32],
+) -> [[f32; NR32]; 2 * MR32] {
+    #[cfg(target_arch = "x86_64")]
+    if isa == KernelIsa::Avx512 {
+        // SAFETY: tier selection guarantees AVX-512F on this host.
+        return unsafe { mk16x8_avx512_f32(ap0, ap1, bp) };
+    }
+    let top = microkernel_8x8_f32(isa, ap0, bp);
+    let bot = microkernel_8x8_f32(isa, ap1, bp);
+    let mut out = [[0.0f32; NR32]; 2 * MR32];
+    out[..MR32].copy_from_slice(&top);
+    out[MR32..].copy_from_slice(&bot);
     out
 }
 
@@ -761,6 +957,60 @@ mod tests {
                             (got8[r][j] - want8[r][j]).abs() <= 1e-12 * (kc as f64),
                             "8x8[{isa}] kc={kc} ({r},{j})"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_tier_f32_microkernels_match_scalar_tile() {
+        for kc in [1usize, 2, 3, 8, 37] {
+            let ap0: Vec<f32> = fill(kc * MR32, 8).iter().map(|&x| x as f32).collect();
+            let ap1: Vec<f32> = fill(kc * MR32, 9).iter().map(|&x| x as f32).collect();
+            let bp: Vec<f32> = fill(kc * NR32, 10).iter().map(|&x| x as f32).collect();
+            let want8 = mk8x8_scalar_f32(&ap0, &bp);
+            let want16 = {
+                let mut w = [[0.0f32; NR32]; 2 * MR32];
+                w[..MR32].copy_from_slice(&mk8x8_scalar_f32(&ap0, &bp));
+                w[MR32..].copy_from_slice(&mk8x8_scalar_f32(&ap1, &bp));
+                w
+            };
+            let tol = 1e-4 * (kc as f32).max(1.0);
+            for &isa in &KernelIsa::supported_tiers() {
+                let got8 = microkernel_8x8_f32(isa, &ap0, &bp);
+                let got16 = microkernel_16x8_f32(isa, &ap0, &ap1, &bp);
+                for r in 0..MR32 {
+                    for j in 0..NR32 {
+                        assert!(
+                            (got8[r][j] - want8[r][j]).abs() <= tol,
+                            "f32 8x8[{isa}] kc={kc} ({r},{j}): {} vs {}",
+                            got8[r][j],
+                            want8[r][j]
+                        );
+                    }
+                }
+                for r in 0..2 * MR32 {
+                    for j in 0..NR32 {
+                        assert!(
+                            (got16[r][j] - want16[r][j]).abs() <= tol,
+                            "f32 16x8[{isa}] kc={kc} ({r},{j})"
+                        );
+                    }
+                }
+                // Panel pairing is value-preserving within a tier: the
+                // 16×8 tile must equal the two 8×8 tiles bitwise (the
+                // paired kernel runs the same per-element FMA chain).
+                let top = microkernel_8x8_f32(isa, &ap0, &bp);
+                let bot = microkernel_8x8_f32(isa, &ap1, &bp);
+                for r in 0..MR32 {
+                    for j in 0..NR32 {
+                        assert_eq!(
+                            got16[r][j].to_bits(),
+                            top[r][j].to_bits(),
+                            "f32 pairing changed a value [{isa}] kc={kc} ({r},{j})"
+                        );
+                        assert_eq!(got16[MR32 + r][j].to_bits(), bot[r][j].to_bits());
                     }
                 }
             }

@@ -182,6 +182,151 @@ pub(crate) fn bwd_multi_core(l: &[f64], ldl: usize, nb: usize, z: &mut [f64], k:
     }
 }
 
+// ---------------------------------------------------------------------------
+// f32 substitution cores (PR 6 — mixed-precision path)
+// ---------------------------------------------------------------------------
+//
+// The mixed-precision sessions run the triangular solves in f32 against
+// the f32 Cholesky factor, then correct the result with f64 iterative
+// refinement (`solver::chol`) — each sweep contracts the error by
+// ≈ κ·u₃₂, so the f32 substitution only needs to be a contraction, not
+// exact. The unblocked sweeps here are plain scalar f32 (identical on
+// every tier — only the sgemm panel updates dispatch on the ISA), and
+// the cores are serial: the within-tier "threaded ≡ serial" contract
+// holds trivially, and the O(n²k) panel FLOPs already run at f32 GEMM
+// speed.
+
+/// Scalar f32 `y += alpha · x`, 8-way unrolled — the f32 counterpart of
+/// [`axpy_isa`]'s scalar tier (kept tier-independent on purpose: the
+/// substitution arithmetic is then identical across tiers, and only the
+/// GEMM panel updates carry tier-specific rounding).
+fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let mut cx = x.chunks_exact(8);
+    let mut cy = y.chunks_exact_mut(8);
+    for (xs, ys) in (&mut cx).zip(&mut cy) {
+        for l in 0..8 {
+            ys[l] += alpha * xs[l];
+        }
+    }
+    for (x, y) in cx.remainder().iter().zip(cy.into_remainder()) {
+        *y += alpha * x;
+    }
+}
+
+/// Solve `L y = y` in place for a row-major n×n f32 lower factor.
+pub fn solve_lower_f32(l: &[f32], n: usize, y: &mut [f32]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(y.len(), n);
+    for i in 0..n {
+        let row = &l[i * n..i * n + i + 1];
+        let mut s = 0.0f32;
+        for (lij, yj) in row[..i].iter().zip(y[..i].iter()) {
+            s += lij * yj;
+        }
+        y[i] = (y[i] - s) / row[i];
+    }
+}
+
+/// Solve `Lᵀ z = z` in place for a row-major n×n f32 lower factor.
+pub fn solve_lower_transpose_f32(l: &[f32], n: usize, z: &mut [f32]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(z.len(), n);
+    for i in (0..n).rev() {
+        let row = &l[i * n..i * n + i + 1];
+        let zi = z[i] / row[i];
+        z[i] = zi;
+        for (lij, zj) in row[..i].iter().zip(z[..i].iter_mut()) {
+            *zj -= lij * zi;
+        }
+    }
+}
+
+/// [`fwd_multi_core`] at f32: blocked in-place forward solve of
+/// `L Y = Y` for an `nb × nb` f32 lower block (leading dimension `ldl`)
+/// against a contiguous row-major `nb × k` RHS. Panel updates run on
+/// [`kernel::sgemm`]. Shared by the f32 Cholesky panel solve and the
+/// mixed-precision multi-RHS session solve.
+pub(crate) fn fwd_multi_core_f32(l: &[f32], ldl: usize, nb: usize, y: &mut [f32], k: usize) {
+    let mut j0 = 0;
+    while j0 < nb {
+        let j1 = (j0 + TB).min(nb);
+        for i in j0..j1 {
+            let (head, tail) = y.split_at_mut(i * k);
+            let yi = &mut tail[..k];
+            for j in j0..i {
+                let lij = l[i * ldl + j];
+                if lij != 0.0 {
+                    axpy_f32(-lij, &head[j * k..(j + 1) * k], yi);
+                }
+            }
+            let inv = 1.0 / l[i * ldl + i];
+            for v in yi.iter_mut() {
+                *v *= inv;
+            }
+        }
+        if j1 < nb {
+            let (head, tail) = y.split_at_mut(j1 * k);
+            kernel::sgemm(
+                nb - j1,
+                k,
+                j1 - j0,
+                -1.0,
+                &l[j1 * ldl + j0..],
+                ldl,
+                Trans::N,
+                &head[j0 * k..],
+                k,
+                Trans::N,
+                1.0,
+                tail,
+                k,
+            );
+        }
+        j0 = j1;
+    }
+}
+
+/// [`bwd_multi_core`] at f32: blocked in-place solve of `Lᵀ Z = Z`.
+pub(crate) fn bwd_multi_core_f32(l: &[f32], ldl: usize, nb: usize, z: &mut [f32], k: usize) {
+    let mut j1 = nb;
+    while j1 > 0 {
+        let j0 = j1.saturating_sub(TB);
+        for i in (j0..j1).rev() {
+            let (head, tail) = z.split_at_mut(i * k);
+            let zi = &mut tail[..k];
+            let inv = 1.0 / l[i * ldl + i];
+            for v in zi.iter_mut() {
+                *v *= inv;
+            }
+            for j in j0..i {
+                let lij = l[i * ldl + j];
+                if lij != 0.0 {
+                    axpy_f32(-lij, &*zi, &mut head[j * k..(j + 1) * k]);
+                }
+            }
+        }
+        if j0 > 0 {
+            let (head, tail) = z.split_at_mut(j0 * k);
+            kernel::sgemm(
+                j0,
+                k,
+                j1 - j0,
+                -1.0,
+                &l[j0 * ldl..],
+                ldl,
+                Trans::T,
+                &tail[..(j1 - j0) * k],
+                k,
+                Trans::N,
+                1.0,
+                head,
+                k,
+            );
+        }
+        j1 = j0;
+    }
+}
+
 /// Multi-RHS forward solve: `L Y = B` where `B` is n×k.
 ///
 /// Blocked: rows `[j0, j1)` are solved unblocked against the diagonal
@@ -461,6 +606,51 @@ mod tests {
         let x = solve_lower_transpose(&l, &solve_lower(&l, &b));
         for (u, v) in x.iter().zip(&x_true) {
             assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn f32_solves_track_f64_within_single_precision() {
+        let mut rng = Rng::seed_from(37);
+        for &n in &[1usize, 7, TB, TB + 9, 2 * TB + 5] {
+            let l = random_lower(n, &mut rng);
+            let l32: Vec<f32> = l.as_slice().iter().map(|&x| x as f32).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // Vector forward + transpose solves vs the f64 reference.
+            let y64 = solve_lower(&l, &b);
+            let z64 = solve_lower_transpose(&l, &y64);
+            let mut y32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+            solve_lower_f32(&l32, n, &mut y32);
+            let mut z32 = y32.clone();
+            solve_lower_transpose_f32(&l32, n, &mut z32);
+            let scale = z64.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
+            for i in 0..n {
+                assert!(
+                    (z32[i] as f64 - z64[i]).abs() <= 1e-3 * scale * (n as f64).sqrt(),
+                    "n={n} i={i}: {} vs {}",
+                    z32[i],
+                    z64[i]
+                );
+            }
+            // Blocked multi-RHS cores agree with the vector solves.
+            let k = 3;
+            let bm: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut ym: Vec<f32> = bm.iter().map(|&x| x as f32).collect();
+            fwd_multi_core_f32(&l32, n, n, &mut ym, k);
+            bwd_multi_core_f32(&l32, n, n, &mut ym, k);
+            for col in 0..k {
+                let bcol: Vec<f64> = (0..n).map(|i| bm[i * k + col]).collect();
+                let mut vcol: Vec<f32> = bcol.iter().map(|&x| x as f32).collect();
+                solve_lower_f32(&l32, n, &mut vcol);
+                solve_lower_transpose_f32(&l32, n, &mut vcol);
+                let scale = vcol.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+                for i in 0..n {
+                    assert!(
+                        (ym[i * k + col] - vcol[i]).abs() <= 1e-3 * scale,
+                        "multi n={n} ({i},{col})"
+                    );
+                }
+            }
         }
     }
 }

@@ -4,7 +4,7 @@
 //! dngd solve  --n 256 --m 8192 [--lambda 1e-3] [--solver chol|eigh|svda|naive|cg|all]
 //! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd]
 //! dngd vmc    [--config cfg.toml] [--set section.key=value]…
-//! dngd bench  --table1 | --scaling | --cg | --kernels [--scale small|paper] [--json out.json]
+//! dngd bench  --table1 | --scaling | --cg | --kernels | --precision [--scale small|paper] [--json out.json]
 //! dngd artifacts [--dir artifacts]
 //! ```
 //!
@@ -116,7 +116,7 @@ USAGE:
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -183,6 +183,12 @@ fn cmd_solve(args: &[String]) -> Result<(), String> {
     } else {
         vec![SolverKind::parse(which).ok_or_else(|| format!("unknown solver {which:?}"))?]
     };
+    // Per-kind option compatibility (no-silent-ignore): e.g.
+    // `--solver cg --set solver.precision=mixed` is a hard error naming
+    // the kinds that do support the mode, not a silent f64 downgrade.
+    for kind in &kinds {
+        registry.opts.validate_for(*kind)?;
+    }
     for kind in kinds {
         // rvb requires v = Sᵀf; give it its native structured input so the
         // row documents the fast path instead of always printing N/A.
@@ -354,8 +360,8 @@ fn cmd_vmc(args: &[String]) -> Result<(), String> {
 fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
-        "table1", "scaling", "cg", "kernels", "sessions", "threads", "streaming", "scale",
-        "json", "json-simd", "quick",
+        "table1", "scaling", "cg", "kernels", "sessions", "threads", "streaming", "precision",
+        "scale", "json", "json-simd", "quick",
     ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
@@ -421,10 +427,22 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
             false,
         )
         .map_err(|e| e.to_string())?;
+    } else if a.has("precision") {
+        // PR 6: f32 vs f64 GEMM/SYRK kernel throughput per tier plus the
+        // mixed-vs-f64 end-to-end session; the ≥1.5× kernel acceptance
+        // assert lives in `cargo bench --bench gemm` full mode, not the
+        // CLI path.
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR6.json");
+        dngd::bench_tables::precision_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
         return Err(
             "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads | \
-             --streaming"
+             --streaming | --precision"
                 .into(),
         );
     }

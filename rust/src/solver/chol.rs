@@ -18,13 +18,29 @@
 //! Levenberg–Marquardt backoff) repeats only the O(n³) Cholesky — zero
 //! Gram GEMMs, pinned by a kernel-counter test — and multi-RHS solves go
 //! through the blocked TRSM instead of a loop of vector substitutions.
+//!
+//! Since PR 6 the session has a **mixed-precision mode**
+//! (`solver.precision = mixed`): the Gram SYRK, the Cholesky and the
+//! triangular solves run in f32 (≈2× kernel throughput, half the
+//! factor footprint), the damped diagonal is accumulated in f64, and
+//! every right-hand side is refined against the f64 true residual
+//! `r = v − (SᵀS + λI)x` until it meets `solver.tol` — recovering full
+//! f64 accuracy whenever κ(W)·u₃₂ ≪ 1. Outside that regime (f32
+//! overflow/subnormal Gram, factorization breakdown, refinement
+//! stagnation) the session *latches back onto the f64 path*, observable
+//! through [`mixed_counters::fallbacks`].
 
-use super::session::{check_lambda, refactor_damped, undamped_err};
+use super::session::{check_lambda, refactor_damped, undamped_err, Precision};
 use super::{DampedSolver, Factorization, SolveError};
 use crate::linalg::chol_update::UpdatableChol;
-use crate::linalg::gemm::{gemm_nt_threaded, gemm_tn_threaded, syrk, syrk_parallel};
+use crate::linalg::gemm::{
+    gemm_nt_threaded, gemm_tn_threaded, syrk, syrk_parallel, syrk_parallel_f32,
+};
+use crate::linalg::mat::norm2;
+use crate::linalg::trisolve::{bwd_multi_core_f32, fwd_multi_core_f32};
 use crate::linalg::{
-    cholesky_threaded, solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
+    cholesky_in_place_f32, cholesky_threaded, solve_lower, solve_lower_f32,
+    solve_lower_multi_threaded, solve_lower_transpose, solve_lower_transpose_f32,
     solve_lower_transpose_multi_threaded, KernelConfig, KernelIsa, Mat,
 };
 
@@ -174,6 +190,379 @@ pub(crate) fn rotate_gram_session(
     Ok(())
 }
 
+/// Mixed-precision session telemetry (PR 6) — thread-local, in the
+/// style of [`kernel::counters`](crate::linalg::kernel::counters).
+///
+/// The fallback counter is the *observable* for the mixed-precision
+/// escape hatches: an f32 overflow/subnormal Gram, an f32 factorization
+/// breakdown, a stagnating refinement loop and a streaming rotation all
+/// latch the session back onto the f64 path and bump it (pinned by
+/// `rust/tests/precision.rs`).
+pub mod mixed_counters {
+    use std::cell::Cell;
+
+    thread_local! {
+        static FALLBACKS: Cell<u64> = const { Cell::new(0) };
+        static FACTORS: Cell<u64> = const { Cell::new(0) };
+        static REFINE_SWEEPS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Times a mixed-precision session on this thread fell back to the
+    /// f64 path (overflow/subnormal Gram, f32 breakdown, refinement
+    /// stagnation, streaming rotation).
+    pub fn fallbacks() -> u64 {
+        FALLBACKS.with(|c| c.get())
+    }
+
+    pub(crate) fn record_fallback() {
+        FALLBACKS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Completed f32 factorizations.
+    pub fn mixed_factors() -> u64 {
+        FACTORS.with(|c| c.get())
+    }
+
+    pub(crate) fn record_mixed_factor() {
+        FACTORS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Total refinement correction sweeps applied by converged mixed
+    /// solves (a converged solve that needed no correction adds 0).
+    pub fn refine_sweeps() -> u64 {
+        REFINE_SWEEPS.with(|c| c.get())
+    }
+
+    pub(crate) fn record_refine_sweeps(k: u64) {
+        REFINE_SWEEPS.with(|c| c.set(c.get() + k));
+    }
+}
+
+use mixed_counters::{record_fallback, record_mixed_factor, record_refine_sweeps};
+
+/// Iterative-refinement sweep budget. Each sweep contracts the error by
+/// ≈κ(W)·u₃₂, so anything that converges at all converges well inside
+/// this; the stagnation check below usually fires long before the cap.
+const MAX_REFINE_SWEEPS: usize = 40;
+
+/// A sweep must shrink the true residual by at least this factor or the
+/// loop is declared stagnant (κ(W)·u₃₂ too close to 1) and the session
+/// falls back to f64. Legitimate slow contractions near the κ ≈ 1e7
+/// boundary sit around 0.3–0.6; beyond 0.7 the remaining sweeps would
+/// be noise.
+const STAGNATION_FACTOR: f64 = 0.7;
+
+/// f32 state of a `solver.precision = mixed` chol session: the f32
+/// score copy, un-damped f32 Gram, f64-accumulated Gram diagonal, and
+/// the current f32 factor, plus persistent refinement scratch (the
+/// solve hot path stays allocation-free once shapes are warm).
+///
+/// Numerics: the factorization carries f32 rounding (u₃₂ ≈ 6e-8), so a
+/// single Woodbury pass through the f32 factor has relative error
+/// O(κ(W)·u₃₂). Refinement against the **f64** matvec residual
+/// `r = v − (SᵀS + λI)x` contracts that error by the same factor per
+/// sweep, recovering full f64 accuracy whenever κ(W)·u₃₂ ≪ 1; the
+/// stagnation check catches the other side of the boundary.
+struct MixedState {
+    tol: f64,
+    /// Row-major n×m f32 copy of the score window.
+    s32: Vec<f32>,
+    /// Un-damped f32 Gram `S₃₂S₃₂ᵀ` (n×n).
+    w32: Vec<f32>,
+    /// diag(SSᵀ) accumulated in f64 — the damped diagonal
+    /// `diag[i] + λ` is formed in f64 and rounded once, so the damping
+    /// term is never lost to single-precision cancellation.
+    diag: Vec<f64>,
+    /// `Chol₃₂(W₃₂ + (diag+λ)Ĩ)` for the current λ (valid iff
+    /// `factored`).
+    l32: Vec<f32>,
+    factored: bool,
+    ready: bool,
+    // Persistent scratch: n-sized f32/f64 solve vectors, m-sized
+    // residual/correction vectors.
+    un: Vec<f32>,
+    zn: Vec<f64>,
+    sx: Vec<f64>,
+    rm: Vec<f64>,
+    dm: Vec<f64>,
+}
+
+impl MixedState {
+    fn new(tol: f64) -> Self {
+        MixedState {
+            tol,
+            s32: Vec::new(),
+            w32: Vec::new(),
+            diag: Vec::new(),
+            l32: Vec::new(),
+            factored: false,
+            ready: false,
+            un: Vec::new(),
+            zn: Vec::new(),
+            sx: Vec::new(),
+            rm: Vec::new(),
+            dm: Vec::new(),
+        }
+    }
+
+    /// Form the f32 score copy, the f32 Gram (threaded SYRK) and the
+    /// f64 Gram diagonal. Returns `false` — recording a fallback — when
+    /// the scores or the Gram overflow f32, or the Gram diagonal
+    /// degenerates to subnormal/zero in f32 (either way the f32 factor
+    /// would be meaningless). Call inside the session's kernel scope.
+    fn prepare(&mut self, s: &Mat, threads: usize) -> bool {
+        if self.ready {
+            return true;
+        }
+        let (n, m) = s.shape();
+        self.s32.clear();
+        self.s32.extend(s.as_slice().iter().map(|&x| x as f32));
+        if self.s32.iter().any(|x| !x.is_finite()) {
+            record_fallback();
+            return false;
+        }
+        self.w32.resize(n * n, 0.0);
+        let MixedState { s32, w32, .. } = self;
+        syrk_parallel_f32(s32, n, m, 0.0, w32, threads);
+        self.diag.clear();
+        self.diag.extend((0..n).map(|i| s.row(i).iter().map(|&x| x * x).sum::<f64>()));
+        let bad = self.w32.iter().any(|x| !x.is_finite())
+            || self.diag.iter().any(|&d| {
+                d > f32::MAX as f64 || (d > 0.0 && (d as f32) < f32::MIN_POSITIVE)
+            });
+        if bad {
+            record_fallback();
+            return false;
+        }
+        self.ready = true;
+        true
+    }
+
+    /// Factor `W₃₂ + (diag + λ)Ĩ` in f32. `false` (fallback recorded)
+    /// on a damped diagonal outside f32 normal range or a Cholesky
+    /// breakdown — a breakdown here may be an f32 artifact, so the
+    /// caller retries in f64 rather than surfacing NPD directly.
+    fn factor(&mut self, lambda: f64, n: usize) -> bool {
+        debug_assert!(self.ready);
+        self.factored = false;
+        self.l32.clear();
+        self.l32.extend_from_slice(&self.w32);
+        for i in 0..n {
+            let d = (self.diag[i] + lambda) as f32;
+            if !d.is_finite() || d < f32::MIN_POSITIVE {
+                record_fallback();
+                return false;
+            }
+            self.l32[i * n + i] = d;
+        }
+        if cholesky_in_place_f32(&mut self.l32, n).is_err() {
+            record_fallback();
+            return false;
+        }
+        record_mixed_factor();
+        self.factored = true;
+        true
+    }
+
+    /// One Woodbury pass through the f32 factor:
+    /// `out = (b − SᵀL₃₂⁻ᵀL₃₂⁻¹Sb)/λ ≈ (SᵀS + λI)⁻¹b`. The matvecs
+    /// stay in f64; only the n-dimensional triangular solves run in
+    /// f32.
+    fn apply_inverse(&mut self, s: &Mat, lambda: f64, b: &[f64], out: &mut [f64]) {
+        let n = s.rows();
+        self.sx.resize(n, 0.0);
+        s.matvec_into(b, &mut self.sx);
+        self.un.clear();
+        self.un.extend(self.sx.iter().map(|&x| x as f32));
+        solve_lower_f32(&self.l32, n, &mut self.un);
+        solve_lower_transpose_f32(&self.l32, n, &mut self.un);
+        self.zn.clear();
+        self.zn.extend(self.un.iter().map(|&x| x as f64));
+        let MixedState { zn, .. } = self;
+        s.t_matvec_into(zn, out);
+        let inv = 1.0 / lambda;
+        for (o, bj) in out.iter_mut().zip(b) {
+            *o = inv * (bj - *o);
+        }
+    }
+
+    /// Refine `x` in place against the **f64** true residual
+    /// `r = v − λx − Sᵀ(Sx)` until `‖r‖ ≤ tol·‖v‖`. `false` (fallback
+    /// recorded) on stagnation, a non-finite residual, or sweep-budget
+    /// exhaustion.
+    fn refine(&mut self, s: &Mat, lambda: f64, v: &[f64], x: &mut [f64]) -> bool {
+        let (n, m) = s.shape();
+        let vnorm = norm2(v).max(f64::MIN_POSITIVE);
+        let mut prev = f64::INFINITY;
+        self.rm.resize(m, 0.0);
+        self.dm.resize(m, 0.0);
+        for sweep in 0..MAX_REFINE_SWEEPS {
+            self.sx.resize(n, 0.0);
+            s.matvec_into(x, &mut self.sx);
+            {
+                let MixedState { sx, rm, .. } = self;
+                s.t_matvec_into(sx, rm);
+            }
+            for j in 0..m {
+                self.rm[j] = v[j] - lambda * x[j] - self.rm[j];
+            }
+            let rnorm = norm2(&self.rm);
+            if !rnorm.is_finite() {
+                record_fallback();
+                return false;
+            }
+            if rnorm <= self.tol * vnorm {
+                record_refine_sweeps(sweep as u64);
+                return true;
+            }
+            if rnorm >= STAGNATION_FACTOR * prev {
+                record_fallback();
+                return false;
+            }
+            prev = rnorm;
+            // d = Â⁻¹r through the f32 factor, then x ← x + d. The
+            // residual/correction buffers move out for the call so
+            // apply_inverse can reborrow the shared scratch —
+            // allocation-free once warm.
+            let rhs = std::mem::take(&mut self.rm);
+            let mut d = std::mem::take(&mut self.dm);
+            self.apply_inverse(s, lambda, &rhs, &mut d);
+            for j in 0..m {
+                x[j] += d[j];
+            }
+            self.rm = rhs;
+            self.dm = d;
+        }
+        record_fallback();
+        false
+    }
+
+    /// Full mixed solve: initial f32 Woodbury pass + refinement.
+    fn solve_refined(&mut self, s: &Mat, lambda: f64, v: &[f64], x: &mut [f64]) -> bool {
+        debug_assert!(self.factored);
+        self.apply_inverse(s, lambda, v, x);
+        self.refine(s, lambda, v, x)
+    }
+}
+
+/// Mixed-precision solve of a cached **n×n** damped system
+/// `(G + λI)u = f` where `G` is an f64 Gram the session holds anyway —
+/// the rvb session's inner solve (its λ-independent recovery factor
+/// needs the f64 Gram regardless, so only the damped factor and the
+/// triangular solves move to f32 there). Residuals for refinement come
+/// from the f64 `G·u` matvec directly (O(n²) per sweep); the same
+/// κ·u₃₂ convergence condition and fallback rules as [`MixedState`]
+/// apply.
+pub(crate) struct MixedGramSolve {
+    tol: f64,
+    l32: Vec<f32>,
+    factored: bool,
+    un: Vec<f32>,
+    gu: Vec<f64>,
+    rn: Vec<f64>,
+}
+
+impl MixedGramSolve {
+    pub(crate) fn new(tol: f64) -> Self {
+        MixedGramSolve {
+            tol,
+            l32: Vec::new(),
+            factored: false,
+            un: Vec::new(),
+            gu: Vec::new(),
+            rn: Vec::new(),
+        }
+    }
+
+    pub(crate) fn factored(&self) -> bool {
+        self.factored
+    }
+
+    pub(crate) fn invalidate(&mut self) {
+        self.factored = false;
+    }
+
+    /// Factor `G + λI` in f32; the damped diagonal is accumulated in
+    /// f64 before the single rounding. `false` (fallback recorded) on
+    /// f32 overflow/subnormal entries or a factorization breakdown.
+    pub(crate) fn factor(&mut self, gram: &Mat, lambda: f64) -> bool {
+        let n = gram.rows();
+        self.factored = false;
+        self.l32.clear();
+        self.l32.extend(gram.as_slice().iter().map(|&x| x as f32));
+        if self.l32.iter().any(|x| !x.is_finite()) {
+            record_fallback();
+            return false;
+        }
+        for i in 0..n {
+            let d = (gram[(i, i)] + lambda) as f32;
+            if !d.is_finite() || d < f32::MIN_POSITIVE {
+                record_fallback();
+                return false;
+            }
+            self.l32[i * n + i] = d;
+        }
+        if cholesky_in_place_f32(&mut self.l32, n).is_err() {
+            record_fallback();
+            return false;
+        }
+        record_mixed_factor();
+        self.factored = true;
+        true
+    }
+
+    /// Solve `(G + λI)u = f` through the f32 factor with f64
+    /// refinement. `false` (fallback recorded) on stagnation.
+    pub(crate) fn solve(&mut self, gram: &Mat, lambda: f64, f: &[f64], u: &mut [f64]) -> bool {
+        debug_assert!(self.factored);
+        let n = gram.rows();
+        // Initial pass: u₀ = L₃₂⁻ᵀL₃₂⁻¹f.
+        self.un.clear();
+        self.un.extend(f.iter().map(|&x| x as f32));
+        solve_lower_f32(&self.l32, n, &mut self.un);
+        solve_lower_transpose_f32(&self.l32, n, &mut self.un);
+        for (uj, &w) in u.iter_mut().zip(&self.un) {
+            *uj = w as f64;
+        }
+        let fnorm = norm2(f).max(f64::MIN_POSITIVE);
+        let mut prev = f64::INFINITY;
+        self.gu.resize(n, 0.0);
+        self.rn.resize(n, 0.0);
+        for sweep in 0..MAX_REFINE_SWEEPS {
+            {
+                let MixedGramSolve { gu, .. } = self;
+                gram.matvec_into(u, gu);
+            }
+            for i in 0..n {
+                self.rn[i] = f[i] - lambda * u[i] - self.gu[i];
+            }
+            let rnorm = norm2(&self.rn);
+            if !rnorm.is_finite() {
+                record_fallback();
+                return false;
+            }
+            if rnorm <= self.tol * fnorm {
+                record_refine_sweeps(sweep as u64);
+                return true;
+            }
+            if rnorm >= STAGNATION_FACTOR * prev {
+                record_fallback();
+                return false;
+            }
+            prev = rnorm;
+            self.un.clear();
+            self.un.extend(self.rn.iter().map(|&x| x as f32));
+            solve_lower_f32(&self.l32, n, &mut self.un);
+            solve_lower_transpose_f32(&self.l32, n, &mut self.un);
+            for i in 0..n {
+                u[i] += self.un[i] as f64;
+            }
+        }
+        record_fallback();
+        false
+    }
+}
+
 /// Algorithm-1 solver ("chol").
 #[derive(Debug, Clone)]
 pub struct CholSolver {
@@ -193,23 +582,40 @@ pub struct CholSolver {
     /// tier — results are bit-identical across thread counts within
     /// the tier, only tolerance-equal across tiers.
     pub isa: Option<KernelIsa>,
+    /// Factor/solve arithmetic (`solver.precision`, PR 6): `F64` is the
+    /// seed path; `Mixed` runs the Gram, Cholesky and triangular solves
+    /// in f32 and refines every right-hand side in f64 (see
+    /// [`MixedState`]), falling back to f64 automatically when the f32
+    /// path cannot deliver `tol`.
+    pub precision: Precision,
+    /// Relative true-residual target of the mixed-precision refinement
+    /// (`solver.tol`); unused under `Precision::F64`.
+    pub tol: f64,
 }
 
 impl Default for CholSolver {
     fn default() -> Self {
-        CholSolver { threads: 1, isa: None }
+        CholSolver { threads: 1, isa: None, precision: Precision::F64, tol: 1e-10 }
     }
 }
 
 impl CholSolver {
     pub fn with_threads(threads: usize) -> Self {
-        CholSolver { threads: threads.max(1), isa: None }
+        CholSolver { threads: threads.max(1), ..CholSolver::default() }
     }
 
     /// Construct from the shared kernel configuration (CLI / TOML /
     /// coordinator plumbing all funnel through [`KernelConfig`]).
     pub fn with_config(cfg: KernelConfig) -> Self {
-        CholSolver { threads: cfg.threads.max(1), isa: cfg.isa }
+        CholSolver { threads: cfg.threads.max(1), isa: cfg.isa, ..CholSolver::default() }
+    }
+
+    /// Select the factor/solve arithmetic (registry plumbing for
+    /// `solver.precision` / `solver.tol`).
+    pub fn with_precision(mut self, precision: Precision, tol: f64) -> Self {
+        self.precision = precision;
+        self.tol = tol;
+        self
     }
 
     /// The kernel configuration this solver dispatches with.
@@ -274,10 +680,20 @@ pub struct CholFactor<'s> {
     /// Cached `SSᵀ` (no damping) — computed once, λ-independent,
     /// patched (never re-formed) by window rotations.
     gram: Option<Mat>,
-    /// `Chol(SSᵀ + λĨ)` for the current λ.
+    /// `Chol(SSᵀ + λĨ)` for the current λ (the f64 path; `None` while
+    /// the mixed-precision path is active).
     l: Option<Mat>,
     /// n-sized scratch for `u = Sv`.
     u: Vec<f64>,
+    /// Factor/solve arithmetic (PR 6).
+    precision: Precision,
+    /// Mixed-refinement relative-residual target.
+    tol: f64,
+    /// f32 state when `precision == Mixed` and the f32 path is live.
+    mixed: Option<MixedState>,
+    /// Latched after any precision fallback: the session continues on
+    /// the f64 path for its remaining lifetime.
+    mixed_off: bool,
 }
 
 impl<'s> CholFactor<'s> {
@@ -290,6 +706,10 @@ impl<'s> CholFactor<'s> {
             gram: None,
             l: None,
             u: vec![0.0; s.rows()],
+            precision: Precision::F64,
+            tol: 1e-10,
+            mixed: None,
+            mixed_off: false,
         }
     }
 
@@ -305,7 +725,103 @@ impl<'s> CholFactor<'s> {
             gram: None,
             l: None,
             u: vec![0.0; rows],
+            precision: Precision::F64,
+            tol: 1e-10,
+            mixed: None,
+            mixed_off: false,
         }
+    }
+
+    /// Select the factor/solve arithmetic (`solver.precision` /
+    /// `solver.tol` plumbing).
+    pub fn with_precision(mut self, precision: Precision, tol: f64) -> Self {
+        self.precision = precision;
+        self.tol = tol;
+        self
+    }
+
+    /// Whether the session is currently running the f32 path.
+    pub fn mixed_active(&self) -> bool {
+        self.mixed_enabled()
+    }
+
+    fn mixed_enabled(&self) -> bool {
+        self.precision == Precision::Mixed && !self.mixed_off
+    }
+
+    fn mixed_factored(&self) -> bool {
+        self.mixed_enabled() && self.mixed.as_ref().is_some_and(|m| m.factored)
+    }
+
+    /// Drop the f32 state and latch the session onto the f64 path,
+    /// building the f64 factor at the current λ so in-flight solves can
+    /// continue. (Numeric fallbacks record their counter bump at the
+    /// detection site; structural ones — streaming rotations — record
+    /// it at the call site.)
+    fn latch_f64(&mut self) -> Result<(), SolveError> {
+        self.mixed = None;
+        self.mixed_off = true;
+        if self.lambda > 0.0 && self.l.is_none() {
+            let cfg = self.cfg;
+            let lambda = self.lambda;
+            self.ensure_gram();
+            match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
+                Ok(l) => self.l = Some(l),
+                Err(e) => {
+                    self.lambda = 0.0;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Blocked mixed multi-RHS solve: f64 panel GEMMs around the
+    /// blocked **f32** TRSM pair, then per-row f64 refinement. `None`
+    /// if any row's refinement stagnates — the caller latches f64 and
+    /// re-solves the whole block.
+    fn solve_many_mixed(&mut self, vs: &Mat) -> Option<Mat> {
+        let CholFactor { s, window, mixed, cfg, lambda, .. } = self;
+        let s: &Mat = match window.as_ref() {
+            Some(w) => w,
+            None => s.expect("session has a score matrix"),
+        };
+        let st = mixed.as_mut().expect("mixed_factored checked by caller");
+        let (n, m) = s.shape();
+        assert_eq!(vs.cols(), m, "each row of vs must be m-dimensional");
+        let k = vs.rows();
+        let threads = cfg.threads;
+        let lambda = *lambda;
+        cfg.run(|| {
+            // U = S·Vᵀ (n×k, f64), cast once to f32.
+            let mut u = Mat::zeros(n, k);
+            gemm_nt_threaded(1.0, s, vs, 0.0, &mut u, threads);
+            let mut u32: Vec<f32> = u.as_slice().iter().map(|&x| x as f32).collect();
+            // Z = L₃₂⁻ᵀ(L₃₂⁻¹U) — the blocked f32 TRSM pair.
+            fwd_multi_core_f32(&st.l32, n, n, &mut u32, k);
+            bwd_multi_core_f32(&st.l32, n, n, &mut u32, k);
+            let mut z = Mat::zeros(n, k);
+            for (zd, &w) in z.as_mut_slice().iter_mut().zip(&u32) {
+                *zd = w as f64;
+            }
+            // T = Sᵀ·Z (m×k).
+            let mut t = Mat::zeros(m, k);
+            gemm_tn_threaded(1.0, s, &z, 0.0, &mut t, threads);
+            // X = (V − Tᵀ)/λ, each row refined in f64.
+            let inv = 1.0 / lambda;
+            let mut x = Mat::zeros(k, m);
+            for r in 0..k {
+                let vrow = vs.row(r);
+                let xrow = x.row_mut(r);
+                for j in 0..m {
+                    xrow[j] = inv * (vrow[j] - t[(j, r)]);
+                }
+                if !st.refine(s, lambda, vrow, xrow) {
+                    return None;
+                }
+            }
+            Some(x)
+        })
     }
 
     /// The active score matrix: the owned window when streaming, the
@@ -363,10 +879,36 @@ impl Factorization for CholFactor<'_> {
         // Streaming fast path: a window rotation keeps the damped
         // factor current, so re-damping at the unchanged λ (the
         // trainer's per-step redamp) must not pay the O(n³) refactor.
-        if lambda == self.lambda && self.l.is_some() {
+        if lambda == self.lambda && (self.l.is_some() || self.mixed_factored()) {
             return Ok(());
         }
         let cfg = self.cfg;
+        if self.mixed_enabled() {
+            // Mixed path: f32 Gram (formed once, λ-independent) + f32
+            // factor with the damped diagonal accumulated in f64. On
+            // any f32 failure (fallback recorded inside MixedState)
+            // the session latches onto the f64 path below.
+            if self.mixed.is_none() {
+                self.mixed = Some(MixedState::new(self.tol));
+            }
+            let ok = {
+                let CholFactor { s, window, mixed, .. } = self;
+                let s: &Mat = match window.as_ref() {
+                    Some(w) => w,
+                    None => s.expect("session has a score matrix"),
+                };
+                let st = mixed.as_mut().unwrap();
+                let n = s.rows();
+                cfg.run(|| st.prepare(s, cfg.threads) && st.factor(lambda, n))
+            };
+            if ok {
+                self.l = None;
+                self.lambda = lambda;
+                return Ok(());
+            }
+            self.mixed = None;
+            self.mixed_off = true;
+        }
         self.ensure_gram();
         match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
             Ok(l) => {
@@ -385,6 +927,27 @@ impl Factorization for CholFactor<'_> {
     }
 
     fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        if self.mixed_factored() {
+            let m = self.score().cols();
+            assert_eq!(v.len(), m, "v must be m-dimensional");
+            assert_eq!(x.len(), m, "x must be m-dimensional");
+            let done = {
+                let CholFactor { s, window, mixed, cfg, lambda, .. } = self;
+                let s: &Mat = match window.as_ref() {
+                    Some(w) => w,
+                    None => s.expect("session has a score matrix"),
+                };
+                let st = mixed.as_mut().unwrap();
+                let lambda = *lambda;
+                cfg.run(|| st.solve_refined(s, lambda, v, x))
+            };
+            if done {
+                return Ok(());
+            }
+            // Refinement stagnated (fallback recorded): latch onto the
+            // f64 path and re-solve this RHS through the f64 factor.
+            self.latch_f64()?;
+        }
         let CholFactor { s, window, l, u, cfg, lambda, .. } = self;
         let s: &Mat = match window.as_ref() {
             Some(w) => w,
@@ -415,6 +978,14 @@ impl Factorization for CholFactor<'_> {
     /// k separate vector substitutions. Every stage partitions across
     /// the session's `threads` pool jobs (bit-identical to serial).
     fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
+        if self.mixed_factored() {
+            match self.solve_many_mixed(vs) {
+                Some(x) => return Ok(x),
+                // A row's refinement stagnated (fallback recorded):
+                // latch f64 and re-solve the whole block below.
+                None => self.latch_f64()?,
+            }
+        }
         let s = match &self.window {
             Some(w) => w,
             None => self.s.expect("session has a score matrix"),
@@ -457,6 +1028,14 @@ impl Factorization for CholFactor<'_> {
     /// the error surface (and the session stays redampable at a larger
     /// λ — the usual Levenberg–Marquardt rescue).
     fn update_rows(&mut self, removed: &[usize], added: &Mat) -> Result<(), SolveError> {
+        if self.mixed_enabled() {
+            // Streaming rotations patch the f64 Gram and rotate the
+            // f64 factor in O(kn²); the f32 path has no incremental
+            // update, so the session latches onto f64 — counted as a
+            // precision fallback so it is observable.
+            record_fallback();
+            self.latch_f64()?;
+        }
         self.ensure_gram();
         if self.window.is_none() {
             // First rotation on a borrowed session: switch to an owned
@@ -494,9 +1073,14 @@ impl Factorization for CholFactor<'_> {
     fn refresh(&mut self) -> Result<(), SolveError> {
         self.gram = None;
         self.l = None;
+        // The f32 state re-forms from the live window on the next
+        // redamp (mixed sessions that latched f64 stay latched).
+        self.mixed = None;
         let lambda = self.lambda;
         self.lambda = 0.0;
-        self.ensure_gram();
+        if !self.mixed_enabled() {
+            self.ensure_gram();
+        }
         if lambda > 0.0 {
             self.redamp(lambda)?;
         }
@@ -510,11 +1094,16 @@ impl DampedSolver for CholSolver {
     }
 
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
-        Box::new(CholFactor::new(s, self.kernel_config()))
+        Box::new(
+            CholFactor::new(s, self.kernel_config()).with_precision(self.precision, self.tol),
+        )
     }
 
     fn begin_window(&self, window: Mat) -> Option<Box<dyn Factorization>> {
-        Some(Box::new(CholFactor::from_window(window, self.kernel_config())))
+        Some(Box::new(
+            CholFactor::from_window(window, self.kernel_config())
+                .with_precision(self.precision, self.tol),
+        ))
     }
 }
 
@@ -626,6 +1215,52 @@ mod tests {
         let v: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
         let x = CholSolver::default().solve(&s, &v, 1e-4).unwrap();
         assert!(residual_norm(&s, &x, &v, 1e-4) < 1e-6);
+    }
+
+    #[test]
+    fn mixed_precision_session_matches_f64_without_falling_back() {
+        let mut rng = Rng::seed_from(170);
+        let (n, m) = (24usize, 160usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let fb0 = mixed_counters::fallbacks();
+        let mf0 = mixed_counters::mixed_factors();
+        let solver = CholSolver::default().with_precision(Precision::Mixed, 1e-10);
+        let mut fact = solver.factor(&s, 0.5).unwrap();
+        for &lambda in &[0.5f64, 1e-2] {
+            fact.redamp(lambda).unwrap();
+            let x = fact.solve(&v).unwrap();
+            let x64 = CholSolver::default().solve(&s, &v, lambda).unwrap();
+            let scale = crate::linalg::mat::norm2(&x64).max(1.0);
+            for (a, b) in x.iter().zip(&x64) {
+                assert!(
+                    (a - b).abs() < 2e-10 * scale,
+                    "mixed vs f64 at λ={lambda}: {a} vs {b}"
+                );
+            }
+            assert!(residual_norm(&s, &x, &v, lambda) < 1e-9);
+        }
+        assert_eq!(mixed_counters::fallbacks(), fb0, "well-conditioned solve must not fall back");
+        assert!(mixed_counters::mixed_factors() > mf0, "the f32 factor path must have run");
+    }
+
+    #[test]
+    fn mixed_precision_multi_rhs_matches_f64() {
+        let mut rng = Rng::seed_from(171);
+        let (n, m, k) = (20usize, 120usize, 5usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let vs = Mat::randn(k, m, &mut rng);
+        let solver = CholSolver::default().with_precision(Precision::Mixed, 1e-10);
+        let mut fact = solver.factor(&s, 0.1).unwrap();
+        let x = fact.solve_many(&vs).unwrap();
+        let mut f64_fact = CholSolver::default().factor(&s, 0.1).unwrap();
+        let x64 = f64_fact.solve_many(&vs).unwrap();
+        for r in 0..k {
+            let scale = crate::linalg::mat::norm2(x64.row(r)).max(1.0);
+            for (a, b) in x.row(r).iter().zip(x64.row(r)) {
+                assert!((a - b).abs() < 2e-10 * scale, "row {r}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -13,10 +13,18 @@
 //!    term; we model `svda` as `2nm·w + 0.15·n³·w` (w = 8 bytes), with
 //!    the coefficient calibrated so exactly the paper's cell overflows.
 
+use super::session::Precision;
 use super::SolverKind;
 
 /// Bytes per scalar in the modeled device arrays (f64).
 const W: f64 = 8.0;
+
+/// Modeled throughput advantage of the f32 kernel path over f64: every
+/// SIMD tier (AVX2, AVX-512, NEON) packs twice the f32 lanes per
+/// register, and the packed panels halve their cache footprint. Real
+/// measurements land between 1.5× and 2× (EXPERIMENTS.md §Precision);
+/// the model uses the lane-count bound.
+const F32_SPEEDUP: f64 = 2.0;
 
 /// Modeled *time-proportional* FLOP count of one solve at `threads`
 /// kernel-pool jobs: the GEMM-shaped and factorization terms (Gram
@@ -102,6 +110,59 @@ pub fn flops(kind: SolverKind, n: usize, m: usize) -> f64 {
         // Like chol plus the recovery factorization (second n³/3) and the
         // extra O(nm) reconstruction-check passes.
         SolverKind::Rvb => n * n * m + 2.0 * n * n * n / 3.0 + 6.0 * n * m,
+    }
+}
+
+/// Modeled *time-proportional* FLOP count of one solve under a
+/// [`Precision`] mode (PR 6). For `Precision::F64` — and for every kind
+/// without a mixed path — this is exactly [`flops`]. For
+/// `Precision::Mixed` on the session kinds (`chol`, `rvb`) the
+/// single-precision stages count at `1/F32_SPEEDUP` of their f64 cost
+/// (twice the SIMD lanes, half the packed-panel bytes), while the f64
+/// refinement loop **adds** `refine_sweeps` true-residual passes:
+///
+/// ```text
+/// chol  (SYRK n²m + Chol n³/3 + TRSM 2n²) / 2   f32 factor + solves
+///       + 4nm                                    f64 Sv / Sᵀz casts per RHS
+///       + sweeps · (4nm + 2n² + 4nm)             f64 residual + f32 correction
+/// rvb   recovery factor stays f64 (n²m + n³/3 unchanged — its tiny
+///       ridge is far too ill-conditioned for f32); only the damped
+///       n³/3 factor and the 2n² solves halve, refinement adds
+///       sweeps · (2n² + 2n²) Gram-matvec residual passes.
+/// ```
+///
+/// `refine_sweeps` is the expected sweep count — ≈ log(tol)/log(κ·u₃₂),
+/// typically 1–3 for the κ ≲ 10⁵ Grams the mixed mode targets; feed the
+/// measured [`super::chol::mixed_counters::refine_sweeps`] back in for
+/// post-hoc accounting. The model keeps cross-kind *and* cross-mode
+/// comparisons honest: mixed only wins while the O(n²m + n³) f32
+/// savings dominate the O(sweeps·nm) f64 refinement tax.
+pub fn flops_precision(
+    kind: SolverKind,
+    n: usize,
+    m: usize,
+    precision: Precision,
+    refine_sweeps: usize,
+) -> f64 {
+    let nf = n as f64;
+    let mf = m as f64;
+    let sweeps = refine_sweeps as f64;
+    match (kind, precision) {
+        (SolverKind::Chol, Precision::Mixed) => {
+            let f32_part = (nf * nf * mf + nf * nf * nf / 3.0 + 2.0 * nf * nf) / F32_SPEEDUP;
+            let f64_rhs = 4.0 * nf * mf;
+            let per_sweep = 4.0 * nf * mf + 2.0 * nf * nf + 4.0 * nf * mf;
+            f32_part + f64_rhs + sweeps * per_sweep
+        }
+        (SolverKind::Rvb, Precision::Mixed) => {
+            // Recovery path (full f64): Gram reuse n²m + ridge factor
+            // n³/3 + the O(nm) reconstruction checks.
+            let f64_part = nf * nf * mf + nf * nf * nf / 3.0 + 6.0 * nf * mf;
+            let f32_part = (nf * nf * nf / 3.0 + 2.0 * nf * nf) / F32_SPEEDUP;
+            let per_sweep = 4.0 * nf * nf;
+            f64_part + f32_part + sweeps * per_sweep
+        }
+        _ => flops(kind, n, m),
     }
 }
 
@@ -234,6 +295,37 @@ mod tests {
         for &kind in &[SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg] {
             assert_eq!(flops_streaming(kind, n, m, 8), flops(kind, n, m));
         }
+    }
+
+    #[test]
+    fn precision_model_discounts_mixed_and_charges_refinement() {
+        let (n, m) = (2048usize, 100_000usize);
+        // f64 mode is exactly the base model for every kind.
+        for &kind in SolverKind::all() {
+            assert_eq!(flops_precision(kind, n, m, Precision::F64, 2), flops(kind, n, m));
+        }
+        // Kinds without a mixed path never get a discount.
+        for &kind in &[SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg] {
+            assert_eq!(flops_precision(kind, n, m, Precision::Mixed, 2), flops(kind, n, m));
+        }
+        // chol mixed: the f32 factor dominates — a clear win at few
+        // sweeps, bounded below by the ideal 2× lane speedup.
+        let f64_cost = flops(SolverKind::Chol, n, m);
+        let mixed = flops_precision(SolverKind::Chol, n, m, Precision::Mixed, 2);
+        assert!(mixed < 0.7 * f64_cost, "mixed should win: {mixed:.3e} vs {f64_cost:.3e}");
+        assert!(mixed > f64_cost / 2.0, "cannot beat the lane bound");
+        // Each refinement sweep charges O(nm) f64 work — monotone, and
+        // enough sweeps erase the win entirely.
+        let s1 = flops_precision(SolverKind::Chol, n, m, Precision::Mixed, 1);
+        let s5 = flops_precision(SolverKind::Chol, n, m, Precision::Mixed, 5);
+        assert!(s1 < s5);
+        assert!(flops_precision(SolverKind::Chol, n, m, Precision::Mixed, 2000) > f64_cost);
+        // rvb mixed: the recovery factor stays f64, so the saving is
+        // real but strictly smaller than chol's.
+        let rvb64 = flops(SolverKind::Rvb, n, m);
+        let rvb_mixed = flops_precision(SolverKind::Rvb, n, m, Precision::Mixed, 2);
+        assert!(rvb_mixed < rvb64);
+        assert!(rvb64 / rvb_mixed < f64_cost / mixed, "rvb saves less than chol");
     }
 
     #[test]

@@ -5,14 +5,23 @@
 //! All solvers compute `x` with `(SᵀS + λI) x = v` for a score matrix
 //! `S: n×m` in the tall-skinny regime `m ≫ n`:
 //!
-//! | solver | paper label | complexity (factor / per-RHS) | memory | source |
-//! |--------|-------------|-------------------------------|--------|--------|
-//! | [`CholSolver`]  | "chol"  | O(n²m + n³) / O(nm) | O(nm) | Algorithm 1 (the contribution) |
-//! | [`EighSolver`]  | "eigh"  | O(n²m + n³), larger constant / O(nm) | O(nm) | Appendix C, previously fastest |
-//! | [`SvdaSolver`]  | "svda"  | O(n²m·sweeps) / O(nm) | O(nm)+gesvda workspace | Appendix C, CUDA gesvda stand-in |
-//! | [`NaiveSolver`] | —       | O(m²n + m³) / O(m²) | O(m²) | §2 "naive" reference |
-//! | [`CgSolver`]    | —       | none / O(nm·iters) | O(m) | §3 iterative baseline |
-//! | [`RvbSolver`]   | "rvb"   | O(n²m + n³) / O(nm) | O(nm) | RVB+23 identity (Appendix B), needs `v = Sᵀf` |
+//! | solver | paper label | complexity (factor / per-RHS) | memory | precision | source |
+//! |--------|-------------|-------------------------------|--------|-----------|--------|
+//! | [`CholSolver`]  | "chol"  | O(n²m + n³) / O(nm) | O(nm) | f64, mixed | Algorithm 1 (the contribution) |
+//! | [`EighSolver`]  | "eigh"  | O(n²m + n³), larger constant / O(nm) | O(nm) | f64 | Appendix C, previously fastest |
+//! | [`SvdaSolver`]  | "svda"  | O(n²m·sweeps) / O(nm) | O(nm)+gesvda workspace | f64 | Appendix C, CUDA gesvda stand-in |
+//! | [`NaiveSolver`] | —       | O(m²n + m³) / O(m²) | O(m²) | f64 | §2 "naive" reference |
+//! | [`CgSolver`]    | —       | none / O(nm·iters) | O(m) | f64 | §3 iterative baseline |
+//! | [`RvbSolver`]   | "rvb"   | O(n²m + n³) / O(nm) | O(nm) | f64, mixed | RVB+23 identity (Appendix B), needs `v = Sᵀf` |
+//!
+//! The *precision* column is `solver.precision` (PR 6): every kind runs
+//! the default pure-`f64` pipeline, and the two session kinds with a
+//! cached Cholesky factor (`chol`, `rvb`) additionally accept `mixed` —
+//! f32 Gram/factor/triangular-solves with f64 iterative refinement of
+//! each right-hand side against the true residual, converging to
+//! `solver.tol` when κ(W)·u₃₂ ≪ 1 and latching back to the f64 path
+//! otherwise (see [`chol::mixed_counters`]). Requesting `mixed` on any
+//! other kind is a validation error, not a silent downgrade.
 //!
 //! ## The session API (PR 2)
 //!
@@ -124,16 +133,17 @@ pub mod session;
 pub mod svda;
 
 pub use cg::{CgSolver, CgStats};
-pub use chol::CholSolver;
+pub use chol::{mixed_counters, CholSolver};
 pub use complex_sr::{
     center_scores, solve_sr_complex, solve_sr_real_part, stack_real_part, ComplexSrFactor,
 };
-pub use cost::{flops, flops_streaming, flops_threaded, memory_bytes, MemoryBudget};
+pub use cost::{flops, flops_precision, flops_streaming, flops_threaded, memory_bytes, MemoryBudget};
 pub use eigh_svd::EighSolver;
 pub use naive::NaiveSolver;
 pub use rvb::RvbSolver;
 pub use session::{
-    solve_with_backoff, Factorization, OneShot, SolverOptions, SolverPlan, SolverRegistry,
+    solve_with_backoff, Factorization, OneShot, Precision, SolverOptions, SolverPlan,
+    SolverRegistry,
 };
 pub use svda::SvdaSolver;
 

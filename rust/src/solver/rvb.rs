@@ -20,8 +20,8 @@
 //! tiny-ridge recovery factor used to reconstruct `f` from `v` — so both
 //! λ-resweeps and repeated right-hand sides skip all O(n²m) work.
 
-use super::chol::rotate_gram_session;
-use super::session::{check_lambda, refactor_damped, undamped_err};
+use super::chol::{mixed_counters, rotate_gram_session, MixedGramSolve};
+use super::session::{check_lambda, refactor_damped, undamped_err, Precision};
 use super::{CholSolver, DampedSolver, Factorization, SolveError};
 use crate::linalg::gemm::{syrk, syrk_parallel};
 use crate::linalg::{cholesky_threaded, solve_lower, solve_lower_transpose, KernelConfig, Mat};
@@ -55,6 +55,17 @@ impl RvbSolver {
     /// (`solver.rvb_tol` in configs).
     pub fn with_recovery_tol(mut self, tol: f64) -> Self {
         self.recovery_tol = tol;
+        self
+    }
+
+    /// Select the damped factor/solve arithmetic (`solver.precision` /
+    /// `solver.tol`, PR 6). Under `mixed` the λ-independent recovery
+    /// factor stays f64 (its tiny ridge makes the recovery system far
+    /// too ill-conditioned for f32 refinement) — only the damped factor
+    /// and its triangular solves move to f32, refined per RHS against
+    /// the f64 Gram residual.
+    pub fn with_precision(mut self, precision: Precision, tol: f64) -> Self {
+        self.inner = self.inner.with_precision(precision, tol);
         self
     }
 
@@ -167,6 +178,15 @@ pub struct RvbFactor<'s> {
     /// The ε of the recovery factor, frozen when first computed so
     /// streaming rotations append with a consistent diagonal.
     ridge: Option<f64>,
+    /// Damped-solve arithmetic (PR 6); the recovery factor is always
+    /// f64.
+    precision: Precision,
+    /// Mixed-refinement relative-residual target.
+    tol: f64,
+    /// f32 state of the damped factor when the mixed path is live.
+    mixed: Option<MixedGramSolve>,
+    /// Latched after any precision fallback.
+    mixed_off: bool,
 }
 
 impl<'s> RvbFactor<'s> {
@@ -181,6 +201,10 @@ impl<'s> RvbFactor<'s> {
             l: None,
             recovery_l: None,
             ridge: None,
+            precision: Precision::F64,
+            tol: 1e-10,
+            mixed: None,
+            mixed_off: false,
         }
     }
 
@@ -196,7 +220,45 @@ impl<'s> RvbFactor<'s> {
             l: None,
             recovery_l: None,
             ridge: None,
+            precision: Precision::F64,
+            tol: 1e-10,
+            mixed: None,
+            mixed_off: false,
         }
+    }
+
+    fn with_precision(mut self, precision: Precision, tol: f64) -> Self {
+        self.precision = precision;
+        self.tol = tol;
+        self
+    }
+
+    fn mixed_enabled(&self) -> bool {
+        self.precision == Precision::Mixed && !self.mixed_off
+    }
+
+    fn mixed_factored(&self) -> bool {
+        self.mixed_enabled() && self.mixed.as_ref().is_some_and(|m| m.factored())
+    }
+
+    /// Drop the f32 damped factor and latch the session onto the f64
+    /// path, refactoring at the current λ so in-flight solves continue.
+    fn latch_f64(&mut self) -> Result<(), SolveError> {
+        self.mixed = None;
+        self.mixed_off = true;
+        if self.lambda > 0.0 && self.l.is_none() {
+            let cfg = self.cfg;
+            let lambda = self.lambda;
+            self.ensure_gram();
+            match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
+                Ok(l) => self.l = Some(l),
+                Err(e) => {
+                    self.lambda = 0.0;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
     }
 
     fn score(&self) -> &Mat {
@@ -263,11 +325,34 @@ impl Factorization for RvbFactor<'_> {
         check_lambda(lambda)?;
         // Streaming fast path — a rotation keeps the factor damped at
         // the current λ (see the chol session).
-        if lambda == self.lambda && self.l.is_some() {
+        if lambda == self.lambda && (self.l.is_some() || self.mixed_factored()) {
             return Ok(());
         }
         let cfg = self.cfg;
         self.ensure_gram();
+        if self.mixed_enabled() {
+            // Mixed path: factor the (already-cached f64) Gram + λĨ in
+            // f32; the f64 Gram is needed for the recovery factor
+            // regardless, so only the O(n³) factor and the triangular
+            // solves move to single precision here.
+            if self.mixed.is_none() {
+                self.mixed = Some(MixedGramSolve::new(self.tol));
+            }
+            let ok = {
+                let RvbFactor { gram, mixed, .. } = self;
+                let gram = gram.as_ref().unwrap();
+                let st = mixed.as_mut().unwrap();
+                cfg.run(|| st.factor(gram, lambda))
+            };
+            if ok {
+                self.l = None;
+                self.lambda = lambda;
+                return Ok(());
+            }
+            // f32 breakdown/overflow (fallback recorded) — latch f64.
+            self.mixed = None;
+            self.mixed_off = true;
+        }
         match cfg.run(|| refactor_damped(self.gram.as_ref().unwrap(), lambda, cfg.threads)) {
             Ok(l) => {
                 self.l = Some(l);
@@ -286,32 +371,65 @@ impl Factorization for RvbFactor<'_> {
         let m = self.score().cols();
         assert_eq!(v.len(), m, "v must be m-dimensional");
         assert_eq!(x.len(), m, "x must be m-dimensional");
-        if self.l.is_none() {
+        if self.l.is_none() && !self.mixed_factored() {
             return Err(undamped_err());
         }
         self.ensure_recovery()?;
+        // Stage 1 (always f64): recover f, rejecting v ∉ rowspace(S) —
+        // the precondition the registry surfaces as BadInput.
+        let f = {
+            let s = self.score();
+            let recovery_tol = self.recovery_tol;
+            let rl = self.recovery_l.as_ref().unwrap();
+            self.cfg.run(|| {
+                let sv = s.matvec(v);
+                let f = solve_lower_transpose(rl, &solve_lower(rl, &sv));
+                verify_reconstruction(s, v, &f, recovery_tol)?;
+                Ok::<_, SolveError>(f)
+            })?
+        };
+        // Stage 2: u = (SSᵀ + λĨ)⁻¹ f — f32 + f64 refinement on the
+        // mixed path, the cached f64 factor otherwise.
+        if self.mixed_factored() {
+            let mut u = vec![0.0; f.len()];
+            let done = {
+                let RvbFactor { gram, mixed, cfg, lambda, .. } = self;
+                let gram = gram.as_ref().unwrap();
+                let st = mixed.as_mut().unwrap();
+                let lambda = *lambda;
+                cfg.run(|| st.solve(gram, lambda, &f, &mut u))
+            };
+            if done {
+                let s = self.score();
+                self.cfg.run(|| s.t_matvec_into(&u, x));
+                return Ok(());
+            }
+            // Refinement stagnated (fallback recorded): latch f64 and
+            // finish this RHS through the f64 factor below.
+            self.latch_f64()?;
+        }
         let s = self.score();
-        let recovery_tol = self.recovery_tol;
-        let rl = self.recovery_l.as_ref().unwrap();
         let l = self.l.as_ref().unwrap();
         self.cfg.run(|| {
-            // Recover f (rejecting v ∉ rowspace(S) — the precondition
-            // the registry surfaces as BadInput).
-            let sv = s.matvec(v);
-            let f = solve_lower_transpose(rl, &solve_lower(rl, &sv));
-            verify_reconstruction(s, v, &f, recovery_tol)?;
             // x = Sᵀ(SSᵀ + λĨ)⁻¹ f through the cached damped factor.
             let y = solve_lower(l, &f);
             let u = solve_lower_transpose(l, &y);
             s.t_matvec_into(&u, x);
-            Ok(())
-        })
+        });
+        Ok(())
     }
 
     /// Streaming row rotation: the shared Gram is patched once and
     /// **both** cached factors (damped at λ, recovery at the frozen ε)
     /// rotate in O(kn²); breakdowns refactor from the patched Gram.
     fn update_rows(&mut self, removed: &[usize], added: &Mat) -> Result<(), SolveError> {
+        if self.mixed_enabled() {
+            // Rotations patch the f64 Gram and rotate the f64 factor;
+            // the f32 factor has no incremental update — latch f64
+            // (counted as a precision fallback, like the chol session).
+            mixed_counters::record_fallback();
+            self.latch_f64()?;
+        }
         self.ensure_gram();
         if self.window.is_none() {
             self.window = Some(self.s.expect("session has a score matrix").clone());
@@ -348,6 +466,11 @@ impl Factorization for RvbFactor<'_> {
         self.l = None;
         self.recovery_l = None;
         self.ridge = None;
+        // The f32 factor rebuilds from the fresh Gram on redamp
+        // (sessions that latched f64 stay latched).
+        if let Some(st) = self.mixed.as_mut() {
+            st.invalidate();
+        }
         let lambda = self.lambda;
         self.lambda = 0.0;
         self.ensure_gram();
@@ -367,15 +490,17 @@ impl DampedSolver for RvbSolver {
     /// v ∉ rowspace(S)), then applies the least-squares identity against
     /// the cached factors.
     fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
-        Box::new(RvbFactor::new(s, self.inner.kernel_config(), self.recovery_tol))
+        Box::new(
+            RvbFactor::new(s, self.inner.kernel_config(), self.recovery_tol)
+                .with_precision(self.inner.precision, self.inner.tol),
+        )
     }
 
     fn begin_window(&self, window: Mat) -> Option<Box<dyn Factorization>> {
-        Some(Box::new(RvbFactor::from_window(
-            window,
-            self.inner.kernel_config(),
-            self.recovery_tol,
-        )))
+        Some(Box::new(
+            RvbFactor::from_window(window, self.inner.kernel_config(), self.recovery_tol)
+                .with_precision(self.inner.precision, self.inner.tol),
+        ))
     }
 }
 
@@ -495,6 +620,38 @@ mod tests {
         for (a, b) in warm.iter().zip(&cold) {
             assert!((a - b).abs() < 1e-9 * scale);
         }
+    }
+
+    #[test]
+    fn mixed_precision_rvb_matches_f64_without_falling_back() {
+        let mut rng = Rng::seed_from(166);
+        let (n, m) = (12usize, 90usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v = s.t_matvec(&f);
+        let fb0 = mixed_counters::fallbacks();
+        let mf0 = mixed_counters::mixed_factors();
+        let solver = RvbSolver::default().with_precision(Precision::Mixed, 1e-10);
+        let mut fact = solver.factor(&s, 0.05).unwrap();
+        let x = fact.solve(&v).unwrap();
+        let x64 = RvbSolver::default().solve(&s, &v, 0.05).unwrap();
+        let scale = crate::linalg::mat::norm2(&x64).max(1.0);
+        for (a, b) in x.iter().zip(&x64) {
+            assert!((a - b).abs() < 1e-8 * scale, "mixed rvb vs f64: {a} vs {b}");
+        }
+        assert_eq!(mixed_counters::fallbacks(), fb0);
+        assert!(mixed_counters::mixed_factors() > mf0);
+        // λ-resweep stays on the f32 factor.
+        fact.redamp(0.5).unwrap();
+        let x2 = fact.solve(&v).unwrap();
+        let x2_64 = RvbSolver::default().solve(&s, &v, 0.5).unwrap();
+        let scale2 = crate::linalg::mat::norm2(&x2_64).max(1.0);
+        for (a, b) in x2.iter().zip(&x2_64) {
+            assert!((a - b).abs() < 1e-8 * scale2);
+        }
+        // The rowspace precondition still rejects under mixed.
+        let bad: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        assert!(matches!(fact.solve(&bad), Err(SolveError::BadInput(_))));
     }
 
     #[test]

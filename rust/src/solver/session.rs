@@ -217,6 +217,49 @@ impl<S: DampedSolver + ?Sized> Factorization for OneShot<'_, S> {
     }
 }
 
+/// Arithmetic precision of the direct sessions' factor/solve stages
+/// (`solver.precision`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Everything in f64 — the seed arithmetic and the default.
+    #[default]
+    F64,
+    /// f32 Gram + Cholesky + triangular solves (≈2× kernel throughput,
+    /// half the factor footprint), recovered to f64 accuracy by
+    /// iterative refinement of every right-hand side against the f64
+    /// matvec until the true residual meets `solver.tol`. Implemented
+    /// by the `chol` and `rvb` sessions; any other kind rejects it at
+    /// validation time. Refinement converges when κ(W)·u₃₂ ≪ 1
+    /// (u₃₂ ≈ 6e-8); on stagnation, or on an f32 overflow/subnormal
+    /// Gram, the session falls back to the f64 path automatically.
+    Mixed,
+}
+
+impl Precision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a config/CLI spelling. `None` for unknown spellings (the
+    /// caller renders the hard error with the known set).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "mixed" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Per-solver tunables, settable from the `[solver]` config section or
 /// `--set solver.key=value` CLI overrides. Unknown keys are hard errors
 /// (the CLI's no-silent-ignore policy).
@@ -260,6 +303,15 @@ pub struct SolverOptions {
     /// (`solver.refresh_every`; 0 = never) — the drift backstop that
     /// bounds rounding accumulation in the O(n²) factor rotations.
     pub refresh_every: usize,
+    /// Factor/solve arithmetic for the direct sessions
+    /// (`solver.precision = f64|mixed`; see [`Precision`]).
+    pub precision: Precision,
+    /// Relative true-residual target `‖v − (W)x‖/‖v‖` for the
+    /// mixed-precision refinement loop (`solver.tol`). Each sweep
+    /// contracts the error by ≈κ(W)·u₃₂, so well-conditioned damped
+    /// systems reach this in 1–3 sweeps; stagnation before reaching it
+    /// triggers the f64 fallback. Ignored by `precision = f64`.
+    pub tol: f64,
 }
 
 impl Default for SolverOptions {
@@ -274,6 +326,8 @@ impl Default for SolverOptions {
             rvb_tol: 1e-6,
             window: 0,
             refresh_every: 64,
+            precision: Precision::F64,
+            tol: 1e-10,
         }
     }
 }
@@ -300,6 +354,28 @@ impl SolverOptions {
                  to amortize"
                     .to_string(),
             );
+        }
+        if !(self.tol > 0.0 && self.tol.is_finite()) {
+            return Err(format!("solver.tol must be a finite value > 0, got {}", self.tol));
+        }
+        Ok(())
+    }
+
+    /// Kind-dependent validation: `solver.precision = mixed` is
+    /// implemented by the `chol` and `rvb` sessions only. Requesting it
+    /// for any other kind is a hard error — never a silent f64
+    /// fallback. Config (`cfg.validate()`) and the CLI both funnel
+    /// through this.
+    pub fn validate_for(&self, kind: SolverKind) -> Result<(), String> {
+        self.validate()?;
+        if self.precision == Precision::Mixed
+            && !matches!(kind, SolverKind::Chol | SolverKind::Rvb)
+        {
+            return Err(format!(
+                "solver.precision=mixed is not supported by solver.kind={} (supported kinds: \
+                 chol, rvb); drop the precision override or switch kinds",
+                kind.as_str()
+            ));
         }
         Ok(())
     }
@@ -345,10 +421,16 @@ impl SolverOptions {
             "rvb_tol" => next.rvb_tol = parse(key, value)?,
             "window" => next.window = parse(key, value)?,
             "refresh_every" => next.refresh_every = parse(key, value)?,
+            "precision" => {
+                next.precision = Precision::parse(value).ok_or_else(|| {
+                    format!("solver.precision: unknown mode {value:?} (known: f64, mixed)")
+                })?
+            }
+            "tol" => next.tol = parse(key, value)?,
             other => {
                 return Err(format!(
                     "unknown solver option {other:?} (known: threads, isa, cg_tol, cg_max_iters, \
-                     cg_loose_accept, budget_gb, rvb_tol, window, refresh_every)"
+                     cg_loose_accept, budget_gb, rvb_tol, window, refresh_every, precision, tol)"
                 ))
             }
         }
@@ -413,7 +495,10 @@ impl SolverRegistry {
     /// Build a boxed solver of `kind` with this registry's options.
     pub fn build(&self, kind: SolverKind) -> Box<dyn DampedSolver + Send + Sync> {
         match kind {
-            SolverKind::Chol => Box::new(super::CholSolver::with_config(self.opts.kernel())),
+            SolverKind::Chol => Box::new(
+                super::CholSolver::with_config(self.opts.kernel())
+                    .with_precision(self.opts.precision, self.opts.tol),
+            ),
             SolverKind::Eigh => Box::new(super::EighSolver { threads: self.opts.threads }),
             SolverKind::Svda => Box::new(super::SvdaSolver {
                 budget: self.opts.budget(),
@@ -429,7 +514,8 @@ impl SolverRegistry {
             ),
             SolverKind::Rvb => Box::new(
                 super::RvbSolver::with_config(self.opts.kernel())
-                    .with_recovery_tol(self.opts.rvb_tol),
+                    .with_recovery_tol(self.opts.rvb_tol)
+                    .with_precision(self.opts.precision, self.opts.tol),
             ),
         }
     }
@@ -586,6 +672,71 @@ mod tests {
         // And the --set path reaches the registry.
         let reg = SolverRegistry::from_overrides(&["solver.isa=scalar".into()]).unwrap();
         assert_eq!(reg.opts.isa, Some(KernelIsa::Scalar));
+    }
+
+    #[test]
+    fn precision_option_parses_validates_and_reaches_solvers() {
+        let mut o = SolverOptions::default();
+        assert_eq!(o.precision, Precision::F64, "pure f64 is the default");
+        assert_eq!(o.tol, 1e-10);
+        o.apply("precision", "mixed").unwrap();
+        assert_eq!(o.precision, Precision::Mixed);
+        o.apply("precision", "f64").unwrap();
+        assert_eq!(o.precision, Precision::F64);
+        // Unknown modes are hard errors naming the known set.
+        let err = o.apply("precision", "f16").unwrap_err();
+        assert!(err.contains("f64") && err.contains("mixed"), "{err}");
+        assert_eq!(o.precision, Precision::F64, "failed apply leaves options unchanged");
+        // The refinement target is validated like every other tolerance.
+        o.apply("tol", "1e-12").unwrap();
+        assert_eq!(o.tol, 1e-12);
+        assert!(o.apply("tol", "0").is_err());
+        assert!(o.apply("tol", "nan").is_err());
+        // --set reaches the registry, and the built chol/rvb solvers
+        // carry the mode.
+        let reg = SolverRegistry::from_overrides(&[
+            "solver.precision=mixed".into(),
+            "solver.tol=1e-9".into(),
+        ])
+        .unwrap();
+        assert_eq!(reg.opts.precision, Precision::Mixed);
+        assert_eq!(reg.opts.tol, 1e-9);
+        let mut rng = Rng::seed_from(503);
+        let s = Mat::randn(8, 40, &mut rng);
+        let f: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let v = s.t_matvec(&f);
+        for kind in [SolverKind::Chol, SolverKind::Rvb] {
+            let mf0 = crate::solver::mixed_counters::mixed_factors();
+            let x = reg.build(kind).solve(&s, &v, 0.1).unwrap();
+            assert!(residual_norm(&s, &x, &v, 0.1) < 1e-8);
+            assert!(
+                crate::solver::mixed_counters::mixed_factors() > mf0,
+                "{} did not route through the f32 factor",
+                kind.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_precision_rejected_for_unsupported_kinds() {
+        let mut o = SolverOptions::default();
+        o.apply("precision", "mixed").unwrap();
+        for kind in [SolverKind::Chol, SolverKind::Rvb] {
+            o.validate_for(kind).unwrap();
+        }
+        for kind in [SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg] {
+            let err = o.validate_for(kind).unwrap_err();
+            assert!(
+                err.contains("precision=mixed") && err.contains(kind.as_str()),
+                "error must name the setting and the kind: {err}"
+            );
+            assert!(err.contains("chol") && err.contains("rvb"), "{err}");
+        }
+        // Pure f64 is valid everywhere.
+        o.apply("precision", "f64").unwrap();
+        for &kind in SolverKind::all() {
+            o.validate_for(kind).unwrap();
+        }
     }
 
     #[test]

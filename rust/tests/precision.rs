@@ -1,0 +1,231 @@
+//! PR-6 mixed-precision integration tests: the `solver.precision =
+//! mixed` sessions (f32 Gram/factor/triangular solves + f64 iterative
+//! refinement) against the pure-f64 path, the fallback latch on inputs
+//! the f32 pipeline cannot represent, and the config-level rejection of
+//! the mode on kinds without a mixed session.
+//!
+//! Refinement convergence contract (see `solver/chol.rs`): each sweep
+//! contracts the error by ≈κ(W)·u₃₂ (u₃₂ ≈ 6e-8), so the mixed session
+//! converges to `solver.tol` whenever κ(W)·u₃₂ ≪ 1 and otherwise
+//! detects stagnation and latches the session back to f64 — observable
+//! through `solver::mixed_counters`, never through a wrong answer.
+
+use dngd::config::Config;
+use dngd::data::rng::Rng;
+use dngd::linalg::{mat::norm2, Mat};
+use dngd::solver::{
+    mixed_counters, residual_norm, CholSolver, DampedSolver, Precision, RvbSolver, SolverOptions,
+};
+
+const TOL: f64 = 1e-10;
+
+fn mixed_chol() -> CholSolver {
+    CholSolver::default().with_precision(Precision::Mixed, TOL)
+}
+
+/// Well-conditioned problems: the mixed session must hit the refinement
+/// target without a single fallback, and its answers must sit at the
+/// f64 session's answers to the paper-tolerance bar.
+#[test]
+fn mixed_session_meets_refinement_target_without_fallbacks() {
+    let mut rng = Rng::seed_from(600);
+    let fb0 = mixed_counters::fallbacks();
+    let mf0 = mixed_counters::mixed_factors();
+    for &(n, m, lambda) in &[(8usize, 40usize, 0.5f64), (32, 200, 1e-2), (64, 500, 3e-3)] {
+        let s = Mat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let x = mixed_chol().solve(&s, &v, lambda).unwrap();
+        // The refinement loop's own contract: true residual ≤ tol·‖v‖.
+        let r = residual_norm(&s, &x, &v, lambda);
+        assert!(r <= TOL * norm2(&v), "({n},{m},λ={lambda}): residual {r:.3e}");
+        // And the answer agrees with the f64 session.
+        let x64 = CholSolver::default().solve(&s, &v, lambda).unwrap();
+        let scale = norm2(&x64).max(1.0);
+        for (a, b) in x.iter().zip(&x64) {
+            assert!((a - b).abs() < 1e-8 * scale, "({n},{m}): {a} vs {b}");
+        }
+    }
+    assert_eq!(mixed_counters::fallbacks(), fb0, "no fallback on benign inputs");
+    assert!(mixed_counters::mixed_factors() >= mf0 + 3, "every shape used the f32 factor");
+}
+
+/// An ill-conditioned Gram (geometric row scaling, norms spread 1e1.5
+/// ⇒ Gram eigenvalue spread ~1e3) slows the per-sweep contraction to
+/// ~4e-2 (numpy oracle, `python/oracle_precision.py`: 4–5 sweeps over
+/// 30 seeds, none stagnant), so reaching 1e-10 provably needs more
+/// than one correction sweep — and the sweep counter shows them.
+#[test]
+fn ill_conditioned_gram_needs_multiple_refinement_sweeps() {
+    let mut rng = Rng::seed_from(601);
+    let (n, m) = (24usize, 200usize);
+    let mut s = Mat::randn(n, m, &mut rng);
+    for i in 0..n {
+        let scale = 10f64.powf(1.5 * i as f64 / (n - 1) as f64);
+        for x in s.row_mut(i) {
+            *x *= scale;
+        }
+    }
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let lambda = 1.0;
+    let fb0 = mixed_counters::fallbacks();
+    let sw0 = mixed_counters::refine_sweeps();
+    let x = mixed_chol().solve(&s, &v, lambda).unwrap();
+    assert_eq!(mixed_counters::fallbacks(), fb0, "contraction ≪ 0.7: must converge, not latch");
+    let sweeps = mixed_counters::refine_sweeps() - sw0;
+    assert!(sweeps >= 2, "this κ cannot reach 1e-10 in one sweep (got {sweeps})");
+    assert!(residual_norm(&s, &x, &v, lambda) <= TOL * norm2(&v));
+}
+
+/// Scores whose Gram overflows f32 (or degenerates to subnormal) must
+/// latch the session to f64 — observable via the fallback counter — and
+/// then produce *exactly* the pure-f64 session's answer (after the
+/// latch the code path is identical).
+#[test]
+fn f32_overflow_and_subnormal_gram_fall_back_to_f64() {
+    let mut rng = Rng::seed_from(602);
+    let (n, m, lambda) = (10usize, 60usize, 0.5f64);
+    let base = Mat::randn(n, m, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    // 1e30 is f32-representable but its Gram diagonal (~m·1e60) is not;
+    // 1e-30 drives the diagonal subnormal; 1e39 overflows the cast
+    // itself. All three must latch.
+    for &scale in &[1e30f64, 1e-30, 1e39] {
+        let mut s = base.clone();
+        for x in s.as_mut_slice() {
+            *x *= scale;
+        }
+        // λ on the data's own scale so the damped f64 system stays sane.
+        let l = lambda * scale * scale;
+        let fb0 = mixed_counters::fallbacks();
+        let mf0 = mixed_counters::mixed_factors();
+        let x = mixed_chol().solve(&s, &v, l).unwrap();
+        assert!(
+            mixed_counters::fallbacks() > fb0,
+            "scale {scale:e}: the f32 screen must record a fallback"
+        );
+        assert_eq!(
+            mixed_counters::mixed_factors(),
+            mf0,
+            "scale {scale:e}: no f32 factor may complete"
+        );
+        let x64 = CholSolver::default().solve(&s, &v, l).unwrap();
+        for (a, b) in x.iter().zip(&x64) {
+            assert_eq!(a.to_bits(), b.to_bits(), "latched session must equal the f64 path");
+        }
+    }
+}
+
+/// The mixed session composes with the PR-2 session API: λ-resweeps
+/// refactor in f32, and the blocked multi-RHS path refines every row to
+/// the target.
+#[test]
+fn mixed_session_resweeps_and_multi_rhs() {
+    let mut rng = Rng::seed_from(603);
+    let (n, m, k) = (20usize, 150usize, 6usize);
+    let s = Mat::randn(n, m, &mut rng);
+    let vs = Mat::randn(k, m, &mut rng);
+    let solver = mixed_chol();
+    let fb0 = mixed_counters::fallbacks();
+    let mut fact = solver.begin(&s);
+    for &lambda in &[0.5f64, 1e-2] {
+        fact.redamp(lambda).unwrap();
+        let x = fact.solve_many(&vs).unwrap();
+        for r in 0..k {
+            let res = residual_norm(&s, x.row(r), vs.row(r), lambda);
+            assert!(res <= TOL * norm2(vs.row(r)), "λ={lambda} rhs {r}: {res:.3e}");
+        }
+    }
+    assert_eq!(mixed_counters::fallbacks(), fb0);
+}
+
+/// Streaming rotation has no f32 incremental update: `update_rows` on a
+/// mixed session latches it to f64 (counted as a fallback) and the
+/// rotated session keeps answering correctly.
+#[test]
+fn update_rows_latches_mixed_session_to_f64() {
+    let mut rng = Rng::seed_from(604);
+    let (n, m, lambda) = (12usize, 80usize, 0.1f64);
+    let s = Mat::randn(n, m, &mut rng);
+    let solver = mixed_chol();
+    let mut fact = solver.begin_window(s.clone()).expect("chol owned-window session");
+    fact.redamp(lambda).unwrap();
+    let added = Mat::randn(2, m, &mut rng);
+    let fb0 = mixed_counters::fallbacks();
+    fact.update_rows(&[0, 3], &added).unwrap();
+    assert!(mixed_counters::fallbacks() > fb0, "rotation must latch the f32 factor");
+    // Rotated window: rows {1,2,4..n} then the two added rows.
+    let kept: Vec<usize> = (0..n).filter(|&i| i != 0 && i != 3).collect();
+    let mut rotated = Mat::zeros(n, m);
+    for (i, &oi) in kept.iter().enumerate() {
+        rotated.row_mut(i).copy_from_slice(s.row(oi));
+    }
+    for j in 0..2 {
+        rotated.row_mut(n - 2 + j).copy_from_slice(added.row(j));
+    }
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let warm = fact.solve(&v).unwrap();
+    let cold = CholSolver::default().solve(&rotated, &v, lambda).unwrap();
+    let scale = norm2(&cold).max(1.0);
+    for (a, b) in warm.iter().zip(&cold) {
+        assert!((a - b).abs() < 1e-9 * scale);
+    }
+}
+
+/// rvb's mixed mode: the recovery stage stays f64, the damped inner
+/// solve runs f32 + refinement, and the rowspace precondition still
+/// holds. The outer residual bound is ‖S‖·tol·‖f‖ (x = Sᵀu amplifies
+/// the refined inner residual by at most ‖S‖).
+#[test]
+fn rvb_mixed_session_matches_f64() {
+    let mut rng = Rng::seed_from(605);
+    let (n, m, lambda) = (14usize, 100usize, 0.05f64);
+    let s = Mat::randn(n, m, &mut rng);
+    let f: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let v = s.t_matvec(&f);
+    let fb0 = mixed_counters::fallbacks();
+    let mf0 = mixed_counters::mixed_factors();
+    let solver = RvbSolver::default().with_precision(Precision::Mixed, TOL);
+    let x = solver.solve(&s, &v, lambda).unwrap();
+    assert_eq!(mixed_counters::fallbacks(), fb0);
+    assert!(mixed_counters::mixed_factors() > mf0, "rvb must use the f32 damped factor");
+    let r = residual_norm(&s, &x, &v, lambda);
+    assert!(r <= 10.0 * s.fro_norm() * TOL * norm2(&f), "outer residual {r:.3e}");
+    let x64 = RvbSolver::default().solve(&s, &v, lambda).unwrap();
+    let scale = norm2(&x64).max(1.0);
+    for (a, b) in x.iter().zip(&x64) {
+        assert!((a - b).abs() < 1e-8 * scale, "{a} vs {b}");
+    }
+    // Random v with m ≫ n is not Sᵀf: the precondition still rejects.
+    let bad: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    assert!(solver.solve(&s, &bad, lambda).is_err());
+}
+
+/// `solver.precision = mixed` is a session feature of chol/rvb only:
+/// every other kind rejects it at validation time — option layer and
+/// config layer — with an error naming the setting, the offending kind,
+/// and the kinds that do support it.
+#[test]
+fn precision_mixed_rejected_for_unsupported_kinds() {
+    let mut opts = SolverOptions::default();
+    opts.apply("precision", "mixed").unwrap();
+    for (kind_str, kind) in [
+        ("eigh", dngd::solver::SolverKind::Eigh),
+        ("svda", dngd::solver::SolverKind::Svda),
+        ("naive", dngd::solver::SolverKind::Naive),
+        ("cg", dngd::solver::SolverKind::Cg),
+    ] {
+        let err = opts.validate_for(kind).unwrap_err();
+        assert!(err.contains("precision=mixed"), "{err}");
+        assert!(err.contains(kind_str), "error must name the kind: {err}");
+        assert!(err.contains("chol") && err.contains("rvb"), "{err}");
+        let cfg_err = Config::from_toml_str(
+            &format!("[solver]\nkind = \"{kind_str}\"\nprecision = \"mixed\"\n"),
+            &[],
+        )
+        .unwrap_err();
+        assert!(cfg_err.contains("precision=mixed"), "{cfg_err}");
+    }
+    // Unknown modes fail at parse, naming the known set.
+    let err = opts.apply("precision", "bf16").unwrap_err();
+    assert!(err.contains("f64") && err.contains("mixed"), "{err}");
+}
