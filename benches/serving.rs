@@ -1,0 +1,27 @@
+//! PR-7 serving bench (EXPERIMENTS.md §Serving): sustained multi-tenant
+//! traffic against the damped-solve server at 1/4/16 concurrent tenants,
+//! with coalesced dispatch (compatible RHS batched into one `solve_many`
+//! panel per tick) measured against the serial per-request baseline.
+//! Reports requests/sec plus client-observed p50/p99 latency, and gates
+//! every answer against the serial `chol` solver at 1e-9.
+//!
+//! Emits the machine-readable `BENCH_PR7.json` file (path overridable
+//! via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks the shape for CI
+//! smoke runs). In full mode the harness *asserts* the PR-7 acceptance
+//! bar: coalesced dispatch at 16 tenants sustains ≥2× the requests/sec
+//! of serial dispatch without degrading p99 (quick mode skips it — at
+//! tiny shapes the dispatch tick dominates the panel GEMM — but runs
+//! the correctness gate in every mode).
+//!
+//! ```text
+//! cargo bench --bench serving
+//! ```
+
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("DNGD_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR7.json".to_string());
+    dngd::bench_tables::serving_bench_report(quick, Some(Path::new(&json)), !quick)
+        .expect("write serving bench json");
+}

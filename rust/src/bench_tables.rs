@@ -39,6 +39,14 @@
 //!   (`dngd bench --precision`). Full mode asserts the PR-6 acceptance
 //!   bar: f32 GEMM and SYRK ≥ 1.5× f64 at 512³ single-threaded on the
 //!   best tier (skipped when scalar is the active tier).
+//! * [`serving_bench`] — PR 7's multi-tenant serving table: requests/sec
+//!   and client-observed p50/p99 latency at 1/4/16 concurrent tenants
+//!   hammering one cached session, coalesced dispatch (cross-tenant
+//!   `solve_many` panels per tick) vs serial per-request dispatch, with
+//!   a per-tenant correctness gate against the serial session, emitted
+//!   as `BENCH_PR7.json` (`dngd bench --serving`). Full mode asserts
+//!   the PR-7 acceptance bar: coalesced ≥ 2× serial req/s at 16
+//!   tenants with no worse p99.
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -1445,4 +1453,224 @@ pub fn cg_conditioning() {
         );
     }
     println!("\npaper §3: iterative methods scale linearly but iterations grow when ill-conditioned;\nthe direct chol solve is non-iterative and flat.");
+}
+
+/// One row of the PR-7 serving benchmark: sustained traffic from
+/// `tenants` concurrent clients against one shared session, coalesced
+/// vs serial dispatch.
+#[derive(Debug, Clone)]
+pub struct ServingBenchRow {
+    pub tenants: usize,
+    /// Cross-tenant RHS coalescing on (tick gathers a panel) or off
+    /// (tick 0, one panel per request — the serial baseline).
+    pub coalesced: bool,
+    /// Total requests completed across all tenants.
+    pub requests: usize,
+    /// Requests per second over the whole run.
+    pub rps: f64,
+    /// Client-observed latency percentiles (submit → answer).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// `solve_many` panels the dispatcher issued (≪ requests when
+    /// coalescing works).
+    pub panels: u64,
+}
+
+/// The PR-7 serving benchmark: 1/4/16 tenants hammer one cached session
+/// with blocking single-RHS solves; coalesced mode gathers a dispatch
+/// tick and batches same-(session, λ) requests into one `solve_many`
+/// panel, serial mode dispatches each request as its own panel. The
+/// panel path turns k memory-bound GEMV-shaped passes over S into one
+/// GEMM-shaped pass, which is where the cross-tenant speedup comes
+/// from. Every tenant's first answer is gated against the serial
+/// single-process session (1e-9), so throughput never comes at the
+/// cost of correctness.
+pub fn serving_bench(quick: bool) -> Vec<ServingBenchRow> {
+    use crate::serve::{ServeOptions, Server};
+    use std::time::Instant;
+
+    let (n, m, per_tenant) = if quick { (48usize, 512usize, 8usize) } else { (256, 4096, 32) };
+    let workers = if quick { 2 } else { 4 };
+    let lambda = 1e-3;
+    let mut rng = Rng::seed_from(77);
+    let s = Mat::randn(n, m, &mut rng);
+    let max_tenants = 16usize;
+    let vs: Vec<Vec<f64>> =
+        (0..max_tenants).map(|_| (0..m).map(|_| rng.normal()).collect()).collect();
+    // Reference answers from the serial session path (one staging,
+    // max_tenants cheap solves).
+    let refs: Vec<Vec<f64>> = {
+        let serial = CholSolver::default();
+        let mut fact = serial.factor(&s, lambda).expect("reference factor");
+        vs.iter().map(|v| fact.solve(v).expect("reference solve")).collect()
+    };
+
+    let mut rows = Vec::new();
+    for &tenants in &[1usize, 4, 16] {
+        for &coalesced in &[true, false] {
+            let opts = ServeOptions {
+                tenants,
+                queue_depth: 64.max(tenants),
+                tick_ms: if coalesced { 2 } else { 0 },
+                coalesce: coalesced,
+                workers,
+                worker_queue_depth: 4,
+                ..ServeOptions::default()
+            };
+            let server = Server::start(opts).expect("server start");
+            let sid = {
+                let setup = server.client().expect("setup client");
+                let sid = setup.open_session(s.clone(), lambda).expect("open session");
+                sid // setup client drops here, freeing its tenant slot
+            };
+            let started = Instant::now();
+            let mut latencies: Vec<f64> = Vec::new();
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for t in 0..tenants {
+                    let client = server.client().expect("tenant client");
+                    let v = &vs[t];
+                    let x_ref = &refs[t];
+                    handles.push(scope.spawn(move || {
+                        let mut lats = Vec::with_capacity(per_tenant);
+                        for req in 0..per_tenant {
+                            let t0 = Instant::now();
+                            let x = loop {
+                                match client.solve(sid, lambda, v) {
+                                    Ok(x) => break x,
+                                    Err(e) if e.is_retryable() => {
+                                        std::thread::sleep(std::time::Duration::from_millis(1));
+                                    }
+                                    Err(e) => panic!("serving bench solve failed: {e}"),
+                                }
+                            };
+                            lats.push(t0.elapsed().as_secs_f64() * 1e3);
+                            if req == 0 {
+                                // Correctness gate: coalesced panels must
+                                // reproduce the serial session's answers.
+                                let scale = crate::linalg::mat::norm2(x_ref).max(1.0);
+                                for (a, b) in x.iter().zip(x_ref) {
+                                    assert!(
+                                        (a - b).abs() < 1e-9 * scale,
+                                        "serving answer diverged from serial: {a} vs {b}"
+                                    );
+                                }
+                            }
+                        }
+                        lats
+                    }));
+                }
+                for h in handles {
+                    latencies.extend(h.join().expect("tenant thread"));
+                }
+            });
+            let elapsed = started.elapsed().as_secs_f64();
+            let stats = server.shutdown();
+            let total = tenants * per_tenant;
+            assert_eq!(stats.completed, total as u64, "every request must be answered");
+            let summary = crate::metrics::Summary::from_samples(&latencies);
+            rows.push(ServingBenchRow {
+                tenants,
+                coalesced,
+                requests: total,
+                rps: total as f64 / elapsed.max(1e-9),
+                p50_ms: summary.median,
+                p99_ms: summary.p99,
+                panels: stats.panels,
+            });
+        }
+    }
+    rows
+}
+
+/// Render serving-bench rows as the `BENCH_PR7.json` payload
+/// (hand-rolled JSON — the build is offline, no serde).
+pub fn serving_bench_json(rows: &[ServingBenchRow], quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 7,\n");
+    out.push_str("  \"bench\": \"serving\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(
+        "  \"unit\": {\"rps\": \"requests/second\", \"p50_ms\": \"milliseconds\", \
+         \"p99_ms\": \"milliseconds\"},\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"tenants\": {}, \"coalesced\": {}, \"requests\": {}, \"rps\": {:.1}, \
+                 \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"panels\": {}}}",
+                r.tenants, r.coalesced, r.requests, r.rps, r.p50_ms, r.p99_ms, r.panels
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the serving benchmark, print the table, optionally write
+/// `BENCH_PR7.json`. `strict` enforces the PR-7 acceptance bar —
+/// coalesced dispatch at 16 tenants ≥ 2× the serial requests/sec at no
+/// worse p99 — enabled by the full-mode `cargo bench --bench serving`
+/// harness (quick mode skips it: tiny shapes make the dispatch tick,
+/// not the solve, the dominant cost).
+pub fn serving_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    let rows = serving_bench(quick);
+    println!(
+        "{:>7} | {:>9} | {:>8} | {:>9} | {:>9} | {:>9} | {:>7}",
+        "tenants", "dispatch", "requests", "req/s", "p50", "p99", "panels"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} | {:>9} | {:>8} | {:>9.1} | {:>7.2}ms | {:>7.2}ms | {:>7}",
+            r.tenants,
+            if r.coalesced { "coalesced" } else { "serial" },
+            r.requests,
+            r.rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.panels
+        );
+    }
+    println!(
+        "\ncoalesced = one solve_many panel per (session, λ) per tick; serial = one panel per \
+         request. Latency is client-observed (submit → answer), including the gathering tick."
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, serving_bench_json(&rows, quick))?;
+        println!("serving bench table written to {}", path.display());
+    }
+    if strict {
+        let coal = rows
+            .iter()
+            .find(|r| r.tenants == 16 && r.coalesced)
+            .expect("16-tenant coalesced row");
+        let serial = rows
+            .iter()
+            .find(|r| r.tenants == 16 && !r.coalesced)
+            .expect("16-tenant serial row");
+        assert!(
+            coal.rps >= 2.0 * serial.rps,
+            "PR-7 acceptance: coalesced dispatch at 16 tenants must be ≥2× serial req/s, got \
+             {:.1} vs {:.1}",
+            coal.rps,
+            serial.rps
+        );
+        assert!(
+            coal.p99_ms <= serial.p99_ms * 1.25,
+            "PR-7 acceptance: the coalesced throughput win may not cost p99 ({:.2}ms vs \
+             {:.2}ms serial)",
+            coal.p99_ms,
+            serial.p99_ms
+        );
+        println!("acceptance: coalesced ≥ 2× serial req/s at 16 tenants, p99 no worse ✓");
+    }
+    Ok(())
 }

@@ -197,6 +197,39 @@ impl Default for VmcConfig {
     }
 }
 
+/// Serving front-end settings (PR 7) — consumed by
+/// [`crate::serve::ServeOptions::from_config`], which also folds in the
+/// `coordinator.*` shard topology and `solver.*` kernel knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Concurrent tenant connection slots.
+    pub tenants: usize,
+    /// Dispatch-queue depth (must be ≥ tenants; cross-checked in
+    /// [`Config::validate`]).
+    pub queue_depth: usize,
+    /// Gathering window per dispatch tick in ms (0 = dispatch
+    /// immediately, the serial baseline).
+    pub tick_ms: u64,
+    /// Session-memory budget in GB under the `cost.rs` model
+    /// (0 = the paper's 80 GB A100).
+    pub budget_gb: f64,
+    /// Shard worker transport: `"channels"` (in-process) or `"socket"`
+    /// (out-of-process Unix-domain sockets).
+    pub transport: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            tenants: 16,
+            queue_depth: 64,
+            tick_ms: 2,
+            budget_gb: 0.0,
+            transport: "channels".into(),
+        }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -205,6 +238,7 @@ pub struct Config {
     pub train: TrainConfig,
     pub coordinator: CoordinatorConfig,
     pub vmc: VmcConfig,
+    pub serve: ServeConfig,
 }
 
 impl Config {
@@ -311,6 +345,12 @@ impl Config {
         get_u64(doc, "vmc.seed", &mut cfg.vmc.seed)?;
         get_string(doc, "vmc.variant", &mut cfg.vmc.variant)?;
 
+        get_usize(doc, "serve.tenants", &mut cfg.serve.tenants)?;
+        get_usize(doc, "serve.queue_depth", &mut cfg.serve.queue_depth)?;
+        get_u64(doc, "serve.tick_ms", &mut cfg.serve.tick_ms)?;
+        get_f64(doc, "serve.budget_gb", &mut cfg.serve.budget_gb)?;
+        get_string(doc, "serve.transport", &mut cfg.serve.transport)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -353,6 +393,27 @@ impl Config {
         if self.vmc.variant != "complex" && self.vmc.variant != "real_part" {
             return Err(format!("vmc.variant must be \"complex\" or \"real_part\", got {:?}", self.vmc.variant));
         }
+        // serve.* range + cross-checks, one source of truth with the
+        // `dngd serve` path ([`crate::serve::ServeOptions::validate`],
+        // which re-validates the merged options).
+        if self.serve.tenants == 0 {
+            return Err("serve.tenants must be ≥ 1".into());
+        }
+        if self.serve.queue_depth < self.serve.tenants {
+            return Err(format!(
+                "serve.queue_depth ({}) must be ≥ serve.tenants ({}): every connected tenant \
+                 needs at least one queue slot or admission livelocks",
+                self.serve.queue_depth, self.serve.tenants
+            ));
+        }
+        if self.serve.tick_ms > 10_000 {
+            return Err("serve.tick_ms must be ≤ 10000".into());
+        }
+        if !self.serve.budget_gb.is_finite() || self.serve.budget_gb < 0.0 {
+            return Err("serve.budget_gb must be ≥ 0 (0 = the 80 GB A100 default)".into());
+        }
+        crate::serve::TransportKind::parse(&self.serve.transport)
+            .map_err(|e| format!("serve.transport: {e}"))?;
         Ok(())
     }
 }
@@ -403,6 +464,11 @@ const KNOWN_KEYS: &[&str] = &[
     "vmc.learning_rate",
     "vmc.seed",
     "vmc.variant",
+    "serve.tenants",
+    "serve.queue_depth",
+    "serve.tick_ms",
+    "serve.budget_gb",
+    "serve.transport",
 ];
 
 fn get_f64(doc: &TomlDoc, key: &str, out: &mut f64) -> Result<(), String> {
@@ -639,5 +705,49 @@ variant = "real_part"
     #[test]
     fn bad_override_reports() {
         assert!(Config::from_toml_str("", &["no_equals".into()]).is_err());
+    }
+
+    #[test]
+    fn serve_keys_parse_from_toml_and_set() {
+        let cfg = Config::from_toml_str(
+            "[serve]\ntenants = 4\nqueue_depth = 32\ntick_ms = 5\nbudget_gb = 2.5\n\
+             transport = \"socket\"\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.tenants, 4);
+        assert_eq!(cfg.serve.queue_depth, 32);
+        assert_eq!(cfg.serve.tick_ms, 5);
+        assert_eq!(cfg.serve.budget_gb, 2.5);
+        assert_eq!(cfg.serve.transport, "socket");
+        // The --set override path reaches the same keys.
+        let cfg = Config::from_toml_str(
+            "",
+            &["serve.tenants=2".into(), "serve.transport=channels".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.tenants, 2);
+        assert_eq!(cfg.serve.transport, "channels");
+        // Defaults: 16 tenants, channels transport, A100 budget.
+        let cfg = Config::from_toml_str("", &[]).unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_keys_cross_validate() {
+        // Unknown keys hard-error like every other section.
+        let err = Config::from_toml_str("[serve]\nbogus = 1\n", &[]).unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+        // queue_depth must cover every tenant slot.
+        let err = Config::from_toml_str("[serve]\ntenants = 8\nqueue_depth = 4\n", &[])
+            .unwrap_err();
+        assert!(err.contains("serve.queue_depth"), "{err}");
+        // Transport names go through the one shared parser.
+        let err =
+            Config::from_toml_str("[serve]\ntransport = \"pigeon\"\n", &[]).unwrap_err();
+        assert!(err.contains("serve.transport"), "{err}");
+        assert!(Config::from_toml_str("[serve]\ntenants = 0\n", &[]).is_err());
+        assert!(Config::from_toml_str("[serve]\nbudget_gb = -1.0\n", &[]).is_err());
+        assert!(Config::from_toml_str("[serve]\ntick_ms = 999999\n", &[]).is_err());
     }
 }

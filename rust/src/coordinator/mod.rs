@@ -20,9 +20,15 @@
 //! * [`shard`] — the m-axis [`ShardPlan`] (exact-cover invariants);
 //! * [`reduce`] — pairwise tree reduction of partial results;
 //! * [`pool`] — persistent worker threads with bounded (backpressure)
-//!   channels and fault injection for tests;
+//!   channels, typed retryable/fatal faults, and fault injection for
+//!   tests; since PR 7 a worker hosts many sessions at once (shards are
+//!   keyed by session id) and is driven through the
+//!   [`crate::serve::ShardTransport`] abstraction, so the same solver
+//!   runs against in-process channels or out-of-process sockets;
 //! * [`sharded`] — [`ShardedCholSolver`], the distributed Algorithm 1
-//!   implementing [`crate::solver::DampedSolver`];
+//!   implementing [`crate::solver::DampedSolver`], plus the owning
+//!   [`ShardedWindowSession`] used by the serving layer (distributed
+//!   streaming `update_rows`);
 //! * [`trainer`] — the end-to-end NGD trainer driving model, data,
 //!   solver, metrics and checkpoints.
 
@@ -35,5 +41,5 @@ pub mod trainer;
 pub use pool::{PoolError, WorkerPool};
 pub use reduce::tree_reduce_mats;
 pub use shard::ShardPlan;
-pub use sharded::ShardedCholSolver;
+pub use sharded::{ShardedCholSolver, ShardedFactor, ShardedWindowSession};
 pub use trainer::{TrainReport, Trainer};

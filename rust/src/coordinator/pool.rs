@@ -1,53 +1,60 @@
 //! Persistent worker pool with bounded channels.
 //!
-//! Each worker is an OS thread owning its column shard `S_k` of the score
-//! matrix. The leader talks to workers over `sync_channel`s of
-//! configurable depth — a full queue blocks the sender, which is the
-//! backpressure mechanism (a leader can never run unboundedly ahead of a
-//! slow worker). Fault injection (`Job::Stall`) lets tests exercise
-//! straggler behaviour without real slow hardware.
+//! Each worker is an OS thread owning column shards `S_k` of score
+//! matrices, keyed by **session id** — since PR 7 a worker holds one
+//! shard *per live session*, so many tenants' sessions can be in flight
+//! on one pool at once. The leader talks to workers over `sync_channel`s
+//! of configurable depth — a full queue blocks [`WorkerPool::send`]
+//! (backpressure) or surfaces as the retryable [`PoolError::QueueFull`]
+//! from [`WorkerPool::try_send`]. Fault injection
+//! (`ShardRequest::Stall`, `ShardRequest::Die`) lets tests exercise
+//! straggler and crash behaviour without real bad hardware.
+//!
+//! The request vocabulary and the compute path live in
+//! [`crate::serve::transport`] ([`ShardRequest`] / `execute_request`),
+//! shared with the socket transport so in-process and out-of-process
+//! workers are bit-identical.
 
 use crate::linalg::{KernelConfig, Mat};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::Arc;
-use std::time::Duration;
+use crate::serve::transport::{execute_request, ShardRequest, ShardResponse};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 
 /// Messages the leader sends to a worker.
 pub enum Job {
-    /// Install this worker's column shard (n × shard_width).
-    SetShard(Mat),
-    /// Compute the partial Gram `S_k S_kᵀ` (no damping — leader adds λ).
-    Gram { reply: Sender<(usize, Mat)> },
-    /// Compute the partial matvec `u_k = S_k v_k`.
-    Matvec { v_k: Vec<f64>, reply: Sender<(usize, Vec<f64>)> },
-    /// Compute the shard solution `x_k = (v_k − S_kᵀ z)/λ`.
-    Apply { z: Arc<Vec<f64>>, v_k: Vec<f64>, lambda: f64, reply: Sender<(usize, Vec<f64>)> },
-    /// Batched [`Job::Matvec`] (PR-5 bugfix): a k-RHS column panel
-    /// `V_k` (k × shard_width, rows are right-hand-side slices) in one
-    /// message — the partial `U_k = S_k·V_kᵀ` (n × k) comes back as one
-    /// panel GEMM instead of k round-trips.
-    MatvecMany { v_k: Mat, reply: Sender<(usize, Mat)> },
-    /// Batched [`Job::Apply`]: the shard solution block
-    /// `X_k = (V_k − (S_kᵀZ)ᵀ)/λ` (k × shard_width) for all k
-    /// right-hand sides in one message.
-    ApplyMany { z: Arc<Mat>, v_k: Mat, lambda: f64, reply: Sender<(usize, Mat)> },
-    /// Fault injection: sleep before processing the next job (straggler).
-    Stall(Duration),
+    /// One shard request; the worker answers on `reply` (demuxed per
+    /// request, so concurrent leader threads never interleave replies).
+    Request { req: ShardRequest, reply: Sender<ShardResponse> },
+    /// Drain barrier: replies the worker's processed count once every
+    /// job enqueued before this one has been executed.
+    Flush { reply: Sender<u64> },
     Shutdown,
 }
 
-/// Pool-level failures.
-#[derive(Debug)]
+/// Pool-level failures, split by whether a retry on this pool can ever
+/// succeed (the serving layer's reject-with-retry-after vs tear-down
+/// decision rides on this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolError {
+    /// The worker thread is gone — its mailbox is closed. Fatal: the
+    /// pool does not respawn workers.
     WorkerGone(usize),
-    MissingShard(usize),
+    /// The worker's bounded mailbox is full (only from
+    /// [`WorkerPool::try_send`]). Retryable: back off and resubmit.
+    QueueFull(usize),
+}
+
+impl PoolError {
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, PoolError::QueueFull(_))
+    }
 }
 
 impl std::fmt::Display for PoolError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             PoolError::WorkerGone(w) => write!(f, "worker {w} disconnected"),
-            PoolError::MissingShard(w) => write!(f, "worker {w} has no shard installed"),
+            PoolError::QueueFull(w) => write!(f, "worker {w} queue full"),
         }
     }
 }
@@ -85,7 +92,7 @@ impl WorkerPool {
                 let (tx, rx) = sync_channel::<Job>(queue_depth);
                 let join = std::thread::Builder::new()
                     .name(format!("dngd-worker-{id}"))
-                    .spawn(move || worker_loop(id, rx, kernel))
+                    .spawn(move || worker_loop(rx, kernel))
                     .expect("spawn worker");
                 WorkerHandle { tx, join: Some(join) }
             })
@@ -107,8 +114,36 @@ impl WorkerPool {
         self.workers[w].tx.send(job).map_err(|_| PoolError::WorkerGone(w))
     }
 
-    /// Graceful shutdown; returns per-worker processed-job counts.
+    /// Non-blocking [`WorkerPool::send`]: a full mailbox surfaces as the
+    /// retryable [`PoolError::QueueFull`] instead of blocking.
+    pub fn try_send(&self, w: usize, job: Job) -> Result<(), PoolError> {
+        self.workers[w].tx.try_send(job).map_err(|e| match e {
+            TrySendError::Full(_) => PoolError::QueueFull(w),
+            TrySendError::Disconnected(_) => PoolError::WorkerGone(w),
+        })
+    }
+
+    /// Drain barrier: returns once every job enqueued before the call
+    /// has been processed on every worker (mailboxes are FIFO).
+    pub fn flush(&self) -> Result<(), PoolError> {
+        let mut waits = Vec::with_capacity(self.workers.len());
+        for (w, h) in self.workers.iter().enumerate() {
+            let (tx, rx) = channel();
+            h.tx.send(Job::Flush { reply: tx }).map_err(|_| PoolError::WorkerGone(w))?;
+            waits.push((w, rx));
+        }
+        for (w, rx) in waits {
+            rx.recv().map_err(|_| PoolError::WorkerGone(w))?;
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown; drains all in-flight jobs (explicit
+    /// [`WorkerPool::flush`] barrier), then stops the workers and
+    /// returns per-worker processed-job counts.
     pub fn shutdown(mut self) -> Vec<u64> {
+        // A dead worker fails the flush — ignore and join what's left.
+        let _ = self.flush();
         self.drain()
     }
 
@@ -129,57 +164,23 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(id: usize, rx: Receiver<Job>, kernel: KernelConfig) -> u64 {
-    let mut shard: Option<Mat> = None;
+fn worker_loop(rx: Receiver<Job>, kernel: KernelConfig) -> u64 {
+    let mut shards: HashMap<u64, Mat> = HashMap::new();
     let mut processed: u64 = 0;
     while let Ok(job) = rx.recv() {
         processed += 1;
         match job {
-            Job::SetShard(m) => shard = Some(m),
-            Job::Gram { reply } => {
-                let Some(s) = shard.as_ref() else { continue };
-                let w = crate::linalg::gemm::syrk_parallel(s, 0.0, kernel.threads);
-                let _ = reply.send((id, w));
+            // Crash simulation: exit without replying — queued jobs drop
+            // with the mailbox, which closes their reply channels and
+            // fails their tickets instead of hanging them.
+            Job::Request { req: ShardRequest::Die, .. } => break,
+            Job::Request { req, reply } => {
+                // A dropped ticket (fire-and-forget caller) is fine.
+                let _ = reply.send(execute_request(&mut shards, req, kernel));
             }
-            Job::Matvec { v_k, reply } => {
-                let Some(s) = shard.as_ref() else { continue };
-                let _ = reply.send((id, s.matvec(&v_k)));
+            Job::Flush { reply } => {
+                let _ = reply.send(processed);
             }
-            Job::Apply { z, v_k, lambda, reply } => {
-                let Some(s) = shard.as_ref() else { continue };
-                let t = s.t_matvec(&z);
-                let inv = 1.0 / lambda;
-                let x_k: Vec<f64> =
-                    v_k.iter().zip(&t).map(|(vj, tj)| inv * (vj - tj)).collect();
-                let _ = reply.send((id, x_k));
-            }
-            Job::MatvecMany { v_k, reply } => {
-                let Some(s) = shard.as_ref() else { continue };
-                // U_k = S_k·V_kᵀ (n × k): one panel GEMM on the worker's
-                // kernel configuration.
-                let mut u = Mat::zeros(s.rows(), v_k.rows());
-                crate::linalg::gemm::gemm_nt_threaded(1.0, s, &v_k, 0.0, &mut u, kernel.threads);
-                let _ = reply.send((id, u));
-            }
-            Job::ApplyMany { z, v_k, lambda, reply } => {
-                let Some(s) = shard.as_ref() else { continue };
-                // T = S_kᵀ·Z (shard_width × k), then the Algorithm-1
-                // line-4 combination per right-hand side.
-                let (k, w) = v_k.shape();
-                let mut t = Mat::zeros(w, k);
-                crate::linalg::gemm::gemm_tn_threaded(1.0, s, &z, 0.0, &mut t, kernel.threads);
-                let inv = 1.0 / lambda;
-                let mut x_k = Mat::zeros(k, w);
-                for r in 0..k {
-                    let vrow = v_k.row(r);
-                    let xrow = x_k.row_mut(r);
-                    for j in 0..w {
-                        xrow[j] = inv * (vrow[j] - t[(j, r)]);
-                    }
-                }
-                let _ = reply.send((id, x_k));
-            }
-            Job::Stall(d) => std::thread::sleep(d),
             Job::Shutdown => break,
         }
     }
@@ -190,26 +191,34 @@ fn worker_loop(id: usize, rx: Receiver<Job>, kernel: KernelConfig) -> u64 {
 mod tests {
     use super::*;
     use crate::data::rng::Rng;
-    use std::sync::mpsc::channel;
+
+    fn request(pool: &WorkerPool, w: usize, req: ShardRequest) -> Receiver<ShardResponse> {
+        let (tx, rx) = channel();
+        pool.send(w, Job::Request { req, reply: tx }).unwrap();
+        rx
+    }
 
     #[test]
-    fn gram_and_matvec_roundtrip() {
+    fn gram_roundtrip_and_job_accounting() {
         let mut rng = Rng::seed_from(420);
         let pool = WorkerPool::spawn(3, 2);
         let s = Mat::randn(6, 12, &mut rng);
-        // Install thirds.
+        // Install thirds under one session id.
         for w in 0..3 {
-            pool.send(w, Job::SetShard(s.slice_cols(w * 4, (w + 1) * 4))).unwrap();
+            let rx = request(&pool, w, ShardRequest::SetShard {
+                sid: 1,
+                shard: s.slice_cols(w * 4, (w + 1) * 4),
+            });
+            assert_eq!(rx.recv().unwrap(), ShardResponse::Ack);
         }
         // Partial Grams must sum to the full Gram.
-        let (tx, rx) = channel();
-        for w in 0..3 {
-            pool.send(w, Job::Gram { reply: tx.clone() }).unwrap();
-        }
         let mut total = Mat::zeros(6, 6);
-        for _ in 0..3 {
-            let (_, part) = rx.recv().unwrap();
-            total.axpy(1.0, &part);
+        for w in 0..3 {
+            let rx = request(&pool, w, ShardRequest::Gram { sid: 1 });
+            match rx.recv().unwrap() {
+                ShardResponse::Mat(part) => total.axpy(1.0, &part),
+                other => panic!("unexpected response {other:?}"),
+            }
         }
         let full = crate::linalg::gemm::syrk(&s, 0.0);
         for (a, b) in total.as_slice().iter().zip(full.as_slice()) {
@@ -217,40 +226,127 @@ mod tests {
         }
         let counts = pool.shutdown();
         assert_eq!(counts.len(), 3);
-        // Every worker processed SetShard + Gram + Shutdown.
-        assert!(counts.iter().all(|&c| c == 3));
+        // Every worker processed SetShard + Gram + the shutdown drain's
+        // Flush barrier + Shutdown.
+        assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn two_sessions_coexist_on_one_worker() {
+        let mut rng = Rng::seed_from(424);
+        let pool = WorkerPool::spawn(1, 4);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(3, 6, &mut rng);
+        request(&pool, 0, ShardRequest::SetShard { sid: 1, shard: a.clone() })
+            .recv()
+            .unwrap();
+        request(&pool, 0, ShardRequest::SetShard { sid: 2, shard: b.clone() })
+            .recv()
+            .unwrap();
+        // Session 1's Gram is still a's Gram — sid 2 did not clobber it.
+        let ga = request(&pool, 0, ShardRequest::Gram { sid: 1 }).recv().unwrap();
+        let gb = request(&pool, 0, ShardRequest::Gram { sid: 2 }).recv().unwrap();
+        assert_eq!(ga, ShardResponse::Mat(crate::linalg::gemm::syrk(&a, 0.0)));
+        assert_eq!(gb, ShardResponse::Mat(crate::linalg::gemm::syrk(&b, 0.0)));
+        // Dropping sid 1 leaves sid 2 intact.
+        request(&pool, 0, ShardRequest::DropShard { sid: 1 }).recv().unwrap();
+        let gone = request(&pool, 0, ShardRequest::Gram { sid: 1 }).recv().unwrap();
+        assert!(matches!(gone, ShardResponse::Err(_)));
+        let still = request(&pool, 0, ShardRequest::Gram { sid: 2 }).recv().unwrap();
+        assert!(matches!(still, ShardResponse::Mat(_)));
+        pool.shutdown();
     }
 
     #[test]
     fn stall_injection_slows_but_does_not_break() {
         let mut rng = Rng::seed_from(421);
-        let pool = WorkerPool::spawn(2, 1);
+        let pool = WorkerPool::spawn(2, 2);
         let s = Mat::randn(4, 8, &mut rng);
-        pool.send(0, Job::SetShard(s.slice_cols(0, 4))).unwrap();
-        pool.send(1, Job::SetShard(s.slice_cols(4, 8))).unwrap();
+        request(&pool, 0, ShardRequest::SetShard { sid: 1, shard: s.slice_cols(0, 4) })
+            .recv()
+            .unwrap();
+        request(&pool, 1, ShardRequest::SetShard { sid: 1, shard: s.slice_cols(4, 8) })
+            .recv()
+            .unwrap();
         // Worker 1 is a straggler.
-        pool.send(1, Job::Stall(Duration::from_millis(30))).unwrap();
-        let (tx, rx) = channel();
+        let _ = request(&pool, 1, ShardRequest::Stall { ms: 30 });
         let t0 = std::time::Instant::now();
-        pool.send(0, Job::Matvec { v_k: vec![1.0; 4], reply: tx.clone() }).unwrap();
-        pool.send(1, Job::Matvec { v_k: vec![1.0; 4], reply: tx }).unwrap();
-        let mut got = vec![];
-        for _ in 0..2 {
-            got.push(rx.recv().unwrap().0);
-        }
-        assert!(t0.elapsed() >= Duration::from_millis(25));
-        got.sort();
-        assert_eq!(got, vec![0, 1]);
+        let ones = Mat::from_vec(1, 4, vec![1.0; 4]);
+        let r0 = request(&pool, 0, ShardRequest::MatvecMany { sid: 1, v_k: ones.clone() });
+        let r1 = request(&pool, 1, ShardRequest::MatvecMany { sid: 1, v_k: ones });
+        assert!(matches!(r0.recv().unwrap(), ShardResponse::Mat(_)));
+        assert!(matches!(r1.recv().unwrap(), ShardResponse::Mat(_)));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+        pool.shutdown();
     }
 
     #[test]
-    fn missing_shard_job_is_skipped_not_crashed() {
+    fn missing_shard_is_a_typed_error_not_a_crash() {
         let pool = WorkerPool::spawn(1, 1);
-        let (tx, rx) = channel();
-        pool.send(0, Job::Gram { reply: tx }).unwrap();
-        // No shard installed: worker skips; channel closes when we drop pool.
-        drop(pool);
-        assert!(rx.recv().is_err());
+        let resp = request(&pool, 0, ShardRequest::Gram { sid: 9 }).recv().unwrap();
+        match resp {
+            ShardResponse::Err(msg) => assert!(msg.contains("session 9"), "{msg}"),
+            other => panic!("unexpected response {other:?}"),
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn try_send_full_queue_is_retryable_queuefull() {
+        let pool = WorkerPool::spawn(1, 1);
+        let (tx, _rx) = channel();
+        // Occupy the worker, then fill its depth-1 mailbox.
+        pool.send(0, Job::Request { req: ShardRequest::Stall { ms: 60 }, reply: tx.clone() })
+            .unwrap();
+        // The worker may or may not have dequeued the stall yet; keep
+        // try-sending until the mailbox is observably full.
+        let mut full_err = None;
+        for _ in 0..8 {
+            match pool.try_send(0, Job::Request {
+                req: ShardRequest::Ping,
+                reply: tx.clone(),
+            }) {
+                Ok(()) => continue,
+                Err(e) => {
+                    full_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let e = full_err.expect("mailbox never filled");
+        assert_eq!(e, PoolError::QueueFull(0));
+        assert!(e.is_retryable());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dead_worker_is_fatal_workergone_and_fails_tickets() {
+        let pool = WorkerPool::spawn(2, 2);
+        let (tx, dead_rx) = channel();
+        pool.send(0, Job::Request { req: ShardRequest::Die, reply: tx }).unwrap();
+        // The Die never replies: its channel must close, not hang.
+        assert!(dead_rx.recv().is_err());
+        // Subsequent sends surface the fatal WorkerGone.
+        let (tx2, _rx2) = channel();
+        let mut gone = None;
+        for _ in 0..50 {
+            match pool.send(0, Job::Request { req: ShardRequest::Ping, reply: tx2.clone() }) {
+                Err(e) => {
+                    gone = Some(e);
+                    break;
+                }
+                // The mailbox may buffer a few sends before the thread
+                // exit is observable.
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+        let e = gone.expect("dead worker never surfaced");
+        assert_eq!(e, PoolError::WorkerGone(0));
+        assert!(!e.is_retryable());
+        // Worker 1 still serves.
+        let ok = request(&pool, 1, ShardRequest::Ping).recv().unwrap();
+        assert_eq!(ok, ShardResponse::Ack);
+        pool.shutdown();
     }
 
     #[test]
@@ -258,15 +354,41 @@ mod tests {
         // queue_depth 1 + a stalled worker: the 3rd send must block until
         // the worker drains — observe via a helper thread + timing.
         let pool = std::sync::Arc::new(WorkerPool::spawn(1, 1));
-        pool.send(0, Job::Stall(Duration::from_millis(50))).unwrap(); // being processed
-        pool.send(0, Job::Stall(Duration::from_millis(1))).unwrap(); // fills queue
+        let (tx, _rx) = channel();
+        let stall =
+            |t: &Sender<ShardResponse>, ms| Job::Request {
+                req: ShardRequest::Stall { ms },
+                reply: t.clone(),
+            };
+        pool.send(0, stall(&tx, 50)).unwrap(); // being processed
+        pool.send(0, stall(&tx, 1)).unwrap(); // fills queue
         let p2 = pool.clone();
         let t0 = std::time::Instant::now();
         let h = std::thread::spawn(move || {
-            p2.send(0, Job::Stall(Duration::from_millis(1))).unwrap(); // must wait
+            let (tx2, _rx2) = channel();
+            p2.send(0, Job::Request { req: ShardRequest::Stall { ms: 1 }, reply: tx2 })
+                .unwrap(); // must wait
             t0.elapsed()
         });
         let waited = h.join().unwrap();
-        assert!(waited >= Duration::from_millis(30), "sender did not backpressure: {waited:?}");
+        assert!(
+            waited >= std::time::Duration::from_millis(30),
+            "sender did not backpressure: {waited:?}"
+        );
+    }
+
+    #[test]
+    fn flush_drains_before_shutdown_counts() {
+        let pool = WorkerPool::spawn(1, 4);
+        let (tx, _rx) = channel();
+        for _ in 0..3 {
+            pool.send(0, Job::Request { req: ShardRequest::Stall { ms: 5 }, reply: tx.clone() })
+                .unwrap();
+        }
+        pool.flush().unwrap();
+        // After the barrier all 3 stalls + the Flush are processed.
+        let counts = pool.shutdown();
+        // 3 stalls + first Flush + shutdown's own Flush + Shutdown.
+        assert_eq!(counts, vec![6]);
     }
 }

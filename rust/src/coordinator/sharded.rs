@@ -1,34 +1,51 @@
-//! Distributed Algorithm 1 over the worker pool.
+//! Distributed Algorithm 1 over a pluggable shard transport.
 //!
 //! Session note (PR 2): [`ShardedFactor`] stages the distributed solve —
 //! shard distribution and the tree-reduced Gram happen once per score
 //! matrix; λ-resweeps refactor the cached n×n Gram on the leader in
-//! O(n³) with **zero** worker traffic, and each right-hand side costs one
-//! matvec/apply round-trip (phases 2–4).
+//! O(n³) with **zero** worker traffic, and each k-RHS block costs one
+//! matvec/apply round-trip (phases 2–4, batched panels).
+//!
+//! Since PR 7 the workers sit behind a
+//! [`ShardTransport`](crate::serve::transport::ShardTransport) — the
+//! in-process channel pool or the Unix-socket transport — and every
+//! shard is keyed by session id, so **multiple live sessions coexist**
+//! on one solver (the serving layer's multi-tenant mode; the old
+//! one-live-session contract is gone). Replies are collected in worker
+//! order, which makes the tree reduction order — and therefore the
+//! result bits — independent of worker arrival timing.
+//!
+//! Error taxonomy (PR 7): transport faults surface as
+//! [`SolveError::Backend`] with the transport's retryable/fatal split,
+//! and a failed call leaves the session's cached plan/Gram intact — a
+//! full queue or dead worker no longer poisons the session.
 
-use super::pool::{Job, PoolError, WorkerPool};
-use super::reduce::{reduce_vecs, tree_reduce_mats};
+use super::reduce::tree_reduce_mats;
 use super::shard::ShardPlan;
+use crate::linalg::gemm::gemm_nt_threaded;
 use crate::linalg::{
-    solve_lower, solve_lower_multi_threaded, solve_lower_transpose,
-    solve_lower_transpose_multi_threaded, KernelConfig, Mat,
+    solve_lower_multi_threaded, solve_lower_transpose_multi_threaded, KernelConfig, Mat,
+};
+use crate::serve::transport::{
+    ChannelTransport, ShardRequest, ShardResponse, ShardTransport, TransportError,
 };
 use crate::solver::session::{check_lambda, refactor_damped, undamped_err};
 use crate::solver::{DampedSolver, Factorization, SolveError};
-use std::sync::mpsc::channel;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Sharded Cholesky solver: the paper's Algorithm 1 with the O(n²m) and
 /// O(nm) stages fanned out across workers and only n-sized state crossing
-/// thread boundaries.
+/// worker boundaries.
 pub struct ShardedCholSolver {
-    pool: WorkerPool,
+    transport: Box<dyn ShardTransport>,
     workers: usize,
     /// Kernel configuration shared by the workers' Gram products and the
     /// leader's local O(n³) work (the λ-resweep refactor) — since PR 3 a
     /// resweep runs the lookahead-threaded Cholesky with this thread
     /// count instead of silently dropping to serial.
     kernel: KernelConfig,
+    next_sid: AtomicU64,
 }
 
 impl ShardedCholSolver {
@@ -44,170 +61,181 @@ impl ShardedCholSolver {
         queue_depth: usize,
         kernel: KernelConfig,
     ) -> ShardedCholSolver {
-        ShardedCholSolver {
-            pool: WorkerPool::spawn_with_kernel(workers, queue_depth, kernel),
-            workers,
+        ShardedCholSolver::with_transport(
+            Box::new(ChannelTransport::spawn(workers, queue_depth, kernel)),
             kernel,
-        }
+        )
+    }
+
+    /// Run Algorithm 1 over an arbitrary transport (PR 7) — the channel
+    /// pool and the Unix-socket transport produce bit-identical solves
+    /// (see `rust/tests/serving.rs`).
+    pub fn with_transport(
+        transport: Box<dyn ShardTransport>,
+        kernel: KernelConfig,
+    ) -> ShardedCholSolver {
+        let workers = transport.workers();
+        ShardedCholSolver { transport, workers, kernel, next_sid: AtomicU64::new(0) }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// Distribute column shards of `s` to the workers; returns the plan.
-    fn distribute(&self, s: &Mat) -> Result<ShardPlan, PoolError> {
+    /// Which transport backs this solver (`"channels"` / `"socket"`).
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Open a streaming sliding-window session that **owns** its window
+    /// (unlike [`DampedSolver::begin`], which borrows the score matrix).
+    /// Supports the PR-5 `update_rows`/`refresh` rotation distributed
+    /// across the workers; used by the serving layer, where sessions
+    /// outlive any one request.
+    pub fn window_session(solver: &Arc<ShardedCholSolver>, window: Mat) -> ShardedWindowSession {
+        let sid = solver.alloc_sid();
+        ShardedWindowSession {
+            solver: solver.clone(),
+            window,
+            sid,
+            st: ShardedState::new(),
+        }
+    }
+
+    /// Fault injection for tests: crash worker `w` (it exits without
+    /// replying; in-flight and future requests fail with the fatal
+    /// [`SolveError::Backend`]). Blocks until the death is observable.
+    pub fn kill_worker(&self, w: usize) {
+        if let Ok(t) = self.transport.request(w, ShardRequest::Die) {
+            let _ = t.wait();
+        }
+    }
+
+    /// Fault injection for tests: make worker `w` a straggler for `ms`
+    /// milliseconds (fire-and-forget).
+    pub fn stall_worker(&self, w: usize, ms: u64) {
+        if let Ok(t) = self.transport.request(w, ShardRequest::Stall { ms }) {
+            drop(t);
+        }
+    }
+
+    fn alloc_sid(&self) -> u64 {
+        self.next_sid.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Transport fault → typed solver error, preserving the
+    /// retryable/fatal split (the satellite-2 fix: callers can tell a
+    /// back-off-and-retry condition from a dead backend).
+    fn err(e: TransportError) -> SolveError {
+        match e {
+            TransportError::Retryable(d) => SolveError::Backend { retryable: true, detail: d },
+            TransportError::Fatal(d) => SolveError::Backend { retryable: false, detail: d },
+        }
+    }
+
+    fn expect_mat(r: Result<ShardResponse, TransportError>) -> Result<Mat, SolveError> {
+        match r.map_err(Self::err)? {
+            ShardResponse::Mat(m) => Ok(m),
+            ShardResponse::Err(msg) => Err(SolveError::Backend { retryable: false, detail: msg }),
+            other => Err(SolveError::Backend {
+                retryable: false,
+                detail: format!("unexpected worker response: {other:?}"),
+            }),
+        }
+    }
+
+    fn expect_ack(r: Result<ShardResponse, TransportError>) -> Result<(), SolveError> {
+        match r.map_err(Self::err)? {
+            ShardResponse::Ack => Ok(()),
+            ShardResponse::Err(msg) => Err(SolveError::Backend { retryable: false, detail: msg }),
+            other => Err(SolveError::Backend {
+                retryable: false,
+                detail: format!("unexpected worker response: {other:?}"),
+            }),
+        }
+    }
+
+    /// Distribute column shards of `s` to the workers under session
+    /// `sid`; returns the plan.
+    fn distribute(&self, sid: u64, s: &Mat) -> Result<ShardPlan, SolveError> {
         let plan = ShardPlan::balanced(s.cols(), self.workers);
+        let mut tickets = Vec::with_capacity(self.workers);
         for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
-            self.pool.send(w, Job::SetShard(s.slice_cols(c0, c1)))?;
+            let req = ShardRequest::SetShard { sid, shard: s.slice_cols(c0, c1) };
+            tickets.push(self.transport.request(w, req).map_err(Self::err)?);
+        }
+        for t in tickets {
+            Self::expect_ack(t.wait())?;
         }
         Ok(plan)
     }
 
-    fn pool_err(e: PoolError) -> SolveError {
-        SolveError::BadInput(format!("coordinator: {e}"))
-    }
-
     /// Phase 1: partial Grams on the workers, tree-reduced on the leader
-    /// (un-damped — the session adds λ when refactoring).
-    fn gram_reduced(&self, plan: &ShardPlan) -> Result<Mat, SolveError> {
-        let w_count = plan.workers();
-        let (gtx, grx) = channel();
-        for w in 0..w_count {
-            self.pool.send(w, Job::Gram { reply: gtx.clone() }).map_err(Self::pool_err)?;
+    /// in worker order (un-damped — the session adds λ when
+    /// refactoring).
+    fn gram_reduced(&self, sid: u64, plan: &ShardPlan) -> Result<Mat, SolveError> {
+        let mut tickets = Vec::with_capacity(plan.workers());
+        for w in 0..plan.workers() {
+            tickets.push(self.transport.request(w, ShardRequest::Gram { sid }).map_err(Self::err)?);
         }
-        drop(gtx);
-        let mut parts = Vec::with_capacity(w_count);
-        for _ in 0..w_count {
-            let (_, part) = grx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
-            parts.push(part);
+        let mut parts = Vec::with_capacity(tickets.len());
+        for t in tickets {
+            parts.push(Self::expect_mat(t.wait())?);
         }
         Ok(tree_reduce_mats(parts, 4))
     }
 
-    /// Phases 2–4 for one right-hand side against a leader-local factor.
-    fn apply_phases(
-        &self,
-        plan: &ShardPlan,
-        l: &Mat,
-        v: &[f64],
-        lambda: f64,
-        x: &mut [f64],
-    ) -> Result<(), SolveError> {
-        let w_count = plan.workers();
-
-        // Phase 2: partial matvecs u_k = S_k v_k, reduced on the leader.
-        let (utx, urx) = channel();
-        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
-            self.pool
-                .send(w, Job::Matvec { v_k: v[c0..c1].to_vec(), reply: utx.clone() })
-                .map_err(Self::pool_err)?;
-        }
-        drop(utx);
-        let mut uparts = Vec::with_capacity(w_count);
-        for _ in 0..w_count {
-            let (_, part) = urx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
-            uparts.push(part);
-        }
-        let u = reduce_vecs(&uparts);
-
-        // Phase 3: leader-local O(n²) triangular solves.
-        let y = solve_lower(l, &u);
-        let z = Arc::new(solve_lower_transpose(l, &y));
-
-        // Phase 4: per-shard apply, gathered in shard order.
-        let (xtx, xrx) = channel();
-        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
-            self.pool
-                .send(
-                    w,
-                    Job::Apply {
-                        z: z.clone(),
-                        v_k: v[c0..c1].to_vec(),
-                        lambda,
-                        reply: xtx.clone(),
-                    },
-                )
-                .map_err(Self::pool_err)?;
-        }
-        drop(xtx);
-        let mut pieces: Vec<Option<Vec<f64>>> = vec![None; w_count];
-        for _ in 0..w_count {
-            let (wid, x_k) = xrx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
-            pieces[wid] = Some(x_k);
-        }
-        for (w, piece) in pieces.into_iter().enumerate() {
-            let piece = piece.ok_or_else(|| Self::pool_err(PoolError::MissingShard(w)))?;
-            let (c0, c1) = plan.ranges[w];
-            assert_eq!(piece.len(), c1 - c0);
-            x[c0..c1].copy_from_slice(&piece);
-        }
-        Ok(())
-    }
-
-    /// Batched phases 2–4 for a k-RHS block (PR-5 bugfix): the default
-    /// `solve_many` inherited by [`ShardedFactor`] paid k full worker
-    /// round-trips (k× Matvec/Apply message latency); this sends each
-    /// worker its whole column panel once per phase —
-    /// [`Job::MatvecMany`] / [`Job::ApplyMany`] — so a k-RHS solve is
-    /// one matvec round-trip, one leader-local blocked TRSM pair, and
-    /// one apply round-trip, mirroring the serial session's panel path.
+    /// Batched phases 2–4 for a k-RHS block: each worker gets its whole
+    /// column panel once per phase — `MatvecMany` / `ApplyMany` — so a
+    /// k-RHS solve is one matvec round-trip, one leader-local blocked
+    /// TRSM pair, and one apply round-trip, mirroring the serial
+    /// session's panel path (message accounting pinned in
+    /// `coordinator_integration.rs`). Single-RHS solves route through
+    /// the same path as a k=1 panel.
     fn apply_phases_many(
         &self,
+        sid: u64,
         plan: &ShardPlan,
         l: &Mat,
         vs: &Mat,
         lambda: f64,
     ) -> Result<Mat, SolveError> {
-        let w_count = plan.workers();
         let (k, m) = vs.shape();
 
-        // Phase 2 (batched): U = Σ_k S_k·V_kᵀ, reduced on the leader.
-        let (utx, urx) = channel();
+        // Phase 2 (batched): U = Σ_k S_k·V_kᵀ, reduced on the leader in
+        // worker order (deterministic summation order).
+        let mut tickets = Vec::with_capacity(plan.workers());
         for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
-            self.pool
-                .send(w, Job::MatvecMany { v_k: vs.slice_cols(c0, c1), reply: utx.clone() })
-                .map_err(Self::pool_err)?;
+            let req = ShardRequest::MatvecMany { sid, v_k: vs.slice_cols(c0, c1) };
+            tickets.push(self.transport.request(w, req).map_err(Self::err)?);
         }
-        drop(utx);
-        let mut uparts = Vec::with_capacity(w_count);
-        for _ in 0..w_count {
-            let (_, part) = urx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
-            uparts.push(part);
+        let mut uparts = Vec::with_capacity(tickets.len());
+        for t in tickets {
+            uparts.push(Self::expect_mat(t.wait())?);
         }
         let u = tree_reduce_mats(uparts, 4);
 
         // Phase 3: leader-local blocked TRSM pair on the kernel pool.
         let threads = self.kernel.threads;
-        let z = Arc::new(self.kernel.run(|| {
+        let z = self.kernel.run(|| {
             let y = solve_lower_multi_threaded(l, &u, threads);
             solve_lower_transpose_multi_threaded(l, &y, threads)
-        }));
+        });
 
-        // Phase 4 (batched): per-shard apply, stitched in shard order.
-        let (xtx, xrx) = channel();
+        // Phase 4 (batched): per-shard apply, stitched in worker order.
+        let mut tickets = Vec::with_capacity(plan.workers());
         for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
-            self.pool
-                .send(
-                    w,
-                    Job::ApplyMany {
-                        z: z.clone(),
-                        v_k: vs.slice_cols(c0, c1),
-                        lambda,
-                        reply: xtx.clone(),
-                    },
-                )
-                .map_err(Self::pool_err)?;
-        }
-        drop(xtx);
-        let mut pieces: Vec<Option<Mat>> = vec![None; w_count];
-        for _ in 0..w_count {
-            let (wid, x_k) = xrx.recv().map_err(|_| Self::pool_err(PoolError::WorkerGone(0)))?;
-            pieces[wid] = Some(x_k);
+            let req = ShardRequest::ApplyMany {
+                sid,
+                z: z.clone(),
+                v_k: vs.slice_cols(c0, c1),
+                lambda,
+            };
+            tickets.push(self.transport.request(w, req).map_err(Self::err)?);
         }
         let mut x = Mat::zeros(k, m);
-        for (w, piece) in pieces.into_iter().enumerate() {
-            let piece = piece.ok_or_else(|| Self::pool_err(PoolError::MissingShard(w)))?;
+        for (w, t) in tickets.into_iter().enumerate() {
+            let piece = Self::expect_mat(t.wait())?;
             let (c0, c1) = plan.ranges[w];
             assert_eq!(piece.shape(), (k, c1 - c0));
             for r in 0..k {
@@ -217,11 +245,89 @@ impl ShardedCholSolver {
         Ok(x)
     }
 
-    /// Drain the worker pool, returning per-worker processed-job counts
+    /// Distributed PR-5 rotation: workers rotate their shards in place
+    /// and return partial cross panels `P_k = S_kept,k·A_kᵀ`; the leader
+    /// patches its cached Gram with the bordered block
+    /// `[[G_kept, C], [Cᵀ, A·Aᵀ]]` (kept entries copied exactly — no
+    /// accumulated drift) instead of paying a fresh O(n²m) Gram.
+    /// Returns the patched Gram; the caller already rotated its window
+    /// via [`rotate_rows_local`].
+    fn rotate_gram_distributed(
+        &self,
+        sid: u64,
+        plan: &ShardPlan,
+        gram: &Mat,
+        kept: &[usize],
+        removed_sorted: &[usize],
+        added: &Mat,
+    ) -> Result<Mat, SolveError> {
+        let n_kept = kept.len();
+        let k_add = added.rows();
+
+        let mut tickets = Vec::with_capacity(plan.workers());
+        for (w, &(c0, c1)) in plan.ranges.iter().enumerate() {
+            let req = ShardRequest::UpdateRows {
+                sid,
+                removed: removed_sorted.to_vec(),
+                added_k: added.slice_cols(c0, c1),
+            };
+            tickets.push(self.transport.request(w, req).map_err(Self::err)?);
+        }
+        let mut parts = Vec::with_capacity(tickets.len());
+        for t in tickets {
+            parts.push(Self::expect_mat(t.wait())?);
+        }
+        // C = Σ_k P_k (n_kept × k_add), reduced in worker order.
+        let cross = tree_reduce_mats(parts, 4);
+
+        let n_new = n_kept + k_add;
+        let mut new_gram = Mat::zeros(n_new, n_new);
+        for (i, &ki) in kept.iter().enumerate() {
+            for (j, &kj) in kept.iter().enumerate() {
+                new_gram[(i, j)] = gram[(ki, kj)];
+            }
+        }
+        for i in 0..n_kept {
+            for j in 0..k_add {
+                new_gram[(i, n_kept + j)] = cross[(i, j)];
+                new_gram[(n_kept + j, i)] = cross[(i, j)];
+            }
+        }
+        if k_add > 0 {
+            // A·Aᵀ is k_add×k_add over the full m — leader-local, same
+            // kernel config as the workers.
+            let mut block = Mat::zeros(k_add, k_add);
+            let threads = self.kernel.threads;
+            self.kernel.run(|| gemm_nt_threaded(1.0, added, added, 0.0, &mut block, threads));
+            for i in 0..k_add {
+                for j in 0..k_add {
+                    new_gram[(n_kept + i, n_kept + j)] = block[(i, j)];
+                }
+            }
+        }
+        Ok(new_gram)
+    }
+
+    /// Free session `sid`'s shards on every worker (blocking, errors
+    /// ignored — teardown is best-effort on a degraded pool).
+    fn drop_session(&self, sid: u64, plan: &ShardPlan) {
+        let mut tickets = Vec::with_capacity(plan.workers());
+        for w in 0..plan.workers() {
+            if let Ok(t) = self.transport.request(w, ShardRequest::DropShard { sid }) {
+                tickets.push(t);
+            }
+        }
+        for t in tickets {
+            let _ = t.wait();
+        }
+    }
+
+    /// Drain the workers (explicit flush barrier — in-flight jobs finish
+    /// first), stop them, and return per-worker processed-request counts
     /// (tests use this to pin message-count properties, e.g. that a
     /// k-RHS `solve_many` costs one round-trip, not k).
     pub fn shutdown(self) -> Vec<u64> {
-        self.pool.shutdown()
+        self.transport.shutdown()
     }
 
     /// Full distributed solve of `(SᵀS + λI) x = v` — one-shot shim over
@@ -237,16 +343,9 @@ impl ShardedCholSolver {
     }
 }
 
-/// Distributed session: shard distribution + reduced Gram staged once,
-/// λ-resweeps leader-local, each RHS one pipelined worker round-trip.
-///
-/// Sessions on one [`ShardedCholSolver`] share its worker pool (workers
-/// hold one shard set at a time), so interleaving two *live* sessions on
-/// the same solver is not supported — the same sequential-use contract
-/// the one-shot path always had.
-pub struct ShardedFactor<'s> {
-    solver: &'s ShardedCholSolver,
-    s: &'s Mat,
+/// λ-dependent distributed-session state shared by the borrowed
+/// ([`ShardedFactor`]) and owned ([`ShardedWindowSession`]) variants.
+struct ShardedState {
     lambda: f64,
     plan: Option<ShardPlan>,
     /// Tree-reduced un-damped Gram, cached on the leader.
@@ -254,9 +353,134 @@ pub struct ShardedFactor<'s> {
     l: Option<Mat>,
 }
 
+impl ShardedState {
+    fn new() -> ShardedState {
+        ShardedState { lambda: 0.0, plan: None, gram: None, l: None }
+    }
+}
+
+/// Shared redamp: stage (distribute + reduce Gram) lazily on first
+/// damp, then leader-local O(n³) refactor. Backend errors leave the
+/// cached plan/Gram untouched so a transient fault is retryable;
+/// only a non-PD factor clears the damped state (PR-2 semantics).
+fn redamp_state(
+    solver: &ShardedCholSolver,
+    sid: u64,
+    s: &Mat,
+    st: &mut ShardedState,
+    lambda: f64,
+) -> Result<(), SolveError> {
+    check_lambda(lambda)?;
+    if st.plan.is_none() {
+        let plan = solver.distribute(sid, s)?;
+        st.gram = Some(solver.gram_reduced(sid, &plan)?);
+        st.plan = Some(plan);
+    }
+    match refactor_damped(st.gram.as_ref().unwrap(), lambda, solver.kernel.threads) {
+        Ok(l) => {
+            st.l = Some(l);
+            st.lambda = lambda;
+            Ok(())
+        }
+        Err(e) => {
+            st.l = None;
+            st.lambda = 0.0;
+            Err(e)
+        }
+    }
+}
+
+/// Shared k-RHS panel solve against the staged state.
+fn panel_solve(
+    solver: &ShardedCholSolver,
+    sid: u64,
+    st: &ShardedState,
+    vs: &Mat,
+) -> Result<Mat, SolveError> {
+    let (Some(plan), Some(l)) = (st.plan.as_ref(), st.l.as_ref()) else {
+        return Err(undamped_err());
+    };
+    solver.apply_phases_many(sid, plan, l, vs, st.lambda)
+}
+
+/// Validate a PR-5 rotation request against `window` and build the
+/// rotated window leader-side. Returns `(sorted_removals, kept_rows,
+/// new_window)`.
+fn rotate_rows_local(
+    window: &Mat,
+    removed: &[usize],
+    added: &Mat,
+) -> Result<(Vec<usize>, Vec<usize>, Mat), SolveError> {
+    let n = window.rows();
+    let m = window.cols();
+    let k_add = added.rows();
+    if k_add > 0 && added.cols() != m {
+        return Err(SolveError::BadInput(format!(
+            "update_rows: added rows have {} cols, window has {m}",
+            added.cols()
+        )));
+    }
+    let mut rem: Vec<usize> = removed.to_vec();
+    rem.sort_unstable();
+    let before = rem.len();
+    rem.dedup();
+    if rem.len() != before {
+        return Err(SolveError::BadInput("update_rows: duplicate removal index".into()));
+    }
+    if let Some(&bad) = rem.iter().find(|&&r| r >= n) {
+        return Err(SolveError::BadInput(format!(
+            "update_rows: removal index {bad} out of range (window has {n} rows)"
+        )));
+    }
+    let mut rem_iter = rem.iter().copied().peekable();
+    let kept: Vec<usize> = (0..n)
+        .filter(|&r| {
+            if rem_iter.peek() == Some(&r) {
+                rem_iter.next();
+                false
+            } else {
+                true
+            }
+        })
+        .collect();
+    let n_kept = kept.len();
+    if n_kept + k_add == 0 {
+        return Err(SolveError::BadInput("update_rows: rotation would empty the window".into()));
+    }
+    let mut new_window = Mat::zeros(n_kept + k_add, m);
+    for (dst, &src) in kept.iter().enumerate() {
+        new_window.row_mut(dst).copy_from_slice(window.row(src));
+    }
+    for r in 0..k_add {
+        new_window.row_mut(n_kept + r).copy_from_slice(added.row(r));
+    }
+    Ok((rem, kept, new_window))
+}
+
+/// Distributed session borrowing its score matrix: shard distribution +
+/// reduced Gram staged once, λ-resweeps leader-local, each k-RHS block
+/// one pipelined worker round-trip. Shards are keyed by this session's
+/// id, so any number of live sessions — including from concurrent
+/// leader threads — share one solver.
+pub struct ShardedFactor<'s> {
+    solver: &'s ShardedCholSolver,
+    s: &'s Mat,
+    sid: u64,
+    st: ShardedState,
+}
+
 impl<'s> ShardedFactor<'s> {
     fn new(solver: &'s ShardedCholSolver, s: &'s Mat) -> Self {
-        ShardedFactor { solver, s, lambda: 0.0, plan: None, gram: None, l: None }
+        let sid = solver.alloc_sid();
+        ShardedFactor { solver, s, sid, st: ShardedState::new() }
+    }
+}
+
+impl Drop for ShardedFactor<'_> {
+    fn drop(&mut self) {
+        if let Some(plan) = self.st.plan.take() {
+            self.solver.drop_session(self.sid, &plan);
+        }
     }
 }
 
@@ -270,51 +494,140 @@ impl Factorization for ShardedFactor<'_> {
     }
 
     fn lambda(&self) -> f64 {
-        self.lambda
+        self.st.lambda
     }
 
     fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
-        check_lambda(lambda)?;
-        if self.plan.is_none() {
-            let plan = self.solver.distribute(self.s).map_err(ShardedCholSolver::pool_err)?;
-            self.gram = Some(self.solver.gram_reduced(&plan)?);
-            self.plan = Some(plan);
-        }
-        match refactor_damped(self.gram.as_ref().unwrap(), lambda, self.solver.kernel.threads) {
-            Ok(l) => {
-                self.l = Some(l);
-                self.lambda = lambda;
-                Ok(())
-            }
-            Err(e) => {
-                self.l = None;
-                self.lambda = 0.0;
-                Err(e)
-            }
-        }
+        redamp_state(self.solver, self.sid, self.s, &mut self.st, lambda)
     }
 
     fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
         let m = self.s.cols();
         assert_eq!(v.len(), m, "v must be m-dimensional");
         assert_eq!(x.len(), m, "x must be m-dimensional");
-        let (Some(plan), Some(l)) = (self.plan.as_ref(), self.l.as_ref()) else {
-            return Err(undamped_err());
-        };
-        self.solver.apply_phases(plan, l, v, self.lambda, x)
+        // Single RHS = k=1 panel: one code path for every solve.
+        let vs = Mat::from_vec(1, m, v.to_vec());
+        let xs = panel_solve(self.solver, self.sid, &self.st, &vs)?;
+        x.copy_from_slice(xs.row(0));
+        Ok(())
     }
 
-    /// Batched k-RHS distributed solve: one `MatvecMany` round-trip,
-    /// one leader-local blocked TRSM pair, one `ApplyMany` round-trip —
-    /// instead of the k× message latency the inherited default paid
-    /// (the PR-5 sharded bugfix; message accounting pinned in
-    /// `coordinator_integration.rs`).
     fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
         assert_eq!(vs.cols(), self.s.cols(), "each row of vs must be m-dimensional");
-        let (Some(plan), Some(l)) = (self.plan.as_ref(), self.l.as_ref()) else {
-            return Err(undamped_err());
+        panel_solve(self.solver, self.sid, &self.st, vs)
+    }
+}
+
+/// Distributed streaming sliding-window session (PR 7): owns its window,
+/// holds an `Arc` to the solver (so the serving layer can cache it past
+/// any one request), and implements the PR-5 `update_rows`/`refresh`
+/// rotation with the O(n²m) Gram rebuild replaced by worker-side shard
+/// rotation + a bordered Gram patch (O(k·n·m/W) per worker).
+pub struct ShardedWindowSession {
+    solver: Arc<ShardedCholSolver>,
+    window: Mat,
+    sid: u64,
+    st: ShardedState,
+}
+
+impl ShardedWindowSession {
+    /// Rows currently in the window (changes under `update_rows`).
+    pub fn window_rows(&self) -> usize {
+        self.window.rows()
+    }
+}
+
+impl Drop for ShardedWindowSession {
+    fn drop(&mut self) {
+        if let Some(plan) = self.st.plan.take() {
+            self.solver.drop_session(self.sid, &plan);
+        }
+    }
+}
+
+impl Factorization for ShardedWindowSession {
+    fn name(&self) -> &'static str {
+        "chol-sharded-window"
+    }
+
+    fn dim(&self) -> usize {
+        self.window.cols()
+    }
+
+    fn lambda(&self) -> f64 {
+        self.st.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        redamp_state(&self.solver, self.sid, &self.window, &mut self.st, lambda)
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        let m = self.window.cols();
+        assert_eq!(v.len(), m, "v must be m-dimensional");
+        assert_eq!(x.len(), m, "x must be m-dimensional");
+        let vs = Mat::from_vec(1, m, v.to_vec());
+        let xs = panel_solve(&self.solver, self.sid, &self.st, &vs)?;
+        x.copy_from_slice(xs.row(0));
+        Ok(())
+    }
+
+    fn solve_many(&mut self, vs: &Mat) -> Result<Mat, SolveError> {
+        assert_eq!(vs.cols(), self.window.cols(), "each row of vs must be m-dimensional");
+        panel_solve(&self.solver, self.sid, &self.st, vs)
+    }
+
+    fn update_rows(&mut self, removed: &[usize], added: &Mat) -> Result<(), SolveError> {
+        let (rem, kept, new_window) = rotate_rows_local(&self.window, removed, added)?;
+        let Some(plan) = self.st.plan.as_ref() else {
+            // Never staged: nothing distributed to rotate yet.
+            self.window = new_window;
+            return Ok(());
         };
-        self.solver.apply_phases_many(plan, l, vs, self.lambda)
+        let gram = self.st.gram.as_ref().expect("staged session always caches its Gram");
+        let new_gram =
+            self.solver.rotate_gram_distributed(self.sid, plan, gram, &kept, &rem, added)?;
+        self.window = new_window;
+        self.st.gram = Some(new_gram);
+        if self.st.lambda > 0.0 {
+            // Keep the session damped at the current λ (PR-5 contract).
+            match refactor_damped(
+                self.st.gram.as_ref().unwrap(),
+                self.st.lambda,
+                self.solver.kernel.threads,
+            ) {
+                Ok(l) => self.st.l = Some(l),
+                Err(e) => {
+                    // Window/Gram are already rotated; the caller's λ
+                    // backoff can rescue the step (ngd semantics).
+                    self.st.l = None;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn refresh(&mut self) -> Result<(), SolveError> {
+        let Some(plan) = self.st.plan.as_ref() else {
+            return Ok(());
+        };
+        let gram = self.solver.gram_reduced(self.sid, plan)?;
+        self.st.gram = Some(gram);
+        if self.st.lambda > 0.0 {
+            match refactor_damped(
+                self.st.gram.as_ref().unwrap(),
+                self.st.lambda,
+                self.solver.kernel.threads,
+            ) {
+                Ok(l) => self.st.l = Some(l),
+                Err(e) => {
+                    self.st.l = None;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -404,5 +717,86 @@ mod tests {
                 assert!((a - b).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn two_live_sessions_interleave_without_clobbering() {
+        // The PR-7 sid keying: two staged sessions on one solver must
+        // not overwrite each other's worker shards (the old pool held
+        // exactly one shard set and forbade this).
+        let mut rng = Rng::seed_from(434);
+        let solver = ShardedCholSolver::new(3, 4);
+        let s1 = Mat::randn(10, 60, &mut rng);
+        let s2 = Mat::randn(8, 60, &mut rng);
+        let mut f1 = solver.factor(&s1, 0.1).unwrap();
+        let mut f2 = solver.factor(&s2, 0.05).unwrap();
+        for _ in 0..2 {
+            let v: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+            let x1 = f1.solve(&v).unwrap();
+            let x2 = f2.solve(&v).unwrap();
+            let r1 = CholSolver::default().solve(&s1, &v, 0.1).unwrap();
+            let r2 = CholSolver::default().solve(&s2, &v, 0.05).unwrap();
+            for (a, b) in x1.iter().zip(&r1) {
+                assert!((a - b).abs() < 1e-9);
+            }
+            for (a, b) in x2.iter().zip(&r2) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn window_session_rotation_matches_cold_factor() {
+        let mut rng = Rng::seed_from(435);
+        let solver = Arc::new(ShardedCholSolver::new(3, 4));
+        let w0 = Mat::randn(12, 48, &mut rng);
+        let added = Mat::randn(3, 48, &mut rng);
+        let mut sess = ShardedCholSolver::window_session(&solver, w0.clone());
+        sess.redamp(0.1).unwrap();
+        sess.update_rows(&[0, 5, 7], &added).unwrap();
+        assert_eq!(sess.window_rows(), 12);
+        let v: Vec<f64> = (0..48).map(|_| rng.normal()).collect();
+        let x = sess.solve(&v).unwrap();
+        // Cold reference on the hand-rotated window.
+        let kept: Vec<usize> = (0..12).filter(|r| ![0, 5, 7].contains(r)).collect();
+        let mut rotated = Mat::zeros(12, 48);
+        for (dst, &src) in kept.iter().enumerate() {
+            rotated.row_mut(dst).copy_from_slice(w0.row(src));
+        }
+        for r in 0..3 {
+            rotated.row_mut(9 + r).copy_from_slice(added.row(r));
+        }
+        let want = CholSolver::default().solve(&rotated, &v, 0.1).unwrap();
+        for (a, b) in x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // refresh recomputes the Gram from the rotated shards — still
+        // the same answers.
+        sess.refresh().unwrap();
+        let x2 = sess.solve(&v).unwrap();
+        for (a, b) in x2.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn backend_fault_is_typed_and_does_not_poison_session() {
+        let mut rng = Rng::seed_from(436);
+        let solver = ShardedCholSolver::new(2, 4);
+        let s = Mat::randn(8, 32, &mut rng);
+        let mut fact = solver.factor(&s, 0.1).unwrap();
+        let v: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+        fact.solve(&v).unwrap();
+        solver.kill_worker(1);
+        // The failure is the typed fatal Backend error — not BadInput,
+        // not a panic, not a hang.
+        match fact.solve(&v) {
+            Err(SolveError::Backend { retryable, .. }) => assert!(!retryable),
+            other => panic!("expected fatal Backend error, got {other:?}"),
+        }
+        // Session state survives: λ still reports the damped value and
+        // a second call fails the same typed way instead of cascading.
+        assert_eq!(fact.lambda(), 0.1);
+        assert!(matches!(fact.solve(&v), Err(SolveError::Backend { .. })));
     }
 }

@@ -26,6 +26,7 @@
 //! | [`data`]   | deterministic RNG, synthetic corpora, task generators, batching |
 //! | [`runtime`]| PJRT runtime: load AOT HLO artifacts produced by `python/compile/aot.py` |
 //! | [`coordinator`] | leader/worker sharded training runtime (m-axis sharding of S, tree reduce of the Gram matrix) |
+//! | [`serve`]  | multi-tenant serving front-end: session cache, cross-tenant RHS coalescing, cost-model admission, pluggable shard transport (in-process channels / Unix sockets) |
 //! | [`config`] | TOML config parser + typed configs + CLI merging |
 //! | [`metrics`]| timers, counters, histograms, power-law fits, CSV sinks |
 //! | [`checkpoint`] | binary checkpoint save/load |
@@ -58,5 +59,6 @@ pub mod metrics;
 pub mod model;
 pub mod ngd;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod vmc;

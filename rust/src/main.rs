@@ -5,6 +5,7 @@
 //! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd]
 //! dngd vmc    [--config cfg.toml] [--set section.key=value]…
 //! dngd bench  --table1 | --scaling | --cg | --kernels | --precision [--scale small|paper] [--json out.json]
+//! dngd serve  [--config cfg.toml] [--set section.key=value]… [--transport channels|socket|both] [--self-test]
 //! dngd artifacts [--dir artifacts]
 //! ```
 //!
@@ -16,8 +17,9 @@ use dngd::coordinator::trainer::{OptimizerChoice, TRAIN_LOG_COLUMNS};
 use dngd::coordinator::Trainer;
 use dngd::data::rng::Rng;
 use dngd::linalg::Mat;
-use dngd::metrics::MetricsLog;
-use dngd::solver::{residual_norm, SolveError, SolverKind, SolverRegistry};
+use dngd::metrics::{MetricsLog, Summary};
+use dngd::serve::{ServeOptions, Server, TransportKind};
+use dngd::solver::{residual_norm, CholSolver, DampedSolver, SolveError, SolverKind, SolverRegistry};
 use std::process::ExitCode;
 
 mod cli {
@@ -93,6 +95,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(rest),
         "vmc" => cmd_vmc(rest),
         "bench" => cmd_bench(rest),
+        "serve" => cmd_serve(rest),
         "artifacts" => cmd_artifacts(rest),
         "--help" | "help" | "-h" => {
             println!("{USAGE}");
@@ -116,7 +119,9 @@ USAGE:
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision | --serving) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
+  dngd serve  [--config cfg.toml] [--set section.key=value]... [--transport channels|socket|both]
+              [--tenants T] [--requests R] [--self-test]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -361,7 +366,7 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
         "table1", "scaling", "cg", "kernels", "sessions", "threads", "streaming", "precision",
-        "scale", "json", "json-simd", "quick",
+        "serving", "scale", "json", "json-simd", "quick",
     ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
@@ -439,10 +444,21 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
             false,
         )
         .map_err(|e| e.to_string())?;
+    } else if a.has("serving") {
+        // PR 7: multi-tenant serving throughput, coalesced vs serial;
+        // the ≥2× acceptance assert lives in `cargo bench --bench
+        // serving` full mode, not the CLI path.
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR7.json");
+        dngd::bench_tables::serving_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
         return Err(
             "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads | \
-             --streaming | --precision"
+             --streaming | --precision | --serving"
                 .into(),
         );
     }
@@ -463,4 +479,186 @@ fn cmd_artifacts(args: &[String]) -> Result<(), String> {
         println!("  {kind:?} n={n} m={m}");
     }
     Ok(())
+}
+
+/// Fixed `dngd serve --self-test` workload data, regenerated
+/// identically for the serial reference and every transport so the
+/// answers are comparable bit-for-bit.
+fn serve_test_data() -> (Mat, Vec<f64>, Vec<f64>, Mat) {
+    let mut rng = Rng::seed_from(99);
+    let s = Mat::randn(16, 128, &mut rng);
+    let v1: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+    let v2: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+    let added = Mat::randn(2, 128, &mut rng);
+    (s, v1, v2, added)
+}
+
+/// Run the fixed session workload (cold solve, λ-resweep, second RHS,
+/// rotate + solve) through one server and collect the answers.
+fn serve_workload(opts: ServeOptions) -> Result<Vec<Vec<f64>>, String> {
+    let (s, v1, v2, added) = serve_test_data();
+    let server = Server::start(opts).map_err(|e| format!("server start: {e}"))?;
+    let client = server.client().map_err(|e| e.to_string())?;
+    let sid = client.open_session(s, 0.05).map_err(|e| e.to_string())?;
+    let mut answers = Vec::new();
+    answers.push(client.solve(sid, 0.05, &v1).map_err(|e| e.to_string())?);
+    // λ-resweep on the cached staging.
+    answers.push(client.solve(sid, 0.01, &v1).map_err(|e| e.to_string())?);
+    answers.push(client.solve(sid, 0.01, &v2).map_err(|e| e.to_string())?);
+    // Streaming rotation, then solve against the rotated window.
+    client.rotate(sid, &[0, 1], added).map_err(|e| e.to_string())?;
+    answers.push(client.solve(sid, 0.01, &v1).map_err(|e| e.to_string())?);
+    client.close_session(sid).map_err(|e| e.to_string())?;
+    drop(client);
+    server.shutdown();
+    Ok(answers)
+}
+
+/// `dngd serve --self-test`: every requested transport must reproduce
+/// the serial solver to 1e-9, and when both transports run they must
+/// agree bit-for-bit (the PR-7 equivalence contract).
+fn serve_self_test(base: &ServeOptions, transports: &[TransportKind]) -> Result<(), String> {
+    let (s, v1, v2, added) = serve_test_data();
+    let serial = CholSolver::default();
+    let rotated = {
+        let (n, m) = (s.rows(), s.cols());
+        let mut w = Mat::zeros(n, m);
+        for i in 2..n {
+            w.row_mut(i - 2).copy_from_slice(s.row(i));
+        }
+        for r in 0..2 {
+            w.row_mut(n - 2 + r).copy_from_slice(added.row(r));
+        }
+        w
+    };
+    let refs = vec![
+        serial.solve(&s, &v1, 0.05).map_err(|e| e.to_string())?,
+        serial.solve(&s, &v1, 0.01).map_err(|e| e.to_string())?,
+        serial.solve(&s, &v2, 0.01).map_err(|e| e.to_string())?,
+        serial.solve(&rotated, &v1, 0.01).map_err(|e| e.to_string())?,
+    ];
+
+    let mut per_transport: Vec<Vec<Vec<f64>>> = Vec::new();
+    for &tk in transports {
+        let opts = ServeOptions { transport: tk, ..base.clone() };
+        let answers = serve_workload(opts)?;
+        for (i, (x, x_ref)) in answers.iter().zip(&refs).enumerate() {
+            let scale = dngd::linalg::mat::norm2(x_ref).max(1.0);
+            for (a, b) in x.iter().zip(x_ref) {
+                if (a - b).abs() > 1e-9 * scale {
+                    return Err(format!(
+                        "self-test: {tk} transport diverged from the serial solver on answer \
+                         {i}: {a} vs {b}"
+                    ));
+                }
+            }
+        }
+        println!("self-test [{tk}]: 4 answers match the serial solver to 1e-9 ✓");
+        per_transport.push(answers);
+    }
+    if let [a, b] = per_transport.as_slice() {
+        let bit_identical = a
+            .iter()
+            .zip(b)
+            .all(|(xa, xb)| xa.iter().zip(xb).all(|(p, q)| p.to_bits() == q.to_bits()));
+        if !bit_identical {
+            return Err("self-test: channels and socket transports are not bit-identical".into());
+        }
+        println!("self-test: channels ≡ socket bit-identically ✓");
+    }
+    Ok(())
+}
+
+/// `dngd serve` without `--self-test`: a small sustained-traffic demo
+/// printing requests/sec and client-observed p50/p99 per transport.
+fn serve_demo(
+    base: &ServeOptions,
+    transports: &[TransportKind],
+    requests: usize,
+) -> Result<(), String> {
+    for &tk in transports {
+        let opts = ServeOptions { transport: tk, ..base.clone() };
+        let mut rng = Rng::seed_from(101);
+        let (n, m) = (32usize, 512usize);
+        let s = Mat::randn(n, m, &mut rng);
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let server = Server::start(opts.clone()).map_err(|e| format!("server start: {e}"))?;
+        let sid = {
+            let setup = server.client().map_err(|e| e.to_string())?;
+            setup.open_session(s, 1e-3).map_err(|e| e.to_string())?
+        };
+        let per = (requests / opts.tenants).max(1);
+        let started = std::time::Instant::now();
+        let mut lats: Vec<f64> = Vec::new();
+        std::thread::scope(|scope| -> Result<(), String> {
+            let mut handles = Vec::new();
+            for _ in 0..opts.tenants {
+                let client = server.client().map_err(|e| e.to_string())?;
+                let v = &v;
+                handles.push(scope.spawn(move || -> Result<Vec<f64>, String> {
+                    let mut l = Vec::with_capacity(per);
+                    for _ in 0..per {
+                        let t0 = std::time::Instant::now();
+                        loop {
+                            match client.solve(sid, 1e-3, v) {
+                                Ok(_) => break,
+                                Err(e) if e.is_retryable() => {
+                                    std::thread::sleep(std::time::Duration::from_millis(1));
+                                }
+                                Err(e) => return Err(e.to_string()),
+                            }
+                        }
+                        l.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Ok(l)
+                }));
+            }
+            for h in handles {
+                lats.extend(h.join().map_err(|_| "tenant thread panicked".to_string())??);
+            }
+            Ok(())
+        })?;
+        let elapsed = started.elapsed().as_secs_f64();
+        let stats = server.shutdown();
+        let sum = Summary::from_samples(&lats);
+        println!(
+            "serve [{tk}]: {} tenants × {per} requests → {:.1} req/s, p50 {:.2} ms, \
+             p99 {:.2} ms, {} panels ({} coalesced rows)",
+            opts.tenants,
+            lats.len() as f64 / elapsed.max(1e-9),
+            sum.median,
+            sum.p99,
+            stats.panels,
+            stats.coalesced_rows
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&["config", "set", "self-test", "transport", "tenants", "requests"])?;
+    let cfg = Config::load(a.get("config"), &a.get_all("set"))?;
+    let mut opts = ServeOptions::from_config(&cfg)?;
+    if let Some(t) = a.get("tenants").filter(|s| !s.is_empty()) {
+        // --tenants T is shorthand for --set serve.tenants=T, with the
+        // queue deepened to keep the ≥-tenants cross-check satisfied.
+        opts.tenants = t.parse().map_err(|_| format!("--tenants: cannot parse {t:?}"))?;
+        opts.queue_depth = opts.queue_depth.max(opts.tenants);
+        opts.validate()?;
+    }
+    let transports: Vec<TransportKind> = match a.get("transport").filter(|s| !s.is_empty()) {
+        None => vec![opts.transport],
+        Some("both") => vec![TransportKind::Channels, TransportKind::Socket],
+        Some(s) => vec![TransportKind::parse(s)?],
+    };
+    if a.has("self-test") {
+        serve_self_test(&opts, &transports)
+    } else {
+        let requests: usize = a.parsed("requests", 64)?;
+        if requests == 0 {
+            return Err("--requests must be ≥ 1".into());
+        }
+        serve_demo(&opts, &transports, requests)
+    }
 }

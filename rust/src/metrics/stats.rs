@@ -9,6 +9,10 @@ pub struct Summary {
     pub min: f64,
     pub median: f64,
     pub p90: f64,
+    /// Tail latency for the serving bench (PR 7) — with < 100 samples
+    /// this interpolates toward the max, so treat it as a ceiling
+    /// estimate at small n.
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -28,6 +32,7 @@ impl Summary {
             min: sorted[0],
             median: percentile(&sorted, 0.5),
             p90: percentile(&sorted, 0.9),
+            p99: percentile(&sorted, 0.99),
             max: sorted[count - 1],
         }
     }
@@ -85,6 +90,7 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert_eq!(s.median, 3.0);
         assert!((s.p90 - 4.6).abs() < 1e-12);
+        assert!((s.p99 - 4.96).abs() < 1e-12);
         assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
     }
 
@@ -93,6 +99,7 @@ mod tests {
         let s = Summary::from_samples(&[7.0]);
         assert_eq!(s.median, 7.0);
         assert_eq!(s.p90, 7.0);
+        assert_eq!(s.p99, 7.0);
     }
 
     #[test]

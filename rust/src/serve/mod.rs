@@ -1,0 +1,34 @@
+//! Multi-tenant damped-solve serving layer (PR 7).
+//!
+//! The paper's solve — `(SᵀS + λI)x = v` via the n×n Gram dual — is the
+//! inner loop of every NGD/SR consumer, and the ROADMAP north-star
+//! ("heavy traffic from millions of users") needs more than one trainer
+//! driving one in-process pool. This module is that front-end:
+//!
+//! - [`server`] — the [`server::Server`]/[`server::Client`] pair: tenants
+//!   open sessions (score matrix → cached λ-independent staging), stream
+//!   single-RHS solves and window rotations, and a dispatcher thread
+//!   coalesces compatible RHS across tenants into one `solve_many` panel
+//!   per tick. Admission is reject-with-retry-after — never OOM, never
+//!   unbounded queues.
+//! - [`queue`] — the bounded request queue, the coalescing policy
+//!   (group by `(session, λ-bits)`, preserve arrival order), and the
+//!   typed [`queue::ServeError`] with its retryable/fatal split.
+//! - [`transport`] — the [`transport::ShardTransport`] trait that lets
+//!   `coordinator/sharded.rs` shard workers live in-process (bounded
+//!   channels) or out-of-process (length-prefixed Unix-domain-socket
+//!   frames), bit-identically.
+//!
+//! The CLI front door is `dngd serve` (self-test + demo traffic); the
+//! sustained-traffic benchmark is `benches/serving.rs` →
+//! `BENCH_PR7.json`.
+
+pub mod queue;
+pub mod server;
+pub mod transport;
+
+pub use queue::ServeError;
+pub use server::{Client, ServeOptions, ServeStats, Server, SolveTicket};
+pub use transport::{ChannelTransport, ShardTransport, TransportError, TransportKind};
+#[cfg(unix)]
+pub use transport::SocketTransport;

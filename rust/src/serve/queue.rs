@@ -1,0 +1,318 @@
+//! Bounded request queue + cross-tenant RHS coalescing (PR 7).
+//!
+//! Tenants enqueue single-RHS solve requests and window rotations; the
+//! dispatcher drains the queue once per tick and **coalesces** solves
+//! that target the same session at the same λ into one `solve_many`
+//! panel — the same per-session amortization PR 2/PR 5 exploit, applied
+//! *across* tenants. Admission is reject-with-retry-after, never OOM or
+//! unbounded queueing: a full queue surfaces [`ServeError::Overloaded`]
+//! at submit time, and the memory model (`cost.rs`) gates session
+//! admission in `serve/server.rs` with [`ServeError::OverBudget`].
+
+use crate::linalg::Mat;
+use crate::solver::SolveError;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Serving-layer failures handed back to tenants. Retryable variants
+/// carry an explicit back-off hint instead of letting the server fall
+/// over — see [`ServeError::is_retryable`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The dispatch queue is at `serve.queue_depth`; resubmit after the
+    /// hinted back-off (≈ one dispatch tick).
+    Overloaded { retry_after_ms: u64 },
+    /// Admitting the session would exceed `serve.budget_gb` under the
+    /// `cost.rs` memory model; retry after other tenants release
+    /// sessions.
+    OverBudget { required_bytes: u64, budget_bytes: u64, retry_after_ms: u64 },
+    /// All `serve.tenants` connection slots are taken.
+    TenantLimit { tenants: usize },
+    /// No live session with this id (never opened, or closed).
+    UnknownSession(u64),
+    /// The underlying solve failed; inspect the inner error (a
+    /// [`SolveError::Backend`] may itself be retryable).
+    Solver(SolveError),
+    /// The server is shutting down.
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Whether resubmitting the same request later can succeed.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            ServeError::Overloaded { .. }
+            | ServeError::OverBudget { .. }
+            | ServeError::TenantLimit { .. } => true,
+            ServeError::Solver(SolveError::Backend { retryable, .. }) => *retryable,
+            ServeError::UnknownSession(_) | ServeError::Solver(_) | ServeError::ShuttingDown => {
+                false
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded; retry after {retry_after_ms} ms")
+            }
+            ServeError::OverBudget { required_bytes, budget_bytes, retry_after_ms } => write!(
+                f,
+                "session needs {required_bytes} B but only {budget_bytes} B budget remains; \
+                 retry after {retry_after_ms} ms"
+            ),
+            ServeError::TenantLimit { tenants } => {
+                write!(f, "all {tenants} tenant slots in use")
+            }
+            ServeError::UnknownSession(sid) => write!(f, "unknown session {sid}"),
+            ServeError::Solver(e) => write!(f, "solve failed: {e}"),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<SolveError> for ServeError {
+    fn from(e: SolveError) -> ServeError {
+        ServeError::Solver(e)
+    }
+}
+
+pub(crate) type SolveReply = Sender<Result<Vec<f64>, ServeError>>;
+pub(crate) type RotateReply = Sender<Result<(), ServeError>>;
+
+/// One tenant solve request: a single RHS against a cached session at a
+/// given λ (multi-RHS workloads submit several — the coalescer re-batches
+/// them into one panel anyway).
+pub(crate) struct SolveItem {
+    pub sid: u64,
+    pub lambda: f64,
+    pub rhs: Vec<f64>,
+    pub reply: SolveReply,
+}
+
+/// One tenant window rotation (the PR-5 streaming `update_rows`).
+pub(crate) struct RotateItem {
+    pub sid: u64,
+    pub removed: Vec<usize>,
+    pub added: Mat,
+    pub reply: RotateReply,
+}
+
+pub(crate) enum Pending {
+    Solve(SolveItem),
+    Rotate(RotateItem),
+}
+
+/// Solves bound for one `solve_many` panel: same session, same λ bits.
+/// `rows[i]`'s answer goes to `replies[i]`.
+pub(crate) struct SolveGroup {
+    pub sid: u64,
+    pub lambda: f64,
+    pub rows: Vec<Vec<f64>>,
+    pub replies: Vec<SolveReply>,
+}
+
+/// Group drained solves into dispatch panels. With `coalesce` on,
+/// requests sharing `(sid, λ)` merge into one group — keyed on λ's
+/// **bits** so only exactly-equal damping coalesces; groups keep first-
+/// arrival order and rows keep arrival order within a group (replies
+/// line up with panel rows). With `coalesce` off every request is its
+/// own group — the serial baseline the serving bench compares against.
+pub(crate) fn coalesce_solves(items: Vec<SolveItem>, coalesce: bool) -> Vec<SolveGroup> {
+    let mut groups: Vec<SolveGroup> = Vec::new();
+    let mut index: HashMap<(u64, u64), usize> = HashMap::new();
+    for it in items {
+        if coalesce {
+            let key = (it.sid, it.lambda.to_bits());
+            if let Some(&g) = index.get(&key) {
+                groups[g].rows.push(it.rhs);
+                groups[g].replies.push(it.reply);
+                continue;
+            }
+            index.insert(key, groups.len());
+        }
+        groups.push(SolveGroup {
+            sid: it.sid,
+            lambda: it.lambda,
+            rows: vec![it.rhs],
+            replies: vec![it.reply],
+        });
+    }
+    groups
+}
+
+struct QueueState {
+    items: VecDeque<Pending>,
+    stopped: bool,
+}
+
+/// Depth-bounded MPSC dispatch queue: producers (tenant threads) reject
+/// at `depth` with a retry-after hint, the single consumer (dispatcher)
+/// drains whole ticks at a time.
+pub(crate) struct RequestQueue {
+    inner: Mutex<QueueState>,
+    cv: Condvar,
+    depth: usize,
+    retry_after_ms: u64,
+}
+
+impl RequestQueue {
+    pub(crate) fn new(depth: usize, retry_after_ms: u64) -> RequestQueue {
+        assert!(depth > 0);
+        RequestQueue {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), stopped: false }),
+            cv: Condvar::new(),
+            depth,
+            retry_after_ms: retry_after_ms.max(1),
+        }
+    }
+
+    /// Admit or reject one request — never blocks, never grows past
+    /// `depth`.
+    pub(crate) fn try_push(&self, p: Pending) -> Result<(), ServeError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.stopped {
+            return Err(ServeError::ShuttingDown);
+        }
+        if g.items.len() >= self.depth {
+            return Err(ServeError::Overloaded { retry_after_ms: self.retry_after_ms });
+        }
+        g.items.push_back(p);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Dispatcher side: block up to `timeout` for the queue to become
+    /// non-empty (or the server to stop). Returns whether items are
+    /// waiting.
+    pub(crate) fn wait_nonempty(&self, timeout: Duration) -> bool {
+        let g = self.inner.lock().unwrap();
+        if !g.items.is_empty() {
+            return true;
+        }
+        if g.stopped {
+            return false;
+        }
+        let (g, _) = self.cv.wait_timeout(g, timeout).unwrap();
+        !g.items.is_empty()
+    }
+
+    /// Dispatcher side: take everything queued so far.
+    pub(crate) fn drain(&self) -> Vec<Pending> {
+        let mut g = self.inner.lock().unwrap();
+        g.items.drain(..).collect()
+    }
+
+    /// Reject all future pushes and wake the dispatcher.
+    pub(crate) fn stop(&self) {
+        self.inner.lock().unwrap().stopped = true;
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn is_stopped(&self) -> bool {
+        self.inner.lock().unwrap().stopped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn solve_item(sid: u64, lambda: f64, tag: f64) -> SolveItem {
+        let (tx, _rx) = channel();
+        SolveItem { sid, lambda, rhs: vec![tag; 3], reply: tx }
+    }
+
+    #[test]
+    fn queue_rejects_at_depth_with_retry_hint() {
+        let q = RequestQueue::new(2, 7);
+        q.try_push(Pending::Solve(solve_item(1, 0.1, 0.0))).unwrap();
+        q.try_push(Pending::Solve(solve_item(1, 0.1, 1.0))).unwrap();
+        match q.try_push(Pending::Solve(solve_item(1, 0.1, 2.0))) {
+            Err(ServeError::Overloaded { retry_after_ms }) => assert_eq!(retry_after_ms, 7),
+            other => panic!("expected Overloaded, got {:?}", other.map(|_| ())),
+        }
+        assert!(ServeError::Overloaded { retry_after_ms: 7 }.is_retryable());
+        // Draining frees capacity again.
+        assert_eq!(q.drain().len(), 2);
+        q.try_push(Pending::Solve(solve_item(1, 0.1, 3.0))).unwrap();
+    }
+
+    #[test]
+    fn stopped_queue_rejects_as_shutting_down() {
+        let q = RequestQueue::new(4, 1);
+        q.stop();
+        assert!(q.is_stopped());
+        match q.try_push(Pending::Solve(solve_item(1, 0.1, 0.0))) {
+            Err(ServeError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {:?}", other.map(|_| ())),
+        }
+        assert!(!ServeError::ShuttingDown.is_retryable());
+    }
+
+    #[test]
+    fn coalesce_groups_by_session_and_lambda_bits() {
+        let items = vec![
+            solve_item(1, 0.1, 0.0),
+            solve_item(2, 0.1, 1.0),
+            solve_item(1, 0.1, 2.0),
+            solve_item(1, 0.2, 3.0),
+            solve_item(1, 0.1, 4.0),
+        ];
+        let groups = coalesce_solves(items, true);
+        assert_eq!(groups.len(), 3);
+        // First-arrival group order…
+        assert_eq!((groups[0].sid, groups[0].lambda), (1, 0.1));
+        assert_eq!((groups[1].sid, groups[1].lambda), (2, 0.1));
+        assert_eq!((groups[2].sid, groups[2].lambda), (1, 0.2));
+        // …and arrival order within the coalesced group, so replies
+        // line up with panel rows.
+        let tags: Vec<f64> = groups[0].rows.iter().map(|r| r[0]).collect();
+        assert_eq!(tags, vec![0.0, 2.0, 4.0]);
+        assert_eq!(groups[0].replies.len(), 3);
+    }
+
+    #[test]
+    fn coalesce_off_is_one_group_per_request() {
+        let items = vec![
+            solve_item(1, 0.1, 0.0),
+            solve_item(1, 0.1, 1.0),
+            solve_item(1, 0.1, 2.0),
+        ];
+        let groups = coalesce_solves(items, false);
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|g| g.rows.len() == 1));
+    }
+
+    #[test]
+    fn wait_nonempty_wakes_on_push_and_stop() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(4, 1));
+        // Empty + timeout → false.
+        assert!(!q.wait_nonempty(Duration::from_millis(5)));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.try_push(Pending::Solve(solve_item(1, 0.1, 0.0))).unwrap();
+        });
+        assert!(q.wait_nonempty(Duration::from_millis(500)));
+        h.join().unwrap();
+        q.drain();
+        // Stop wakes a waiting dispatcher with "nothing to do".
+        let q3 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q3.stop();
+        });
+        assert!(!q.wait_nonempty(Duration::from_millis(500)));
+        h.join().unwrap();
+    }
+}

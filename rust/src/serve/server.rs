@@ -1,0 +1,801 @@
+//! Multi-tenant damped-solve server (PR 7 tentpole).
+//!
+//! One [`Server`] multiplexes many tenant [`Client`]s onto a single
+//! sharded Algorithm-1 backend. Tenants open sessions (submit a score
+//! matrix, get a cached λ-independent staging), then stream single-RHS
+//! solves and window rotations; a dispatcher thread drains the bounded
+//! request queue once per `tick_ms` and **coalesces** solves sharing
+//! `(session, λ)` into one `solve_many` panel — the PR-2/PR-5
+//! amortization applied *across* tenants. Admission never OOMs and never
+//! queues unboundedly:
+//!
+//! | pressure point            | policy                                       |
+//! |---------------------------|----------------------------------------------|
+//! | connection slots          | `serve.tenants` cap → [`ServeError::TenantLimit`] |
+//! | dispatch queue            | `serve.queue_depth` cap → [`ServeError::Overloaded`] + retry-after |
+//! | session memory            | `cost.rs` model vs `serve.budget_gb` → [`ServeError::OverBudget`] |
+//!
+//! Everything below the dispatcher is the PR-2 session API over the
+//! pluggable [`super::transport::ShardTransport`], so the same server
+//! runs against in-process channel workers or out-of-process
+//! Unix-socket shard workers, bit-identically.
+
+use super::queue::{coalesce_solves, Pending, RequestQueue, RotateItem, ServeError, SolveItem};
+use super::transport::{ChannelTransport, ShardTransport, TransportKind};
+use crate::config::Config;
+use crate::coordinator::{ShardedCholSolver, ShardedWindowSession};
+use crate::linalg::{KernelConfig, Mat};
+use crate::solver::{memory_bytes, Factorization, MemoryBudget, SolveError, SolverKind};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Serving-layer tunables (`serve.*` config keys plus the backend
+/// topology inherited from `coordinator.*` / `solver.*`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOptions {
+    /// Concurrent tenant connection slots (`serve.tenants`).
+    pub tenants: usize,
+    /// Dispatch-queue depth shared by all tenants
+    /// (`serve.queue_depth`); must be ≥ `tenants` so every connected
+    /// tenant can keep at least one request in flight.
+    pub queue_depth: usize,
+    /// Gathering window per dispatch tick in ms (`serve.tick_ms`).
+    /// Larger ticks coalesce more RHS per panel at higher p50; 0
+    /// dispatches immediately (the serial baseline for the bench).
+    pub tick_ms: u64,
+    /// Session-memory budget in GB under the `cost.rs` model
+    /// (`serve.budget_gb`; 0 = the paper's 80 GB A100).
+    pub budget_gb: f64,
+    /// Shard worker transport (`serve.transport = "channels"|"socket"`).
+    pub transport: TransportKind,
+    /// Shard worker count (`coordinator.workers`).
+    pub workers: usize,
+    /// Per-worker mailbox depth for the channel transport
+    /// (`coordinator.queue_depth`).
+    pub worker_queue_depth: usize,
+    /// Kernel configuration for the dense stages (`solver.threads` /
+    /// `solver.isa`).
+    pub kernel: KernelConfig,
+    /// Cross-tenant RHS coalescing. On by default; the serving bench
+    /// turns it off to measure the serial per-request baseline.
+    pub coalesce: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            tenants: 16,
+            queue_depth: 64,
+            tick_ms: 2,
+            budget_gb: 0.0,
+            transport: TransportKind::Channels,
+            workers: 4,
+            worker_queue_depth: 4,
+            kernel: KernelConfig::serial(),
+            coalesce: true,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Build serving options from a validated [`Config`] (the
+    /// `dngd serve` path): `serve.*` for the front-end, `coordinator.*`
+    /// for the shard topology, `solver.*` for the kernels.
+    pub fn from_config(cfg: &Config) -> Result<ServeOptions, String> {
+        let opts = ServeOptions {
+            tenants: cfg.serve.tenants,
+            queue_depth: cfg.serve.queue_depth,
+            tick_ms: cfg.serve.tick_ms,
+            budget_gb: cfg.serve.budget_gb,
+            transport: TransportKind::parse(&cfg.serve.transport)?,
+            workers: cfg.coordinator.workers,
+            worker_queue_depth: cfg.coordinator.queue_depth,
+            kernel: cfg.solver.options().kernel(),
+            coalesce: true,
+        };
+        opts.validate()?;
+        Ok(opts)
+    }
+
+    /// Range + cross-field checks, shared by the TOML/`--set` path
+    /// (via [`Config::validate`]) and direct [`Server::start`] callers.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants == 0 {
+            return Err("serve.tenants must be ≥ 1".into());
+        }
+        if self.queue_depth < self.tenants {
+            return Err(format!(
+                "serve.queue_depth ({}) must be ≥ serve.tenants ({}): every connected tenant \
+                 needs at least one queue slot or admission livelocks",
+                self.queue_depth, self.tenants
+            ));
+        }
+        if self.tick_ms > 10_000 {
+            return Err("serve.tick_ms must be ≤ 10000 (a tick is a gathering window, not a schedule)".into());
+        }
+        if !self.budget_gb.is_finite() || self.budget_gb < 0.0 {
+            return Err("serve.budget_gb must be ≥ 0 (0 = the 80 GB A100 default)".into());
+        }
+        if self.workers == 0 {
+            return Err("coordinator.workers must be ≥ 1".into());
+        }
+        if self.worker_queue_depth == 0 {
+            return Err("coordinator.queue_depth must be ≥ 1".into());
+        }
+        Ok(())
+    }
+
+    /// The modeled budget gating session admission.
+    fn budget(&self) -> MemoryBudget {
+        if self.budget_gb > 0.0 {
+            MemoryBudget::bytes_for_test((self.budget_gb * 1e9) as u64)
+        } else {
+            MemoryBudget::a100_80gb()
+        }
+    }
+}
+
+/// Counters reported by [`Server::stats`] / [`Server::shutdown`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    /// Solve requests admitted to the queue.
+    pub submitted: u64,
+    /// Solve requests answered successfully.
+    pub completed: u64,
+    /// Requests rejected at admission (queue full / shutting down).
+    pub rejected: u64,
+    /// Window rotations applied.
+    pub rotations: u64,
+    /// `solve_many` panels dispatched to the backend.
+    pub panels: u64,
+    /// RHS rows that rode along in an already-dispatched panel — the
+    /// direct measure of cross-tenant coalescing (0 when off).
+    pub coalesced_rows: u64,
+    /// Largest panel dispatched.
+    pub max_panel_rows: usize,
+    /// Per-worker processed-job counters, available only from
+    /// [`Server::shutdown`] once every client and session is gone.
+    pub worker_jobs: Vec<u64>,
+}
+
+struct TenantSession {
+    fact: ShardedWindowSession,
+    /// `cost.rs` admission charge, released on close.
+    bytes: u64,
+}
+
+struct BudgetState {
+    admitted: u64,
+    limit: u64,
+}
+
+struct Inner {
+    opts: ServeOptions,
+    solver: Arc<ShardedCholSolver>,
+    sessions: Mutex<HashMap<u64, TenantSession>>,
+    next_session: AtomicU64,
+    queue: RequestQueue,
+    budget: Mutex<BudgetState>,
+    tenants: AtomicUsize,
+    stats: Mutex<ServeStats>,
+}
+
+/// The serving front-end. [`Server::start`] spawns the shard workers
+/// and the dispatcher thread; [`Server::client`] hands out tenant
+/// connections; [`Server::shutdown`] drains in-flight work and returns
+/// the final counters (including the per-worker job counts from the
+/// transport's drained shutdown).
+pub struct Server {
+    inner: Arc<Inner>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+}
+
+/// One tenant connection. Holds a `serve.tenants` slot until dropped.
+pub struct Client {
+    inner: Arc<Inner>,
+}
+
+/// Handle to an in-flight async solve; [`SolveTicket::wait`] blocks for
+/// the dispatched answer.
+pub struct SolveTicket {
+    rx: Receiver<Result<Vec<f64>, ServeError>>,
+}
+
+impl SolveTicket {
+    pub fn wait(self) -> Result<Vec<f64>, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+}
+
+#[cfg(unix)]
+fn socket_transport(
+    workers: usize,
+    kernel: KernelConfig,
+) -> Result<Box<dyn ShardTransport>, String> {
+    let t = super::transport::SocketTransport::spawn(workers, kernel)
+        .map_err(|e| format!("socket transport: {e}"))?;
+    Ok(Box::new(t))
+}
+
+#[cfg(not(unix))]
+fn socket_transport(
+    _workers: usize,
+    _kernel: KernelConfig,
+) -> Result<Box<dyn ShardTransport>, String> {
+    Err("serve.transport = \"socket\" requires a Unix platform (use \"channels\")".into())
+}
+
+impl Server {
+    /// Spawn the shard workers (over the configured transport) and the
+    /// dispatcher thread.
+    pub fn start(opts: ServeOptions) -> Result<Server, String> {
+        opts.validate()?;
+        let transport: Box<dyn ShardTransport> = match opts.transport {
+            TransportKind::Channels => Box::new(ChannelTransport::spawn(
+                opts.workers,
+                opts.worker_queue_depth,
+                opts.kernel,
+            )),
+            TransportKind::Socket => socket_transport(opts.workers, opts.kernel)?,
+        };
+        let solver = Arc::new(ShardedCholSolver::with_transport(transport, opts.kernel));
+        let limit = opts.budget().bytes();
+        // Retry-after hint ≈ one gathering tick (min 1 ms).
+        let retry_after_ms = opts.tick_ms.max(1);
+        let inner = Arc::new(Inner {
+            queue: RequestQueue::new(opts.queue_depth, retry_after_ms),
+            opts,
+            solver,
+            sessions: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(0),
+            budget: Mutex::new(BudgetState { admitted: 0, limit }),
+            tenants: AtomicUsize::new(0),
+            stats: Mutex::new(ServeStats::default()),
+        });
+        let inner2 = inner.clone();
+        let dispatcher = thread::Builder::new()
+            .name("dngd-serve-dispatcher".into())
+            .spawn(move || dispatcher_loop(&inner2))
+            .map_err(|e| format!("spawn dispatcher: {e}"))?;
+        Ok(Server { inner, dispatcher: Some(dispatcher) })
+    }
+
+    /// Connect a tenant, or reject with [`ServeError::TenantLimit`]
+    /// when all slots are taken (retryable: slots free when clients
+    /// drop).
+    pub fn client(&self) -> Result<Client, ServeError> {
+        let prev = self.inner.tenants.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.inner.opts.tenants {
+            self.inner.tenants.fetch_sub(1, Ordering::SeqCst);
+            return Err(ServeError::TenantLimit { tenants: self.inner.opts.tenants });
+        }
+        Ok(Client { inner: self.inner.clone() })
+    }
+
+    /// Snapshot of the live counters (worker_jobs stays empty until
+    /// shutdown).
+    pub fn stats(&self) -> ServeStats {
+        self.inner.stats.lock().unwrap().clone()
+    }
+
+    /// Which transport backs this server (`"channels"` / `"socket"`).
+    pub fn transport_name(&self) -> &'static str {
+        self.inner.solver.transport_name()
+    }
+
+    /// Stop admission, drain the queue, join the dispatcher, and — if
+    /// no client or session handle is still alive — drop all sessions
+    /// and shut the backend down, harvesting the per-worker job
+    /// counters into the returned stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.inner.queue.stop();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        let inner = self.inner.clone();
+        drop(self); // release the Server's Arc (Drop sees dispatcher=None)
+        let mut stats = inner.stats.lock().unwrap().clone();
+        if let Ok(inner) = Arc::try_unwrap(inner) {
+            // Sessions drop first (each frees its worker shards over the
+            // still-live transport), then the backend drains + joins.
+            drop(inner.sessions.into_inner().unwrap());
+            if let Ok(solver) = Arc::try_unwrap(inner.solver) {
+                stats.worker_jobs = solver.shutdown();
+            }
+        }
+        stats
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Dropped without shutdown(): stop admission and join the
+        // dispatcher so no thread outlives the handle. The backend pool
+        // drains via the transport's own Drop once the last
+        // client/session releases `Inner`.
+        self.inner.queue.stop();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+fn check_serve_lambda(lambda: f64) -> Result<(), ServeError> {
+    if lambda <= 0.0 || !lambda.is_finite() {
+        return Err(ServeError::Solver(SolveError::BadInput(format!(
+            "damping must be positive and finite, got λ = {lambda}"
+        ))));
+    }
+    Ok(())
+}
+
+impl Client {
+    /// Submit a score matrix and stage a session at `lambda`. Admission
+    /// is charged up front under the `cost.rs` memory model; rejected
+    /// sessions cost nothing.
+    pub fn open_session(&self, scores: Mat, lambda: f64) -> Result<u64, ServeError> {
+        check_serve_lambda(lambda)?;
+        let (n, m) = (scores.rows(), scores.cols());
+        if n == 0 || m == 0 {
+            return Err(ServeError::Solver(SolveError::BadInput(
+                "open_session: empty score matrix".into(),
+            )));
+        }
+        let bytes = memory_bytes(SolverKind::Chol, n, m);
+        {
+            let mut b = self.inner.budget.lock().unwrap();
+            let free = b.limit.saturating_sub(b.admitted);
+            if bytes > free {
+                return Err(ServeError::OverBudget {
+                    required_bytes: bytes,
+                    budget_bytes: free,
+                    retry_after_ms: self.inner.opts.tick_ms.max(1),
+                });
+            }
+            b.admitted += bytes;
+        }
+        // Cold staging runs on the tenant thread (the transport demuxes
+        // concurrent requests), so a slow admit never stalls dispatch.
+        let mut fact = ShardedCholSolver::window_session(&self.inner.solver, scores);
+        if let Err(e) = fact.redamp(lambda) {
+            self.inner.budget.lock().unwrap().admitted -= bytes;
+            return Err(e.into());
+        }
+        let sid = self.inner.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inner.sessions.lock().unwrap().insert(sid, TenantSession { fact, bytes });
+        Ok(sid)
+    }
+
+    /// Attach to an existing session (multi-tenant sharing of one
+    /// cached staging); errors if it was never opened or was closed.
+    pub fn attach(&self, sid: u64) -> Result<(), ServeError> {
+        if self.inner.sessions.lock().unwrap().contains_key(&sid) {
+            Ok(())
+        } else {
+            Err(ServeError::UnknownSession(sid))
+        }
+    }
+
+    /// Close a session, releasing its worker shards and its admission
+    /// charge.
+    pub fn close_session(&self, sid: u64) -> Result<(), ServeError> {
+        let sess = self
+            .inner
+            .sessions
+            .lock()
+            .unwrap()
+            .remove(&sid)
+            .ok_or(ServeError::UnknownSession(sid))?;
+        self.inner.budget.lock().unwrap().admitted -= sess.bytes;
+        drop(sess); // frees the worker shards (blocking DropShard fan-out)
+        Ok(())
+    }
+
+    /// Enqueue one RHS against session `sid` at damping `lambda`;
+    /// returns a ticket immediately (the dispatcher answers after the
+    /// next tick, possibly coalesced with other tenants' RHS).
+    pub fn solve_async(
+        &self,
+        sid: u64,
+        lambda: f64,
+        rhs: &[f64],
+    ) -> Result<SolveTicket, ServeError> {
+        check_serve_lambda(lambda)?;
+        let m = {
+            let sessions = self.inner.sessions.lock().unwrap();
+            sessions.get(&sid).ok_or(ServeError::UnknownSession(sid))?.fact.dim()
+        };
+        if rhs.len() != m {
+            return Err(ServeError::Solver(SolveError::BadInput(format!(
+                "solve: rhs has {} entries but session {sid} solves m = {m}",
+                rhs.len()
+            ))));
+        }
+        let (tx, rx) = channel();
+        let item = Pending::Solve(SolveItem { sid, lambda, rhs: rhs.to_vec(), reply: tx });
+        match self.inner.queue.try_push(item) {
+            Ok(()) => {
+                self.inner.stats.lock().unwrap().submitted += 1;
+                Ok(SolveTicket { rx })
+            }
+            Err(e) => {
+                self.inner.stats.lock().unwrap().rejected += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking solve: [`Client::solve_async`] + wait.
+    pub fn solve(&self, sid: u64, lambda: f64, rhs: &[f64]) -> Result<Vec<f64>, ServeError> {
+        self.solve_async(sid, lambda, rhs)?.wait()
+    }
+
+    /// Rotate rows of the session's sliding window (the PR-5 streaming
+    /// `update_rows`), serialized through the dispatch queue so a
+    /// tick's solves always see a consistent window. Blocks for the
+    /// result.
+    pub fn rotate(&self, sid: u64, removed: &[usize], added: Mat) -> Result<(), ServeError> {
+        if !self.inner.sessions.lock().unwrap().contains_key(&sid) {
+            return Err(ServeError::UnknownSession(sid));
+        }
+        let (tx, rx) = channel();
+        let item = Pending::Rotate(RotateItem { sid, removed: removed.to_vec(), added, reply: tx });
+        if let Err(e) = self.inner.queue.try_push(item) {
+            self.inner.stats.lock().unwrap().rejected += 1;
+            return Err(e);
+        }
+        rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        self.inner.tenants.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The dispatcher: wait for work, gather one tick's worth, drain,
+/// process (rotations first, then coalesced solve panels). Exits when
+/// the queue is stopped and empty.
+fn dispatcher_loop(inner: &Inner) {
+    loop {
+        if inner.queue.wait_nonempty(Duration::from_millis(25)) {
+            gather_tick(inner);
+            let batch = inner.queue.drain();
+            process_batch(inner, batch);
+        } else if inner.queue.is_stopped() {
+            // Anything admitted before stop() still gets an answer.
+            let rest = inner.queue.drain();
+            process_batch(inner, rest);
+            break;
+        }
+    }
+}
+
+/// Sleep out the gathering window (stop-aware, chunked so shutdown
+/// never waits a full tick).
+fn gather_tick(inner: &Inner) {
+    if inner.opts.tick_ms == 0 {
+        return;
+    }
+    let deadline = Instant::now() + Duration::from_millis(inner.opts.tick_ms);
+    loop {
+        if inner.queue.is_stopped() {
+            return;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        thread::sleep((deadline - now).min(Duration::from_millis(5)));
+    }
+}
+
+fn process_batch(inner: &Inner, batch: Vec<Pending>) {
+    if batch.is_empty() {
+        return;
+    }
+    let mut solves = Vec::new();
+    let mut rotates = Vec::new();
+    for p in batch {
+        match p {
+            Pending::Solve(s) => solves.push(s),
+            Pending::Rotate(r) => rotates.push(r),
+        }
+    }
+    let mut sessions = inner.sessions.lock().unwrap();
+
+    // Rotations first, in arrival order: a tick's solves run against
+    // the fully-rotated window.
+    for r in rotates {
+        let res = match sessions.get_mut(&r.sid) {
+            None => Err(ServeError::UnknownSession(r.sid)),
+            Some(sess) => sess.fact.update_rows(&r.removed, &r.added).map_err(ServeError::from),
+        };
+        if res.is_ok() {
+            inner.stats.lock().unwrap().rotations += 1;
+        }
+        let _ = r.reply.send(res);
+    }
+
+    // Coalesced solve panels: one redamp + one solve_many per
+    // (session, λ) group.
+    for g in coalesce_solves(solves, inner.opts.coalesce) {
+        let k = g.rows.len();
+        let Some(sess) = sessions.get_mut(&g.sid) else {
+            for tx in g.replies {
+                let _ = tx.send(Err(ServeError::UnknownSession(g.sid)));
+            }
+            continue;
+        };
+        let m = sess.fact.dim();
+        let res = (|| -> Result<Mat, ServeError> {
+            if sess.fact.lambda().to_bits() != g.lambda.to_bits() {
+                sess.fact.redamp(g.lambda)?;
+            }
+            let mut data = Vec::with_capacity(k * m);
+            for row in &g.rows {
+                data.extend_from_slice(row);
+            }
+            Ok(sess.fact.solve_many(&Mat::from_vec(k, m, data))?)
+        })();
+        match res {
+            Ok(xs) => {
+                {
+                    let mut st = inner.stats.lock().unwrap();
+                    st.panels += 1;
+                    st.completed += k as u64;
+                    st.coalesced_rows += (k - 1) as u64;
+                    st.max_panel_rows = st.max_panel_rows.max(k);
+                }
+                for (i, tx) in g.replies.into_iter().enumerate() {
+                    let _ = tx.send(Ok(xs.row(i).to_vec()));
+                }
+            }
+            Err(e) => {
+                for tx in g.replies {
+                    let _ = tx.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::CholSolver;
+
+    fn quick_opts() -> ServeOptions {
+        ServeOptions { workers: 2, worker_queue_depth: 4, tick_ms: 1, ..ServeOptions::default() }
+    }
+
+    fn reference_solve(s: &Mat, v: &[f64], lambda: f64) -> Vec<f64> {
+        CholSolver::default().solve(s, v, lambda).unwrap()
+    }
+
+    #[test]
+    fn serve_round_trip_matches_direct_solver() {
+        let mut rng = Rng::seed_from(440);
+        let s = Mat::randn(8, 40, &mut rng);
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let server = Server::start(quick_opts()).unwrap();
+        let client = server.client().unwrap();
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        let x = client.solve(sid, 0.1, &v).unwrap();
+        let x_ref = reference_solve(&s, &v, 0.1);
+        for (a, b) in x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-9, "serve {a} vs direct {b}");
+        }
+        // λ-resweep through the serving path reuses the staging.
+        let x2 = client.solve(sid, 0.05, &v).unwrap();
+        let x2_ref = reference_solve(&s, &v, 0.05);
+        for (a, b) in x2.iter().zip(&x2_ref) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        client.close_session(sid).unwrap();
+        // Shutdown can only harvest worker counters once every client
+        // handle (each holds the server state alive) is gone.
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert!(!stats.worker_jobs.is_empty(), "shutdown must harvest worker counters");
+    }
+
+    #[test]
+    fn tenant_slots_are_capped_and_released() {
+        let opts = ServeOptions { tenants: 1, queue_depth: 4, ..quick_opts() };
+        let server = Server::start(opts).unwrap();
+        let c1 = server.client().unwrap();
+        match server.client() {
+            Err(ServeError::TenantLimit { tenants }) => assert_eq!(tenants, 1),
+            _ => panic!("expected TenantLimit"),
+        }
+        assert!(ServeError::TenantLimit { tenants: 1 }.is_retryable());
+        drop(c1);
+        let _c2 = server.client().unwrap();
+    }
+
+    #[test]
+    fn over_budget_sessions_are_rejected_with_hint() {
+        // Budget sized for one session but not two: the second admit
+        // must reject with the model's numbers, not OOM.
+        let need = memory_bytes(SolverKind::Chol, 8, 40);
+        let opts = ServeOptions {
+            budget_gb: (need as f64) * 1.5 / 1e9,
+            ..quick_opts()
+        };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(441);
+        let s = Mat::randn(8, 40, &mut rng);
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        // A second session exceeds the remaining budget.
+        match client.open_session(s.clone(), 0.1) {
+            Err(ServeError::OverBudget { required_bytes, budget_bytes, retry_after_ms }) => {
+                assert_eq!(required_bytes, need);
+                assert!(budget_bytes < need);
+                assert!(retry_after_ms >= 1);
+            }
+            other => panic!("expected OverBudget, got {:?}", other.map(|_| ())),
+        }
+        // Closing releases the charge; admission succeeds again.
+        client.close_session(sid).unwrap();
+        let sid2 = client.open_session(s, 0.1).unwrap();
+        client.close_session(sid2).unwrap();
+    }
+
+    #[test]
+    fn unknown_sessions_and_bad_rhs_are_typed_errors() {
+        let server = Server::start(quick_opts()).unwrap();
+        let client = server.client().unwrap();
+        match client.solve(99, 0.1, &[1.0; 4]) {
+            Err(ServeError::UnknownSession(99)) => {}
+            other => panic!("expected UnknownSession, got {:?}", other.map(|_| ())),
+        }
+        let mut rng = Rng::seed_from(442);
+        let sid = client.open_session(Mat::randn(6, 30, &mut rng), 0.1).unwrap();
+        match client.solve(sid, 0.1, &[1.0; 7]) {
+            Err(ServeError::Solver(SolveError::BadInput(msg))) => {
+                assert!(msg.contains("m = 30"), "{msg}");
+            }
+            other => panic!("expected BadInput, got {:?}", other.map(|_| ())),
+        }
+        assert!(client.solve(sid, -1.0, &[1.0; 30]).is_err());
+    }
+
+    #[test]
+    fn coalescing_batches_concurrent_tenants_into_fewer_panels() {
+        // Long tick so all async submissions land in one gathering
+        // window → one panel for the shared (session, λ) group.
+        let opts = ServeOptions { tick_ms: 60, ..quick_opts() };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(443);
+        let s = Mat::randn(8, 40, &mut rng);
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        let vs: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..40).map(|_| rng.normal()).collect()).collect();
+        let tickets: Vec<SolveTicket> =
+            vs.iter().map(|v| client.solve_async(sid, 0.1, v).unwrap()).collect();
+        for (t, v) in tickets.into_iter().zip(&vs) {
+            let x = t.wait().unwrap();
+            let x_ref = reference_solve(&s, v, 0.1);
+            for (a, b) in x.iter().zip(&x_ref) {
+                assert!((a - b).abs() < 1e-9, "coalesced answer must match per-RHS reference");
+            }
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 6);
+        assert!(
+            stats.panels < 6,
+            "6 same-(sid, λ) requests in one tick must coalesce, got {} panels",
+            stats.panels
+        );
+        assert_eq!(stats.coalesced_rows, 6 - stats.panels);
+    }
+
+    #[test]
+    fn rotation_through_the_server_matches_cold_factor() {
+        let mut rng = Rng::seed_from(444);
+        let s = Mat::randn(8, 40, &mut rng);
+        let server = Server::start(quick_opts()).unwrap();
+        let client = server.client().unwrap();
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        let added = Mat::randn(2, 40, &mut rng);
+        client.rotate(sid, &[0, 3], added.clone()).unwrap();
+        // Reference: hand-rotated window, cold factor.
+        let mut rot = Mat::zeros(8, 40);
+        let kept: Vec<usize> = (0..8).filter(|i| *i != 0 && *i != 3).collect();
+        for (r, &i) in kept.iter().enumerate() {
+            for j in 0..40 {
+                rot[(r, j)] = s[(i, j)];
+            }
+        }
+        for r in 0..2 {
+            for j in 0..40 {
+                rot[(6 + r, j)] = added[(r, j)];
+            }
+        }
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let x = client.solve(sid, 0.1, &v).unwrap();
+        let x_ref = reference_solve(&rot, &v, 0.1);
+        for (a, b) in x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-9, "rotated serve {a} vs cold {b}");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.rotations, 1);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_overloaded() {
+        // queue_depth = tenants = 1 and a long tick: the second async
+        // submit within one tick finds the queue full.
+        let opts = ServeOptions { tenants: 1, queue_depth: 1, tick_ms: 200, ..quick_opts() };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(445);
+        let sid = client.open_session(Mat::randn(6, 30, &mut rng), 0.1).unwrap();
+        let v = vec![1.0; 30];
+        let mut saw_overloaded = false;
+        let mut tickets = Vec::new();
+        for _ in 0..3 {
+            match client.solve_async(sid, 0.1, &v) {
+                Ok(t) => tickets.push(t),
+                Err(ServeError::Overloaded { retry_after_ms }) => {
+                    assert!(retry_after_ms >= 1);
+                    saw_overloaded = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(saw_overloaded, "depth-1 queue must reject within one tick");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = server.shutdown();
+        assert!(stats.rejected >= 1);
+    }
+
+    #[test]
+    fn shutdown_answers_queued_work_then_rejects() {
+        let opts = ServeOptions { tick_ms: 50, ..quick_opts() };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(446);
+        let s = Mat::randn(6, 30, &mut rng);
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let t = client.solve_async(sid, 0.1, &v).unwrap();
+        let stats = server.shutdown();
+        // The in-flight request was answered, not dropped.
+        let x = t.wait().unwrap();
+        let x_ref = reference_solve(&s, &v, 0.1);
+        for (a, b) in x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert_eq!(stats.completed, 1);
+        // Post-shutdown submissions are typed rejections.
+        match client.solve_async(sid, 0.1, &v) {
+            Err(ServeError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {:?}", other.map(|_| ()).err()),
+        }
+    }
+
+    #[test]
+    fn options_validate_rejects_bad_shapes() {
+        assert!(ServeOptions { tenants: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { tenants: 8, queue_depth: 4, ..ServeOptions::default() }
+            .validate()
+            .is_err());
+        assert!(ServeOptions { budget_gb: -1.0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { workers: 0, ..ServeOptions::default() }.validate().is_err());
+        ServeOptions::default().validate().unwrap();
+    }
+}

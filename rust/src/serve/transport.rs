@@ -1,0 +1,982 @@
+//! Pluggable shard-worker transport (PR 7).
+//!
+//! The coordinator's workers used to be reachable only as in-process
+//! threads behind `mpsc` channels. The serving layer abstracts that hop
+//! behind [`ShardTransport`] so the same leader-side Algorithm-1 phases
+//! (`coordinator/sharded.rs`) can drive workers that live **in-process**
+//! ([`ChannelTransport`], the original pool) or **out-of-process** over
+//! length-prefixed Unix-domain-socket frames ([`SocketTransport`]).
+//!
+//! Bit-identity contract: both transports funnel every request through
+//! the single `execute_request` compute path, the wire codec round-
+//! trips `f64` via `to_le_bytes` (bit-exact), and the leader collects
+//! replies in worker order — so a solve through the socket transport is
+//! **bit-identical** to the same solve through the channel transport at
+//! every thread count within an ISA tier (asserted in
+//! `rust/tests/serving.rs`).
+//!
+//! Requests are keyed by a **session id** (`sid`): each worker holds one
+//! column shard *per live session*, which is what lets the serving layer
+//! multiplex many tenants' sessions onto one worker set (the old pool
+//! held exactly one shard and therefore one live session).
+//!
+//! Error taxonomy (the satellite-2 fix): [`TransportError::Retryable`]
+//! is a transient infrastructure condition (full bounded queue — back
+//! off and resubmit), [`TransportError::Fatal`] means the worker is gone
+//! (dead thread, closed socket) and this transport will not heal. The
+//! sharded session maps these onto `SolveError::Backend { retryable }`
+//! without discarding its cached plan/Gram, so a failed call never
+//! poisons the session state.
+
+use crate::coordinator::pool::{Job, PoolError, WorkerPool};
+use crate::linalg::gemm::{gemm_nt_threaded, gemm_tn_threaded, syrk_parallel};
+use crate::linalg::{KernelConfig, Mat};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Transport-level failure, split by whether retrying the same call on
+/// the same transport can ever succeed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// Transient: the worker is alive but its bounded queue is full.
+    /// Back off and resubmit (the serving layer turns this into a
+    /// reject-with-retry-after).
+    Retryable(String),
+    /// The worker is gone — dead thread or closed connection. Retrying
+    /// on this transport fails forever; the owner must rebuild it.
+    Fatal(String),
+}
+
+impl TransportError {
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, TransportError::Retryable(_))
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Retryable(d) => write!(f, "transport busy (retryable): {d}"),
+            TransportError::Fatal(d) => write!(f, "transport failed: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Which transport backs a sharded solver — the `serve.transport`
+/// config key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process worker threads behind bounded `mpsc` channels.
+    Channels,
+    /// Out-of-process-style workers behind length-prefixed
+    /// Unix-domain-socket frames.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind, String> {
+        match s {
+            "channels" => Ok(TransportKind::Channels),
+            "socket" => Ok(TransportKind::Socket),
+            other => Err(format!(
+                "unknown transport '{other}' (expected one of: channels, socket)"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Channels => "channels",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One request to a shard worker. Every variant is answered by exactly
+/// one [`ShardResponse`] (except [`ShardRequest::Die`], which simulates
+/// a crash: the worker exits without replying and in-flight tickets
+/// surface [`TransportError::Fatal`]).
+#[derive(Debug, Clone)]
+pub enum ShardRequest {
+    /// Install session `sid`'s column shard (n × shard_width) on this
+    /// worker, replacing any previous shard for the same session.
+    SetShard { sid: u64, shard: Mat },
+    /// Free session `sid`'s shard (session teardown).
+    DropShard { sid: u64 },
+    /// Partial Gram `S_k S_kᵀ` for session `sid` (un-damped — the
+    /// leader adds λ when refactoring).
+    Gram { sid: u64 },
+    /// Batched partial matvec: `U_k = S_k·V_kᵀ` (n × k) for a k-RHS
+    /// column panel `V_k` (k × shard_width).
+    MatvecMany { sid: u64, v_k: Mat },
+    /// Batched Algorithm-1 line 4: `X_k = (V_k − (S_kᵀZ)ᵀ)/λ`
+    /// (k × shard_width).
+    ApplyMany { sid: u64, z: Mat, v_k: Mat, lambda: f64 },
+    /// Streaming rotation (PR-5 semantics, distributed): delete the
+    /// sorted window rows `removed` from the shard, append the rows of
+    /// `added_k` (k_add × shard_width), and reply the partial cross
+    /// panel `P_k = S_kept,k · A_kᵀ` (n_kept × k_add) the leader needs
+    /// to patch its cached Gram.
+    UpdateRows { sid: u64, removed: Vec<usize>, added_k: Mat },
+    /// Fault injection: sleep before the next request (straggler).
+    Stall { ms: u64 },
+    /// Liveness probe / FIFO barrier primitive.
+    Ping,
+    /// Fault injection: exit without replying (crash simulation).
+    Die,
+}
+
+/// A worker's answer to one [`ShardRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardResponse {
+    Ack,
+    Mat(Mat),
+    /// Semantic/protocol error on the worker (e.g. no shard installed
+    /// for the requested session) — always fatal, never retryable.
+    Err(String),
+    /// Processed-request counter, replied to the transport-internal
+    /// shutdown frame.
+    Count(u64),
+}
+
+/// The single compute path both transports execute per request — this
+/// sharing (plus the bit-exact wire codec and worker-ordered reply
+/// collection) is what makes channel and socket solves bit-identical.
+pub(crate) fn execute_request(
+    shards: &mut HashMap<u64, Mat>,
+    req: ShardRequest,
+    kernel: KernelConfig,
+) -> ShardResponse {
+    match req {
+        ShardRequest::SetShard { sid, shard } => {
+            shards.insert(sid, shard);
+            ShardResponse::Ack
+        }
+        ShardRequest::DropShard { sid } => {
+            shards.remove(&sid);
+            ShardResponse::Ack
+        }
+        ShardRequest::Gram { sid } => {
+            let Some(s) = shards.get(&sid) else {
+                return missing(sid);
+            };
+            ShardResponse::Mat(kernel.run(|| syrk_parallel(s, 0.0, kernel.threads)))
+        }
+        ShardRequest::MatvecMany { sid, v_k } => {
+            let Some(s) = shards.get(&sid) else {
+                return missing(sid);
+            };
+            // U_k = S_k·V_kᵀ (n × k): one panel GEMM on the worker's
+            // kernel configuration.
+            let mut u = Mat::zeros(s.rows(), v_k.rows());
+            kernel.run(|| gemm_nt_threaded(1.0, s, &v_k, 0.0, &mut u, kernel.threads));
+            ShardResponse::Mat(u)
+        }
+        ShardRequest::ApplyMany { sid, z, v_k, lambda } => {
+            let Some(s) = shards.get(&sid) else {
+                return missing(sid);
+            };
+            // T = S_kᵀ·Z (shard_width × k), then the Algorithm-1
+            // line-4 combination per right-hand side.
+            let (k, w) = v_k.shape();
+            let mut t = Mat::zeros(w, k);
+            kernel.run(|| gemm_tn_threaded(1.0, s, &z, 0.0, &mut t, kernel.threads));
+            let inv = 1.0 / lambda;
+            let mut x_k = Mat::zeros(k, w);
+            for r in 0..k {
+                let vrow = v_k.row(r);
+                let xrow = x_k.row_mut(r);
+                for j in 0..w {
+                    xrow[j] = inv * (vrow[j] - t[(j, r)]);
+                }
+            }
+            ShardResponse::Mat(x_k)
+        }
+        ShardRequest::UpdateRows { sid, removed, added_k } => {
+            let Some(s) = shards.get_mut(&sid) else {
+                return missing(sid);
+            };
+            let n = s.rows();
+            let w = s.cols();
+            if removed.windows(2).any(|p| p[0] >= p[1]) || removed.iter().any(|&r| r >= n) {
+                return ShardResponse::Err(format!(
+                    "update_rows: removal indices must be strictly increasing and < {n}"
+                ));
+            }
+            let k_add = added_k.rows();
+            if k_add > 0 && added_k.cols() != w {
+                return ShardResponse::Err(format!(
+                    "update_rows: added shard has {} cols, shard has {w}",
+                    added_k.cols()
+                ));
+            }
+            let mut rem = removed.iter().copied().peekable();
+            let kept: Vec<usize> = (0..n)
+                .filter(|&r| {
+                    if rem.peek() == Some(&r) {
+                        rem.next();
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect();
+            let n_kept = kept.len();
+            let mut rotated = Mat::zeros(n_kept + k_add, w);
+            for (dst, &src) in kept.iter().enumerate() {
+                rotated.row_mut(dst).copy_from_slice(s.row(src));
+            }
+            for r in 0..k_add {
+                rotated.row_mut(n_kept + r).copy_from_slice(added_k.row(r));
+            }
+            // Partial cross panel P_k = S_kept,k · A_kᵀ for the
+            // leader's bordered-Gram patch.
+            let mut p = Mat::zeros(n_kept, k_add);
+            if n_kept > 0 && k_add > 0 {
+                let kept_mat = rotated.slice_rows(0, n_kept);
+                kernel
+                    .run(|| gemm_nt_threaded(1.0, &kept_mat, &added_k, 0.0, &mut p, kernel.threads));
+            }
+            *s = rotated;
+            ShardResponse::Mat(p)
+        }
+        ShardRequest::Stall { ms } => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            ShardResponse::Ack
+        }
+        ShardRequest::Ping => ShardResponse::Ack,
+        // Die is intercepted by the transport loops before reaching the
+        // compute path; answering Ack here keeps the function total.
+        ShardRequest::Die => ShardResponse::Ack,
+    }
+}
+
+fn missing(sid: u64) -> ShardResponse {
+    ShardResponse::Err(format!("no shard installed for session {sid}"))
+}
+
+/// Handle for one in-flight request; [`ReplyTicket::wait`] blocks until
+/// the worker's response arrives. Tickets are demuxed per request, so
+/// multiple leader threads can have requests in flight on one worker
+/// concurrently without interleaving each other's replies.
+pub struct ReplyTicket {
+    rx: Receiver<ShardResponse>,
+    worker: usize,
+}
+
+impl ReplyTicket {
+    pub(crate) fn new(rx: Receiver<ShardResponse>, worker: usize) -> ReplyTicket {
+        ReplyTicket { rx, worker }
+    }
+
+    /// Block for the response. A closed reply channel means the worker
+    /// died (or its connection dropped) with the request in flight —
+    /// fatal for this transport.
+    pub fn wait(self) -> Result<ShardResponse, TransportError> {
+        self.rx.recv().map_err(|_| {
+            TransportError::Fatal(format!(
+                "worker {}: reply channel closed (worker or connection down)",
+                self.worker
+            ))
+        })
+    }
+}
+
+/// Leader-side view of a set of shard workers. Implementations must be
+/// safe to share across leader threads (`Send + Sync`): requests from
+/// different threads may interleave arbitrarily and are demuxed per
+/// [`ReplyTicket`].
+pub trait ShardTransport: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn workers(&self) -> usize;
+
+    /// Enqueue `req` on worker `w`; blocks while the worker's queue is
+    /// full (backpressure). Fails fatally when the worker is gone.
+    fn request(&self, w: usize, req: ShardRequest) -> Result<ReplyTicket, TransportError>;
+
+    /// Non-blocking [`ShardTransport::request`]: a full queue surfaces
+    /// as [`TransportError::Retryable`] instead of blocking.
+    fn try_request(&self, w: usize, req: ShardRequest) -> Result<ReplyTicket, TransportError>;
+
+    /// FIFO barrier: returns once every request enqueued before the
+    /// call has been processed on every worker.
+    fn flush(&self) -> Result<(), TransportError>;
+
+    /// Drain in-flight work, stop the workers, and return per-worker
+    /// processed-request counts.
+    fn shutdown(self: Box<Self>) -> Vec<u64>;
+}
+
+fn pool_err(e: PoolError) -> TransportError {
+    match e {
+        PoolError::QueueFull(w) => TransportError::Retryable(format!("worker {w}: queue full")),
+        PoolError::WorkerGone(w) => TransportError::Fatal(format!("worker {w}: disconnected")),
+    }
+}
+
+/// The original in-process transport: worker threads behind bounded
+/// `mpsc` channels ([`WorkerPool`]).
+pub struct ChannelTransport {
+    pool: WorkerPool,
+}
+
+impl ChannelTransport {
+    pub fn spawn(workers: usize, queue_depth: usize, kernel: KernelConfig) -> ChannelTransport {
+        ChannelTransport { pool: WorkerPool::spawn_with_kernel(workers, queue_depth, kernel) }
+    }
+}
+
+impl ShardTransport for ChannelTransport {
+    fn name(&self) -> &'static str {
+        "channels"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn request(&self, w: usize, req: ShardRequest) -> Result<ReplyTicket, TransportError> {
+        let (tx, rx) = channel();
+        self.pool.send(w, Job::Request { req, reply: tx }).map_err(pool_err)?;
+        Ok(ReplyTicket::new(rx, w))
+    }
+
+    fn try_request(&self, w: usize, req: ShardRequest) -> Result<ReplyTicket, TransportError> {
+        let (tx, rx) = channel();
+        self.pool.try_send(w, Job::Request { req, reply: tx }).map_err(pool_err)?;
+        Ok(ReplyTicket::new(rx, w))
+    }
+
+    fn flush(&self) -> Result<(), TransportError> {
+        self.pool.flush().map_err(pool_err)
+    }
+
+    fn shutdown(self: Box<Self>) -> Vec<u64> {
+        self.pool.shutdown()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Unix-domain-socket transport: length-prefixed frames, one socket per
+// worker, request-id demux on a per-connection reader thread.
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+pub use socket::SocketTransport;
+
+#[cfg(unix)]
+mod socket {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::net::{UnixListener, UnixStream};
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+
+    // ---- wire codec (little-endian, bit-exact f64 round trip) ----
+
+    fn put_u64(buf: &mut Vec<u8>, v: u64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f64(buf: &mut Vec<u8>, v: f64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_mat(buf: &mut Vec<u8>, m: &Mat) {
+        put_u64(buf, m.rows() as u64);
+        put_u64(buf, m.cols() as u64);
+        for &v in m.as_slice() {
+            put_f64(buf, v);
+        }
+    }
+
+    fn put_str(buf: &mut Vec<u8>, s: &str) {
+        put_u64(buf, s.len() as u64);
+        buf.extend_from_slice(s.as_bytes());
+    }
+
+    struct Cursor<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Cursor<'a> {
+        fn new(buf: &'a [u8]) -> Cursor<'a> {
+            Cursor { buf, pos: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+            if self.pos + n > self.buf.len() {
+                return Err("truncated frame".into());
+            }
+            let out = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(out)
+        }
+
+        fn u8(&mut self) -> Result<u8, String> {
+            Ok(self.take(1)?[0])
+        }
+
+        fn u64(&mut self) -> Result<u64, String> {
+            let b = self.take(8)?;
+            Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        }
+
+        fn f64(&mut self) -> Result<f64, String> {
+            let b = self.take(8)?;
+            Ok(f64::from_le_bytes(b.try_into().unwrap()))
+        }
+
+        fn mat(&mut self) -> Result<Mat, String> {
+            let rows = self.u64()? as usize;
+            let cols = self.u64()? as usize;
+            let mut data = Vec::with_capacity(rows * cols);
+            for _ in 0..rows * cols {
+                data.push(self.f64()?);
+            }
+            Ok(Mat::from_vec(rows, cols, data))
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            let len = self.u64()? as usize;
+            let b = self.take(len)?;
+            String::from_utf8(b.to_vec()).map_err(|_| "non-utf8 string".to_string())
+        }
+    }
+
+    const OP_SET_SHARD: u8 = 0;
+    const OP_DROP_SHARD: u8 = 1;
+    const OP_GRAM: u8 = 2;
+    const OP_MATVEC_MANY: u8 = 3;
+    const OP_APPLY_MANY: u8 = 4;
+    const OP_UPDATE_ROWS: u8 = 5;
+    const OP_STALL: u8 = 6;
+    const OP_PING: u8 = 7;
+    const OP_DIE: u8 = 8;
+    /// Transport-internal: drain and stop, replying the processed count.
+    const OP_SHUTDOWN: u8 = 9;
+
+    const TAG_ACK: u8 = 0;
+    const TAG_MAT: u8 = 1;
+    const TAG_ERR: u8 = 2;
+    const TAG_COUNT: u8 = 3;
+
+    fn encode_request(id: u64, req: &ShardRequest) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_u64(&mut b, id);
+        match req {
+            ShardRequest::SetShard { sid, shard } => {
+                b.push(OP_SET_SHARD);
+                put_u64(&mut b, *sid);
+                put_mat(&mut b, shard);
+            }
+            ShardRequest::DropShard { sid } => {
+                b.push(OP_DROP_SHARD);
+                put_u64(&mut b, *sid);
+            }
+            ShardRequest::Gram { sid } => {
+                b.push(OP_GRAM);
+                put_u64(&mut b, *sid);
+            }
+            ShardRequest::MatvecMany { sid, v_k } => {
+                b.push(OP_MATVEC_MANY);
+                put_u64(&mut b, *sid);
+                put_mat(&mut b, v_k);
+            }
+            ShardRequest::ApplyMany { sid, z, v_k, lambda } => {
+                b.push(OP_APPLY_MANY);
+                put_u64(&mut b, *sid);
+                put_mat(&mut b, z);
+                put_mat(&mut b, v_k);
+                put_f64(&mut b, *lambda);
+            }
+            ShardRequest::UpdateRows { sid, removed, added_k } => {
+                b.push(OP_UPDATE_ROWS);
+                put_u64(&mut b, *sid);
+                put_u64(&mut b, removed.len() as u64);
+                for &r in removed {
+                    put_u64(&mut b, r as u64);
+                }
+                put_mat(&mut b, added_k);
+            }
+            ShardRequest::Stall { ms } => {
+                b.push(OP_STALL);
+                put_u64(&mut b, *ms);
+            }
+            ShardRequest::Ping => b.push(OP_PING),
+            ShardRequest::Die => b.push(OP_DIE),
+        }
+        b
+    }
+
+    /// `None` = the transport-internal shutdown frame.
+    fn decode_request(body: &[u8]) -> Result<(u64, Option<ShardRequest>), String> {
+        let mut c = Cursor::new(body);
+        let id = c.u64()?;
+        let op = c.u8()?;
+        let req = match op {
+            OP_SET_SHARD => {
+                ShardRequest::SetShard { sid: c.u64()?, shard: c.mat()? }
+            }
+            OP_DROP_SHARD => ShardRequest::DropShard { sid: c.u64()? },
+            OP_GRAM => ShardRequest::Gram { sid: c.u64()? },
+            OP_MATVEC_MANY => ShardRequest::MatvecMany { sid: c.u64()?, v_k: c.mat()? },
+            OP_APPLY_MANY => {
+                let sid = c.u64()?;
+                let z = c.mat()?;
+                let v_k = c.mat()?;
+                let lambda = c.f64()?;
+                ShardRequest::ApplyMany { sid, z, v_k, lambda }
+            }
+            OP_UPDATE_ROWS => {
+                let sid = c.u64()?;
+                let len = c.u64()? as usize;
+                let mut removed = Vec::with_capacity(len);
+                for _ in 0..len {
+                    removed.push(c.u64()? as usize);
+                }
+                ShardRequest::UpdateRows { sid, removed, added_k: c.mat()? }
+            }
+            OP_STALL => ShardRequest::Stall { ms: c.u64()? },
+            OP_PING => ShardRequest::Ping,
+            OP_DIE => ShardRequest::Die,
+            OP_SHUTDOWN => return Ok((id, None)),
+            other => return Err(format!("unknown opcode {other}")),
+        };
+        Ok((id, Some(req)))
+    }
+
+    fn encode_response(id: u64, resp: &ShardResponse) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_u64(&mut b, id);
+        match resp {
+            ShardResponse::Ack => b.push(TAG_ACK),
+            ShardResponse::Mat(m) => {
+                b.push(TAG_MAT);
+                put_mat(&mut b, m);
+            }
+            ShardResponse::Err(e) => {
+                b.push(TAG_ERR);
+                put_str(&mut b, e);
+            }
+            ShardResponse::Count(n) => {
+                b.push(TAG_COUNT);
+                put_u64(&mut b, *n);
+            }
+        }
+        b
+    }
+
+    fn decode_response(body: &[u8]) -> Result<(u64, ShardResponse), String> {
+        let mut c = Cursor::new(body);
+        let id = c.u64()?;
+        let resp = match c.u8()? {
+            TAG_ACK => ShardResponse::Ack,
+            TAG_MAT => ShardResponse::Mat(c.mat()?),
+            TAG_ERR => ShardResponse::Err(c.string()?),
+            TAG_COUNT => ShardResponse::Count(c.u64()?),
+            other => return Err(format!("unknown response tag {other}")),
+        };
+        Ok((id, resp))
+    }
+
+    /// Frames larger than this are a protocol error, not a real payload.
+    const MAX_FRAME: u32 = 1 << 30;
+
+    fn write_frame(s: &mut UnixStream, body: &[u8]) -> std::io::Result<()> {
+        s.write_all(&(body.len() as u32).to_le_bytes())?;
+        s.write_all(body)
+    }
+
+    fn read_frame(s: &mut UnixStream) -> std::io::Result<Vec<u8>> {
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len)?;
+        let len = u32::from_le_bytes(len);
+        if len > MAX_FRAME {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame of {len} bytes exceeds limit"),
+            ));
+        }
+        let mut body = vec![0u8; len as usize];
+        s.read_exact(&mut body)?;
+        Ok(body)
+    }
+
+    /// Remote side: serve one connection until shutdown/crash/EOF.
+    /// Returns the processed-request count (every received frame,
+    /// including the shutdown frame — mirroring the channel pool's
+    /// accounting).
+    fn socket_worker(listener: UnixListener, kernel: KernelConfig) -> u64 {
+        let Ok((mut stream, _)) = listener.accept() else {
+            return 0;
+        };
+        let mut shards: HashMap<u64, Mat> = HashMap::new();
+        let mut processed: u64 = 0;
+        loop {
+            let body = match read_frame(&mut stream) {
+                Ok(b) => b,
+                Err(_) => break,
+            };
+            processed += 1;
+            let (id, req) = match decode_request(&body) {
+                Ok(x) => x,
+                Err(e) => {
+                    // Protocol error: answer, then drop the connection —
+                    // framing can no longer be trusted.
+                    let _ = write_frame(&mut stream, &encode_response(0, &ShardResponse::Err(e)));
+                    break;
+                }
+            };
+            match req {
+                None => {
+                    // Shutdown frame: reply the counter, then exit.
+                    let resp = ShardResponse::Count(processed);
+                    let _ = write_frame(&mut stream, &encode_response(id, &resp));
+                    break;
+                }
+                Some(ShardRequest::Die) => break, // crash: no reply
+                Some(r) => {
+                    let resp = execute_request(&mut shards, r, kernel);
+                    let _ = write_frame(&mut stream, &encode_response(id, &resp));
+                }
+            }
+        }
+        processed
+    }
+
+    /// Request-id → reply-sender demux table for one connection.
+    type PendingMap = Arc<Mutex<HashMap<u64, Sender<ShardResponse>>>>;
+
+    struct SocketLink {
+        write: Mutex<UnixStream>,
+        pending: PendingMap,
+        next_id: AtomicU64,
+        dead: Arc<AtomicBool>,
+        reader: Option<JoinHandle<()>>,
+        worker: Option<JoinHandle<u64>>,
+        path: PathBuf,
+    }
+
+    /// Length-prefixed Unix-domain-socket transport. Worker threads in
+    /// this build stand in for genuinely remote processes: everything
+    /// crossing the leader/worker boundary goes through the wire codec,
+    /// so pointing the connector at an external `dngd` worker process
+    /// is a deployment change, not a code change.
+    pub struct SocketTransport {
+        links: Vec<SocketLink>,
+        dir: PathBuf,
+    }
+
+    impl SocketTransport {
+        /// Bind one socket per worker under a unique temp directory and
+        /// spawn the serving threads.
+        pub fn spawn(workers: usize, kernel: KernelConfig) -> Result<SocketTransport, TransportError> {
+            assert!(workers > 0);
+            static COUNTER: AtomicU64 = AtomicU64::new(0);
+            let dir = std::env::temp_dir().join(format!(
+                "dngd-sock-{}-{}",
+                std::process::id(),
+                COUNTER.fetch_add(1, Ordering::Relaxed)
+            ));
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| TransportError::Fatal(format!("create socket dir: {e}")))?;
+            let mut links = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let path = dir.join(format!("worker{w}.sock"));
+                let listener = UnixListener::bind(&path)
+                    .map_err(|e| TransportError::Fatal(format!("bind {path:?}: {e}")))?;
+                let worker = std::thread::Builder::new()
+                    .name(format!("dngd-sock-worker-{w}"))
+                    .spawn(move || socket_worker(listener, kernel))
+                    .map_err(|e| TransportError::Fatal(format!("spawn worker: {e}")))?;
+                let stream = UnixStream::connect(&path)
+                    .map_err(|e| TransportError::Fatal(format!("connect {path:?}: {e}")))?;
+                let mut rstream = stream
+                    .try_clone()
+                    .map_err(|e| TransportError::Fatal(format!("clone stream: {e}")))?;
+                let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+                let dead = Arc::new(AtomicBool::new(false));
+                let (p2, d2) = (pending.clone(), dead.clone());
+                let reader = std::thread::Builder::new()
+                    .name(format!("dngd-sock-reader-{w}"))
+                    .spawn(move || {
+                        loop {
+                            let body = match read_frame(&mut rstream) {
+                                Ok(b) => b,
+                                Err(_) => break,
+                            };
+                            let Ok((id, resp)) = decode_response(&body) else { break };
+                            if let Some(tx) = p2.lock().unwrap().remove(&id) {
+                                let _ = tx.send(resp);
+                            }
+                        }
+                        // Connection down: mark dead and fail all
+                        // in-flight tickets (their senders drop here).
+                        d2.store(true, Ordering::Release);
+                        p2.lock().unwrap().clear();
+                    })
+                    .map_err(|e| TransportError::Fatal(format!("spawn reader: {e}")))?;
+                links.push(SocketLink {
+                    write: Mutex::new(stream),
+                    pending,
+                    next_id: AtomicU64::new(0),
+                    dead,
+                    reader: Some(reader),
+                    worker: Some(worker),
+                    path,
+                });
+            }
+            Ok(SocketTransport { links, dir })
+        }
+
+        fn send_frame(&self, w: usize, req: &ShardRequest) -> Result<ReplyTicket, TransportError> {
+            let link = &self.links[w];
+            if link.dead.load(Ordering::Acquire) {
+                return Err(TransportError::Fatal(format!("worker {w}: connection closed")));
+            }
+            let id = link.next_id.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = channel();
+            link.pending.lock().unwrap().insert(id, tx);
+            let frame = encode_request(id, req);
+            let res = {
+                let mut s = link.write.lock().unwrap();
+                write_frame(&mut s, &frame)
+            };
+            if let Err(e) = res {
+                link.pending.lock().unwrap().remove(&id);
+                link.dead.store(true, Ordering::Release);
+                return Err(TransportError::Fatal(format!("worker {w}: write failed: {e}")));
+            }
+            Ok(ReplyTicket::new(rx, w))
+        }
+    }
+
+    impl ShardTransport for SocketTransport {
+        fn name(&self) -> &'static str {
+            "socket"
+        }
+
+        fn workers(&self) -> usize {
+            self.links.len()
+        }
+
+        fn request(&self, w: usize, req: ShardRequest) -> Result<ReplyTicket, TransportError> {
+            self.send_frame(w, &req)
+        }
+
+        fn try_request(&self, w: usize, req: ShardRequest) -> Result<ReplyTicket, TransportError> {
+            // Socket back-pressure is the kernel's socket buffer; there
+            // is no app-level bounded queue to observe, so try == send.
+            self.send_frame(w, &req)
+        }
+
+        fn flush(&self) -> Result<(), TransportError> {
+            // Frames are served FIFO per connection, so a Ping round
+            // trip on every worker is a full barrier.
+            let mut tickets = Vec::with_capacity(self.links.len());
+            for w in 0..self.links.len() {
+                tickets.push(self.send_frame(w, &ShardRequest::Ping)?);
+            }
+            for t in tickets {
+                t.wait()?;
+            }
+            Ok(())
+        }
+
+        fn shutdown(mut self: Box<Self>) -> Vec<u64> {
+            let mut counts = Vec::with_capacity(self.links.len());
+            for w in 0..self.links.len() {
+                // Best-effort shutdown frame (no pending registration —
+                // the count comes back via the thread join, which also
+                // covers workers that already died).
+                let link = &self.links[w];
+                let mut frame = Vec::new();
+                put_u64(&mut frame, u64::MAX);
+                frame.push(OP_SHUTDOWN);
+                let _ = {
+                    let mut s = link.write.lock().unwrap();
+                    write_frame(&mut s, &frame)
+                };
+            }
+            for link in &mut self.links {
+                counts.push(link.worker.take().map(|j| j.join().unwrap_or(0)).unwrap_or(0));
+                if let Some(r) = link.reader.take() {
+                    let _ = r.join();
+                }
+                let _ = std::fs::remove_file(&link.path);
+            }
+            let _ = std::fs::remove_dir(&self.dir);
+            counts
+        }
+    }
+
+    impl Drop for SocketTransport {
+        fn drop(&mut self) {
+            // Shutdown not called (e.g. panic unwind): close write
+            // halves so worker threads see EOF and exit; detach joins.
+            for link in &mut self.links {
+                if let Ok(s) = link.write.lock() {
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
+                let _ = std::fs::remove_file(&link.path);
+            }
+            let _ = std::fs::remove_dir(&self.dir);
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::data::rng::Rng;
+
+        #[test]
+        fn codec_round_trips_requests_bit_exactly() {
+            let mut rng = Rng::seed_from(700);
+            let m = Mat::randn(3, 5, &mut rng);
+            let reqs = vec![
+                ShardRequest::SetShard { sid: 7, shard: m.clone() },
+                ShardRequest::DropShard { sid: 7 },
+                ShardRequest::Gram { sid: 1 },
+                ShardRequest::MatvecMany { sid: 2, v_k: m.clone() },
+                ShardRequest::ApplyMany {
+                    sid: 3,
+                    z: m.clone(),
+                    v_k: m.clone(),
+                    lambda: 0.125,
+                },
+                ShardRequest::UpdateRows { sid: 4, removed: vec![0, 2], added_k: m.clone() },
+                ShardRequest::Stall { ms: 9 },
+                ShardRequest::Ping,
+                ShardRequest::Die,
+            ];
+            for (i, req) in reqs.iter().enumerate() {
+                let body = encode_request(i as u64, req);
+                let (id, back) = decode_request(&body).unwrap();
+                assert_eq!(id, i as u64);
+                let back = back.expect("not a shutdown frame");
+                // Compare via re-encoding: Mat payloads must round-trip
+                // bit-exactly (f64 ↔ le_bytes is lossless).
+                assert_eq!(encode_request(i as u64, &back), body);
+            }
+        }
+
+        #[test]
+        fn codec_round_trips_responses() {
+            let mut rng = Rng::seed_from(701);
+            let m = Mat::randn(2, 4, &mut rng);
+            for resp in [
+                ShardResponse::Ack,
+                ShardResponse::Mat(m),
+                ShardResponse::Err("boom".into()),
+                ShardResponse::Count(42),
+            ] {
+                let body = encode_response(9, &resp);
+                let (id, back) = decode_response(&body).unwrap();
+                assert_eq!(id, 9);
+                assert_eq!(back, resp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn transports() -> Vec<Box<dyn ShardTransport>> {
+        let mut v: Vec<Box<dyn ShardTransport>> =
+            vec![Box::new(ChannelTransport::spawn(2, 4, KernelConfig::serial()))];
+        #[cfg(unix)]
+        v.push(Box::new(SocketTransport::spawn(2, KernelConfig::serial()).unwrap()));
+        v
+    }
+
+    #[test]
+    fn round_trip_gram_on_both_transports() {
+        let mut rng = Rng::seed_from(702);
+        let s = Mat::randn(4, 6, &mut rng);
+        let want = crate::linalg::gemm::syrk(&s, 0.0);
+        for t in transports() {
+            let ack = t.request(0, ShardRequest::SetShard { sid: 1, shard: s.clone() }).unwrap();
+            assert_eq!(ack.wait().unwrap(), ShardResponse::Ack);
+            let got = t.request(0, ShardRequest::Gram { sid: 1 }).unwrap().wait().unwrap();
+            match got {
+                ShardResponse::Mat(g) => assert_eq!(g, want, "{}", t.name()),
+                other => panic!("{}: unexpected response {other:?}", t.name()),
+            }
+            let counts = t.shutdown();
+            assert_eq!(counts.len(), 2);
+        }
+    }
+
+    #[test]
+    fn missing_session_is_a_semantic_error_not_a_hang() {
+        for t in transports() {
+            let resp = t.request(0, ShardRequest::Gram { sid: 99 }).unwrap().wait().unwrap();
+            assert!(matches!(resp, ShardResponse::Err(_)), "{}", t.name());
+            t.shutdown();
+        }
+    }
+
+    #[test]
+    fn die_fails_in_flight_and_future_requests_fatally() {
+        for t in transports() {
+            // The Die itself never replies; its ticket must error, not hang.
+            let dead = t.request(0, ShardRequest::Die).unwrap();
+            assert!(matches!(dead.wait(), Err(TransportError::Fatal(_))), "{}", t.name());
+            // Subsequent requests on the dead worker fail fatally too
+            // (possibly after one buffered write on the socket path).
+            let mut saw_fatal = false;
+            for _ in 0..4 {
+                match t.request(0, ShardRequest::Ping) {
+                    Err(TransportError::Fatal(_)) => {
+                        saw_fatal = true;
+                        break;
+                    }
+                    Err(TransportError::Retryable(_)) => {}
+                    Ok(ticket) => {
+                        if matches!(ticket.wait(), Err(TransportError::Fatal(_))) {
+                            saw_fatal = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            assert!(saw_fatal, "{}: dead worker never surfaced as fatal", t.name());
+            // The *other* worker is untouched.
+            let ok = t.request(1, ShardRequest::Ping).unwrap().wait().unwrap();
+            assert_eq!(ok, ShardResponse::Ack, "{}", t.name());
+            t.shutdown();
+        }
+    }
+
+    #[test]
+    fn flush_is_a_fifo_barrier() {
+        for t in transports() {
+            let slow = t.request(0, ShardRequest::Stall { ms: 30 }).unwrap();
+            let t0 = std::time::Instant::now();
+            t.flush().unwrap();
+            assert!(
+                t0.elapsed() >= std::time::Duration::from_millis(20),
+                "{}: flush returned before the stalled request drained",
+                t.name()
+            );
+            assert_eq!(slow.wait().unwrap(), ShardResponse::Ack);
+            t.shutdown();
+        }
+    }
+}

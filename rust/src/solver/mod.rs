@@ -117,6 +117,26 @@
 //! is the matching cost model and `dngd bench --streaming` →
 //! `BENCH_PR5.json` the measured table (EXPERIMENTS.md §Streaming).
 //!
+//! ## Serving (PR 7): many tenants, one backend
+//!
+//! The amortizations above are per-session; [`crate::serve`] applies
+//! them *across* concurrent consumers. A [`crate::serve::Server`]
+//! multiplexes tenant sessions onto one sharded backend behind the
+//! pluggable [`crate::serve::ShardTransport`] (in-process channels or
+//! out-of-process Unix sockets, bit-identical):
+//!
+//! | serving concern | policy |
+//! |-----------------|--------|
+//! | session lifecycle | connect (tenant slot) → `open_session` (score matrix → cached staging, charged against the memory model) or `attach` → `solve`/`rotate`× → `close_session` (releases shards + charge) |
+//! | coalescing | per dispatch tick (`serve.tick_ms`): rotations first in arrival order, then solves grouped by (session, λ-bits) into **one** `solve_many` panel each — k tenant requests cost one `MatvecMany`/TRSM/`ApplyMany` round instead of k |
+//! | admission | bounded everywhere: tenant slots (`serve.tenants`), dispatch queue (`serve.queue_depth` → `Overloaded` + retry-after), session memory ([`memory_bytes`] vs `serve.budget_gb` → `OverBudget`) — reject-with-hint, never OOM |
+//! | faults | transport faults surface as [`SolveError::Backend`] with an explicit retryable/fatal split; retryable faults leave the staged session intact |
+//!
+//! `dngd serve --self-test` round-trips both transports against the
+//! serial solver; `dngd bench --serving` → `BENCH_PR7.json` measures
+//! requests/sec and p50/p99 latency at 1/4/16 tenants, coalesced vs
+//! serial (EXPERIMENTS.md §Serving).
+//!
 //! Complex stochastic-reconfiguration variants (§3) live in
 //! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part
 //! Fisher `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`, with the same
@@ -161,6 +181,13 @@ pub enum SolveError {
     DidNotConverge { iterations: usize, residual: f64 },
     /// Structural precondition violated (e.g. RVB without `v = Sᵀf`).
     BadInput(String),
+    /// A distributed backend fault (PR 7): the shard transport lost a
+    /// worker or hit back-pressure. `retryable` splits transient
+    /// conditions (full worker mailbox — back off and resubmit) from
+    /// fatal ones (dead worker / closed connection). A retryable fault
+    /// never poisons the session: the staged state survives and the
+    /// same call can be retried.
+    Backend { retryable: bool, detail: String },
 }
 
 impl std::fmt::Display for SolveError {
@@ -177,6 +204,12 @@ impl std::fmt::Display for SolveError {
                 write!(f, "no convergence after {iterations} iterations (residual {residual:.3e})")
             }
             SolveError::BadInput(msg) => write!(f, "bad input: {msg}"),
+            SolveError::Backend { retryable: true, detail } => {
+                write!(f, "backend busy (retryable): {detail}")
+            }
+            SolveError::Backend { retryable: false, detail } => {
+                write!(f, "backend failed: {detail}")
+            }
         }
     }
 }

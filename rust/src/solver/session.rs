@@ -80,8 +80,13 @@ pub trait Factorization {
     /// `removed` (indices into the *current* window, in any order) and
     /// append the rows of `added` (k×m) at the end of the window.
     ///
-    /// Native for the `chol`/`rvb` sessions, which patch the cached
-    /// un-damped Gram with O(knm) panel products (zero full-Gram
+    /// Native for the `chol`/`rvb` sessions — and, since PR 7, for the
+    /// sharded window session
+    /// ([`crate::coordinator::ShardedWindowSession`], where each worker
+    /// rotates its own column shard and returns an O(n²) cross panel,
+    /// so the serving layer streams rotations without re-sharding).
+    /// These patch the cached un-damped Gram with O(knm) panel
+    /// products (zero full-Gram
     /// SYRKs) and rotate the Cholesky factor in O(kn²) per the
     /// [`chol_update`](crate::linalg::chol_update) primitives — a
     /// bordered-append breakdown falls back to an O(n³) refactor of

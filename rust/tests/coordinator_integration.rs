@@ -9,9 +9,9 @@ use dngd::coordinator::{ShardPlan, ShardedCholSolver, Trainer};
 use dngd::data::rng::Rng;
 use dngd::linalg::Mat;
 use dngd::metrics::MetricsLog;
+use dngd::serve::transport::{ShardRequest, ShardResponse};
 use dngd::solver::{residual_norm, CholSolver, DampedSolver};
 use std::sync::mpsc::channel;
-use std::time::Duration;
 
 #[test]
 fn distributed_solve_with_stragglers_still_correct() {
@@ -57,12 +57,14 @@ fn sharded_solve_many_matches_serial_session_in_one_round_trip() {
             }
         }
     }
-    // Per worker: SetShard + Gram + MatvecMany + ApplyMany + Shutdown
-    // = 5 jobs. The pre-fix default would have cost 3 + 2k = 13.
+    // Per worker: SetShard + Gram + MatvecMany + ApplyMany + DropShard
+    // (the factor's Drop, since PR 7 sessions are sid-keyed) + the
+    // shutdown drain's Flush barrier + Shutdown = 7 jobs. The pre-fix
+    // solve_many default would have cost 2 extra jobs per extra RHS.
     let counts = sharded.shutdown();
     assert_eq!(counts.len(), 3);
     assert!(
-        counts.iter().all(|&c| c == 5),
+        counts.iter().all(|&c| c == 7),
         "k-RHS solve must be one batched round-trip per phase, got job counts {counts:?}"
     );
 }
@@ -73,28 +75,47 @@ fn pool_survives_many_small_jobs_under_backpressure() {
     let pool = WorkerPool::spawn(3, 1); // minimal queue: max pressure
     let shard = Mat::randn(6, 10, &mut rng);
     for w in 0..3 {
-        pool.send(w, Job::SetShard(shard.clone())).unwrap();
-        pool.send(w, Job::Stall(Duration::from_millis(1))).unwrap();
+        let (tx, rx) = channel();
+        pool.send(w, Job::Request {
+            req: ShardRequest::SetShard { sid: 1, shard: shard.clone() },
+            reply: tx,
+        })
+        .unwrap();
+        assert_eq!(rx.recv().unwrap(), ShardResponse::Ack);
+        let (tx, _rx) = channel();
+        pool.send(w, Job::Request { req: ShardRequest::Stall { ms: 1 }, reply: tx }).unwrap();
     }
-    let (tx, rx) = channel();
     let expect = shard.matvec(&vec![1.0; 10]);
+    let mut waits = Vec::with_capacity(150);
     for _round in 0..50 {
         for w in 0..3 {
-            pool.send(w, Job::Matvec { v_k: vec![1.0; 10], reply: tx.clone() }).unwrap();
+            let (tx, rx) = channel();
+            pool.send(w, Job::Request {
+                req: ShardRequest::MatvecMany { sid: 1, v_k: Mat::from_vec(1, 10, vec![1.0; 10]) },
+                reply: tx,
+            })
+            .unwrap();
+            waits.push(rx);
         }
     }
-    drop(tx);
     let mut count = 0;
-    while let Ok((_, u)) = rx.recv() {
-        for (a, b) in u.iter().zip(&expect) {
-            assert!((a - b).abs() < 1e-12);
+    for rx in waits {
+        match rx.recv().unwrap() {
+            ShardResponse::Mat(u) => {
+                assert_eq!(u.shape(), (6, 1));
+                for (i, b) in expect.iter().enumerate() {
+                    assert!((u[(i, 0)] - b).abs() < 1e-12);
+                }
+            }
+            other => panic!("unexpected response {other:?}"),
         }
         count += 1;
     }
     assert_eq!(count, 150);
     let processed = pool.shutdown();
-    // Every worker processed SetShard + Stall + 50 matvecs + Shutdown.
-    assert!(processed.iter().all(|&c| c == 53), "{processed:?}");
+    // Every worker processed SetShard + Stall + 50 matvecs + the
+    // shutdown drain's Flush barrier + Shutdown.
+    assert!(processed.iter().all(|&c| c == 54), "{processed:?}");
 }
 
 #[test]

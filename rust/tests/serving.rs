@@ -1,0 +1,198 @@
+//! PR-7 serving-layer integration suite.
+//!
+//! The transport-equivalence contract: the in-process channel pool and
+//! the length-prefixed Unix-socket transport must produce **bit-identical**
+//! answers over the whole PR-2 session API — cold factor, λ-resweep,
+//! multi-RHS `solve_many`, and the PR-5 streaming `update_rows` rotation
+//! — at worker-kernel thread counts 1 and 8. Both transports route every
+//! request through the same `execute_request` compute path, so any bit
+//! divergence means the framing layer corrupted a payload.
+//!
+//! Fault injection: killing a worker must surface as the typed *fatal*
+//! [`SolveError::Backend`] (never a hang, never a retryable), on both
+//! transports.
+
+use dngd::coordinator::ShardedCholSolver;
+use dngd::data::rng::Rng;
+use dngd::linalg::{KernelConfig, Mat};
+use dngd::solver::{CholSolver, DampedSolver, Factorization, SolveError};
+use std::sync::Arc;
+
+#[cfg(unix)]
+use dngd::serve::SocketTransport;
+#[cfg(unix)]
+use dngd::serve::{ServeOptions, Server, TransportKind};
+
+/// Fixed workload inputs, regenerated identically for every transport
+/// and for the serial reference.
+fn workload_data() -> (Mat, Vec<f64>, Mat, Mat) {
+    let mut rng = Rng::seed_from(700);
+    let s = Mat::randn(10, 64, &mut rng);
+    let v: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+    let vs = Mat::randn(4, 64, &mut rng);
+    let added = Mat::randn(2, 64, &mut rng);
+    (s, v, vs, added)
+}
+
+/// The rotated window `update_rows(&[0, 2], added)` produces: kept rows
+/// in order, then the added rows appended at the bottom.
+fn rotate_reference(s: &Mat, removed: &[usize], added: &Mat) -> Mat {
+    let mut data = Vec::with_capacity((s.rows() - removed.len() + added.rows()) * s.cols());
+    for i in 0..s.rows() {
+        if !removed.contains(&i) {
+            data.extend_from_slice(s.row(i));
+        }
+    }
+    for r in 0..added.rows() {
+        data.extend_from_slice(added.row(r));
+    }
+    Mat::from_vec(s.rows() - removed.len() + added.rows(), s.cols(), data)
+}
+
+/// Run the full PR-2 + PR-5 session API through one sharded solver:
+/// cold factor → solve, λ-resweep → solve, 4-RHS panel, then an owned
+/// window session with a streaming rotation. Returns every answer in a
+/// fixed order for cross-transport comparison.
+fn run_session_workload(solver: &Arc<ShardedCholSolver>) -> Vec<Vec<f64>> {
+    let (s, v, vs, added) = workload_data();
+    let mut answers = Vec::new();
+    {
+        let mut fact = solver.factor(&s, 0.05).unwrap();
+        answers.push(fact.solve(&v).unwrap());
+        fact.redamp(0.005).unwrap();
+        answers.push(fact.solve(&v).unwrap());
+        let xs = fact.solve_many(&vs).unwrap();
+        for r in 0..xs.rows() {
+            answers.push(xs.row(r).to_vec());
+        }
+    }
+    let mut sess = ShardedCholSolver::window_session(solver, s);
+    sess.redamp(0.05).unwrap();
+    answers.push(sess.solve(&v).unwrap());
+    sess.update_rows(&[0, 2], &added).unwrap();
+    answers.push(sess.solve(&v).unwrap());
+    answers
+}
+
+/// Serial `chol` answers for the same workload, for the 1e-9 accuracy
+/// gate (bitwise equality is only asserted *between* transports — the
+/// distributed tree reduction reorders shard sums vs the serial Gram).
+fn serial_reference() -> Vec<Vec<f64>> {
+    let (s, v, vs, added) = workload_data();
+    let serial = CholSolver::default();
+    let mut refs = Vec::new();
+    refs.push(serial.solve(&s, &v, 0.05).unwrap());
+    refs.push(serial.solve(&s, &v, 0.005).unwrap());
+    for r in 0..vs.rows() {
+        refs.push(serial.solve(&s, vs.row(r), 0.005).unwrap());
+    }
+    refs.push(serial.solve(&s, &v, 0.05).unwrap());
+    let rotated = rotate_reference(&s, &[0, 2], &added);
+    refs.push(serial.solve(&rotated, &v, 0.05).unwrap());
+    refs
+}
+
+fn assert_close_to_serial(answers: &[Vec<f64>], label: &str) {
+    let refs = serial_reference();
+    assert_eq!(answers.len(), refs.len());
+    for (i, (x, x_ref)) in answers.iter().zip(&refs).enumerate() {
+        let scale = dngd::linalg::mat::norm2(x_ref).max(1.0);
+        for (a, b) in x.iter().zip(x_ref) {
+            assert!(
+                (a - b).abs() < 1e-9 * scale,
+                "{label}: answer {i} diverged from serial: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn transports_bit_identical_over_session_api() {
+    for &threads in &[1usize, 8] {
+        let kernel = KernelConfig::with_threads(threads);
+        let chan = Arc::new(ShardedCholSolver::with_kernel(3, 4, kernel));
+        let sock = Arc::new(ShardedCholSolver::with_transport(
+            Box::new(SocketTransport::spawn(3, kernel).expect("socket transport")),
+            kernel,
+        ));
+        let a = run_session_workload(&chan);
+        let b = run_session_workload(&sock);
+        assert_eq!(a.len(), b.len());
+        for (i, (xa, xb)) in a.iter().zip(&b).enumerate() {
+            for (p, q) in xa.iter().zip(xb) {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "threads={threads} answer {i}: channels {p} vs socket {q}"
+                );
+            }
+        }
+        assert_close_to_serial(&a, &format!("channels threads={threads}"));
+        assert_close_to_serial(&b, &format!("socket threads={threads}"));
+    }
+}
+
+#[test]
+fn channel_transport_killed_worker_is_fatal_typed_error() {
+    let mut rng = Rng::seed_from(701);
+    let solver = ShardedCholSolver::new(2, 4);
+    let s = Mat::randn(8, 32, &mut rng);
+    let v: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+    solver.kill_worker(0);
+    match solver.solve_distributed(&s, &v, 0.1) {
+        Err(SolveError::Backend { retryable, .. }) => {
+            assert!(!retryable, "a dead worker is not a retry-later condition")
+        }
+        other => panic!("expected fatal Backend error, got {other:?}"),
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_transport_killed_worker_is_fatal_typed_error() {
+    let mut rng = Rng::seed_from(702);
+    let kernel = KernelConfig::serial();
+    let solver = ShardedCholSolver::with_transport(
+        Box::new(SocketTransport::spawn(2, kernel).expect("socket transport")),
+        kernel,
+    );
+    let s = Mat::randn(8, 32, &mut rng);
+    let v: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+    solver.kill_worker(0);
+    match solver.solve_distributed(&s, &v, 0.1) {
+        Err(SolveError::Backend { retryable, .. }) => {
+            assert!(!retryable, "a dead worker is not a retry-later condition")
+        }
+        other => panic!("expected fatal Backend error, got {other:?}"),
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn server_round_trip_over_socket_transport() {
+    let mut rng = Rng::seed_from(703);
+    let s = Mat::randn(8, 40, &mut rng);
+    let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+    let x_ref = CholSolver::default().solve(&s, &v, 0.1).unwrap();
+
+    let opts = ServeOptions {
+        transport: TransportKind::Socket,
+        workers: 2,
+        tick_ms: 1,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(opts).expect("server start");
+    assert_eq!(server.transport_name(), "socket");
+    let client = server.client().unwrap();
+    let sid = client.open_session(s, 0.1).unwrap();
+    let x = client.solve(sid, 0.1, &v).unwrap();
+    let scale = dngd::linalg::mat::norm2(&x_ref).max(1.0);
+    for (a, b) in x.iter().zip(&x_ref) {
+        assert!((a - b).abs() < 1e-9 * scale);
+    }
+    client.close_session(sid).unwrap();
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 1);
+}
