@@ -1,17 +1,25 @@
-//! PR-7 serving bench (EXPERIMENTS.md §Serving): sustained multi-tenant
-//! traffic against the damped-solve server at 1/4/16 concurrent tenants,
-//! with coalesced dispatch (compatible RHS batched into one `solve_many`
-//! panel per tick) measured against the serial per-request baseline.
-//! Reports requests/sec plus client-observed p50/p99 latency, and gates
-//! every answer against the serial `chol` solver at 1e-9.
+//! PR-7/PR-8 serving benches (EXPERIMENTS.md §Serving, §Fault-tolerance):
 //!
-//! Emits the machine-readable `BENCH_PR7.json` file (path overridable
-//! via `DNGD_BENCH_JSON`; `DNGD_BENCH_QUICK=1` shrinks the shape for CI
-//! smoke runs). In full mode the harness *asserts* the PR-7 acceptance
-//! bar: coalesced dispatch at 16 tenants sustains ≥2× the requests/sec
-//! of serial dispatch without degrading p99 (quick mode skips it — at
-//! tiny shapes the dispatch tick dominates the panel GEMM — but runs
-//! the correctness gate in every mode).
+//! 1. **Serving** — sustained multi-tenant traffic against the
+//!    damped-solve server at 1/4/16 concurrent tenants, with coalesced
+//!    dispatch (compatible RHS batched into one `solve_many` panel per
+//!    tick) measured against the serial per-request baseline. Reports
+//!    requests/sec plus client-observed p50/p99 latency, and gates every
+//!    answer against the serial `chol` solver at 1e-9. Emits
+//!    `BENCH_PR7.json`.
+//! 2. **Recovery** — a single-tenant stream with a worker killed every
+//!    ~100 requests (~20 in quick mode); the p99 gap vs the fault-free
+//!    baseline is the client-visible cost of supervisor respawn +
+//!    session re-materialization. Emits `BENCH_PR8.json` (path
+//!    overridable via `DNGD_BENCH_JSON_RECOVERY`).
+//!
+//! `DNGD_BENCH_JSON` overrides the PR-7 path; `DNGD_BENCH_QUICK=1`
+//! shrinks the shapes for CI smoke runs. In full mode the harness
+//! *asserts* both acceptance bars: coalesced dispatch at 16 tenants
+//! sustains ≥2× the requests/sec of serial dispatch without degrading
+//! p99, and every injected kill recovers through the distributed
+//! replay/refactor paths (zero leader-local fallbacks). Quick mode
+//! skips the timing bars but runs every correctness gate.
 //!
 //! ```text
 //! cargo bench --bench serving
@@ -24,4 +32,8 @@ fn main() {
     let json = std::env::var("DNGD_BENCH_JSON").unwrap_or_else(|_| "BENCH_PR7.json".to_string());
     dngd::bench_tables::serving_bench_report(quick, Some(Path::new(&json)), !quick)
         .expect("write serving bench json");
+    let json8 = std::env::var("DNGD_BENCH_JSON_RECOVERY")
+        .unwrap_or_else(|_| "BENCH_PR8.json".to_string());
+    dngd::bench_tables::recovery_bench_report(quick, Some(Path::new(&json8)), !quick)
+        .expect("write recovery bench json");
 }

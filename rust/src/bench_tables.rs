@@ -1674,3 +1674,202 @@ pub fn serving_bench_report(
     }
     Ok(())
 }
+
+/// One row of the PR-8 recovery benchmark: a sustained single-tenant
+/// request stream, either fault-free (the baseline) or with a worker
+/// killed every `kill_every` requests, forcing the supervisor to
+/// respawn it and re-materialize the session mid-stream.
+#[derive(Debug, Clone)]
+pub struct RecoveryBenchRow {
+    pub faulted: bool,
+    pub requests: usize,
+    /// Kills injected during the run (0 on the baseline row).
+    pub kills: u64,
+    pub rps: f64,
+    /// Client-observed latency percentiles; the faulted p99 absorbs the
+    /// respawn + replay cost of the killed requests.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub worker_respawns: u64,
+    pub session_replays: u64,
+    pub session_refactors: u64,
+    pub local_fallbacks: u64,
+}
+
+/// The PR-8 recovery benchmark: one tenant streams blocking solves
+/// against a cached session; the faulted run kills a rotating worker
+/// every `kill_every` requests (~1 per 100 in full mode, ~1 per 20 in
+/// quick mode so a short run still sees several). Every answer —
+/// including the ones that rode through a recovery — is gated against
+/// the serial solver at 1e-9, and every kill must show up as exactly
+/// one respawn, so the latency numbers can't be bought with wrong or
+/// dropped answers.
+pub fn recovery_bench(quick: bool) -> Vec<RecoveryBenchRow> {
+    use crate::serve::{ServeOptions, Server};
+    use std::time::Instant;
+
+    let (n, m, requests, kill_every) =
+        if quick { (48usize, 512usize, 100usize, 20usize) } else { (128, 2048, 1000, 100) };
+    let workers = 2usize;
+    let lambda = 1e-3;
+    let mut rng = Rng::seed_from(78);
+    let s = Mat::randn(n, m, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let x_ref = CholSolver::default().solve(&s, &v, lambda).expect("reference solve");
+    let scale = crate::linalg::mat::norm2(&x_ref).max(1.0);
+
+    let mut rows = Vec::new();
+    for &faulted in &[false, true] {
+        let opts = ServeOptions {
+            workers,
+            tick_ms: 0,
+            coalesce: false,
+            snapshot_every: 8,
+            ..ServeOptions::default()
+        };
+        let server = Server::start(opts).expect("server start");
+        let client = server.client().expect("client");
+        let sid = client.open_session(s.clone(), lambda).expect("open session");
+        let mut kills = 0u64;
+        let started = Instant::now();
+        let mut lats = Vec::with_capacity(requests);
+        for i in 0..requests {
+            if faulted && i % kill_every == kill_every - 1 {
+                server.inject_kill(i % workers);
+                kills += 1;
+            }
+            let t0 = Instant::now();
+            let x = client.solve(sid, lambda, &v).expect("recovery bench solve");
+            lats.push(t0.elapsed().as_secs_f64() * 1e3);
+            for (a, b) in x.iter().zip(&x_ref) {
+                assert!(
+                    (a - b).abs() < 1e-9 * scale,
+                    "recovered answer diverged from serial: {a} vs {b}"
+                );
+            }
+        }
+        let elapsed = started.elapsed().as_secs_f64();
+        client.close_session(sid).expect("close session");
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, requests as u64, "every request must be answered");
+        assert_eq!(stats.worker_respawns, kills, "every kill must be healed exactly once");
+        let summary = crate::metrics::Summary::from_samples(&lats);
+        rows.push(RecoveryBenchRow {
+            faulted,
+            requests,
+            kills,
+            rps: requests as f64 / elapsed.max(1e-9),
+            p50_ms: summary.median,
+            p99_ms: summary.p99,
+            worker_respawns: stats.worker_respawns,
+            session_replays: stats.session_replays,
+            session_refactors: stats.session_refactors,
+            local_fallbacks: stats.local_fallbacks,
+        });
+    }
+    rows
+}
+
+/// Render recovery-bench rows as the `BENCH_PR8.json` payload
+/// (hand-rolled JSON — the build is offline, no serde).
+pub fn recovery_bench_json(rows: &[RecoveryBenchRow], quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 8,\n");
+    out.push_str("  \"bench\": \"recovery\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(
+        "  \"unit\": {\"rps\": \"requests/second\", \"p50_ms\": \"milliseconds\", \
+         \"p99_ms\": \"milliseconds\"},\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"faulted\": {}, \"requests\": {}, \"kills\": {}, \"rps\": {:.1}, \
+                 \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"worker_respawns\": {}, \
+                 \"session_replays\": {}, \"session_refactors\": {}, \"local_fallbacks\": {}}}",
+                r.faulted,
+                r.requests,
+                r.kills,
+                r.rps,
+                r.p50_ms,
+                r.p99_ms,
+                r.worker_respawns,
+                r.session_replays,
+                r.session_refactors,
+                r.local_fallbacks
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the recovery benchmark, print the table, optionally write
+/// `BENCH_PR8.json`. `strict` enforces the PR-8 acceptance bar — every
+/// kill recovered through the *distributed* paths (replay or refactor,
+/// zero leader-local fallbacks: the fallback is for deadline pressure,
+/// not routine heals) — enabled by the full-mode `cargo bench --bench
+/// serving` harness. Correctness and respawn-accounting are asserted
+/// inside [`recovery_bench`] in both modes.
+pub fn recovery_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    let rows = recovery_bench(quick);
+    println!(
+        "{:>9} | {:>8} | {:>5} | {:>9} | {:>9} | {:>9} | {:>8} | {:>7} | {:>9} | {:>9}",
+        "run", "requests", "kills", "req/s", "p50", "p99", "respawns", "replays", "refactors",
+        "fallbacks"
+    );
+    for r in &rows {
+        println!(
+            "{:>9} | {:>8} | {:>5} | {:>9.1} | {:>7.2}ms | {:>7.2}ms | {:>8} | {:>7} | {:>9} | \
+             {:>9}",
+            if r.faulted { "faulted" } else { "baseline" },
+            r.requests,
+            r.kills,
+            r.rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.worker_respawns,
+            r.session_replays,
+            r.session_refactors,
+            r.local_fallbacks
+        );
+    }
+    println!(
+        "\nfaulted = one worker killed per {} requests; the p99 gap vs baseline is the \
+         client-visible recovery cost (respawn + snapshot replay + refactor). Every answer is \
+         gated at 1e-9 against the serial solver.",
+        if quick { 20 } else { 100 }
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, recovery_bench_json(&rows, quick))?;
+        println!("recovery bench table written to {}", path.display());
+    }
+    if strict {
+        let faulted = rows.iter().find(|r| r.faulted).expect("faulted row");
+        assert!(
+            faulted.session_replays + faulted.session_refactors >= faulted.kills,
+            "PR-8 acceptance: {} kills need ≥ {} distributed recoveries, saw replays {} + \
+             refactors {}",
+            faulted.kills,
+            faulted.kills,
+            faulted.session_replays,
+            faulted.session_refactors
+        );
+        assert_eq!(
+            faulted.local_fallbacks, 0,
+            "PR-8 acceptance: routine heals must stay distributed (leader-local fallback is \
+             reserved for deadline pressure)"
+        );
+        println!("acceptance: every kill recovered via distributed replay/refactor ✓");
+    }
+    Ok(())
+}

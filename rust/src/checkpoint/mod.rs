@@ -70,6 +70,44 @@ impl Checkpoint {
         self.tensors.get(name).map(|v| v.as_slice())
     }
 
+    /// Store a matrix as one tensor: `[rows, cols, row-major data…]`.
+    /// The shape header rides inside the f64 stream (exact for any
+    /// realistic dimension — f64 integers are exact below 2⁵³), so the
+    /// container format stays flat-tensor-only.
+    pub fn insert_mat(&mut self, name: &str, m: &crate::linalg::Mat) {
+        let mut data = Vec::with_capacity(2 + m.rows() * m.cols());
+        data.push(m.rows() as f64);
+        data.push(m.cols() as f64);
+        data.extend_from_slice(m.as_slice());
+        self.insert(name, data);
+    }
+
+    /// Read back a matrix stored by [`Checkpoint::insert_mat`],
+    /// validating the embedded shape header against the payload length.
+    pub fn get_mat(&self, name: &str) -> Result<crate::linalg::Mat, CheckpointError> {
+        let data = self
+            .get(name)
+            .ok_or_else(|| CheckpointError::Corrupt(format!("missing tensor {name:?}")))?;
+        if data.len() < 2 {
+            return Err(CheckpointError::Corrupt(format!("tensor {name:?} has no shape header")));
+        }
+        let (rows, cols) = (data[0], data[1]);
+        if rows < 0.0 || cols < 0.0 || rows.fract() != 0.0 || cols.fract() != 0.0 {
+            return Err(CheckpointError::Corrupt(format!(
+                "tensor {name:?} has a non-integral shape header ({rows}, {cols})"
+            )));
+        }
+        let (rows, cols) = (rows as usize, cols as usize);
+        if data.len() - 2 != rows * cols {
+            return Err(CheckpointError::Corrupt(format!(
+                "tensor {name:?}: shape ({rows}, {cols}) wants {} values, payload has {}",
+                rows * cols,
+                data.len() - 2
+            )));
+        }
+        Ok(crate::linalg::Mat::from_vec(rows, cols, data[2..].to_vec()))
+    }
+
     /// Serialize to bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf = Vec::new();
@@ -211,5 +249,34 @@ mod tests {
         let ck = Checkpoint::new();
         let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
         assert!(back.tensors.is_empty());
+    }
+
+    #[test]
+    fn mat_roundtrip_is_bit_exact() {
+        use crate::data::rng::Rng;
+        let mut rng = Rng::seed_from(808);
+        let m = crate::linalg::Mat::randn(5, 7, &mut rng);
+        let mut ck = Checkpoint::new();
+        ck.insert_mat("window", &m);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let got = back.get_mat("window").unwrap();
+        assert_eq!(got.shape(), (5, 7));
+        for (a, b) in got.as_slice().iter().zip(m.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Degenerate shapes survive too.
+        let empty = crate::linalg::Mat::zeros(0, 4);
+        ck.insert_mat("empty", &empty);
+        assert_eq!(ck.get_mat("empty").unwrap().shape(), (0, 4));
+    }
+
+    #[test]
+    fn mat_shape_mismatch_is_typed_corruption() {
+        let mut ck = Checkpoint::new();
+        ck.insert("bad", vec![2.0, 3.0, 1.0]); // claims 2×3, has 1 value
+        assert!(matches!(ck.get_mat("bad"), Err(CheckpointError::Corrupt(_))));
+        ck.insert("frac", vec![1.5, 2.0, 1.0, 2.0, 3.0]);
+        assert!(matches!(ck.get_mat("frac"), Err(CheckpointError::Corrupt(_))));
+        assert!(matches!(ck.get_mat("absent"), Err(CheckpointError::Corrupt(_))));
     }
 }

@@ -9,6 +9,7 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    Config, CoordinatorConfig, ModelConfig, ServeConfig, SolverConfig, TrainConfig, VmcConfig,
+    ChaosConfig, Config, CoordinatorConfig, ModelConfig, ServeConfig, SolverConfig, TrainConfig,
+    VmcConfig,
 };
 pub use toml::{parse_toml, TomlError, TomlValue};

@@ -216,6 +216,21 @@ pub struct ServeConfig {
     /// Shard worker transport: `"channels"` (in-process) or `"socket"`
     /// (out-of-process Unix-domain sockets).
     pub transport: String,
+    /// Per-request deadline in ms: queueing + dispatch + retries +
+    /// recovery, after which the request gets a typed
+    /// `DeadlineExceeded` (PR 8).
+    pub deadline_ms: u64,
+    /// Cap on transient-fault retries per dispatched request.
+    pub max_retries: u32,
+    /// Session-record snapshot cadence: refresh the window snapshot and
+    /// clear the rotation log every this many rotations.
+    pub snapshot_every: usize,
+    /// Worker supervision: probe + respawn dead workers and
+    /// re-materialize their sessions. Off restores PR-7 behavior
+    /// (fatal faults propagate as typed errors).
+    pub supervise: bool,
+    /// Directory for durable session records (empty = in-memory only).
+    pub record_dir: String,
 }
 
 impl Default for ServeConfig {
@@ -226,7 +241,33 @@ impl Default for ServeConfig {
             tick_ms: 2,
             budget_gb: 0.0,
             transport: "channels".into(),
+            deadline_ms: 5_000,
+            max_retries: 4,
+            snapshot_every: 16,
+            supervise: true,
+            record_dir: String::new(),
         }
+    }
+}
+
+/// Chaos-harness settings (PR 8) — consumed by `dngd chaos`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Fault schedule: `"all"` or one of the named schedules
+    /// (`kill-during-factor`, `stall-during-panel`, `corrupt-frame`,
+    /// `respawn-storm`).
+    pub schedule: String,
+    /// Workload seed (the chaos workload is fully deterministic).
+    pub seed: u64,
+    /// Solve requests per schedule run.
+    pub requests: usize,
+    /// Kill cadence for the respawn-storm schedule.
+    pub kill_every: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig { schedule: "all".into(), seed: 4242, requests: 40, kill_every: 10 }
     }
 }
 
@@ -239,6 +280,7 @@ pub struct Config {
     pub coordinator: CoordinatorConfig,
     pub vmc: VmcConfig,
     pub serve: ServeConfig,
+    pub chaos: ChaosConfig,
 }
 
 impl Config {
@@ -350,6 +392,19 @@ impl Config {
         get_u64(doc, "serve.tick_ms", &mut cfg.serve.tick_ms)?;
         get_f64(doc, "serve.budget_gb", &mut cfg.serve.budget_gb)?;
         get_string(doc, "serve.transport", &mut cfg.serve.transport)?;
+        get_u64(doc, "serve.deadline_ms", &mut cfg.serve.deadline_ms)?;
+        let mut max_retries = u64::from(cfg.serve.max_retries);
+        get_u64(doc, "serve.max_retries", &mut max_retries)?;
+        cfg.serve.max_retries = u32::try_from(max_retries)
+            .map_err(|_| format!("serve.max_retries ({max_retries}) is out of range"))?;
+        get_usize(doc, "serve.snapshot_every", &mut cfg.serve.snapshot_every)?;
+        get_bool(doc, "serve.supervise", &mut cfg.serve.supervise)?;
+        get_string(doc, "serve.record_dir", &mut cfg.serve.record_dir)?;
+
+        get_string(doc, "chaos.schedule", &mut cfg.chaos.schedule)?;
+        get_u64(doc, "chaos.seed", &mut cfg.chaos.seed)?;
+        get_usize(doc, "chaos.requests", &mut cfg.chaos.requests)?;
+        get_usize(doc, "chaos.kill_every", &mut cfg.chaos.kill_every)?;
 
         cfg.validate()?;
         Ok(cfg)
@@ -414,6 +469,22 @@ impl Config {
         }
         crate::serve::TransportKind::parse(&self.serve.transport)
             .map_err(|e| format!("serve.transport: {e}"))?;
+        if self.serve.deadline_ms == 0 || self.serve.deadline_ms > 600_000 {
+            return Err("serve.deadline_ms must be in 1..=600000".into());
+        }
+        if self.serve.snapshot_every == 0 {
+            return Err("serve.snapshot_every must be ≥ 1".into());
+        }
+        if self.chaos.schedule != "all" {
+            crate::serve::FaultSchedule::parse(&self.chaos.schedule)
+                .map_err(|e| format!("chaos.schedule: {e}"))?;
+        }
+        if self.chaos.requests == 0 {
+            return Err("chaos.requests must be ≥ 1".into());
+        }
+        if self.chaos.kill_every == 0 {
+            return Err("chaos.kill_every must be ≥ 1".into());
+        }
         Ok(())
     }
 }
@@ -469,6 +540,15 @@ const KNOWN_KEYS: &[&str] = &[
     "serve.tick_ms",
     "serve.budget_gb",
     "serve.transport",
+    "serve.deadline_ms",
+    "serve.max_retries",
+    "serve.snapshot_every",
+    "serve.supervise",
+    "serve.record_dir",
+    "chaos.schedule",
+    "chaos.seed",
+    "chaos.requests",
+    "chaos.kill_every",
 ];
 
 fn get_f64(doc: &TomlDoc, key: &str, out: &mut f64) -> Result<(), String> {
@@ -749,5 +829,49 @@ variant = "real_part"
         assert!(Config::from_toml_str("[serve]\ntenants = 0\n", &[]).is_err());
         assert!(Config::from_toml_str("[serve]\nbudget_gb = -1.0\n", &[]).is_err());
         assert!(Config::from_toml_str("[serve]\ntick_ms = 999999\n", &[]).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_validate() {
+        let cfg = Config::from_toml_str(
+            "[serve]\ndeadline_ms = 250\nmax_retries = 2\nsnapshot_every = 8\n\
+             supervise = false\nrecord_dir = \"/tmp/records\"\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.deadline_ms, 250);
+        assert_eq!(cfg.serve.max_retries, 2);
+        assert_eq!(cfg.serve.snapshot_every, 8);
+        assert!(!cfg.serve.supervise);
+        assert_eq!(cfg.serve.record_dir, "/tmp/records");
+        // The --set override path reaches the same keys.
+        let cfg = Config::from_toml_str("", &["serve.deadline_ms=99".into()]).unwrap();
+        assert_eq!(cfg.serve.deadline_ms, 99);
+        // Ranges are enforced where the config is parsed.
+        assert!(Config::from_toml_str("[serve]\ndeadline_ms = 0\n", &[]).is_err());
+        assert!(Config::from_toml_str("[serve]\ndeadline_ms = 600001\n", &[]).is_err());
+        assert!(Config::from_toml_str("[serve]\nsnapshot_every = 0\n", &[]).is_err());
+    }
+
+    #[test]
+    fn chaos_keys_parse_and_validate() {
+        let cfg = Config::from_toml_str(
+            "[chaos]\nschedule = \"respawn-storm\"\nseed = 7\nrequests = 25\nkill_every = 5\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos.schedule, "respawn-storm");
+        assert_eq!(cfg.chaos.seed, 7);
+        assert_eq!(cfg.chaos.requests, 25);
+        assert_eq!(cfg.chaos.kill_every, 5);
+        // Defaults run every schedule.
+        let cfg = Config::from_toml_str("", &[]).unwrap();
+        assert_eq!(cfg.chaos, ChaosConfig::default());
+        assert_eq!(cfg.chaos.schedule, "all");
+        // Schedule names go through the one shared parser.
+        let err = Config::from_toml_str("[chaos]\nschedule = \"segfault\"\n", &[]).unwrap_err();
+        assert!(err.contains("chaos.schedule"), "{err}");
+        assert!(Config::from_toml_str("[chaos]\nrequests = 0\n", &[]).is_err());
+        assert!(Config::from_toml_str("[chaos]\nkill_every = 0\n", &[]).is_err());
     }
 }

@@ -19,6 +19,7 @@ use crate::linalg::{KernelConfig, Mat};
 use crate::serve::transport::{execute_request, ShardRequest, ShardResponse};
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Mutex, PoisonError, RwLock};
 
 /// Messages the leader sends to a worker.
 pub enum Job {
@@ -36,8 +37,9 @@ pub enum Job {
 /// decision rides on this).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolError {
-    /// The worker thread is gone — its mailbox is closed. Fatal: the
-    /// pool does not respawn workers.
+    /// The worker thread is gone — its mailbox is closed. Fatal for the
+    /// request in flight; [`WorkerPool::respawn`] can replace the thread
+    /// (with an **empty** shard map — sessions must be re-staged).
     WorkerGone(usize),
     /// The worker's bounded mailbox is full (only from
     /// [`WorkerPool::try_send`]). Retryable: back off and resubmit.
@@ -68,7 +70,15 @@ struct WorkerHandle {
 
 /// Leader-side pool handle.
 pub struct WorkerPool {
-    workers: Vec<WorkerHandle>,
+    /// Per-slot handle behind an `RwLock`: requests take a read lock,
+    /// [`WorkerPool::respawn`] swaps the handle under a write lock.
+    workers: Vec<RwLock<WorkerHandle>>,
+    queue_depth: usize,
+    kernel: KernelConfig,
+    /// Join handles of replaced (dead) incarnations; their processed
+    /// counts are folded into the owning slot at drain time so the
+    /// shutdown accounting stays cumulative per worker index.
+    graveyard: Mutex<Vec<(usize, std::thread::JoinHandle<u64>)>>,
 }
 
 impl WorkerPool {
@@ -88,16 +98,18 @@ impl WorkerPool {
     ) -> WorkerPool {
         assert!(workers > 0 && queue_depth > 0);
         let handles = (0..workers)
-            .map(|id| {
-                let (tx, rx) = sync_channel::<Job>(queue_depth);
-                let join = std::thread::Builder::new()
-                    .name(format!("dngd-worker-{id}"))
-                    .spawn(move || worker_loop(rx, kernel))
-                    .expect("spawn worker");
-                WorkerHandle { tx, join: Some(join) }
-            })
+            .map(|id| RwLock::new(Self::spawn_worker(id, queue_depth, kernel)))
             .collect();
-        WorkerPool { workers: handles }
+        WorkerPool { workers: handles, queue_depth, kernel, graveyard: Mutex::new(Vec::new()) }
+    }
+
+    fn spawn_worker(id: usize, queue_depth: usize, kernel: KernelConfig) -> WorkerHandle {
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
+        let join = std::thread::Builder::new()
+            .name(format!("dngd-worker-{id}"))
+            .spawn(move || worker_loop(rx, kernel))
+            .expect("spawn worker");
+        WorkerHandle { tx, join: Some(join) }
     }
 
     pub fn len(&self) -> usize {
@@ -111,16 +123,39 @@ impl WorkerPool {
     /// Send a job to worker `w` (blocks when its queue is full —
     /// backpressure).
     pub fn send(&self, w: usize, job: Job) -> Result<(), PoolError> {
-        self.workers[w].tx.send(job).map_err(|_| PoolError::WorkerGone(w))
+        let h = self.workers[w].read().unwrap_or_else(PoisonError::into_inner);
+        h.tx.send(job).map_err(|_| PoolError::WorkerGone(w))
     }
 
     /// Non-blocking [`WorkerPool::send`]: a full mailbox surfaces as the
     /// retryable [`PoolError::QueueFull`] instead of blocking.
     pub fn try_send(&self, w: usize, job: Job) -> Result<(), PoolError> {
-        self.workers[w].tx.try_send(job).map_err(|e| match e {
+        let h = self.workers[w].read().unwrap_or_else(PoisonError::into_inner);
+        h.tx.try_send(job).map_err(|e| match e {
             TrySendError::Full(_) => PoolError::QueueFull(w),
             TrySendError::Disconnected(_) => PoolError::WorkerGone(w),
         })
+    }
+
+    /// Replace the (presumed dead) thread in slot `w` with a freshly
+    /// spawned worker. The new incarnation starts with an **empty**
+    /// shard map — every session staged on the old worker must be
+    /// re-distributed before it can serve again (the serving layer's
+    /// supervisor does that via session re-materialization). If the old
+    /// thread is somehow still alive, dropping its sender lets it drain
+    /// its mailbox and exit; either way its processed count is folded
+    /// into slot `w`'s total at shutdown.
+    pub fn respawn(&self, w: usize) {
+        let fresh = Self::spawn_worker(w, self.queue_depth, self.kernel);
+        let old = {
+            let mut slot = self.workers[w].write().unwrap_or_else(PoisonError::into_inner);
+            std::mem::replace(&mut *slot, fresh)
+        };
+        if let Some(join) = old.join {
+            self.graveyard.lock().unwrap_or_else(PoisonError::into_inner).push((w, join));
+        }
+        // `old.tx` drops here: the retired thread (if alive) sees a
+        // closed mailbox after draining and exits.
     }
 
     /// Drain barrier: returns once every job enqueued before the call
@@ -129,6 +164,7 @@ impl WorkerPool {
         let mut waits = Vec::with_capacity(self.workers.len());
         for (w, h) in self.workers.iter().enumerate() {
             let (tx, rx) = channel();
+            let h = h.read().unwrap_or_else(PoisonError::into_inner);
             h.tx.send(Job::Flush { reply: tx }).map_err(|_| PoolError::WorkerGone(w))?;
             waits.push((w, rx));
         }
@@ -140,7 +176,8 @@ impl WorkerPool {
 
     /// Graceful shutdown; drains all in-flight jobs (explicit
     /// [`WorkerPool::flush`] barrier), then stops the workers and
-    /// returns per-worker processed-job counts.
+    /// returns per-worker processed-job counts (cumulative across
+    /// respawned incarnations of the same slot).
     pub fn shutdown(mut self) -> Vec<u64> {
         // A dead worker fails the flush — ignore and join what's left.
         let _ = self.flush();
@@ -149,12 +186,22 @@ impl WorkerPool {
 
     fn drain(&mut self) -> Vec<u64> {
         for h in &self.workers {
+            let h = h.read().unwrap_or_else(PoisonError::into_inner);
             let _ = h.tx.send(Job::Shutdown);
         }
-        self.workers
+        let mut counts: Vec<u64> = self
+            .workers
             .iter_mut()
-            .map(|h| h.join.take().map(|j| j.join().unwrap_or(0)).unwrap_or(0))
-            .collect()
+            .map(|h| {
+                let h = h.get_mut().unwrap_or_else(PoisonError::into_inner);
+                h.join.take().map(|j| j.join().unwrap_or(0)).unwrap_or(0)
+            })
+            .collect();
+        let graveyard = self.graveyard.get_mut().unwrap_or_else(PoisonError::into_inner);
+        for (w, join) in graveyard.drain(..) {
+            counts[w] += join.join().unwrap_or(0);
+        }
+        counts
     }
 }
 
@@ -347,6 +394,43 @@ mod tests {
         let ok = request(&pool, 1, ShardRequest::Ping).recv().unwrap();
         assert_eq!(ok, ShardResponse::Ack);
         pool.shutdown();
+    }
+
+    #[test]
+    fn respawned_worker_serves_again_with_an_empty_shard_map() {
+        let mut rng = Rng::seed_from(428);
+        let pool = WorkerPool::spawn(1, 2);
+        let s = Mat::randn(4, 8, &mut rng);
+        request(&pool, 0, ShardRequest::SetShard { sid: 1, shard: s.clone() })
+            .recv()
+            .unwrap();
+        let (tx, _rx) = channel();
+        pool.send(0, Job::Request { req: ShardRequest::Die, reply: tx }).unwrap();
+        // Wait until the death is observable from the leader side.
+        let (tx2, _rx2) = channel();
+        let mut died = false;
+        for _ in 0..200 {
+            match pool.send(0, Job::Request { req: ShardRequest::Ping, reply: tx2.clone() }) {
+                Err(PoolError::WorkerGone(0)) => {
+                    died = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error {e:?}"),
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+        assert!(died, "worker death never became observable");
+        pool.respawn(0);
+        // The fresh incarnation serves, but the old session's shard is
+        // gone — a typed missing-session error, not stale data.
+        let ok = request(&pool, 0, ShardRequest::Ping).recv().unwrap();
+        assert_eq!(ok, ShardResponse::Ack);
+        let gone = request(&pool, 0, ShardRequest::Gram { sid: 1 }).recv().unwrap();
+        assert!(matches!(gone, ShardResponse::Err(_)), "{gone:?}");
+        // Shutdown folds the dead incarnation's count (SetShard + Die
+        // = 2) into the slot: + Ping + Gram + Flush + Shutdown = 6.
+        let counts = pool.shutdown();
+        assert_eq!(counts, vec![6]);
     }
 
     #[test]

@@ -119,6 +119,28 @@ impl ShardedCholSolver {
         }
     }
 
+    /// Liveness probe for worker `w`: one bounded `Ping` round trip.
+    /// `false` means dead or wedged past `timeout` — candidates for
+    /// [`ShardedCholSolver::recover_worker`].
+    pub fn probe_worker(&self, w: usize, timeout: std::time::Duration) -> bool {
+        self.transport.probe(w, timeout)
+    }
+
+    /// Respawn (channels) or reconnect (socket) dead worker `w`. The
+    /// revived worker holds **no shards**: every session that had state
+    /// on it must be re-staged before its next request, which the
+    /// serving layer does by re-materializing the session from its
+    /// durable record (snapshot + rotation log).
+    pub fn recover_worker(&self, w: usize) -> Result<(), SolveError> {
+        self.transport.recover(w).map_err(Self::err)
+    }
+
+    /// Chaos hook: corrupt the wire framing toward worker `w` (no-op
+    /// `false` on the in-process channel transport, which has no wire).
+    pub fn inject_corrupt_frame(&self, w: usize) -> bool {
+        self.transport.inject_corrupt_frame(w)
+    }
+
     fn alloc_sid(&self) -> u64 {
         self.next_sid.fetch_add(1, Ordering::Relaxed) + 1
     }
@@ -130,6 +152,9 @@ impl ShardedCholSolver {
         match e {
             TransportError::Retryable(d) => SolveError::Backend { retryable: true, detail: d },
             TransportError::Fatal(d) => SolveError::Backend { retryable: false, detail: d },
+            e @ TransportError::FrameTooLarge { .. } => {
+                SolveError::Backend { retryable: false, detail: e.to_string() }
+            }
         }
     }
 
@@ -534,6 +559,12 @@ impl ShardedWindowSession {
     /// Rows currently in the window (changes under `update_rows`).
     pub fn window_rows(&self) -> usize {
         self.window.rows()
+    }
+
+    /// The live leader-side window. The serving layer's durable session
+    /// records snapshot this at their refresh cadence (PR 8).
+    pub fn window(&self) -> &Mat {
+        &self.window
     }
 }
 

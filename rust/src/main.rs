@@ -5,7 +5,8 @@
 //! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd]
 //! dngd vmc    [--config cfg.toml] [--set section.key=value]…
 //! dngd bench  --table1 | --scaling | --cg | --kernels | --precision [--scale small|paper] [--json out.json]
-//! dngd serve  [--config cfg.toml] [--set section.key=value]… [--transport channels|socket|both] [--self-test]
+//! dngd serve  [--config cfg.toml] [--set section.key=value]… [--transport channels|socket|both] [--self-test] [--inject-kill]
+//! dngd chaos  [--schedule S|all] [--transport channels|socket|both] [--seed N] [--requests R]
 //! dngd artifacts [--dir artifacts]
 //! ```
 //!
@@ -18,7 +19,7 @@ use dngd::coordinator::Trainer;
 use dngd::data::rng::Rng;
 use dngd::linalg::Mat;
 use dngd::metrics::{MetricsLog, Summary};
-use dngd::serve::{ServeOptions, Server, TransportKind};
+use dngd::serve::{ChaosOptions, FaultSchedule, ServeOptions, Server, TransportKind};
 use dngd::solver::{residual_norm, CholSolver, DampedSolver, SolveError, SolverKind, SolverRegistry};
 use std::process::ExitCode;
 
@@ -96,6 +97,7 @@ fn main() -> ExitCode {
         "vmc" => cmd_vmc(rest),
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
+        "chaos" => cmd_chaos(rest),
         "artifacts" => cmd_artifacts(rest),
         "--help" | "help" | "-h" => {
             println!("{USAGE}");
@@ -119,9 +121,11 @@ USAGE:
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision | --serving) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision | --serving | --recovery) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
   dngd serve  [--config cfg.toml] [--set section.key=value]... [--transport channels|socket|both]
-              [--tenants T] [--requests R] [--self-test]
+              [--tenants T] [--requests R] [--self-test] [--inject-kill]
+  dngd chaos  [--config cfg.toml] [--set section.key=value]... [--schedule kill-during-factor|stall-during-panel|corrupt-frame|respawn-storm|all]
+              [--transport channels|socket|both] [--threads T] [--workers W] [--seed N] [--requests R] [--kill-every K]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -366,7 +370,7 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
         "table1", "scaling", "cg", "kernels", "sessions", "threads", "streaming", "precision",
-        "serving", "scale", "json", "json-simd", "quick",
+        "serving", "recovery", "scale", "json", "json-simd", "quick",
     ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
@@ -455,10 +459,21 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
             false,
         )
         .map_err(|e| e.to_string())?;
+    } else if a.has("recovery") {
+        // PR 8: recovery latency under injected worker kills — p50/p99
+        // with ~1 kill per 100 requests vs a fault-free baseline, plus
+        // the respawn/replay counters and the 1e-9 correctness gate.
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR8.json");
+        dngd::bench_tables::recovery_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
         return Err(
             "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads | \
-             --streaming | --precision | --serving"
+             --streaming | --precision | --serving | --recovery"
                 .into(),
         );
     }
@@ -494,14 +509,20 @@ fn serve_test_data() -> (Mat, Vec<f64>, Vec<f64>, Mat) {
 }
 
 /// Run the fixed session workload (cold solve, λ-resweep, second RHS,
-/// rotate + solve) through one server and collect the answers.
-fn serve_workload(opts: ServeOptions) -> Result<Vec<Vec<f64>>, String> {
+/// rotate + solve) through one server and collect the answers. With
+/// `inject_kill` a worker dies right after the first answer; the
+/// supervisor must re-materialize the session so the remaining answers
+/// still come out right (PR-8 recovery contract).
+fn serve_workload(opts: ServeOptions, inject_kill: bool) -> Result<Vec<Vec<f64>>, String> {
     let (s, v1, v2, added) = serve_test_data();
     let server = Server::start(opts).map_err(|e| format!("server start: {e}"))?;
     let client = server.client().map_err(|e| e.to_string())?;
     let sid = client.open_session(s, 0.05).map_err(|e| e.to_string())?;
     let mut answers = Vec::new();
     answers.push(client.solve(sid, 0.05, &v1).map_err(|e| e.to_string())?);
+    if inject_kill {
+        server.inject_kill(0);
+    }
     // λ-resweep on the cached staging.
     answers.push(client.solve(sid, 0.01, &v1).map_err(|e| e.to_string())?);
     answers.push(client.solve(sid, 0.01, &v2).map_err(|e| e.to_string())?);
@@ -517,7 +538,11 @@ fn serve_workload(opts: ServeOptions) -> Result<Vec<Vec<f64>>, String> {
 /// `dngd serve --self-test`: every requested transport must reproduce
 /// the serial solver to 1e-9, and when both transports run they must
 /// agree bit-for-bit (the PR-7 equivalence contract).
-fn serve_self_test(base: &ServeOptions, transports: &[TransportKind]) -> Result<(), String> {
+fn serve_self_test(
+    base: &ServeOptions,
+    transports: &[TransportKind],
+    inject_kill: bool,
+) -> Result<(), String> {
     let (s, v1, v2, added) = serve_test_data();
     let serial = CholSolver::default();
     let rotated = {
@@ -541,7 +566,7 @@ fn serve_self_test(base: &ServeOptions, transports: &[TransportKind]) -> Result<
     let mut per_transport: Vec<Vec<Vec<f64>>> = Vec::new();
     for &tk in transports {
         let opts = ServeOptions { transport: tk, ..base.clone() };
-        let answers = serve_workload(opts)?;
+        let answers = serve_workload(opts, inject_kill)?;
         for (i, (x, x_ref)) in answers.iter().zip(&refs).enumerate() {
             let scale = dngd::linalg::mat::norm2(x_ref).max(1.0);
             for (a, b) in x.iter().zip(x_ref) {
@@ -553,7 +578,8 @@ fn serve_self_test(base: &ServeOptions, transports: &[TransportKind]) -> Result<
                 }
             }
         }
-        println!("self-test [{tk}]: 4 answers match the serial solver to 1e-9 ✓");
+        let suffix = if inject_kill { " (recovered from an injected worker kill)" } else { "" };
+        println!("self-test [{tk}]: 4 answers match the serial solver to 1e-9{suffix} ✓");
         per_transport.push(answers);
     }
     if let [a, b] = per_transport.as_slice() {
@@ -637,7 +663,7 @@ fn serve_demo(
 
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
-    a.expect_only(&["config", "set", "self-test", "transport", "tenants", "requests"])?;
+    a.expect_only(&["config", "set", "self-test", "transport", "tenants", "requests", "inject-kill"])?;
     let cfg = Config::load(a.get("config"), &a.get_all("set"))?;
     let mut opts = ServeOptions::from_config(&cfg)?;
     if let Some(t) = a.get("tenants").filter(|s| !s.is_empty()) {
@@ -653,12 +679,92 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         Some(s) => vec![TransportKind::parse(s)?],
     };
     if a.has("self-test") {
-        serve_self_test(&opts, &transports)
+        serve_self_test(&opts, &transports, a.has("inject-kill"))
     } else {
+        if a.has("inject-kill") {
+            // No-silent-ignore: the demo path has no reference answers
+            // to judge a recovery against.
+            return Err("--inject-kill requires --self-test".into());
+        }
         let requests: usize = a.parsed("requests", 64)?;
         if requests == 0 {
             return Err("--requests must be ≥ 1".into());
         }
         serve_demo(&opts, &transports, requests)
     }
+}
+
+/// `dngd chaos`: run scripted fault schedules against a live server and
+/// judge each run (correct answers, zero leaks, pinned recovery
+/// counters). Any failing schedule is a hard error after all runs are
+/// reported, so one red row never hides another.
+fn cmd_chaos(args: &[String]) -> Result<(), String> {
+    let a = cli::parse(args)?;
+    a.expect_only(&[
+        "config", "set", "schedule", "transport", "threads", "workers", "seed", "requests",
+        "kill-every",
+    ])?;
+    let cfg = Config::load(a.get("config"), &a.get_all("set"))?;
+    // Flags override `chaos.*` config keys, which override the defaults.
+    let mut opts = ChaosOptions {
+        seed: cfg.chaos.seed,
+        requests: cfg.chaos.requests,
+        kill_every: cfg.chaos.kill_every,
+        ..ChaosOptions::default()
+    };
+    opts.seed = a.parsed("seed", opts.seed)?;
+    opts.requests = a.parsed("requests", opts.requests)?;
+    opts.kill_every = a.parsed("kill-every", opts.kill_every)?;
+    opts.threads = a.parsed("threads", opts.threads)?;
+    opts.workers = a.parsed("workers", opts.workers)?;
+    if opts.requests == 0 || opts.kill_every == 0 {
+        return Err("--requests and --kill-every must be ≥ 1".into());
+    }
+    if opts.workers == 0 || opts.threads == 0 {
+        return Err("--workers and --threads must be ≥ 1".into());
+    }
+    let spec = a
+        .get("schedule")
+        .filter(|s| !s.is_empty())
+        .unwrap_or(cfg.chaos.schedule.as_str());
+    let schedules: Vec<FaultSchedule> = if spec == "all" {
+        FaultSchedule::all().to_vec()
+    } else {
+        vec![FaultSchedule::parse(spec)?]
+    };
+    let transports: Vec<TransportKind> = match a.get("transport").filter(|s| !s.is_empty()) {
+        None => vec![opts.transport],
+        Some("both") => vec![TransportKind::Channels, TransportKind::Socket],
+        Some(s) => vec![TransportKind::parse(s)?],
+    };
+    let mut failed = 0usize;
+    for &tk in &transports {
+        opts.transport = tk;
+        for &sch in &schedules {
+            let r = dngd::serve::chaos::run_schedule(sch, &opts)?;
+            let verdict = if r.passed { "PASS" } else { "FAIL" };
+            let detail =
+                if r.detail.is_empty() { String::new() } else { format!("  ({})", r.detail) };
+            println!(
+                "chaos [{:>8}] {:<18} {:>4} req  err {:.2e}  respawns {}  replays {}  \
+                 refactors {}  fallbacks {}  {verdict}{detail}",
+                r.transport,
+                r.schedule,
+                r.requests,
+                r.max_rel_err,
+                r.stats.worker_respawns,
+                r.stats.session_replays,
+                r.stats.session_refactors,
+                r.stats.local_fallbacks,
+            );
+            if !r.passed {
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        return Err(format!("{failed} chaos schedule run(s) failed"));
+    }
+    println!("chaos: every schedule recovered with correct answers and zero leaks ✓");
+    Ok(())
 }

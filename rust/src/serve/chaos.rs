@@ -1,0 +1,324 @@
+//! Chaos harness (PR 8): scripted fault schedules against a live
+//! [`Server`], asserting every schedule ends with **correct answers**
+//! (≤ 1e-9 against a leader-local reference that never sees a fault)
+//! and **zero leaked sessions or budget bytes**. The recovery path the
+//! server took (replay vs refactor vs local fallback, respawn counts)
+//! is observable in the returned [`ServeStats`], so schedules can pin
+//! it.
+//!
+//! The CLI front door is `dngd chaos` (`--schedule`, `--transport`,
+//! `--seed`, `--requests`); the soak test in `tests/serving.rs` runs
+//! every schedule over both transports at 1 and 8 kernel threads.
+
+use super::server::{ServeOptions, ServeStats, Server};
+use super::transport::TransportKind;
+use crate::data::rng::Rng;
+use crate::linalg::{KernelConfig, Mat};
+use crate::solver::CholSolver;
+
+/// A scripted fault schedule. Each one targets a distinct layer of the
+/// fault machinery; all of them must end with correct answers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSchedule {
+    /// Kill a worker, then immediately demand a λ change so the next
+    /// request drives recovery through the *factor* path (heal →
+    /// replay → redamp at the new λ).
+    KillDuringFactor,
+    /// Periodically stall workers mid-traffic. Stalls add latency but
+    /// workers stay healthy — the supervisor must NOT respawn anyone.
+    StallDuringPanel,
+    /// Corrupt a length prefix at the framing layer (socket transport;
+    /// degrades to a kill on channels, which have no frames). The demux
+    /// goes fatal and recovery reconnects.
+    CorruptFrame,
+    /// Kill a rotating worker every `kill_every` requests — sustained
+    /// respawn pressure with sessions re-materialized each time.
+    RespawnStorm,
+}
+
+impl FaultSchedule {
+    pub fn all() -> [FaultSchedule; 4] {
+        [
+            FaultSchedule::KillDuringFactor,
+            FaultSchedule::StallDuringPanel,
+            FaultSchedule::CorruptFrame,
+            FaultSchedule::RespawnStorm,
+        ]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultSchedule::KillDuringFactor => "kill-during-factor",
+            FaultSchedule::StallDuringPanel => "stall-during-panel",
+            FaultSchedule::CorruptFrame => "corrupt-frame",
+            FaultSchedule::RespawnStorm => "respawn-storm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultSchedule, String> {
+        match s {
+            "kill-during-factor" => Ok(FaultSchedule::KillDuringFactor),
+            "stall-during-panel" => Ok(FaultSchedule::StallDuringPanel),
+            "corrupt-frame" => Ok(FaultSchedule::CorruptFrame),
+            "respawn-storm" => Ok(FaultSchedule::RespawnStorm),
+            other => Err(format!(
+                "unknown chaos schedule {other:?} (want kill-during-factor | \
+                 stall-during-panel | corrupt-frame | respawn-storm | all)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Harness knobs (`chaos.*` config keys + CLI flags).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosOptions {
+    pub transport: TransportKind,
+    /// Kernel threads for the dense stages (the soak test runs 1 and 8).
+    pub threads: usize,
+    pub workers: usize,
+    pub seed: u64,
+    /// Solve requests per schedule run.
+    pub requests: usize,
+    /// Kill cadence for [`FaultSchedule::RespawnStorm`].
+    pub kill_every: usize,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        ChaosOptions {
+            transport: TransportKind::Channels,
+            threads: 1,
+            workers: 2,
+            seed: 4242,
+            requests: 40,
+            kill_every: 10,
+        }
+    }
+}
+
+/// What one schedule run produced. `passed` folds the correctness
+/// gate, the leak checks, and the schedule-specific counter
+/// assertions; `detail` says which one failed (empty when green).
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub schedule: &'static str,
+    pub transport: &'static str,
+    pub requests: usize,
+    /// Worst per-request error vs the fault-free leader-local
+    /// reference, scaled by the reference's magnitude.
+    pub max_rel_err: f64,
+    pub stats: ServeStats,
+    pub leaked_sessions: usize,
+    pub leaked_bytes: u64,
+    pub passed: bool,
+    pub detail: String,
+}
+
+/// Leader-side reference rotation: kept rows in order, added appended —
+/// the same semantics as the distributed `update_rows`.
+fn rotate_reference(w: &Mat, removed: &[usize], added: &Mat) -> Mat {
+    let kept: Vec<usize> = (0..w.rows()).filter(|i| !removed.contains(i)).collect();
+    let mut out = Mat::zeros(kept.len() + added.rows(), w.cols());
+    for (dst, &src) in kept.iter().enumerate() {
+        out.row_mut(dst).copy_from_slice(w.row(src));
+    }
+    for r in 0..added.rows() {
+        out.row_mut(kept.len() + r).copy_from_slice(added.row(r));
+    }
+    out
+}
+
+/// Run one fault schedule against a fresh server and judge the run.
+///
+/// The workload is seeded and identical across schedules: a sliding
+/// window of scores, solves alternating between two λ values, and a
+/// rotation every fifth request. A fault-free [`CholSolver`] tracking
+/// the same window supplies the reference answer for every request.
+pub fn run_schedule(
+    schedule: FaultSchedule,
+    opts: &ChaosOptions,
+) -> Result<ChaosReport, String> {
+    let (n, m) = (10usize, 48usize);
+    let lambdas = [1e-2, 5e-2];
+    let serve_opts = ServeOptions {
+        transport: opts.transport,
+        workers: opts.workers,
+        kernel: KernelConfig::with_threads(opts.threads),
+        tick_ms: 1,
+        snapshot_every: 4,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(serve_opts)?;
+    let client = server.client().map_err(|e| format!("chaos: connect: {e}"))?;
+    let reference = CholSolver::with_config(KernelConfig::with_threads(opts.threads));
+
+    let mut rng = Rng::seed_from(opts.seed);
+    let mut window = Mat::randn(n, m, &mut rng);
+    let sid = client
+        .open_session(window.clone(), lambdas[0])
+        .map_err(|e| format!("chaos: open: {e}"))?;
+
+    let mut max_rel_err = 0.0f64;
+    let mut kills = 0u64;
+    let mut failures: Vec<String> = Vec::new();
+    let kill_at = opts.requests / 3;
+    for i in 0..opts.requests {
+        // Fault injection, per schedule.
+        match schedule {
+            FaultSchedule::KillDuringFactor => {
+                if i == kill_at {
+                    server.inject_kill(i % opts.workers);
+                    kills += 1;
+                }
+            }
+            FaultSchedule::StallDuringPanel => {
+                if i % 7 == 3 {
+                    server.inject_stall(i % opts.workers, 20);
+                }
+            }
+            FaultSchedule::CorruptFrame => {
+                if i == kill_at && !server.inject_corrupt_frame(i % opts.workers) {
+                    // Channels have no frames to corrupt; the schedule
+                    // degrades to a kill so both transports stay green.
+                    server.inject_kill(i % opts.workers);
+                }
+                if i == kill_at {
+                    kills += 1;
+                }
+            }
+            FaultSchedule::RespawnStorm => {
+                if opts.kill_every > 0 && i % opts.kill_every == opts.kill_every - 1 {
+                    server.inject_kill(i % opts.workers);
+                    kills += 1;
+                }
+            }
+        }
+        // λ alternates every request, so every solve re-factors — the
+        // kill schedules therefore always die "during factor" from the
+        // session's point of view.
+        let lambda = lambdas[i % 2];
+        // Rotation every fifth request (keeps the window at n rows).
+        if i % 5 == 4 {
+            let added = Mat::randn(1, m, &mut rng);
+            let removed = [i % window.rows()];
+            client
+                .rotate(sid, &removed, added.clone())
+                .map_err(|e| format!("chaos {schedule}: rotate {i}: {e}"))?;
+            window = rotate_reference(&window, &removed, &added);
+        }
+        let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let x = client
+            .solve(sid, lambda, &v)
+            .map_err(|e| format!("chaos {schedule}: solve {i}: {e}"))?;
+        let x_ref = reference
+            .solve(&window, &v, lambda)
+            .map_err(|e| format!("chaos {schedule}: reference {i}: {e}"))?;
+        let scale = x_ref.iter().fold(1.0f64, |a, b| a.max(b.abs()));
+        let err = x
+            .iter()
+            .zip(&x_ref)
+            .fold(0.0f64, |a, (p, q)| a.max((p - q).abs()))
+            / scale;
+        max_rel_err = max_rel_err.max(err);
+    }
+
+    client.close_session(sid).map_err(|e| format!("chaos: close: {e}"))?;
+    let leaked_sessions = server.live_sessions();
+    let leaked_bytes = server.admitted_bytes();
+    drop(client);
+    let stats = server.shutdown();
+
+    if max_rel_err > 1e-9 {
+        failures.push(format!("max_rel_err {max_rel_err:.2e} > 1e-9"));
+    }
+    if leaked_sessions != 0 || leaked_bytes != 0 {
+        failures.push(format!(
+            "leaked {leaked_sessions} sessions / {leaked_bytes} budget bytes"
+        ));
+    }
+    if stats.completed != opts.requests as u64 {
+        failures.push(format!(
+            "completed {} of {} requests",
+            stats.completed, opts.requests
+        ));
+    }
+    match schedule {
+        FaultSchedule::StallDuringPanel => {
+            if stats.worker_respawns != 0 {
+                failures.push(format!(
+                    "stalls must not trigger respawns, saw {}",
+                    stats.worker_respawns
+                ));
+            }
+        }
+        _ => {
+            if stats.worker_respawns != kills {
+                failures.push(format!(
+                    "injected {kills} kills but saw {} respawns",
+                    stats.worker_respawns
+                ));
+            }
+            if stats.session_replays + stats.session_refactors + stats.local_fallbacks < kills {
+                failures.push(format!(
+                    "{kills} kills need ≥ {kills} recoveries, saw replays {} + refactors {} + \
+                     fallbacks {}",
+                    stats.session_replays, stats.session_refactors, stats.local_fallbacks
+                ));
+            }
+        }
+    }
+
+    Ok(ChaosReport {
+        schedule: schedule.as_str(),
+        transport: opts.transport.as_str(),
+        requests: opts.requests,
+        max_rel_err,
+        stats,
+        leaked_sessions,
+        leaked_bytes,
+        passed: failures.is_empty(),
+        detail: failures.join("; "),
+    })
+}
+
+/// Run every schedule with the given options; any setup error is a
+/// hard failure (fault handling itself never errors the harness).
+pub fn run_all(opts: &ChaosOptions) -> Result<Vec<ChaosReport>, String> {
+    FaultSchedule::all().iter().map(|s| run_schedule(*s, opts)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_names_round_trip() {
+        for s in FaultSchedule::all() {
+            assert_eq!(FaultSchedule::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(FaultSchedule::parse("segfault").is_err());
+    }
+
+    #[test]
+    fn kill_during_factor_recovers_on_channels() {
+        let opts = ChaosOptions { requests: 12, ..ChaosOptions::default() };
+        let report = run_schedule(FaultSchedule::KillDuringFactor, &opts).unwrap();
+        assert!(report.passed, "{}: {}", report.schedule, report.detail);
+        assert_eq!(report.stats.worker_respawns, 1);
+        assert_eq!(report.leaked_sessions, 0);
+    }
+
+    #[test]
+    fn stalls_do_not_trigger_respawns() {
+        let opts = ChaosOptions { requests: 12, ..ChaosOptions::default() };
+        let report = run_schedule(FaultSchedule::StallDuringPanel, &opts).unwrap();
+        assert!(report.passed, "{}: {}", report.schedule, report.detail);
+        assert_eq!(report.stats.worker_respawns, 0);
+    }
+}

@@ -19,16 +19,33 @@
 //!   channels) or out-of-process (length-prefixed Unix-domain-socket
 //!   frames), bit-identically.
 //!
+//! Fault tolerance (PR 8) layers on top without touching the compute
+//! path:
+//!
+//! - [`supervisor`] — worker health probes + respawn ([`supervisor::Supervisor`]),
+//!   the durable [`supervisor::SessionRecord`] (window snapshot + rotation
+//!   log, replayed through `update_rows` so a recovered factor matches an
+//!   unfailed run), and the deterministic-jitter [`supervisor::RetryPolicy`].
+//! - [`chaos`] — scripted fault schedules (kill-during-factor,
+//!   stall-during-panel, corrupt-frame, respawn storms) asserting every
+//!   schedule ends with correct answers and zero leaked sessions; the CLI
+//!   front door is `dngd chaos`.
+//!
 //! The CLI front door is `dngd serve` (self-test + demo traffic); the
 //! sustained-traffic benchmark is `benches/serving.rs` →
-//! `BENCH_PR7.json`.
+//! `BENCH_PR7.json`, and the recovery-latency benchmark writes
+//! `BENCH_PR8.json`.
 
+pub mod chaos;
 pub mod queue;
 pub mod server;
+pub mod supervisor;
 pub mod transport;
 
+pub use chaos::{ChaosOptions, ChaosReport, FaultSchedule};
 pub use queue::ServeError;
 pub use server::{Client, ServeOptions, ServeStats, Server, SolveTicket};
+pub use supervisor::{HealReport, RetryPolicy, RotationEntry, SessionRecord, Supervisor};
 pub use transport::{ChannelTransport, ShardTransport, TransportError, TransportKind};
 #[cfg(unix)]
 pub use transport::SocketTransport;

@@ -14,7 +14,7 @@ use crate::solver::SolveError;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Serving-layer failures handed back to tenants. Retryable variants
 /// carry an explicit back-off hint instead of letting the server fall
@@ -35,6 +35,12 @@ pub enum ServeError {
     /// The underlying solve failed; inspect the inner error (a
     /// [`SolveError::Backend`] may itself be retryable).
     Solver(SolveError),
+    /// The per-request deadline (`serve.deadline_ms`) elapsed before an
+    /// answer — including any recovery attempts. Carries the partial-
+    /// progress stats: how long the request was in flight and how many
+    /// retries were burned. Not retryable as-is (the *caller* decides
+    /// whether a fresh request with a fresh deadline is worth it).
+    DeadlineExceeded { elapsed_ms: u64, retries: u64 },
     /// The server is shutting down.
     ShuttingDown,
 }
@@ -47,9 +53,22 @@ impl ServeError {
             | ServeError::OverBudget { .. }
             | ServeError::TenantLimit { .. } => true,
             ServeError::Solver(SolveError::Backend { retryable, .. }) => *retryable,
-            ServeError::UnknownSession(_) | ServeError::Solver(_) | ServeError::ShuttingDown => {
-                false
-            }
+            ServeError::UnknownSession(_)
+            | ServeError::Solver(_)
+            | ServeError::DeadlineExceeded { .. }
+            | ServeError::ShuttingDown => false,
+        }
+    }
+
+    /// The server's explicit back-off hint, when it gave one.
+    /// [`crate::serve::Client`] blocking calls honor this by sleeping
+    /// the hinted interval (bounded by the request deadline) before
+    /// resubmitting.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            ServeError::Overloaded { retry_after_ms }
+            | ServeError::OverBudget { retry_after_ms, .. } => Some(*retry_after_ms),
+            _ => None,
         }
     }
 }
@@ -70,6 +89,10 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::UnknownSession(sid) => write!(f, "unknown session {sid}"),
             ServeError::Solver(e) => write!(f, "solve failed: {e}"),
+            ServeError::DeadlineExceeded { elapsed_ms, retries } => write!(
+                f,
+                "deadline exceeded after {elapsed_ms} ms ({retries} retries)"
+            ),
             ServeError::ShuttingDown => write!(f, "server shutting down"),
         }
     }
@@ -94,6 +117,11 @@ pub(crate) struct SolveItem {
     pub lambda: f64,
     pub rhs: Vec<f64>,
     pub reply: SolveReply,
+    /// When the tenant submitted (for [`ServeError::DeadlineExceeded`]
+    /// partial-progress stats).
+    pub enqueued: Instant,
+    /// When the dispatcher must stop burning time on this request.
+    pub deadline: Instant,
 }
 
 /// One tenant window rotation (the PR-5 streaming `update_rows`).
@@ -102,6 +130,8 @@ pub(crate) struct RotateItem {
     pub removed: Vec<usize>,
     pub added: Mat,
     pub reply: RotateReply,
+    pub enqueued: Instant,
+    pub deadline: Instant,
 }
 
 pub(crate) enum Pending {
@@ -116,6 +146,11 @@ pub(crate) struct SolveGroup {
     pub lambda: f64,
     pub rows: Vec<Vec<f64>>,
     pub replies: Vec<SolveReply>,
+    /// Earliest submit time across the group's requests.
+    pub enqueued: Instant,
+    /// Tightest deadline across the group's requests: recovery work on
+    /// a coalesced panel must respect its most impatient member.
+    pub deadline: Instant,
 }
 
 /// Group drained solves into dispatch panels. With `coalesce` on,
@@ -133,6 +168,8 @@ pub(crate) fn coalesce_solves(items: Vec<SolveItem>, coalesce: bool) -> Vec<Solv
             if let Some(&g) = index.get(&key) {
                 groups[g].rows.push(it.rhs);
                 groups[g].replies.push(it.reply);
+                groups[g].enqueued = groups[g].enqueued.min(it.enqueued);
+                groups[g].deadline = groups[g].deadline.min(it.deadline);
                 continue;
             }
             index.insert(key, groups.len());
@@ -142,6 +179,8 @@ pub(crate) fn coalesce_solves(items: Vec<SolveItem>, coalesce: bool) -> Vec<Solv
             lambda: it.lambda,
             rows: vec![it.rhs],
             replies: vec![it.reply],
+            enqueued: it.enqueued,
+            deadline: it.deadline,
         });
     }
     groups
@@ -228,7 +267,15 @@ mod tests {
 
     fn solve_item(sid: u64, lambda: f64, tag: f64) -> SolveItem {
         let (tx, _rx) = channel();
-        SolveItem { sid, lambda, rhs: vec![tag; 3], reply: tx }
+        let now = Instant::now();
+        SolveItem {
+            sid,
+            lambda,
+            rhs: vec![tag; 3],
+            reply: tx,
+            enqueued: now,
+            deadline: now + Duration::from_secs(5),
+        }
     }
 
     #[test]
@@ -244,6 +291,52 @@ mod tests {
         // Draining frees capacity again.
         assert_eq!(q.drain().len(), 2);
         q.try_push(Pending::Solve(solve_item(1, 0.1, 3.0))).unwrap();
+    }
+
+    #[test]
+    fn retry_after_hints_are_exposed_and_pinned() {
+        // The satellite-3 contract: both admission rejections carry the
+        // hint the Client sleep-and-retry loop consumes, verbatim.
+        let over = ServeError::Overloaded { retry_after_ms: 7 };
+        assert_eq!(over.retry_after_ms(), Some(7));
+        let budget =
+            ServeError::OverBudget { required_bytes: 100, budget_bytes: 64, retry_after_ms: 13 };
+        assert_eq!(budget.retry_after_ms(), Some(13));
+        assert!(budget.is_retryable());
+        // Non-admission errors carry no hint.
+        assert_eq!(ServeError::UnknownSession(4).retry_after_ms(), None);
+        assert_eq!(ServeError::TenantLimit { tenants: 2 }.retry_after_ms(), None);
+        assert_eq!(
+            ServeError::DeadlineExceeded { elapsed_ms: 9, retries: 2 }.retry_after_ms(),
+            None
+        );
+        // And the queue's own hint is the configured value, not a default.
+        let q = RequestQueue::new(1, 23);
+        q.try_push(Pending::Solve(solve_item(1, 0.1, 0.0))).unwrap();
+        match q.try_push(Pending::Solve(solve_item(1, 0.1, 1.0))) {
+            Err(e) => assert_eq!(e.retry_after_ms(), Some(23)),
+            other => panic!("expected Overloaded, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn deadline_exceeded_is_terminal_and_reports_progress() {
+        let e = ServeError::DeadlineExceeded { elapsed_ms: 120, retries: 3 };
+        assert!(!e.is_retryable());
+        let msg = e.to_string();
+        assert!(msg.contains("120 ms") && msg.contains("3 retries"), "{msg}");
+    }
+
+    #[test]
+    fn coalesced_group_takes_the_tightest_deadline() {
+        let mut early = solve_item(1, 0.1, 0.0);
+        let tight = early.enqueued + Duration::from_millis(10);
+        early.deadline = tight + Duration::from_secs(60);
+        let mut impatient = solve_item(1, 0.1, 1.0);
+        impatient.deadline = tight;
+        let groups = coalesce_solves(vec![early, impatient], true);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].deadline, tight);
     }
 
     #[test]

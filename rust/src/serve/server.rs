@@ -19,14 +19,30 @@
 //! pluggable [`super::transport::ShardTransport`], so the same server
 //! runs against in-process channel workers or out-of-process
 //! Unix-socket shard workers, bit-identically.
+//!
+//! Fault tolerance (PR 8): every request carries a deadline
+//! (`serve.deadline_ms`); transient backend faults are retried with
+//! capped, deterministically-jittered backoff (`serve.max_retries`);
+//! fatal transport faults trigger the [`super::supervisor::Supervisor`]
+//! (probe + respawn dead workers) followed by session
+//! re-materialization from the durable [`SessionRecord`] — snapshot +
+//! rotation-log replay through the ordinary `update_rows` path, so the
+//! recovered factor matches an unfailed run. When recovery itself fails
+//! or blows the deadline, the dispatcher degrades to a leader-local
+//! Cholesky of the recorded window (`ServeStats::local_fallbacks`)
+//! rather than dropping the request.
 
-use super::queue::{coalesce_solves, Pending, RequestQueue, RotateItem, ServeError, SolveItem};
+use super::queue::{
+    coalesce_solves, Pending, RequestQueue, RotateItem, ServeError, SolveGroup, SolveItem,
+};
+use super::supervisor::{RetryPolicy, SessionRecord, Supervisor};
 use super::transport::{ChannelTransport, ShardTransport, TransportKind};
 use crate::config::Config;
 use crate::coordinator::{ShardedCholSolver, ShardedWindowSession};
 use crate::linalg::{KernelConfig, Mat};
-use crate::solver::{memory_bytes, Factorization, MemoryBudget, SolveError, SolverKind};
+use crate::solver::{memory_bytes, CholSolver, Factorization, MemoryBudget, SolveError, SolverKind};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
@@ -63,6 +79,24 @@ pub struct ServeOptions {
     /// Cross-tenant RHS coalescing. On by default; the serving bench
     /// turns it off to measure the serial per-request baseline.
     pub coalesce: bool,
+    /// Per-request deadline in ms (`serve.deadline_ms`): the budget for
+    /// queueing + dispatch + any retries/recovery before a request gets
+    /// a typed [`ServeError::DeadlineExceeded`] instead of an answer.
+    pub deadline_ms: u64,
+    /// Cap on transient-fault retries per dispatched request
+    /// (`serve.max_retries`); each retry sleeps a capped-exponential,
+    /// deterministically-jittered backoff.
+    pub max_retries: u32,
+    /// Session-record snapshot cadence (`serve.snapshot_every`): refresh
+    /// the window snapshot and clear the rotation log every this many
+    /// rotations, bounding recovery replay length.
+    pub snapshot_every: usize,
+    /// Worker supervision (`serve.supervise`). Off restores the PR-7
+    /// behavior: fatal transport faults propagate as typed errors.
+    pub supervise: bool,
+    /// Directory for durable session records (`serve.record_dir`);
+    /// empty keeps records in memory only.
+    pub record_dir: String,
 }
 
 impl Default for ServeOptions {
@@ -77,6 +111,11 @@ impl Default for ServeOptions {
             worker_queue_depth: 4,
             kernel: KernelConfig::serial(),
             coalesce: true,
+            deadline_ms: 5_000,
+            max_retries: 4,
+            snapshot_every: 16,
+            supervise: true,
+            record_dir: String::new(),
         }
     }
 }
@@ -96,6 +135,11 @@ impl ServeOptions {
             worker_queue_depth: cfg.coordinator.queue_depth,
             kernel: cfg.solver.options().kernel(),
             coalesce: true,
+            deadline_ms: cfg.serve.deadline_ms,
+            max_retries: cfg.serve.max_retries,
+            snapshot_every: cfg.serve.snapshot_every,
+            supervise: cfg.serve.supervise,
+            record_dir: cfg.serve.record_dir.clone(),
         };
         opts.validate()?;
         Ok(opts)
@@ -125,6 +169,12 @@ impl ServeOptions {
         }
         if self.worker_queue_depth == 0 {
             return Err("coordinator.queue_depth must be ≥ 1".into());
+        }
+        if self.deadline_ms == 0 || self.deadline_ms > 600_000 {
+            return Err("serve.deadline_ms must be in 1..=600000".into());
+        }
+        if self.snapshot_every == 0 {
+            return Err("serve.snapshot_every must be ≥ 1".into());
         }
         Ok(())
     }
@@ -157,6 +207,27 @@ pub struct ServeStats {
     pub coalesced_rows: u64,
     /// Largest panel dispatched.
     pub max_panel_rows: usize,
+    /// Requests that aged past their deadline (queued or mid-recovery)
+    /// and were answered with [`ServeError::DeadlineExceeded`].
+    pub deadline_exceeded: u64,
+    /// Transient backend faults absorbed by the dispatcher's backoff
+    /// loop (each one slept and resubmitted the same panel).
+    pub backend_retries: u64,
+    /// Dead shard workers revived by the supervisor (respawned threads
+    /// or reconnected sockets).
+    pub worker_respawns: u64,
+    /// Sessions re-materialized via the replay path: snapshot staging +
+    /// rotation-log replay through `update_rows`.
+    pub session_replays: u64,
+    /// Sessions re-materialized via the cold path: refactor of the
+    /// fully-materialized window (replay itself failed).
+    pub session_refactors: u64,
+    /// Requests answered by the degraded leader-local Cholesky because
+    /// distributed recovery failed or blew the deadline.
+    pub local_fallbacks: u64,
+    /// Session-record snapshot refreshes (rotation log hit
+    /// `serve.snapshot_every`).
+    pub snapshots: u64,
     /// Per-worker processed-job counters, available only from
     /// [`Server::shutdown`] once every client and session is gone.
     pub worker_jobs: Vec<u64>,
@@ -166,6 +237,8 @@ struct TenantSession {
     fact: ShardedWindowSession,
     /// `cost.rs` admission charge, released on close.
     bytes: u64,
+    /// Durable recovery record: window snapshot + rotation log.
+    record: SessionRecord,
 }
 
 struct BudgetState {
@@ -182,6 +255,20 @@ struct Inner {
     budget: Mutex<BudgetState>,
     tenants: AtomicUsize,
     stats: Mutex<ServeStats>,
+    supervisor: Supervisor,
+    retry: RetryPolicy,
+    /// `serve.record_dir` parsed once; `None` = in-memory records only.
+    record_dir: Option<PathBuf>,
+}
+
+impl Inner {
+    fn persist_record(&self, sid: u64, record: &SessionRecord) {
+        if let Some(dir) = &self.record_dir {
+            // Best-effort spill: a failed write degrades durability (a
+            // leader restart loses the session), never availability.
+            let _ = record.save(&dir.join(format!("session-{sid}.ckpt")));
+        }
+    }
 }
 
 /// The serving front-end. [`Server::start`] spawns the shard workers
@@ -246,8 +333,13 @@ impl Server {
         let limit = opts.budget().bytes();
         // Retry-after hint ≈ one gathering tick (min 1 ms).
         let retry_after_ms = opts.tick_ms.max(1);
+        let record_dir =
+            if opts.record_dir.is_empty() { None } else { Some(PathBuf::from(&opts.record_dir)) };
         let inner = Arc::new(Inner {
             queue: RequestQueue::new(opts.queue_depth, retry_after_ms),
+            retry: RetryPolicy { max_retries: opts.max_retries, ..RetryPolicy::default() },
+            supervisor: Supervisor::default(),
+            record_dir,
             opts,
             solver,
             sessions: Mutex::new(HashMap::new()),
@@ -285,6 +377,36 @@ impl Server {
     /// Which transport backs this server (`"channels"` / `"socket"`).
     pub fn transport_name(&self) -> &'static str {
         self.inner.solver.transport_name()
+    }
+
+    /// Fault injection: kill shard worker `w` (blocks until the death
+    /// is observable). Used by `dngd chaos` and the soak tests.
+    pub fn inject_kill(&self, w: usize) {
+        self.inner.solver.kill_worker(w);
+    }
+
+    /// Fault injection: stall shard worker `w` for `ms` milliseconds
+    /// (fire-and-forget; the worker stays healthy, just slow).
+    pub fn inject_stall(&self, w: usize, ms: u64) {
+        self.inner.solver.stall_worker(w, ms);
+    }
+
+    /// Fault injection: write a garbage length prefix at worker `w`'s
+    /// framing layer. Returns false when the transport has no frames to
+    /// corrupt (channels).
+    pub fn inject_corrupt_frame(&self, w: usize) -> bool {
+        self.inner.solver.inject_corrupt_frame(w)
+    }
+
+    /// Live session count — the chaos harness' session-leak check.
+    pub fn live_sessions(&self) -> usize {
+        self.inner.sessions.lock().unwrap().len()
+    }
+
+    /// Bytes currently charged against the admission budget — the
+    /// chaos harness' budget-leak check (0 once every session closed).
+    pub fn admitted_bytes(&self) -> u64 {
+        self.inner.budget.lock().unwrap().admitted
     }
 
     /// Stop admission, drain the queue, join the dispatcher, and — if
@@ -358,15 +480,33 @@ impl Client {
             }
             b.admitted += bytes;
         }
+        // The durable record is cut before the scores move backend-ward,
+        // so recovery never depends on distributed state.
+        let record = SessionRecord::new(&scores, lambda, self.inner.opts.snapshot_every);
         // Cold staging runs on the tenant thread (the transport demuxes
         // concurrent requests), so a slow admit never stalls dispatch.
         let mut fact = ShardedCholSolver::window_session(&self.inner.solver, scores);
         if let Err(e) = fact.redamp(lambda) {
-            self.inner.budget.lock().unwrap().admitted -= bytes;
-            return Err(e.into());
+            // A dead worker at admission is recoverable: heal the pool
+            // and restage once from the record's snapshot.
+            let fatal = matches!(e, SolveError::Backend { retryable: false, .. });
+            if !(fatal && self.inner.opts.supervise) {
+                self.inner.budget.lock().unwrap().admitted -= bytes;
+                return Err(e.into());
+            }
+            let report = self.inner.supervisor.heal(&self.inner.solver);
+            self.inner.stats.lock().unwrap().worker_respawns += report.respawned as u64;
+            drop(fact);
+            fact =
+                ShardedCholSolver::window_session(&self.inner.solver, record.snapshot().clone());
+            if let Err(e2) = fact.redamp(lambda) {
+                self.inner.budget.lock().unwrap().admitted -= bytes;
+                return Err(e2.into());
+            }
         }
         let sid = self.inner.next_session.fetch_add(1, Ordering::Relaxed) + 1;
-        self.inner.sessions.lock().unwrap().insert(sid, TenantSession { fact, bytes });
+        self.inner.persist_record(sid, &record);
+        self.inner.sessions.lock().unwrap().insert(sid, TenantSession { fact, bytes, record });
         Ok(sid)
     }
 
@@ -391,6 +531,9 @@ impl Client {
             .remove(&sid)
             .ok_or(ServeError::UnknownSession(sid))?;
         self.inner.budget.lock().unwrap().admitted -= sess.bytes;
+        if let Some(dir) = &self.inner.record_dir {
+            let _ = std::fs::remove_file(dir.join(format!("session-{sid}.ckpt")));
+        }
         drop(sess); // frees the worker shards (blocking DropShard fan-out)
         Ok(())
     }
@@ -416,7 +559,15 @@ impl Client {
             ))));
         }
         let (tx, rx) = channel();
-        let item = Pending::Solve(SolveItem { sid, lambda, rhs: rhs.to_vec(), reply: tx });
+        let now = Instant::now();
+        let item = Pending::Solve(SolveItem {
+            sid,
+            lambda,
+            rhs: rhs.to_vec(),
+            reply: tx,
+            enqueued: now,
+            deadline: now + Duration::from_millis(self.inner.opts.deadline_ms),
+        });
         match self.inner.queue.try_push(item) {
             Ok(()) => {
                 self.inner.stats.lock().unwrap().submitted += 1;
@@ -429,26 +580,90 @@ impl Client {
         }
     }
 
-    /// Blocking solve: [`Client::solve_async`] + wait.
+    /// Blocking solve: [`Client::solve_async`] + wait, resubmitting on
+    /// retryable rejections (admission back-pressure, transient backend
+    /// faults). Sleeps the server's retry-after hint when one is given,
+    /// else the capped-exponential backoff, until the per-request
+    /// deadline — then reports [`ServeError::DeadlineExceeded`] with
+    /// how long it tried and how many resubmits it burned.
     pub fn solve(&self, sid: u64, lambda: f64, rhs: &[f64]) -> Result<Vec<f64>, ServeError> {
-        self.solve_async(sid, lambda, rhs)?.wait()
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(self.inner.opts.deadline_ms);
+        let mut retries: u64 = 0;
+        loop {
+            let err = match self.solve_async(sid, lambda, rhs) {
+                Ok(ticket) => match ticket.wait() {
+                    Ok(x) => return Ok(x),
+                    Err(e) => e,
+                },
+                Err(e) => e,
+            };
+            if !err.is_retryable() {
+                return Err(err);
+            }
+            let backoff = Duration::from_millis(
+                err.retry_after_ms()
+                    .unwrap_or(0)
+                    .max(self.inner.retry.backoff_ms(retries.min(63) as u32, sid)),
+            );
+            if Instant::now() + backoff >= deadline {
+                return Err(ServeError::DeadlineExceeded {
+                    elapsed_ms: start.elapsed().as_millis() as u64,
+                    retries,
+                });
+            }
+            thread::sleep(backoff);
+            retries += 1;
+        }
     }
 
     /// Rotate rows of the session's sliding window (the PR-5 streaming
     /// `update_rows`), serialized through the dispatch queue so a
     /// tick's solves always see a consistent window. Blocks for the
-    /// result.
+    /// result. Only *admission* rejections are resubmitted (hint-aware,
+    /// deadline-bounded): once dispatched, a rotation may have mutated
+    /// the window, so its outcome is reported as-is.
     pub fn rotate(&self, sid: u64, removed: &[usize], added: Mat) -> Result<(), ServeError> {
         if !self.inner.sessions.lock().unwrap().contains_key(&sid) {
             return Err(ServeError::UnknownSession(sid));
         }
-        let (tx, rx) = channel();
-        let item = Pending::Rotate(RotateItem { sid, removed: removed.to_vec(), added, reply: tx });
-        if let Err(e) = self.inner.queue.try_push(item) {
-            self.inner.stats.lock().unwrap().rejected += 1;
-            return Err(e);
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(self.inner.opts.deadline_ms);
+        let mut retries: u64 = 0;
+        loop {
+            let (tx, rx) = channel();
+            let item = Pending::Rotate(RotateItem {
+                sid,
+                removed: removed.to_vec(),
+                added: added.clone(),
+                reply: tx,
+                enqueued: Instant::now(),
+                deadline,
+            });
+            let err = match self.inner.queue.try_push(item) {
+                Ok(()) => return rx.recv().unwrap_or(Err(ServeError::ShuttingDown)),
+                Err(e) => {
+                    self.inner.stats.lock().unwrap().rejected += 1;
+                    e
+                }
+            };
+            if !err.is_retryable() {
+                return Err(err);
+            }
+            let backoff = Duration::from_millis(
+                err.retry_after_ms()
+                    .unwrap_or(0)
+                    .max(self.inner.retry.backoff_ms(retries.min(63) as u32, sid)),
+            );
+            if Instant::now() + backoff >= deadline {
+                return Err(ServeError::DeadlineExceeded {
+                    elapsed_ms: start.elapsed().as_millis() as u64,
+                    retries,
+                });
+            }
+            thread::sleep(backoff);
+            retries += 1;
         }
-        rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
     }
 }
 
@@ -495,6 +710,153 @@ fn gather_tick(inner: &Inner) {
     }
 }
 
+fn fatal_backend(e: &SolveError) -> bool {
+    matches!(e, SolveError::Backend { retryable: false, .. })
+}
+
+/// Heal the worker pool, then rebuild this session's distributed state
+/// from its durable record. Prefers the **replay** path — stage the
+/// snapshot, redamp at the recorded λ, replay the rotation log through
+/// the ordinary `update_rows` — which executes the same leader-side
+/// arithmetic in the same order as the unfailed run. Falls back to a
+/// **cold refactor** of the fully-materialized window when replay
+/// itself fails (e.g. a worker died again mid-replay).
+fn heal_and_rematerialize(inner: &Inner, sess: &mut TenantSession) -> Result<(), ServeError> {
+    let report = inner.supervisor.heal(&inner.solver);
+    inner.stats.lock().unwrap().worker_respawns += report.respawned as u64;
+    let lambda = sess.record.lambda();
+    let replayed = (|| -> Result<ShardedWindowSession, SolveError> {
+        let mut fact =
+            ShardedCholSolver::window_session(&inner.solver, sess.record.snapshot().clone());
+        fact.redamp(lambda)?;
+        for e in sess.record.log() {
+            fact.update_rows(&e.removed, &e.added)?;
+        }
+        Ok(fact)
+    })();
+    match replayed {
+        Ok(fact) => {
+            // The broken session drops here; DropShard on a respawned
+            // (empty) worker is a no-op ack.
+            sess.fact = fact;
+            inner.stats.lock().unwrap().session_replays += 1;
+            Ok(())
+        }
+        Err(_) => {
+            let window = sess.record.materialize_window().map_err(|e| {
+                ServeError::Solver(SolveError::BadInput(format!("session record: {e}")))
+            })?;
+            let mut fact = ShardedCholSolver::window_session(&inner.solver, window);
+            fact.redamp(lambda).map_err(ServeError::from)?;
+            sess.fact = fact;
+            inner.stats.lock().unwrap().session_refactors += 1;
+            Ok(())
+        }
+    }
+}
+
+/// Graceful degradation: answer a panel from a leader-local Cholesky
+/// of the recorded window when the distributed path cannot be
+/// recovered in time. Slower (no sharding) but exactly the same
+/// Algorithm-1 arithmetic — flagged via `ServeStats::local_fallbacks`.
+fn local_fallback(
+    inner: &Inner,
+    sess: &TenantSession,
+    g: &SolveGroup,
+    panel: &Mat,
+) -> Result<Mat, ServeError> {
+    let window = sess
+        .record
+        .materialize_window()
+        .map_err(|e| ServeError::Solver(SolveError::BadInput(format!("session record: {e}"))))?;
+    let local = CholSolver::with_config(inner.opts.kernel);
+    let l = local.gram_factor(&window, g.lambda)?;
+    let mut xs = Mat::zeros(panel.rows(), panel.cols());
+    for i in 0..panel.rows() {
+        let x = local.solve_with_factor(&window, &l, panel.row(i), g.lambda);
+        xs.row_mut(i).copy_from_slice(&x);
+    }
+    inner.stats.lock().unwrap().local_fallbacks += 1;
+    Ok(xs)
+}
+
+/// Apply one rotation: `update_rows`, with one heal + re-materialize +
+/// retry round on a fatal transport fault (safe because recovery
+/// rebuilds the *pre-rotation* state from the record, so the retried
+/// rotation applies exactly once). Success is logged into the session
+/// record, refreshing the snapshot at the configured cadence.
+fn apply_rotate_item(inner: &Inner, sess: &mut TenantSession, r: &RotateItem) -> Result<(), ServeError> {
+    let mut res = sess.fact.update_rows(&r.removed, &r.added);
+    if let Err(e) = &res {
+        if inner.opts.supervise && fatal_backend(e) {
+            heal_and_rematerialize(inner, sess)?;
+            res = sess.fact.update_rows(&r.removed, &r.added);
+        }
+    }
+    res.map_err(ServeError::from)?;
+    if sess.record.record_rotation(&r.removed, &r.added, sess.fact.window()) {
+        inner.stats.lock().unwrap().snapshots += 1;
+    }
+    inner.persist_record(r.sid, &sess.record);
+    Ok(())
+}
+
+/// Solve one coalesced panel with the full fault policy: transient
+/// faults retry under capped backoff (deadline-bounded), the first
+/// fatal fault heals + re-materializes + retries, and a second fatal
+/// round (or failed/late recovery) degrades to the leader-local path.
+fn solve_group(inner: &Inner, sess: &mut TenantSession, g: &SolveGroup) -> Result<Mat, ServeError> {
+    let m = sess.fact.dim();
+    let k = g.rows.len();
+    let mut data = Vec::with_capacity(k * m);
+    for row in &g.rows {
+        data.extend_from_slice(row);
+    }
+    let panel = Mat::from_vec(k, m, data);
+    let mut attempt: u32 = 0;
+    let mut healed = false;
+    loop {
+        if Instant::now() >= g.deadline {
+            inner.stats.lock().unwrap().deadline_exceeded += k as u64;
+            return Err(ServeError::DeadlineExceeded {
+                elapsed_ms: g.enqueued.elapsed().as_millis() as u64,
+                retries: u64::from(attempt),
+            });
+        }
+        let res = (|| -> Result<Mat, SolveError> {
+            if sess.fact.lambda().to_bits() != g.lambda.to_bits() {
+                sess.fact.redamp(g.lambda)?;
+                sess.record.set_lambda(g.lambda);
+                inner.persist_record(g.sid, &sess.record);
+            }
+            sess.fact.solve_many(&panel)
+        })();
+        let e = match res {
+            Ok(xs) => return Ok(xs),
+            Err(e) => e,
+        };
+        if matches!(e, SolveError::Backend { retryable: true, .. })
+            && attempt < inner.opts.max_retries
+        {
+            attempt += 1;
+            inner.stats.lock().unwrap().backend_retries += 1;
+            let sleep = Duration::from_millis(inner.retry.backoff_ms(attempt - 1, g.sid));
+            thread::sleep(sleep.min(g.deadline.saturating_duration_since(Instant::now())));
+            continue;
+        }
+        if !fatal_backend(&e) || !inner.opts.supervise {
+            return Err(e.into());
+        }
+        if !healed {
+            healed = true;
+            if heal_and_rematerialize(inner, sess).is_ok() && Instant::now() < g.deadline {
+                continue; // retry the panel against the recovered session
+            }
+        }
+        return local_fallback(inner, sess, g, &panel);
+    }
+}
+
 fn process_batch(inner: &Inner, batch: Vec<Pending>) {
     if batch.is_empty() {
         return;
@@ -507,6 +869,35 @@ fn process_batch(inner: &Inner, batch: Vec<Pending>) {
             Pending::Rotate(r) => rotates.push(r),
         }
     }
+    // Requests that aged out while queued get their typed answer now
+    // instead of burning backend work they can no longer use.
+    let now = Instant::now();
+    let mut expired = 0u64;
+    rotates.retain(|r| {
+        if now < r.deadline {
+            return true;
+        }
+        expired += 1;
+        let _ = r.reply.send(Err(ServeError::DeadlineExceeded {
+            elapsed_ms: now.duration_since(r.enqueued).as_millis() as u64,
+            retries: 0,
+        }));
+        false
+    });
+    solves.retain(|s| {
+        if now < s.deadline {
+            return true;
+        }
+        expired += 1;
+        let _ = s.reply.send(Err(ServeError::DeadlineExceeded {
+            elapsed_ms: now.duration_since(s.enqueued).as_millis() as u64,
+            retries: 0,
+        }));
+        false
+    });
+    if expired > 0 {
+        inner.stats.lock().unwrap().deadline_exceeded += expired;
+    }
     let mut sessions = inner.sessions.lock().unwrap();
 
     // Rotations first, in arrival order: a tick's solves run against
@@ -514,7 +905,7 @@ fn process_batch(inner: &Inner, batch: Vec<Pending>) {
     for r in rotates {
         let res = match sessions.get_mut(&r.sid) {
             None => Err(ServeError::UnknownSession(r.sid)),
-            Some(sess) => sess.fact.update_rows(&r.removed, &r.added).map_err(ServeError::from),
+            Some(sess) => apply_rotate_item(inner, sess, &r),
         };
         if res.is_ok() {
             inner.stats.lock().unwrap().rotations += 1;
@@ -532,18 +923,7 @@ fn process_batch(inner: &Inner, batch: Vec<Pending>) {
             }
             continue;
         };
-        let m = sess.fact.dim();
-        let res = (|| -> Result<Mat, ServeError> {
-            if sess.fact.lambda().to_bits() != g.lambda.to_bits() {
-                sess.fact.redamp(g.lambda)?;
-            }
-            let mut data = Vec::with_capacity(k * m);
-            for row in &g.rows {
-                data.extend_from_slice(row);
-            }
-            Ok(sess.fact.solve_many(&Mat::from_vec(k, m, data))?)
-        })();
-        match res {
+        match solve_group(inner, sess, &g) {
             Ok(xs) => {
                 {
                     let mut st = inner.stats.lock().unwrap();
@@ -796,6 +1176,150 @@ mod tests {
             .is_err());
         assert!(ServeOptions { budget_gb: -1.0, ..ServeOptions::default() }.validate().is_err());
         assert!(ServeOptions { workers: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { deadline_ms: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { deadline_ms: 600_001, ..ServeOptions::default() }
+            .validate()
+            .is_err());
+        assert!(ServeOptions { snapshot_every: 0, ..ServeOptions::default() }.validate().is_err());
         ServeOptions::default().validate().unwrap();
+    }
+
+    #[test]
+    fn killed_worker_recovers_transparently_via_replay() {
+        let mut rng = Rng::seed_from(447);
+        let s = Mat::randn(8, 40, &mut rng);
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let server = Server::start(quick_opts()).unwrap();
+        let client = server.client().unwrap();
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        let x0 = client.solve(sid, 0.1, &v).unwrap();
+        server.inject_kill(0);
+        let x1 = client.solve(sid, 0.1, &v).unwrap();
+        for (a, b) in x1.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-9, "recovered {a} vs pre-fault {b}");
+        }
+        let x_ref = reference_solve(&s, &v, 0.1);
+        for (a, b) in x1.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-9, "recovered {a} vs direct {b}");
+        }
+        client.close_session(sid).unwrap();
+        assert_eq!(server.live_sessions(), 0);
+        assert_eq!(server.admitted_bytes(), 0);
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.worker_respawns, 1, "exactly one worker died: {stats:?}");
+        assert_eq!(stats.session_replays, 1, "recovery must take the replay path: {stats:?}");
+        assert_eq!(stats.local_fallbacks, 0, "distributed recovery must suffice: {stats:?}");
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn rotation_after_kill_replays_the_log_then_applies_once() {
+        let mut rng = Rng::seed_from(448);
+        let s = Mat::randn(8, 40, &mut rng);
+        let server = Server::start(quick_opts()).unwrap();
+        let client = server.client().unwrap();
+        let sid = client.open_session(s.clone(), 0.1).unwrap();
+        let a1 = Mat::randn(1, 40, &mut rng);
+        let a2 = Mat::randn(2, 40, &mut rng);
+        client.rotate(sid, &[0], a1.clone()).unwrap();
+        server.inject_kill(1);
+        client.rotate(sid, &[2, 4], a2.clone()).unwrap();
+        // Reference: both rotations applied by hand, cold factor.
+        let rot = |w: &Mat, removed: &[usize], added: &Mat| -> Mat {
+            let kept: Vec<usize> =
+                (0..w.rows()).filter(|i| !removed.contains(i)).collect();
+            let mut out = Mat::zeros(kept.len() + added.rows(), w.cols());
+            for (dst, &src) in kept.iter().enumerate() {
+                out.row_mut(dst).copy_from_slice(w.row(src));
+            }
+            for r in 0..added.rows() {
+                out.row_mut(kept.len() + r).copy_from_slice(added.row(r));
+            }
+            out
+        };
+        let w_ref = rot(&rot(&s, &[0], &a1), &[2, 4], &a2);
+        let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let x = client.solve(sid, 0.1, &v).unwrap();
+        let x_ref = reference_solve(&w_ref, &v, 0.1);
+        for (a, b) in x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-9, "post-recovery rotate {a} vs cold {b}");
+        }
+        client.close_session(sid).unwrap();
+        drop(client);
+        let stats = server.shutdown();
+        assert_eq!(stats.rotations, 2, "the retried rotation applies exactly once: {stats:?}");
+        assert_eq!(stats.worker_respawns, 1);
+        assert_eq!(stats.session_replays, 1);
+    }
+
+    #[test]
+    fn supervision_off_preserves_typed_fatal_errors() {
+        let opts = ServeOptions { supervise: false, ..quick_opts() };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(449);
+        let sid = client.open_session(Mat::randn(6, 30, &mut rng), 0.1).unwrap();
+        server.inject_kill(0);
+        match client.solve(sid, 0.1, &[1.0; 30]) {
+            Err(ServeError::Solver(SolveError::Backend { retryable: false, .. })) => {}
+            other => panic!("expected fatal Backend, got {:?}", other.map(|_| ())),
+        }
+        let stats = server.stats();
+        assert_eq!(stats.worker_respawns, 0);
+        assert_eq!(stats.local_fallbacks, 0);
+    }
+
+    #[test]
+    fn expired_requests_get_deadline_exceeded_with_progress() {
+        // 1 ms deadline, 50 ms gathering tick: the request ages out in
+        // the queue and must be answered typed, not solved.
+        let opts = ServeOptions { deadline_ms: 1, tick_ms: 50, ..quick_opts() };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(450);
+        let sid = client.open_session(Mat::randn(6, 30, &mut rng), 0.1).unwrap();
+        let t = client.solve_async(sid, 0.1, &[1.0; 30]).unwrap();
+        match t.wait() {
+            Err(ServeError::DeadlineExceeded { elapsed_ms, retries }) => {
+                assert!(elapsed_ms >= 1, "progress stats must carry time in flight");
+                assert_eq!(retries, 0);
+            }
+            other => panic!("expected DeadlineExceeded, got {:?}", other.map(|_| ())),
+        }
+        let stats = server.stats();
+        assert_eq!(stats.deadline_exceeded, 1);
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn session_records_spill_and_vacate_record_dir() {
+        let dir = std::env::temp_dir().join("dngd_test_serve_records");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = ServeOptions {
+            snapshot_every: 2,
+            record_dir: dir.to_string_lossy().into_owned(),
+            ..quick_opts()
+        };
+        let server = Server::start(opts).unwrap();
+        let client = server.client().unwrap();
+        let mut rng = Rng::seed_from(451);
+        let s = Mat::randn(6, 30, &mut rng);
+        let sid = client.open_session(s, 0.1).unwrap();
+        let path = dir.join(format!("session-{sid}.ckpt"));
+        assert!(path.exists(), "open must cut a durable record");
+        let add = Mat::randn(1, 30, &mut rng);
+        client.rotate(sid, &[0], add.clone()).unwrap();
+        let rec = SessionRecord::load(&path).unwrap();
+        assert_eq!(rec.replay_len(), 1, "one rotation since snapshot");
+        client.rotate(sid, &[1], add).unwrap();
+        let rec = SessionRecord::load(&path).unwrap();
+        assert_eq!(rec.replay_len(), 0, "cadence 2 must refresh the snapshot");
+        assert_eq!(server.stats().snapshots, 1);
+        client.close_session(sid).unwrap();
+        assert!(!path.exists(), "close must remove the record");
+        drop(client);
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,474 @@
+//! Worker supervision and durable session records (PR 8).
+//!
+//! Three pieces, all transport-agnostic:
+//!
+//! * [`SessionRecord`] — the durable state needed to re-materialize a
+//!   serving session after a worker dies: a score-window snapshot plus
+//!   the rotation log since that snapshot. Recovery replays the log
+//!   through the ordinary `update_rows` path, so a recovered factor is
+//!   numerically identical to an unfailed run (the replayed rotations
+//!   execute the same leader-side arithmetic in the same order). The
+//!   record round-trips through the PR-4 [`Checkpoint`] container so it
+//!   can be spilled to disk (`serve.record_dir`) or kept in memory.
+//! * [`RetryPolicy`] — capped exponential backoff with *deterministic*
+//!   jitter (no wall-clock entropy; tests pin exact sleep values).
+//! * [`Supervisor`] — probes every worker of a [`ShardedCholSolver`]
+//!   and respawns/reconnects the dead ones via the transport's
+//!   `recover` hook, reporting what it found in a [`HealReport`].
+//!   Revived workers come back with *empty* shard maps; the serving
+//!   layer owns re-materializing affected sessions from their records.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::checkpoint::{Checkpoint, CheckpointError};
+use crate::coordinator::ShardedCholSolver;
+use crate::linalg::Mat;
+
+/// One `update_rows` call, as recorded: which window rows were dropped
+/// and what was appended. Replayed verbatim during recovery.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RotationEntry {
+    pub removed: Vec<usize>,
+    pub added: Mat,
+}
+
+/// Durable record of a serving session: window snapshot + rotation log.
+///
+/// The log grows by one entry per rotation; every `snapshot_every`
+/// entries the snapshot is refreshed from the live window and the log
+/// cleared, bounding replay length R at recovery time. The recovery
+/// cost model (EXPERIMENTS.md §Fault-tolerance) trades snapshot size
+/// (n·m·8 bytes, re-serialized each refresh) against R replayed
+/// rotations (O(k·n·m + k·n²) each).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionRecord {
+    snapshot: Mat,
+    lambda: f64,
+    log: Vec<RotationEntry>,
+    snapshot_every: usize,
+}
+
+/// Apply one logged rotation leader-side, mirroring the semantics of
+/// the distributed `update_rows` path (sorted removals, kept rows in
+/// order, added rows appended). Entries were validated when first
+/// applied, so any failure here means the record itself is corrupt.
+fn apply_rotation(window: &Mat, removed: &[usize], added: &Mat) -> Result<Mat, CheckpointError> {
+    let n = window.rows();
+    let m = window.cols();
+    let k_add = added.rows();
+    if k_add > 0 && added.cols() != m {
+        return Err(CheckpointError::Corrupt(format!(
+            "rotation log: added rows have {} cols, window has {m}",
+            added.cols()
+        )));
+    }
+    let mut rem: Vec<usize> = removed.to_vec();
+    rem.sort_unstable();
+    let before = rem.len();
+    rem.dedup();
+    if rem.len() != before {
+        return Err(CheckpointError::Corrupt("rotation log: duplicate removal index".into()));
+    }
+    if let Some(&bad) = rem.iter().find(|&&r| r >= n) {
+        return Err(CheckpointError::Corrupt(format!(
+            "rotation log: removal index {bad} out of range (window has {n} rows)"
+        )));
+    }
+    let n_kept = n - rem.len();
+    if n_kept + k_add == 0 {
+        return Err(CheckpointError::Corrupt("rotation log: rotation empties the window".into()));
+    }
+    let mut keep = vec![true; n];
+    for &r in &rem {
+        keep[r] = false;
+    }
+    let mut out = Mat::zeros(n_kept + k_add, m);
+    let mut dst = 0usize;
+    for src in 0..n {
+        if keep[src] {
+            out.row_mut(dst).copy_from_slice(window.row(src));
+            dst += 1;
+        }
+    }
+    for r in 0..k_add {
+        out.row_mut(n_kept + r).copy_from_slice(added.row(r));
+    }
+    Ok(out)
+}
+
+impl SessionRecord {
+    /// Start a record from a freshly opened session's window.
+    pub fn new(window: &Mat, lambda: f64, snapshot_every: usize) -> SessionRecord {
+        SessionRecord {
+            snapshot: window.clone(),
+            lambda,
+            log: Vec::new(),
+            snapshot_every: snapshot_every.max(1),
+        }
+    }
+
+    /// Track a λ change so recovery re-damps at the live value.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        self.lambda = lambda;
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// The window as of the last snapshot refresh.
+    pub fn snapshot(&self) -> &Mat {
+        &self.snapshot
+    }
+
+    /// Rotations applied since the snapshot, oldest first.
+    pub fn log(&self) -> &[RotationEntry] {
+        &self.log
+    }
+
+    /// Rotations a recovery would replay.
+    pub fn replay_len(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Payload bytes held by the snapshot matrix.
+    pub fn snapshot_bytes(&self) -> usize {
+        self.snapshot.rows() * self.snapshot.cols() * std::mem::size_of::<f64>()
+    }
+
+    /// Log a successful rotation. `current` is the live window *after*
+    /// the rotation; when the log reaches the snapshot cadence the
+    /// snapshot is refreshed from it and the log cleared. Returns true
+    /// iff a snapshot refresh happened (callers count these).
+    pub fn record_rotation(&mut self, removed: &[usize], added: &Mat, current: &Mat) -> bool {
+        self.log.push(RotationEntry { removed: removed.to_vec(), added: added.clone() });
+        if self.log.len() >= self.snapshot_every {
+            self.snapshot = current.clone();
+            self.log.clear();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Reconstruct the live window leader-side: snapshot + full log.
+    /// Used by the cold-refactor and local-fallback recovery paths
+    /// (the replay path instead feeds the log through `update_rows`).
+    pub fn materialize_window(&self) -> Result<Mat, CheckpointError> {
+        let mut w = self.snapshot.clone();
+        for e in &self.log {
+            w = apply_rotation(&w, &e.removed, &e.added)?;
+        }
+        Ok(w)
+    }
+
+    /// Encode into the PR-4 checkpoint container. Tensors: `meta` =
+    /// `[lambda, snapshot_every, log_len]`, `snapshot` (shape-headed
+    /// matrix), and per entry `log.{i}.removed` / `log.{i}.added`.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.insert(
+            "meta",
+            vec![self.lambda, self.snapshot_every as f64, self.log.len() as f64],
+        );
+        ck.insert_mat("snapshot", &self.snapshot);
+        for (i, e) in self.log.iter().enumerate() {
+            ck.insert(
+                &format!("log.{i}.removed"),
+                e.removed.iter().map(|&r| r as f64).collect(),
+            );
+            ck.insert_mat(&format!("log.{i}.added"), &e.added);
+        }
+        ck
+    }
+
+    /// Decode a record written by [`SessionRecord::to_checkpoint`],
+    /// validating every field it trusts.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<SessionRecord, CheckpointError> {
+        let meta = ck
+            .get("meta")
+            .ok_or_else(|| CheckpointError::Corrupt("session record: missing meta".into()))?;
+        if meta.len() != 3 {
+            return Err(CheckpointError::Corrupt(format!(
+                "session record: meta has {} values, want 3",
+                meta.len()
+            )));
+        }
+        let lambda = meta[0];
+        let usize_field = |v: f64, what: &str| -> Result<usize, CheckpointError> {
+            if v < 0.0 || v.fract() != 0.0 {
+                return Err(CheckpointError::Corrupt(format!(
+                    "session record: non-integral {what} ({v})"
+                )));
+            }
+            Ok(v as usize)
+        };
+        let snapshot_every = usize_field(meta[1], "snapshot cadence")?;
+        if snapshot_every == 0 {
+            return Err(CheckpointError::Corrupt("session record: zero snapshot cadence".into()));
+        }
+        let n_log = usize_field(meta[2], "log length")?;
+        let snapshot = ck.get_mat("snapshot")?;
+        let mut log = Vec::with_capacity(n_log);
+        for i in 0..n_log {
+            let name = format!("log.{i}.removed");
+            let raw = ck.get(&name).ok_or_else(|| {
+                CheckpointError::Corrupt(format!("session record: missing tensor {name:?}"))
+            })?;
+            let mut removed = Vec::with_capacity(raw.len());
+            for &v in raw {
+                removed.push(usize_field(v, "removal index")?);
+            }
+            let added = ck.get_mat(&format!("log.{i}.added"))?;
+            log.push(RotationEntry { removed, added });
+        }
+        Ok(SessionRecord { snapshot, lambda, log, snapshot_every })
+    }
+
+    /// Persist atomically (tmp + rename, via the checkpoint layer).
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        self.to_checkpoint().save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<SessionRecord, CheckpointError> {
+        SessionRecord::from_checkpoint(&Checkpoint::load(path)?)
+    }
+}
+
+/// SplitMix64 finalizer: cheap, well-mixed, and fully deterministic —
+/// the jitter source for backoff (tests pin exact values).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Capped exponential backoff with deterministic jitter.
+///
+/// Attempt `a` sleeps a value in `[exp/2, exp]` where
+/// `exp = min(cap_ms, base_ms · 2^a)` — the classic "equal jitter"
+/// scheme, except the jitter is a hash of `(attempt, salt)` rather
+/// than wall-clock randomness, so retry schedules are reproducible
+/// under a fixed salt (the serving layer salts by request id).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    pub base_ms: u64,
+    pub cap_ms: u64,
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { base_ms: 10, cap_ms: 1_000, max_retries: 4 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(base_ms: u64, cap_ms: u64, max_retries: u32) -> RetryPolicy {
+        RetryPolicy { base_ms, cap_ms: cap_ms.max(base_ms), max_retries }
+    }
+
+    /// Backoff for the given (0-based) attempt, jittered by `salt`.
+    pub fn backoff_ms(&self, attempt: u32, salt: u64) -> u64 {
+        let exp = self
+            .base_ms
+            .saturating_mul(1u64.checked_shl(attempt.min(32)).unwrap_or(u64::MAX))
+            .min(self.cap_ms);
+        let lo = exp / 2;
+        let span = exp - lo + 1;
+        lo + splitmix64(salt ^ (u64::from(attempt) << 48)) % span
+    }
+}
+
+/// What a [`Supervisor::heal`] sweep found and did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HealReport {
+    /// Workers probed (= the solver's worker count).
+    pub probed: usize,
+    /// Workers that failed the health probe.
+    pub dead: Vec<usize>,
+    /// Dead workers successfully revived (respawned or reconnected)
+    /// and re-probed healthy.
+    pub respawned: usize,
+    /// Dead workers that could not be revived.
+    pub failed: Vec<usize>,
+}
+
+impl HealReport {
+    /// True iff every worker is (now) healthy.
+    pub fn healthy(&self) -> bool {
+        self.failed.is_empty()
+    }
+}
+
+/// Health-checks a sharded solver's workers and revives the dead ones.
+///
+/// Channel-backed workers are respawned as fresh threads; socket-backed
+/// workers get a fresh socket pair + worker thread. Either way the
+/// revived worker's shard map is empty — callers must re-materialize
+/// sessions (see [`SessionRecord`]) before routing work at it.
+#[derive(Debug, Clone, Copy)]
+pub struct Supervisor {
+    probe_timeout: Duration,
+}
+
+impl Default for Supervisor {
+    fn default() -> Self {
+        Supervisor { probe_timeout: Duration::from_millis(500) }
+    }
+}
+
+impl Supervisor {
+    /// `probe_timeout` bounds how long one health probe may wait for a
+    /// Ping reply. Dead workers fail fast (their reply channel is
+    /// dropped); the timeout only matters for stalled-but-alive ones,
+    /// so keep it generous to avoid respawning a merely busy worker.
+    pub fn new(probe_timeout: Duration) -> Supervisor {
+        Supervisor { probe_timeout }
+    }
+
+    /// Probe every worker; revive the ones that fail. Returns what
+    /// happened — callers decide how to re-materialize sessions.
+    pub fn heal(&self, solver: &ShardedCholSolver) -> HealReport {
+        let mut report = HealReport { probed: solver.workers(), ..HealReport::default() };
+        for w in 0..solver.workers() {
+            if solver.probe_worker(w, self.probe_timeout) {
+                continue;
+            }
+            report.dead.push(w);
+            let revived = solver.recover_worker(w).is_ok()
+                && solver.probe_worker(w, self.probe_timeout);
+            if revived {
+                report.respawned += 1;
+            } else {
+                report.failed.push(w);
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn test_window(n: usize, m: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seed_from(seed);
+        Mat::randn(n, m, &mut rng)
+    }
+
+    #[test]
+    fn record_roundtrips_through_checkpoint_bytes() {
+        let w = test_window(6, 5, 11);
+        let mut rng = Rng::seed_from(12);
+        let mut rec = SessionRecord::new(&w, 0.25, 16);
+        rec.record_rotation(&[0, 3], &Mat::randn(2, 5, &mut rng), &w);
+        rec.record_rotation(&[1], &Mat::randn(1, 5, &mut rng), &w);
+        rec.set_lambda(0.5);
+        let bytes = rec.to_checkpoint().to_bytes();
+        let back =
+            SessionRecord::from_checkpoint(&Checkpoint::from_bytes(&bytes).unwrap()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.replay_len(), 2);
+        assert_eq!(back.lambda().to_bits(), 0.5f64.to_bits());
+        for (a, b) in back.snapshot().as_slice().iter().zip(rec.snapshot().as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_cadence_refreshes_and_clears_log() {
+        let w0 = test_window(4, 3, 21);
+        let mut rec = SessionRecord::new(&w0, 1e-3, 2);
+        let add = test_window(1, 3, 22);
+        let w1 = apply_rotation(&w0, &[0], &add).unwrap();
+        assert!(!rec.record_rotation(&[0], &add, &w1), "first rotation below cadence");
+        assert_eq!(rec.replay_len(), 1);
+        let w2 = apply_rotation(&w1, &[1], &add).unwrap();
+        assert!(rec.record_rotation(&[1], &add, &w2), "cadence hit refreshes snapshot");
+        assert_eq!(rec.replay_len(), 0, "log cleared at refresh");
+        for (a, b) in rec.snapshot().as_slice().iter().zip(w2.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(rec.snapshot_bytes(), 4 * 3 * 8);
+    }
+
+    #[test]
+    fn materialized_window_matches_directly_rotated() {
+        let w0 = test_window(8, 4, 31);
+        let mut rng = Rng::seed_from(32);
+        let mut rec = SessionRecord::new(&w0, 1e-2, 64);
+        let mut live = w0.clone();
+        for (k, rem) in [vec![2usize, 5], vec![0], vec![3, 1]].into_iter().enumerate() {
+            let add = Mat::randn(k + 1, 4, &mut rng);
+            live = apply_rotation(&live, &rem, &add).unwrap();
+            rec.record_rotation(&rem, &add, &live);
+        }
+        let got = rec.materialize_window().unwrap();
+        assert_eq!(got.shape(), live.shape());
+        for (a, b) in got.as_slice().iter().zip(live.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "replay must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn corrupt_log_is_typed_not_a_panic() {
+        let w = test_window(3, 2, 41);
+        let oob = SessionRecord {
+            snapshot: w.clone(),
+            lambda: 0.1,
+            log: vec![RotationEntry { removed: vec![7], added: Mat::zeros(0, 2) }],
+            snapshot_every: 4,
+        };
+        assert!(matches!(oob.materialize_window(), Err(CheckpointError::Corrupt(_))));
+        let dup = SessionRecord {
+            snapshot: w,
+            lambda: 0.1,
+            log: vec![RotationEntry { removed: vec![1, 1], added: Mat::zeros(0, 2) }],
+            snapshot_every: 4,
+        };
+        assert!(matches!(dup.materialize_window(), Err(CheckpointError::Corrupt(_))));
+        let mut ck = Checkpoint::new();
+        ck.insert("meta", vec![0.1, 4.0, 1.0]); // claims one log entry, has none
+        ck.insert_mat("snapshot", &Mat::zeros(2, 2));
+        assert!(matches!(
+            SessionRecord::from_checkpoint(&ck),
+            Err(CheckpointError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_deterministic() {
+        let p = RetryPolicy::new(10, 1_000, 6);
+        for attempt in 0..8u32 {
+            let exp = 10u64.saturating_mul(1 << attempt.min(32)).min(1_000);
+            let b = p.backoff_ms(attempt, 99);
+            assert!(b >= exp / 2 && b <= exp, "attempt {attempt}: {b} outside [{}, {exp}]", exp / 2);
+            assert_eq!(b, p.backoff_ms(attempt, 99), "same salt, same sleep");
+        }
+        // Jitter actually jitters: different salts disagree somewhere.
+        let spread: Vec<u64> = (0..16).map(|s| p.backoff_ms(5, s)).collect();
+        assert!(spread.iter().any(|&b| b != spread[0]), "jitter collapsed: {spread:?}");
+        // Attempt count saturates rather than overflowing.
+        assert!(p.backoff_ms(63, 0) <= 1_000);
+    }
+
+    #[test]
+    fn heal_revives_a_killed_channel_worker() {
+        let solver = ShardedCholSolver::new(2, 4);
+        let sup = Supervisor::default();
+        let all_up = sup.heal(&solver);
+        assert_eq!(all_up, HealReport { probed: 2, ..HealReport::default() });
+        solver.kill_worker(0);
+        let report = sup.heal(&solver);
+        assert_eq!(report.probed, 2);
+        assert_eq!(report.dead, vec![0]);
+        assert_eq!(report.respawned, 1);
+        assert!(report.healthy(), "recovery must leave no failed workers: {report:?}");
+        assert!(solver.probe_worker(0, Duration::from_millis(500)));
+        solver.shutdown();
+    }
+}

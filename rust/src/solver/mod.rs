@@ -130,12 +130,17 @@
 //! | session lifecycle | connect (tenant slot) → `open_session` (score matrix → cached staging, charged against the memory model) or `attach` → `solve`/`rotate`× → `close_session` (releases shards + charge) |
 //! | coalescing | per dispatch tick (`serve.tick_ms`): rotations first in arrival order, then solves grouped by (session, λ-bits) into **one** `solve_many` panel each — k tenant requests cost one `MatvecMany`/TRSM/`ApplyMany` round instead of k |
 //! | admission | bounded everywhere: tenant slots (`serve.tenants`), dispatch queue (`serve.queue_depth` → `Overloaded` + retry-after), session memory ([`memory_bytes`] vs `serve.budget_gb` → `OverBudget`) — reject-with-hint, never OOM |
-//! | faults | transport faults surface as [`SolveError::Backend`] with an explicit retryable/fatal split; retryable faults leave the staged session intact |
+//! | faults | transport faults surface as [`SolveError::Backend`] with an explicit retryable/fatal split; retryables get capped-exponential backoff with jitter inside the request deadline (`serve.deadline_ms`, `serve.max_retries`); fatals hand off to the supervisor |
+//! | recovery (PR 8) | the supervisor respawns dead channel workers / reconnects dead sockets, then re-materializes affected sessions from a durable `SessionRecord` (score snapshot + rotation log at `serve.snapshot_every` cadence): **replay** through `update_rows` (same arithmetic as the unfailed run) or a **cold refactor** when the log is unusable |
+//! | degradation (PR 8) | recovery that can't beat the deadline falls back to a **leader-local** `chol` solve of the recorded window — every path is pinned in `ServeStats` (`worker_respawns`, `session_replays`, `session_refactors`, `local_fallbacks`); expired requests get a typed `DeadlineExceeded` with elapsed/retry progress, never a hang |
 //!
 //! `dngd serve --self-test` round-trips both transports against the
-//! serial solver; `dngd bench --serving` → `BENCH_PR7.json` measures
-//! requests/sec and p50/p99 latency at 1/4/16 tenants, coalesced vs
-//! serial (EXPERIMENTS.md §Serving).
+//! serial solver (add `--inject-kill` to force a mid-workload
+//! recovery); `dngd chaos` runs the scripted fault schedules;
+//! `dngd bench --serving` → `BENCH_PR7.json` measures requests/sec and
+//! p50/p99 latency at 1/4/16 tenants, coalesced vs serial, and
+//! `dngd bench --recovery` → `BENCH_PR8.json` the recovery-latency tax
+//! under injected kills (EXPERIMENTS.md §Serving, §Fault-tolerance).
 //!
 //! Complex stochastic-reconfiguration variants (§3) live in
 //! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part

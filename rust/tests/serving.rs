@@ -11,6 +11,12 @@
 //! Fault injection: killing a worker must surface as the typed *fatal*
 //! [`SolveError::Backend`] (never a hang, never a retryable), on both
 //! transports.
+//!
+//! PR-8 chaos soak: every scripted fault schedule (kill-during-factor,
+//! stall-during-panel, corrupt-frame, respawn-storm) must end with
+//! answers ≤ 1e-9 from a fault-free reference, zero leaked sessions or
+//! budget bytes, and the expected supervisor counters — over both
+//! transports at kernel thread counts 1 and 8.
 
 use dngd::coordinator::ShardedCholSolver;
 use dngd::data::rng::Rng;
@@ -195,4 +201,75 @@ fn server_round_trip_over_socket_transport() {
     drop(client);
     let stats = server.shutdown();
     assert_eq!(stats.completed, 1);
+}
+
+/// PR-8 chaos soak: a seeded fault schedule matrix. Channels-only on
+/// non-unix targets; on unix both transports run. Each cell is a full
+/// `run_schedule` pass — correctness gate, leak checks, and the
+/// schedule's counter assertions all fold into `report.passed`.
+#[test]
+fn chaos_soak_all_schedules_all_transports() {
+    use dngd::serve::{chaos, ChaosOptions, FaultSchedule, TransportKind};
+
+    let transports: &[TransportKind] = if cfg!(unix) {
+        &[TransportKind::Channels, TransportKind::Socket]
+    } else {
+        &[TransportKind::Channels]
+    };
+    for &transport in transports {
+        for &threads in &[1usize, 8] {
+            let opts = ChaosOptions {
+                transport,
+                threads,
+                requests: 20,
+                kill_every: 6,
+                ..ChaosOptions::default()
+            };
+            for schedule in FaultSchedule::all() {
+                let report = chaos::run_schedule(schedule, &opts)
+                    .unwrap_or_else(|e| panic!("{schedule} [{transport} t={threads}]: {e}"));
+                assert!(
+                    report.passed,
+                    "{} [{} t={threads}]: {}",
+                    report.schedule, report.transport, report.detail
+                );
+            }
+        }
+    }
+}
+
+/// A killed worker mid-stream must be healed by exactly one respawn and
+/// one session re-materialization, with the recovery path visible in
+/// the stats — the observability half of the PR-8 contract.
+#[test]
+fn recovery_path_is_observable_in_serve_stats() {
+    use dngd::serve::{ServeOptions, Server};
+
+    let mut rng = Rng::seed_from(704);
+    let s = Mat::randn(8, 40, &mut rng);
+    let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+    let x_ref = CholSolver::default().solve(&s, &v, 0.1).unwrap();
+
+    let server = Server::start(ServeOptions { workers: 2, tick_ms: 1, ..ServeOptions::default() })
+        .expect("server start");
+    let client = server.client().unwrap();
+    let sid = client.open_session(s, 0.1).unwrap();
+    client.solve(sid, 0.1, &v).unwrap();
+    server.inject_kill(0);
+    let x = client.solve(sid, 0.1, &v).unwrap();
+    let scale = dngd::linalg::mat::norm2(&x_ref).max(1.0);
+    for (a, b) in x.iter().zip(&x_ref) {
+        assert!((a - b).abs() < 1e-9 * scale, "post-recovery answer diverged: {a} vs {b}");
+    }
+    client.close_session(sid).unwrap();
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.worker_respawns, 1, "one kill → one respawn");
+    assert_eq!(
+        stats.session_replays + stats.session_refactors,
+        1,
+        "one kill → one distributed re-materialization"
+    );
+    assert_eq!(stats.local_fallbacks, 0, "routine heals must not hit the leader-local fallback");
 }
