@@ -11,6 +11,13 @@
 //! trailer crc64 (xor-folded FNV-1a over everything before it)  8
 //! ```
 
+pub mod train_state;
+
+pub use train_state::{
+    checkpoint_path, recover_latest, OptimizerState, RecoveryScan, SgdState, TrainState,
+    TRAIN_STATE_VERSION,
+};
+
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
@@ -29,6 +36,11 @@ pub struct Checkpoint {
 pub enum CheckpointError {
     Io(std::io::Error),
     Corrupt(String),
+    /// The file is intact (checksum verified) but written by a
+    /// different format version — distinguishable from corruption so
+    /// recovery scans can *skip* newer-format files instead of
+    /// quarantining them.
+    UnsupportedVersion { found: u32, supported: u32 },
 }
 
 impl std::fmt::Display for CheckpointError {
@@ -36,6 +48,11 @@ impl std::fmt::Display for CheckpointError {
         match self {
             CheckpointError::Io(e) => write!(f, "checkpoint I/O: {e}"),
             CheckpointError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+            CheckpointError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "unsupported checkpoint format version {found} (this build reads version \
+                 {supported})"
+            ),
         }
     }
 }
@@ -108,11 +125,24 @@ impl Checkpoint {
         Ok(crate::linalg::Mat::from_vec(rows, cols, data[2..].to_vec()))
     }
 
+    /// The container format version this build writes and reads.
+    pub fn format_version() -> u32 {
+        VERSION
+    }
+
     /// Serialize to bytes.
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_with_version(VERSION)
+    }
+
+    /// Serialize with an explicit format-version header. Only useful
+    /// for version-skew testing and migration tooling — the checksum is
+    /// computed normally, so readers see a *valid* file from another
+    /// format generation, not a corrupt one.
+    pub fn to_bytes_with_version(&self, version: u32) -> Vec<u8> {
         let mut buf = Vec::new();
         buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&version.to_le_bytes());
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for (name, data) in &self.tensors {
             buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
@@ -151,7 +181,9 @@ impl Checkpoint {
         }
         let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
         if version != VERSION {
-            return Err(CheckpointError::Corrupt(format!("unsupported version {version}")));
+            // The checksum already passed: this is a healthy file from
+            // another format generation, not corruption.
+            return Err(CheckpointError::UnsupportedVersion { found: version, supported: VERSION });
         }
         let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
         let mut tensors = BTreeMap::new();
@@ -173,7 +205,11 @@ impl Checkpoint {
         Ok(Checkpoint { tensors })
     }
 
-    /// Write atomically (tmp + rename).
+    /// Write atomically: tmp + fsync + rename + directory fsync. The
+    /// final fsync makes the *rename itself* durable — without it a
+    /// crash after rename can roll the directory entry back to the old
+    /// file (or nothing), which is exactly the window full-state
+    /// training checkpoints must not have.
     pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -185,6 +221,11 @@ impl Checkpoint {
             f.sync_all()?;
         }
         std::fs::rename(&tmp, path)?;
+        #[cfg(unix)]
+        if let Some(dir) = path.parent() {
+            let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+            std::fs::File::open(dir)?.sync_all()?;
+        }
         Ok(())
     }
 
@@ -229,6 +270,26 @@ mod tests {
         let bytes = ck.to_bytes();
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
         assert!(Checkpoint::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn version_skew_is_typed_not_corrupt() {
+        let mut ck = Checkpoint::new();
+        ck.insert("x", vec![1.0, 2.0]);
+        let bytes = ck.to_bytes_with_version(Checkpoint::format_version() + 1);
+        match Checkpoint::from_bytes(&bytes) {
+            Err(CheckpointError::UnsupportedVersion { found, supported }) => {
+                assert_eq!(found, Checkpoint::format_version() + 1);
+                assert_eq!(supported, Checkpoint::format_version());
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+        // A corrupted skewed file is still reported as corruption — the
+        // checksum gate runs first, so the version field is only trusted
+        // on an intact file.
+        let mut bad = ck.to_bytes_with_version(99);
+        bad[10] ^= 0xFF;
+        assert!(matches!(Checkpoint::from_bytes(&bad), Err(CheckpointError::Corrupt(_))));
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Full training-state checkpoints (PR 9).
+//!
+//! [`TrainState`] is the versioned container for *everything* a killed
+//! trainer needs to resume bit-identically: parameters, optimizer
+//! state (momentum, damping scalar, step counters, and — in streaming
+//! mode — the replayable window log built on PR-8's
+//! [`SessionRecord`] snapshot+rotation machinery), and the data-stream
+//! position (the batch RNG state *is* the data cursor). It rides
+//! inside the flat-tensor [`Checkpoint`] container, so it inherits the
+//! atomic-rename + dir-fsync durability and checksum trailer.
+//!
+//! [`recover_latest`] is the startup scan: newest `step_*.ckpt` first,
+//! corrupt/truncated files are quarantined (renamed `*.corrupt`, never
+//! loaded), files from a newer format generation are *skipped in
+//! place* (they are healthy — a rollback of the binary must not
+//! destroy a newer binary's checkpoints).
+
+use std::path::{Path, PathBuf};
+
+use super::{Checkpoint, CheckpointError};
+use crate::ngd::{NgdState, SessionLog, WindowLog};
+use crate::serve::SessionRecord;
+
+/// Schema version of the [`TrainState`] payload (independent of the
+/// container format version — the container can round-trip tensors it
+/// does not understand; this guards the *meaning* of the tensors).
+pub const TRAIN_STATE_VERSION: u32 = 1;
+
+/// Everything the trainer evolves across steps, captured at a step
+/// boundary. `step` is the number of completed steps — resume begins
+/// at step `step`.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Completed steps.
+    pub step: usize,
+    /// Flat parameter vector.
+    pub params: Vec<f64>,
+    /// Batch-RNG xoshiro words ([`crate::data::Rng::state`]).
+    pub rng_words: [u64; 4],
+    /// Cached Box–Muller spare of the batch RNG.
+    pub rng_cached: Option<f64>,
+    /// Optimizer-specific state.
+    pub optimizer: OptimizerState,
+}
+
+/// Which optimizer the run uses, with its evolving state.
+#[derive(Debug, Clone)]
+pub enum OptimizerState {
+    /// First-order baseline: momentum buffer only.
+    Sgd(SgdState),
+    /// Damped NGD ([`crate::ngd::NaturalGradient::export_state`]).
+    Ngd(NgdState),
+}
+
+/// SGD baseline state.
+#[derive(Debug, Clone)]
+pub struct SgdState {
+    /// Momentum buffer (empty before the first step).
+    pub velocity: Vec<f64>,
+}
+
+/// Canonical checkpoint file path for a step boundary.
+pub fn checkpoint_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("step_{step}.ckpt"))
+}
+
+fn flag(b: bool) -> f64 {
+    if b {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+fn opt_pair(v: Option<f64>) -> Vec<f64> {
+    match v {
+        Some(x) => vec![1.0, x],
+        None => vec![0.0, 0.0],
+    }
+}
+
+fn tensor<'a>(ck: &'a Checkpoint, name: &str) -> Result<&'a [f64], CheckpointError> {
+    ck.get(name).ok_or_else(|| CheckpointError::Corrupt(format!("missing tensor {name:?}")))
+}
+
+fn tensor_exact<'a>(
+    ck: &'a Checkpoint,
+    name: &str,
+    len: usize,
+) -> Result<&'a [f64], CheckpointError> {
+    let t = tensor(ck, name)?;
+    if t.len() != len {
+        return Err(CheckpointError::Corrupt(format!(
+            "tensor {name:?}: expected {len} values, found {}",
+            t.len()
+        )));
+    }
+    Ok(t)
+}
+
+/// A non-negative integer that rode through the f64 encoding.
+fn as_count(v: f64, what: &str) -> Result<usize, CheckpointError> {
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > 2f64.powi(53) {
+        return Err(CheckpointError::Corrupt(format!("{what}: not a count: {v}")));
+    }
+    Ok(v as usize)
+}
+
+fn as_flag(v: f64, what: &str) -> Result<bool, CheckpointError> {
+    match v {
+        x if x == 0.0 => Ok(false),
+        x if x == 1.0 => Ok(true),
+        _ => Err(CheckpointError::Corrupt(format!("{what}: not a 0/1 flag: {v}"))),
+    }
+}
+
+fn opt_from_pair(t: &[f64], what: &str) -> Result<Option<f64>, CheckpointError> {
+    Ok(as_flag(t[0], what)?.then_some(t[1]))
+}
+
+const RECORD_PREFIX: &str = "train.ngd.window.session.record.";
+
+impl TrainState {
+    /// Encode into the flat-tensor container. The RNG's `u64` words
+    /// ride as raw bit patterns (`f64::from_bits`) — serialization is
+    /// a byte copy end to end, so any pattern (NaN payloads included)
+    /// round-trips exactly.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.insert("train.meta", vec![TRAIN_STATE_VERSION as f64, self.step as f64]);
+        ck.insert("train.params", self.params.clone());
+        ck.insert("train.rng.s", self.rng_words.iter().map(|&w| f64::from_bits(w)).collect());
+        ck.insert("train.rng.cached", opt_pair(self.rng_cached));
+        match &self.optimizer {
+            OptimizerState::Sgd(s) => {
+                ck.insert("train.opt.kind", vec![0.0]);
+                ck.insert("train.sgd.velocity", s.velocity.clone());
+            }
+            OptimizerState::Ngd(n) => {
+                ck.insert("train.opt.kind", vec![1.0]);
+                ck.insert("train.ngd.velocity", n.velocity.clone());
+                let mut meta = vec![n.steps as f64, n.lambda];
+                meta.extend(opt_pair(n.last_loss));
+                meta.push(flag(n.window.is_some()));
+                ck.insert("train.ngd.meta", meta);
+                if let Some(w) = &n.window {
+                    ck.insert_mat("train.ngd.window.fill", &w.fill);
+                    ck.insert(
+                        "train.ngd.window.meta",
+                        vec![flag(w.fallback), w.rotations as f64, flag(w.session.is_some())],
+                    );
+                    if let Some(sl) = &w.session {
+                        let mut meta = opt_pair(sl.cold_refresh_lambda);
+                        meta.push(sl.cold_retries as f64);
+                        meta.push(flag(sl.ever_rotated));
+                        meta.push(sl.redamps.len() as f64);
+                        ck.insert("train.ngd.window.session.meta", meta);
+                        let mut redamps = Vec::with_capacity(sl.redamps.len() * 2);
+                        for &(l, r) in &sl.redamps {
+                            redamps.push(l);
+                            redamps.push(r as f64);
+                        }
+                        ck.insert("train.ngd.window.session.redamps", redamps);
+                        // Embed the PR-8 record by prefix-merging its
+                        // own checkpoint tensors.
+                        for (name, data) in sl.record.to_checkpoint().tensors {
+                            ck.insert(&format!("{RECORD_PREFIX}{name}"), data);
+                        }
+                    }
+                }
+            }
+        }
+        ck
+    }
+
+    /// Decode, validating the schema version and every structural
+    /// invariant the trainer's restore path relies on.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<TrainState, CheckpointError> {
+        let meta = tensor_exact(ck, "train.meta", 2)?;
+        let version = as_count(meta[0], "train.meta version")? as u32;
+        if version != TRAIN_STATE_VERSION {
+            return Err(CheckpointError::UnsupportedVersion {
+                found: version,
+                supported: TRAIN_STATE_VERSION,
+            });
+        }
+        let step = as_count(meta[1], "train.meta step")?;
+        let params = tensor(ck, "train.params")?.to_vec();
+        let s = tensor_exact(ck, "train.rng.s", 4)?;
+        let rng_words = [s[0].to_bits(), s[1].to_bits(), s[2].to_bits(), s[3].to_bits()];
+        let rng_cached = opt_from_pair(tensor_exact(ck, "train.rng.cached", 2)?, "train.rng.cached")?;
+        let kind = tensor_exact(ck, "train.opt.kind", 1)?[0];
+        let optimizer = match as_count(kind, "train.opt.kind")? {
+            0 => OptimizerState::Sgd(SgdState {
+                velocity: tensor(ck, "train.sgd.velocity")?.to_vec(),
+            }),
+            1 => {
+                let velocity = tensor(ck, "train.ngd.velocity")?.to_vec();
+                let meta = tensor_exact(ck, "train.ngd.meta", 5)?;
+                let steps = as_count(meta[0], "train.ngd.meta steps")?;
+                let lambda = meta[1];
+                let last_loss = opt_from_pair(&meta[2..4], "train.ngd.meta last_loss")?;
+                let window = if as_flag(meta[4], "train.ngd.meta has_window")? {
+                    let fill = ck.get_mat("train.ngd.window.fill")?;
+                    let wmeta = tensor_exact(ck, "train.ngd.window.meta", 3)?;
+                    let fallback = as_flag(wmeta[0], "window fallback")?;
+                    let rotations = as_count(wmeta[1], "window rotations")?;
+                    let session = if as_flag(wmeta[2], "window has_session")? {
+                        let smeta = tensor_exact(ck, "train.ngd.window.session.meta", 5)?;
+                        let cold_refresh_lambda =
+                            opt_from_pair(&smeta[0..2], "session cold_refresh_lambda")?;
+                        let cold_retries = as_count(smeta[2], "session cold_retries")?;
+                        let ever_rotated = as_flag(smeta[3], "session ever_rotated")?;
+                        let n_redamps = as_count(smeta[4], "session n_redamps")?;
+                        let flat =
+                            tensor_exact(ck, "train.ngd.window.session.redamps", n_redamps * 2)?;
+                        let mut redamps = Vec::with_capacity(n_redamps);
+                        for pair in flat.chunks_exact(2) {
+                            redamps.push((pair[0], as_count(pair[1], "redamp retries")?));
+                        }
+                        let mut sub = Checkpoint::new();
+                        for (name, data) in &ck.tensors {
+                            if let Some(rest) = name.strip_prefix(RECORD_PREFIX) {
+                                sub.insert(rest, data.clone());
+                            }
+                        }
+                        let record = SessionRecord::from_checkpoint(&sub)?;
+                        if redamps.len() != record.log().len() {
+                            return Err(CheckpointError::Corrupt(format!(
+                                "window log has {} rotations but {} redamp entries",
+                                record.log().len(),
+                                redamps.len()
+                            )));
+                        }
+                        Some(SessionLog {
+                            record,
+                            cold_refresh_lambda,
+                            cold_retries,
+                            ever_rotated,
+                            redamps,
+                        })
+                    } else {
+                        None
+                    };
+                    Some(WindowLog { fill, fallback, rotations, session })
+                } else {
+                    None
+                };
+                OptimizerState::Ngd(NgdState { velocity, last_loss, steps, lambda, window })
+            }
+            k => {
+                return Err(CheckpointError::Corrupt(format!(
+                    "train.opt.kind: unknown optimizer tag {k}"
+                )))
+            }
+        };
+        Ok(TrainState { step, params, rng_words, rng_cached, optimizer })
+    }
+
+    /// Atomic durable write (tmp + fsync + rename + dir fsync).
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        self.to_checkpoint().save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<TrainState, CheckpointError> {
+        TrainState::from_checkpoint(&Checkpoint::load(path)?)
+    }
+}
+
+/// Result of a startup recovery scan over a checkpoint directory.
+#[derive(Debug, Default)]
+pub struct RecoveryScan {
+    /// Newest loadable state and the file it came from.
+    pub state: Option<(TrainState, PathBuf)>,
+    /// Corrupt/truncated files, renamed `<name>.corrupt` so they are
+    /// never considered again.
+    pub quarantined: Vec<PathBuf>,
+    /// Healthy files from a different format generation, skipped *in
+    /// place* (a binary rollback must not destroy them).
+    pub skipped_versions: Vec<PathBuf>,
+}
+
+/// Scan `dir` for `step_*.ckpt` files, newest step first, and return
+/// the first one that loads cleanly. Corrupt files are quarantined
+/// (renamed, never loaded); version-skewed files are skipped without
+/// renaming. A missing directory is an empty scan, not an error (first
+/// run).
+pub fn recover_latest(dir: &Path) -> Result<RecoveryScan, CheckpointError> {
+    let mut scan = RecoveryScan::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(scan),
+        Err(e) => return Err(e.into()),
+    };
+    let mut candidates: Vec<(usize, PathBuf)> = Vec::new();
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(step) = name
+            .strip_prefix("step_")
+            .and_then(|r| r.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        candidates.push((step, path));
+    }
+    // Newest first; the step number in the name is authoritative for
+    // ordering (the payload's own step is verified on load).
+    candidates.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in candidates {
+        match TrainState::load(&path) {
+            Ok(state) => {
+                scan.state = Some((state, path));
+                break;
+            }
+            Err(CheckpointError::Corrupt(_)) => {
+                let mut name = path.file_name().expect("candidate has a name").to_os_string();
+                name.push(".corrupt");
+                let q = path.with_file_name(name);
+                std::fs::rename(&path, &q)?;
+                scan.quarantined.push(q);
+            }
+            Err(CheckpointError::UnsupportedVersion { .. }) => {
+                scan.skipped_versions.push(path);
+            }
+            Err(CheckpointError::Io(e)) => return Err(e.into()),
+        }
+    }
+    Ok(scan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn synthetic_ngd_state(with_session: bool) -> NgdState {
+        let window = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let session = with_session.then(|| {
+            let mut record = SessionRecord::new(&window, 0.25, u32::MAX as usize);
+            let added = Mat::from_vec(1, 3, vec![7.0, -8.0, 9.5]);
+            record.record_rotation(&[0], &added, &window);
+            SessionLog {
+                record,
+                cold_refresh_lambda: Some(0.125),
+                cold_retries: 2,
+                redamps: vec![(0.25, 1)],
+                ever_rotated: true,
+            }
+        });
+        NgdState {
+            velocity: vec![0.5, -1.5, 2.5],
+            last_loss: Some(3.75),
+            steps: 11,
+            lambda: 0.03125,
+            window: Some(WindowLog {
+                fill: Mat::zeros(0, 3),
+                fallback: false,
+                rotations: 1,
+                session,
+            }),
+        }
+    }
+
+    fn assert_ngd_eq(a: &NgdState, b: &NgdState) {
+        assert_eq!(a.velocity, b.velocity);
+        assert_eq!(a.last_loss.map(f64::to_bits), b.last_loss.map(f64::to_bits));
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        match (&a.window, &b.window) {
+            (None, None) => {}
+            (Some(wa), Some(wb)) => {
+                assert_eq!(wa.fill.shape(), wb.fill.shape());
+                assert_eq!(wa.fill.as_slice(), wb.fill.as_slice());
+                assert_eq!(wa.fallback, wb.fallback);
+                assert_eq!(wa.rotations, wb.rotations);
+                match (&wa.session, &wb.session) {
+                    (None, None) => {}
+                    (Some(sa), Some(sb)) => {
+                        assert_eq!(sa.record, sb.record);
+                        assert_eq!(sa.cold_refresh_lambda, sb.cold_refresh_lambda);
+                        assert_eq!(sa.cold_retries, sb.cold_retries);
+                        assert_eq!(sa.redamps, sb.redamps);
+                        assert_eq!(sa.ever_rotated, sb.ever_rotated);
+                    }
+                    _ => panic!("session presence mismatch"),
+                }
+            }
+            _ => panic!("window presence mismatch"),
+        }
+    }
+
+    #[test]
+    fn full_ngd_state_roundtrips_bit_exactly() {
+        for with_session in [false, true] {
+            let st = TrainState {
+                step: 7,
+                params: vec![1.0, f64::MIN_POSITIVE, -3e100],
+                // Include a word whose f64 view is a NaN payload: the
+                // encoding must be a pure byte copy.
+                rng_words: [0x7FF8_0000_0000_0001, 0, u64::MAX, 0xDEAD_BEEF_CAFE_F00D],
+                rng_cached: Some(-0.75),
+                optimizer: OptimizerState::Ngd(synthetic_ngd_state(with_session)),
+            };
+            let back = TrainState::from_checkpoint(&Checkpoint::from_bytes(
+                &st.to_checkpoint().to_bytes(),
+            )
+            .unwrap())
+            .unwrap();
+            assert_eq!(back.step, st.step);
+            assert_eq!(back.params, st.params);
+            assert_eq!(back.rng_words, st.rng_words);
+            assert_eq!(back.rng_cached.map(f64::to_bits), st.rng_cached.map(f64::to_bits));
+            match (&back.optimizer, &st.optimizer) {
+                (OptimizerState::Ngd(a), OptimizerState::Ngd(b)) => assert_ngd_eq(a, b),
+                _ => panic!("optimizer kind changed in roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_state_roundtrips() {
+        let st = TrainState {
+            step: 3,
+            params: vec![0.0; 5],
+            rng_words: [1, 2, 3, 4],
+            rng_cached: None,
+            optimizer: OptimizerState::Sgd(SgdState { velocity: vec![1.0, 2.0] }),
+        };
+        let back =
+            TrainState::from_checkpoint(&st.to_checkpoint()).unwrap();
+        match back.optimizer {
+            OptimizerState::Sgd(s) => assert_eq!(s.velocity, vec![1.0, 2.0]),
+            _ => panic!("kind changed"),
+        }
+        assert_eq!(back.rng_cached, None);
+    }
+
+    #[test]
+    fn state_schema_skew_is_typed() {
+        let st = TrainState {
+            step: 0,
+            params: vec![],
+            rng_words: [0; 4],
+            rng_cached: None,
+            optimizer: OptimizerState::Sgd(SgdState { velocity: vec![] }),
+        };
+        let mut ck = st.to_checkpoint();
+        ck.insert("train.meta", vec![(TRAIN_STATE_VERSION + 1) as f64, 0.0]);
+        match TrainState::from_checkpoint(&ck) {
+            Err(CheckpointError::UnsupportedVersion { found, supported }) => {
+                assert_eq!(found, TRAIN_STATE_VERSION + 1);
+                assert_eq!(supported, TRAIN_STATE_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recovery_scan_quarantines_corrupt_and_skips_skew() {
+        let dir = std::env::temp_dir().join("dngd_test_recover_latest");
+        std::fs::remove_dir_all(&dir).ok();
+        let mk = |step: usize| TrainState {
+            step,
+            params: vec![step as f64],
+            rng_words: [step as u64; 4],
+            rng_cached: None,
+            optimizer: OptimizerState::Sgd(SgdState { velocity: vec![] }),
+        };
+        mk(2).save(&checkpoint_path(&dir, 2)).unwrap();
+        mk(3).save(&checkpoint_path(&dir, 3)).unwrap();
+        // step 4: corrupt (flip a payload byte).
+        let p4 = checkpoint_path(&dir, 4);
+        let mut bytes = mk(4).to_checkpoint().to_bytes();
+        bytes[24] ^= 0xFF;
+        std::fs::write(&p4, &bytes).unwrap();
+        // step 6: truncated.
+        let p6 = checkpoint_path(&dir, 6);
+        let full = mk(6).to_checkpoint().to_bytes();
+        std::fs::write(&p6, &full[..full.len() / 3]).unwrap();
+        // step 5: healthy but a newer container format.
+        let p5 = checkpoint_path(&dir, 5);
+        std::fs::write(
+            &p5,
+            mk(5).to_checkpoint().to_bytes_with_version(Checkpoint::format_version() + 1),
+        )
+        .unwrap();
+
+        let scan = recover_latest(&dir).unwrap();
+        let (state, from) = scan.state.expect("step 3 must recover");
+        assert_eq!(state.step, 3);
+        assert_eq!(from, checkpoint_path(&dir, 3));
+        assert_eq!(scan.quarantined.len(), 2, "steps 4 and 6 quarantined");
+        assert!(!p4.exists() && !p6.exists(), "corrupt originals renamed away");
+        for q in &scan.quarantined {
+            assert!(q.to_string_lossy().ends_with(".corrupt"));
+            assert!(q.exists());
+        }
+        assert_eq!(scan.skipped_versions, vec![p5.clone()]);
+        assert!(p5.exists(), "version-skewed file must be left in place");
+        // A second scan no longer sees the quarantined files as
+        // candidates and lands on the same state.
+        let again = recover_latest(&dir).unwrap();
+        assert_eq!(again.state.unwrap().0.step, 3);
+        assert!(again.quarantined.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_scan_of_missing_dir_is_empty() {
+        let dir = std::env::temp_dir().join("dngd_test_recover_nothing_here");
+        std::fs::remove_dir_all(&dir).ok();
+        let scan = recover_latest(&dir).unwrap();
+        assert!(scan.state.is_none());
+        assert!(scan.quarantined.is_empty() && scan.skipped_versions.is_empty());
+    }
+}

@@ -124,6 +124,18 @@ pub struct TrainConfig {
     pub log_every: usize,
     pub checkpoint_every: usize,
     pub checkpoint_dir: String,
+    /// Numerical-health sentinel (PR 9): NaN/Inf guards, loss-divergence
+    /// and λ-runaway detection with rollback to the last good checkpoint.
+    pub sentinel: bool,
+    /// Divergence trip: loss > ratio × best-loss-so-far for
+    /// `divergence_patience` consecutive steps.
+    pub divergence_ratio: f64,
+    /// Consecutive bad steps before the divergence / λ-runaway sentinels
+    /// trip (hysteresis — one noisy mini-batch must not roll back).
+    pub divergence_patience: usize,
+    /// Rollback-with-λ-escalation attempts before the run aborts with a
+    /// typed error.
+    pub max_rollbacks: usize,
 }
 
 impl Default for TrainConfig {
@@ -139,6 +151,10 @@ impl Default for TrainConfig {
             log_every: 10,
             checkpoint_every: 0, // 0 = disabled
             checkpoint_dir: "checkpoints".into(),
+            sentinel: true,
+            divergence_ratio: 4.0,
+            divergence_patience: 5,
+            max_rollbacks: 3,
         }
     }
 }
@@ -253,21 +269,35 @@ impl Default for ServeConfig {
 /// Chaos-harness settings (PR 8) — consumed by `dngd chaos`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChaosConfig {
-    /// Fault schedule: `"all"` or one of the named schedules
-    /// (`kill-during-factor`, `stall-during-panel`, `corrupt-frame`,
-    /// `respawn-storm`).
+    /// What the harness attacks: `"serve"` (PR 8: worker faults under
+    /// the serving layer) or `"train"` (PR 9: trainer kills at step
+    /// boundaries + checkpoint corruption, asserting bit-identical
+    /// resume).
+    pub target: String,
+    /// Fault schedule (serve target): `"all"` or one of the named
+    /// schedules (`kill-during-factor`, `stall-during-panel`,
+    /// `corrupt-frame`, `respawn-storm`).
     pub schedule: String,
     /// Workload seed (the chaos workload is fully deterministic).
     pub seed: u64,
-    /// Solve requests per schedule run.
+    /// Solve requests per schedule run (serve target).
     pub requests: usize,
-    /// Kill cadence for the respawn-storm schedule.
+    /// Kill cadence for the respawn-storm schedule (serve target).
     pub kill_every: usize,
+    /// Randomized kill points per train-chaos scenario (train target).
+    pub kills: usize,
 }
 
 impl Default for ChaosConfig {
     fn default() -> Self {
-        ChaosConfig { schedule: "all".into(), seed: 4242, requests: 40, kill_every: 10 }
+        ChaosConfig {
+            target: "serve".into(),
+            schedule: "all".into(),
+            seed: 4242,
+            requests: 40,
+            kill_every: 10,
+            kills: 3,
+        }
     }
 }
 
@@ -371,6 +401,10 @@ impl Config {
         get_usize(doc, "train.log_every", &mut cfg.train.log_every)?;
         get_usize(doc, "train.checkpoint_every", &mut cfg.train.checkpoint_every)?;
         get_string(doc, "train.checkpoint_dir", &mut cfg.train.checkpoint_dir)?;
+        get_bool(doc, "train.sentinel", &mut cfg.train.sentinel)?;
+        get_f64(doc, "train.divergence_ratio", &mut cfg.train.divergence_ratio)?;
+        get_usize(doc, "train.divergence_patience", &mut cfg.train.divergence_patience)?;
+        get_usize(doc, "train.max_rollbacks", &mut cfg.train.max_rollbacks)?;
 
         get_usize(doc, "coordinator.workers", &mut cfg.coordinator.workers)?;
         get_usize(doc, "coordinator.queue_depth", &mut cfg.coordinator.queue_depth)?;
@@ -401,10 +435,12 @@ impl Config {
         get_bool(doc, "serve.supervise", &mut cfg.serve.supervise)?;
         get_string(doc, "serve.record_dir", &mut cfg.serve.record_dir)?;
 
+        get_string(doc, "chaos.target", &mut cfg.chaos.target)?;
         get_string(doc, "chaos.schedule", &mut cfg.chaos.schedule)?;
         get_u64(doc, "chaos.seed", &mut cfg.chaos.seed)?;
         get_usize(doc, "chaos.requests", &mut cfg.chaos.requests)?;
         get_usize(doc, "chaos.kill_every", &mut cfg.chaos.kill_every)?;
+        get_usize(doc, "chaos.kills", &mut cfg.chaos.kills)?;
 
         cfg.validate()?;
         Ok(cfg)
@@ -475,6 +511,20 @@ impl Config {
         if self.serve.snapshot_every == 0 {
             return Err("serve.snapshot_every must be ≥ 1".into());
         }
+        // Sentinel thresholds (PR 9): ratio ≤ 1 would trip on any
+        // non-monotone loss; patience 0 would trip before any evidence.
+        if !self.train.divergence_ratio.is_finite() || self.train.divergence_ratio <= 1.0 {
+            return Err("train.divergence_ratio must be a finite value > 1".into());
+        }
+        if self.train.divergence_patience == 0 {
+            return Err("train.divergence_patience must be ≥ 1".into());
+        }
+        if self.chaos.target != "serve" && self.chaos.target != "train" {
+            return Err(format!(
+                "chaos.target must be \"serve\" or \"train\", got {:?}",
+                self.chaos.target
+            ));
+        }
         if self.chaos.schedule != "all" {
             crate::serve::FaultSchedule::parse(&self.chaos.schedule)
                 .map_err(|e| format!("chaos.schedule: {e}"))?;
@@ -484,6 +534,9 @@ impl Config {
         }
         if self.chaos.kill_every == 0 {
             return Err("chaos.kill_every must be ≥ 1".into());
+        }
+        if self.chaos.kills == 0 {
+            return Err("chaos.kills must be ≥ 1".into());
         }
         Ok(())
     }
@@ -522,6 +575,10 @@ const KNOWN_KEYS: &[&str] = &[
     "train.log_every",
     "train.checkpoint_every",
     "train.checkpoint_dir",
+    "train.sentinel",
+    "train.divergence_ratio",
+    "train.divergence_patience",
+    "train.max_rollbacks",
     "coordinator.workers",
     "coordinator.queue_depth",
     "coordinator.use_artifacts",
@@ -545,10 +602,12 @@ const KNOWN_KEYS: &[&str] = &[
     "serve.snapshot_every",
     "serve.supervise",
     "serve.record_dir",
+    "chaos.target",
     "chaos.schedule",
     "chaos.seed",
     "chaos.requests",
     "chaos.kill_every",
+    "chaos.kills",
 ];
 
 fn get_f64(doc: &TomlDoc, key: &str, out: &mut f64) -> Result<(), String> {

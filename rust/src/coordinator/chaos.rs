@@ -1,0 +1,324 @@
+//! Train-target chaos harness (PR 9): pin the kill-anywhere guarantee.
+//!
+//! Each scenario trains a tiny model to completion (the reference
+//! trajectory), then repeatedly "crashes" a second run at a randomized
+//! step boundary — the trainer is dropped on the floor, exactly like a
+//! `kill -9` between steps — and resumes a *fresh* trainer from the
+//! latest durable checkpoint. The resumed trajectory must reproduce the
+//! reference parameters **bit for bit**: same losses, same λ backoffs,
+//! same streaming-window rotations, same data order. Two recovery
+//! drills ride along: a corrupt newest checkpoint must be quarantined
+//! (fall back to the older good one, still bit-identical), and a
+//! version-skewed checkpoint must be skipped in place.
+//!
+//! The scenario matrix covers the solve modes with distinct durable
+//! state: classic sharded chol, streaming-window chol and rvb (owned
+//! sessions with rotation/redamp replay logs), and the mixed-precision
+//! path (f32 factor with an f64 latch that the replay must reproduce).
+//!
+//! Driven by `dngd chaos --target train`; the exhaustive
+//! kill-at-every-boundary matrix lives in `tests/durability.rs`.
+
+use crate::checkpoint::Checkpoint;
+use crate::config::Config;
+use crate::coordinator::trainer::{OptimizerChoice, Trainer, TRAIN_LOG_COLUMNS};
+use crate::data::Rng;
+use crate::metrics::MetricsLog;
+use crate::solver::{Precision, SolverKind};
+use std::path::PathBuf;
+
+/// Options for a train-target chaos run.
+#[derive(Debug, Clone)]
+pub struct TrainChaosOptions {
+    /// Seed for the randomized kill points.
+    pub seed: u64,
+    /// Kill/resume cycles per scenario.
+    pub kills: usize,
+}
+
+impl Default for TrainChaosOptions {
+    fn default() -> Self {
+        TrainChaosOptions { seed: 17, kills: 3 }
+    }
+}
+
+/// Outcome of one chaos scenario.
+#[derive(Debug, Clone)]
+pub struct TrainChaosReport {
+    pub scenario: &'static str,
+    /// Kill/resume cycles exercised.
+    pub kills: usize,
+    /// Cycles that actually resumed from a checkpoint (a kill before
+    /// the first checkpoint restarts from scratch — also covered).
+    pub resumes: usize,
+    /// Corrupt checkpoints quarantined during recovery scans.
+    pub quarantined: usize,
+    /// Version-skewed checkpoints skipped in place.
+    pub version_skipped: usize,
+    pub passed: bool,
+    pub detail: String,
+}
+
+const SCENARIOS: &[(&str, fn(&mut Config))] = &[
+    ("classic-chol-sharded", |cfg| {
+        cfg.coordinator.workers = 2;
+    }),
+    ("windowed-chol", |cfg| {
+        cfg.coordinator.workers = 1;
+        cfg.solver.window = 48;
+        cfg.solver.refresh_every = 3;
+    }),
+    ("windowed-rvb", |cfg| {
+        cfg.coordinator.workers = 1;
+        cfg.solver.kind = SolverKind::Rvb;
+        cfg.solver.window = 48;
+        cfg.solver.refresh_every = 3;
+    }),
+    ("mixed-classic", |cfg| {
+        cfg.coordinator.workers = 1;
+        cfg.solver.precision = Precision::Mixed;
+    }),
+    ("mixed-windowed", |cfg| {
+        cfg.coordinator.workers = 1;
+        cfg.solver.precision = Precision::Mixed;
+        cfg.solver.window = 48;
+        cfg.solver.refresh_every = 3;
+    }),
+];
+
+fn base_config(dir: &std::path::Path) -> Config {
+    let mut cfg = Config::from_toml_str(
+        r#"
+[model]
+dim = 8
+heads = 2
+layers = 1
+context = 8
+mlp_hidden = 16
+
+[train]
+steps = 6
+batch_size = 16
+learning_rate = 0.3
+corpus_len = 4000
+seed = 11
+checkpoint_every = 2
+
+[solver]
+lambda = 0.01
+
+[coordinator]
+workers = 1
+use_artifacts = false
+"#,
+        &[],
+    )
+    .expect("chaos base config is valid");
+    cfg.train.checkpoint_dir = dir.to_string_lossy().to_string();
+    cfg
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dngd_train_chaos_{}_{tag}", std::process::id()))
+}
+
+/// Train `cfg` start to finish in `dir` and return the final params.
+fn reference_run(cfg: &Config) -> Result<Vec<f64>, String> {
+    let mut trainer = Trainer::new(cfg, OptimizerChoice::Ngd)?;
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    trainer.run(&mut log).map_err(|e| format!("reference run: {e}"))?;
+    Ok(trainer.params.clone())
+}
+
+fn first_param_mismatch(a: &[f64], b: &[f64]) -> Option<usize> {
+    a.iter().zip(b).position(|(x, y)| x.to_bits() != y.to_bits())
+}
+
+/// One kill/resume cycle: run `kill_at` steps, "crash", resume fresh,
+/// finish, and compare against the reference bit for bit.
+fn kill_resume_cycle(
+    cfg: &Config,
+    kill_at: usize,
+    reference: &[f64],
+) -> Result<bool, String> {
+    let dir = PathBuf::from(&cfg.train.checkpoint_dir);
+    std::fs::remove_dir_all(&dir).ok();
+    let mut killed = Trainer::new(cfg, OptimizerChoice::Ngd)?;
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    killed.run_partial(&mut log, kill_at).map_err(|e| format!("pre-kill run: {e}"))?;
+    drop(killed); // the crash: no flush, no farewell
+
+    let mut resumed = Trainer::new(cfg, OptimizerChoice::Ngd)?;
+    let at =
+        resumed.resume_latest().map_err(|e| format!("recovery after kill@{kill_at}: {e}"))?;
+    let mut log2 = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    resumed.run(&mut log2).map_err(|e| format!("resumed run (kill@{kill_at}): {e}"))?;
+    if let Some(j) = first_param_mismatch(reference, &resumed.params) {
+        return Err(format!(
+            "kill@{kill_at} resume@{at:?}: param {j} diverged ({:e} vs {:e})",
+            reference[j], resumed.params[j]
+        ));
+    }
+    Ok(at.is_some())
+}
+
+/// Run one named scenario: randomized kill/resume cycles, then the
+/// corrupt-quarantine and version-skew recovery drills.
+pub fn run_scenario(
+    name: &'static str,
+    mutate: fn(&mut Config),
+    opts: &TrainChaosOptions,
+) -> Result<TrainChaosReport, String> {
+    let dir = scratch_dir(name);
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = base_config(&dir);
+    mutate(&mut cfg);
+    cfg.validate()?;
+
+    let mut report = TrainChaosReport {
+        scenario: name,
+        kills: 0,
+        resumes: 0,
+        quarantined: 0,
+        version_skipped: 0,
+        passed: true,
+        detail: String::new(),
+    };
+    fn fail(report: &mut TrainChaosReport, msg: String) {
+        report.passed = false;
+        if !report.detail.is_empty() {
+            report.detail.push_str("; ");
+        }
+        report.detail.push_str(&msg);
+    }
+
+    let reference = reference_run(&cfg)?;
+
+    // Randomized kill boundaries (1 ≤ kill_at < steps). A kill before
+    // the first checkpoint cadence resumes from nothing — a fresh
+    // deterministic start, which must also land on the reference.
+    let mut rng = Rng::seed_from(opts.seed ^ name.len() as u64);
+    for _ in 0..opts.kills {
+        let kill_at = 1 + rng.below(cfg.train.steps - 1);
+        report.kills += 1;
+        match kill_resume_cycle(&cfg, kill_at, &reference) {
+            Ok(resumed) => {
+                if resumed {
+                    report.resumes += 1;
+                }
+            }
+            Err(e) => fail(&mut report, e),
+        }
+    }
+
+    // Drill 1: corrupt the newest checkpoint — recovery must quarantine
+    // it, fall back to the older good one, and still match bit-exactly.
+    std::fs::remove_dir_all(&dir).ok();
+    {
+        let mut t = Trainer::new(&cfg, OptimizerChoice::Ngd)?;
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        t.run_partial(&mut log, 5).map_err(|e| format!("drill setup: {e}"))?;
+    }
+    let newest = dir.join("step_4.ckpt");
+    match std::fs::read(&newest) {
+        Ok(mut bytes) => {
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0xFF;
+            std::fs::write(&newest, &bytes).map_err(|e| format!("corrupt drill write: {e}"))?;
+            let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd)?;
+            match resumed.resume_latest() {
+                Ok(Some(2)) => {
+                    report.quarantined += resumed.stats().quarantined;
+                    if resumed.stats().quarantined != 1 {
+                        fail(
+                            &mut report,
+                            format!(
+                                "corrupt drill quarantined {} files, wanted 1",
+                                resumed.stats().quarantined
+                            ),
+                        );
+                    }
+                    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+                    match resumed.run(&mut log) {
+                        Ok(_) => {
+                            if let Some(j) = first_param_mismatch(&reference, &resumed.params) {
+                                fail(
+                                    &mut report,
+                                    format!("corrupt drill: param {j} diverged after fallback"),
+                                );
+                            }
+                        }
+                        Err(e) => fail(&mut report, format!("corrupt drill run: {e}")),
+                    }
+                }
+                Ok(other) => {
+                    fail(&mut report, format!("corrupt drill resumed at {other:?}, wanted 2"))
+                }
+                Err(e) => fail(&mut report, format!("corrupt drill recovery: {e}")),
+            }
+        }
+        Err(e) => fail(&mut report, format!("corrupt drill: read step_4.ckpt: {e}")),
+    }
+
+    // Drill 2: a checkpoint from a future container format generation
+    // (valid checksum, newer version) must be skipped *in place* — not
+    // quarantined, not loaded.
+    std::fs::remove_dir_all(&dir).ok();
+    {
+        let mut t = Trainer::new(&cfg, OptimizerChoice::Ngd)?;
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        t.run_partial(&mut log, 5).map_err(|e| format!("skew drill setup: {e}"))?;
+    }
+    let newest = dir.join("step_4.ckpt");
+    match Checkpoint::load(&newest) {
+        Ok(ck) => {
+            let skewed = ck.to_bytes_with_version(Checkpoint::format_version() + 1);
+            std::fs::write(&newest, &skewed).map_err(|e| format!("skew drill write: {e}"))?;
+            let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd)?;
+            match resumed.resume_latest() {
+                Ok(Some(2)) => {
+                    report.version_skipped += resumed.stats().version_skipped;
+                    if resumed.stats().version_skipped != 1 || !newest.exists() {
+                        fail(&mut report, "skew drill: file must be skipped in place".into());
+                    }
+                }
+                Ok(other) => {
+                    fail(&mut report, format!("skew drill resumed at {other:?}, wanted 2"))
+                }
+                Err(e) => fail(&mut report, format!("skew drill recovery: {e}")),
+            }
+        }
+        Err(e) => fail(&mut report, format!("skew drill: reload step_4.ckpt: {e}")),
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(report)
+}
+
+/// Run the whole scenario matrix.
+pub fn run_all(opts: &TrainChaosOptions) -> Result<Vec<TrainChaosReport>, String> {
+    let mut out = Vec::new();
+    for &(name, mutate) in SCENARIOS {
+        out.push(run_scenario(name, mutate, opts)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_scenario_windowed_chol_passes() {
+        // One representative scenario in-test (the full matrix runs via
+        // `dngd chaos --target train` and tests/durability.rs).
+        let (name, mutate) =
+            SCENARIOS.iter().find(|(n, _)| *n == "windowed-chol").copied().unwrap();
+        let opts = TrainChaosOptions { seed: 5, kills: 2 };
+        let r = run_scenario(name, mutate, &opts).unwrap();
+        assert!(r.passed, "{}", r.detail);
+        assert_eq!(r.kills, 2);
+        assert_eq!(r.quarantined, 1);
+        assert_eq!(r.version_skipped, 1);
+    }
+}

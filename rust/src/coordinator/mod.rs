@@ -30,16 +30,23 @@
 //!   [`ShardedWindowSession`] used by the serving layer (distributed
 //!   streaming `update_rows`);
 //! * [`trainer`] — the end-to-end NGD trainer driving model, data,
-//!   solver, metrics and checkpoints.
+//!   solver, metrics, full-state checkpoints, and the numerical-health
+//!   sentinel (NaN/divergence/λ-runaway detection with bounded
+//!   rollback);
+//! * [`chaos`] — the train-target chaos harness pinning the
+//!   kill-anywhere bit-identical-resume guarantee
+//!   (`dngd chaos --target train`).
 
+pub mod chaos;
 pub mod pool;
 pub mod reduce;
 pub mod shard;
 pub mod sharded;
 pub mod trainer;
 
+pub use chaos::{TrainChaosOptions, TrainChaosReport};
 pub use pool::{PoolError, WorkerPool};
 pub use reduce::tree_reduce_mats;
 pub use shard::ShardPlan;
 pub use sharded::{ShardedCholSolver, ShardedFactor, ShardedWindowSession};
-pub use trainer::{TrainReport, Trainer};
+pub use trainer::{TrainError, TrainReport, TrainStats, Trainer};

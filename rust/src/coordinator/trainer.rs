@@ -1,9 +1,22 @@
 //! End-to-end NGD trainer: corpus → tokenizer → transformer → per-sample
 //! scores (parallel over the batch) → damped solve (PJRT artifact,
 //! sharded-native, or serial-native) → parameter update → metrics →
-//! checkpoints.
+//! full-state checkpoints.
+//!
+//! Durability (PR 9): checkpoints carry the *complete* training state —
+//! parameters, optimizer state (momentum, damping scalar, streaming
+//! window via a replayable session log), and the batch-RNG stream
+//! position — so a run killed at any step boundary and resumed from its
+//! latest checkpoint re-joins the unfailed trajectory **bit-identically**
+//! (pinned by `tests/durability.rs` and `dngd chaos --target train`).
+//! A numerical-health sentinel guards the step loop: NaN/Inf trips,
+//! loss-divergence and λ-runaway detection with hysteresis, and
+//! automatic rollback to the last good state with λ escalation, bounded
+//! by `train.max_rollbacks` before a typed [`TrainError::Diverged`].
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{
+    checkpoint_path, recover_latest, CheckpointError, OptimizerState, SgdState, TrainState,
+};
 use crate::config::Config;
 use crate::data::{BatchIter, CharTokenizer, Rng, SyntheticCorpus};
 use crate::linalg::Mat;
@@ -22,9 +35,89 @@ pub enum OptimizerChoice {
     Sgd,
 }
 
+/// Typed trainer errors (PR 9) — checkpoint and health failures are no
+/// longer squeezed through `SolveError::BadInput` strings.
+#[derive(Debug)]
+pub enum TrainError {
+    /// The damped solve failed (λ backoff exhausted, bad input, …).
+    Solve(SolveError),
+    /// Checkpoint I/O / corruption / version skew.
+    Checkpoint(CheckpointError),
+    /// A checkpoint loaded cleanly but does not fit this run (wrong
+    /// parameter count, optimizer kind, or window configuration).
+    Mismatch(String),
+    /// The health sentinel exhausted its rollback budget
+    /// (`train.max_rollbacks`).
+    Diverged { step: usize, rollbacks: usize, detail: String },
+}
+
+impl std::fmt::Display for TrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainError::Solve(e) => write!(f, "solver: {e}"),
+            TrainError::Checkpoint(e) => write!(f, "checkpoint: {e}"),
+            TrainError::Mismatch(m) => write!(f, "checkpoint mismatch: {m}"),
+            TrainError::Diverged { step, rollbacks, detail } => write!(
+                f,
+                "training diverged at step {step} after {rollbacks} rollback(s): {detail}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TrainError::Solve(e) => Some(e),
+            TrainError::Checkpoint(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SolveError> for TrainError {
+    fn from(e: SolveError) -> Self {
+        TrainError::Solve(e)
+    }
+}
+
+impl From<CheckpointError> for TrainError {
+    fn from(e: CheckpointError) -> Self {
+        TrainError::Checkpoint(e)
+    }
+}
+
+/// Durability / health counters, observable after (or during) a run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TrainStats {
+    /// Non-finite loss/gradient/score/parameter detections.
+    pub nan_trips: usize,
+    /// Loss-divergence sentinel trips (loss > ratio × best for
+    /// `divergence_patience` consecutive steps).
+    pub divergence_trips: usize,
+    /// λ-runaway sentinel trips (λ pinned at the LM ceiling for
+    /// `divergence_patience` consecutive steps).
+    pub lambda_runaway_trips: usize,
+    /// Rollbacks to the last good state actually performed.
+    pub rollbacks: usize,
+    /// λ escalations applied on rollback (NGD only).
+    pub lambda_escalations: usize,
+    /// Full-state checkpoints written.
+    pub checkpoints_saved: usize,
+    /// Corrupt checkpoints quarantined (renamed `*.corrupt`) during
+    /// recovery scans.
+    pub quarantined: usize,
+    /// Healthy checkpoints from another format generation skipped
+    /// during recovery scans.
+    pub version_skipped: usize,
+    /// Step the run resumed from, if it resumed.
+    pub resumed_from: Option<usize>,
+}
+
 /// Final report of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Completed steps (the step cursor after this run segment).
     pub steps: usize,
     pub params: usize,
     pub initial_loss: f64,
@@ -33,6 +126,8 @@ pub struct TrainReport {
     pub final_bits_per_char: f64,
     pub wall_secs: f64,
     pub backend: String,
+    /// Durability / health counters for the run.
+    pub stats: TrainStats,
 }
 
 /// The end-to-end trainer.
@@ -45,6 +140,13 @@ pub struct Trainer {
     backend_name: String,
     solver: TrainSolver,
     eval_threads: usize,
+    /// Step cursor: `run` continues from here (0 fresh, >0 after a
+    /// resume or a previous partial run).
+    start_step: usize,
+    /// Armed batch-RNG position for the next `run` (the data cursor of
+    /// the restored/continued stream).
+    resume_rng: Option<([u64; 4], Option<f64>)>,
+    stats: TrainStats,
 }
 
 enum TrainSolver {
@@ -183,12 +285,20 @@ impl Trainer {
             backend_name,
             solver,
             eval_threads: cfg.coordinator.workers.max(1),
+            start_step: 0,
+            resume_rng: None,
+            stats: TrainStats::default(),
         })
     }
 
     /// Backend label ("pjrt", "sharded×W", "native").
     pub fn backend(&self) -> &str {
         &self.backend_name
+    }
+
+    /// Durability / health counters accumulated so far.
+    pub fn stats(&self) -> &TrainStats {
+        &self.stats
     }
 
     /// Batch evaluation parallelized over samples: per-sample backprop is
@@ -251,80 +361,273 @@ impl Trainer {
         BatchEval { loss, grad, scores }
     }
 
-    /// Run the configured number of steps, logging
+    /// Snapshot the full training state at a step boundary (`step` =
+    /// completed steps; `rng` = the batch iterator's data cursor).
+    fn capture_state(&self, step: usize, rng: &Rng) -> TrainState {
+        let (rng_words, rng_cached) = rng.state();
+        TrainState {
+            step,
+            params: self.params.clone(),
+            rng_words,
+            rng_cached,
+            optimizer: match &self.solver {
+                TrainSolver::Ngd(ngd) => OptimizerState::Ngd(ngd.export_state()),
+                TrainSolver::Sgd(sgd) => {
+                    OptimizerState::Sgd(SgdState { velocity: sgd.velocity().to_vec() })
+                }
+            },
+        }
+    }
+
+    /// Restore a captured state into this trainer (params + optimizer,
+    /// including the streaming-session replay) and hand back the batch
+    /// RNG positioned at the state's data cursor.
+    fn apply_state(&mut self, st: &TrainState) -> Result<Rng, TrainError> {
+        if st.params.len() != self.params.len() {
+            return Err(TrainError::Mismatch(format!(
+                "checkpoint has {} params, model needs {}",
+                st.params.len(),
+                self.params.len()
+            )));
+        }
+        match (&mut self.solver, &st.optimizer) {
+            (TrainSolver::Ngd(ngd), OptimizerState::Ngd(ns)) => {
+                ngd.restore_state(ns.clone()).map_err(|e| match e {
+                    SolveError::BadInput(m) => TrainError::Mismatch(m),
+                    other => TrainError::Solve(other),
+                })?;
+            }
+            (TrainSolver::Sgd(sgd), OptimizerState::Sgd(ss)) => {
+                sgd.restore_velocity(ss.velocity.clone());
+            }
+            _ => {
+                return Err(TrainError::Mismatch(
+                    "checkpoint optimizer kind does not match this run's optimizer".into(),
+                ))
+            }
+        }
+        self.params.copy_from_slice(&st.params);
+        Ok(Rng::from_state(st.rng_words, st.rng_cached))
+    }
+
+    /// Restore the full training state from an explicit checkpoint file
+    /// and arm the next [`Trainer::run`] to continue at the saved step.
+    /// Returns the step the checkpoint was taken at.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize, TrainError> {
+        let st = TrainState::load(path)?;
+        let rng = self.apply_state(&st)?;
+        self.start_step = st.step;
+        self.resume_rng = Some(rng.state());
+        self.stats.resumed_from = Some(st.step);
+        Ok(st.step)
+    }
+
+    /// Startup recovery: scan `train.checkpoint_dir` for the newest
+    /// loadable checkpoint, quarantining corrupt files (renamed
+    /// `*.corrupt`, never loaded) and skipping healthy files from other
+    /// format generations. Returns the resumed step, or `None` when no
+    /// usable checkpoint exists (fresh start).
+    pub fn resume_latest(&mut self) -> Result<Option<usize>, TrainError> {
+        let dir = std::path::PathBuf::from(&self.cfg.train.checkpoint_dir);
+        let scan = recover_latest(&dir)?;
+        self.stats.quarantined += scan.quarantined.len();
+        self.stats.version_skipped += scan.skipped_versions.len();
+        let Some((st, _path)) = scan.state else { return Ok(None) };
+        let rng = self.apply_state(&st)?;
+        self.start_step = st.step;
+        self.resume_rng = Some(rng.state());
+        self.stats.resumed_from = Some(st.step);
+        Ok(Some(st.step))
+    }
+
+    /// Run up to `train.steps` total steps (continuing from a resumed /
+    /// previous position), logging
     /// `(step, loss, lambda, grad_norm, step_secs)` rows.
-    pub fn run(&mut self, log: &mut MetricsLog) -> Result<TrainReport, SolveError> {
+    pub fn run(&mut self, log: &mut MetricsLog) -> Result<TrainReport, TrainError> {
+        self.run_inner(log, None)
+    }
+
+    /// Run at most `stop_after` steps, then return — the chaos
+    /// harness's kill-at-a-step-boundary hook. The trainer's cursor and
+    /// data stream stay armed, so a later `run` continues seamlessly
+    /// (or the process "dies" and a fresh trainer resumes from disk).
+    pub fn run_partial(
+        &mut self,
+        log: &mut MetricsLog,
+        stop_after: usize,
+    ) -> Result<TrainReport, TrainError> {
+        self.run_inner(log, Some(stop_after))
+    }
+
+    fn run_inner(
+        &mut self,
+        log: &mut MetricsLog,
+        stop_after: Option<usize>,
+    ) -> Result<TrainReport, TrainError> {
         let cfg = self.cfg.clone();
-        let batch_rng = Rng::seed_from(cfg.train.seed ^ 0x9E3779B97F4A7C15);
+        // Rollback rebuilds the batch iterator mid-run, which needs
+        // `&mut self` — so the iterator borrows a local copy of the
+        // token stream instead of `self.tokens`.
+        let tokens = self.tokens.clone();
+        let batch_rng = match self.resume_rng.take() {
+            Some((s, cached)) => Rng::from_state(s, cached),
+            None => Rng::seed_from(cfg.train.seed ^ 0x9E3779B97F4A7C15).fork(1),
+        };
         let mut batches =
-            BatchIter::new(&self.tokens, cfg.model.context, cfg.train.batch_size, batch_rng.fork(1));
+            BatchIter::new(&tokens, cfg.model.context, cfg.train.batch_size, batch_rng);
         let started = Instant::now();
         let mut initial_loss = f64::NAN;
         let mut final_loss = f64::NAN;
 
-        for step in 0..cfg.train.steps {
+        // Sentinel bookkeeping (all local: rollback resets it).
+        let sentinel = cfg.train.sentinel;
+        let mut best_loss = f64::INFINITY;
+        let mut bad_loss_streak = 0usize;
+        let mut lambda_pinned_streak = 0usize;
+        let mut rollbacks = 0usize;
+        // Rollback target: the run start, then every saved checkpoint.
+        let mut last_good = self.capture_state(self.start_step, batches.rng());
+
+        let mut step = self.start_step;
+        let mut executed = 0usize;
+        while step < cfg.train.steps {
+            if let Some(cap) = stop_after {
+                if executed >= cap {
+                    break;
+                }
+            }
             let t0 = Instant::now();
             let (contexts, targets) = batches.next_batch();
             let eval = self.eval_batch_parallel(&contexts, &targets);
-            if step == 0 {
-                initial_loss = eval.loss;
+
+            // --- numerical-health sentinel: pre-step checks ---
+            let mut trip: Option<&'static str> = None;
+            if sentinel {
+                if !eval.loss.is_finite()
+                    || eval.grad.iter().any(|g| !g.is_finite())
+                    || eval.scores.as_slice().iter().any(|v| !v.is_finite())
+                {
+                    self.stats.nan_trips += 1;
+                    trip = Some("non-finite loss/gradient/scores");
+                } else {
+                    if eval.loss < best_loss {
+                        best_loss = eval.loss;
+                    }
+                    // Hysteresis: one noisy mini-batch resets nothing
+                    // permanent — the streak has to survive
+                    // `divergence_patience` consecutive steps.
+                    if eval.loss > cfg.train.divergence_ratio * best_loss {
+                        bad_loss_streak += 1;
+                    } else {
+                        bad_loss_streak = 0;
+                    }
+                    if bad_loss_streak >= cfg.train.divergence_patience {
+                        self.stats.divergence_trips += 1;
+                        trip = Some("loss diverged from its best");
+                    }
+                    if trip.is_none() {
+                        if let TrainSolver::Ngd(ngd) = &self.solver {
+                            if let Some(ceiling) = ngd.damping.runaway_threshold() {
+                                if ngd.damping.lambda() >= ceiling {
+                                    lambda_pinned_streak += 1;
+                                } else {
+                                    lambda_pinned_streak = 0;
+                                }
+                                if lambda_pinned_streak >= cfg.train.divergence_patience {
+                                    self.stats.lambda_runaway_trips += 1;
+                                    trip = Some("λ pinned at its LM ceiling");
+                                }
+                            }
+                        }
+                    }
+                }
             }
-            final_loss = eval.loss;
 
-            let lambda = match &mut self.solver {
-                TrainSolver::Ngd(ngd) => {
-                    let report = ngd.step(&mut self.params, &eval.scores, &eval.grad, eval.loss)?;
-                    report.lambda
+            if trip.is_none() {
+                if initial_loss.is_nan() {
+                    initial_loss = eval.loss;
                 }
-                TrainSolver::Sgd(sgd) => {
-                    sgd.step(&mut self.params, &eval.grad);
-                    0.0
+                let lambda = match &mut self.solver {
+                    TrainSolver::Ngd(ngd) => {
+                        let report =
+                            ngd.step(&mut self.params, &eval.scores, &eval.grad, eval.loss)?;
+                        report.lambda
+                    }
+                    TrainSolver::Sgd(sgd) => {
+                        sgd.step(&mut self.params, &eval.grad);
+                        0.0
+                    }
+                };
+                // --- post-step check: the update itself went non-finite ---
+                if sentinel && self.params.iter().any(|p| !p.is_finite()) {
+                    self.stats.nan_trips += 1;
+                    trip = Some("non-finite parameters after update");
+                } else {
+                    final_loss = eval.loss;
+                    let grad_norm = crate::linalg::mat::norm2(&eval.grad);
+                    log.push(&[
+                        step as f64,
+                        eval.loss,
+                        lambda,
+                        grad_norm,
+                        t0.elapsed().as_secs_f64(),
+                    ]);
+                    step += 1;
+                    executed += 1;
+                    if cfg.train.checkpoint_every > 0 && step % cfg.train.checkpoint_every == 0 {
+                        let state = self.capture_state(step, batches.rng());
+                        state
+                            .save(&checkpoint_path(Path::new(&cfg.train.checkpoint_dir), step))?;
+                        self.stats.checkpoints_saved += 1;
+                        last_good = state;
+                    }
                 }
-            };
+            }
 
-            let grad_norm = crate::linalg::mat::norm2(&eval.grad);
-            log.push(&[step as f64, eval.loss, lambda, grad_norm, t0.elapsed().as_secs_f64()]);
-
-            if cfg.train.checkpoint_every > 0 && (step + 1) % cfg.train.checkpoint_every == 0 {
-                self.save_checkpoint(step + 1)
-                    .map_err(|e| SolveError::BadInput(format!("checkpoint: {e}")))?;
+            if let Some(reason) = trip {
+                if rollbacks == cfg.train.max_rollbacks {
+                    return Err(TrainError::Diverged {
+                        step,
+                        rollbacks,
+                        detail: reason.to_string(),
+                    });
+                }
+                rollbacks += 1;
+                self.stats.rollbacks += 1;
+                // Roll back to the last good state and escalate λ: a
+                // rollback that restored the exact diverging trajectory
+                // would diverge again identically.
+                let rng = self.apply_state(&last_good)?;
+                step = last_good.step;
+                batches =
+                    BatchIter::new(&tokens, cfg.model.context, cfg.train.batch_size, rng);
+                if let TrainSolver::Ngd(ngd) = &mut self.solver {
+                    ngd.damping.escalate(10.0);
+                    self.stats.lambda_escalations += 1;
+                }
+                // The escalated state is the new rollback target.
+                last_good = self.capture_state(step, batches.rng());
+                best_loss = f64::INFINITY;
+                bad_loss_streak = 0;
+                lambda_pinned_streak = 0;
             }
         }
 
+        // Arm continuation: a later `run`/`run_partial` on this trainer
+        // picks up exactly where this segment stopped.
+        self.start_step = step;
+        self.resume_rng = Some(batches.rng().state());
+
         Ok(TrainReport {
-            steps: cfg.train.steps,
+            steps: step,
             params: self.model.num_params(),
             initial_loss,
             final_loss,
             final_bits_per_char: final_loss / std::f64::consts::LN_2,
             wall_secs: started.elapsed().as_secs_f64(),
             backend: self.backend_name.clone(),
+            stats: self.stats.clone(),
         })
-    }
-
-    /// Save params (+ step marker) to `checkpoint_dir/step_{k}.ckpt`.
-    pub fn save_checkpoint(&self, step: usize) -> Result<(), crate::checkpoint::CheckpointError> {
-        let mut ck = Checkpoint::new();
-        ck.insert("params", self.params.clone());
-        ck.insert("step", vec![step as f64]);
-        let path = Path::new(&self.cfg.train.checkpoint_dir).join(format!("step_{step}.ckpt"));
-        ck.save(&path)
-    }
-
-    /// Restore params from a checkpoint file.
-    pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize, String> {
-        let ck = Checkpoint::load(path).map_err(|e| e.to_string())?;
-        let params = ck.get("params").ok_or("checkpoint missing `params`")?;
-        if params.len() != self.params.len() {
-            return Err(format!(
-                "checkpoint has {} params, model needs {}",
-                params.len(),
-                self.params.len()
-            ));
-        }
-        self.params.copy_from_slice(params);
-        let step = ck.get("step").and_then(|s| s.first()).copied().unwrap_or(0.0);
-        Ok(step as usize)
     }
 }
 
@@ -374,6 +677,7 @@ use_artifacts = false
         assert_eq!(log.len(), 8);
         assert!(report.final_loss < report.initial_loss, "{report:?}");
         assert!(report.final_bits_per_char > 0.0);
+        assert_eq!(report.stats, TrainStats::default(), "healthy run trips nothing");
     }
 
     #[test]
@@ -400,6 +704,7 @@ use_artifacts = false
     fn checkpoint_roundtrip_through_trainer() {
         let mut cfg = tiny_config();
         let dir = std::env::temp_dir().join("dngd_trainer_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
         cfg.train.checkpoint_dir = dir.to_string_lossy().to_string();
         cfg.train.checkpoint_every = 4;
         cfg.train.steps = 4;
@@ -409,7 +714,7 @@ use_artifacts = false
         let ckpt_path = dir.join("step_4.ckpt");
         assert!(ckpt_path.exists());
         let saved_params = trainer.params.clone();
-        // Scramble, then restore.
+        // Scramble, then restore the full state.
         for p in trainer.params.iter_mut() {
             *p = 0.0;
         }
@@ -417,6 +722,139 @@ use_artifacts = false
         assert_eq!(step, 4);
         assert_eq!(trainer.params, saved_params);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kill_and_resume_is_bit_identical_classic() {
+        // The kill-anywhere contract end to end, classic sharded-chol
+        // mode: kill after 3 steps, resume a *fresh* trainer from the
+        // latest checkpoint (step 2), rerun to completion — final
+        // params must match the unfailed run bit for bit. The full
+        // kill-boundary × mode matrix lives in tests/durability.rs.
+        let mut cfg = tiny_config();
+        let dir = std::env::temp_dir().join("dngd_trainer_kill_resume_test");
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.train.checkpoint_dir = dir.to_string_lossy().to_string();
+        cfg.train.checkpoint_every = 2;
+        cfg.train.steps = 6;
+
+        let mut reference = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        reference.run(&mut log).unwrap();
+
+        std::fs::remove_dir_all(&dir).ok();
+        let mut killed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let mut log2 = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        killed.run_partial(&mut log2, 3).unwrap();
+        drop(killed); // the "crash"
+
+        let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let at = resumed.resume_latest().unwrap();
+        assert_eq!(at, Some(2), "latest durable checkpoint is step 2");
+        let mut log3 = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = resumed.run(&mut log3).unwrap();
+        assert_eq!(report.steps, 6);
+        assert_eq!(report.stats.resumed_from, Some(2));
+        for (j, (a, b)) in reference.params.iter().zip(&resumed.params).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "param {j} diverged after resume");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_latest_quarantines_corrupt_checkpoint() {
+        let mut cfg = tiny_config();
+        let dir = std::env::temp_dir().join("dngd_trainer_quarantine_test");
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.train.checkpoint_dir = dir.to_string_lossy().to_string();
+        cfg.train.checkpoint_every = 2;
+        cfg.train.steps = 4;
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        trainer.run(&mut log).unwrap();
+        // Corrupt the newest checkpoint (step 4); step 2 stays good.
+        let p4 = dir.join("step_4.ckpt");
+        let mut bytes = std::fs::read(&p4).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p4, &bytes).unwrap();
+
+        let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let at = resumed.resume_latest().unwrap();
+        assert_eq!(at, Some(2), "must fall back to the older good checkpoint");
+        assert_eq!(resumed.stats().quarantined, 1);
+        assert!(!p4.exists(), "corrupt file renamed away");
+        assert!(dir.join("step_4.ckpt.corrupt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sentinel_aborts_after_rollback_budget() {
+        // SGD at an infinite learning rate poisons the very first
+        // update (±inf·grad, NaN where grad = 0) — the post-step param
+        // guard trips deterministically; with nothing to escalate,
+        // every rollback replays the same explosion until the budget
+        // is spent — pinned counters.
+        let mut cfg = tiny_config();
+        cfg.train.learning_rate = f64::INFINITY;
+        cfg.train.max_rollbacks = 2;
+        cfg.train.steps = 6;
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Sgd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        match trainer.run(&mut log) {
+            Err(TrainError::Diverged { rollbacks, .. }) => assert_eq!(rollbacks, 2),
+            other => panic!("expected Diverged, got {other:?}"),
+        }
+        let stats = trainer.stats();
+        assert_eq!(stats.rollbacks, 2);
+        assert_eq!(stats.nan_trips, 3, "initial trip + one per rollback replay");
+        assert_eq!(stats.lambda_escalations, 0, "sgd has no λ to escalate");
+    }
+
+    #[test]
+    fn lambda_runaway_sentinel_trips_with_hysteresis() {
+        // Pin λ at the LM ceiling from step 0 (min = max = λ): the
+        // runaway sentinel must wait out the patience window, then roll
+        // back + escalate (a no-op at the ceiling), then abort when the
+        // budget is spent — every counter deterministic.
+        let mut cfg = tiny_config();
+        cfg.solver.adaptive = true;
+        cfg.solver.lambda = 0.5;
+        cfg.solver.lambda_min = 0.5;
+        cfg.solver.lambda_max = 0.5;
+        cfg.train.divergence_patience = 2;
+        cfg.train.max_rollbacks = 1;
+        cfg.validate().unwrap();
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        match trainer.run(&mut log) {
+            Err(TrainError::Diverged { rollbacks, detail, .. }) => {
+                assert_eq!(rollbacks, 1);
+                assert!(detail.contains("ceiling"), "{detail}");
+            }
+            other => panic!("expected Diverged, got {other:?}"),
+        }
+        let stats = trainer.stats();
+        assert_eq!(stats.lambda_runaway_trips, 2);
+        assert_eq!(stats.rollbacks, 1);
+        assert_eq!(stats.lambda_escalations, 1);
+        assert_eq!(stats.nan_trips, 0);
+    }
+
+    #[test]
+    fn sentinel_off_restores_flowthrough() {
+        // train.sentinel = false: the run neither trips nor rolls back
+        // — non-finite values flow through as before PR 9.
+        let mut cfg = tiny_config();
+        cfg.train.sentinel = false;
+        cfg.train.learning_rate = f64::INFINITY;
+        cfg.train.steps = 3;
+        let mut trainer = Trainer::new(&cfg, OptimizerChoice::Sgd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = trainer.run(&mut log).unwrap();
+        assert_eq!(trainer.stats(), &TrainStats::default());
+        assert_eq!(report.steps, 3);
+        assert_eq!(log.len(), 3, "no step was withheld or rolled back");
     }
 
     #[test]

@@ -19,6 +19,14 @@ impl<'a> BatchIter<'a> {
         BatchIter { tokens, context, batch, rng }
     }
 
+    /// The iterator's RNG — its state *is* the data cursor (offsets are
+    /// sampled with replacement straight from the stream), so
+    /// checkpointing it via [`Rng::state`] captures the exact batch
+    /// sequence position for bit-identical resume.
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
     /// Next batch: `batch` rows of `context` input ids plus the target id
     /// following each window.
     pub fn next_batch(&mut self) -> (Vec<Vec<u32>>, Vec<u32>) {

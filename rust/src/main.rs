@@ -2,11 +2,11 @@
 //!
 //! ```text
 //! dngd solve  --n 256 --m 8192 [--lambda 1e-3] [--solver chol|eigh|svda|naive|cg|all]
-//! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd]
+//! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd] [--resume [path]]
 //! dngd vmc    [--config cfg.toml] [--set section.key=value]…
 //! dngd bench  --table1 | --scaling | --cg | --kernels | --precision [--scale small|paper] [--json out.json]
 //! dngd serve  [--config cfg.toml] [--set section.key=value]… [--transport channels|socket|both] [--self-test] [--inject-kill]
-//! dngd chaos  [--schedule S|all] [--transport channels|socket|both] [--seed N] [--requests R]
+//! dngd chaos  [--target serve|train] [--schedule S|all] [--transport channels|socket|both] [--seed N] [--kills K]
 //! dngd artifacts [--dir artifacts]
 //! ```
 //!
@@ -120,12 +120,16 @@ USAGE:
   dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|rvb|all] [--threads T]
               [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
+              [--resume [path.ckpt]]   (bare --resume scans train.checkpoint_dir, quarantining corrupt files)
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
   dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision | --serving | --recovery) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
   dngd serve  [--config cfg.toml] [--set section.key=value]... [--transport channels|socket|both]
               [--tenants T] [--requests R] [--self-test] [--inject-kill]
-  dngd chaos  [--config cfg.toml] [--set section.key=value]... [--schedule kill-during-factor|stall-during-panel|corrupt-frame|respawn-storm|all]
-              [--transport channels|socket|both] [--threads T] [--workers W] [--seed N] [--requests R] [--kill-every K]
+  dngd chaos  [--config cfg.toml] [--set section.key=value]... [--target serve|train]
+              serve: [--schedule kill-during-factor|stall-during-panel|corrupt-frame|respawn-storm|all]
+                     [--transport channels|socket|both] [--threads T] [--workers W] [--requests R] [--kill-every K]
+              train: [--kills K]   (kill/resume cycles per scenario; resume must be bit-identical)
+              [--seed N]
   dngd artifacts [--dir artifacts]";
 
 /// Parse a `--lambda-sweep a,b,c` list.
@@ -276,9 +280,37 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown optimizer {other:?}")),
     };
     let mut trainer = Trainer::new(&cfg, optimizer)?;
-    if let Some(path) = a.get("resume") {
-        let step = trainer.load_checkpoint(std::path::Path::new(path))?;
-        println!("resumed from {path} (step {step})");
+    match a.get("resume") {
+        // Bare `--resume`: scan train.checkpoint_dir for the newest
+        // loadable checkpoint (quarantining corrupt files).
+        Some("") => match trainer.resume_latest().map_err(|e| e.to_string())? {
+            Some(step) => println!(
+                "resumed from {} (step {step})",
+                dngd::checkpoint::checkpoint_path(
+                    std::path::Path::new(&cfg.train.checkpoint_dir),
+                    step
+                )
+                .display()
+            ),
+            None => println!(
+                "no usable checkpoint under {} — starting fresh",
+                cfg.train.checkpoint_dir
+            ),
+        },
+        Some(path) => {
+            let step = trainer
+                .load_checkpoint(std::path::Path::new(path))
+                .map_err(|e| e.to_string())?;
+            println!("resumed from {path} (step {step})");
+        }
+        None => {}
+    }
+    let recovery = trainer.stats().clone();
+    if recovery.quarantined > 0 || recovery.version_skipped > 0 {
+        println!(
+            "recovery: quarantined {} corrupt checkpoint(s), skipped {} from other versions",
+            recovery.quarantined, recovery.version_skipped
+        );
     }
     println!(
         "training: {} params, vocab {}, backend {}, optimizer {optimizer:?}",
@@ -309,6 +341,18 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         report.wall_secs,
         report.backend
     );
+    let st = &report.stats;
+    if st.nan_trips + st.divergence_trips + st.lambda_runaway_trips + st.rollbacks > 0 {
+        println!(
+            "sentinel: {} nan trip(s), {} divergence trip(s), {} λ-runaway trip(s), \
+             {} rollback(s), {} λ escalation(s)",
+            st.nan_trips,
+            st.divergence_trips,
+            st.lambda_runaway_trips,
+            st.rollbacks,
+            st.lambda_escalations
+        );
+    }
     if let Some(csv) = a.get("csv") {
         log.write_csv(std::path::Path::new(csv)).map_err(|e| e.to_string())?;
         println!("loss curve written to {csv}");
@@ -694,6 +738,50 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     }
 }
 
+/// `dngd chaos --target train`: kill a training run at randomized step
+/// boundaries, resume a fresh trainer from the latest durable
+/// checkpoint, and demand the final parameters match the unfailed run
+/// bit for bit — across classic sharded, streaming-window (chol + rvb)
+/// and mixed-precision modes — plus corrupt-checkpoint quarantine and
+/// version-skew recovery drills.
+fn cmd_chaos_train(a: &cli::Args, cfg: &Config) -> Result<(), String> {
+    for flag in ["schedule", "transport", "threads", "workers", "requests", "kill-every"] {
+        if a.get(flag).is_some() {
+            return Err(format!("--{flag} applies to --target serve only"));
+        }
+    }
+    let mut opts = dngd::coordinator::TrainChaosOptions {
+        seed: cfg.chaos.seed,
+        kills: cfg.chaos.kills,
+    };
+    opts.seed = a.parsed("seed", opts.seed)?;
+    opts.kills = a.parsed("kills", opts.kills)?;
+    if opts.kills == 0 {
+        return Err("--kills must be ≥ 1".into());
+    }
+    let mut failed = 0usize;
+    for r in dngd::coordinator::chaos::run_all(&opts)? {
+        let verdict = if r.passed { "PASS" } else { "FAIL" };
+        let detail =
+            if r.detail.is_empty() { String::new() } else { format!("  ({})", r.detail) };
+        println!(
+            "chaos [   train] {:<22} kills {}  resumes {}  quarantined {}  skew-skipped {}  \
+             {verdict}{detail}",
+            r.scenario, r.kills, r.resumes, r.quarantined, r.version_skipped
+        );
+        if !r.passed {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        return Err(format!("{failed} train chaos scenario(s) failed"));
+    }
+    println!(
+        "chaos: every kill/resume cycle rejoined the reference trajectory bit-identically ✓"
+    );
+    Ok(())
+}
+
 /// `dngd chaos`: run scripted fault schedules against a live server and
 /// judge each run (correct answers, zero leaks, pinned recovery
 /// counters). Any failing schedule is a hard error after all runs are
@@ -702,9 +790,21 @@ fn cmd_chaos(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
         "config", "set", "schedule", "transport", "threads", "workers", "seed", "requests",
-        "kill-every",
+        "kill-every", "target", "kills",
     ])?;
     let cfg = Config::load(a.get("config"), &a.get_all("set"))?;
+    let target = a.get("target").filter(|s| !s.is_empty()).unwrap_or(cfg.chaos.target.as_str());
+    match target {
+        "train" => return cmd_chaos_train(&a, &cfg),
+        "serve" => {
+            // `--kills` belongs to the train target; refuse rather than
+            // silently ignore it (the CLI policy).
+            if a.get("kills").is_some() {
+                return Err("--kills applies to --target train only".into());
+            }
+        }
+        other => return Err(format!("unknown chaos target {other:?} (serve|train)")),
+    }
     // Flags override `chaos.*` config keys, which override the defaults.
     let mut opts = ChaosOptions {
         seed: cfg.chaos.seed,

@@ -28,6 +28,50 @@ impl DampingSchedule {
         }
     }
 
+    /// The evolving scalar of the schedule — the one piece of state that
+    /// is not derivable from config. Checkpoints persist this; the
+    /// schedule *shape* (policy + bounds) is rebuilt from config at
+    /// resume and [`DampingSchedule::restore`] re-seats the scalar.
+    pub fn state(&self) -> f64 {
+        self.lambda()
+    }
+
+    /// Re-seat the evolving scalar from a checkpoint (see
+    /// [`DampingSchedule::state`]). Bounds are *not* re-clamped: the
+    /// saved value came from this schedule's own dynamics (or a sentinel
+    /// escalation), and resume must reproduce it exactly.
+    pub fn restore(&mut self, value: f64) {
+        match self {
+            DampingSchedule::Constant { lambda } => *lambda = value,
+            DampingSchedule::ExponentialDecay { initial, .. } => *initial = value,
+            DampingSchedule::LevenbergMarquardt { lambda, .. } => *lambda = value,
+        }
+    }
+
+    /// Sentinel rescue: multiply λ by `factor` (clamped to the LM upper
+    /// bound where one exists). Overrides even the `Constant` policy —
+    /// a rollback that restored the exact diverging λ would diverge
+    /// again identically.
+    pub fn escalate(&mut self, factor: f64) {
+        match self {
+            DampingSchedule::Constant { lambda } => *lambda *= factor,
+            DampingSchedule::ExponentialDecay { initial, .. } => *initial *= factor,
+            DampingSchedule::LevenbergMarquardt { lambda, max, .. } => {
+                *lambda = (*lambda * factor).min(*max);
+            }
+        }
+    }
+
+    /// λ value at which the schedule is pinned against its ceiling —
+    /// the λ-runaway sentinel's trip threshold. Only the LM policy has
+    /// one (a decaying or constant λ cannot run away on its own).
+    pub fn runaway_threshold(&self) -> Option<f64> {
+        match self {
+            DampingSchedule::LevenbergMarquardt { max, .. } => Some(*max),
+            _ => None,
+        }
+    }
+
     /// Advance one step. `loss_improved` is only consulted by the LM policy.
     pub fn advance(&mut self, loss_improved: bool) {
         match self {
@@ -69,6 +113,33 @@ mod tests {
             prev = d.lambda();
         }
         assert_eq!(d.lambda(), 0.1);
+    }
+
+    #[test]
+    fn state_restore_escalate() {
+        let mut d = DampingSchedule::LevenbergMarquardt {
+            lambda: 1.0,
+            grow: 2.0,
+            shrink: 0.5,
+            min: 1e-8,
+            max: 1e3,
+        };
+        d.advance(true);
+        let saved = d.state();
+        d.advance(false);
+        d.advance(false);
+        d.restore(saved);
+        assert_eq!(d.lambda().to_bits(), saved.to_bits());
+        d.escalate(10.0);
+        assert_eq!(d.lambda(), 5.0);
+        d.escalate(1e9);
+        assert_eq!(d.lambda(), 1e3, "escalation respects the LM ceiling");
+        assert_eq!(d.runaway_threshold(), Some(1e3));
+
+        let mut c = DampingSchedule::Constant { lambda: 0.01 };
+        c.escalate(10.0);
+        assert!((c.lambda() - 0.1).abs() < 1e-15, "rescue overrides constancy");
+        assert_eq!(c.runaway_threshold(), None);
     }
 
     #[test]

@@ -30,6 +30,17 @@ impl Sgd {
             params[j] -= self.learning_rate * self.velocity[j];
         }
     }
+
+    /// The momentum buffer (empty before the first step) — checkpointed
+    /// so a resumed run continues the same velocity trajectory.
+    pub fn velocity(&self) -> &[f64] {
+        &self.velocity
+    }
+
+    /// Restore the momentum buffer from a checkpoint.
+    pub fn restore_velocity(&mut self, velocity: Vec<f64>) {
+        self.velocity = velocity;
+    }
 }
 
 /// Adam (Kingma & Ba) with bias correction.

@@ -21,4 +21,4 @@ pub mod optimizer;
 pub use damping::DampingSchedule;
 pub use first_order::{Adam, Sgd};
 pub use kfac::BlockDiagonalFisher;
-pub use optimizer::{NaturalGradient, NgdReport};
+pub use optimizer::{NaturalGradient, NgdReport, NgdState, SessionLog, WindowLog};

@@ -3,7 +3,17 @@
 use super::DampingSchedule;
 use crate::linalg::mat::norm2;
 use crate::linalg::Mat;
+use crate::serve::SessionRecord;
 use crate::solver::{solve_with_backoff, DampedSolver, Factorization, SolveError};
+
+/// Snapshot cadence handed to the optimizer's durable window records:
+/// never auto-refresh. The record's snapshot must coincide exactly with
+/// the streaming session's own cold points (open/`refresh()`), so the
+/// optimizer rotates the snapshot explicitly instead of letting the
+/// record pick its own cadence. `u32::MAX` (not `usize::MAX`) because
+/// the cadence rides through the checkpoint's f64 tensor encoding and
+/// must round-trip exactly.
+const RECORD_NEVER: usize = u32::MAX as usize;
 
 /// Damped NGD/SR optimizer state.
 ///
@@ -55,6 +65,56 @@ struct WindowState {
     /// session on the rotated window every step (the refactor
     /// fallback).
     fallback: bool,
+    /// Bit-exact mirror of the native session's owned window,
+    /// maintained by the same copy-only row moves the session applies.
+    /// Feeds the durable record's snapshot at cold points. Empty until
+    /// a native session opens.
+    live: Mat,
+    /// Durable image of the native session (PR-8 snapshot+rotation-log
+    /// machinery): snapshot at the last cold point, rotations since.
+    /// `None` until a native session opens.
+    record: Option<SessionRecord>,
+    /// λ the session held when its last `refresh()` re-damped it
+    /// (`None` when the cold point is the session open — a fresh
+    /// session starts at λ = 0).
+    cold_refresh_lambda: Option<f64>,
+    /// λ-backoff retries of the cold-point solve (the solve issued
+    /// before any rotation was logged).
+    cold_retries: usize,
+    /// Per logged rotation, `(λ_first, retries)` of that step's solve:
+    /// the schedule's λ and how many ×10 backoffs the solve needed.
+    /// Resume replays the identical redamp sequence — a rotated factor
+    /// differs bitwise from a refactored one, so landing on the same
+    /// bits requires re-issuing the same rotate/redamp interleaving,
+    /// failures included. Invariant: `redamps.len() == record.log().len()`
+    /// after every completed step.
+    redamps: Vec<(f64, usize)>,
+    /// Whether the current native session has ever rotated. A
+    /// mixed-precision session latches f64 on its first rotation;
+    /// replay must reproduce the latch before re-damping (see
+    /// [`NaturalGradient::restore_state`]).
+    ever_rotated: bool,
+}
+
+impl WindowState {
+    /// Record a completed solve's `(λ_first, retries)` against the
+    /// durable log. The solve at a cold point (empty rotation log)
+    /// re-seats the record's base λ; each later solve appends one entry
+    /// per logged rotation.
+    fn note_solve(&mut self, lambda_first: f64, retries: usize) {
+        let Some(rec) = self.record.as_mut() else { return };
+        if rec.log().is_empty() {
+            rec.set_lambda(lambda_first);
+            self.cold_retries = retries;
+        } else if self.redamps.len() < rec.log().len() {
+            self.redamps.push((lambda_first, retries));
+        } else {
+            // Re-solve on an unchanged rotation state (unreachable from
+            // the one-solve-per-rotation step loop, but harmless): the
+            // last redamp decides the factor, so overwrite.
+            *self.redamps.last_mut().expect("non-empty by invariant") = (lambda_first, retries);
+        }
+    }
 }
 
 /// Per-step diagnostics.
@@ -123,6 +183,12 @@ impl NaturalGradient {
             window: Mat::zeros(0, 0),
             fact: None,
             fallback: false,
+            live: Mat::zeros(0, 0),
+            record: None,
+            cold_refresh_lambda: None,
+            cold_retries: 0,
+            redamps: Vec::new(),
+            ever_rotated: false,
         });
         self
     }
@@ -173,15 +239,39 @@ impl NaturalGradient {
                 Err(SolveError::NotPositiveDefinite(_)) => {}
                 Err(e) => return Err(e),
             }
+            // Mirror the rotation (kept rows keep their order, the
+            // batch appends — the session's own layout) and log it in
+            // the durable record. Copy-only moves, so the mirror stays
+            // bit-exact against the session's owned window.
+            ws.live = if k >= ws.live.rows() {
+                added.clone()
+            } else {
+                Mat::vstack(&ws.live.slice_rows(k, ws.live.rows()), &added)
+            };
+            if let Some(rec) = ws.record.as_mut() {
+                rec.record_rotation(&removed, &added, &ws.live);
+            }
+            ws.ever_rotated = true;
             ws.rotations += 1;
             if ws.refresh_every > 0 && ws.rotations >= ws.refresh_every {
+                // Cold point: the session rebuilds its Gram+factor from
+                // the live window, keeping its current λ. Restart the
+                // durable record here — the λ the session carried into
+                // the refresh is part of the replay (the refreshed
+                // factor is a cold refactor *at that λ*).
+                let lambda_at_refresh = fact.lambda();
                 match fact.refresh() {
                     Ok(()) | Err(SolveError::NotPositiveDefinite(_)) => {}
                     Err(e) => return Err(e),
                 }
                 ws.rotations = 0;
+                ws.record = Some(SessionRecord::new(&ws.live, 0.0, RECORD_NEVER));
+                ws.cold_refresh_lambda = Some(lambda_at_refresh);
+                ws.cold_retries = 0;
+                ws.redamps.clear();
             }
             let (x, l, r) = solve_with_backoff(fact.as_mut(), grad, lambda, self.pd_retries)?;
+            ws.note_solve(lambda, r);
             return Ok((x, l, r, w));
         }
 
@@ -205,14 +295,23 @@ impl NaturalGradient {
         if ws.window.rows() >= w {
             let rows = ws.window.rows();
             let full = ws.window.slice_rows(rows - w, rows);
-            match self.solver.begin_window(full) {
+            match self.solver.begin_window(full.clone()) {
                 Some(fact) => {
                     ws.fact = Some(fact);
                     // The session owns the window now; free the copy.
                     ws.window = Mat::zeros(0, m);
+                    // Session open = the first cold point: keep the
+                    // bit-exact mirror and start the durable record.
+                    ws.live = full;
+                    ws.record = Some(SessionRecord::new(&ws.live, 0.0, RECORD_NEVER));
+                    ws.cold_refresh_lambda = None;
+                    ws.cold_retries = 0;
+                    ws.redamps.clear();
+                    ws.ever_rotated = false;
                     let fact = ws.fact.as_mut().unwrap();
                     let (x, l, r) =
                         solve_with_backoff(fact.as_mut(), grad, lambda, self.pd_retries)?;
+                    ws.note_solve(lambda, r);
                     return Ok((x, l, r, w));
                 }
                 None => {
@@ -302,6 +401,207 @@ impl NaturalGradient {
             window_rows,
         })
     }
+
+    /// Snapshot everything the optimizer evolves across steps that is
+    /// not derivable from config — the checkpointable state (PR 9).
+    /// Cheap relative to a step: clones of the velocity and (in
+    /// streaming mode) the window snapshot + rotation log.
+    pub fn export_state(&self) -> NgdState {
+        NgdState {
+            velocity: self.velocity.clone(),
+            last_loss: self.last_loss,
+            steps: self.steps,
+            lambda: self.damping.state(),
+            window: self.window.as_ref().map(|ws| WindowLog {
+                fill: ws.window.clone(),
+                fallback: ws.fallback,
+                rotations: ws.rotations,
+                session: ws.fact.is_some().then(|| SessionLog {
+                    record: ws.record.clone().expect("open session always has a record"),
+                    cold_refresh_lambda: ws.cold_refresh_lambda,
+                    cold_retries: ws.cold_retries,
+                    redamps: ws.redamps.clone(),
+                    ever_rotated: ws.ever_rotated,
+                }),
+            }),
+        }
+    }
+
+    /// Rebuild the optimizer at a checkpointed state so the resumed
+    /// trajectory is **bit-identical** to the unfailed run.
+    ///
+    /// The scalar state (velocity/loss/steps/λ) restores directly. The
+    /// streaming session cannot be serialized — it holds a live factor
+    /// whose bits depend on the exact rotate/redamp history — so it is
+    /// *replayed*: reopen the session on the recorded cold-point
+    /// snapshot, then re-issue the identical sequence of operations the
+    /// live run performed since that cold point (first-rotation
+    /// mixed-precision latch, refresh-λ redamp, the cold solve's λ
+    /// backoff chain, then each logged rotation followed by its solve's
+    /// backoff chain). Every arithmetic input matches the live run's,
+    /// so every output bit does too.
+    pub fn restore_state(&mut self, st: NgdState) -> Result<(), SolveError> {
+        self.velocity = st.velocity;
+        self.last_loss = st.last_loss;
+        self.steps = st.steps;
+        self.damping.restore(st.lambda);
+        match (self.window.as_mut(), st.window) {
+            (None, None) => Ok(()),
+            (Some(_), None) | (None, Some(_)) => Err(SolveError::BadInput(
+                "checkpoint streaming-window state does not match the configured solver.window"
+                    .into(),
+            )),
+            (Some(ws), Some(wl)) => {
+                ws.window = wl.fill;
+                ws.fallback = wl.fallback;
+                ws.rotations = wl.rotations;
+                ws.fact = None;
+                ws.live = Mat::zeros(0, 0);
+                ws.record = None;
+                ws.cold_refresh_lambda = None;
+                ws.cold_retries = 0;
+                ws.redamps.clear();
+                ws.ever_rotated = false;
+                let Some(sl) = wl.session else {
+                    // Fill phase or fallback mode: the window matrix is
+                    // the whole state.
+                    return Ok(());
+                };
+                if sl.redamps.len() != sl.record.log().len() {
+                    return Err(SolveError::BadInput(format!(
+                        "corrupt window log: {} rotations but {} redamp entries",
+                        sl.record.log().len(),
+                        sl.redamps.len()
+                    )));
+                }
+                let snapshot = sl.record.snapshot().clone();
+                let mcols = snapshot.cols();
+                let mut fact = self.solver.begin_window(snapshot).ok_or_else(|| {
+                    SolveError::BadInput(
+                        "checkpoint carries a streaming session but the configured solver \
+                         kind has no owned-window session"
+                            .into(),
+                    )
+                })?;
+                // A mixed-precision session latches f64 on its *first*
+                // rotation (and builds its cold f64 Gram there). Replay
+                // the latch before any redamp via an empty rotation —
+                // an exact-copy no-op on every other configuration — so
+                // the replayed redamps take the same arithmetic path
+                // the live session's did.
+                if sl.ever_rotated {
+                    match fact.update_rows(&[], &Mat::zeros(0, mcols)) {
+                        Ok(()) | Err(SolveError::NotPositiveDefinite(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+                // If the cold point was a refresh(), the session was
+                // re-damped at the λ it carried into the refresh before
+                // the step's own solve re-damped it again.
+                if let Some(lc) = sl.cold_refresh_lambda {
+                    match fact.redamp(lc) {
+                        Ok(()) | Err(SolveError::NotPositiveDefinite(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+                replay_redamps(fact.as_mut(), sl.record.lambda(), sl.cold_retries)?;
+                // Rebuild λ-independent per-session solve state: rvb
+                // freezes its recovery ridge (and factors its recovery
+                // Gram) lazily at the first solve after a cold point. A
+                // zero-RHS solve is structurally valid for every kind
+                // (0 = Sᵀ·0 is in the row space) and leaves the f64
+                // factor state untouched.
+                let mut scratch = vec![0.0; mcols];
+                fact.solve_into(&vec![0.0; mcols], &mut scratch)?;
+                for (i, entry) in sl.record.log().iter().enumerate() {
+                    match fact.update_rows(&entry.removed, &entry.added) {
+                        Ok(()) | Err(SolveError::NotPositiveDefinite(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                    let (lf, r) = sl.redamps[i];
+                    replay_redamps(fact.as_mut(), lf, r)?;
+                }
+                ws.live = sl
+                    .record
+                    .materialize_window()
+                    .map_err(|e| SolveError::BadInput(format!("window record replay: {e}")))?;
+                ws.fact = Some(fact);
+                ws.record = Some(sl.record);
+                ws.cold_refresh_lambda = sl.cold_refresh_lambda;
+                ws.cold_retries = sl.cold_retries;
+                ws.redamps = sl.redamps;
+                ws.ever_rotated = sl.ever_rotated;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Re-issue a recorded solve's λ-backoff sequence: the redamps that
+/// failed live fail identically here (each deterministically clears the
+/// factor slot), and the final one seats the factor the live run ended
+/// the step with. Mirrors `solve_with_backoff`'s ×10 progression.
+fn replay_redamps(
+    fact: &mut dyn Factorization,
+    lambda_first: f64,
+    retries: usize,
+) -> Result<(), SolveError> {
+    let mut l = lambda_first;
+    for _ in 0..retries {
+        let _ = fact.redamp(l); // failed live; fails identically here
+        l *= 10.0;
+    }
+    fact.redamp(l)
+}
+
+/// Checkpointable optimizer state ([`NaturalGradient::export_state`]) —
+/// everything the optimizer evolves across steps that is not derivable
+/// from config.
+#[derive(Debug, Clone)]
+pub struct NgdState {
+    /// Momentum buffer (empty before the first step).
+    pub velocity: Vec<f64>,
+    /// Previous batch loss (drives the LM damping policy).
+    pub last_loss: Option<f64>,
+    /// Steps taken.
+    pub steps: usize,
+    /// The damping schedule's evolving scalar
+    /// ([`DampingSchedule::state`]).
+    pub lambda: f64,
+    /// Streaming-window state; `None` in classic per-batch mode.
+    pub window: Option<WindowLog>,
+}
+
+/// Durable image of the sliding-window streaming state.
+#[derive(Debug, Clone)]
+pub struct WindowLog {
+    /// Fill-phase accumulator / fallback-mode live window.
+    pub fill: Mat,
+    /// Fallback mode latched (solver kind has no owned-window session).
+    pub fallback: bool,
+    /// Rotations since the last full refactor (drift-backstop counter).
+    pub rotations: usize,
+    /// Open native session, as a replayable log; `None` while filling
+    /// or in fallback mode.
+    pub session: Option<SessionLog>,
+}
+
+/// Replayable image of a native owned-window session: the PR-8
+/// snapshot+rotation-log record plus the per-solve redamp trace. See
+/// [`NaturalGradient::restore_state`] for the replay contract.
+#[derive(Debug, Clone)]
+pub struct SessionLog {
+    /// Cold-point snapshot + rotations since (PR-8 machinery).
+    pub record: SessionRecord,
+    /// λ carried into the cold point's `refresh()` (`None` when the
+    /// cold point is the session open).
+    pub cold_refresh_lambda: Option<f64>,
+    /// λ-backoff retries of the cold-point solve.
+    pub cold_retries: usize,
+    /// `(λ_first, retries)` per logged rotation.
+    pub redamps: Vec<(f64, usize)>,
+    /// Mixed-precision f64 latch must be replayed first.
+    pub ever_rotated: bool,
 }
 
 #[cfg(test)]
@@ -532,6 +832,97 @@ mod tests {
         }
         let (l1, _, _) = loss_grad(&a, &b_t, &theta);
         assert!(l1.is_finite() && l1 < l0);
+    }
+
+    /// Run `steps` NGD steps on the quadratic, optionally exporting the
+    /// optimizer state at step `save_at` and restoring it into a fresh
+    /// optimizer (built by `mk`) before continuing — the kill-anywhere
+    /// resume path. Returns the final parameters.
+    fn run_with_restore(
+        mk: &dyn Fn() -> NaturalGradient,
+        a: &Mat,
+        b_t: &[f64],
+        m: usize,
+        steps: usize,
+        save_at: Option<usize>,
+    ) -> Vec<f64> {
+        let mut ngd = mk();
+        let mut theta = vec![0.0; m];
+        for step in 0..steps {
+            if save_at == Some(step) {
+                let st = ngd.export_state();
+                ngd = mk();
+                ngd.restore_state(st).unwrap();
+            }
+            let (l, g, s) = loss_grad(a, b_t, &theta);
+            ngd.step(&mut theta, &s, &g, l).unwrap();
+        }
+        theta
+    }
+
+    #[test]
+    fn export_restore_resumes_bit_identically() {
+        // The kill-anywhere contract at the optimizer layer: exporting
+        // mid-stream and restoring into a *fresh* optimizer must leave
+        // the remaining trajectory bit-identical to the uninterrupted
+        // run — at every possible save boundary, through fill, session
+        // open, rotations, and refresh()-cold-point phases, for both
+        // native owned-window kinds and an LM damping schedule.
+        let mut rng = Rng::seed_from(208);
+        let (a, b_t, _) = quadratic_setup(8, 16, &mut rng);
+        for kind in [SolverKind::Chol, SolverKind::Rvb] {
+            let mk = move || {
+                NaturalGradient::new(
+                    crate::solver::make_solver(kind),
+                    DampingSchedule::LevenbergMarquardt {
+                        lambda: 1e-3,
+                        grow: 2.0,
+                        shrink: 0.9,
+                        min: 1e-10,
+                        max: 1e3,
+                    },
+                    0.3,
+                )
+                .with_momentum(0.9)
+                .with_window(16, 3) // fill completes at step 1; refresh fires
+            };
+            let steps = 8;
+            let reference = run_with_restore(&mk, &a, &b_t, 16, steps, None);
+            for save_at in 0..steps {
+                let resumed = run_with_restore(&mk, &a, &b_t, 16, steps, Some(save_at));
+                for (j, (x, y)) in reference.iter().zip(&resumed).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{kind:?}: save at step {save_at}, param {j}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn export_restore_rejects_window_config_mismatch() {
+        let mk_windowed = || {
+            NaturalGradient::new(
+                Box::new(CholSolver::default()),
+                DampingSchedule::Constant { lambda: 1e-3 },
+                0.3,
+            )
+            .with_window(16, 0)
+        };
+        let st = mk_windowed().export_state();
+        let mut classic = NaturalGradient::new(
+            Box::new(CholSolver::default()),
+            DampingSchedule::Constant { lambda: 1e-3 },
+            0.3,
+        );
+        assert!(matches!(classic.restore_state(st), Err(SolveError::BadInput(_))));
+        let mut windowed = mk_windowed();
+        assert!(matches!(
+            windowed.restore_state(classic.export_state()),
+            Err(SolveError::BadInput(_))
+        ));
     }
 
     #[test]

@@ -142,6 +142,26 @@
 //! `dngd bench --recovery` → `BENCH_PR8.json` the recovery-latency tax
 //! under injected kills (EXPERIMENTS.md §Serving, §Fault-tolerance).
 //!
+//! ## Durability (PR 9): crash-safe training with bit-identical resume
+//!
+//! The trainer snapshots its *complete* state at checkpoint boundaries
+//! (atomic rename + dir fsync) and a killed run resumes from the latest
+//! durable checkpoint onto the unfailed trajectory **bit for bit**.
+//! What each solve mode must persist and how it is rebuilt:
+//!
+//! | mode | durable session state | restore path |
+//! |------|----------------------|--------------|
+//! | classic (chol/eigh/svda/cg/rvb, sharded or serial) | none — a fresh factor per step | params + momentum + λ + RNG cursor suffice |
+//! | streaming window, fallback kinds | window fill matrix | refactor cold next step (same arithmetic as a refresh) |
+//! | streaming window, owned `chol`/`rvb` session | window snapshot + rotation log + per-solve (λ_first, retries) backoff chains + mixed-latch flag | replay: `begin_window` → re-rotate → re-damp the *exact* λ chains (a rotated factor differs bitwise from a refactored one) |
+//!
+//! [`crate::ngd::NaturalGradient::export_state`] /
+//! [`restore_state`](crate::ngd::NaturalGradient::restore_state) carry
+//! that log ([`crate::ngd::SessionLog`]); the health sentinel and
+//! recovery scan live in [`crate::coordinator::trainer`], and
+//! `dngd chaos --target train` plus `rust/tests/durability.rs` pin the
+//! kill-anywhere guarantee (EXPERIMENTS.md §Durability).
+//!
 //! Complex stochastic-reconfiguration variants (§3) live in
 //! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part
 //! Fisher `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`, with the same

@@ -24,6 +24,17 @@
 //! `cg` captures its iteration workspace, `rvb` additionally caches the
 //! recovery factor for `v = Sᵀf`), and [`OneShot`] adapts backends with
 //! no separable factorization (PJRT executables).
+//!
+//! **Durability note (PR 9).** Session state is deliberately *not*
+//! serialized: a rotated factor is bitwise different from a cold
+//! refactor of the same window (`chol_update` and SYRK+Cholesky are
+//! different arithmetic), so checkpointing the factor itself could not
+//! reproduce a live run anyway. Instead the trainer logs the session's
+//! *history* — window snapshot, rotations, and every `redamp` chain
+//! including failed λ-backoff attempts — and a resume replays that
+//! history through `begin_window`/`update_rows`/`redamp` verbatim,
+//! landing on the identical factor bits
+//! ([`crate::ngd::NaturalGradient::restore_state`]).
 
 use super::{DampedSolver, SolveError, SolverKind};
 use crate::linalg::{KernelConfig, KernelIsa, Mat};

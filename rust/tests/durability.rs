@@ -1,0 +1,269 @@
+//! Crash-durability integration tests (PR 9).
+//!
+//! The contract under test: a training run killed at **any** step
+//! boundary and resumed from its latest durable checkpoint rejoins the
+//! unfailed trajectory bit-identically — same parameters to the last
+//! mantissa bit. That requires the checkpoint to carry the complete
+//! state: params, optimizer momentum, the damping scalar, the batch-RNG
+//! data cursor, and (in streaming mode) a replayable log of the owned
+//! window session's rotations and λ-backoff chains.
+//!
+//! The matrix crosses every kill boundary with the solve modes that
+//! carry distinct durable state: classic sharded chol, streaming-window
+//! chol and rvb, and the mixed-precision (f32 factor + f64 latch)
+//! paths. Recovery-robustness tests (corrupt → quarantine, truncation,
+//! version skew) ride along at the trainer level.
+
+use dngd::checkpoint::Checkpoint;
+use dngd::config::Config;
+use dngd::coordinator::trainer::{OptimizerChoice, TRAIN_LOG_COLUMNS};
+use dngd::coordinator::Trainer;
+use dngd::metrics::MetricsLog;
+use dngd::solver::{Precision, SolverKind};
+use std::path::PathBuf;
+
+const STEPS: usize = 6;
+const CHECKPOINT_EVERY: usize = 2;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dngd_durability_{}_{tag}", std::process::id()))
+}
+
+fn base_cfg(dir: &std::path::Path) -> Config {
+    let mut cfg = Config::from_toml_str(
+        r#"
+[model]
+dim = 8
+heads = 2
+layers = 1
+context = 8
+mlp_hidden = 16
+
+[train]
+steps = 6
+batch_size = 16
+learning_rate = 0.3
+corpus_len = 4000
+seed = 11
+checkpoint_every = 2
+
+[solver]
+lambda = 0.01
+
+[coordinator]
+workers = 1
+use_artifacts = false
+"#,
+        &[],
+    )
+    .unwrap();
+    cfg.train.checkpoint_dir = dir.to_string_lossy().to_string();
+    cfg
+}
+
+struct Mode {
+    name: &'static str,
+    mutate: fn(&mut Config),
+}
+
+const MODES: &[Mode] = &[
+    Mode {
+        name: "classic_chol_sharded",
+        mutate: |cfg| {
+            cfg.coordinator.workers = 2;
+        },
+    },
+    Mode {
+        name: "windowed_chol",
+        mutate: |cfg| {
+            cfg.solver.window = 48;
+            cfg.solver.refresh_every = 3;
+        },
+    },
+    Mode {
+        name: "windowed_rvb",
+        mutate: |cfg| {
+            cfg.solver.kind = SolverKind::Rvb;
+            cfg.solver.window = 48;
+            cfg.solver.refresh_every = 3;
+        },
+    },
+    Mode {
+        name: "mixed_classic",
+        mutate: |cfg| {
+            cfg.solver.precision = Precision::Mixed;
+        },
+    },
+    Mode {
+        name: "mixed_windowed",
+        mutate: |cfg| {
+            cfg.solver.precision = Precision::Mixed;
+            cfg.solver.window = 48;
+            cfg.solver.refresh_every = 3;
+        },
+    },
+];
+
+fn mode_cfg(mode: &Mode, dir: &std::path::Path) -> Config {
+    let mut cfg = base_cfg(dir);
+    (mode.mutate)(&mut cfg);
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run_to_completion(cfg: &Config) -> Vec<f64> {
+    let mut t = Trainer::new(cfg, OptimizerChoice::Ngd).unwrap();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    let report = t.run(&mut log).unwrap();
+    assert_eq!(report.steps, STEPS);
+    t.params.clone()
+}
+
+fn assert_bits_equal(reference: &[f64], got: &[f64], what: &str) {
+    assert_eq!(reference.len(), got.len(), "{what}: param count");
+    for (j, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: param {j} diverged ({a:e} vs {b:e})"
+        );
+    }
+}
+
+/// Kill at every step boundary 1..STEPS and resume a fresh trainer each
+/// time; the completed trajectory must match the unfailed reference bit
+/// for bit. A kill before the first checkpoint (boundary 1) resumes
+/// from nothing and restarts fresh — the degenerate case is covered too.
+fn kill_everywhere(mode: &Mode) {
+    let dir = scratch(mode.name);
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = mode_cfg(mode, &dir);
+    let reference = run_to_completion(&cfg);
+    std::fs::remove_dir_all(&dir).ok();
+
+    for kill_at in 1..STEPS {
+        std::fs::remove_dir_all(&dir).ok();
+        let mut killed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        killed.run_partial(&mut log, kill_at).unwrap();
+        drop(killed); // kill -9 at the boundary
+
+        let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+        let at = resumed.resume_latest().unwrap();
+        let expected = (kill_at / CHECKPOINT_EVERY * CHECKPOINT_EVERY > 0)
+            .then_some(kill_at / CHECKPOINT_EVERY * CHECKPOINT_EVERY);
+        assert_eq!(
+            at, expected,
+            "{}: kill@{kill_at} must resume from the latest durable boundary",
+            mode.name
+        );
+        let mut log2 = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        let report = resumed.run(&mut log2).unwrap();
+        assert_eq!(report.steps, STEPS);
+        assert_bits_equal(
+            &reference,
+            &resumed.params,
+            &format!("{} kill@{kill_at}", mode.name),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kill_anywhere_classic_chol_sharded() {
+    kill_everywhere(&MODES[0]);
+}
+
+#[test]
+fn kill_anywhere_windowed_chol() {
+    kill_everywhere(&MODES[1]);
+}
+
+#[test]
+fn kill_anywhere_windowed_rvb() {
+    kill_everywhere(&MODES[2]);
+}
+
+#[test]
+fn kill_anywhere_mixed_classic() {
+    kill_everywhere(&MODES[3]);
+}
+
+#[test]
+fn kill_anywhere_mixed_windowed() {
+    kill_everywhere(&MODES[4]);
+}
+
+/// Consecutive `run_partial` segments on one live trainer must also
+/// compose into the reference trajectory (the armed continuation path,
+/// no disk round-trip at all).
+#[test]
+fn partial_runs_compose_bit_identically() {
+    let dir = scratch("compose");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = mode_cfg(&MODES[1], &dir); // windowed chol: hardest state
+    let reference = run_to_completion(&cfg);
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut t = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    for seg in [1usize, 2, 3] {
+        let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+        t.run_partial(&mut log, seg).unwrap();
+    }
+    assert_bits_equal(&reference, &t.params, "1+2+3 step segments");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A truncated checkpoint (torn write survived by a weaker filesystem)
+/// is quarantined, and recovery falls back to the previous boundary —
+/// still bit-identical.
+#[test]
+fn truncated_checkpoint_is_quarantined_and_recovery_falls_back() {
+    let dir = scratch("truncate");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = mode_cfg(&MODES[0], &dir);
+    let reference = run_to_completion(&cfg);
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut killed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    killed.run_partial(&mut log, 5).unwrap(); // checkpoints at 2 and 4
+    drop(killed);
+    let p4 = dir.join("step_4.ckpt");
+    let bytes = std::fs::read(&p4).unwrap();
+    std::fs::write(&p4, &bytes[..bytes.len() / 3]).unwrap();
+
+    let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    assert_eq!(resumed.resume_latest().unwrap(), Some(2));
+    assert_eq!(resumed.stats().quarantined, 1);
+    assert!(dir.join("step_4.ckpt.corrupt").exists());
+    assert!(!p4.exists());
+    let mut log2 = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    resumed.run(&mut log2).unwrap();
+    assert_bits_equal(&reference, &resumed.params, "truncated fallback");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A checkpoint from a future container format (healthy checksum, newer
+/// version) is skipped *in place* — never quarantined, never loaded —
+/// and recovery falls back to the newest same-generation checkpoint.
+#[test]
+fn version_skewed_checkpoint_is_skipped_in_place() {
+    let dir = scratch("skew");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = mode_cfg(&MODES[0], &dir);
+    let mut t = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+    t.run_partial(&mut log, 5).unwrap();
+    drop(t);
+    let p4 = dir.join("step_4.ckpt");
+    let ck = Checkpoint::load(&p4).unwrap();
+    std::fs::write(&p4, ck.to_bytes_with_version(Checkpoint::format_version() + 1)).unwrap();
+
+    let mut resumed = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+    assert_eq!(resumed.resume_latest().unwrap(), Some(2));
+    assert_eq!(resumed.stats().version_skipped, 1);
+    assert_eq!(resumed.stats().quarantined, 0);
+    assert!(p4.exists(), "skewed file must stay in place for the newer binary");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -100,6 +100,7 @@ fn sr_energy_approaches_exact_ground_state() {
 #[test]
 fn checkpoint_resume_continues_descent() {
     let dir = std::env::temp_dir().join("dngd_e2e_resume");
+    std::fs::remove_dir_all(&dir).ok();
     let dir_s = dir.to_string_lossy().to_string();
     let ckpt_override = format!("train.checkpoint_dir=\"{dir_s}\"");
     let cfg = small_train_cfg(&[&ckpt_override, "train.checkpoint_every=25", "train.steps=25"]);
@@ -107,12 +108,18 @@ fn checkpoint_resume_continues_descent() {
     let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
     let report1 = first.run(&mut log).unwrap();
 
-    // Fresh trainer, resume from the checkpoint: the first-step loss must
-    // be near the previous run's final loss, not the init loss.
-    let mut second = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
-    second.load_checkpoint(&dir.join("step_25.ckpt")).unwrap();
+    // Fresh trainer, resume from the checkpoint and continue to step 50:
+    // the first-step loss must be near the previous run's final loss,
+    // not the init loss (resume continues the step cursor, so the
+    // second run needs a larger train.steps to execute anything).
+    let cfg2 = small_train_cfg(&[&ckpt_override, "train.checkpoint_every=25", "train.steps=50"]);
+    let mut second = Trainer::new(&cfg2, OptimizerChoice::Ngd).unwrap();
+    let step = second.load_checkpoint(&dir.join("step_25.ckpt")).unwrap();
+    assert_eq!(step, 25);
     let mut log2 = MetricsLog::new(TRAIN_LOG_COLUMNS);
     let report2 = second.run(&mut log2).unwrap();
+    assert_eq!(report2.steps, 50);
+    assert_eq!(log2.len(), 25, "resumed run executes only the remaining steps");
     assert!(
         report2.initial_loss < (report1.initial_loss + report1.final_loss) / 2.0,
         "resume did not pick up trained params: {} vs init {}",
