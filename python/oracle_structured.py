@@ -1,0 +1,371 @@
+"""Numerical oracle for the PR-10 structured-Fisher solver family (no
+Rust toolchain needed): mirrors, algorithm-for-algorithm,
+
+* the block-diagonal session (`rust/src/solver/blockdiag.rs`) — per-block
+  damped solves on column shards, single-block ≡ exact;
+* the KP-SVD kind (`rust/src/solver/kpsvd.rs`) — Van Loan–Pitsianis
+  rearrangement, 40-step deterministic power iteration from vec(I_q),
+  symmetrize + joint sign fix, damped Kronecker eigen-solve, and the
+  p == 1 prime fallback (exact block eigh);
+* the hybrid PCG (`rust/src/solver/hybrid.rs`) and plain CG
+  (`rust/src/solver/cg.rs`) loops, including the PR-5 true-residual
+  verification / residual-replacement restart, so the reported
+  iteration counts have the same semantics as `CgStats.iterations`.
+
+Run:  python3 python/oracle_structured.py
+
+The scenarios mirror `rust/tests/structured.rs`, the in-module unit
+tests (seeds 1001–1304) and `bench_tables::structured_bench` shapes
+(quick and full). The RNG is numpy's, not the crate's xorshift, so the
+oracle answers the *statistical* questions — is the KP-SVD exact on
+Kronecker Grams, does PCG strictly beat CG on every pinned scenario
+with margin, does everything converge under the 10 000-iteration cap —
+not the bitwise one (bit-identity is chol-vs-chol on identical inputs,
+which numpy cannot refute or confirm).
+"""
+
+import numpy as np
+
+POWER_ITERS = 40  # kpsvd.rs::POWER_ITERS
+
+
+# ---------------------------------------------------------------- exact
+
+
+def chol_solve(s, v, lam):
+    """Algorithm-1 (Woodbury) damped solve, the chol reference."""
+    n = s.shape[0]
+    a = s @ s.T + lam * np.eye(n)
+    z = np.linalg.solve(a, s @ v)
+    return (v - s.T @ z) / lam
+
+
+def uniform_ranges(m, k):
+    """BlockPartition::uniform — first m % k blocks get the extra col."""
+    assert 0 < k <= m
+    base, rem = divmod(m, k)
+    ranges, start = [], 0
+    for i in range(k):
+        ln = base + (1 if i < rem else 0)
+        ranges.append((start, start + ln))
+        start += ln
+    return ranges
+
+
+def blockdiag_solve(s, v, lam, ranges):
+    x = np.zeros_like(v)
+    for c0, c1 in ranges:
+        x[c0:c1] = chol_solve(s[:, c0:c1], v[c0:c1], lam)
+    return x
+
+
+# ---------------------------------------------------------------- kpsvd
+
+
+def split_dim(mb):
+    best, d = 1, 1
+    while d * d <= mb:
+        if mb % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def rearrange(g, p, q):
+    r = np.zeros((p * p, q * q))
+    for i in range(p):
+        for j in range(p):
+            r[i * p + j] = g[i * q : (i + 1) * q, j * q : (j + 1) * q].reshape(-1)
+    return r
+
+
+def kron_block(g):
+    """Mirror of KpSvdFactor::kron_block → (alpha, beta, ua, ub, p, q)."""
+    mb = g.shape[0]
+    p = split_dim(mb)
+    q = mb // p
+    if p == 1:
+        beta, ub = np.linalg.eigh(g)
+        return np.array([1.0]), np.maximum(beta, 0.0), np.eye(1), ub, p, q
+    r = rearrange(g, p, q)
+    v = np.eye(q).reshape(-1)
+    v /= np.linalg.norm(v)
+    for _ in range(POWER_ITERS):
+        w = r.T @ (r @ v)
+        wn = np.linalg.norm(w)
+        if wn <= 0.0:
+            break
+        v = w / wn
+    u = r @ v  # σ₁·u₁ — singular value absorbed into A
+    a = u.reshape(p, p)
+    b = v.reshape(q, q)
+    a = 0.5 * (a + a.T)
+    b = 0.5 * (b + b.T)
+    if np.trace(b) < 0.0:
+        a, b = -a, -b
+    alpha, ua = np.linalg.eigh(a)
+    beta, ub = np.linalg.eigh(b)
+    return np.maximum(alpha, 0.0), np.maximum(beta, 0.0), ua, ub, p, q
+
+
+def kpsvd_solve(s, v, lam, ranges):
+    x = np.zeros_like(v)
+    for c0, c1 in ranges:
+        sb = s[:, c0:c1]
+        alpha, beta, ua, ub, p, q = kron_block(sb.T @ sb)
+        vmat = v[c0:c1].reshape(p, q)
+        w = ua.T @ vmat @ ub
+        w = w / (alpha[:, None] * beta[None, :] + lam)
+        x[c0:c1] = (ua @ w @ ub.T).reshape(-1)
+    return x
+
+
+# ----------------------------------------------------------- cg and pcg
+
+
+def cg_iters(s, v, lam, tol=1e-10, max_iters=10_000):
+    """Plain CG, mirroring CgFactor::solve_into (incl. true-residual
+    verify + residual-replacement restart). Returns (x, iters, status).
+    """
+    m = s.shape[1]
+    vnorm = max(np.linalg.norm(v), np.finfo(float).tiny)
+    fisher = lambda p: s.T @ (s @ p) + lam * p
+    x = np.zeros(m)
+    r = v.copy()
+    p = v.copy()
+    rr = r @ r
+    for it in range(max_iters):
+        if np.sqrt(rr) <= tol * vnorm:
+            r_true = v - fisher(x)
+            if np.linalg.norm(r_true) <= tol * vnorm:
+                return x, it, "converged"
+            r = r_true
+            rr = r @ r
+            p = r.copy()
+        ap = fisher(p)
+        al = rr / (p @ ap)
+        x += al * p
+        r -= al * ap
+        rr_new = r @ r
+        beta = rr_new / rr
+        rr = rr_new
+        p = r + beta * p
+    final = np.linalg.norm(v - fisher(x)) / vnorm
+    return x, max_iters, "converged-at-cap" if final <= tol else "DID-NOT-CONVERGE"
+
+
+def pcg_iters(s, v, lam, ranges, tol=1e-10, max_iters=10_000):
+    """Hybrid PCG, mirroring HybridCgFactor::solve_into: block-diagonal
+    preconditioner damped at the same λ, convergence judged on the exact
+    system's residual norm, true-residual verify + restart.
+    """
+    m = s.shape[1]
+    vnorm = max(np.linalg.norm(v), np.finfo(float).tiny)
+    fisher = lambda p: s.T @ (s @ p) + lam * p
+    pre = lambda r: blockdiag_solve(s, r, lam, ranges)
+    x = np.zeros(m)
+    r = v.copy()
+    z = pre(r)
+    p = z.copy()
+    rz = r @ z
+    for it in range(max_iters):
+        if np.linalg.norm(r) <= tol * vnorm:
+            r_true = v - fisher(x)
+            if np.linalg.norm(r_true) <= tol * vnorm:
+                return x, it, "converged"
+            r = r_true
+            z = pre(r)
+            p = z.copy()
+            rz = r @ z
+        ap = fisher(p)
+        al = rz / (p @ ap)
+        x += al * p
+        r -= al * ap
+        z = pre(r)
+        rz_new = r @ z
+        beta = rz_new / rz
+        rz = rz_new
+        p = z + beta * p
+    final = np.linalg.norm(v - fisher(x)) / vnorm
+    return x, max_iters, "converged-at-cap" if final <= tol else "DID-NOT-CONVERGE"
+
+
+# ------------------------------------------------------------ scenarios
+
+
+def blocked_scores(n_per, blocks, width, rng, spread_cap=None, coupling=0.0):
+    """hybrid.rs helper (scale 10^b) or, with spread_cap, the
+    tests/structured.rs + bench variant (scale 10^(cap·b/(k−1)), faint
+    dense coupling)."""
+    n, m = n_per * blocks, width * blocks
+    s = np.zeros((n, m))
+    denom = max(blocks, 2) - 1
+    for b in range(blocks):
+        scale = 10.0 ** (spread_cap * b / denom) if spread_cap else 10.0**b
+        s[b * n_per : (b + 1) * n_per, b * width : (b + 1) * width] = (
+            scale * rng.standard_normal((n_per, width))
+        )
+    if coupling:
+        s += coupling * rng.standard_normal((n, m))
+    return s
+
+
+def kron_scores(a, b):
+    """Column convention (i, k) → i·q + k, matching the session."""
+    na, p = a.shape
+    nb, q = b.shape
+    out = np.zeros((na * nb, p * q))
+    for i in range(p):
+        for k in range(q):
+            out[:, i * q + k] = np.outer(a[:, i], b[:, k]).reshape(-1)
+    return out
+
+
+def check(label, ok, detail):
+    print(f"  [{'ok' if ok else 'FAIL'}] {label}: {detail}")
+    return ok
+
+
+def main():
+    all_ok = True
+    rngs = lambda seed: np.random.default_rng(seed)
+
+    print("== block-diagonal sessions (blockdiag.rs / structured.rs) ==")
+    for seed in range(8):
+        rng = rngs(seed)
+        s = rng.standard_normal((8, 24))
+        v = rng.standard_normal(24)
+        x1 = blockdiag_solve(s, v, 0.3, uniform_ranges(24, 1))
+        xc = chol_solve(s, v, 0.3)
+        gap1 = np.max(np.abs(x1 - xc))
+        xk = blockdiag_solve(s, v, 0.3, uniform_ranges(24, 3))
+        per = np.concatenate(
+            [chol_solve(s[:, c0:c1], v[c0:c1], 0.3) for c0, c1 in uniform_ranges(24, 3)]
+        )
+        gapk = np.max(np.abs(xk - per))
+        all_ok &= check(
+            f"seed {seed}: 1-block ≡ exact, k-block ≡ independent",
+            gap1 < 1e-12 and gapk == 0.0,
+            f"gap1={gap1:.1e} gapk={gapk:.1e}",
+        )
+
+    print("== KP-SVD (kpsvd.rs) ==")
+    # Exact on Kronecker-structured scores: S = A⊗B (seeds 1101, 1303).
+    for seed in range(8):
+        rng = rngs(seed)
+        s = kron_scores(rng.standard_normal((3, 4)), rng.standard_normal((4, 5)))
+        v = rng.standard_normal(s.shape[1])
+        worst = 0.0
+        for lam in (1.0, 0.1, 0.01):
+            x = kpsvd_solve(s, v, lam, [(0, s.shape[1])])
+            xc = chol_solve(s, v, lam)
+            worst = max(worst, np.max(np.abs(x - xc)))
+        all_ok &= check(
+            f"seed {seed}: exact on S = A⊗B (m=20, λ∈{{1,.1,.01}})",
+            worst < 1e-8,
+            f"max|Δx|={worst:.1e}",
+        )
+    # Prime block width → p == 1 exact-eigh fallback (seed 1102).
+    for seed in range(4):
+        rng = rngs(100 + seed)
+        s = rng.standard_normal((6, 13))
+        v = rng.standard_normal(13)
+        x = kpsvd_solve(s, v, 0.05, [(0, 13)])
+        xc = chol_solve(s, v, 0.05)
+        gap = np.max(np.abs(x - xc))
+        all_ok &= check(f"seed {seed}: prime width m=13 exact", gap < 1e-9, f"max|Δx|={gap:.1e}")
+    # Approximation gap on unstructured random S — the EXPERIMENTS.md
+    # regime table (relative solution error vs exact, per block count).
+    rng = rngs(7)
+    s = rng.standard_normal((48, 768))
+    v = rng.standard_normal(768)
+    lam = 1e-3
+    xc = chol_solve(s, v, lam)
+    xn = np.linalg.norm(xc)
+    print("  kpsvd relative solution error on dense random S (n=48, m=768, λ=1e-3):")
+    for k in (1, 4, 16, 64):
+        x = kpsvd_solve(s, v, lam, uniform_ranges(768, k))
+        print(f"    blocks={k:3d}: ‖x−x*‖/‖x*‖ = {np.linalg.norm(x - xc) / xn:.3f}")
+
+    print("== hybrid PCG vs plain CG (hybrid.rs / cg.rs semantics) ==")
+    # All iteration comparisons run at the shared tol 1e-7 the Rust tests
+    # and bench pin: f64's attainable true residual is ~ε·κ(SᵀS+λI)·‖v‖,
+    # so with the ~10³ Gram spread (κ ≈ 1e7 at λ=1e-3) a 1e-10 target is
+    # unreachable — both solvers would stall at the cap (this oracle is
+    # what caught that; the scenarios were retuned accordingly).
+    tol = 1e-7
+    scenarios = [
+        # (label, S builder, blocks, lambda)
+        ("hybrid.rs unit: 16×24, 4 blocks, 10^(b/2) spread",
+         lambda rng: blocked_scores(4, 4, 6, rng, spread_cap=1.5), 4, 1e-3),
+        ("structured.rs: 16×32, 4 blocks, 10^1.5 spread",
+         lambda rng: blocked_scores(4, 4, 8, rng, spread_cap=1.5), 4, 1e-3),
+    ]
+    for k in (4, 16, 64):
+        for tag, m in (("bench quick", 768), ("bench full", 2048)):
+            width = max(m // k, 2)
+            scenarios.append((
+                f"{tag}: blocks={k} (6 rows/block, 10^1.5 spread, 1e-3 coupling)",
+                lambda rng, k=k, width=width: blocked_scores(
+                    6, k, width, rng, spread_cap=1.5, coupling=1e-3
+                ),
+                k,
+                1e-3,
+            ))
+    for label, make, k, lam in scenarios:
+        worst_margin, statuses = np.inf, set()
+        for seed in range(4):
+            rng = rngs(1000 + seed)
+            s = make(rng)
+            v = rng.standard_normal(s.shape[1])
+            ranges = uniform_ranges(s.shape[1], k)
+            x_cg, it_cg, st_cg = cg_iters(s, v, lam, tol=tol)
+            x_pcg, it_pcg, st_pcg = pcg_iters(s, v, lam, ranges, tol=tol)
+            statuses |= {st_cg, st_pcg}
+            worst_margin = min(worst_margin, it_cg - it_pcg)
+            xc = chol_solve(s, v, lam)
+            scale = max(np.max(np.abs(xc)), 1.0)
+            assert np.max(np.abs(x_pcg - xc)) < 1e-5 * scale, "pcg answer drifted"
+        all_ok &= check(
+            label,
+            worst_margin > 0 and "DID-NOT-CONVERGE" not in statuses,
+            f"min(cg−pcg)={worst_margin} statuses={sorted(statuses)}",
+        )
+
+    # Dense random S at the bench timing grid's λ = 0.1 and the hybrid's
+    # default 1e-10 inner tolerance: must converge under the cap even
+    # though the preconditioner is crude. (At λ = 1e-3 the 1e-10 target
+    # sits below the attainable floor on the full shape — that is why
+    # the timing grid runs at λ = 0.1.)
+    for n, m in ((48, 768), (96, 2048)):
+        rng = rngs(42)
+        s = rng.standard_normal((n, m))
+        v = rng.standard_normal(m)
+        _, it, st = pcg_iters(s, v, 0.1, uniform_ranges(m, 64), tol=1e-10)
+        all_ok &= check(
+            f"dense random n={n} m={m}, λ=0.1, 64-block preconditioner, tol 1e-10",
+            st == "converged",
+            f"pcg iters={it} status={st}",
+        )
+
+    # The optimizer test's registry-default hybrid: randn (8, 24) at
+    # λ = 1e-4, tol 1e-10, blocks unset (→ one exact chol block). The
+    # small ‖S‖ keeps the attainable floor under 1e-10 here.
+    for seed in range(4):
+        rng = rngs(500 + seed)
+        s = rng.standard_normal((8, 24))
+        v = rng.standard_normal(24)
+        _, it_c, st_c = cg_iters(s, v, 1e-4, tol=1e-10)
+        _, it_p, st_p = pcg_iters(s, v, 1e-4, [(0, 24)], tol=1e-10)
+        all_ok &= check(
+            f"seed {seed}: optimizer shape 8×24, λ=1e-4, registry-default tol 1e-10",
+            st_c == "converged" and st_p == "converged",
+            f"cg={it_c} ({st_c}) pcg={it_p} ({st_p})",
+        )
+
+    print("ALL SCENARIOS PASS" if all_ok else "SOME SCENARIOS FAILED")
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

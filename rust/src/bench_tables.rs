@@ -47,6 +47,14 @@
 //!   as `BENCH_PR7.json` (`dngd bench --serving`). Full mode asserts
 //!   the PR-7 acceptance bar: coalesced ≥ 2× serial req/s at 16
 //!   tenants with no worse p99.
+//! * [`structured_bench`] — PR 10's structured-Fisher table: factor +
+//!   solve wall times for exact chol vs the structured family
+//!   (blockdiag, kpsvd, hybrid) at block counts {1, 4, 16, 64} on one
+//!   fixed shape, plus hybrid-PCG vs plain-CG iteration counts on a
+//!   block-scaled synthetic Fisher, emitted as `BENCH_PR10.json`
+//!   (`dngd bench --structured`). Strict mode asserts the PR-10
+//!   acceptance bar: single-block blockdiag bit-identical to chol, and
+//!   strictly fewer PCG than CG iterations on every multi-block row.
 //!
 //! `paper=false` runs a proportionally scaled-down grid (CPU testbed);
 //! `paper=true` runs the paper's exact shapes (slow on CPU — hours).
@@ -55,7 +63,8 @@ use crate::data::rng::Rng;
 use crate::linalg::Mat;
 use crate::metrics::{bench, fit_power_law};
 use crate::solver::{
-    flops, make_solver, CgSolver, CholSolver, DampedSolver, SolveError, SolverKind,
+    flops, make_solver, BlockDiagSolver, BlockKind, CgSolver, CholSolver, DampedSolver,
+    HybridCgSolver, KpSvdSolver, SolveError, SolverKind,
 };
 use std::path::Path;
 
@@ -1870,6 +1879,278 @@ pub fn recovery_bench_report(
              reserved for deadline pressure)"
         );
         println!("acceptance: every kill recovered via distributed replay/refactor ✓");
+    }
+    Ok(())
+}
+
+/// One timing row of the PR-10 structured-Fisher benchmark: a solver
+/// kind at one block count on the fixed (n, m) shape.
+#[derive(Debug, Clone)]
+pub struct StructuredBenchRow {
+    pub solver: &'static str,
+    pub blocks: usize,
+    /// Staging cost: `begin` + first `redamp` (Gram, factor, caches).
+    pub factor_ms: f64,
+    /// One `solve_into` on the staged session.
+    pub solve_ms: f64,
+    /// Relative residual `‖(SᵀS+λI)x − v‖ / ‖v‖` of that solve — kept in
+    /// the table so the approximate kinds (kpsvd at blocks where the
+    /// Gram has no Kronecker structure) can't look fast for free.
+    pub rel_residual: f64,
+}
+
+/// One iteration-count row: hybrid PCG vs plain CG on the block-scaled
+/// synthetic Fisher at one block count.
+#[derive(Debug, Clone)]
+pub struct StructuredIterRow {
+    pub blocks: usize,
+    pub cg_iters: usize,
+    pub pcg_iters: usize,
+}
+
+/// The full PR-10 report: timing grid + iteration grid + the
+/// single-block identity gap (must be exactly 0.0 — bit-identity).
+#[derive(Debug, Clone)]
+pub struct StructuredBenchReport {
+    pub n: usize,
+    pub m: usize,
+    pub lambda: f64,
+    pub rows: Vec<StructuredBenchRow>,
+    pub iters: Vec<StructuredIterRow>,
+    /// `max|x_blockdiag(1 block, chol inner) − x_chol|` on the shared
+    /// dense problem. Bit-identity ⇒ exactly 0.0.
+    pub single_block_max_diff: f64,
+}
+
+/// Block-scaled synthetic Fisher for the iteration comparison: each
+/// block's rows live on that block's columns only, with per-block score
+/// scales spread over ~10^1.5 (so the Gram's live spectrum spans ~10³),
+/// plus a faint dense coupling term so the block-diagonal preconditioner
+/// is merely *good*, not exact. Plain CG pays for the spread; PCG sees
+/// the near-identity preconditioned system. The spread is capped so the
+/// shared tolerance stays above f64's attainable-residual floor
+/// (~ε·κ·‖v‖) — wilder spreads make *both* solvers stall at the cap.
+fn block_scaled_scores(n_per: usize, blocks: usize, width: usize, rng: &mut Rng) -> Mat {
+    let n = n_per * blocks;
+    let m = width * blocks;
+    let mut s = Mat::zeros(n, m);
+    let denom = (blocks.max(2) - 1) as f64;
+    for b in 0..blocks {
+        let scale = 10f64.powf(1.5 * b as f64 / denom);
+        for i in 0..n_per {
+            let r = b * n_per + i;
+            for j in 0..width {
+                s[(r, b * width + j)] = scale * rng.normal();
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..m {
+            s[(i, j)] += 1e-3 * rng.normal();
+        }
+    }
+    s
+}
+
+/// The PR-10 structured-Fisher benchmark. Timing grid: chol (the exact
+/// baseline, block-count-independent) and blockdiag / kpsvd / hybrid at
+/// block counts {1, 4, 16, 64} on one dense (n, m) problem. Iteration
+/// grid: hybrid PCG vs plain CG at the same tolerance on the
+/// block-scaled Fisher from [`block_scaled_scores`]. Both grids are
+/// fully deterministic (fixed seeds).
+pub fn structured_bench(quick: bool) -> StructuredBenchReport {
+    let (n, m, samples, budget) =
+        if quick { (48usize, 768usize, 3usize, 0.1f64) } else { (96, 2048, 5, 0.5) };
+    // Timing grid at λ = 0.1: large enough that the hybrid's default
+    // 1e-10 inner tolerance sits above the f64 attainable-residual
+    // floor on this dense shape (at λ = 1e-3 it would not, and the
+    // PCG would stall at the iteration cap instead of timing a solve).
+    let lambda = 0.1;
+    let block_counts = [1usize, 4, 16, 64];
+    let mut rng = Rng::seed_from(100);
+    let s = Mat::randn(n, m, &mut rng);
+    let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let vnorm = crate::linalg::mat::norm2(&v).max(1e-30);
+    let cfg = crate::linalg::KernelConfig::with_threads(1);
+
+    // Single-block identity gap: chol vs blockdiag(1 block, chol inner)
+    // under the same kernel configuration must agree to the bit.
+    let x_chol = CholSolver::with_config(cfg).solve(&s, &v, lambda).expect("chol solve");
+    let x_bd = BlockDiagSolver::with_config(cfg)
+        .with_blocks(1, BlockKind::Chol)
+        .solve(&s, &v, lambda)
+        .expect("blockdiag solve");
+    let single_block_max_diff = x_chol
+        .iter()
+        .zip(&x_bd)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+
+    let mut rows = Vec::new();
+    let mut push_row = |name: &'static str, blocks: usize, solver: &dyn DampedSolver| {
+        let factor = bench(&format!("{name}/k={blocks}/factor"), samples, budget, || {
+            let mut fact = solver.begin(&s);
+            fact.redamp(lambda).expect("factor");
+        });
+        let mut fact = solver.begin(&s);
+        fact.redamp(lambda).expect("factor");
+        let mut x = vec![0.0; m];
+        let solve = bench(&format!("{name}/k={blocks}/solve"), samples, budget, || {
+            fact.solve_into(&v, &mut x).expect("solve");
+        });
+        let rel_residual = crate::solver::residual_norm(&s, &x, &v, lambda) / vnorm;
+        rows.push(StructuredBenchRow {
+            solver: name,
+            blocks,
+            factor_ms: factor.median_ms(),
+            solve_ms: solve.median_ms(),
+            rel_residual,
+        });
+    };
+    push_row("chol", 1, &CholSolver::with_config(cfg));
+    for &k in &block_counts {
+        push_row("blockdiag", k, &BlockDiagSolver::with_config(cfg).with_blocks(k, BlockKind::Auto));
+        push_row("kpsvd", k, &KpSvdSolver::with_config(cfg).with_blocks(k));
+        push_row(
+            "hybrid",
+            k,
+            &HybridCgSolver::new(1e-10, 10_000)
+                .with_config(cfg)
+                .with_blocks(k, BlockKind::Auto),
+        );
+    }
+
+    // Iteration grid: the structured preconditioner's whole point is
+    // clustering the spectrum, so the acceptance metric is iteration
+    // counts at a shared tolerance, not wall time. Shared tol 1e-7 and
+    // λ = 1e-3: above the attainable-residual floor for the capped
+    // ~10³ spectrum spread, tight enough that plain CG must resolve it.
+    let iter_lambda = 1e-3;
+    let mut iters = Vec::new();
+    for &k in &block_counts[1..] {
+        let width = (m / k).max(2);
+        let mut rng = Rng::seed_from(200 + k as u64);
+        // 6 rows per block: enough Gram rank that plain CG cannot win on
+        // a trivially short Krylov run (at 2 rows/block, rank ≤ 2k lets
+        // CG finish in ~2k+1 steps and the preconditioner has nothing
+        // left to save at small k).
+        let sb = block_scaled_scores(6, k, width, &mut rng);
+        let vb: Vec<f64> = (0..sb.cols()).map(|_| rng.normal()).collect();
+        let cg = CgSolver::new(1e-7, 10_000);
+        cg.solve(&sb, &vb, iter_lambda).expect("cg solve");
+        let cg_iters = cg.stats().iterations;
+        let hybrid = HybridCgSolver::new(1e-7, 10_000)
+            .with_config(cfg)
+            .with_blocks(k, BlockKind::Auto);
+        hybrid.solve(&sb, &vb, iter_lambda).expect("hybrid solve");
+        let pcg_iters = hybrid.stats().iterations;
+        iters.push(StructuredIterRow { blocks: k, cg_iters, pcg_iters });
+    }
+
+    StructuredBenchReport { n, m, lambda, rows, iters, single_block_max_diff }
+}
+
+/// Render the structured-bench report as the `BENCH_PR10.json` payload
+/// (hand-rolled JSON — the build is offline, no serde).
+pub fn structured_bench_json(report: &StructuredBenchReport, quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"pr\": 10,\n");
+    out.push_str("  \"bench\": \"structured\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!(
+        "  \"shape\": {{\"n\": {}, \"m\": {}, \"lambda\": {}}},\n",
+        report.n, report.m, report.lambda
+    ));
+    out.push_str(&format!(
+        "  \"single_block_max_diff\": {:e},\n",
+        report.single_block_max_diff
+    ));
+    out.push_str("  \"unit\": {\"factor_ms\": \"milliseconds\", \"solve_ms\": \"milliseconds\"},\n");
+    out.push_str("  \"rows\": [\n");
+    let body: Vec<String> = report
+        .rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"solver\": \"{}\", \"blocks\": {}, \"factor_ms\": {:.3}, \
+                 \"solve_ms\": {:.4}, \"rel_residual\": {:.3e}}}",
+                r.solver, r.blocks, r.factor_ms, r.solve_ms, r.rel_residual
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ],\n");
+    out.push_str("  \"iterations\": [\n");
+    let body: Vec<String> = report
+        .iters
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"blocks\": {}, \"cg_iters\": {}, \"pcg_iters\": {}}}",
+                r.blocks, r.cg_iters, r.pcg_iters
+            )
+        })
+        .collect();
+    out.push_str(&body.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Run the structured benchmark, print both tables, optionally write
+/// `BENCH_PR10.json`. `strict` enforces the PR-10 acceptance bar —
+/// single-block blockdiag bit-identical to chol (gap exactly 0.0) and
+/// strictly fewer PCG than CG iterations on every multi-block row —
+/// exercised by `rust/tests/structured.rs` in quick mode.
+pub fn structured_bench_report(
+    quick: bool,
+    json_path: Option<&Path>,
+    strict: bool,
+) -> std::io::Result<()> {
+    let report = structured_bench(quick);
+    println!(
+        "structured family at n={} m={} λ={} (chol = exact baseline):",
+        report.n, report.m, report.lambda
+    );
+    println!(
+        "{:>9} | {:>6} | {:>11} | {:>10} | rel residual",
+        "solver", "blocks", "factor (ms)", "solve (ms)"
+    );
+    for r in &report.rows {
+        println!(
+            "{:>9} | {:>6} | {:>11.3} | {:>10.4} | {:.3e}",
+            r.solver, r.blocks, r.factor_ms, r.solve_ms, r.rel_residual
+        );
+    }
+    println!(
+        "\nsingle-block blockdiag vs chol max |Δx| = {:e} (bit-identity ⇒ 0.0)",
+        report.single_block_max_diff
+    );
+    println!("\nhybrid PCG vs plain CG on the block-scaled Fisher (shared tol 1e-7):");
+    println!("{:>6} | {:>8} | {:>9}", "blocks", "cg iters", "pcg iters");
+    for r in &report.iters {
+        println!("{:>6} | {:>8} | {:>9}", r.blocks, r.cg_iters, r.pcg_iters);
+    }
+    if let Some(path) = json_path {
+        std::fs::write(path, structured_bench_json(&report, quick))?;
+        println!("structured bench table written to {}", path.display());
+    }
+    if strict {
+        assert_eq!(
+            report.single_block_max_diff, 0.0,
+            "PR-10 acceptance: single-block blockdiag must be bit-identical to chol"
+        );
+        for r in &report.iters {
+            assert!(
+                r.pcg_iters < r.cg_iters,
+                "PR-10 acceptance: hybrid PCG must beat plain CG at {} blocks \
+                 (pcg {} vs cg {})",
+                r.blocks,
+                r.pcg_iters,
+                r.cg_iters
+            );
+        }
+        println!("acceptance: bit-identity at 1 block, PCG < CG on every multi-block row ✓");
     }
     Ok(())
 }

@@ -2,7 +2,7 @@
 
 use super::toml::{parse_toml, parse_value, TomlDoc};
 use crate::linalg::KernelIsa;
-use crate::solver::{Precision, SolverKind, SolverOptions};
+use crate::solver::{BlockKind, Precision, SolverKind, SolverOptions};
 
 /// Solver selection + damping + per-solver options.
 #[derive(Debug, Clone, PartialEq)]
@@ -48,6 +48,17 @@ pub struct SolverConfig {
     pub precision: Precision,
     /// Mixed-mode relative true-residual target per right-hand side.
     pub tol: f64,
+    /// Uniform block count for the structured kinds (`[solver] blocks`,
+    /// PR 10). 0 = one block. Only meaningful for
+    /// `blockdiag`/`kpsvd`/`hybrid`; cross-checked in
+    /// [`Config::validate`].
+    pub blocks: usize,
+    /// Inner per-block session kind for `blockdiag`/`hybrid`
+    /// (`"auto"|"chol"|"rvb"`; auto = cost-model pick per block).
+    pub block_kind: BlockKind,
+    /// Hybrid PCG relative true-residual tolerance
+    /// (`solver.hybrid_tol`).
+    pub hybrid_tol: f64,
 }
 
 impl Default for SolverConfig {
@@ -71,6 +82,9 @@ impl Default for SolverConfig {
             refresh_every: opts.refresh_every,
             precision: opts.precision,
             tol: opts.tol,
+            blocks: opts.blocks,
+            block_kind: opts.block_kind,
+            hybrid_tol: opts.hybrid_tol,
         }
     }
 }
@@ -91,6 +105,9 @@ impl SolverConfig {
             refresh_every: self.refresh_every,
             precision: self.precision,
             tol: self.tol,
+            blocks: self.blocks,
+            block_kind: self.block_kind,
+            hybrid_tol: self.hybrid_tol,
         }
     }
 }
@@ -384,6 +401,16 @@ impl Config {
             Ok(())
         })?;
         get_f64(doc, "solver.tol", &mut cfg.solver.tol)?;
+        get_usize(doc, "solver.blocks", &mut cfg.solver.blocks)?;
+        get_str(doc, "solver.block_kind", |s| {
+            // One parser with the CLI `--set solver.block_kind` path
+            // (kind compatibility is cross-checked in validate()).
+            let mut opts = SolverOptions::default();
+            opts.apply("block_kind", s)?;
+            cfg.solver.block_kind = opts.block_kind;
+            Ok(())
+        })?;
+        get_f64(doc, "solver.hybrid_tol", &mut cfg.solver.hybrid_tol)?;
 
         get_usize(doc, "model.dim", &mut cfg.model.dim)?;
         get_usize(doc, "model.heads", &mut cfg.model.heads)?;
@@ -458,6 +485,33 @@ impl Config {
         // `--set solver.*` path — including the precision/kind
         // compatibility check (mixed needs a chol/rvb session).
         self.solver.options().validate_for(self.solver.kind)?;
+        // Structured-kind cross-checks (PR 10): block options are inert
+        // on the dense kinds — requesting them there is a config mistake,
+        // so it hard-errors instead of being silently ignored. Kept at
+        // the schema level (not validate_for) so `dngd solve --solver
+        // all` can still sweep every kind from one option set.
+        let structured = matches!(
+            self.solver.kind,
+            SolverKind::BlockDiag | SolverKind::KpSvd | SolverKind::Hybrid
+        );
+        if self.solver.blocks > 0 && !structured {
+            return Err(format!(
+                "solver.blocks ({}) only applies to the structured kinds (blockdiag, kpsvd, \
+                 hybrid), not {:?} — drop it or switch solver.kind",
+                self.solver.blocks,
+                self.solver.kind.as_str()
+            ));
+        }
+        if self.solver.block_kind != BlockKind::Auto
+            && !matches!(self.solver.kind, SolverKind::BlockDiag | SolverKind::Hybrid)
+        {
+            return Err(format!(
+                "solver.block_kind ({}) selects the inner per-block session, which only \
+                 blockdiag and hybrid have — not {:?}",
+                self.solver.block_kind,
+                self.solver.kind.as_str()
+            ));
+        }
         if self.solver.window > 0 && self.solver.window <= self.train.batch_size {
             return Err(format!(
                 "solver.window ({}) must exceed train.batch_size ({}): a window no larger than \
@@ -560,6 +614,9 @@ const KNOWN_KEYS: &[&str] = &[
     "solver.refresh_every",
     "solver.precision",
     "solver.tol",
+    "solver.blocks",
+    "solver.block_kind",
+    "solver.hybrid_tol",
     "model.dim",
     "model.heads",
     "model.layers",
@@ -839,6 +896,84 @@ variant = "real_part"
             &["solver.kind=cg".into(), "solver.precision=mixed".into()]
         )
         .is_err());
+    }
+
+    #[test]
+    fn structured_keys_parse_and_cross_validate() {
+        // Defaults: single block, auto inner kind, PR-5-grade tolerance.
+        let cfg = Config::from_toml_str("", &[]).unwrap();
+        assert_eq!(cfg.solver.blocks, 0);
+        assert_eq!(cfg.solver.block_kind, BlockKind::Auto);
+        assert_eq!(cfg.solver.hybrid_tol, 1e-10);
+        // Full parse on a structured kind, flowing through to options.
+        let cfg = Config::from_toml_str(
+            "[solver]\nkind = \"hybrid\"\nblocks = 8\nblock_kind = \"rvb\"\n\
+             hybrid_tol = 1e-9\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.kind, SolverKind::Hybrid);
+        assert_eq!(cfg.solver.blocks, 8);
+        assert_eq!(cfg.solver.block_kind, BlockKind::Rvb);
+        assert_eq!(cfg.solver.hybrid_tol, 1e-9);
+        let opts = cfg.solver.options();
+        assert_eq!(opts.blocks, 8);
+        assert_eq!(opts.block_kind, BlockKind::Rvb);
+        assert_eq!(opts.hybrid_tol, 1e-9);
+        // kpsvd takes blocks but has no inner session kind.
+        let cfg =
+            Config::from_toml_str("[solver]\nkind = \"kpsvd\"\nblocks = 4\n", &[]).unwrap();
+        assert_eq!(cfg.solver.kind, SolverKind::KpSvd);
+        let err = Config::from_toml_str(
+            "[solver]\nkind = \"kpsvd\"\nblock_kind = \"chol\"\n",
+            &[],
+        )
+        .unwrap_err();
+        assert!(err.contains("solver.block_kind"), "{err}");
+        // Block options on a dense kind are a config mistake, not inert.
+        let err = Config::from_toml_str("[solver]\nblocks = 4\n", &[]).unwrap_err();
+        assert!(err.contains("solver.blocks"), "{err}");
+        let err =
+            Config::from_toml_str("[solver]\nkind = \"eigh\"\nblock_kind = \"chol\"\n", &[])
+                .unwrap_err();
+        assert!(err.contains("solver.block_kind"), "{err}");
+        // Bad values go through the shared option validators.
+        assert!(Config::from_toml_str("[solver]\nblock_kind = \"kfac\"\n", &[]).is_err());
+        assert!(Config::from_toml_str("[solver]\nhybrid_tol = 0.0\n", &[]).is_err());
+        // mixed precision composes through blockdiag/hybrid inner
+        // sessions but stays rejected for the eigendecomposition kind.
+        for kind in ["blockdiag", "hybrid"] {
+            let cfg = Config::from_toml_str(
+                &format!("[solver]\nkind = \"{kind}\"\nprecision = \"mixed\"\n"),
+                &[],
+            )
+            .unwrap();
+            assert_eq!(cfg.solver.precision, Precision::Mixed);
+        }
+        let err = Config::from_toml_str(
+            "[solver]\nkind = \"kpsvd\"\nprecision = \"mixed\"\n",
+            &[],
+        )
+        .unwrap_err();
+        assert!(err.contains("kpsvd"), "{err}");
+        // The --set override path goes through the same keys…
+        let cfg = Config::from_toml_str(
+            "",
+            &[
+                "solver.kind=blockdiag".into(),
+                "solver.blocks=16".into(),
+                "solver.block_kind=chol".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.blocks, 16);
+        assert_eq!(cfg.solver.block_kind, BlockKind::Chol);
+        // …and misspelled structured keys hard-error like any other.
+        for bogus in ["solver.block", "solver.block_count", "solver.hybridtol"] {
+            let err =
+                Config::from_toml_str("", &[format!("{bogus}=1")]).unwrap_err();
+            assert!(err.contains("unknown config key"), "{bogus}: {err}");
+        }
     }
 
     #[test]

@@ -909,6 +909,31 @@ use_artifacts = false
     }
 
     #[test]
+    fn structured_kinds_route_through_registry() {
+        // The PR-10 structured family has no sharded/artifact backend
+        // either: the registry hands back the native structured solver
+        // and training still converges to a finite loss.
+        for kind in [
+            crate::solver::SolverKind::BlockDiag,
+            crate::solver::SolverKind::Hybrid,
+        ] {
+            let mut cfg = tiny_config();
+            cfg.solver.kind = kind;
+            cfg.solver.blocks = 2;
+            cfg.train.steps = 3;
+            // Model-scale score matrices carry no conditioning guarantee,
+            // so keep the hybrid's inner tolerance above the f64
+            // attainable-residual floor for whatever κ the run produces.
+            cfg.solver.hybrid_tol = 1e-6;
+            let mut trainer = Trainer::new(&cfg, OptimizerChoice::Ngd).unwrap();
+            assert_eq!(trainer.backend(), "native", "{kind:?}");
+            let mut log = MetricsLog::new(TRAIN_LOG_COLUMNS);
+            let report = trainer.run(&mut log).unwrap();
+            assert!(report.final_loss.is_finite(), "{kind:?}");
+        }
+    }
+
+    #[test]
     fn sgd_baseline_runs() {
         let mut cfg = tiny_config();
         cfg.train.learning_rate = 0.5;

@@ -1,7 +1,7 @@
 //! `dngd` — leader entrypoint / CLI.
 //!
 //! ```text
-//! dngd solve  --n 256 --m 8192 [--lambda 1e-3] [--solver chol|eigh|svda|naive|cg|all]
+//! dngd solve  --n 256 --m 8192 [--lambda 1e-3] [--solver chol|eigh|svda|naive|cg|rvb|blockdiag|kpsvd|hybrid|all]
 //! dngd train  [--config cfg.toml] [--set section.key=value]… [--optimizer ngd|sgd] [--resume [path]]
 //! dngd vmc    [--config cfg.toml] [--set section.key=value]…
 //! dngd bench  --table1 | --scaling | --cg | --kernels | --precision [--scale small|paper] [--json out.json]
@@ -117,12 +117,12 @@ fn main() -> ExitCode {
 const USAGE: &str = "dngd — damped natural gradient descent at scale (Chen, Xie & Wang 2023)
 
 USAGE:
-  dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|rvb|all] [--threads T]
-              [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
+  dngd solve  --n N --m M [--lambda L] [--solver chol|eigh|svda|naive|cg|rvb|blockdiag|kpsvd|hybrid|all]
+              [--threads T] [--rhs K] [--lambda-sweep a,b,c] [--set solver.key=value]...
   dngd train  [--config cfg.toml] [--set section.key=value]... [--optimizer ngd|sgd] [--csv out.csv]
               [--resume [path.ckpt]]   (bare --resume scans train.checkpoint_dir, quarantining corrupt files)
   dngd vmc    [--config cfg.toml] [--set section.key=value]... [--csv out.csv]
-  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision | --serving | --recovery) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
+  dngd bench  (--table1 | --scaling | --cg | --kernels | --sessions | --threads | --streaming | --precision | --serving | --recovery | --structured) [--scale small|paper] [--json out.json] [--json-simd out.json] [--quick]
   dngd serve  [--config cfg.toml] [--set section.key=value]... [--transport channels|socket|both]
               [--tenants T] [--requests R] [--self-test] [--inject-kill]
   dngd chaos  [--config cfg.toml] [--set section.key=value]... [--target serve|train]
@@ -414,7 +414,7 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
     let a = cli::parse(args)?;
     a.expect_only(&[
         "table1", "scaling", "cg", "kernels", "sessions", "threads", "streaming", "precision",
-        "serving", "recovery", "scale", "json", "json-simd", "quick",
+        "serving", "recovery", "structured", "scale", "json", "json-simd", "quick",
     ])?;
     let scale = a.get("scale").filter(|s| !s.is_empty()).unwrap_or("small");
     let paper = match scale {
@@ -514,10 +514,23 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
             false,
         )
         .map_err(|e| e.to_string())?;
+    } else if a.has("structured") {
+        // PR 10: exact chol vs the structured family (blockdiag, kpsvd,
+        // hybrid) across block counts {1, 4, 16, 64}, plus hybrid-PCG vs
+        // plain-CG iteration counts on a blocked Fisher. The acceptance
+        // asserts (single-block ≡ chol, PCG iters < CG iters) live in
+        // strict mode, exercised by tests/structured.rs.
+        let json = a.get("json").filter(|s| !s.is_empty()).unwrap_or("BENCH_PR10.json");
+        dngd::bench_tables::structured_bench_report(
+            a.has("quick"),
+            Some(std::path::Path::new(json)),
+            false,
+        )
+        .map_err(|e| e.to_string())?;
     } else {
         return Err(
             "pick one of --table1 | --scaling | --cg | --kernels | --sessions | --threads | \
-             --streaming | --precision | --serving | --recovery"
+             --streaming | --precision | --serving | --recovery | --structured"
                 .into(),
         );
     }

@@ -1,83 +1,88 @@
 //! Block-diagonal approximate Fisher — the KFAC-family baseline.
 //!
+//! **Deprecated shim.** PR 10 promoted block structure into the solver
+//! layer proper: [`crate::solver::BlockPartition`] owns partition
+//! validation and [`crate::solver::BlockDiagSolver`] owns the per-block
+//! damped sessions (with redamp caching, `solve_many` panels, threading,
+//! mixed precision, and streaming row rotation — none of which this
+//! one-shot helper ever had). New code should use those directly, or the
+//! `blockdiag` / `kpsvd` / `hybrid` entries in
+//! [`crate::solver::SolverKind`]. This module remains only so the seed
+//! API keeps compiling; it now delegates to the solver layer.
+//!
 //! §1 motivates the paper: "approximations like KFAC have been introduced
 //! to mitigate this burden, [but] they often fall short of replicating the
-//! performance of the exact method." This module implements the
-//! block-diagonal Fisher (the structural core of KFAC-style methods:
-//! cross-layer curvature is dropped) so the ablation bench can measure
-//! that gap against the exact Algorithm-1 solve.
+//! performance of the exact method." The ablation bench measures that gap
+//! against the exact Algorithm-1 solve.
 //!
-//! Each parameter block B_k gets its own damped solve
-//! `(S_kᵀS_k + λI) x_k = v_k` where `S_k` is the column shard of S for
-//! that block — conveniently *also* accelerated by Algorithm 1.
+//! Migration note (also a seed bugfix): the seed version reported errors
+//! as `Result<_, String>`, silently clamped `k` in `uniform`, and
+//! accepted `m == 0`. The shim now returns typed
+//! [`SolveError::BadInput`](crate::solver::SolveError) for every
+//! degenerate partition, matching the rest of the solver layer.
 
 use crate::linalg::Mat;
-use crate::solver::{CholSolver, DampedSolver, SolveError};
+use crate::solver::{BlockDiagSolver, BlockKind, BlockPartition, DampedSolver, SolveError};
 
 /// Block-diagonal Fisher solver over explicit parameter blocks.
+#[deprecated(note = "use crate::solver::{BlockPartition, BlockDiagSolver} or SolverKind::BlockDiag")]
 pub struct BlockDiagonalFisher {
     /// Half-open column ranges `[start, end)` partitioning the parameters
     /// (typically one per layer).
     pub blocks: Vec<(usize, usize)>,
-    inner: CholSolver,
+    partition: BlockPartition,
 }
 
+#[allow(deprecated)]
 impl BlockDiagonalFisher {
     /// Build from block boundaries; validates that blocks partition `m`.
-    pub fn new(blocks: Vec<(usize, usize)>, m: usize) -> Result<Self, String> {
-        let mut cursor = 0;
-        for &(s, e) in &blocks {
-            if s != cursor || e <= s {
-                return Err(format!("blocks must be a contiguous partition, got {blocks:?}"));
-            }
-            cursor = e;
-        }
-        if cursor != m {
-            return Err(format!("blocks cover [0,{cursor}) but m = {m}"));
-        }
-        Ok(BlockDiagonalFisher { blocks, inner: CholSolver::default() })
+    ///
+    /// Degenerate partitions (gaps, overlaps, empty blocks, short or long
+    /// coverage, `m == 0`) are hard [`SolveError::BadInput`]s.
+    pub fn new(blocks: Vec<(usize, usize)>, m: usize) -> Result<Self, SolveError> {
+        let partition = BlockPartition::new(blocks.clone(), m)?;
+        Ok(BlockDiagonalFisher { blocks, partition })
     }
 
     /// Uniform partition into `k` blocks.
-    pub fn uniform(m: usize, k: usize) -> Self {
-        let k = k.max(1).min(m);
-        let base = m / k;
-        let rem = m % k;
-        let mut blocks = Vec::with_capacity(k);
-        let mut start = 0;
-        for i in 0..k {
-            let len = base + usize::from(i < rem);
-            blocks.push((start, start + len));
-            start += len;
-        }
-        BlockDiagonalFisher { blocks, inner: CholSolver::default() }
+    ///
+    /// Unlike the seed version, `k == 0`, `k > m`, and `m == 0` are hard
+    /// errors rather than silently clamped.
+    pub fn uniform(m: usize, k: usize) -> Result<Self, SolveError> {
+        let partition = BlockPartition::uniform(m, k)?;
+        let blocks = partition.ranges().to_vec();
+        Ok(BlockDiagonalFisher { blocks, partition })
     }
 
     /// Solve the block-diagonal system: each block solved independently.
     pub fn solve(&self, s: &Mat, v: &[f64], lambda: f64) -> Result<Vec<f64>, SolveError> {
-        assert_eq!(v.len(), s.cols());
-        let mut x = vec![0.0; v.len()];
-        for &(c0, c1) in &self.blocks {
-            let s_block = s.slice_cols(c0, c1);
-            let xb = self.inner.solve(&s_block, &v[c0..c1], lambda)?;
-            x[c0..c1].copy_from_slice(&xb);
+        if v.len() != s.cols() {
+            return Err(SolveError::BadInput(format!(
+                "rhs length {} does not match m = {}",
+                v.len(),
+                s.cols()
+            )));
         }
-        Ok(x)
+        let solver = BlockDiagSolver::default()
+            .with_partition(self.partition.clone())
+            .with_blocks(0, BlockKind::Chol);
+        solver.solve(s, v, lambda)
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::data::rng::Rng;
-    use crate::solver::{residual_norm, DampedSolver};
+    use crate::solver::{residual_norm, CholSolver, DampedSolver};
 
     #[test]
     fn single_block_equals_exact() {
         let mut rng = Rng::seed_from(210);
         let s = Mat::randn(8, 40, &mut rng);
         let v: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
-        let bd = BlockDiagonalFisher::uniform(40, 1);
+        let bd = BlockDiagonalFisher::uniform(40, 1).unwrap();
         let exact = CholSolver::default().solve(&s, &v, 0.1).unwrap();
         let block = bd.solve(&s, &v, 0.1).unwrap();
         for (a, b) in exact.iter().zip(&block) {
@@ -90,7 +95,7 @@ mod tests {
         let mut rng = Rng::seed_from(211);
         let s = Mat::randn(10, 60, &mut rng);
         let v: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
-        let bd = BlockDiagonalFisher::uniform(60, 4);
+        let bd = BlockDiagonalFisher::uniform(60, 4).unwrap();
         let exact = CholSolver::default().solve(&s, &v, 0.05).unwrap();
         let approx = bd.solve(&s, &v, 0.05).unwrap();
         // It's an approximation: must differ on random problems...
@@ -135,7 +140,30 @@ mod tests {
         assert!(BlockDiagonalFisher::new(vec![(0, 5), (6, 10)], 10).is_err()); // gap
         assert!(BlockDiagonalFisher::new(vec![(0, 5), (5, 9)], 10).is_err()); // short
         assert!(BlockDiagonalFisher::new(vec![(0, 5), (5, 10)], 10).is_ok());
-        let u = BlockDiagonalFisher::uniform(10, 3);
+        let u = BlockDiagonalFisher::uniform(10, 3).unwrap();
         assert_eq!(u.blocks, vec![(0, 4), (4, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn shim_errors_are_typed_and_degenerate_inputs_are_hard() {
+        // Seed bugs fixed in PR 10: `uniform` used to clamp silently and
+        // `new` accepted m == 0 with an empty block list.
+        for bad in [
+            BlockDiagonalFisher::uniform(0, 1),
+            BlockDiagonalFisher::uniform(10, 0),
+            BlockDiagonalFisher::uniform(3, 7),
+            BlockDiagonalFisher::new(vec![], 0),
+            BlockDiagonalFisher::new(vec![(0, 5), (3, 10)], 10), // overlap
+        ] {
+            match bad {
+                Err(SolveError::BadInput(_)) => {}
+                other => panic!("expected BadInput, got {:?}", other.map(|b| b.blocks)),
+            }
+        }
+        // rhs-length mismatch surfaces as BadInput too, not a panic.
+        let bd = BlockDiagonalFisher::uniform(10, 2).unwrap();
+        let mut rng = Rng::seed_from(213);
+        let s = Mat::randn(4, 10, &mut rng);
+        assert!(matches!(bd.solve(&s, &[0.0; 9], 0.1), Err(SolveError::BadInput(_))));
     }
 }

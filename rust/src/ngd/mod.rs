@@ -9,8 +9,10 @@
 //!   Levenberg–Marquardt adaptive damping (§3 relates Eq. 1 to LM).
 //! * [`kfac`] — a block-diagonal (KFAC-flavoured) approximate-Fisher
 //!   baseline, the approximation family §1 says "often falls short of
-//!   replicating the performance of the exact method". The ablation bench
-//!   compares it against the exact solve.
+//!   replicating the performance of the exact method". Deprecated since
+//!   PR 10: the solver layer now owns block structure
+//!   ([`crate::solver::BlockDiagSolver`], [`crate::solver::KpSvdSolver`],
+//!   [`crate::solver::HybridCgSolver`]); the shim delegates to it.
 //! * [`Sgd`] / [`Adam`] — first-order baselines for the end-to-end runs.
 
 pub mod damping;
@@ -20,5 +22,6 @@ pub mod optimizer;
 
 pub use damping::DampingSchedule;
 pub use first_order::{Adam, Sgd};
+#[allow(deprecated)]
 pub use kfac::BlockDiagonalFisher;
 pub use optimizer::{NaturalGradient, NgdReport, NgdState, SessionLog, WindowLog};

@@ -929,7 +929,16 @@ mod tests {
     fn works_with_every_solver_kind() {
         let mut rng = Rng::seed_from(204);
         let (a, b, _) = quadratic_setup(8, 24, &mut rng);
-        for &kind in &[SolverKind::Chol, SolverKind::Eigh, SolverKind::Svda, SolverKind::Cg] {
+        // KpSvd is excluded: it is a deliberate approximation, so a
+        // single step need not descend on an unstructured quadratic.
+        for &kind in &[
+            SolverKind::Chol,
+            SolverKind::Eigh,
+            SolverKind::Svda,
+            SolverKind::Cg,
+            SolverKind::BlockDiag,
+            SolverKind::Hybrid,
+        ] {
             let mut theta = vec![0.0; 24];
             let mut ngd = NaturalGradient::new(
                 crate::solver::make_solver(kind),

@@ -1,0 +1,501 @@
+//! Kronecker-product-SVD structured Fisher sessions (PR 10).
+//!
+//! Koroko et al. (2201.10285) approximate each layer's Fisher block by
+//! its **nearest Kronecker product**: for a block Gram `G: m_b×m_b`
+//! with `m_b = p·q`, find `A: p×p`, `B: q×q` minimizing
+//! `‖G − A⊗B‖_F`. Van Loan–Pitsianis reduces this to the dominant
+//! singular triple of the *rearrangement* `R(G): p²×q²` with
+//! `R[i·p+j, k·q+l] = G[i·q+k, j·q+l]` — vec(A) and vec(B) are the
+//! leading left/right singular vectors scaled by σ₁. The damped solve
+//! against `A⊗B + λI` is then two small eigendecompositions
+//! (λ-independent, cached) plus reshape-multiplies per right-hand
+//! side:
+//!
+//! ```text
+//! A = U_A diag(α) U_Aᵀ,  B = U_B diag(β) U_Bᵀ
+//! (A⊗B + λI)⁻¹ v  =  vec⁻¹( U_A [ (U_Aᵀ V U_B) ⊘ (αβᵀ + λ) ] U_Bᵀ )
+//! ```
+//!
+//! so a λ-resweep is **O(1)** — the division happens at solve time —
+//! and the per-RHS cost is O(p·q·(p+q)). The factor stage costs the
+//! O(m_b²·n) block Gram plus the rearranged power iteration; this only
+//! pays off when many λ/RHS hit the same window (the trainer's backoff
+//! chains, serving). Like K-FAC it is *approximate* unless the block
+//! Gram is exactly Kronecker (pinned by a test on `S = S_A ⊗ S_B`);
+//! EXPERIMENTS.md §Structured quantifies the gap and the hybrid session
+//! ([`super::hybrid`]) closes it by CG-correcting against the exact
+//! system.
+//!
+//! `p` is chosen as the largest divisor of `m_b` with `p ≤ √m_b`; a
+//! prime `m_b` degenerates to `p = 1`, where `A⊗B = B = G` and the
+//! session is an *exact* damped eigendecomposition of the block Gram.
+
+use super::blockdiag::{resolve_partition, BlockPartition};
+use super::session::{check_lambda, undamped_err};
+use super::{DampedSolver, Factorization, SolveError};
+use crate::linalg::gemm::gemm_tn_threaded;
+use crate::linalg::mat::norm2;
+use crate::linalg::{eigh, KernelConfig, Mat};
+
+/// Fixed power-iteration count for the dominant singular triple of the
+/// rearranged block. Deterministic (fixed start vector, fixed count),
+/// and ample: the iterate error contracts like (σ₂/σ₁)² per step.
+const POWER_ITERS: usize = 40;
+
+/// The Kronecker-product-SVD structured solver ("kpsvd").
+#[derive(Debug, Clone)]
+pub struct KpSvdSolver {
+    cfg: KernelConfig,
+    blocks: usize,
+    partition: Option<BlockPartition>,
+}
+
+impl Default for KpSvdSolver {
+    fn default() -> Self {
+        KpSvdSolver { cfg: KernelConfig::with_threads(1), blocks: 0, partition: None }
+    }
+}
+
+impl KpSvdSolver {
+    pub fn new() -> Self {
+        KpSvdSolver::default()
+    }
+
+    /// Kernel configuration — threads reach the O(m_b²·n) block-Gram
+    /// GEMMs (the dominant factor cost).
+    pub fn with_config(cfg: KernelConfig) -> Self {
+        KpSvdSolver { cfg, ..KpSvdSolver::default() }
+    }
+
+    /// Uniform block count (`solver.blocks`; 0 = one block).
+    pub fn with_blocks(mut self, blocks: usize) -> Self {
+        self.blocks = blocks;
+        self
+    }
+
+    /// Explicit (non-uniform) partition.
+    pub fn with_partition(mut self, partition: BlockPartition) -> Self {
+        self.partition = Some(partition);
+        self
+    }
+
+    fn open(&self, s: &Mat) -> KpSvdFactor {
+        match resolve_partition(self.partition.as_ref(), self.blocks, s.cols()) {
+            Ok(partition) => {
+                let shards = partition
+                    .ranges()
+                    .iter()
+                    .map(|&(c0, c1)| s.slice_cols(c0, c1))
+                    .collect();
+                KpSvdFactor {
+                    partition,
+                    shards,
+                    threads: self.cfg.threads.max(1),
+                    kron: Vec::new(),
+                    m: s.cols(),
+                    lambda: 0.0,
+                    poisoned: None,
+                }
+            }
+            Err(e) => KpSvdFactor {
+                partition: BlockPartition::uniform(1, 1).expect("trivial partition"),
+                shards: Vec::new(),
+                threads: 1,
+                kron: Vec::new(),
+                m: s.cols(),
+                lambda: 0.0,
+                poisoned: Some(e),
+            },
+        }
+    }
+}
+
+impl DampedSolver for KpSvdSolver {
+    fn name(&self) -> &'static str {
+        "kpsvd"
+    }
+
+    fn begin<'s>(&'s self, s: &'s Mat) -> Box<dyn Factorization + 's> {
+        Box::new(self.open(s))
+    }
+
+    // No `begin_window` override: the Kronecker caches have no O(kn²)
+    // row-rotation update, so streaming drivers fall back to a cold
+    // refactor per rotation (the optimizer handles `None` natively).
+}
+
+/// The cached λ-independent Kronecker eigenstructure of one block.
+struct KronBlock {
+    p: usize,
+    q: usize,
+    /// Eigenvalues of the nearest-Kronecker factors, clamped ≥ 0 (the
+    /// rank-1 truncation can leave tiny negative dust; the damped
+    /// denominator `α·β + λ` must stay ≥ λ).
+    alpha: Vec<f64>,
+    beta: Vec<f64>,
+    ua: Mat,
+    ub: Mat,
+}
+
+/// A staged KP-SVD factorization: per-block nearest-Kronecker
+/// eigendecompositions, computed once on the first
+/// [`Factorization::redamp`] and reused by every λ-resweep (`redamp` is
+/// O(1) — the damping enters at solve time as `⊘ (αβᵀ + λ)`).
+pub struct KpSvdFactor {
+    partition: BlockPartition,
+    shards: Vec<Mat>,
+    threads: usize,
+    kron: Vec<KronBlock>,
+    m: usize,
+    lambda: f64,
+    poisoned: Option<SolveError>,
+}
+
+impl KpSvdFactor {
+    fn check_poisoned(&self) -> Result<(), SolveError> {
+        match &self.poisoned {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// Largest divisor of `m_b` that is ≤ √m_b (1 for primes).
+    fn split_dim(mb: usize) -> usize {
+        let mut best = 1;
+        let mut d = 1;
+        while d * d <= mb {
+            if mb % d == 0 {
+                best = d;
+            }
+            d += 1;
+        }
+        best
+    }
+
+    /// Van Loan–Pitsianis rearrangement `R(G): p²×q²`,
+    /// `R[i·p+j, k·q+l] = G[i·q+k, j·q+l]`.
+    fn rearrange(g: &Mat, p: usize, q: usize) -> Mat {
+        let mut r = Mat::zeros(p * p, q * q);
+        for i in 0..p {
+            for j in 0..p {
+                let row = r.row_mut(i * p + j);
+                for k in 0..q {
+                    for l in 0..q {
+                        row[k * q + l] = g[(i * q + k, j * q + l)];
+                    }
+                }
+            }
+        }
+        r
+    }
+
+    /// Nearest Kronecker factors of one block Gram, as their damped
+    /// eigenstructure.
+    fn kron_block(&self, g: &Mat) -> KronBlock {
+        let mb = g.rows();
+        let p = Self::split_dim(mb);
+        let q = mb / p;
+        if p == 1 {
+            // Degenerate split: A⊗B = B = G exactly — the session is an
+            // exact damped eigendecomposition of the block Gram.
+            let (beta, ub) = eigh(g);
+            let beta = beta.into_iter().map(|b| b.max(0.0)).collect();
+            let mut ua = Mat::zeros(1, 1);
+            ua[(0, 0)] = 1.0;
+            return KronBlock { p, q, alpha: vec![1.0], beta, ua, ub };
+        }
+        let r = Self::rearrange(g, p, q);
+        // Dominant right singular vector by deterministic power
+        // iteration on RᵀR, started from vec(I_q) (symmetric, never
+        // orthogonal to the leading triple of a PSD Gram's
+        // rearrangement in practice).
+        let mut v = vec![0.0; q * q];
+        for k in 0..q {
+            v[k * q + k] = 1.0;
+        }
+        let vnorm = norm2(&v);
+        for e in &mut v {
+            *e /= vnorm;
+        }
+        for _ in 0..POWER_ITERS {
+            let u = r.matvec(&v);
+            let w = r.t_matvec(&u);
+            let wnorm = norm2(&w);
+            if wnorm <= 0.0 {
+                break; // zero Gram: factors stay zero, solve is v/λ
+            }
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / wnorm;
+            }
+        }
+        let u = r.matvec(&v); // = σ₁·u₁, absorbing the singular value into A
+        let mut a = Mat::zeros(p, p);
+        for i in 0..p {
+            for j in 0..p {
+                a[(i, j)] = u[i * p + j];
+            }
+        }
+        let mut b = Mat::zeros(q, q);
+        for k in 0..q {
+            for l in 0..q {
+                b[(k, l)] = v[k * q + l];
+            }
+        }
+        // G is symmetric, so the nearest Kronecker factors are too up
+        // to rounding — symmetrize, and fix the joint sign so B (hence
+        // A, since G is PSD) has non-negative trace: (−A)⊗(−B) = A⊗B.
+        symmetrize(&mut a);
+        symmetrize(&mut b);
+        let tb: f64 = (0..q).map(|k| b[(k, k)]).sum();
+        if tb < 0.0 {
+            for e in a.as_mut_slice() {
+                *e = -*e;
+            }
+            for e in b.as_mut_slice() {
+                *e = -*e;
+            }
+        }
+        let (alpha, ua) = eigh(&a);
+        let (beta, ub) = eigh(&b);
+        KronBlock {
+            p,
+            q,
+            alpha: alpha.into_iter().map(|x| x.max(0.0)).collect(),
+            beta: beta.into_iter().map(|x| x.max(0.0)).collect(),
+            ua,
+            ub,
+        }
+    }
+
+    fn build_caches(&mut self) {
+        if !self.kron.is_empty() {
+            return;
+        }
+        let mut kron = Vec::with_capacity(self.shards.len());
+        for sb in &self.shards {
+            let mb = sb.cols();
+            // Block Gram G_b = S_bᵀS_b — the O(m_b²·n) stage, threaded.
+            let mut g = Mat::zeros(mb, mb);
+            gemm_tn_threaded(1.0, sb, sb, 0.0, &mut g, self.threads);
+            kron.push(self.kron_block(&g));
+        }
+        self.kron = kron;
+    }
+}
+
+fn symmetrize(a: &mut Mat) {
+    let n = a.rows();
+    for i in 0..n {
+        for j in 0..i {
+            let s = 0.5 * (a[(i, j)] + a[(j, i)]);
+            a[(i, j)] = s;
+            a[(j, i)] = s;
+        }
+    }
+}
+
+/// `C = Aᵀ·B` for small dense blocks (serial — these are p×q-sized).
+fn small_gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    let (k, p) = a.shape();
+    let (k2, q) = b.shape();
+    assert_eq!(k, k2);
+    let mut c = Mat::zeros(p, q);
+    for t in 0..k {
+        let arow = a.row(t);
+        let brow = b.row(t);
+        for i in 0..p {
+            let ai = arow[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..q {
+                crow[j] += ai * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A·B` for small dense blocks.
+fn small_gemm(a: &Mat, b: &Mat) -> Mat {
+    let (p, k) = a.shape();
+    let (k2, q) = b.shape();
+    assert_eq!(k, k2);
+    let mut c = Mat::zeros(p, q);
+    for i in 0..p {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (t, &at) in arow.iter().enumerate() {
+            if at == 0.0 {
+                continue;
+            }
+            let brow = b.row(t);
+            for j in 0..q {
+                crow[j] += at * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A·Bᵀ` for small dense blocks.
+fn small_gemm_nt(a: &Mat, b: &Mat) -> Mat {
+    let (p, k) = a.shape();
+    let (q, k2) = b.shape();
+    assert_eq!(k, k2);
+    let mut c = Mat::zeros(p, q);
+    for i in 0..p {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..q {
+            let brow = b.row(j);
+            let mut acc = 0.0;
+            for t in 0..k {
+                acc += arow[t] * brow[t];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+impl Factorization for KpSvdFactor {
+    fn name(&self) -> &'static str {
+        "kpsvd"
+    }
+
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn redamp(&mut self, lambda: f64) -> Result<(), SolveError> {
+        self.check_poisoned()?;
+        check_lambda(lambda)?;
+        self.build_caches();
+        self.lambda = lambda;
+        Ok(())
+    }
+
+    fn solve_into(&mut self, v: &[f64], x: &mut [f64]) -> Result<(), SolveError> {
+        self.check_poisoned()?;
+        if self.lambda <= 0.0 {
+            return Err(undamped_err());
+        }
+        assert_eq!(v.len(), self.m, "v must be m-dimensional");
+        assert_eq!(x.len(), self.m, "x must be m-dimensional");
+        let lambda = self.lambda;
+        for (b, &(c0, _c1)) in self.partition.ranges().iter().enumerate() {
+            let kb = &self.kron[b];
+            let (p, q) = (kb.p, kb.q);
+            // vec⁻¹: V[i,k] = v[c0 + i·q + k].
+            let mut vmat = Mat::zeros(p, q);
+            for i in 0..p {
+                vmat.row_mut(i).copy_from_slice(&v[c0 + i * q..c0 + (i + 1) * q]);
+            }
+            // W = U_Aᵀ V U_B, damped-divide, X = U_A W U_Bᵀ.
+            let mut w = small_gemm(&small_gemm_tn(&kb.ua, &vmat), &kb.ub);
+            for a in 0..p {
+                let alpha = kb.alpha[a];
+                let wrow = w.row_mut(a);
+                for (bb, wv) in wrow.iter_mut().enumerate() {
+                    *wv /= alpha * kb.beta[bb] + lambda;
+                }
+            }
+            let xmat = small_gemm_nt(&small_gemm(&kb.ua, &w), &kb.ub);
+            for i in 0..p {
+                x[c0 + i * q..c0 + (i + 1) * q].copy_from_slice(xmat.row(i));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::CholSolver;
+
+    /// Kronecker product of two score matrices: columns indexed
+    /// (i, k) → i·q + k, matching the session's reshape convention.
+    fn kron(a: &Mat, b: &Mat) -> Mat {
+        let (na, p) = a.shape();
+        let (nb, q) = b.shape();
+        let mut out = Mat::zeros(na * nb, p * q);
+        for ra in 0..na {
+            for rb in 0..nb {
+                let row = out.row_mut(ra * nb + rb);
+                for i in 0..p {
+                    for k in 0..q {
+                        row[i * q + k] = a[(ra, i)] * b[(rb, k)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn split_dim_prefers_near_square() {
+        assert_eq!(KpSvdFactor::split_dim(16), 4);
+        assert_eq!(KpSvdFactor::split_dim(12), 3);
+        assert_eq!(KpSvdFactor::split_dim(15), 3);
+        assert_eq!(KpSvdFactor::split_dim(13), 1); // prime → degenerate
+        assert_eq!(KpSvdFactor::split_dim(1), 1);
+    }
+
+    #[test]
+    fn exact_on_kronecker_structured_scores() {
+        // S = S_A ⊗ S_B ⇒ SᵀS = (S_AᵀS_A)⊗(S_BᵀS_B): the nearest
+        // Kronecker factor is exact and kpsvd must agree with chol.
+        let mut rng = Rng::seed_from(1101);
+        let sa = Mat::randn(3, 4, &mut rng);
+        let sb = Mat::randn(4, 5, &mut rng);
+        let s = kron(&sa, &sb); // 12×20, m_b = 20 → p=4, q=5
+        let v: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        for lambda in [1.0, 0.1, 0.01] {
+            let x = KpSvdSolver::new().solve(&s, &v, lambda).unwrap();
+            let xc = CholSolver::default().solve(&s, &v, lambda).unwrap();
+            let scale = norm2(&xc).max(1.0);
+            for (a, b) in x.iter().zip(&xc) {
+                assert!((a - b).abs() < 1e-8 * scale, "kpsvd vs chol at λ={lambda}");
+            }
+        }
+    }
+
+    #[test]
+    fn prime_block_width_is_exact_eigh() {
+        // m_b = 13 (prime) degenerates to the exact eigendecomposition.
+        let mut rng = Rng::seed_from(1102);
+        let s = Mat::randn(6, 13, &mut rng);
+        let v: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
+        let x = KpSvdSolver::new().solve(&s, &v, 0.05).unwrap();
+        let xc = CholSolver::default().solve(&s, &v, 0.05).unwrap();
+        for (a, b) in x.iter().zip(&xc) {
+            assert!((a - b).abs() < 1e-9, "degenerate kpsvd must be exact");
+        }
+    }
+
+    #[test]
+    fn resweep_reuses_caches_and_streaming_is_rejected() {
+        let mut rng = Rng::seed_from(1103);
+        let s = Mat::randn(8, 24, &mut rng);
+        let v: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let solver = KpSvdSolver::new().with_blocks(2);
+        let mut fact = solver.factor(&s, 0.5).unwrap();
+        let x1 = fact.solve(&v).unwrap();
+        fact.redamp(0.05).unwrap(); // O(1): division happens at solve time
+        let x2 = fact.solve(&v).unwrap();
+        assert!(x1.iter().zip(&x2).any(|(a, b)| a != b));
+        // No native rotation/refresh — streaming drivers must refactor.
+        let added = Mat::randn(1, 24, &mut rng);
+        assert!(matches!(fact.update_rows(&[0], &added), Err(SolveError::BadInput(_))));
+        assert!(matches!(fact.refresh(), Err(SolveError::BadInput(_))));
+        assert!(solver.begin_window(s.clone()).is_none());
+    }
+}

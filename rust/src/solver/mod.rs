@@ -13,6 +13,9 @@
 //! | [`NaiveSolver`] | —       | O(m²n + m³) / O(m²) | O(m²) | f64 | §2 "naive" reference |
 //! | [`CgSolver`]    | —       | none / O(nm·iters) | O(m) | f64 | §3 iterative baseline |
 //! | [`RvbSolver`]   | "rvb"   | O(n²m + n³) / O(nm) | O(nm) | f64, mixed | RVB+23 identity (Appendix B), needs `v = Sᵀf` |
+//! | [`BlockDiagSolver`] | "blockdiag" | k·O(n²·m/k + n³/3) / O(nm) | O(nm) | f64, mixed | K-FAC block-diagonal approximation (§1's "approximations like KFAC") |
+//! | [`KpSvdSolver`] | "kpsvd" | O(m_b²·n + m_b^1.5) per block / O(pq(p+q)) | O(nm + Σm_b²) | f64 | Kronecker-product SVD, Koroko et al. 2201.10285 |
+//! | [`HybridCgSolver`] | "hybrid" | blockdiag factor / O(nm·iters) | O(nm) | f64, mixed (preconditioner) | structured-preconditioned CG on the exact system |
 //!
 //! The *precision* column is `solver.precision` (PR 6): every kind runs
 //! the default pure-`f64` pipeline, and the two session kinds with a
@@ -162,28 +165,67 @@
 //! `dngd chaos --target train` plus `rust/tests/durability.rs` pin the
 //! kill-anywhere guarantee (EXPERIMENTS.md §Durability).
 //!
+//! ## Structured kinds (PR 10): blockdiag, kpsvd, hybrid
+//!
+//! The K-FAC family trades exactness for per-block cost: the Fisher is
+//! restricted to its block-diagonal (`solver.blocks` contiguous column
+//! groups, [`blockdiag::BlockPartition`]), each block backed by one
+//! inner chol/rvb session ([`blockdiag::BlockDiagFactor`]) so redamp
+//! caching, `solve_many` panels, threading, mixed precision and
+//! `update_rows` streaming all compose through. [`KpSvdSolver`] goes
+//! further per Koroko et al. (2201.10285): each block Gram is replaced
+//! by its nearest Kronecker product `A⊗B` (SVD of the rearranged
+//! block), making λ-resweeps O(1) and per-RHS solves O(pq(p+q)).
+//! [`HybridCgSolver`] closes the approximation gap: true-residual CG on
+//! the **exact** damped system, preconditioned by the block-diagonal
+//! factor — exact answers at structured per-iteration cost.
+//!
+//! When to prefer which (cost-model crossover in
+//! [`flops_blocked`] / `dngd bench --structured` → `BENCH_PR10.json`):
+//!
+//! | regime | kind |
+//! |--------|------|
+//! | dense cross-block curvature, m modest | `chol` (exact, the paper's path) |
+//! | near-block-diagonal Fisher, many blocks | `blockdiag` (k× cheaper factor, approximate) |
+//! | many λ-resweeps / RHS on static blocks | `kpsvd` (O(1) redamp, approximate) |
+//! | exact answer needed, Fisher near-structured | `hybrid` (few PCG iterations, exact) |
+//!
+//! A single-block `blockdiag` session is **bit-identical** to the plain
+//! chol session on factor, λ-resweep, `solve_many` and rotation (pinned
+//! by `rust/tests/structured.rs`), so the structured family degrades
+//! gracefully to the exact dense path.
+//!
 //! Complex stochastic-reconfiguration variants (§3) live in
 //! [`complex_sr`]: the full-complex Fisher `F = S†S` and the real-part
 //! Fisher `F = ℜ[S†S]` via `S ← Concat[ℜS, ℑS]`, with the same
 //! Gram-caching session shape ([`complex_sr::ComplexSrFactor`]).
 
+pub mod blockdiag;
 pub mod cg;
 pub mod chol;
 pub mod complex_sr;
 pub mod cost;
 pub mod eigh_svd;
+pub mod hybrid;
+pub mod kpsvd;
 pub mod naive;
 pub mod rvb;
 pub mod session;
 pub mod svda;
 
+pub use blockdiag::{BlockDiagSolver, BlockKind, BlockPartition};
 pub use cg::{CgSolver, CgStats};
 pub use chol::{mixed_counters, CholSolver};
 pub use complex_sr::{
     center_scores, solve_sr_complex, solve_sr_real_part, stack_real_part, ComplexSrFactor,
 };
-pub use cost::{flops, flops_precision, flops_streaming, flops_threaded, memory_bytes, MemoryBudget};
+pub use cost::{
+    flops, flops_blocked, flops_precision, flops_streaming, flops_threaded, memory_bytes,
+    MemoryBudget,
+};
 pub use eigh_svd::EighSolver;
+pub use hybrid::HybridCgSolver;
+pub use kpsvd::KpSvdSolver;
 pub use naive::NaiveSolver;
 pub use rvb::RvbSolver;
 pub use session::{
@@ -318,6 +360,17 @@ pub enum SolverKind {
     /// RVB+23 least-squares method — requires `v = Sᵀf` (rejected as
     /// [`SolveError::BadInput`] otherwise).
     Rvb,
+    /// K-FAC-style block-diagonal Fisher (PR 10): per-block inner
+    /// chol/rvb sessions over a [`BlockPartition`]. **Approximate**
+    /// unless the Fisher is truly block-diagonal (or one block, where
+    /// it is bit-identical to `chol`).
+    BlockDiag,
+    /// Kronecker-product-SVD approximation per block (PR 10, Koroko et
+    /// al. 2201.10285). **Approximate**; O(1) λ-resweeps.
+    KpSvd,
+    /// Structured-preconditioned CG on the exact damped system
+    /// (PR 10): exact answers, block-diagonal preconditioner.
+    Hybrid,
 }
 
 impl SolverKind {
@@ -329,12 +382,17 @@ impl SolverKind {
             "naive" => SolverKind::Naive,
             "cg" => SolverKind::Cg,
             "rvb" => SolverKind::Rvb,
+            "blockdiag" => SolverKind::BlockDiag,
+            "kpsvd" => SolverKind::KpSvd,
+            "hybrid" => SolverKind::Hybrid,
             _ => return None,
         })
     }
 
     /// Every selectable solver, including the structurally-restricted
-    /// `rvb` (which only accepts `v ∈ rowspace(S)`).
+    /// `rvb` (which only accepts `v ∈ rowspace(S)`) and the PR-10
+    /// structured kinds (`blockdiag`/`kpsvd` are *approximate* on
+    /// Fishers with cross-block mass).
     pub fn all() -> &'static [SolverKind] {
         &[
             SolverKind::Chol,
@@ -343,11 +401,17 @@ impl SolverKind {
             SolverKind::Naive,
             SolverKind::Cg,
             SolverKind::Rvb,
+            SolverKind::BlockDiag,
+            SolverKind::KpSvd,
+            SolverKind::Hybrid,
         ]
     }
 
-    /// The solvers valid for an arbitrary right-hand side (excludes
-    /// `rvb`, whose precondition `v = Sᵀf` fails for random v).
+    /// The solvers that produce the **exact** solution for an arbitrary
+    /// right-hand side (excludes `rvb`, whose precondition `v = Sᵀf`
+    /// fails for random v, and the approximate structured kinds —
+    /// `hybrid` is exact but its convergence is iterative, so it is
+    /// validated separately in `rust/tests/structured.rs`).
     pub fn general() -> &'static [SolverKind] {
         &[SolverKind::Chol, SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg]
     }
@@ -360,6 +424,9 @@ impl SolverKind {
             SolverKind::Naive => "naive",
             SolverKind::Cg => "cg",
             SolverKind::Rvb => "rvb",
+            SolverKind::BlockDiag => "blockdiag",
+            SolverKind::KpSvd => "kpsvd",
+            SolverKind::Hybrid => "hybrid",
         }
     }
 }

@@ -36,6 +36,7 @@
 //! landing on the identical factor bits
 //! ([`crate::ngd::NaturalGradient::restore_state`]).
 
+use super::blockdiag::BlockKind;
 use super::{DampedSolver, SolveError, SolverKind};
 use crate::linalg::{KernelConfig, KernelIsa, Mat};
 
@@ -328,6 +329,21 @@ pub struct SolverOptions {
     /// systems reach this in 1–3 sweeps; stagnation before reaching it
     /// triggers the f64 fallback. Ignored by `precision = f64`.
     pub tol: f64,
+    /// Block count for the structured kinds (`solver.blocks`; 0 = one
+    /// block, the exact dense limit). Used by
+    /// `blockdiag`/`kpsvd`/`hybrid` to split the parameter axis into
+    /// this many near-equal contiguous column groups
+    /// ([`super::BlockPartition::uniform`]); rejected at config
+    /// validation for every other kind (see
+    /// [`crate::config::Config::validate`]).
+    pub blocks: usize,
+    /// Per-block inner session kind for `blockdiag`/`hybrid`
+    /// (`solver.block_kind = auto|chol|rvb`; `auto` picks by the cost
+    /// model per block).
+    pub block_kind: BlockKind,
+    /// Relative true-residual tolerance for the hybrid PCG loop
+    /// (`solver.hybrid_tol`).
+    pub hybrid_tol: f64,
 }
 
 impl Default for SolverOptions {
@@ -344,6 +360,9 @@ impl Default for SolverOptions {
             refresh_every: 64,
             precision: Precision::F64,
             tol: 1e-10,
+            blocks: 0,
+            block_kind: BlockKind::Auto,
+            hybrid_tol: 1e-10,
         }
     }
 }
@@ -374,22 +393,34 @@ impl SolverOptions {
         if !(self.tol > 0.0 && self.tol.is_finite()) {
             return Err(format!("solver.tol must be a finite value > 0, got {}", self.tol));
         }
+        if !(self.hybrid_tol > 0.0 && self.hybrid_tol.is_finite()) {
+            return Err(format!(
+                "solver.hybrid_tol must be a finite value > 0, got {}",
+                self.hybrid_tol
+            ));
+        }
         Ok(())
     }
 
     /// Kind-dependent validation: `solver.precision = mixed` is
-    /// implemented by the `chol` and `rvb` sessions only. Requesting it
-    /// for any other kind is a hard error — never a silent f64
-    /// fallback. Config (`cfg.validate()`) and the CLI both funnel
-    /// through this.
+    /// implemented by the sessions with a cached Cholesky factor —
+    /// `chol` and `rvb` directly, and `blockdiag`/`hybrid` by
+    /// composition through their inner per-block chol/rvb sessions.
+    /// Requesting it for any other kind (including `kpsvd`, whose
+    /// eigendecomposition path has no f32 twin) is a hard error — never
+    /// a silent f64 fallback. Config (`cfg.validate()`) and the CLI
+    /// both funnel through this.
     pub fn validate_for(&self, kind: SolverKind) -> Result<(), String> {
         self.validate()?;
         if self.precision == Precision::Mixed
-            && !matches!(kind, SolverKind::Chol | SolverKind::Rvb)
+            && !matches!(
+                kind,
+                SolverKind::Chol | SolverKind::Rvb | SolverKind::BlockDiag | SolverKind::Hybrid
+            )
         {
             return Err(format!(
                 "solver.precision=mixed is not supported by solver.kind={} (supported kinds: \
-                 chol, rvb); drop the precision override or switch kinds",
+                 chol, rvb, blockdiag, hybrid); drop the precision override or switch kinds",
                 kind.as_str()
             ));
         }
@@ -443,10 +474,20 @@ impl SolverOptions {
                 })?
             }
             "tol" => next.tol = parse(key, value)?,
+            "blocks" => next.blocks = parse(key, value)?,
+            "block_kind" => {
+                next.block_kind = BlockKind::parse(value).ok_or_else(|| {
+                    format!(
+                        "solver.block_kind: unknown kind {value:?} (known: auto, chol, rvb)"
+                    )
+                })?
+            }
+            "hybrid_tol" => next.hybrid_tol = parse(key, value)?,
             other => {
                 return Err(format!(
                     "unknown solver option {other:?} (known: threads, isa, cg_tol, cg_max_iters, \
-                     cg_loose_accept, budget_gb, rvb_tol, window, refresh_every, precision, tol)"
+                     cg_loose_accept, budget_gb, rvb_tol, window, refresh_every, precision, tol, \
+                     blocks, block_kind, hybrid_tol)"
                 ))
             }
         }
@@ -532,6 +573,24 @@ impl SolverRegistry {
                 super::RvbSolver::with_config(self.opts.kernel())
                     .with_recovery_tol(self.opts.rvb_tol)
                     .with_precision(self.opts.precision, self.opts.tol),
+            ),
+            SolverKind::BlockDiag => Box::new(
+                super::BlockDiagSolver::with_config(self.opts.kernel())
+                    .with_precision(self.opts.precision, self.opts.tol)
+                    .with_recovery_tol(self.opts.rvb_tol)
+                    .with_blocks(self.opts.blocks, self.opts.block_kind),
+            ),
+            SolverKind::KpSvd => Box::new(
+                super::KpSvdSolver::with_config(self.opts.kernel())
+                    .with_blocks(self.opts.blocks),
+            ),
+            SolverKind::Hybrid => Box::new(
+                super::HybridCgSolver::new(self.opts.hybrid_tol, self.opts.cg_max_iters)
+                    .with_config(self.opts.kernel())
+                    .with_precision(self.opts.precision, self.opts.tol)
+                    .with_recovery_tol(self.opts.rvb_tol)
+                    .with_blocks(self.opts.blocks, self.opts.block_kind)
+                    .with_loose_accept(self.opts.cg_loose_accept),
             ),
         }
     }
@@ -740,7 +799,13 @@ mod tests {
         for kind in [SolverKind::Chol, SolverKind::Rvb] {
             o.validate_for(kind).unwrap();
         }
-        for kind in [SolverKind::Eigh, SolverKind::Svda, SolverKind::Naive, SolverKind::Cg] {
+        for kind in [
+            SolverKind::Eigh,
+            SolverKind::Svda,
+            SolverKind::Naive,
+            SolverKind::Cg,
+            SolverKind::KpSvd,
+        ] {
             let err = o.validate_for(kind).unwrap_err();
             assert!(
                 err.contains("precision=mixed") && err.contains(kind.as_str()),
@@ -753,6 +818,45 @@ mod tests {
         for &kind in SolverKind::all() {
             o.validate_for(kind).unwrap();
         }
+    }
+
+    #[test]
+    fn structured_options_parse_and_validate() {
+        let mut o = SolverOptions::default();
+        assert_eq!(o.blocks, 0, "one block (the exact dense limit) is the default");
+        assert_eq!(o.block_kind, BlockKind::Auto);
+        assert_eq!(o.hybrid_tol, 1e-10);
+        o.apply("blocks", "16").unwrap();
+        o.apply("block_kind", "chol").unwrap();
+        o.apply("hybrid_tol", "1e-8").unwrap();
+        assert_eq!(o.blocks, 16);
+        assert_eq!(o.block_kind, BlockKind::Chol);
+        assert_eq!(o.hybrid_tol, 1e-8);
+        // Unknown block kinds and degenerate tolerances are hard errors
+        // that leave the options unchanged.
+        let err = o.apply("block_kind", "kfac").unwrap_err();
+        assert!(err.contains("auto") && err.contains("chol") && err.contains("rvb"), "{err}");
+        assert!(o.apply("hybrid_tol", "0").is_err());
+        assert!(o.apply("hybrid_tol", "nan").is_err());
+        assert_eq!(o.block_kind, BlockKind::Chol);
+        assert_eq!(o.hybrid_tol, 1e-8);
+        // Mixed precision composes through the inner block sessions of
+        // blockdiag/hybrid, and is rejected by name for kpsvd.
+        o.apply("precision", "mixed").unwrap();
+        o.validate_for(SolverKind::BlockDiag).unwrap();
+        o.validate_for(SolverKind::Hybrid).unwrap();
+        let err = o.validate_for(SolverKind::KpSvd).unwrap_err();
+        assert!(err.contains("kpsvd") && err.contains("precision=mixed"), "{err}");
+        // The --set path reaches the registry.
+        let reg = SolverRegistry::from_overrides(&[
+            "solver.blocks=4".into(),
+            "solver.block_kind=rvb".into(),
+            "solver.hybrid_tol=1e-9".into(),
+        ])
+        .unwrap();
+        assert_eq!(reg.opts.blocks, 4);
+        assert_eq!(reg.opts.block_kind, BlockKind::Rvb);
+        assert_eq!(reg.opts.hybrid_tol, 1e-9);
     }
 
     #[test]
